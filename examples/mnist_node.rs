@@ -1,0 +1,71 @@
+//! End-to-end driver (the repository's E2E validation run): train the
+//! MNIST Neural ODE for a few hundred optimizer steps with the ERNODE
+//! regularizer, logging the loss curve, NFE trajectory and budget-ladder
+//! routing — then compare training/prediction cost against a vanilla
+//! baseline.
+//!
+//! ```bash
+//! cargo run --release --example mnist_node [epochs] [iters_per_epoch]
+//! ```
+//!
+//! The reference run is recorded in EXPERIMENTS.md §E2E.
+
+use regnde::coordinator::experiments::{run_by_name, TrainOpts};
+use regnde::coordinator::recorder::Recorder;
+use regnde::coordinator::Method;
+use regnde::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let epochs: usize = args.get(1).map_or(10, |s| s.parse().unwrap_or(10));
+    let iters: usize = args.get(2).map_or(30, |s| s.parse().unwrap_or(30));
+
+    let engine = Engine::new(regnde::default_artifacts_dir())?;
+    let recorder = Recorder::new(regnde::default_runs_dir())?;
+    let opts = TrainOpts {
+        epochs,
+        iters_per_epoch: iters,
+        seed: 0,
+        verbose: true,
+    };
+    println!(
+        "=== MNIST Neural ODE e2e: {} optimizer steps (ERNODE vs vanilla) ===\n",
+        epochs * iters
+    );
+
+    println!("--- ERNODE (error-estimate regularized, coef annealed 100->10) ---");
+    let er = run_by_name(&engine, "mnist-node", Method::parse("ernode")?, opts)?;
+    recorder.save(&er)?;
+
+    println!("\n--- Vanilla NODE baseline ---");
+    let vanilla = run_by_name(&engine, "mnist-node", Method::VANILLA, opts)?;
+    recorder.save(&vanilla)?;
+
+    println!("\n===================== e2e summary =====================");
+    println!("loss curve (ERNODE):");
+    for e in &er.epochs {
+        println!(
+            "  epoch {:>3}: loss {:>8.4}  acc {:>6.3}  nfe {:>6.1}  rung {}  ({:.1}s)",
+            e.epoch, e.loss, e.metric, e.nfe, e.rung, e.wall_s
+        );
+    }
+    for r in [&vanilla, &er] {
+        println!(
+            "{:<14} train {:>7.1}s | predict {:>7.4}s | pred NFE {:>6.1} | \
+             test acc {:.4} | escalations {} descents {}",
+            r.method,
+            r.train_time_s,
+            r.predict_time_s,
+            r.predict_nfe,
+            r.final_test_metric,
+            r.escalations,
+            r.descents
+        );
+    }
+    println!(
+        "\ntrain speedup {:.2}x | predict speedup {:.2}x (paper Table 1: 1.20x / 1.57x)",
+        vanilla.train_time_s / er.train_time_s.max(1e-9),
+        vanilla.predict_time_s / er.predict_time_s.max(1e-9),
+    );
+    Ok(())
+}

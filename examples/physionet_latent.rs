@@ -1,0 +1,51 @@
+//! Latent ODE on synthetic Physionet-like vitals (paper §4.1.2 scenario):
+//! the workload the paper's Table 2 measures — SRNODE is the paper's best
+//! method here (0.87h vs 1.75h train, 0.20s vs 0.53s predict).
+//!
+//! ```bash
+//! cargo run --release --example physionet_latent [epochs]
+//! ```
+
+use regnde::coordinator::experiments::{run_by_name, TrainOpts};
+use regnde::coordinator::recorder::Recorder;
+use regnde::coordinator::Method;
+use regnde::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::args()
+        .nth(1)
+        .map_or(4, |s| s.parse().unwrap_or(4));
+    let engine = Engine::new(regnde::default_artifacts_dir())?;
+    let recorder = Recorder::new(regnde::default_runs_dir())?;
+    let opts = TrainOpts {
+        epochs,
+        iters_per_epoch: 10,
+        seed: 0,
+        verbose: true,
+    };
+
+    let mut results = Vec::new();
+    for method in ["vanilla", "srnode", "ernode"] {
+        println!("--- {method} ---");
+        let r = run_by_name(&engine, "latent-ode", Method::parse(method)?, opts)?;
+        recorder.save(&r)?;
+        results.push(r);
+    }
+
+    println!("\n========== Physionet interpolation summary ==========");
+    println!(
+        "{:<16} {:>9} {:>10} {:>9} {:>12}",
+        "method", "train s", "predict s", "NFE", "test MSE"
+    );
+    for r in &results {
+        println!(
+            "{:<16} {:>9.1} {:>10.4} {:>9.1} {:>12.5}",
+            r.method, r.train_time_s, r.predict_time_s, r.predict_nfe, r.final_test_metric
+        );
+    }
+    println!(
+        "\npaper Table 2 shape: regularized variants cut NFE ~700 -> ~280 \
+         and train time by 36-50% at ~equal loss"
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: load the artifact manifest, run one regularized vs one
+//! unregularized training run on the spiral Neural ODE, and print the
+//! white-boxed solver statistics the paper is built on.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use regnde::coordinator::experiments::{run_by_name, TrainOpts};
+use regnde::coordinator::Method;
+use regnde::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(regnde::default_artifacts_dir())?;
+    println!("PJRT platform: {}", engine.platform());
+    println!(
+        "manifest: {} artifacts, {} models\n",
+        engine.manifest.artifacts.len(),
+        engine.manifest.models.len()
+    );
+
+    let opts = TrainOpts {
+        epochs: 3,
+        iters_per_epoch: 20,
+        seed: 0,
+        verbose: true,
+    };
+
+    println!("--- Vanilla Neural ODE (spiral, Fig. 2 setting) ---");
+    let vanilla = run_by_name(&engine, "spiral-node", Method::VANILLA, opts)?;
+
+    println!("\n--- ERNODE + SRNODE (error + stiffness regularized) ---");
+    let reg = run_by_name(
+        &engine,
+        "spiral-node",
+        Method::parse("srnode+ernode")?,
+        opts,
+    )?;
+
+    println!("\n================= summary =================");
+    for r in [&vanilla, &reg] {
+        println!(
+            "{:<18} train {:>6.2}s | predict {:>7.4}s | NFE {:>6.1} | MSE {:.5}",
+            r.method, r.train_time_s, r.predict_time_s, r.predict_nfe, r.final_test_loss
+        );
+    }
+    let speedup = vanilla.predict_nfe / reg.predict_nfe.max(1.0);
+    println!(
+        "\nprediction NFE ratio (vanilla/regularized): {speedup:.2}x \
+         — the paper's Figure 2 effect"
+    );
+    Ok(())
+}

@@ -1,0 +1,394 @@
+"""AOT lowering: JAX train/predict graphs -> HLO text artifacts + manifest.
+
+This is the single entry point of the build-time Python layer:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+For every model it emits
+  * ``<model>_init``      — parameter initialization from a u32 seed,
+  * ``<model>_train_*``   — fwd + discrete adjoint + optimizer update, one
+                            artifact per step-budget rung (the L3 coordinator
+                            routes batches across the ladder, DESIGN.md §6),
+  * ``<model>_tay_*``     — the TayNODE baseline variant (jet-based R_K),
+  * ``<model>_predict``   — early-exiting inference,
+plus ``spiral_ode_solve`` (fixed ground-truth dynamics) used by the Rust
+test-suite to cross-validate the JAX solver against the native Rust solver.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+``manifest.json`` records for each artifact the exact input/output specs
+(name, shape, dtype) plus per-model metadata (flat param layout, optimizer
+state size, metric vector layout, paper hyper-parameters) — everything the
+Rust runtime needs; nothing else crosses the language boundary.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import solver, tableaus
+from .models import METRICS_LAYOUT, latent_ode, mnist_node, mnist_nsde, \
+    spiral_node, spiral_nsde
+from .models import common as model_common
+
+F32 = jnp.float32
+U32 = jnp.uint32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(d) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.uint32): "u32"}[np.dtype(d)]
+
+
+class Emitter:
+    def __init__(self, out_dir: str, only: Sequence[str]):
+        self.out_dir = out_dir
+        self.only = list(only)
+        self.manifest = {
+            "version": 1,
+            "metrics_layout": METRICS_LAYOUT,
+            "models": {},
+            "artifacts": {},
+        }
+        os.makedirs(out_dir, exist_ok=True)
+
+    def want(self, name: str) -> bool:
+        return not self.only or any(o in name for o in self.only)
+
+    def emit(
+        self,
+        name: str,
+        fn: Callable,
+        in_specs: List[Tuple[str, jax.ShapeDtypeStruct]],
+        *,
+        model: str,
+        kind: str,
+        meta: dict = None,
+    ):
+        if not self.want(name):
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in in_specs])
+        out_shapes = jax.eval_shape(fn, *[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        leaves = jax.tree_util.tree_leaves(out_shapes)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "model": model,
+            "kind": kind,
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+                for n, s in in_specs
+            ],
+            "outputs": [
+                {"shape": list(l.shape), "dtype": _dtype_tag(l.dtype)}
+                for l in leaves
+            ],
+            "meta": meta or {},
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO, {time.time()-t0:.1f}s")
+
+    def add_model(self, name: str, module, opt, cfg, hyper: dict):
+        self.manifest["models"][name] = {
+            "params_size": module.SPEC.size,
+            "opt_state_size": opt.state_size(module.SPEC.size),
+            "optimizer": opt.name,
+            "layout": module.SPEC.manifest_layout(),
+            "config": {
+                k: (v if not isinstance(v, (np.generic,)) else v.item())
+                for k, v in cfg._asdict().items()
+            },
+            "paper_hyperparams": hyper,
+        }
+
+    def save(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+# ---------------------------------------------------------------------------
+# Per-model emission.  Batch sizes / budgets are scaled for the CPU-PJRT
+# testbed (DESIGN.md §4 tolerance/batch substitutions).
+# ---------------------------------------------------------------------------
+
+def emit_mnist_node(em: Emitter):
+    B = 32
+    cfg = mnist_node.Config(batch=B, rtol=1e-6, atol=1e-6, use_kernels=True)
+    em.add_model(
+        "mnist_node", mnist_node, mnist_node.OPT, cfg,
+        # Paper §4.1.1: Momentum(0.1, 0.9), inv-decay 1e-5, 75 epochs, B=512;
+        # coef_e annealed 100 -> 10; coef_s = 0.0285; TayNODE K=3.
+        {
+            "lr": 0.1, "inv_decay": 1e-5, "coef_e_start": 100.0,
+            "coef_e_end": 10.0, "coef_s": 0.0285, "taylor_order": 3,
+            "taylor_coef": 3.02e-3, "steer_b": 0.5, "t1": 1.0,
+        },
+    )
+    P = mnist_node.SPEC.size
+    S = mnist_node.OPT.state_size(P)
+    train_ins = [
+        ("params", spec([P])), ("opt_state", spec([S])),
+        ("x", spec([B, 784])), ("y", spec([B, 10])),
+        ("lr", spec([])), ("coef_e", spec([])), ("coef_s", spec([])),
+        ("coef_aux", spec([])), ("t1", spec([])),
+    ]
+    em.emit(
+        "mnist_node_init", lambda seed: mnist_node.init_fn(seed),
+        [("seed", spec([], U32))], model="mnist_node", kind="init",
+    )
+    for budget in (16, 32, 64):
+        c = cfg._replace(max_steps=budget)
+        em.emit(
+            f"mnist_node_train_b{budget}", mnist_node.make_train_step(c),
+            train_ins, model="mnist_node", kind="train",
+            meta={"budget": budget},
+        )
+    em.emit(
+        "mnist_node_tay_train_b32",
+        mnist_node.make_train_step(cfg._replace(max_steps=32, taylor_order=3)),
+        train_ins, model="mnist_node", kind="tay_train", meta={"budget": 32},
+    )
+    em.emit(
+        "mnist_node_predict", mnist_node.make_predict(cfg),
+        [("params", spec([P])), ("x", spec([B, 784])), ("y", spec([B, 10]))],
+        model="mnist_node", kind="predict",
+    )
+
+
+def emit_latent_ode(em: Emitter):
+    B, T, D = 32, 16, latent_ode.CHANNELS
+    cfg = latent_ode.Config(batch=B, t_points=T, rtol=1e-4, atol=1e-4,
+                            use_kernels=True)
+    em.add_model(
+        "latent_ode", latent_ode, latent_ode.OPT, cfg,
+        # Paper §4.1.2: Adamax(0.01), inv-decay 1e-5, 300 epochs, B=512;
+        # coef_e annealed 1000 -> 100; coef_s = 0.285; KL anneal 0.99;
+        # TayNODE K=2, coef 0.01.
+        {
+            "lr": 0.01, "inv_decay": 1e-5, "coef_e_start": 1000.0,
+            "coef_e_end": 100.0, "coef_s": 0.285, "kl_anneal": 0.99,
+            "taylor_order": 2, "taylor_coef": 0.01,
+        },
+    )
+    P = latent_ode.SPEC.size
+    S = latent_ode.OPT.state_size(P)
+    train_ins = [
+        ("params", spec([P])), ("opt_state", spec([S])),
+        ("x", spec([B, T, D])), ("mask", spec([B, T, D])), ("ts", spec([T])),
+        ("lr", spec([])), ("coef_e", spec([])), ("coef_s", spec([])),
+        ("coef_aux", spec([])), ("kl_coef", spec([])), ("seed", spec([], U32)),
+    ]
+    em.emit(
+        "latent_ode_init", lambda seed: latent_ode.init_fn(seed),
+        [("seed", spec([], U32))], model="latent_ode", kind="init",
+    )
+    for budget in (4, 8):
+        c = cfg._replace(steps_per_segment=budget)
+        em.emit(
+            f"latent_ode_train_s{budget}", latent_ode.make_train_step(c),
+            train_ins, model="latent_ode", kind="train",
+            meta={"budget": budget},
+        )
+    em.emit(
+        "latent_ode_tay_train_s4",
+        latent_ode.make_train_step(
+            cfg._replace(steps_per_segment=4, taylor_order=2)
+        ),
+        train_ins, model="latent_ode", kind="tay_train", meta={"budget": 4},
+    )
+    em.emit(
+        "latent_ode_predict", latent_ode.make_predict(cfg),
+        [
+            ("params", spec([P])), ("x", spec([B, T, D])),
+            ("mask", spec([B, T, D])), ("ts", spec([T])),
+            ("seed", spec([], U32)),
+        ],
+        model="latent_ode", kind="predict",
+    )
+
+
+def emit_spiral_node(em: Emitter):
+    T = 30
+    cfg = spiral_node.Config(t_points=T, rtol=1e-6, atol=1e-6)
+    em.add_model(
+        "spiral_node", spiral_node, spiral_node.OPT, cfg,
+        {"lr": 0.01, "coef_e": 0.1, "coef_s": 0.0285, "t_span": 1.5},
+    )
+    P = spiral_node.SPEC.size
+    S = spiral_node.OPT.state_size(P)
+    train_ins = [
+        ("params", spec([P])), ("opt_state", spec([S])),
+        ("data", spec([T, 2])), ("ts", spec([T])),
+        ("lr", spec([])), ("coef_e", spec([])), ("coef_s", spec([])),
+    ]
+    em.emit(
+        "spiral_node_init", lambda seed: spiral_node.init_fn(seed),
+        [("seed", spec([], U32))], model="spiral_node", kind="init",
+    )
+    for budget in (6, 12):
+        c = cfg._replace(steps_per_segment=budget)
+        em.emit(
+            f"spiral_node_train_s{budget}", spiral_node.make_train_step(c),
+            train_ins, model="spiral_node", kind="train",
+            meta={"budget": budget},
+        )
+    em.emit(
+        "spiral_node_predict", spiral_node.make_predict(cfg),
+        [("params", spec([P])), ("data", spec([T, 2])), ("ts", spec([T]))],
+        model="spiral_node", kind="predict",
+    )
+
+
+def emit_spiral_nsde(em: Emitter):
+    N, T = 64, 30
+    cfg = spiral_nsde.Config(n_traj=N, t_points=T, rtol=1e-2, atol=1e-2)
+    em.add_model(
+        "spiral_nsde", spiral_nsde, spiral_nsde.OPT, cfg,
+        # Paper §4.2.1: AdaBelief(0.01), 250 iters, 100 traj/iter;
+        # ERNSDE coef 1.0 (table 3 scale), SRNSDE coef 0.01 — the paper does
+        # not list these; chosen so reg magnitudes match the GMM loss scale.
+        {"lr": 0.01, "coef_e": 1.0, "coef_s": 0.01, "t_span": 1.0},
+    )
+    P = spiral_nsde.SPEC.size
+    S = spiral_nsde.OPT.state_size(P)
+    train_ins = [
+        ("params", spec([P])), ("opt_state", spec([S])),
+        ("u0", spec([N, 2])), ("data_mu", spec([T, 2])),
+        ("data_var", spec([T, 2])), ("ts", spec([T])),
+        ("lr", spec([])), ("coef_e", spec([])), ("coef_s", spec([])),
+        ("seed", spec([], U32)),
+    ]
+    em.emit(
+        "spiral_nsde_init", lambda seed: spiral_nsde.init_fn(seed),
+        [("seed", spec([], U32))], model="spiral_nsde", kind="init",
+    )
+    for budget in (6, 12):
+        c = cfg._replace(steps_per_segment=budget)
+        em.emit(
+            f"spiral_nsde_train_s{budget}", spiral_nsde.make_train_step(c),
+            train_ins, model="spiral_nsde", kind="train",
+            meta={"budget": budget},
+        )
+    em.emit(
+        "spiral_nsde_predict", spiral_nsde.make_predict(cfg),
+        [
+            ("params", spec([P])), ("u0", spec([N, 2])),
+            ("data_mu", spec([T, 2])), ("data_var", spec([T, 2])),
+            ("ts", spec([T])), ("seed", spec([], U32)),
+        ],
+        model="spiral_nsde", kind="predict",
+    )
+
+
+def emit_mnist_nsde(em: Emitter):
+    B = 32
+    cfg = mnist_nsde.Config(batch=B, rtol=1e-2, atol=1e-2, use_kernels=True)
+    em.add_model(
+        "mnist_nsde", mnist_nsde, mnist_nsde.OPT, cfg,
+        # Paper §4.2.2: Adam(0.01), inv-decay 1e-5, 40 epochs, B=512;
+        # coef_e = 10.0, coef_s = 0.1; predict = mean of 10 trajectories.
+        {"lr": 0.01, "inv_decay": 1e-5, "coef_e": 10.0, "coef_s": 0.1},
+    )
+    P = mnist_nsde.SPEC.size
+    S = mnist_nsde.OPT.state_size(P)
+    train_ins = [
+        ("params", spec([P])), ("opt_state", spec([S])),
+        ("x", spec([B, 784])), ("y", spec([B, 10])),
+        ("lr", spec([])), ("coef_e", spec([])), ("coef_s", spec([])),
+        ("seed", spec([], U32)),
+    ]
+    em.emit(
+        "mnist_nsde_init", lambda seed: mnist_nsde.init_fn(seed),
+        [("seed", spec([], U32))], model="mnist_nsde", kind="init",
+    )
+    for budget in (48, 96):
+        c = cfg._replace(max_steps=budget)
+        em.emit(
+            f"mnist_nsde_train_b{budget}", mnist_nsde.make_train_step(c),
+            train_ins, model="mnist_nsde", kind="train",
+            meta={"budget": budget},
+        )
+    em.emit(
+        "mnist_nsde_predict", mnist_nsde.make_predict(cfg),
+        [
+            ("params", spec([P])), ("x", spec([B, 784])),
+            ("y", spec([B, 10])), ("seed", spec([], U32)),
+        ],
+        model="mnist_nsde", kind="predict",
+    )
+
+
+def emit_cross_validation(em: Emitter):
+    """Fixed spiral ODE solved by the JAX adaptive Tsit5 — compared
+    trajectory-for-trajectory against rust/src/solvers in rust tests."""
+    T = 30
+
+    def solve(u0, ts):
+        a_mat = jnp.array([[-0.1, 2.0], [-2.0, -0.1]], jnp.float32)
+
+        def f(z, t):
+            del t
+            return jnp.power(z, 3) @ a_mat.T
+
+        zs, stats = solver.odeint_save_scan(
+            f, u0, ts, tab=tableaus.get("tsit5"), rtol=1e-6, atol=1e-6,
+            steps_per_segment=16, use_kernels=False,
+        )
+        return zs[:, 0, :], model_common.metrics_vector(0.0, 0.0, stats)
+
+    em.emit(
+        "spiral_ode_solve", solve,
+        [("u0", spec([1, 2])), ("ts", spec([T]))],
+        model="spiral_ode", kind="solve",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=[],
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    em = Emitter(args.out, args.only)
+    t0 = time.time()
+    emit_mnist_node(em)
+    emit_latent_ode(em)
+    emit_spiral_node(em)
+    emit_spiral_nsde(em)
+    emit_mnist_nsde(em)
+    emit_cross_validation(em)
+    em.save()
+    print(f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

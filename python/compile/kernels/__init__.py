@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for regnde.
+
+The compute hot-spot of every experiment in the paper is (a) the dynamics-MLP
+evaluated once per RK stage and (b) the stage linear-combination + embedded
+error estimate evaluated once per step attempt.  Both are implemented as
+Pallas kernels (``interpret=True`` on this CPU image — real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT plugin cannot execute) and wrapped in
+``jax.custom_vjp`` so the discrete adjoint (paper §3.2) flows through them.
+
+``ref.py`` holds the pure-jnp oracles used by the pytest/hypothesis sweeps.
+"""
+from .fused_dense import dense_act
+from .rk_combine import rk_combine
+from . import ref
+
+__all__ = ["dense_act", "rk_combine", "ref"]

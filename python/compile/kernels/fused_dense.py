@@ -1,0 +1,178 @@
+"""Fused dense + activation Pallas kernel (the dynamics-MLP hot-spot).
+
+The paper's dynamics networks (Eq. 12-13, 16, 18-21) are chains of
+``act(x @ W + b)`` layers evaluated once per RK/SDE stage — by far the
+dominant FLOP cost of every experiment.  This module provides
+
+  * ``dense_act(x, w, b, act=...)`` — a Pallas kernel computing the fused
+    matmul + bias + activation in one pass over VMEM-resident tiles, wrapped
+    in ``jax.custom_vjp`` so reverse-mode AD (the discrete adjoint of paper
+    §3.2) works; the backward pass reuses the same Pallas matmul kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows of ``x``
+and columns of ``w`` into MXU-aligned ``(TILE_M, K) x (K, TILE_N)`` blocks
+held in VMEM; the activation is applied by the VPU on the accumulator before
+it is written back to HBM, so the nonlinearity is free.  On this image the
+kernel runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is what the §Perf VMEM/MXU estimates
+in EXPERIMENTS.md are computed from.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile sizes.  TILE_M multiples of 8 (sublane), TILE_N multiples
+# of 128 (lane) keep the systolic array fully fed on a real TPU; in interpret
+# mode they just bound the working set.
+TILE_M = 128
+TILE_N = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _tile(n: int, cap: int) -> int:
+    """Adaptive tile edge: cap for large dims, 8-aligned cover for small.
+
+    §Perf finding (EXPERIMENTS.md): fixed 128-tiles pad small problem dims
+    (e.g. the Latent ODE's 20-50-wide matmuls) by up to 10x in FLOPs.  On a
+    real TPU the lane dimension would stay at 128; under interpret=True the
+    padding is pure waste, so small dims get a single 8-aligned tile.  The
+    BlockSpec structure (and hence the TPU VMEM/MXU estimate) is unchanged
+    for MXU-scale operands.
+    """
+    return cap if n >= cap else _cdiv(n, 8) * 8
+
+
+def _apply_act(y, act: str):
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "linear":
+        return y
+    if act == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-y))
+    raise ValueError(f"unknown act {act!r}")
+
+
+def _dense_act_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One (TILE_M, TILE_N) output tile: act(x_tile @ w_tile + b_tile)."""
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...]
+    o_ref[...] = _apply_act(y, act)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Plain (TILE_M, TILE_N) matmul tile — used by the backward pass."""
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _dense_act_fwd_impl(x, w, b, act: str):
+    """Launch the fused kernel over a (M/tm, N/tn) grid."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tm, tn = _tile(m, TILE_M), _tile(n, TILE_N)
+    xp = _pad_to(x, 0, tm)
+    wp = _pad_to(w, 1, tn)
+    bp = _pad_to(b.reshape(1, -1), 1, tn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    grid = (mp // tm, np_ // tn)
+    out = pl.pallas_call(
+        functools.partial(_dense_act_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul (no bias/activation) — backward-pass workhorse."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    tm, tn = _tile(m, TILE_M), _tile(n, TILE_N)
+    ap = _pad_to(a, 0, tm)
+    bp = _pad_to(b, 1, tn)
+    mp, np_ = ap.shape[0], bp.shape[1]
+    grid = (mp // tm, np_ // tn)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_act(x, w, b, act: str = "tanh"):
+    """Fused ``act(x @ w + b)`` with a hand-written VJP.
+
+    Args:
+      x: (M, K) activations.
+      w: (K, N) weights.
+      b: (N,) bias.
+      act: "tanh" | "sigmoid" | "linear".
+
+    The custom VJP exists because ``pallas_call`` has no general reverse rule;
+    writing it by hand also lets the backward matmuls reuse the same tiled
+    kernel (see ``matmul``), keeping the whole train-step HLO kernel-pure.
+    """
+    return _dense_act_fwd_impl(x, w, b, act)
+
+
+def _dense_act_fwd(x, w, b, act: str):
+    out = _dense_act_fwd_impl(x, w, b, act)
+    return out, (x, w, out)
+
+
+def _dense_act_bwd(act: str, res, g):
+    x, w, out = res
+    if act == "tanh":
+        gpre = g * (1.0 - out * out)
+    elif act == "sigmoid":
+        gpre = g * out * (1.0 - out)
+    else:
+        gpre = g
+    dx = matmul(gpre, w.T)
+    dw = matmul(x.T, gpre)
+    db = jnp.sum(gpre, axis=0)
+    return dx, dw, db
+
+
+dense_act.defvjp(_dense_act_fwd, _dense_act_bwd)
+
+
+def mlp(x: jnp.ndarray, layers: Tuple[Tuple[jnp.ndarray, jnp.ndarray, str], ...]):
+    """Chain of fused dense_act layers: ``layers = ((w, b, act), ...)``."""
+    for w, b, act in layers:
+        x = dense_act(x, w, b, act)
+    return x

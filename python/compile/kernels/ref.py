@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here; the
+pytest suite (python/tests/test_kernels.py) sweeps shapes with hypothesis and
+asserts allclose between kernel and oracle.  The oracles are also what the
+tiny "spiral" models use directly (kernel launch overhead dominates at
+state dim = 2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_act(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "tanh"):
+    """``act(x @ w + b)`` — the fused dynamics-MLP layer (paper Eq. 12-13)."""
+    y = x @ w + b
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "linear":
+        return y
+    if act == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-y))
+    raise ValueError(f"unknown act {act!r}")
+
+
+def rk_combine(ks: jnp.ndarray, z: jnp.ndarray, h: jnp.ndarray, b, btilde):
+    """Stage combination + embedded error estimate (paper Eq. 3 + Eq. 9 input).
+
+    Args:
+      ks:     (S, ..., D) stacked RK stages.
+      z:      (..., D) current state.
+      h:      scalar step size.
+      b:      (S,) solution weights.
+      btilde: (S,) embedded-difference weights.
+
+    Returns:
+      ``(z_new, err)`` where ``z_new = z + h * sum_i b_i k_i`` and
+      ``err = h * sum_i btilde_i k_i`` is the local error estimate vector
+      whose scaled norm is the paper's Eq. 5 ratio.
+    """
+    b = jnp.asarray(b, dtype=z.dtype).reshape((-1,) + (1,) * z.ndim)
+    bt = jnp.asarray(btilde, dtype=z.dtype).reshape((-1,) + (1,) * z.ndim)
+    z_new = z + h * jnp.sum(b * ks, axis=0)
+    err = h * jnp.sum(bt * ks, axis=0)
+    return z_new, err

@@ -1,0 +1,120 @@
+"""Pallas kernel for the RK stage combination + embedded error estimate.
+
+Per step *attempt* the solver must form (paper Eq. 3 + the input to Eq. 5):
+
+    z_new = z + h * sum_i b_i      * k_i
+    err   =     h * sum_i btilde_i * k_i
+
+Naively this is 2S reads of the state-sized stage arrays; fusing both
+reductions into one kernel streams the stacked stages HBM->VMEM exactly once
+and emits both outputs from the same accumulator pass (a pure VPU kernel —
+DESIGN.md §Hardware-Adaptation).  The tableau weights are compile-time
+constants baked into the kernel, so no weight traffic at all.
+
+The operation is linear in ``(ks, z, h)``; the hand-written VJP below is the
+exact transpose and deliberately keeps ``h`` differentiable — the paper's
+regularizer R_E = sum_j E_j*|h_j| (Eq. 9) needs d(loss)/dh_j.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+
+
+def _pad_rows(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _combine_kernel(ks_ref, z_ref, h_ref, znew_ref, err_ref, *, b, btilde):
+    """One (TILE_B, D) tile: both weighted stage reductions in one pass."""
+    h = h_ref[0, 0]
+    z = z_ref[...]
+    acc_b = jnp.zeros_like(z)
+    acc_bt = jnp.zeros_like(z)
+    # S is a small static constant (4 or 7): unrolled python loop, each stage
+    # slab is read from VMEM exactly once and feeds both accumulators.
+    for i in range(len(b)):
+        k = ks_ref[i, :, :]
+        if b[i] != 0.0:
+            acc_b = acc_b + b[i] * k
+        if btilde[i] != 0.0:
+            acc_bt = acc_bt + btilde[i] * k
+    znew_ref[...] = z + h * acc_b
+    err_ref[...] = h * acc_bt
+
+
+def _combine_impl(ks, z, h, b: Tuple[float, ...], btilde: Tuple[float, ...]):
+    s, m, d = ks.shape
+    # Adaptive batch tile (see fused_dense._tile / EXPERIMENTS.md §Perf):
+    # fixed 128-row tiles quadruple the work for the B=32 testbed batches.
+    tb = TILE_B if m >= TILE_B else -(-m // 8) * 8
+    ksp = _pad_rows(ks, 1, tb)
+    zp = _pad_rows(z, 0, tb)
+    mp = zp.shape[0]
+    h2 = jnp.asarray(h, dtype=z.dtype).reshape(1, 1)
+    grid = (mp // tb,)
+    znew, err = pl.pallas_call(
+        functools.partial(_combine_kernel, b=b, btilde=btilde),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, tb, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, d), z.dtype),
+            jax.ShapeDtypeStruct((mp, d), z.dtype),
+        ],
+        interpret=True,
+    )(ksp, zp, h2)
+    return znew[:m], err[:m]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def rk_combine(ks, z, h, b: Tuple[float, ...], btilde: Tuple[float, ...]):
+    """Fused ``(z + h*sum b_i k_i, h*sum btilde_i k_i)``.
+
+    Args:
+      ks: (S, B, D) stacked stages.
+      z:  (B, D) current state.
+      h:  scalar step size (differentiable).
+      b / btilde: static tableau weight tuples (baked into the kernel).
+    """
+    return _combine_impl(ks, z, h, b, btilde)
+
+
+def _combine_fwd(ks, z, h, b, btilde):
+    out = _combine_impl(ks, z, h, b, btilde)
+    return out, (ks, h)
+
+
+def _combine_bwd(b, btilde, res, g):
+    ks, h = res
+    g_znew, g_err = g
+    bv = jnp.asarray(b, dtype=ks.dtype).reshape(-1, 1, 1)
+    btv = jnp.asarray(btilde, dtype=ks.dtype).reshape(-1, 1, 1)
+    # Exact transpose of the linear map.
+    d_ks = h * (bv * g_znew[None] + btv * g_err[None])
+    d_z = g_znew
+    d_h = jnp.sum(jnp.sum(bv * ks, axis=0) * g_znew) + jnp.sum(
+        jnp.sum(btv * ks, axis=0) * g_err
+    )
+    return d_ks, d_z, jnp.asarray(d_h, dtype=h.dtype if hasattr(h, "dtype") else jnp.float32)
+
+
+rk_combine.defvjp(_combine_fwd, _combine_bwd)

@@ -1,0 +1,26 @@
+"""Layer-2 model definitions — one module per paper experiment.
+
+Every model module exposes:
+
+  * ``SPEC`` — the ParamSpec of its flat parameter vector,
+  * ``OPT`` — the paper's optimizer for that experiment,
+  * ``Config`` — static lowering configuration (batch, tolerances, budgets),
+  * ``init_fn(seed)`` — parameter initialization (lowered to an HLO artifact
+    so the Rust coordinator can initialize any replica seed on-device),
+  * ``make_train_step(cfg)`` — full fwd+bwd+optimizer-update step,
+  * ``make_predict(cfg)`` — early-exiting inference path.
+
+Standard metric vector returned by every step: see ``common.METRICS_LAYOUT``.
+"""
+from .common import METRICS_LAYOUT, metrics_vector
+from . import mnist_node, latent_ode, spiral_node, spiral_nsde, mnist_nsde
+
+__all__ = [
+    "METRICS_LAYOUT",
+    "metrics_vector",
+    "mnist_node",
+    "latent_ode",
+    "spiral_node",
+    "spiral_nsde",
+    "mnist_nsde",
+]

@@ -1,0 +1,51 @@
+"""Shared pieces for model train/predict step builders."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+METRICS_LAYOUT = [
+    "loss",
+    "metric",
+    "nfe",
+    "naccept",
+    "nreject",
+    "success",
+    "r_e",
+    "r_s",
+    "r_aux",
+]
+
+
+def metrics_vector(loss, metric, stats) -> jnp.ndarray:
+    """Assemble the standard 9-element metric vector (see METRICS_LAYOUT)."""
+    return jnp.stack(
+        [
+            jnp.asarray(loss, jnp.float32),
+            jnp.asarray(metric, jnp.float32),
+            stats.nfe,
+            stats.naccept,
+            stats.nreject,
+            stats.success,
+            stats.r_e,
+            stats.r_s,
+            stats.r_aux,
+        ]
+    )
+
+
+def softmax_xent(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy (numerically stable)."""
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    return -jnp.mean(jnp.sum(y_onehot * (logits - logz), axis=-1))
+
+
+def accuracy(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(
+        (jnp.argmax(logits, -1) == jnp.argmax(y_onehot, -1)).astype(jnp.float32)
+    )
+
+
+def prng_from_seed(seed: jnp.ndarray) -> jnp.ndarray:
+    """Build a PRNG key from a u32 scalar artifact input."""
+    return jax.random.PRNGKey(seed)

@@ -1,0 +1,197 @@
+"""Latent ODE for irregular time-series interpolation — paper §4.1.2
+(Table 2, Figure 4; Physionet 2012).
+
+Encoder-decoder as in Rubanova et al. (2019): a GRU recognition network runs
+*backwards* over the (value, mask) sequence to produce q(z0 | x) = N(mu,
+sigma); a latent trajectory is decoded from a sampled z0 by the adaptive
+Tsit5 solve saving at every observation time; a linear decoder maps latent
+states to observation space.  Loss = masked Gaussian NLL + KL-annealed
+KL(q || N(0, I)) + the white-boxed solver regularizers.
+
+Dimensions follow the paper: 20-d latent state, 40-d recognition hidden
+state, dynamics = 4-layer MLP with 50 tanh units.  The observation grid
+``ts`` is an artifact input: the Rust data pipeline places each batch on a
+shared union grid with per-sample masks (physionet_synth.rs), and the STEER
+baseline perturbs interior grid points at L3 (paper §4.1.2 baseline).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import optimizers, solver, tableaus
+from ..kernels import dense_act
+from ..packing import ParamSpec
+from ..regularizers import taylor_reg_fn
+from .common import metrics_vector, prng_from_seed
+
+CHANNELS = 8
+LATENT = 20
+REC_HIDDEN = 40
+DYN_HIDDEN = 50
+OBS_SIGMA = 0.05  # fixed observation noise for the Gaussian likelihood
+
+_IN = 2 * CHANNELS  # (value, mask) per channel
+
+SPEC = ParamSpec(
+    [
+        # GRU recognition cell (input = [x, mask], hidden = REC_HIDDEN)
+        ("Wz", (_IN + REC_HIDDEN, REC_HIDDEN)),
+        ("bz", (REC_HIDDEN,)),
+        ("Wr", (_IN + REC_HIDDEN, REC_HIDDEN)),
+        ("br", (REC_HIDDEN,)),
+        ("Wh", (_IN + REC_HIDDEN, REC_HIDDEN)),
+        ("bh", (REC_HIDDEN,)),
+        # hidden -> (mu, logvar)
+        ("Wq", (REC_HIDDEN, 2 * LATENT)),
+        ("bq", (2 * LATENT,)),
+        # latent dynamics: 4-layer tanh MLP, 50 units (paper §4.1.2)
+        ("D1", (LATENT, DYN_HIDDEN)),
+        ("d1", (DYN_HIDDEN,)),
+        ("D2", (DYN_HIDDEN, DYN_HIDDEN)),
+        ("d2", (DYN_HIDDEN,)),
+        ("D3", (DYN_HIDDEN, DYN_HIDDEN)),
+        ("d3", (DYN_HIDDEN,)),
+        ("D4", (DYN_HIDDEN, LATENT)),
+        ("d4", (LATENT,)),
+        # linear decoder latent -> observation space
+        ("Wd", (LATENT, CHANNELS)),
+        ("bd", (CHANNELS,)),
+    ]
+)
+
+OPT = optimizers.adamax()
+
+
+class Config(NamedTuple):
+    batch: int = 64
+    t_points: int = 16
+    rtol: float = 1e-4
+    atol: float = 1e-4
+    steps_per_segment: int = 6
+    tableau: str = "tsit5"
+    use_kernels: bool = True
+    taylor_order: int = 0  # 2 = the paper's TayNODE baseline for this task
+
+
+def init_fn(seed):
+    return SPEC.init(jax.random.PRNGKey(seed))
+
+
+def _gru_encode(p, x, mask):
+    """Run the GRU backwards over time; returns (mu, logvar) of q(z0)."""
+    b = x.shape[0]
+    inputs = jnp.concatenate([x, mask], axis=-1)  # (B, T, 2D)
+    inputs = jnp.flip(inputs, axis=1)  # reverse time
+
+    def cell(h, u):
+        hu = jnp.concatenate([u, h], axis=-1)
+        zg = jax.nn.sigmoid(hu @ p["Wz"] + p["bz"])
+        rg = jax.nn.sigmoid(hu @ p["Wr"] + p["br"])
+        hru = jnp.concatenate([u, rg * h], axis=-1)
+        cand = jnp.tanh(hru @ p["Wh"] + p["bh"])
+        return (1.0 - zg) * h + zg * cand, None
+
+    h0 = jnp.zeros((b, REC_HIDDEN), x.dtype)
+    hT, _ = jax.lax.scan(cell, h0, jnp.swapaxes(inputs, 0, 1))
+    q = hT @ p["Wq"] + p["bq"]
+    return q[:, :LATENT], q[:, LATENT:]
+
+
+def dynamics(p, use_kernels: bool) -> Callable:
+    """4-layer tanh MLP latent dynamics (autonomous)."""
+
+    def f(z, t):
+        del t
+        if use_kernels:
+            h = dense_act(z, p["D1"], p["d1"], "tanh")
+            h = dense_act(h, p["D2"], p["d2"], "tanh")
+            h = dense_act(h, p["D3"], p["d3"], "tanh")
+            return dense_act(h, p["D4"], p["d4"], "linear")
+        h = jnp.tanh(z @ p["D1"] + p["d1"])
+        h = jnp.tanh(h @ p["D2"] + p["d2"])
+        h = jnp.tanh(h @ p["D3"] + p["d3"])
+        return h @ p["D4"] + p["d4"]
+
+    return f
+
+
+def _decode(p, zs):
+    return zs @ p["Wd"] + p["bd"]  # (T, B, D)
+
+
+def _forward(params, x, mask, ts, seed, cfg: Config, predict: bool):
+    p = SPEC.unpack(params)
+    mu, logvar = _gru_encode(p, x, mask)
+    key = prng_from_seed(seed)
+    eps = jax.random.normal(key, mu.shape, mu.dtype)
+    z0 = mu + jnp.exp(0.5 * logvar) * eps
+    f = dynamics(p, cfg.use_kernels)
+    tab = tableaus.get(cfg.tableau)
+    aux_fn = None
+    if cfg.taylor_order >= 2 and not predict:
+        # jet cannot trace custom_vjp (Pallas) calls — use the jnp dynamics.
+        aux_fn = taylor_reg_fn(dynamics(p, False), cfg.taylor_order)
+    if predict:
+        zs, stats = solver.odeint_save_while(
+            f, z0, ts, tab=tab, rtol=cfg.rtol, atol=cfg.atol,
+            use_kernels=cfg.use_kernels,
+        )
+    else:
+        zs, stats = solver.odeint_save_scan(
+            f, z0, ts, tab=tab, rtol=cfg.rtol, atol=cfg.atol,
+            steps_per_segment=cfg.steps_per_segment,
+            use_kernels=cfg.use_kernels, aux_fn=aux_fn,
+        )
+    xhat = _decode(p, zs)  # (T, B, D)
+    xhat = jnp.swapaxes(xhat, 0, 1)  # (B, T, D)
+    return xhat, mu, logvar, stats
+
+
+def _nll_kl_mse(x, mask, xhat, mu, logvar):
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    se = mask * jnp.square(x - xhat)
+    mse = jnp.sum(se) / denom
+    nll = 0.5 * jnp.sum(se / (OBS_SIGMA**2)) / denom
+    kl = -0.5 * jnp.mean(
+        jnp.sum(1.0 + logvar - jnp.square(mu) - jnp.exp(logvar), axis=-1)
+    )
+    return nll, kl, mse
+
+
+def make_train_step(cfg: Config):
+    """(params, opt_state, x, mask, ts, lr, coef_e, coef_s, coef_aux,
+    kl_coef, seed) -> (params', opt_state', metrics[9]); metric = masked MSE."""
+
+    def loss_fn(params, x, mask, ts, coef_e, coef_s, coef_aux, kl_coef, seed):
+        xhat, mu, logvar, stats = _forward(
+            params, x, mask, ts, seed, cfg, predict=False
+        )
+        nll, kl, mse = _nll_kl_mse(x, mask, xhat, mu, logvar)
+        reg = coef_e * stats.r_e + coef_s * stats.r_s + coef_aux * stats.r_aux
+        return nll + kl_coef * kl + reg, (nll + kl_coef * kl, mse, stats)
+
+    def step(params, opt_state, x, mask, ts, lr, coef_e, coef_s, coef_aux,
+             kl_coef, seed):
+        (_, (task, mse, stats)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, x, mask, ts, coef_e, coef_s, coef_aux, kl_coef, seed)
+        new_params, new_state = OPT.update(params, grads, opt_state, lr)
+        return new_params, new_state, metrics_vector(task, mse, stats)
+
+    return step
+
+
+def make_predict(cfg: Config):
+    """(params, x, mask, ts, seed) -> (xhat, metrics[9]); metric = MSE."""
+
+    def predict(params, x, mask, ts, seed):
+        xhat, mu, logvar, stats = _forward(
+            params, x, mask, ts, seed, cfg, predict=True
+        )
+        nll, kl, mse = _nll_kl_mse(x, mask, xhat, mu, logvar)
+        return xhat, metrics_vector(nll + kl, mse, stats)
+
+    return predict

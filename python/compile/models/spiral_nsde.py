@@ -1,0 +1,122 @@
+"""Spiral Neural SDE — paper §4.2.1 (Table 3, Figure 5).
+
+Fit a neural SDE to trajectories of the spiral diagonal-noise SDE
+(paper Eq. 15):
+
+    du1 = -a u1^3 dt + b u2^3 dt + c u1 dW
+    du2 = -b u1^3 dt - a u2^3 dt + c u2 dW      a=0.1, b=2.0, c=0.2
+
+Drift/diffusion parameterization (paper Eq. 16):
+
+    f(x) = W2 tanh(W1 x^3 + B1) + B2     (2 -> 50 -> 2)
+    g(x) = W3 x + B3                     (2 -> 2, diagonal noise)
+
+Training uses the generalized method of moments loss (paper Eq. 17): the L2
+distance between per-save-point mean/variance of the predicted trajectory
+ensemble and the data ensemble.  Ground-truth moments are produced by the
+native Rust SDE solver over 10k trajectories (rust/src/data/spiral.rs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import optimizers, sde_solver
+from ..packing import ParamSpec
+from .common import metrics_vector, prng_from_seed
+
+DIM = 2
+HIDDEN = 50
+
+SPEC = ParamSpec(
+    [
+        ("W1", (DIM, HIDDEN)),
+        ("B1", (HIDDEN,)),
+        ("W2", (HIDDEN, DIM)),
+        ("B2", (DIM,)),
+        ("W3", (DIM, DIM)),
+        ("B3", (DIM,)),
+    ]
+)
+
+OPT = optimizers.adabelief()
+
+
+class Config(NamedTuple):
+    n_traj: int = 64  # predicted ensemble size per iteration (paper: 100)
+    t_points: int = 30
+    rtol: float = 1e-2
+    atol: float = 1e-2
+    steps_per_segment: int = 6
+
+
+def init_fn(seed):
+    return SPEC.init(jax.random.PRNGKey(seed))
+
+
+def drift_diffusion(p):
+    def f(z, t):
+        del t
+        return jnp.tanh(jnp.power(z, 3) @ p["W1"] + p["B1"]) @ p["W2"] + p["B2"]
+
+    def g(z, t):
+        del t
+        return z @ p["W3"] + p["B3"]
+
+    return f, g
+
+
+def _forward(params, u0, ts, seed, cfg: Config, predict: bool):
+    p = SPEC.unpack(params)
+    f, g = drift_diffusion(p)
+    key = prng_from_seed(seed)
+    if predict:
+        zs, stats = sde_solver.sdeint_save_while(
+            f, g, u0, ts, key, rtol=cfg.rtol, atol=cfg.atol
+        )
+    else:
+        zs, stats = sde_solver.sdeint_save_scan(
+            f, g, u0, ts, key, rtol=cfg.rtol, atol=cfg.atol,
+            steps_per_segment=cfg.steps_per_segment,
+        )
+    return zs, stats  # (T, N, 2)
+
+
+def _gmm_loss(zs, data_mu, data_var):
+    """Paper Eq. 17 — match ensemble mean and variance per save point."""
+    mu = jnp.mean(zs, axis=1)
+    var = jnp.var(zs, axis=1)
+    return jnp.sum(jnp.square(mu - data_mu) + jnp.square(var - data_var))
+
+
+def make_train_step(cfg: Config):
+    """(params, opt_state, u0, data_mu, data_var, ts, lr, coef_e, coef_s,
+    seed) -> (params', opt_state', metrics[9]); metric = GMM loss."""
+
+    def loss_fn(params, u0, data_mu, data_var, ts, coef_e, coef_s, seed):
+        zs, stats = _forward(params, u0, ts, seed, cfg, predict=False)
+        gmm = _gmm_loss(zs, data_mu, data_var)
+        return gmm + coef_e * stats.r_e + coef_s * stats.r_s, (gmm, stats)
+
+    def step(params, opt_state, u0, data_mu, data_var, ts, lr, coef_e,
+             coef_s, seed):
+        (_, (gmm, stats)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, u0, data_mu, data_var, ts, coef_e, coef_s, seed
+        )
+        new_params, new_state = OPT.update(params, grads, opt_state, lr)
+        return new_params, new_state, metrics_vector(gmm, gmm, stats)
+
+    return step
+
+
+def make_predict(cfg: Config):
+    """(params, u0, data_mu, data_var, ts, seed) -> (zs, metrics[9])."""
+
+    def predict(params, u0, data_mu, data_var, ts, seed):
+        zs, stats = _forward(params, u0, ts, seed, cfg, predict=True)
+        gmm = _gmm_loss(zs, data_mu, data_var)
+        return zs, metrics_vector(gmm, gmm, stats)
+
+    return predict

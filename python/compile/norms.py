@@ -1,0 +1,65 @@
+"""Error norms and step-size controllers shared by the ODE and SDE solvers.
+
+Implements the tolerance-scaled error ratio of paper Eq. 5 and the PI
+step-size controller of paper Eq. 6 (Wanner & Hairer 1996, §IV.2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Controller constants (OrdinaryDiffEq.jl defaults for explicit RK).
+SAFETY = 0.9
+MIN_FACTOR = 0.2
+MAX_FACTOR = 10.0
+# PI gains: q^alpha uses the current error ratio, q_{n-1}^beta the previous
+# one (paper Eq. 6).  beta > 0 damps oscillation of h.
+PI_BETA = 0.04
+
+
+def hairer_norm(x: jnp.ndarray) -> jnp.ndarray:
+    """RMS norm over all elements — the norm used for adaptivity in Hairer.
+
+    The tiny epsilon inside the sqrt keeps the reverse-mode derivative finite
+    at ``x == 0``: masked-out (``done``) solver iterations still trace this
+    computation with zero-sized errors, and ``d sqrt(0)`` would poison the
+    whole discrete adjoint with NaNs even though the forward value is masked.
+    """
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def error_ratio(e: jnp.ndarray, z0: jnp.ndarray, z1: jnp.ndarray, rtol, atol):
+    """Paper Eq. 5: scaled error ratio q; the step is accepted iff q <= 1."""
+    scale = atol + jnp.maximum(jnp.abs(z0), jnp.abs(z1)) * rtol
+    return hairer_norm(e / scale)
+
+
+def pi_step_factor(q: jnp.ndarray, q_prev: jnp.ndarray, order: int) -> jnp.ndarray:
+    """PI controller growth factor for the next step size (paper Eq. 6).
+
+    ``h_new = h * clip(safety * q^-alpha * q_prev^beta)`` with
+    ``alpha = 1/order - 0.75*beta`` (Hairer's recommended gain split).
+    """
+    alpha = 1.0 / order - 0.75 * PI_BETA
+    qc = jnp.maximum(q, 1e-10)
+    qp = jnp.maximum(q_prev, 1e-10)
+    factor = SAFETY * qc ** (-alpha) * qp ** PI_BETA
+    return jnp.clip(factor, MIN_FACTOR, MAX_FACTOR)
+
+
+def reject_step_factor(q: jnp.ndarray, order: int) -> jnp.ndarray:
+    """Shrink factor after a rejected step (plain P-control, no growth)."""
+    alpha = 1.0 / order
+    factor = SAFETY * jnp.maximum(q, 1e-10) ** (-alpha)
+    return jnp.clip(factor, MIN_FACTOR, 1.0)
+
+
+def initial_step_size(f0: jnp.ndarray, z0: jnp.ndarray, t_span: float, rtol, atol):
+    """Cheap h0 heuristic: a small fraction of the span scaled by |f0|.
+
+    A full Hairer h0 selector costs two extra NFE; since train-time solves
+    re-run thousands of times with similar dynamics we use the conservative
+    `0.01 * span / max(1, |f0|_rms)` rule and let the PI controller adapt.
+    """
+    del rtol, atol
+    fnorm = hairer_norm(f0)
+    return 0.01 * t_span / jnp.maximum(1.0, fnorm)

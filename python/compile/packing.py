@@ -1,0 +1,74 @@
+"""Flat parameter-vector packing.
+
+The Rust coordinator treats model parameters and optimizer state as opaque
+``f32[P]`` vectors (runtime/state.rs); this module defines the layout.  Each
+model declares an ordered ``ParamSpec`` of named tensors; ``pack``/``unpack``
+convert between the flat vector and a name->tensor dict.  The layout (name,
+offset, shape) is exported into ``artifacts/manifest.json`` so external tools
+can introspect checkpoints.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+class ParamSpec:
+    """Ordered collection of named parameter tensors with a flat layout."""
+
+    def __init__(self, entries: Sequence[Tuple[str, Tuple[int, ...]]]):
+        self.entries: List[Tuple[str, Tuple[int, ...]]] = [
+            (name, tuple(shape)) for name, shape in entries
+        ]
+        self.offsets: Dict[str, int] = {}
+        off = 0
+        for name, shape in self.entries:
+            self.offsets[name] = off
+            off += int(np.prod(shape))
+        self.size = off
+
+    def unpack(self, flat: Array) -> Dict[str, Array]:
+        out = {}
+        for name, shape in self.entries:
+            off = self.offsets[name]
+            n = int(np.prod(shape))
+            out[name] = jnp.reshape(flat[off : off + n], shape)
+        return out
+
+    def pack(self, tensors: Dict[str, Array]) -> Array:
+        parts = []
+        for name, shape in self.entries:
+            t = tensors[name]
+            assert tuple(t.shape) == shape, (name, t.shape, shape)
+            parts.append(jnp.ravel(t))
+        return jnp.concatenate(parts)
+
+    def init(self, key: Array) -> Array:
+        """Glorot-uniform weights / zero biases (Flux.jl Dense defaults).
+
+        A tensor is treated as a bias iff it is 1-D.
+        """
+        parts = []
+        for name, shape in self.entries:
+            key, sub = jax.random.split(key)
+            if len(shape) == 1:
+                parts.append(jnp.zeros(shape, jnp.float32).ravel())
+            else:
+                fan_in, fan_out = shape[0], shape[-1]
+                lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+                w = jax.random.uniform(
+                    sub, shape, jnp.float32, minval=-lim, maxval=lim
+                )
+                parts.append(w.ravel())
+        return jnp.concatenate(parts)
+
+    def manifest_layout(self) -> List[dict]:
+        return [
+            {"name": n, "shape": list(s), "offset": self.offsets[n]}
+            for n, s in self.entries
+        ]

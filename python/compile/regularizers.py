@@ -1,0 +1,91 @@
+"""Regularization strategies compared in the paper (§2.3, §3, §4 baselines).
+
+* **ERNODE / ERNSDE** — paper Eq. 9: ``R_E = sum_j E_j |h_j|`` from the
+  solver's embedded local error estimate.  Free: accumulated by the solver
+  itself (solver.py / sde_solver.py); this module only scales it.
+* **SRNODE / SRNSDE** — paper Eq. 11: ``R_S = sum_j S_j`` from the Shampine
+  stiffness ratio.  Also free.
+* **TayNODE** (Kelly et al. 2020) — paper Eq. 10:
+  ``R_K = ∫ ||d^K z/dt^K||^2 dt`` computed with Taylor-mode automatic
+  differentiation (``jax.experimental.jet``) and quadratured along the
+  accepted trajectory via the solver's ``aux_fn`` hook.  Deliberately
+  expensive — it is the baseline whose training-time blow-up (7-10x on
+  Physionet, Table 2) motivates the paper.
+* **STEER** (Behl et al. 2020) — stochastic end time: not a loss term at all;
+  the train artifacts expose ``t1`` as an input and the Rust coordinator
+  samples ``t1 ~ U(T-b, T+b)`` per iteration (coordinator/steer.rs).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+from jax.experimental.jet import jet
+
+Array = jnp.ndarray
+
+
+def taylor_derivative_coeffs(f, z: Array, t: Array, order: int):
+    """Taylor coefficients of the ODE solution through ``(z, t)``.
+
+    Follows Kelly et al.'s `sol_recursive`: time is appended to the state so
+    the dynamics become autonomous, then ``jet`` is applied recursively —
+    each pass extends the known truncated Taylor series of z(t) by one term.
+    Returns the list of series coefficients ``[y1, ..., y_order]`` of the
+    *flattened augmented* state (coefficient k is proportional to the
+    (k+1)-th time derivative of the solution).
+    """
+    shape = z.shape
+    z_t = jnp.concatenate([jnp.ravel(z), jnp.reshape(t, (1,)).astype(z.dtype)])
+
+    def g(zt):
+        zz = jnp.reshape(zt[:-1], shape)
+        tt = zt[-1]
+        dz = jnp.ravel(f(zz, tt))
+        return jnp.concatenate([dz, jnp.ones((1,), zt.dtype)])
+
+    (y0, _) = jet(g, (z_t,), ((jnp.ones_like(z_t),),))
+    coeffs = [y0]
+    # Each jet pass extends the *valid* prefix of the series by one term
+    # (the list grows faster, but trailing entries are not yet converged),
+    # so `order` valid coefficients need exactly `order - 1` passes.
+    for _ in range(order - 1):
+        (y0, yns) = jet(g, (z_t,), (coeffs + [jnp.zeros_like(z_t)],))
+        coeffs = [y0] + yns
+    return coeffs[:order]
+
+
+def taylor_reg_fn(f, order: int) -> Callable[[Array, Array], Array]:
+    """Build the TayNODE ``aux_fn`` for the solver: z, t -> ||d^K z/dt^K||^2.
+
+    The squared norm of the highest Taylor coefficient (time component
+    stripped) approximates the integrand of paper Eq. 10 up to the constant
+    ``(K!)^2`` — absorbed into the regularization coefficient, as in the
+    reference implementation.
+    """
+    if order < 2:
+        raise ValueError("taylor_reg_fn needs order >= 2")
+
+    def aux(z, t):
+        coeffs = taylor_derivative_coeffs(f, z, t, order)
+        top = coeffs[order - 1][:-1]  # strip the appended time component
+        return jnp.mean(jnp.square(top))
+
+    return aux
+
+
+def compose_regularization(
+    stats, coef_e: Array, coef_s: Array, coef_aux: Array = None,
+    error_variant: str = "eh",
+) -> Array:
+    """Total regularization term added to the task loss.
+
+    ``error_variant``: ``"eh"`` uses R_E = sum E_j |h_j| (paper Eq. 9);
+    ``"e2"`` uses the squared variant sum E_j^2 the paper reports as working
+    equally well on Physionet with a constant coefficient (§4.1.2).
+    """
+    r_e = stats.r_e if error_variant == "eh" else stats.r_e2
+    total = coef_e * r_e + coef_s * stats.r_s
+    if coef_aux is not None:
+        total = total + coef_aux * stats.r_aux
+    return total

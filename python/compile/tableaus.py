@@ -1,0 +1,170 @@
+"""Butcher tableaus for the explicit embedded Runge-Kutta pairs used by regnde.
+
+Each tableau is an explicit RK method with an embedded lower-order solution
+used for the local error estimate (paper Eq. 3-5).  We store the *difference*
+coefficients ``btilde = b - bhat`` so the error estimate is simply
+
+    E = h * sum_i btilde_i * k_i
+
+exactly as OrdinaryDiffEq.jl computes it.  The stiffness estimate (paper
+Eq. 8, Shampine 1977) needs two stages with equal ``c``; for every tableau we
+record the index pair ``(stiff_x, stiff_y)`` with ``c[x] == c[y]``.
+
+These constants are mirrored bit-for-bit in ``rust/src/solvers/tableau.rs`` —
+the native Rust solver suite cross-validates the JAX solver trajectory-for-
+trajectory (see rust/tests/cross_validate.rs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+
+class Tableau(NamedTuple):
+    """An explicit embedded Runge-Kutta tableau.
+
+    Attributes:
+      name:   human-readable method name.
+      a:      (s, s) strictly lower-triangular stage coefficient matrix.
+      b:      (s,) higher-order solution weights.
+      btilde: (s,) ``b - bhat`` difference weights for the error estimate.
+      c:      (s,) stage abscissae.
+      order:  order of the propagated (higher-order) solution.
+      fsal:   whether the last stage equals f at the accepted step end
+              (First-Same-As-Last: k[-1] becomes k[0] of the next step).
+      stiff_pair: indices (x, y) with c[x] == c[y] used for the Shampine
+              stiffness ratio (paper Eq. 8).
+    """
+
+    name: str
+    a: np.ndarray
+    b: np.ndarray
+    btilde: np.ndarray
+    c: np.ndarray
+    order: int
+    fsal: bool
+    stiff_pair: Tuple[int, int]
+
+    @property
+    def stages(self) -> int:
+        return len(self.b)
+
+    @property
+    def nfe_per_attempt(self) -> int:
+        """f-evaluations consumed by one step *attempt* (FSAL reuses k1)."""
+        return self.stages - 1 if self.fsal else self.stages
+
+
+def _lower(rows) -> np.ndarray:
+    s = len(rows) + 1
+    a = np.zeros((s, s), dtype=np.float64)
+    for i, row in enumerate(rows, start=1):
+        a[i, : len(row)] = row
+    return a
+
+
+def tsit5() -> Tableau:
+    """Tsitouras 5(4) (Tsitouras 2011) — the paper's Neural-ODE solver."""
+    a = _lower(
+        [
+            [0.161],
+            [-0.008480655492356989, 0.335480655492357],
+            [2.8971530571054935, -6.359448489975075, 4.3622954328695815],
+            [
+                5.325864828439257,
+                -11.748883564062828,
+                7.4955393428898365,
+                -0.09249506636175525,
+            ],
+            [
+                5.86145544294642,
+                -12.92096931784711,
+                8.159367898576159,
+                -0.071584973281401,
+                -0.028269050394068383,
+            ],
+            [
+                0.09646076681806523,
+                0.01,
+                0.4798896504144996,
+                1.379008574103742,
+                -3.290069515436081,
+                2.324710524099774,
+            ],
+        ]
+    )
+    b = np.array(
+        [
+            0.09646076681806523,
+            0.01,
+            0.4798896504144996,
+            1.379008574103742,
+            -3.290069515436081,
+            2.324710524099774,
+            0.0,
+        ]
+    )
+    btilde = np.array(
+        [
+            -0.00178001105222577714,
+            -0.0008164344596567469,
+            0.007880878010261995,
+            -0.1447110071732629,
+            0.5823571654525552,
+            -0.45808210592918697,
+            0.015151515151515152,
+        ]
+    )
+    c = np.array([0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0])
+    return Tableau("tsit5", a, b, btilde, c, order=5, fsal=True, stiff_pair=(5, 6))
+
+
+def dopri5() -> Tableau:
+    """Dormand-Prince 5(4) — the classic `dopri` pair (ablation alternative)."""
+    a = _lower(
+        [
+            [1 / 5],
+            [3 / 40, 9 / 40],
+            [44 / 45, -56 / 15, 32 / 9],
+            [19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729],
+            [9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656],
+            [35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84],
+        ]
+    )
+    b = np.array([35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0])
+    bhat = np.array(
+        [
+            5179 / 57600,
+            0.0,
+            7571 / 16695,
+            393 / 640,
+            -92097 / 339200,
+            187 / 2100,
+            1 / 40,
+        ]
+    )
+    c = np.array([0.0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0])
+    return Tableau(
+        "dopri5", a, b, b - bhat, c, order=5, fsal=True, stiff_pair=(5, 6)
+    )
+
+
+def bs3() -> Tableau:
+    """Bogacki-Shampine 3(2) — cheap low-order pair (ablation alternative)."""
+    a = _lower([[1 / 2], [0.0, 3 / 4], [2 / 9, 1 / 3, 4 / 9]])
+    b = np.array([2 / 9, 1 / 3, 4 / 9, 0.0])
+    bhat = np.array([7 / 24, 1 / 4, 1 / 3, 1 / 8])
+    c = np.array([0.0, 1 / 2, 3 / 4, 1.0])
+    return Tableau("bs3", a, b, b - bhat, c, order=3, fsal=True, stiff_pair=(0, 3))
+
+
+_REGISTRY = {"tsit5": tsit5, "dopri5": dopri5, "bs3": bs3}
+
+
+def get(name: str) -> Tableau:
+    """Look up a tableau by name (``tsit5``, ``dopri5``, ``bs3``)."""
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown tableau {name!r}; have {sorted(_REGISTRY)}")

@@ -1,0 +1,104 @@
+"""AOT pipeline: HLO text emission + manifest integrity.
+
+Full-artifact emission is exercised by `make artifacts`; here we lower one
+small artifact end-to-end and check the manifest contract the Rust runtime
+relies on (names, shapes, dtypes, budget metadata).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestToHloText:
+    def test_simple_function(self):
+        lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32[4]" in text
+
+    def test_no_mosaic_custom_calls(self):
+        # interpret=True pallas must lower to plain HLO (no custom-call the
+        # CPU PJRT client can't run)
+        from compile.kernels import dense_act
+
+        lowered = jax.jit(
+            lambda x, w, b: (dense_act(x, w, b, "tanh"),),
+            keep_unused=True,
+        ).lower(
+            jax.ShapeDtypeStruct((8, 16), jnp.float32),
+            jax.ShapeDtypeStruct((16, 4), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "custom-call" not in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_metrics_layout(self, manifest):
+        assert manifest["metrics_layout"] == [
+            "loss", "metric", "nfe", "naccept", "nreject", "success",
+            "r_e", "r_s", "r_aux",
+        ]
+
+    def test_every_artifact_file_exists(self, manifest):
+        for name, a in manifest["artifacts"].items():
+            path = os.path.join(ART_DIR, a["file"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 100, name
+
+    def test_models_have_ladders(self, manifest):
+        for model in ("mnist_node", "latent_ode", "spiral_node",
+                      "spiral_nsde", "mnist_nsde"):
+            rungs = [
+                a for a in manifest["artifacts"].values()
+                if a["model"] == model and a["kind"] == "train"
+            ]
+            assert len(rungs) >= 2, f"{model} needs a budget ladder"
+            budgets = sorted(r["meta"]["budget"] for r in rungs)
+            assert budgets == sorted(set(budgets))
+
+    def test_param_sizes_consistent(self, manifest):
+        for name, a in manifest["artifacts"].items():
+            if a["kind"] in ("train", "tay_train"):
+                p = manifest["models"][a["model"]]["params_size"]
+                s = manifest["models"][a["model"]]["opt_state_size"]
+                ins = {i["name"]: i for i in a["inputs"]}
+                assert ins["params"]["shape"] == [p], name
+                assert ins["opt_state"]["shape"] == [s], name
+                # outputs: params, opt_state, metrics[9]
+                assert a["outputs"][0]["shape"] == [p], name
+                assert a["outputs"][1]["shape"] == [s], name
+                assert a["outputs"][2]["shape"] == [9], name
+
+    def test_init_artifacts_take_u32_seed(self, manifest):
+        for name, a in manifest["artifacts"].items():
+            if a["kind"] == "init":
+                assert len(a["inputs"]) == 1, name
+                assert a["inputs"][0]["dtype"] == "u32", name
+
+    def test_hyperparams_match_paper(self, manifest):
+        h1 = manifest["models"]["mnist_node"]["paper_hyperparams"]
+        assert h1["coef_e_start"] == 100.0 and h1["coef_e_end"] == 10.0
+        assert h1["coef_s"] == 0.0285
+        h2 = manifest["models"]["latent_ode"]["paper_hyperparams"]
+        assert h2["coef_e_start"] == 1000.0 and h2["coef_s"] == 0.285
+        h4 = manifest["models"]["mnist_nsde"]["paper_hyperparams"]
+        assert h4["coef_e"] == 10.0 and h4["coef_s"] == 0.1

@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every property asserts allclose between the
+kernel and ref.py, for both forward values and the hand-written VJPs —
+these kernels sit inside the discrete adjoint (paper §3.2), so gradient
+correctness is the core signal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_act, rk_combine, ref
+from compile.kernels.fused_dense import matmul
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestDenseAct:
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 300),
+        n=st.integers(1, 200),
+        act=st.sampled_from(["tanh", "linear", "sigmoid"]),
+    )
+    def test_forward_matches_ref(self, m, k, n, act):
+        x, w = rand(0, m, k), 0.1 * rand(1, k, n)
+        b = 0.1 * rand(2, n)
+        got = dense_act(x, w, b, act)
+        want = ref.dense_act(x, w, b, act)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+    @given(
+        m=st.integers(1, 80),
+        k=st.integers(1, 120),
+        n=st.integers(1, 80),
+        act=st.sampled_from(["tanh", "linear", "sigmoid"]),
+    )
+    def test_vjp_matches_ref(self, m, k, n, act):
+        x, w = rand(3, m, k), 0.1 * rand(4, k, n)
+        b = 0.1 * rand(5, n)
+        f = lambda x, w, b: jnp.sum(jnp.sin(dense_act(x, w, b, act)))
+        fr = lambda x, w, b: jnp.sum(jnp.sin(ref.dense_act(x, w, b, act)))
+        g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+        for a, bb in zip(g, gr):
+            np.testing.assert_allclose(a, bb, atol=1e-4, rtol=1e-4)
+
+    def test_exact_tile_boundary(self):
+        # shapes exactly on the 128-tile boundary exercise the no-pad path
+        x, w, b = rand(6, 128, 785), 0.05 * rand(7, 785, 128), jnp.zeros(128)
+        np.testing.assert_allclose(
+            dense_act(x, w, b, "tanh"),
+            ref.dense_act(x, w, b, "tanh"),
+            atol=1e-5,
+        )
+
+    def test_bad_act_raises(self):
+        with pytest.raises(ValueError):
+            ref.dense_act(rand(0, 2, 2), rand(1, 2, 2), jnp.zeros(2), "relu6")
+
+    def test_jit_compatible(self):
+        f = jax.jit(lambda x, w, b: dense_act(x, w, b, "tanh"))
+        x, w, b = rand(8, 37, 19), rand(9, 19, 11), jnp.zeros(11)
+        np.testing.assert_allclose(
+            f(x, w, b), ref.dense_act(x, w, b, "tanh"), atol=1e-5
+        )
+
+
+class TestMatmul:
+    @given(m=st.integers(1, 150), k=st.integers(1, 200), n=st.integers(1, 150))
+    def test_matches_jnp(self, m, k, n):
+        a, b = rand(10, m, k), rand(11, k, n)
+        np.testing.assert_allclose(matmul(a, b), a @ b, atol=1e-4, rtol=1e-4)
+
+
+class TestRkCombine:
+    @given(
+        s=st.integers(2, 7),
+        b_=st.integers(1, 100),
+        d=st.integers(1, 50),
+    )
+    def test_forward_matches_ref(self, s, b_, d):
+        ks = rand(12, s, b_, d)
+        z = rand(13, b_, d)
+        h = jnp.float32(0.037)
+        rng = np.random.default_rng(s)
+        bcoef = tuple(rng.normal(size=s))
+        btilde = tuple(rng.normal(size=s))
+        zn, err = rk_combine(ks, z, h, bcoef, btilde)
+        zn_r, err_r = ref.rk_combine(ks, z, h, bcoef, btilde)
+        np.testing.assert_allclose(zn, zn_r, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(err, err_r, atol=1e-5, rtol=1e-5)
+
+    @given(s=st.integers(2, 7), b_=st.integers(1, 40), d=st.integers(1, 20))
+    def test_vjp_matches_ref_incl_h(self, s, b_, d):
+        ks = rand(14, s, b_, d)
+        z = rand(15, b_, d)
+        h = jnp.float32(0.05)
+        rng = np.random.default_rng(s + 100)
+        bcoef = tuple(rng.normal(size=s))
+        btilde = tuple(rng.normal(size=s))
+
+        def loss(kernel):
+            def f(ks, z, h):
+                zn, err = kernel(ks, z, h, bcoef, btilde)
+                return jnp.sum(zn**2) + jnp.sum(jnp.abs(err))
+            return f
+
+        g = jax.grad(loss(rk_combine), argnums=(0, 1, 2))(ks, z, h)
+        gr = jax.grad(loss(ref.rk_combine), argnums=(0, 1, 2))(ks, z, h)
+        for a, bb in zip(g, gr):
+            np.testing.assert_allclose(a, bb, atol=1e-4, rtol=1e-4)
+
+    def test_zero_h_gives_identity(self):
+        ks = rand(16, 4, 8, 3)
+        z = rand(17, 8, 3)
+        zn, err = rk_combine(ks, z, jnp.float32(0.0), (0.1,) * 4, (0.2,) * 4)
+        np.testing.assert_allclose(zn, z, atol=1e-7)
+        np.testing.assert_allclose(err, jnp.zeros_like(z), atol=1e-7)

@@ -1,0 +1,171 @@
+"""Model-level smoke + semantics tests (small shapes for speed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import (
+    latent_ode,
+    mnist_node,
+    mnist_nsde,
+    spiral_node,
+    spiral_nsde,
+)
+from compile.models.common import METRICS_LAYOUT, accuracy, softmax_xent
+
+
+def onehot(labels, n=10):
+    return np.eye(n, dtype=np.float32)[labels]
+
+
+class TestCommon:
+    def test_metrics_layout_stable(self):
+        # the Rust runtime hard-codes this 9-element contract
+        assert METRICS_LAYOUT == [
+            "loss", "metric", "nfe", "naccept", "nreject", "success",
+            "r_e", "r_s", "r_aux",
+        ]
+
+    def test_xent_uniform(self):
+        logits = jnp.zeros((8, 10))
+        y = jnp.asarray(onehot(np.arange(8) % 10))
+        assert float(softmax_xent(logits, y)) == pytest.approx(np.log(10), rel=1e-5)
+
+    def test_accuracy(self):
+        logits = jnp.asarray(onehot(np.array([1, 2, 3]), 10) * 5.0)
+        y = jnp.asarray(onehot(np.array([1, 2, 0]), 10))
+        assert float(accuracy(logits, y)) == pytest.approx(2 / 3)
+
+
+class TestMnistNode:
+    CFG = mnist_node.Config(batch=4, max_steps=12, rtol=1e-3, atol=1e-3,
+                            use_kernels=False)
+
+    def test_param_count_matches_paper_architecture(self):
+        # W1(785x100)+B1(100)+W2(101x784)+B2(784)+W3(784x10)+B3(10)
+        assert mnist_node.SPEC.size == 785 * 100 + 100 + 101 * 784 + 784 + 784 * 10 + 10
+
+    def test_init_deterministic_per_seed(self):
+        a, b = mnist_node.init_fn(3), mnist_node.init_fn(3)
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, mnist_node.init_fn(4))
+
+    def test_train_step_reduces_loss_eventually(self):
+        step = jax.jit(mnist_node.make_train_step(self.CFG))
+        rng = np.random.default_rng(0)
+        x = rng.random((4, 784), dtype=np.float32)
+        y = onehot(np.array([0, 1, 2, 3]))
+        p = mnist_node.init_fn(0)
+        s = mnist_node.OPT.init_state(mnist_node.SPEC.size)
+        losses = []
+        for _ in range(8):
+            p, s, m = step(p, s, x, y, 0.1, 0.0, 0.0, 0.0, 1.0)
+            losses.append(float(m[0]))
+        assert losses[-1] < losses[0]
+
+    def test_er_coefficient_changes_gradient(self):
+        step = jax.jit(mnist_node.make_train_step(self.CFG))
+        rng = np.random.default_rng(0)
+        x = rng.random((4, 784), dtype=np.float32)
+        y = onehot(np.array([0, 1, 2, 3]))
+        p = mnist_node.init_fn(0)
+        s = mnist_node.OPT.init_state(mnist_node.SPEC.size)
+        p_a, _, _ = step(p, s, x, y, 0.1, 0.0, 0.0, 0.0, 1.0)
+        p_b, _, _ = step(p, s, x, y, 0.1, 100.0, 0.0, 0.0, 1.0)
+        assert not np.allclose(np.asarray(p_a), np.asarray(p_b))
+
+    def test_steer_t1_input_respected(self):
+        pred = mnist_node.make_train_step(self.CFG)
+        rng = np.random.default_rng(0)
+        x = rng.random((4, 784), dtype=np.float32)
+        y = onehot(np.array([0, 1, 2, 3]))
+        p = mnist_node.init_fn(0)
+        s = mnist_node.OPT.init_state(mnist_node.SPEC.size)
+        _, _, m_short = pred(p, s, x, y, 0.1, 0.0, 0.0, 0.0, 0.5)
+        _, _, m_long = pred(p, s, x, y, 0.1, 0.0, 0.0, 0.0, 1.5)
+        assert float(m_long[2]) >= float(m_short[2])  # longer span >= NFE
+
+
+class TestLatentOde:
+    CFG = latent_ode.Config(batch=3, t_points=6, steps_per_segment=4,
+                            rtol=1e-3, atol=1e-3, use_kernels=False)
+
+    def test_shapes_and_finiteness(self):
+        step = jax.jit(latent_ode.make_train_step(self.CFG))
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(3, 6, 8)).astype(np.float32)
+        mask = (rng.random((3, 6, 8)) > 0.5).astype(np.float32)
+        ts = np.linspace(0, 1, 6).astype(np.float32)
+        p = latent_ode.init_fn(0)
+        s = latent_ode.OPT.init_state(latent_ode.SPEC.size)
+        p2, s2, m = step(p, s, x, mask, ts, 0.01, 0.0, 0.0, 0.0, 0.5,
+                         np.uint32(7))
+        assert np.isfinite(np.asarray(m)).all()
+        assert p2.shape == p.shape
+
+    def test_mask_zero_channels_ignored(self):
+        # fully masked-out entries must not change the loss value
+        pred = jax.jit(latent_ode.make_predict(self.CFG))
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(3, 6, 8)).astype(np.float32)
+        mask = np.ones((3, 6, 8), np.float32)
+        mask[:, :, 4:] = 0.0
+        x2 = x.copy()
+        x2[:, :, 4:] = 99.0  # garbage in masked-out channels
+        x_masked = x * mask
+        x2_masked = x2 * mask
+        p = latent_ode.init_fn(0)
+        _, m_a = pred(p, x_masked, mask, np.linspace(0, 1, 6).astype(np.float32),
+                      np.uint32(5))
+        _, m_b = pred(p, x2_masked, mask, np.linspace(0, 1, 6).astype(np.float32),
+                      np.uint32(5))
+        assert float(m_a[0]) == pytest.approx(float(m_b[0]), rel=1e-6)
+
+
+class TestSpiralModels:
+    def test_spiral_node_fits_line(self):
+        cfg = spiral_node.Config(t_points=8, steps_per_segment=8,
+                                 rtol=1e-4, atol=1e-4)
+        step = jax.jit(spiral_node.make_train_step(cfg))
+        ts = np.linspace(0, 1, 8).astype(np.float32)
+        data = np.stack([2 - ts, 0.5 * ts], 1).astype(np.float32)
+        p = spiral_node.init_fn(0)
+        s = spiral_node.OPT.init_state(spiral_node.SPEC.size)
+        first = None
+        for i in range(30):
+            p, s, m = step(p, s, data, ts, 0.05, 0.0, 0.0)
+            if first is None:
+                first = float(m[0])
+        assert float(m[0]) < first
+
+    def test_spiral_nsde_gmm_loss_finite(self):
+        cfg = spiral_nsde.Config(n_traj=8, t_points=6, steps_per_segment=6)
+        step = jax.jit(spiral_nsde.make_train_step(cfg))
+        ts = np.linspace(0, 1, 6).astype(np.float32)
+        u0 = np.ones((8, 2), np.float32)
+        mu = np.ones((6, 2), np.float32)
+        var = 0.1 * np.ones((6, 2), np.float32)
+        p = spiral_nsde.init_fn(0)
+        s = spiral_nsde.OPT.init_state(spiral_nsde.SPEC.size)
+        p, s, m = step(p, s, u0, mu, var, ts, 0.01, 0.0, 0.0, np.uint32(3))
+        assert np.isfinite(np.asarray(m)).all()
+
+
+class TestMnistNsde:
+    CFG = mnist_nsde.Config(batch=4, max_steps=32, rtol=1e-2, atol=1e-2,
+                            use_kernels=False, predict_traj=3)
+
+    def test_train_and_predict(self):
+        step = jax.jit(mnist_nsde.make_train_step(self.CFG))
+        pred = jax.jit(mnist_nsde.make_predict(self.CFG))
+        rng = np.random.default_rng(3)
+        x = rng.random((4, 784), dtype=np.float32)
+        y = onehot(np.array([1, 2, 3, 4]))
+        p = mnist_nsde.init_fn(0)
+        s = mnist_nsde.OPT.init_state(mnist_nsde.SPEC.size)
+        p, s, m = step(p, s, x, y, 0.01, 0.0, 0.0, np.uint32(5))
+        assert np.isfinite(np.asarray(m)).all()
+        logits, mp = pred(p, x, y, np.uint32(9))
+        assert logits.shape == (4, 10)
+        # predict runs predict_traj solves: NFE should reflect that
+        assert float(mp[2]) > float(m[2]) / 2

@@ -1,0 +1,76 @@
+"""In-graph optimizer semantics on flat vectors."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optimizers
+
+
+QUAD_OPT = {  # reasonable lr per optimizer for the quadratic descent test
+    "momentum": 0.1,
+    "adam": 0.1,
+    "adamax": 0.1,
+    "adabelief": 0.1,
+}
+
+
+@pytest.mark.parametrize("name", ["momentum", "adam", "adamax", "adabelief"])
+class TestOptimizer:
+    def test_state_layout(self, name):
+        opt = optimizers.get(name)
+        assert opt.state_size(10) == opt.slots * 10 + 1
+        s = opt.init_state(10)
+        assert s.shape == (opt.state_size(10),)
+        assert float(s[-1]) == 0.0
+
+    def test_step_counter_increments(self, name):
+        opt = optimizers.get(name)
+        p = jnp.ones(5)
+        s = opt.init_state(5)
+        for i in range(3):
+            p, s = opt.update(p, jnp.ones(5) * 0.1, s, jnp.float32(0.01))
+            assert float(s[-1]) == i + 1
+
+    def test_descends_quadratic(self, name):
+        # minimize 0.5 * ||p||^2, grad = p
+        opt = optimizers.get(name)
+        p = jnp.ones(8) * 2.0
+        s = opt.init_state(8)
+        lr = jnp.float32(QUAD_OPT[name])
+        for _ in range(200):
+            p, s = opt.update(p, p, s, lr)
+        assert float(jnp.sum(p**2)) < 0.05, name
+
+    def test_zero_grad_keeps_params_close(self, name):
+        opt = optimizers.get(name)
+        p0 = jnp.ones(4)
+        s = opt.init_state(4)
+        p, _ = opt.update(p0, jnp.zeros(4), s, jnp.float32(0.1))
+        np.testing.assert_allclose(p, p0, atol=1e-5)
+
+
+def test_momentum_matches_flux_semantics():
+    # v = rho v + lr g; p -= v
+    opt = optimizers.sgd_momentum(mass=0.9)
+    p = jnp.zeros(1)
+    s = opt.init_state(1)
+    g = jnp.ones(1)
+    p, s = opt.update(p, g, s, jnp.float32(0.1))
+    assert float(p[0]) == pytest.approx(-0.1)
+    p, s = opt.update(p, g, s, jnp.float32(0.1))
+    # v = 0.9*0.1 + 0.1 = 0.19; p = -0.1 - 0.19 = -0.29
+    assert float(p[0]) == pytest.approx(-0.29, rel=1e-6)
+
+
+def test_adam_bias_correction_first_step():
+    opt = optimizers.adam()
+    p = jnp.zeros(1)
+    s = opt.init_state(1)
+    p, _ = opt.update(p, jnp.ones(1) * 0.5, s, jnp.float32(0.01))
+    # first Adam step is ~ -lr * sign(g)
+    assert float(p[0]) == pytest.approx(-0.01, rel=1e-3)
+
+
+def test_unknown_optimizer_raises():
+    with pytest.raises(KeyError):
+        optimizers.get("lion")

@@ -1,0 +1,94 @@
+"""TayNODE (jet) regularizer and regularization composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import regularizers, solver, tableaus
+
+
+class TestTaylorCoeffs:
+    def test_exponential_derivatives(self):
+        # f = -z  =>  z^{(k)} alternates sign with |.| = |z|
+        f = lambda z, t: -z
+        coeffs = regularizers.taylor_derivative_coeffs(
+            f, jnp.ones(3), jnp.float32(0.0), 4
+        )
+        vals = [float(c[0]) for c in coeffs]
+        assert vals == pytest.approx([-1.0, 1.0, -1.0, 1.0], abs=1e-5)
+
+    def test_time_dependent_dynamics(self):
+        # z' = t  =>  z'' = 1, z''' = 0
+        f = lambda z, t: jnp.full_like(z, t)
+        coeffs = regularizers.taylor_derivative_coeffs(
+            f, jnp.zeros(1), jnp.float32(2.0), 3
+        )
+        assert float(coeffs[0][0]) == pytest.approx(2.0)
+        assert float(coeffs[1][0]) == pytest.approx(1.0, abs=1e-5)
+        assert float(coeffs[2][0]) == pytest.approx(0.0, abs=1e-5)
+
+    def test_reg_fn_positive(self):
+        aux = regularizers.taylor_reg_fn(lambda z, t: -z, 3)
+        assert float(aux(jnp.ones((4,)), jnp.float32(0.0))) > 0.0
+
+    def test_order_validation(self):
+        with pytest.raises(ValueError):
+            regularizers.taylor_reg_fn(lambda z, t: -z, 1)
+
+
+class TestSolverIntegration:
+    def test_r_aux_accumulates_and_differentiates(self):
+        tab = tableaus.tsit5()
+
+        def loss(a):
+            f = lambda z, t: -a * z
+            _, st = solver.odeint_scan(
+                f, jnp.ones((2, 3)), 0.0, 1.0, tab=tab, rtol=1e-4,
+                atol=1e-4, max_steps=32, use_kernels=False,
+                aux_fn=regularizers.taylor_reg_fn(f, 3),
+            )
+            return st.r_aux
+
+        v = float(loss(jnp.float32(1.0)))
+        assert v > 0.0
+        g = float(jax.grad(loss)(jnp.float32(1.0)))
+        assert np.isfinite(g) and g != 0.0
+
+    def test_higher_curvature_higher_r_aux(self):
+        tab = tableaus.tsit5()
+
+        def r_aux(a):
+            f = lambda z, t: -a * z
+            _, st = solver.odeint_scan(
+                f, jnp.ones((1, 2)), 0.0, 1.0, tab=tab, rtol=1e-4,
+                atol=1e-4, max_steps=64, use_kernels=False,
+                aux_fn=regularizers.taylor_reg_fn(f, 2),
+            )
+            return float(st.r_aux)
+
+        assert r_aux(jnp.float32(3.0)) > r_aux(jnp.float32(0.5))
+
+
+class TestCompose:
+    def test_variants(self):
+        class FakeStats:
+            r_e, r_e2, r_s, r_aux = (
+                jnp.float32(2.0),
+                jnp.float32(4.0),
+                jnp.float32(3.0),
+                jnp.float32(5.0),
+            )
+
+        st = FakeStats()
+        eh = regularizers.compose_regularization(
+            st, jnp.float32(1.0), jnp.float32(0.5)
+        )
+        assert float(eh) == pytest.approx(2.0 + 1.5)
+        e2 = regularizers.compose_regularization(
+            st, jnp.float32(1.0), jnp.float32(0.0), error_variant="e2"
+        )
+        assert float(e2) == pytest.approx(4.0)
+        full = regularizers.compose_regularization(
+            st, jnp.float32(0.0), jnp.float32(0.0), coef_aux=jnp.float32(2.0)
+        )
+        assert float(full) == pytest.approx(10.0)

@@ -1,0 +1,150 @@
+"""L2 SDE solver: moments, deterministic limit, RSwM invariants, adjoint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import sde_solver
+
+KEY = jax.random.PRNGKey(0)
+F = lambda z, t: -z
+G01 = lambda z, t: 0.1 * jnp.ones_like(z)
+GZERO = lambda z, t: jnp.zeros_like(z)
+
+
+class TestSdeint:
+    def test_deterministic_limit_matches_ode(self):
+        z1, st = sde_solver.sdeint_scan(
+            F, GZERO, jnp.ones((4, 2)), 0.0, 1.0, KEY, rtol=1e-5,
+            atol=1e-5, max_steps=512,
+        )
+        np.testing.assert_allclose(z1, np.exp(-1.0), atol=1e-3)
+        assert float(st.success) == 1.0
+
+    def test_while_matches_scan(self):
+        args = (F, G01, jnp.ones((4, 2)), 0.0, 1.0, KEY)
+        kw = dict(rtol=1e-3, atol=1e-3)
+        z_s, st_s = sde_solver.sdeint_scan(*args, max_steps=256, **kw)
+        z_w, st_w = sde_solver.sdeint_while(*args, **kw)
+        np.testing.assert_allclose(z_s, z_w, atol=1e-6)
+        assert float(st_s.nfe) == float(st_w.nfe)
+
+    def test_gbm_stratonovich_mean(self):
+        mu, sig = 0.5, 0.3
+        z0 = jnp.ones((4000, 1))
+        z1, _ = sde_solver.sdeint_scan(
+            lambda z, t: mu * z, lambda z, t: sig * z, z0, 0.0, 1.0, KEY,
+            rtol=1e-3, atol=1e-3, max_steps=512,
+        )
+        expect = np.exp(mu + 0.5 * sig**2)
+        assert abs(float(jnp.mean(z1)) - expect) / expect < 0.05
+
+    def test_ou_variance(self):
+        sig = 0.5
+        z0 = jnp.zeros((4000, 1))
+        z1, _ = sde_solver.sdeint_scan(
+            F, lambda z, t: sig * jnp.ones_like(z), z0, 0.0, 4.0, KEY,
+            rtol=1e-3, atol=1e-3, max_steps=1024,
+        )
+        var = float(jnp.var(z1))
+        expect = sig**2 / 2
+        assert abs(var - expect) / expect < 0.15, var
+
+    def test_nfe_four_per_attempt(self):
+        _, st = sde_solver.sdeint_scan(
+            F, G01, jnp.ones((2, 2)), 0.0, 1.0, KEY, rtol=1e-3,
+            atol=1e-3, max_steps=256,
+        )
+        attempts = float(st.naccept) + float(st.nreject)
+        assert float(st.nfe) == 4.0 * attempts
+
+    def test_different_keys_different_paths(self):
+        z0 = jnp.ones((2, 2))
+        z_a, _ = sde_solver.sdeint_scan(
+            F, G01, z0, 0.0, 1.0, jax.random.PRNGKey(1), rtol=1e-3,
+            atol=1e-3, max_steps=128,
+        )
+        z_b, _ = sde_solver.sdeint_scan(
+            F, G01, z0, 0.0, 1.0, jax.random.PRNGKey(2), rtol=1e-3,
+            atol=1e-3, max_steps=128,
+        )
+        assert not np.allclose(z_a, z_b)
+
+    def test_same_key_reproducible(self):
+        z0 = jnp.ones((2, 2))
+        runs = [
+            sde_solver.sdeint_scan(
+                F, G01, z0, 0.0, 1.0, KEY, rtol=1e-3, atol=1e-3,
+                max_steps=128,
+            )[0]
+            for _ in range(2)
+        ]
+        np.testing.assert_array_equal(runs[0], runs[1])
+
+    def test_saveat_shapes_and_success(self):
+        ts = jnp.linspace(0.0, 1.0, 30)
+        zs, st = sde_solver.sdeint_save_scan(
+            F, G01, jnp.ones((8, 2)), ts, KEY, rtol=1e-2, atol=1e-2,
+            steps_per_segment=8,
+        )
+        assert zs.shape == (30, 8, 2)
+        np.testing.assert_allclose(zs[0], 1.0)
+        assert float(st.success) == 1.0
+
+    def test_saveat_while_statistically_matches_scan(self):
+        # NOTE: scan and while variants consume PRNG keys differently (the
+        # masked scan splits a key on *every* bounded iteration, the while
+        # loop only on live ones), so individual paths differ; the solved
+        # *distribution* must agree.  Deterministic-path equality is covered
+        # by test_while_matches_scan on the single-span API, where budget
+        # and live iterations coincide for these tolerances.
+        ts = jnp.linspace(0.0, 1.0, 10)
+        z0 = jnp.ones((256, 2))
+        a = sde_solver.sdeint_save_scan(
+            F, G01, z0, ts, KEY, rtol=1e-2, atol=1e-2, steps_per_segment=12
+        )
+        b = sde_solver.sdeint_save_while(
+            F, G01, z0, ts, jax.random.PRNGKey(5), rtol=1e-2, atol=1e-2
+        )
+        np.testing.assert_allclose(a[0][0], b[0][0], atol=1e-7)  # z0 row
+        np.testing.assert_allclose(
+            jnp.mean(a[0][-1]), jnp.mean(b[0][-1]), atol=0.02
+        )
+        np.testing.assert_allclose(
+            jnp.std(a[0][-1]), jnp.std(b[0][-1]), atol=0.02
+        )
+
+
+class TestSdeAdjoint:
+    def test_grad_finite_and_nonzero(self):
+        def loss(a):
+            z1, st = sde_solver.sdeint_scan(
+                lambda z, t: -a * z, G01, jnp.ones((8, 2)), 0.0, 1.0, KEY,
+                rtol=1e-3, atol=1e-3, max_steps=256,
+            )
+            return jnp.mean(z1**2) + 0.1 * st.r_e + 0.01 * st.r_s
+
+        g = float(jax.grad(loss)(jnp.float32(1.0)))
+        assert np.isfinite(g) and g != 0.0
+
+    def test_grad_sign_matches_decay(self):
+        # increasing decay rate must decrease E[z^2]
+        def loss(a):
+            z1, _ = sde_solver.sdeint_scan(
+                lambda z, t: -a * z, GZERO, jnp.ones((4, 1)), 0.0, 1.0,
+                KEY, rtol=1e-4, atol=1e-4, max_steps=256,
+            )
+            return jnp.mean(z1**2)
+
+        assert float(jax.grad(loss)(jnp.float32(1.0))) < 0.0
+
+    def test_diffusion_grad_flows(self):
+        def loss(s):
+            z1, _ = sde_solver.sdeint_scan(
+                F, lambda z, t: s * jnp.ones_like(z), jnp.ones((64, 2)),
+                0.0, 1.0, KEY, rtol=1e-2, atol=1e-2, max_steps=128,
+            )
+            return jnp.var(z1)
+
+        g = float(jax.grad(loss)(jnp.float32(0.3)))
+        assert np.isfinite(g) and g > 0.0  # more noise -> more variance

@@ -1,0 +1,192 @@
+"""L2 solver correctness: adaptive Tsit5/Dopri5/BS3 vs analytic solutions,
+white-boxed statistics semantics, and the discrete adjoint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import norms, solver, tableaus
+
+TAB = tableaus.tsit5()
+DECAY = lambda z, t: -z
+
+
+class TestTableaus:
+    @pytest.mark.parametrize("name", ["tsit5", "dopri5", "bs3"])
+    def test_consistency_conditions(self, name):
+        tab = tableaus.get(name)
+        assert abs(tab.b.sum() - 1.0) < 1e-12
+        assert abs(tab.btilde.sum()) < 1e-12
+        for i in range(tab.stages):
+            assert abs(tab.a[i, :].sum() - tab.c[i]) < 1e-9
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            tableaus.get("rk4")
+
+    def test_fsal_structure(self):
+        for name in ("tsit5", "dopri5"):
+            tab = tableaus.get(name)
+            np.testing.assert_allclose(tab.a[-1, :-1], tab.b[:-1], atol=1e-15)
+
+
+class TestOdeint:
+    def test_exponential_accuracy(self):
+        z0 = jnp.ones((4, 3))
+        z1, st = solver.odeint_scan(
+            DECAY, z0, 0.0, 1.0, tab=TAB, rtol=1e-7, atol=1e-7,
+            max_steps=128, use_kernels=False,
+        )
+        np.testing.assert_allclose(z1, np.exp(-1.0), rtol=1e-6)
+        assert float(st.success) == 1.0
+
+    @pytest.mark.parametrize("name", ["tsit5", "dopri5", "bs3"])
+    def test_all_tableaus_converge(self, name):
+        tab = tableaus.get(name)
+        z1, st = solver.odeint_scan(
+            DECAY, jnp.ones((2, 2)), 0.0, 1.0, tab=tab, rtol=1e-6,
+            atol=1e-6, max_steps=256, use_kernels=False,
+        )
+        np.testing.assert_allclose(z1, np.exp(-1.0), rtol=1e-4)
+
+    def test_while_matches_scan(self):
+        z0 = jnp.ones((3, 2)) * 0.7
+        f = lambda z, t: jnp.sin(z) - 0.3 * z
+        z_s, st_s = solver.odeint_scan(
+            f, z0, 0.0, 2.0, tab=TAB, rtol=1e-5, atol=1e-5, max_steps=128,
+            use_kernels=False,
+        )
+        z_w, st_w = solver.odeint_while(
+            f, z0, 0.0, 2.0, tab=TAB, rtol=1e-5, atol=1e-5, use_kernels=False
+        )
+        np.testing.assert_allclose(z_s, z_w, atol=1e-6)
+        assert float(st_s.nfe) == float(st_w.nfe)
+        assert float(st_s.r_e) == pytest.approx(float(st_w.r_e), rel=1e-5)
+
+    def test_kernel_path_matches_ref_path(self):
+        z0 = jnp.ones((16, 8)) * 0.3
+        for use_kernels in (False, True):
+            out = solver.odeint_scan(
+                DECAY, z0, 0.0, 1.0, tab=TAB, rtol=1e-5, atol=1e-5,
+                max_steps=64, use_kernels=use_kernels,
+            )
+            if use_kernels:
+                np.testing.assert_allclose(out[0], ref_out[0], atol=1e-6)
+                assert float(out[1].nfe) == float(ref_out[1].nfe)
+            else:
+                ref_out = out
+
+    def test_nfe_accounting(self):
+        _, st = solver.odeint_scan(
+            DECAY, jnp.ones((2, 2)), 0.0, 1.0, tab=TAB, rtol=1e-6,
+            atol=1e-6, max_steps=64, use_kernels=False,
+        )
+        # 1 initial eval + 6 per attempt (FSAL Tsit5)
+        attempts = float(st.naccept) + float(st.nreject)
+        assert float(st.nfe) == 1.0 + 6.0 * attempts
+
+    def test_budget_exhaustion_flags_failure(self):
+        _, st = solver.odeint_scan(
+            DECAY, jnp.ones((2, 2)), 0.0, 1.0, tab=TAB, rtol=1e-12,
+            atol=1e-12, max_steps=4, use_kernels=False,
+        )
+        assert float(st.success) == 0.0
+
+    def test_stiffness_estimate_tracks_lambda(self):
+        lam = 40.0
+        _, st = solver.odeint_scan(
+            lambda z, t: -lam * z, jnp.ones((2, 2)), 0.0, 1.0, tab=TAB,
+            rtol=1e-6, atol=1e-6, max_steps=256, use_kernels=False,
+        )
+        s_per_step = float(st.r_s) / float(st.naccept)
+        assert abs(s_per_step - lam) / lam < 0.25
+
+    def test_r_e_decreases_with_tolerance(self):
+        res = []
+        for tol in (1e-3, 1e-6):
+            _, st = solver.odeint_scan(
+                DECAY, jnp.ones((2, 2)), 0.0, 1.0, tab=TAB, rtol=tol,
+                atol=tol, max_steps=256, use_kernels=False,
+            )
+            res.append(float(st.r_e))
+        assert res[1] < res[0]
+
+    def test_saveat_matches_analytic(self):
+        ts = jnp.linspace(0.0, 1.0, 7)
+        zs, st = solver.odeint_save_scan(
+            DECAY, jnp.ones((2, 1)), ts, tab=TAB, rtol=1e-7, atol=1e-7,
+            steps_per_segment=16, use_kernels=False,
+        )
+        np.testing.assert_allclose(
+            zs[:, 0, 0], np.exp(-np.asarray(ts)), rtol=1e-5
+        )
+        assert float(st.success) == 1.0
+
+    def test_saveat_while_matches_scan(self):
+        ts = jnp.linspace(0.0, 1.0, 5)
+        a = solver.odeint_save_scan(
+            DECAY, jnp.ones((2, 2)), ts, tab=TAB, rtol=1e-5, atol=1e-5,
+            steps_per_segment=12, use_kernels=False,
+        )
+        b = solver.odeint_save_while(
+            DECAY, jnp.ones((2, 2)), ts, tab=TAB, rtol=1e-5, atol=1e-5,
+            use_kernels=False,
+        )
+        np.testing.assert_allclose(a[0], b[0], atol=1e-6)
+
+
+class TestDiscreteAdjoint:
+    def test_grad_matches_analytic(self):
+        # d/da [z0 * exp(-a)] = -z0 exp(-a) at a=1
+        def loss(a):
+            z1, _ = solver.odeint_scan(
+                lambda z, t: -a * z, jnp.ones((1, 1)), 0.0, 1.0, tab=TAB,
+                rtol=1e-7, atol=1e-7, max_steps=128, use_kernels=False,
+            )
+            return z1[0, 0]
+
+        g = jax.grad(loss)(jnp.float32(1.0))
+        assert abs(float(g) - (-np.exp(-1.0))) < 1e-4
+
+    def test_reg_terms_differentiable(self):
+        def loss(a):
+            _, st = solver.odeint_scan(
+                lambda z, t: -a * z, jnp.ones((2, 2)), 0.0, 1.0, tab=TAB,
+                rtol=1e-4, atol=1e-4, max_steps=64, use_kernels=False,
+            )
+            return st.r_e + 0.1 * st.r_s + st.r_e2
+
+        g = jax.grad(loss)(jnp.float32(1.0))
+        assert np.isfinite(float(g))
+        assert float(g) != 0.0
+
+    def test_grad_finite_difference(self):
+        def loss(a):
+            z1, st = solver.odeint_scan(
+                lambda z, t: -a * z * z, jnp.ones((1, 2)), 0.0, 1.0,
+                tab=TAB, rtol=1e-5, atol=1e-5, max_steps=64,
+                use_kernels=False,
+            )
+            return jnp.sum(z1) + 0.01 * st.r_e
+
+        a0 = jnp.float32(0.8)
+        g = float(jax.grad(loss)(a0))
+        eps = 1e-3
+        fd = (float(loss(a0 + eps)) - float(loss(a0 - eps))) / (2 * eps)
+        assert abs(g - fd) < 5e-2 * max(1.0, abs(fd))
+
+
+class TestNorms:
+    def test_hairer_norm_safe_at_zero(self):
+        g = jax.grad(lambda x: norms.hairer_norm(x))(jnp.zeros(4))
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_error_ratio_accept_boundary(self):
+        e = jnp.full((4,), 1e-6)
+        z = jnp.ones((4,))
+        q = norms.error_ratio(e, z, z, 1e-6, 1e-6)
+        assert float(q) < 1.0  # scale = atol + |z| rtol = 2e-6 > |e|
+
+    def test_pi_factor_clamps(self):
+        assert float(norms.pi_step_factor(jnp.float32(1e-8), jnp.float32(1.0), 5)) <= 10.0
+        assert float(norms.pi_step_factor(jnp.float32(1e8), jnp.float32(1.0), 5)) >= 0.2

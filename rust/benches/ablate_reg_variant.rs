@@ -1,0 +1,43 @@
+//! Ablation A2: the paper's two error-regularizer variants —
+//! R_E = sum E_j |h_j| (Eq. 9) vs R_E = sum E_j^2 (§4.1.2 note) — measured
+//! on the same solves, plus budget-ladder router telemetry under each.
+use regnde::bench::{run_grid, BenchConfig};
+use regnde::coordinator::Method;
+use regnde::solvers::{problems, solve, OdeOptions};
+use regnde::util::tablefmt::Table;
+
+fn main() {
+    // (a) statically: how the two accumulators scale with tolerance
+    let mut t = Table::new(
+        "Ablation — R_E variants on the cubic spiral (native Tsit5)",
+        &["rtol=atol", "sum E|h| (Eq.9)", "sum E^2 (variant)"],
+    );
+    for tol in [1e-3, 1e-5, 1e-7] {
+        let opts = OdeOptions {
+            rtol: tol,
+            atol: tol,
+            ..Default::default()
+        };
+        let out = solve(problems::spiral_ode, &[2.0, 0.0], 0.0, 1.5, &opts);
+        t.row(vec![
+            format!("{tol:.0e}"),
+            format!("{:.3e}", out.stats.r_e),
+            format!("{:.3e}", out.stats.r_e2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // (b) dynamically: router telemetry for vanilla vs ernode training
+    let cfg = BenchConfig::from_env(2, 6);
+    let methods = ["vanilla", "ernode"].map(|m| Method::parse(m).unwrap());
+    let grid = run_grid("mnist-node", &methods, &cfg).expect("bench failed");
+    println!("budget-ladder telemetry (escalations / descents over the run):");
+    for m in &grid {
+        let esc = m.summary(|r| r.escalations as f64).mean;
+        let desc = m.summary(|r| r.descents as f64).mean;
+        println!(
+            "  {:<14} escalations {esc:.1}  descents {desc:.1}",
+            m.method.label(false)
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Ablation A1: tolerance sweep on the native solver — how NFE, the error
+//! regularizer R_E and the stiffness accumulator scale with rtol/atol.
+//! (The paper fixes tol = 1.4e-8; DESIGN.md §4 documents our looser
+//! default, and this bench quantifies the trade.)
+use regnde::solvers::{problems, solve, OdeOptions};
+use regnde::util::tablefmt::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Ablation — tolerance sweep (native Tsit5 on the cubic spiral)",
+        &["rtol=atol", "NFE", "accepted", "rejected", "R_E", "R_S/step"],
+    );
+    for tol in [1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7, 1e-8] {
+        let opts = OdeOptions {
+            rtol: tol,
+            atol: tol,
+            ..Default::default()
+        };
+        let out = solve(problems::spiral_ode, &[2.0, 0.0], 0.0, 1.5, &opts);
+        assert!(out.success);
+        t.row(vec![
+            format!("{tol:.0e}"),
+            format!("{}", out.stats.nfe),
+            format!("{}", out.stats.naccept),
+            format!("{}", out.stats.nreject),
+            format!("{:.3e}", out.stats.r_e),
+            format!("{:.2}", out.stats.r_s / out.stats.naccept as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("expected shape: NFE grows ~tol^(-1/5) (5th-order method); R_E shrinks with tol");
+}

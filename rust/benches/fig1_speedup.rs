@@ -1,0 +1,40 @@
+//! Regenerates paper Figure 1: aggregate training and prediction speedups
+//! of the regularized models over their unregularized baselines, across
+//! all four experiments.
+use regnde::bench::{render_speedups, run_grid, BenchConfig};
+use regnde::coordinator::Method;
+
+fn main() {
+    let cfg = BenchConfig::from_env(2, 6);
+    let ode = ["vanilla", "srnode", "ernode"].map(|m| Method::parse(m).unwrap());
+    let sde = Method::table_grid_sde();
+    let mut speedups = Vec::new();
+    for (exp, methods, is_sde) in [
+        ("mnist-node", &ode[..], false),
+        ("latent-ode", &ode[..], false),
+        ("spiral-nsde", &sde[..], true),
+        ("mnist-nsde", &sde[..], true),
+    ] {
+        eprintln!("== {exp} ==");
+        let grid = run_grid(exp, methods, &cfg).expect("bench failed");
+        println!("{}", render_speedups(&format!("Figure 1 — {exp}"), &grid, is_sde));
+        let base_t = grid[0].summary(|r| r.train_time_s).mean;
+        let base_p = grid[0].summary(|r| r.predict_time_s).mean;
+        for m in grid.iter().skip(1) {
+            speedups.push((
+                base_t / m.summary(|r| r.train_time_s).mean.max(1e-9),
+                base_p / m.summary(|r| r.predict_time_s).mean.max(1e-9),
+            ));
+        }
+    }
+    let n = speedups.len() as f64;
+    let (st, sp): (f64, f64) = speedups
+        .iter()
+        .fold((0.0, 0.0), |(a, b), (t, p)| (a + t, b + p));
+    println!(
+        "AVERAGE over all regularized models: train {:.2}x, predict {:.2}x \
+         (paper Figure 1: 1.45x train, 1.84x predict for best models)",
+        st / n,
+        sp / n
+    );
+}

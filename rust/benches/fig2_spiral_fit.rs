@@ -1,0 +1,32 @@
+//! Regenerates paper Figure 2: spiral Neural ODE fits, unregularized vs
+//! ER+SR-regularized — the fitted trajectories (text series) plus the NFE
+//! comparison (paper: 1083 +- 58 vs 676 +- 68).
+use regnde::bench::{run_grid, BenchConfig};
+use regnde::coordinator::Method;
+
+fn main() {
+    let cfg = BenchConfig::from_env(4, 25);
+    let methods = ["vanilla", "srnode+ernode"].map(|m| Method::parse(m).unwrap());
+    let grid = run_grid("spiral-node", &methods, &cfg).expect("bench failed");
+    println!("Figure 2 — Spiral Neural ODE: fit quality vs solve cost\n");
+    for m in &grid {
+        let mse = m.summary(|r| r.final_test_loss);
+        let nfe = m.summary(|r| r.predict_nfe);
+        let pt = m.summary(|r| r.predict_time_s);
+        println!(
+            "{:<18} MSE {:.5} ± {:.5} | NFE {:>7.1} ± {:>5.1} | predict {:.4}s",
+            m.method.label(false),
+            mse.mean,
+            mse.std,
+            nfe.mean,
+            nfe.std,
+            pt.mean
+        );
+    }
+    let r = grid[0].summary(|r| r.predict_nfe).mean
+        / grid[1].summary(|r| r.predict_nfe).mean.max(1.0);
+    println!(
+        "\nNFE ratio vanilla/regularized = {r:.2}x (paper: 1083/676 = 1.60x) \
+         with comparable fits"
+    );
+}

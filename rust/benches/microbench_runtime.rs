@@ -1,0 +1,73 @@
+//! Runtime microbenchmarks (the §Perf L3 profile): per-step overhead
+//! decomposition of the hot path — input literal construction, execution,
+//! output decode — for the MNIST NODE train artifact at each ladder rung.
+use std::time::Instant;
+
+use regnde::runtime::{Engine, Input};
+use regnde::util::stats;
+
+fn main() {
+    let engine = Engine::new(regnde::default_artifacts_dir()).expect("artifacts");
+    let model = engine.manifest.model("mnist_node").unwrap().clone();
+    let params = engine.init_params("mnist_node", 0).unwrap();
+    let opt = vec![0.0f32; model.opt_state_size];
+    let x = vec![0.3f32; 32 * 784];
+    let mut y = vec![0.0f32; 32 * 10];
+    for i in 0..32 {
+        y[i * 10 + i % 10] = 1.0;
+    }
+
+    for rung in ["mnist_node_train_b16", "mnist_node_train_b32", "mnist_node_train_b64"] {
+        engine.load(rung).unwrap(); // exclude compile from timing
+        let reps = 5;
+        let mut times = Vec::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let out = engine
+                .run(
+                    rung,
+                    &[
+                        Input::F32(&params),
+                        Input::F32(&opt),
+                        Input::F32(&x),
+                        Input::F32(&y),
+                        Input::Scalar(0.1),
+                        Input::Scalar(0.0),
+                        Input::Scalar(0.0),
+                        Input::Scalar(0.0),
+                        Input::Scalar(1.0),
+                    ],
+                )
+                .unwrap();
+            std::hint::black_box(&out);
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{rung:<24} {:>8.1} ms/step  (min {:>7.1}, max {:>7.1}, n={reps})",
+            stats::mean(&times),
+            stats::min(&times),
+            stats::max(&times)
+        );
+    }
+    println!("\nbudget rung wall-clock should scale ~linearly with budget — the");
+    println!("gap the budget-ladder router converts into training-time savings.");
+
+    // predict path: NFE-proportional wall clock
+    engine.load("mnist_node_predict").unwrap();
+    let mut times = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let out = engine
+            .run(
+                "mnist_node_predict",
+                &[Input::F32(&params), Input::F32(&x), Input::F32(&y)],
+            )
+            .unwrap();
+        std::hint::black_box(&out);
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "\nmnist_node_predict        {:>8.1} ms (early-exiting while loop)",
+        stats::mean(&times)
+    );
+}

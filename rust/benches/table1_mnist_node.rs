@@ -1,0 +1,22 @@
+//! Regenerates paper Table 1: MNIST image classification with Neural ODE —
+//! the full method grid (Vanilla / STEER / TayNODE / SRNODE / ERNODE and
+//! compositions) with accuracy, train time, prediction time and NFE.
+//! Scale via REGNDE_BENCH_{EPOCHS,ITERS,SEEDS}.
+use regnde::bench::{render_table, run_grid, BenchConfig};
+use regnde::coordinator::Method;
+
+fn main() {
+    let cfg = BenchConfig::from_env(3, 8);
+    let grid = run_grid("mnist-node", &Method::table_grid_ode(), &cfg)
+        .expect("bench failed — run `make artifacts` first");
+    println!(
+        "{}",
+        render_table(
+            "Table 1 — MNIST Image Classification using Neural ODE (testbed scale)",
+            &grid,
+            false,
+            true,
+        )
+    );
+    println!("paper reference: ERNODE 1.20x train / 1.57x predict speedup, NFE 253 -> 177");
+}

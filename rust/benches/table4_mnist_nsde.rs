@@ -1,0 +1,20 @@
+//! Regenerates paper Table 4: MNIST classification with a Neural SDE —
+//! Vanilla / SRNSDE / ERNSDE with accuracy, times and NFE.
+use regnde::bench::{render_table, run_grid, BenchConfig};
+use regnde::coordinator::Method;
+
+fn main() {
+    let cfg = BenchConfig::from_env(2, 8);
+    let grid = run_grid("mnist-nsde", &Method::table_grid_sde(), &cfg)
+        .expect("bench failed — run `make artifacts` first");
+    println!(
+        "{}",
+        render_table(
+            "Table 4 — MNIST Image Classification using Neural SDE (testbed scale)",
+            &grid,
+            true,
+            true,
+        )
+    );
+    println!("paper reference: ERNSDE 1.51x train / 2.08x predict speedup, NFE 411 -> 185");
+}

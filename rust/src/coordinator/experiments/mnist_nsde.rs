@@ -1,0 +1,173 @@
+//! MNIST Neural SDE driver — paper §4.2.2 (Table 4, Figure 6).
+//!
+//! Paper setting: B=512, Adam(0.01) + InvDecay(1e-5), 40 epochs, constant
+//! coef_e = 10.0 / coef_s = 0.1, prediction = mean logits over 10 driving
+//! paths.  Testbed scale: synthetic MNIST, B=32.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::budget::BudgetRouter;
+use crate::coordinator::method::Method;
+use crate::coordinator::metrics::{EpochAccumulator, RunResult};
+use crate::coordinator::schedule::InvDecay;
+use crate::data::{batcher::Batcher, mnist_synth};
+use crate::runtime::state::{Metrics, TrainState};
+use crate::runtime::{Engine, Input};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+pub const MODEL: &str = "mnist_nsde";
+const BATCH: usize = 32;
+
+pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let spec = engine.manifest.model(MODEL)?.clone();
+    let h = &spec.hyper;
+    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+    let lr = InvDecay {
+        lr0: get("lr"),
+        gamma: get("inv_decay"),
+    };
+    let ce = if method.er { get("coef_e") } else { 0.0 };
+    let cs = if method.sr { get("coef_s") } else { 0.0 };
+
+    let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);
+    let train = mnist_synth::generate(n_train, opts.seed);
+    let test = mnist_synth::generate(BATCH * 2, opts.seed ^ 0xDEAD);
+    let train_onehot = mnist_synth::one_hot(&train.labels);
+    let test_onehot = mnist_synth::one_hot(&test.labels);
+
+    let ladder: Vec<_> = engine
+        .manifest
+        .train_ladder(MODEL, false)
+        .into_iter()
+        .cloned()
+        .collect();
+    let mut router = BudgetRouter::new(
+        ladder.iter().map(|a| a.budget.unwrap_or(usize::MAX)).collect(),
+    )?;
+
+    let mut state = TrainState::new(
+        engine.init_params(MODEL, opts.seed as u32)?,
+        spec.opt_state_size,
+    );
+    let mut rng = Rng::new(opts.seed ^ 0x51DE);
+    let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
+
+    // Pre-compile every rung + the predict artifact so the stopwatch
+    // measures steady-state training, not PJRT JIT.
+    for art in &ladder {
+        engine.load(&art.name)?;
+    }
+    engine.load(&format!("{MODEL}_predict"))?;
+
+    let mut sw = Stopwatch::new();
+    let mut epochs_out = Vec::with_capacity(opts.epochs);
+    let (mut bx, mut by) = (Vec::new(), Vec::new());
+
+    for epoch in 0..opts.epochs {
+        let mut acc = EpochAccumulator::default();
+        let t0 = std::time::Instant::now();
+        sw.start();
+        for _ in 0..opts.iters_per_epoch {
+            let idx = batcher.next_batch().to_vec();
+            Batcher::gather(&train.images, mnist_synth::DIM, &idx, &mut bx);
+            Batcher::gather(&train_onehot, mnist_synth::CLASSES, &idx, &mut by);
+            let lr_t = lr.at(state.iter) as f32;
+            let seed = rng.next_u32();
+            loop {
+                let art = &ladder[router.rung()];
+                let out = engine
+                    .run_spec(
+                        art,
+                        &[
+                            Input::F32(&state.params),
+                            Input::F32(&state.opt_state),
+                            Input::F32(&bx),
+                            Input::F32(&by),
+                            Input::Scalar(lr_t),
+                            Input::Scalar(ce as f32),
+                            Input::Scalar(cs as f32),
+                            Input::SeedU32(seed),
+                        ],
+                    )
+                    .with_context(|| format!("train step on {}", art.name))?;
+                let [params, opt_state, metrics]: [Vec<f32>; 3] =
+                    out.try_into().ok().context("train step arity")?;
+                let m = Metrics::decode(&metrics)?;
+                if router.observe(m.naccept + m.nreject, m.success) {
+                    continue;
+                }
+                state.update(params, opt_state)?;
+                acc.push(&m);
+                break;
+            }
+        }
+        sw.stop();
+        anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
+        let rec = acc.finish(epoch, t0.elapsed().as_secs_f64(), router.rung());
+        if opts.verbose {
+            println!(
+                "[{}] epoch {epoch}: loss {:.4} acc {:.3} nfe {:.1} rung {} ({:.1}s)",
+                method.label(true),
+                rec.loss,
+                rec.metric,
+                rec.nfe,
+                rec.rung,
+                rec.wall_s
+            );
+        }
+        epochs_out.push(rec);
+    }
+
+    // Evaluation: 10-trajectory mean-logit prediction (inside the artifact).
+    let eval = |images: &[f32], onehot: &[f32], batches: usize| -> Result<(Metrics, f64)> {
+        let mut ms = Vec::new();
+        let mut secs = Vec::new();
+        for b in 0..batches {
+            let xs = &images[b * BATCH * mnist_synth::DIM..(b + 1) * BATCH * mnist_synth::DIM];
+            let ys = &onehot
+                [b * BATCH * mnist_synth::CLASSES..(b + 1) * BATCH * mnist_synth::CLASSES];
+            let t0 = std::time::Instant::now();
+            let out = engine.run(
+                &format!("{MODEL}_predict"),
+                &[
+                    Input::F32(&state.params),
+                    Input::F32(xs),
+                    Input::F32(ys),
+                    Input::SeedU32(4242),
+                ],
+            )?;
+            secs.push(t0.elapsed().as_secs_f64());
+            ms.push(Metrics::decode(&out[1])?);
+        }
+        let n = ms.len().max(1) as f64;
+        Ok((
+            Metrics {
+                loss: ms.iter().map(|m| m.loss).sum::<f64>() / n,
+                metric: ms.iter().map(|m| m.metric).sum::<f64>() / n,
+                nfe: ms.iter().map(|m| m.nfe).sum::<f64>() / n,
+                ..Default::default()
+            },
+            secs.iter().sum::<f64>() / n,
+        ))
+    };
+    engine.load(&format!("{MODEL}_predict"))?;
+    let (train_eval, _) = eval(&train.images, &train_onehot, 2)?;
+    let (test_eval, pred_s) = eval(&test.images, &test_onehot, 2)?;
+
+    Ok(RunResult {
+        experiment: "table4_mnist_nsde".into(),
+        method: method.label(true),
+        seed: opts.seed,
+        epochs: epochs_out,
+        train_time_s: sw.total_secs(),
+        predict_time_s: pred_s,
+        predict_nfe: test_eval.nfe,
+        final_train_metric: train_eval.metric,
+        final_test_metric: test_eval.metric,
+        final_train_loss: train_eval.loss,
+        final_test_loss: test_eval.loss,
+        escalations: router.escalations,
+        descents: router.descents,
+    })
+}

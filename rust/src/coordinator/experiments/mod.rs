@@ -1,0 +1,61 @@
+//! Experiment drivers — one per paper experiment.
+//!
+//! Each driver owns its dataset, wires the method grid (coefficients,
+//! schedules, STEER sampling, budget-ladder routing) into the lowered
+//! artifacts and produces [`RunResult`]s that the bench harness turns into
+//! the paper's tables and figures.
+
+pub mod latent_ode;
+pub mod mnist_node;
+pub mod mnist_nsde;
+pub mod spiral_node;
+pub mod spiral_nsde;
+
+use anyhow::Result;
+
+use super::Method;
+use crate::runtime::Engine;
+
+/// Common knobs for a training run (scaled-down defaults; the paper's
+/// epoch counts are listed in each driver's docs).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOpts {
+    pub epochs: usize,
+    /// Optimizer iterations per epoch.
+    pub iters_per_epoch: usize,
+    /// Replica seed (data order, init, STEER and SDE noise).
+    pub seed: u64,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self {
+            epochs: 3,
+            iters_per_epoch: 10,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Dispatch an experiment by name (CLI entry point).
+pub fn run_by_name(
+    engine: &Engine,
+    experiment: &str,
+    method: Method,
+    opts: TrainOpts,
+) -> Result<super::RunResult> {
+    match experiment {
+        "mnist-node" => mnist_node::run(engine, method, opts),
+        "latent-ode" | "physionet" => latent_ode::run(engine, method, opts),
+        "spiral-node" => spiral_node::run(engine, method, opts),
+        "spiral-nsde" => spiral_nsde::run(engine, method, opts),
+        "mnist-nsde" => mnist_nsde::run(engine, method, opts),
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (mnist-node|latent-ode|spiral-node|\
+             spiral-nsde|mnist-nsde)"
+        ),
+    }
+}

@@ -1,0 +1,174 @@
+//! Spiral Neural SDE driver — paper §4.2.1 (Table 3, Figure 5).
+//!
+//! Paper setting: AdaBelief(0.01), 250 iterations, GMM moment loss over 30
+//! save points, data = 10k trajectories of the spiral DSDE (Eq. 15).  The
+//! ground-truth moments come from the native Rust SDE solver ensemble
+//! (data::spiral::spiral_sde_moments); the model predicts a fresh ensemble
+//! each iteration with a coordinator-supplied seed.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::budget::BudgetRouter;
+use crate::coordinator::method::Method;
+use crate::coordinator::metrics::{EpochAccumulator, RunResult};
+use crate::data::spiral;
+use crate::runtime::state::{Metrics, TrainState};
+use crate::runtime::{Engine, Input};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+pub const MODEL: &str = "spiral_nsde";
+const N_TRAJ: usize = 64;
+const T: usize = 30;
+const SPAN: f64 = 1.0;
+/// Ensemble size behind the ground-truth moments (paper: 10_000; scaled
+/// to keep data generation snappy while moments stay tight).
+const DATA_ENSEMBLE: usize = 2000;
+
+/// Ground-truth inputs: (u0 tiled, data_mu, data_var, ts).
+pub fn ground_truth(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let ts = spiral::uniform_grid(T, SPAN);
+    let (mu, var) = spiral::spiral_sde_moments([1.0, 1.0], &ts, DATA_ENSEMBLE, seed);
+    let mut u0 = Vec::with_capacity(N_TRAJ * 2);
+    for _ in 0..N_TRAJ {
+        u0.extend_from_slice(&[1.0, 1.0]);
+    }
+    (u0, mu, var, ts.iter().map(|&t| t as f32).collect())
+}
+
+pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let spec = engine.manifest.model(MODEL)?.clone();
+    let h = &spec.hyper;
+    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+    let lr = get("lr");
+    let ce = if method.er { get("coef_e") } else { 0.0 };
+    let cs = if method.sr { get("coef_s") } else { 0.0 };
+
+    let (u0, data_mu, data_var, ts) = ground_truth(opts.seed);
+
+    let ladder: Vec<_> = engine
+        .manifest
+        .train_ladder(MODEL, false)
+        .into_iter()
+        .cloned()
+        .collect();
+    let mut router = BudgetRouter::new(
+        ladder.iter().map(|a| a.budget.unwrap_or(usize::MAX)).collect(),
+    )?;
+
+    let mut state = TrainState::new(
+        engine.init_params(MODEL, opts.seed as u32)?,
+        spec.opt_state_size,
+    );
+    let mut rng = Rng::new(opts.seed ^ 0x51DE);
+
+    // Pre-compile every rung + the predict artifact so the stopwatch
+    // measures steady-state training, not PJRT JIT.
+    for art in &ladder {
+        engine.load(&art.name)?;
+    }
+    engine.load(&format!("{MODEL}_predict"))?;
+
+    let mut sw = Stopwatch::new();
+    let mut epochs_out = Vec::with_capacity(opts.epochs);
+    for epoch in 0..opts.epochs {
+        let mut acc = EpochAccumulator::default();
+        let t0 = std::time::Instant::now();
+        sw.start();
+        for _ in 0..opts.iters_per_epoch {
+            let seed = rng.next_u32();
+            loop {
+                let art = &ladder[router.rung()];
+                let out = engine
+                    .run_spec(
+                        art,
+                        &[
+                            Input::F32(&state.params),
+                            Input::F32(&state.opt_state),
+                            Input::F32(&u0),
+                            Input::F32(&data_mu),
+                            Input::F32(&data_var),
+                            Input::F32(&ts),
+                            Input::Scalar(lr as f32),
+                            Input::Scalar(ce as f32),
+                            Input::Scalar(cs as f32),
+                            Input::SeedU32(seed),
+                        ],
+                    )
+                    .with_context(|| format!("train step on {}", art.name))?;
+                let [params, opt_state, metrics]: [Vec<f32>; 3] =
+                    out.try_into().ok().context("train step arity")?;
+                let m = Metrics::decode(&metrics)?;
+                if router.observe(m.naccept + m.nreject, m.success) {
+                    continue;
+                }
+                state.update(params, opt_state)?;
+                acc.push(&m);
+                break;
+            }
+        }
+        sw.stop();
+        anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
+        let rec = acc.finish(epoch, t0.elapsed().as_secs_f64(), router.rung());
+        if opts.verbose {
+            println!(
+                "[{}] epoch {epoch}: gmm {:.4} nfe {:.1} rung {} ({:.2}s)",
+                method.label(true),
+                rec.loss,
+                rec.nfe,
+                rec.rung,
+                rec.wall_s
+            );
+        }
+        epochs_out.push(rec);
+    }
+
+    engine.load(&format!("{MODEL}_predict"))?;
+    let t0 = std::time::Instant::now();
+    let out = engine.run(
+        &format!("{MODEL}_predict"),
+        &[
+            Input::F32(&state.params),
+            Input::F32(&u0),
+            Input::F32(&data_mu),
+            Input::F32(&data_var),
+            Input::F32(&ts),
+            Input::SeedU32(999),
+        ],
+    )?;
+    let pred_s = t0.elapsed().as_secs_f64();
+    let m = Metrics::decode(&out[1])?;
+
+    Ok(RunResult {
+        experiment: "table3_spiral_sde".into(),
+        method: method.label(true),
+        seed: opts.seed,
+        epochs: epochs_out,
+        train_time_s: sw.total_secs(),
+        predict_time_s: pred_s,
+        predict_nfe: m.nfe,
+        final_train_metric: m.metric,
+        final_test_metric: m.metric,
+        final_train_loss: m.loss,
+        final_test_loss: m.loss,
+        escalations: router.escalations,
+        descents: router.descents,
+    })
+}
+
+/// Predicted ensemble at the save grid (Figure 5 series: [T, N_TRAJ, 2]).
+pub fn predict_ensemble(engine: &Engine, params: &[f32], seed: u32) -> Result<Vec<f32>> {
+    let (u0, data_mu, data_var, ts) = ground_truth(0);
+    let out = engine.run(
+        &format!("{MODEL}_predict"),
+        &[
+            Input::F32(params),
+            Input::F32(&u0),
+            Input::F32(&data_mu),
+            Input::F32(&data_var),
+            Input::F32(&ts),
+            Input::SeedU32(seed),
+        ],
+    )?;
+    Ok(out.into_iter().next().unwrap())
+}

@@ -1,0 +1,130 @@
+//! The regularization methods compared in the paper's Tables 1-4.
+
+use anyhow::{bail, Result};
+
+/// A training method = a combination of the paper's regularizers/baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Method {
+    /// ERNODE/ERNSDE: error-estimate regularization (paper Eq. 9).
+    pub er: bool,
+    /// SRNODE/SRNSDE: stiffness regularization (paper Eq. 11).
+    pub sr: bool,
+    /// STEER baseline: stochastic end time (Behl et al. 2020).
+    pub steer: bool,
+    /// TayNODE baseline: K-th derivative regularization (Kelly et al. 2020).
+    pub taynode: bool,
+}
+
+impl Method {
+    pub const VANILLA: Method = Method {
+        er: false,
+        sr: false,
+        steer: false,
+        taynode: false,
+    };
+
+    pub fn parse(s: &str) -> Result<Method> {
+        let mut m = Method::VANILLA;
+        if s == "vanilla" {
+            return Ok(m);
+        }
+        for part in s.split('+') {
+            match part {
+                "ernode" | "ernsde" | "er" => m.er = true,
+                "srnode" | "srnsde" | "sr" => m.sr = true,
+                "steer" => m.steer = true,
+                "taynode" | "tay" => m.taynode = true,
+                other => bail!(
+                    "unknown method component {other:?} \
+                     (vanilla|ernode|srnode|steer|taynode, '+'-combined)"
+                ),
+            }
+        }
+        if m.taynode && (m.er || m.sr) {
+            bail!("taynode is a standalone baseline in the paper");
+        }
+        Ok(m)
+    }
+
+    /// Paper-style display name ("SRNODE + ERNODE", "Vanilla", ...).
+    pub fn label(&self, sde: bool) -> String {
+        let suffix = if sde { "NSDE" } else { "NODE" };
+        let mut parts = Vec::new();
+        if self.steer {
+            parts.push("STEER".to_string());
+        }
+        if self.taynode {
+            parts.push("TayNODE".to_string());
+        }
+        if self.sr {
+            parts.push(format!("SR{suffix}"));
+        }
+        if self.er {
+            parts.push(format!("ER{suffix}"));
+        }
+        if parts.is_empty() {
+            format!("Vanilla {suffix}")
+        } else {
+            parts.join(" + ")
+        }
+    }
+
+    /// The method grid of Table 1/2 (ODE experiments).
+    pub fn table_grid_ode() -> Vec<Method> {
+        [
+            "vanilla",
+            "steer",
+            "taynode",
+            "srnode",
+            "ernode",
+            "steer+srnode",
+            "steer+ernode",
+            "srnode+ernode",
+        ]
+        .iter()
+        .map(|s| Method::parse(s).unwrap())
+        .collect()
+    }
+
+    /// The method grid of Table 3/4 (SDE experiments).
+    pub fn table_grid_sde() -> Vec<Method> {
+        ["vanilla", "srnsde", "ernsde"]
+            .iter()
+            .map(|s| Method::parse(s).unwrap())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_combos() {
+        let m = Method::parse("steer+ernode").unwrap();
+        assert!(m.steer && m.er && !m.sr && !m.taynode);
+        assert_eq!(m.label(false), "STEER + ERNODE");
+        assert_eq!(Method::parse("vanilla").unwrap(), Method::VANILLA);
+    }
+
+    #[test]
+    fn parse_rejects_bad() {
+        assert!(Method::parse("magic").is_err());
+        assert!(Method::parse("taynode+ernode").is_err());
+    }
+
+    #[test]
+    fn sde_labels() {
+        assert_eq!(Method::parse("er").unwrap().label(true), "ERNSDE");
+        assert_eq!(
+            Method::parse("sr+er").unwrap().label(true),
+            "SRNSDE + ERNSDE"
+        );
+    }
+
+    #[test]
+    fn grids_match_paper() {
+        assert_eq!(Method::table_grid_ode().len(), 8);
+        assert_eq!(Method::table_grid_sde().len(), 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Run-level metric aggregation: per-epoch records and run summaries.
+
+use crate::runtime::state::Metrics;
+use crate::util::json::{obj, Json};
+
+/// Aggregated metrics for one training epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub loss: f64,
+    pub metric: f64,
+    pub nfe: f64,
+    pub naccept: f64,
+    pub nreject: f64,
+    pub r_e: f64,
+    pub r_s: f64,
+    pub wall_s: f64,
+    pub rung: usize,
+}
+
+impl EpochRecord {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("epoch", self.epoch.into()),
+            ("loss", self.loss.into()),
+            ("metric", self.metric.into()),
+            ("nfe", self.nfe.into()),
+            ("naccept", self.naccept.into()),
+            ("nreject", self.nreject.into()),
+            ("r_e", self.r_e.into()),
+            ("r_s", self.r_s.into()),
+            ("wall_s", self.wall_s.into()),
+            ("rung", self.rung.into()),
+        ])
+    }
+}
+
+/// Accumulates step metrics into an epoch average.
+#[derive(Debug, Default)]
+pub struct EpochAccumulator {
+    n: usize,
+    sums: EpochRecord,
+}
+
+impl EpochAccumulator {
+    pub fn push(&mut self, m: &Metrics) {
+        self.n += 1;
+        self.sums.loss += m.loss;
+        self.sums.metric += m.metric;
+        self.sums.nfe += m.nfe;
+        self.sums.naccept += m.naccept;
+        self.sums.nreject += m.nreject;
+        self.sums.r_e += m.r_e;
+        self.sums.r_s += m.r_s;
+    }
+
+    pub fn finish(self, epoch: usize, wall_s: f64, rung: usize) -> EpochRecord {
+        let n = self.n.max(1) as f64;
+        EpochRecord {
+            epoch,
+            loss: self.sums.loss / n,
+            metric: self.sums.metric / n,
+            nfe: self.sums.nfe / n,
+            naccept: self.sums.naccept / n,
+            nreject: self.sums.nreject / n,
+            r_e: self.sums.r_e / n,
+            r_s: self.sums.r_s / n,
+            wall_s,
+            rung,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+}
+
+/// Full result of one (method, seed) training run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub experiment: String,
+    pub method: String,
+    pub seed: u64,
+    pub epochs: Vec<EpochRecord>,
+    /// Total training wall-clock (seconds).
+    pub train_time_s: f64,
+    /// One-batch prediction wall-clock (seconds).
+    pub predict_time_s: f64,
+    /// NFE of the prediction solve.
+    pub predict_nfe: f64,
+    /// Final train-set metric (accuracy or MSE).
+    pub final_train_metric: f64,
+    /// Held-out metric.
+    pub final_test_metric: f64,
+    pub final_train_loss: f64,
+    pub final_test_loss: f64,
+    /// Router telemetry.
+    pub escalations: u64,
+    pub descents: u64,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("experiment", self.experiment.as_str().into()),
+            ("method", self.method.as_str().into()),
+            ("seed", (self.seed as usize).into()),
+            (
+                "epochs",
+                Json::Arr(self.epochs.iter().map(|e| e.to_json()).collect()),
+            ),
+            ("train_time_s", self.train_time_s.into()),
+            ("predict_time_s", self.predict_time_s.into()),
+            ("predict_nfe", self.predict_nfe.into()),
+            ("final_train_metric", self.final_train_metric.into()),
+            ("final_test_metric", self.final_test_metric.into()),
+            ("final_train_loss", self.final_train_loss.into()),
+            ("final_test_loss", self.final_test_loss.into()),
+            ("escalations", (self.escalations as usize).into()),
+            ("descents", (self.descents as usize).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_averages() {
+        let mut acc = EpochAccumulator::default();
+        for i in 0..4 {
+            acc.push(&Metrics {
+                loss: i as f64,
+                nfe: 10.0 * i as f64,
+                ..Default::default()
+            });
+        }
+        let rec = acc.finish(3, 1.5, 1);
+        assert_eq!(rec.loss, 1.5);
+        assert_eq!(rec.nfe, 15.0);
+        assert_eq!(rec.epoch, 3);
+        assert_eq!(rec.rung, 1);
+    }
+
+    #[test]
+    fn empty_accumulator_is_safe() {
+        let rec = EpochAccumulator::default().finish(0, 0.0, 0);
+        assert_eq!(rec.loss, 0.0);
+    }
+
+    #[test]
+    fn run_result_serializes() {
+        let r = RunResult {
+            experiment: "t1".into(),
+            method: "ERNODE".into(),
+            seed: 3,
+            epochs: vec![EpochRecord::default()],
+            train_time_s: 10.0,
+            predict_time_s: 0.1,
+            predict_nfe: 177.0,
+            final_train_metric: 0.99,
+            final_test_metric: 0.97,
+            final_train_loss: 0.05,
+            final_test_loss: 0.08,
+            escalations: 1,
+            descents: 2,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("method").unwrap().as_str().unwrap(), "ERNODE");
+        assert_eq!(j.get("epochs").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! Layer-3 coordinator: the training-systems half of the paper.
+//!
+//! The paper's experiments are grids of (method x seed) training runs with
+//! per-epoch coefficient schedules and careful NFE/wall-clock accounting.
+//! This module owns all of that policy:
+//!
+//!  * `method`   — the regularization methods compared in Tables 1-4
+//!                 (Vanilla / STEER / TayNODE / SRNODE / ERNODE / combos)
+//!                 mapped to artifact coefficients,
+//!  * `schedule` — exponential coefficient annealing, lr inverse decay and
+//!                 KL annealing (paper §4.1.1/§4.1.2),
+//!  * `steer`    — the STEER baseline's stochastic end-time sampling,
+//!  * `budget`   — **budget-ladder routing**: train artifacts are compiled
+//!                 at several masked-scan step budgets; the router watches
+//!                 each step's attempt usage and success flag, escalating on
+//!                 failure and descending when regularization has pushed the
+//!                 NFE down.  This is what converts the paper's "fewer NFE"
+//!                 into real training wall-clock reduction under AOT,
+//!  * `metrics`  — per-epoch aggregation and run summaries,
+//!  * `recorder` — JSON/CSV run records under runs/,
+//!  * `experiments` — one driver per paper experiment (Tables 1-4, Figs 2-6).
+
+pub mod budget;
+pub mod experiments;
+pub mod method;
+pub mod metrics;
+pub mod recorder;
+pub mod schedule;
+pub mod steer;
+
+pub use budget::BudgetRouter;
+pub use method::Method;
+pub use metrics::{EpochRecord, RunResult};

@@ -1,0 +1,134 @@
+//! Run recording: JSON run records + CSV epoch series under `runs/`.
+//!
+//! The figure benches (Figs 1, 3, 4, 6) re-read these records to print
+//! their series, so every training run leaves a machine-readable trace.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::metrics::RunResult;
+use crate::util::json::Json;
+
+pub struct Recorder {
+    dir: PathBuf,
+}
+
+impl Recorder {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Recorder> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        Ok(Recorder { dir })
+    }
+
+    fn slug(s: &str) -> String {
+        s.chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect()
+    }
+
+    /// Write `<exp>__<method>__s<seed>.json` and the matching `.csv`.
+    pub fn save(&self, r: &RunResult) -> Result<PathBuf> {
+        let base = format!(
+            "{}__{}__s{}",
+            Self::slug(&r.experiment),
+            Self::slug(&r.method),
+            r.seed
+        );
+        let json_path = self.dir.join(format!("{base}.json"));
+        fs::write(&json_path, r.to_json().to_string_pretty())?;
+        let mut csv = String::from(
+            "epoch,loss,metric,nfe,naccept,nreject,r_e,r_s,wall_s,rung\n",
+        );
+        for e in &r.epochs {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{}\n",
+                e.epoch,
+                e.loss,
+                e.metric,
+                e.nfe,
+                e.naccept,
+                e.nreject,
+                e.r_e,
+                e.r_s,
+                e.wall_s,
+                e.rung
+            ));
+        }
+        fs::write(self.dir.join(format!("{base}.csv")), csv)?;
+        Ok(json_path)
+    }
+
+    /// Load every run record for an experiment.
+    pub fn load_experiment(&self, experiment: &str) -> Result<Vec<Json>> {
+        let prefix = format!("{}__", Self::slug(experiment));
+        let mut out = Vec::new();
+        if !self.dir.exists() {
+            return Ok(out);
+        }
+        for entry in fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let name = path.file_name().unwrap().to_string_lossy().to_string();
+            if name.starts_with(&prefix) && name.ends_with(".json") {
+                out.push(Json::parse(&fs::read_to_string(&path)?)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::EpochRecord;
+
+    fn sample_run(method: &str, seed: u64) -> RunResult {
+        RunResult {
+            experiment: "Table 1".into(),
+            method: method.into(),
+            seed,
+            epochs: vec![EpochRecord {
+                epoch: 0,
+                loss: 1.0,
+                nfe: 100.0,
+                ..Default::default()
+            }],
+            train_time_s: 5.0,
+            predict_time_s: 0.05,
+            predict_nfe: 200.0,
+            final_train_metric: 0.9,
+            final_test_metric: 0.8,
+            final_train_loss: 0.3,
+            final_test_loss: 0.4,
+            escalations: 0,
+            descents: 0,
+        }
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("regnde-rec-{}", std::process::id()));
+        let rec = Recorder::new(&dir).unwrap();
+        rec.save(&sample_run("ERNODE", 1)).unwrap();
+        rec.save(&sample_run("Vanilla NODE", 2)).unwrap();
+        let runs = rec.load_experiment("Table 1").unwrap();
+        assert_eq!(runs.len(), 2);
+        let methods: Vec<&str> = runs
+            .iter()
+            .map(|r| r.get("method").unwrap().as_str().unwrap())
+            .collect();
+        assert!(methods.contains(&"ERNODE"));
+        // csv written too
+        assert!(dir.join("table_1__ernode__s1.csv").exists());
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_missing_dir_is_empty() {
+        let rec = Recorder {
+            dir: PathBuf::from("/nonexistent/regnde"),
+        };
+        assert!(rec.load_experiment("x").unwrap().is_empty());
+    }
+}

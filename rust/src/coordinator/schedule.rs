@@ -1,0 +1,111 @@
+//! Coefficient schedules (paper §4.1.1, §4.1.2).
+//!
+//! * Exponential annealing of the error-regularization coefficient
+//!   (MNIST: 100 -> 10 over 75 epochs; Physionet: 1000 -> 100 over 300),
+//! * Flux.jl-style inverse learning-rate decay `lr0 / (1 + gamma * iter)`,
+//! * KL annealing `1 - rho^epoch` for the Latent ODE ELBO.
+
+/// Exponential interpolation from `start` to `end` over `total` epochs.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpAnneal {
+    pub start: f64,
+    pub end: f64,
+    pub total_epochs: usize,
+}
+
+impl ExpAnneal {
+    pub fn at(&self, epoch: usize) -> f64 {
+        if self.total_epochs <= 1 {
+            return self.end;
+        }
+        let frac = (epoch as f64 / (self.total_epochs - 1) as f64).clamp(0.0, 1.0);
+        self.start * (self.end / self.start).powf(frac)
+    }
+}
+
+/// Flux.jl `InvDecay`: lr_t = lr0 / (1 + gamma * t).
+#[derive(Clone, Copy, Debug)]
+pub struct InvDecay {
+    pub lr0: f64,
+    pub gamma: f64,
+}
+
+impl InvDecay {
+    pub fn at(&self, iter: u64) -> f64 {
+        self.lr0 / (1.0 + self.gamma * iter as f64)
+    }
+}
+
+/// KL annealing: coefficient 1 - rho^(epoch+1) ramping toward 1.
+#[derive(Clone, Copy, Debug)]
+pub struct KlAnneal {
+    pub rho: f64,
+}
+
+impl KlAnneal {
+    pub fn at(&self, epoch: usize) -> f64 {
+        1.0 - self.rho.powi(epoch as i32 + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_anneal_endpoints() {
+        let a = ExpAnneal {
+            start: 100.0,
+            end: 10.0,
+            total_epochs: 75,
+        };
+        assert!((a.at(0) - 100.0).abs() < 1e-9);
+        assert!((a.at(74) - 10.0).abs() < 1e-9);
+        // geometric midpoint at the middle epoch
+        let mid = a.at(37);
+        assert!(mid < 100.0 && mid > 10.0);
+        assert!((a.at(37) / a.at(38) - a.at(10) / a.at(11)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exp_anneal_monotone_decreasing() {
+        let a = ExpAnneal {
+            start: 1000.0,
+            end: 100.0,
+            total_epochs: 300,
+        };
+        for e in 1..300 {
+            assert!(a.at(e) < a.at(e - 1));
+        }
+    }
+
+    #[test]
+    fn exp_anneal_clamps_past_end() {
+        let a = ExpAnneal {
+            start: 100.0,
+            end: 10.0,
+            total_epochs: 10,
+        };
+        assert!((a.at(50) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inv_decay() {
+        let d = InvDecay {
+            lr0: 0.1,
+            gamma: 1e-5,
+        };
+        assert_eq!(d.at(0), 0.1);
+        assert!((d.at(100_000) - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_anneal_ramps_to_one() {
+        let k = KlAnneal { rho: 0.99 };
+        assert!(k.at(0) < 0.02);
+        assert!(k.at(500) > 0.99);
+        for e in 1..100 {
+            assert!(k.at(e) > k.at(e - 1));
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! STEER baseline (Behl et al. 2020) — temporal regularization by
+//! stochastically sampling the integration end time during training.
+//!
+//! The train artifacts expose the end time / save grid as runtime inputs,
+//! so STEER lives entirely at L3:
+//!  * supervised models: `t1 ~ U(T - b, T + b)` per iteration (paper
+//!    §4.1.1 uses T = 1, b = 0.5),
+//!  * time-series models: each interior save point `t_i` is perturbed
+//!    uniformly within half the neighbouring gaps (paper §4.1.2).
+
+use crate::util::rng::Rng;
+
+/// End-time sampler for supervised (single-span) models.
+#[derive(Clone, Copy, Debug)]
+pub struct EndTimeSampler {
+    pub t_nominal: f64,
+    pub b: f64,
+}
+
+impl EndTimeSampler {
+    pub fn sample(&self, rng: &mut Rng) -> f32 {
+        rng.range(self.t_nominal - self.b, self.t_nominal + self.b) as f32
+    }
+}
+
+/// Perturb interior grid points within half the adjacent gaps, preserving
+/// strict monotonicity (time-series STEER, paper §4.1.2).
+pub fn perturb_grid(ts: &[f32], rng: &mut Rng) -> Vec<f32> {
+    let n = ts.len();
+    let mut out = ts.to_vec();
+    for i in 1..n - 1 {
+        let lo = 0.5 * (ts[i - 1] + ts[i]);
+        let hi = 0.5 * (ts[i] + ts[i + 1]);
+        out[i] = rng.range(lo as f64, hi as f64) as f32;
+    }
+    // Monotonicity is preserved by construction (disjoint half-gap windows),
+    // but guard against f32 rounding making neighbours equal.
+    for i in 1..n {
+        if out[i] <= out[i - 1] {
+            out[i] = out[i - 1] + f32::EPSILON;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, ensure};
+
+    #[test]
+    fn end_time_in_window() {
+        let s = EndTimeSampler {
+            t_nominal: 1.0,
+            b: 0.5,
+        };
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let t = s.sample(&mut rng) as f64;
+            assert!((0.5..1.5).contains(&t));
+        }
+    }
+
+    #[test]
+    fn end_time_covers_window() {
+        let s = EndTimeSampler {
+            t_nominal: 1.0,
+            b: 0.5,
+        };
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..2000).map(|_| s.sample(&mut rng) as f64).collect();
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo < 0.6 && hi > 1.4, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn grid_perturbation_stays_monotone() {
+        check("steer grid monotone", 200, |g| {
+            let n = g.usize_in(3, 20);
+            let mut ts: Vec<f32> = (0..n).map(|i| i as f32 / (n - 1) as f32).collect();
+            // irregular grid
+            for i in 1..n - 1 {
+                ts[i] += g.f32_in(-0.2, 0.2) / n as f32;
+            }
+            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut rng = Rng::new(g.rng.next_u64());
+            let p = perturb_grid(&ts, &mut rng);
+            ensure(
+                p.windows(2).all(|w| w[0] < w[1]),
+                format!("not monotone: {p:?}"),
+            )?;
+            ensure(p[0] == ts[0] && p[n - 1] == ts[n - 1], "endpoints moved")
+        });
+    }
+}

@@ -1,0 +1,110 @@
+//! Epoch-based mini-batch iteration with deterministic shuffling.
+//!
+//! Yields index slices; dataset-specific gather functions assemble the
+//! actual f32 buffers (see the coordinator's experiment drivers).  Partial
+//! trailing batches are dropped (lowered artifacts have a static batch
+//! dimension).
+
+use crate::util::rng::Rng;
+
+/// Deterministic shuffling batch iterator over `n` samples.
+pub struct Batcher {
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && batch <= n, "batch {batch} vs n {n}");
+        let mut b = Self {
+            order: (0..n).collect(),
+            batch,
+            cursor: 0,
+            rng: Rng::new(seed ^ 0xBA7C4),
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    /// Next batch of indices; reshuffles at epoch end.  Returns the epoch
+    /// number the batch belongs to alongside the indices.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.order.len() {
+            self.reshuffle();
+        }
+        let s = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        s
+    }
+
+    /// Gather rows of a row-major [n, dim] buffer into a batch buffer.
+    pub fn gather(src: &[f32], dim: usize, idx: &[usize], dst: &mut Vec<f32>) {
+        dst.clear();
+        dst.reserve(idx.len() * dim);
+        for &i in idx {
+            dst.extend_from_slice(&src[i * dim..(i + 1) * dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_epoch_without_repeat() {
+        let mut b = Batcher::new(100, 10, 1);
+        let mut seen = vec![false; 100];
+        for _ in 0..b.batches_per_epoch() {
+            for &i in b.next_batch().to_vec().iter() {
+                assert!(!seen[i], "index {i} repeated within epoch");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let mut b = Batcher::new(64, 8, 2);
+        let first: Vec<usize> = (0..8).flat_map(|_| b.next_batch().to_vec()).collect();
+        let second: Vec<usize> = (0..8).flat_map(|_| b.next_batch().to_vec()).collect();
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn partial_batches_dropped() {
+        let mut b = Batcher::new(25, 10, 3);
+        assert_eq!(b.batches_per_epoch(), 2);
+        // Three calls must still produce full batches (epoch wraps).
+        for _ in 0..3 {
+            assert_eq!(b.next_batch().len(), 10);
+        }
+    }
+
+    #[test]
+    fn gather_assembles_rows() {
+        let src: Vec<f32> = (0..12).map(|x| x as f32).collect(); // 4 rows of 3
+        let mut dst = Vec::new();
+        Batcher::gather(&src, 3, &[2, 0], &mut dst);
+        assert_eq!(dst, vec![6.0, 7.0, 8.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch")]
+    fn batch_larger_than_n_panics() {
+        let _ = Batcher::new(5, 10, 0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Procedural MNIST stand-in: 10 visually distinct 28x28 class prototypes
+//! with per-sample elastic deformation, stroke jitter and pixel noise.
+//!
+//! Design goals (matching what the paper's experiment actually needs):
+//!  * 784-dim inputs in [0, 1] with MNIST-like sparsity,
+//!  * 10 classes, easy enough that the Eq. 12-14 architecture reaches high
+//!    accuracy, hard enough that accuracy is not trivially 100% at init,
+//!  * fully deterministic from a seed.
+//!
+//! Prototypes are simple stroke drawings of the digits on a 28x28 canvas;
+//! each sample shifts, scales and perturbs its class prototype.
+
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// An in-memory labelled image dataset (flattened f32 pixels).
+#[derive(Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>, // n * DIM
+    pub labels: Vec<u8>,  // n
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * DIM..(i + 1) * DIM]
+    }
+}
+
+/// Stroke segments (x0, y0, x1, y1) in [0,1]^2 per digit class.
+fn strokes(class: u8) -> &'static [(f32, f32, f32, f32)] {
+    match class {
+        0 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+            (0.3, 0.8, 0.3, 0.2),
+        ],
+        1 => &[(0.5, 0.15, 0.5, 0.85), (0.35, 0.3, 0.5, 0.15)],
+        2 => &[
+            (0.3, 0.25, 0.7, 0.25),
+            (0.7, 0.25, 0.7, 0.5),
+            (0.7, 0.5, 0.3, 0.8),
+            (0.3, 0.8, 0.7, 0.8),
+        ],
+        3 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.5),
+            (0.45, 0.5, 0.7, 0.5),
+            (0.7, 0.5, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+        ],
+        4 => &[
+            (0.35, 0.2, 0.35, 0.55),
+            (0.35, 0.55, 0.7, 0.55),
+            (0.65, 0.2, 0.65, 0.85),
+        ],
+        5 => &[
+            (0.7, 0.2, 0.3, 0.2),
+            (0.3, 0.2, 0.3, 0.5),
+            (0.3, 0.5, 0.7, 0.5),
+            (0.7, 0.5, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+        ],
+        6 => &[
+            (0.65, 0.2, 0.35, 0.4),
+            (0.35, 0.4, 0.35, 0.8),
+            (0.35, 0.8, 0.7, 0.8),
+            (0.7, 0.8, 0.7, 0.55),
+            (0.7, 0.55, 0.35, 0.55),
+        ],
+        7 => &[(0.3, 0.2, 0.7, 0.2), (0.7, 0.2, 0.45, 0.85)],
+        8 => &[
+            (0.35, 0.2, 0.65, 0.2),
+            (0.65, 0.2, 0.65, 0.5),
+            (0.65, 0.5, 0.35, 0.5),
+            (0.35, 0.5, 0.35, 0.2),
+            (0.35, 0.5, 0.35, 0.8),
+            (0.35, 0.8, 0.65, 0.8),
+            (0.65, 0.8, 0.65, 0.5),
+        ],
+        9 => &[
+            (0.65, 0.45, 0.35, 0.45),
+            (0.35, 0.45, 0.35, 0.2),
+            (0.35, 0.2, 0.65, 0.2),
+            (0.65, 0.2, 0.65, 0.8),
+        ],
+        _ => unreachable!(),
+    }
+}
+
+/// Draw a blurred stroke segment onto the canvas.
+fn draw_stroke(img: &mut [f32], seg: (f32, f32, f32, f32), width: f32, intensity: f32) {
+    let (x0, y0, x1, y1) = seg;
+    let steps = 40;
+    for k in 0..=steps {
+        let t = k as f32 / steps as f32;
+        let cx = (x0 + t * (x1 - x0)) * SIDE as f32;
+        let cy = (y0 + t * (y1 - y0)) * SIDE as f32;
+        let r = (width * SIDE as f32).ceil() as i32;
+        let (cxi, cyi) = (cx as i32, cy as i32);
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let px = cxi + dx;
+                let py = cyi + dy;
+                if px < 0 || py < 0 || px >= SIDE as i32 || py >= SIDE as i32 {
+                    continue;
+                }
+                let d2 = ((px as f32 - cx).powi(2) + (py as f32 - cy).powi(2))
+                    / (width * SIDE as f32).powi(2);
+                let v = intensity * (-2.0 * d2).exp();
+                let idx = py as usize * SIDE + px as usize;
+                img[idx] = (img[idx] + v).min(1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` samples (round-robin over classes) from `seed`.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x4D4E_4953_5421); // "MNIST!"
+    let mut images = vec![0.0f32; n * DIM];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = (i % CLASSES) as u8;
+        labels[i] = class;
+        let img = &mut images[i * DIM..(i + 1) * DIM];
+        // Per-sample geometric jitter.
+        let ox = rng.range(-0.06, 0.06) as f32;
+        let oy = rng.range(-0.06, 0.06) as f32;
+        let scale = rng.range(0.85, 1.15) as f32;
+        let width = rng.range(0.035, 0.06) as f32;
+        for &(x0, y0, x1, y1) in strokes(class) {
+            let tx = |x: f32| 0.5 + (x - 0.5) * scale + ox;
+            let ty = |y: f32| 0.5 + (y - 0.5) * scale + oy;
+            // stroke endpoint jitter (elastic-ish deformation)
+            let j = 0.02;
+            let seg = (
+                tx(x0) + rng.range(-j, j) as f32,
+                ty(y0) + rng.range(-j, j) as f32,
+                tx(x1) + rng.range(-j, j) as f32,
+                ty(y1) + rng.range(-j, j) as f32,
+            );
+            draw_stroke(img, seg, width, 0.9);
+        }
+        // Pixel noise.
+        for p in img.iter_mut() {
+            let noise = rng.normal_f32() * 0.02;
+            *p = (*p + noise).clamp(0.0, 1.0);
+        }
+    }
+    // Shuffle sample order (labels stay attached).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut s_images = vec![0.0f32; n * DIM];
+    let mut s_labels = vec![0u8; n];
+    for (dst, &src) in order.iter().enumerate() {
+        s_images[dst * DIM..(dst + 1) * DIM]
+            .copy_from_slice(&images[src * DIM..(src + 1) * DIM]);
+        s_labels[dst] = labels[src];
+    }
+    Dataset {
+        images: s_images,
+        labels: s_labels,
+        n,
+    }
+}
+
+/// One-hot encode labels into a f32 buffer of shape [n, CLASSES].
+pub fn one_hot(labels: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; labels.len() * CLASSES];
+    for (i, &l) in labels.iter().enumerate() {
+        out[i * CLASSES + l as usize] = 1.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate(50, 7);
+        let b = generate(50, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let a = generate(50, 1);
+        let b = generate(50, 2);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn pixel_range_and_sparsity() {
+        let d = generate(100, 3);
+        assert!(d.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // MNIST-like: most pixels near zero, some ink.
+        let ink = d.images.iter().filter(|&&p| p > 0.5).count() as f64
+            / d.images.len() as f64;
+        assert!(ink > 0.02 && ink < 0.4, "ink fraction {ink}");
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = generate(200, 5);
+        let mut counts = [0usize; CLASSES];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Nearest-prototype classification on clean means should beat 90%:
+        // the dataset must be learnable by construction.
+        let train = generate(400, 11);
+        let test = generate(100, 12);
+        let mut means = vec![vec![0.0f32; DIM]; CLASSES];
+        let mut counts = [0usize; CLASSES];
+        for i in 0..train.n {
+            let c = train.labels[i] as usize;
+            counts[c] += 1;
+            for (m, &p) in means[c].iter_mut().zip(train.image(i)) {
+                *m += p;
+            }
+        }
+        for c in 0..CLASSES {
+            for m in means[c].iter_mut() {
+                *m /= counts[c] as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.n {
+            let img = test.image(i);
+            let best = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a]
+                        .iter()
+                        .zip(img)
+                        .map(|(m, p)| (m - p) * (m - p))
+                        .sum();
+                    let db: f32 = means[b]
+                        .iter()
+                        .zip(img)
+                        .map(|(m, p)| (m - p) * (m - p))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 85, "nearest-prototype acc {correct}/100");
+    }
+
+    #[test]
+    fn one_hot_shape() {
+        let oh = one_hot(&[0, 3, 9]);
+        assert_eq!(oh.len(), 30);
+        assert_eq!(oh[0], 1.0);
+        assert_eq!(oh[13], 1.0);
+        assert_eq!(oh[29], 1.0);
+        assert_eq!(oh.iter().sum::<f32>(), 3.0);
+    }
+}

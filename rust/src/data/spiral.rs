@@ -1,0 +1,115 @@
+//! Ground-truth spiral data from the native Rust solvers.
+//!
+//! * `spiral_ode_trajectory` — the Figure-2 fixture: one trajectory of
+//!   du/dt = A u^3 at the save grid, solved at tight tolerance.
+//! * `spiral_sde_moments` — the Table-3 fixture: per-save-point mean and
+//!   variance over an ensemble of spiral DSDE trajectories (paper Eq. 15;
+//!   the paper uses 10k trajectories, configurable here).
+
+use crate::solvers::ode::{solve_saveat, OdeOptions};
+use crate::solvers::problems;
+use crate::solvers::sde::{sde_solve_saveat, SdeOptions};
+use crate::util::rng::Rng;
+
+/// One spiral ODE trajectory at the given save times (row-major [T, 2]).
+pub fn spiral_ode_trajectory(u0: [f64; 2], ts: &[f64]) -> Vec<f32> {
+    let opts = OdeOptions {
+        rtol: 1e-9,
+        atol: 1e-9,
+        ..Default::default()
+    };
+    let (zs, out) = solve_saveat(problems::spiral_ode, &u0, ts, &opts);
+    assert!(out.success, "ground-truth spiral solve failed");
+    zs.iter().flat_map(|z| z.iter().map(|&v| v as f32)).collect()
+}
+
+/// Moments of the spiral DSDE ensemble: (mu, var), each row-major [T, 2].
+pub fn spiral_sde_moments(
+    u0: [f64; 2],
+    ts: &[f64],
+    n_traj: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    let t = ts.len();
+    let mut sum = vec![0.0f64; t * 2];
+    let mut sumsq = vec![0.0f64; t * 2];
+    let mut rng = Rng::new(seed ^ 0x5350_4952_414C); // "SPIRAL"
+    let opts = SdeOptions {
+        rtol: 1e-3,
+        atol: 1e-3,
+        ..Default::default()
+    };
+    for _ in 0..n_traj {
+        let (zs, _, ok) = sde_solve_saveat(
+            problems::spiral_sde_drift,
+            problems::spiral_sde_diffusion,
+            &u0,
+            ts,
+            &mut rng,
+            &opts,
+        );
+        assert!(ok);
+        for (k, z) in zs.iter().enumerate() {
+            for d in 0..2 {
+                sum[k * 2 + d] += z[d];
+                sumsq[k * 2 + d] += z[d] * z[d];
+            }
+        }
+    }
+    let inv = 1.0 / n_traj as f64;
+    let mu: Vec<f32> = sum.iter().map(|s| (s * inv) as f32).collect();
+    let var: Vec<f32> = sumsq
+        .iter()
+        .zip(&sum)
+        .map(|(sq, s)| ((sq * inv) - (s * inv) * (s * inv)).max(0.0) as f32)
+        .collect();
+    (mu, var)
+}
+
+/// The paper's save grid: `t_points` uniform times over [0, span].
+pub fn uniform_grid(t_points: usize, span: f64) -> Vec<f64> {
+    (0..t_points)
+        .map(|i| span * i as f64 / (t_points - 1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trajectory_starts_at_u0() {
+        let ts = uniform_grid(30, 1.5);
+        let traj = spiral_ode_trajectory([2.0, 0.0], &ts);
+        assert_eq!(traj.len(), 60);
+        assert!((traj[0] - 2.0).abs() < 1e-6);
+        assert!(traj[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn trajectory_spirals() {
+        let ts = uniform_grid(30, 1.5);
+        let traj = spiral_ode_trajectory([2.0, 0.0], &ts);
+        // u2 must move away from 0 (rotation) and radius must shrink.
+        let r_first = (traj[0].powi(2) + traj[1].powi(2)).sqrt();
+        let last = &traj[58..];
+        let r_last = (last[0].powi(2) + last[1].powi(2)).sqrt();
+        assert!(r_last < r_first);
+        assert!(traj[3].abs() > 1e-3, "no rotation seen");
+    }
+
+    #[test]
+    fn moments_deterministic_and_sane() {
+        let ts = uniform_grid(10, 1.0);
+        let (mu1, var1) = spiral_sde_moments([1.0, 1.0], &ts, 200, 1);
+        let (mu2, var2) = spiral_sde_moments([1.0, 1.0], &ts, 200, 1);
+        assert_eq!(mu1, mu2);
+        assert_eq!(var1, var2);
+        // At t=0 mean is exactly u0 with zero variance.
+        assert!((mu1[0] - 1.0).abs() < 1e-6);
+        assert!(var1[0] < 1e-8);
+        // Variance grows from zero.
+        assert!(var1[18] > var1[0]);
+        assert!(mu1.iter().all(|m| m.is_finite()));
+    }
+}

@@ -1,0 +1,37 @@
+//! # regnde
+//!
+//! Production-shaped reproduction of **"Opening the Blackbox: Accelerating
+//! Neural Differential Equations by Regularizing Internal Solver
+//! Heuristics"** (Pal, Ma, Shah, Rackauckas — ICML 2021) as a three-layer
+//! Rust + JAX + Pallas stack (AOT via HLO text / PJRT).
+//!
+//! * Layer 1 (build time): Pallas kernels for the dynamics MLP and RK stage
+//!   combination (`python/compile/kernels/`).
+//! * Layer 2 (build time): differentiable adaptive ODE/SDE solvers that
+//!   white-box their local error and stiffness heuristics into R_E/R_S
+//!   regularizers, plus models/optimizers, lowered once to
+//!   `artifacts/*.hlo.txt` (`python/compile/`).
+//! * Layer 3 (this crate): the training coordinator — data pipeline,
+//!   method grid, coefficient schedules, STEER sampling, budget-ladder
+//!   routing, metrics/NFE accounting — running the artifacts via PJRT with
+//!   Python never on the hot path.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod solvers;
+pub mod util;
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Default run-record directory.
+pub fn default_runs_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("runs")
+}

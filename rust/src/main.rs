@@ -1,0 +1,180 @@
+//! `regnde` — CLI launcher for the regularized-NDE training framework.
+//!
+//! ```text
+//! regnde list                                  # artifacts + models
+//! regnde validate                              # run every artifact once
+//! regnde train --exp mnist-node --method ernode [--epochs N] [--iters N]
+//!              [--seeds 0,1,2] [--verbose]
+//! regnde predict --exp mnist-node --method vanilla
+//! regnde bench --table 1                       # alias of cargo bench target
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::recorder::Recorder;
+use regnde::coordinator::Method;
+use regnde::runtime::{Engine, Input};
+use regnde::util::cli::Args;
+
+const VALUED: &[&str] = &[
+    "exp", "method", "epochs", "iters", "seeds", "artifacts", "runs",
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: regnde <list|validate|train|predict> \
+     [--exp E] [--method M] [--epochs N] [--iters N] [--seeds 0,1] \
+     [--artifacts DIR] [--runs DIR] [--verbose]\n\
+     experiments: mnist-node latent-ode spiral-node spiral-nsde mnist-nsde\n\
+     methods: vanilla steer taynode srnode ernode (+-combined, e.g. srnode+ernode)"
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), VALUED)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(regnde::default_artifacts_dir);
+
+    match cmd {
+        "help" | "--help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        "list" => {
+            let engine = Engine::new(&artifacts)?;
+            println!("platform: {}", engine.platform());
+            println!("\nmodels:");
+            for (name, m) in &engine.manifest.models {
+                println!(
+                    "  {name:<14} params={:<8} opt={} ({})",
+                    m.params_size, m.opt_state_size, m.optimizer
+                );
+            }
+            println!("\nartifacts:");
+            for (name, a) in &engine.manifest.artifacts {
+                println!(
+                    "  {name:<28} kind={:<10} budget={:?}",
+                    a.kind, a.budget
+                );
+            }
+            Ok(())
+        }
+        "validate" => validate(&artifacts),
+        "train" => {
+            let engine = Engine::new(&artifacts)?;
+            let exp = args.get("exp").context("--exp required")?.to_string();
+            let method = Method::parse(args.get_or("method", "vanilla"))?;
+            let seeds: Vec<u64> = args
+                .get_or("seeds", "0")
+                .split(',')
+                .map(|s| s.parse::<u64>().context("bad seed"))
+                .collect::<Result<_>>()?;
+            let recorder = Recorder::new(
+                args.get("runs")
+                    .map(std::path::PathBuf::from)
+                    .unwrap_or_else(regnde::default_runs_dir),
+            )?;
+            for seed in seeds {
+                let opts = TrainOpts {
+                    epochs: args.get_usize("epochs", 3)?,
+                    iters_per_epoch: args.get_usize("iters", 10)?,
+                    seed,
+                    verbose: args.flag("verbose"),
+                };
+                let result = experiments::run_by_name(&engine, &exp, method, opts)?;
+                let path = recorder.save(&result)?;
+                println!(
+                    "[{}] seed {seed}: train {:.1}s predict {:.3}s nfe {:.1} \
+                     test-metric {:.4} -> {}",
+                    result.method,
+                    result.train_time_s,
+                    result.predict_time_s,
+                    result.predict_nfe,
+                    result.final_test_metric,
+                    path.display()
+                );
+            }
+            Ok(())
+        }
+        "predict" => {
+            let engine = Engine::new(&artifacts)?;
+            let exp = args.get("exp").context("--exp required")?.to_string();
+            let method = Method::parse(args.get_or("method", "vanilla"))?;
+            // quick one-epoch train then timed predictions
+            let opts = TrainOpts {
+                epochs: 1,
+                iters_per_epoch: args.get_usize("iters", 5)?,
+                seed: args.get_u64("seeds", 0)?,
+                verbose: args.flag("verbose"),
+            };
+            let result = experiments::run_by_name(&engine, &exp, method, opts)?;
+            println!(
+                "[{}] predict {:.4}s nfe {:.1} metric {:.4}",
+                result.method,
+                result.predict_time_s,
+                result.predict_nfe,
+                result.final_test_metric
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+/// Run every artifact once with synthetic inputs — a fast whole-manifest
+/// smoke test (also exercised by rust/tests/validate_artifacts.rs).
+fn validate(artifacts: &std::path::Path) -> Result<()> {
+    let engine = Engine::new(artifacts)?;
+    let names: Vec<String> = engine.manifest.artifacts.keys().cloned().collect();
+    for name in names {
+        let spec = engine.manifest.artifact(&name)?.clone();
+        let mut storage: Vec<Vec<f32>> = Vec::new();
+        for t in &spec.inputs {
+            if t.dtype == "f32" && !t.shape.is_empty() {
+                // time grids must be increasing; everything else small random
+                if t.name == "ts" {
+                    let n = t.numel();
+                    storage.push(
+                        (0..n).map(|i| i as f32 / (n - 1) as f32).collect(),
+                    );
+                } else {
+                    storage.push(vec![0.01; t.numel()]);
+                }
+            } else {
+                storage.push(Vec::new());
+            }
+        }
+        let inputs: Vec<Input> = spec
+            .inputs
+            .iter()
+            .zip(&storage)
+            .map(|(t, s)| match (t.dtype.as_str(), t.shape.is_empty()) {
+                ("u32", _) => Input::SeedU32(7),
+                ("f32", true) => Input::Scalar(0.5),
+                _ => Input::F32(s),
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = engine.run_spec(&spec, &inputs)?;
+        println!(
+            "  {name:<28} ok ({} outputs, {:.2}s)",
+            out.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("all artifacts validated");
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Executable engine: compile cache + typed execution.
+//!
+//! One `Engine` owns the PJRT CPU client and a cache of compiled
+//! executables keyed by artifact name.  Inputs are validated against the
+//! manifest specs before execution (shape mismatches fail fast with the
+//! tensor name, not an opaque XLA error).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// A typed runtime input.
+#[derive(Clone, Debug)]
+pub enum Input<'a> {
+    /// Dense f32 tensor (row-major); shape checked against the spec.
+    F32(&'a [f32]),
+    /// f32 scalar.
+    Scalar(f32),
+    /// u32 scalar (RNG seeds).
+    SeedU32(u32),
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create the PJRT CPU client and load the manifest from `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .context("artifact path not valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (amortizes JIT cost up front).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    fn literal(&self, spec: &TensorSpec, input: &Input) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        match (input, spec.dtype.as_str()) {
+            (Input::F32(data), "f32") => {
+                if data.len() != spec.numel() {
+                    bail!(
+                        "input {:?}: got {} elements, spec {:?} wants {}",
+                        spec.name,
+                        data.len(),
+                        spec.shape,
+                        spec.numel()
+                    );
+                }
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            }
+            (Input::Scalar(x), "f32") => {
+                if !spec.shape.is_empty() {
+                    bail!("input {:?} is not a scalar: {:?}", spec.name, spec.shape);
+                }
+                Ok(xla::Literal::scalar(*x))
+            }
+            (Input::SeedU32(x), "u32") => Ok(xla::Literal::scalar(*x)),
+            (i, d) => bail!("input {:?}: dtype mismatch {i:?} vs {d}", spec.name),
+        }
+    }
+
+    /// Execute an artifact; returns the output tuple as f32 vectors.
+    ///
+    /// Every artifact is lowered with `return_tuple=True`, so the single
+    /// result buffer is a tuple literal; elements are decoded per the
+    /// manifest output specs.
+    pub fn run(&self, name: &str, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.run_spec(&spec, inputs)
+    }
+
+    /// Like [`run`] but with a pre-fetched spec (hot path: no map lookups).
+    pub fn run_spec(&self, spec: &ArtifactSpec, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, expected {} ({:?})",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len(),
+                spec.inputs.iter().map(|t| &t.name).collect::<Vec<_>>()
+            );
+        }
+        let exe = self.load(&spec.name)?;
+        let lits: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(t, i)| self.literal(t, i))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()?
+            .to_tuple()
+            .with_context(|| format!("untupling outputs of {}", spec.name))?;
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs returned, manifest says {}",
+                spec.name,
+                tuple.len(),
+                spec.outputs.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .with_context(|| format!("decoding output {:?}", ospec.name))?;
+                if v.len() != ospec.numel() {
+                    bail!(
+                        "output {:?}: got {} elements, expected {}",
+                        ospec.name,
+                        v.len(),
+                        ospec.numel()
+                    );
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Initialize model parameters on-device from a seed.
+    pub fn init_params(&self, model: &str, seed: u32) -> Result<Vec<f32>> {
+        let mut out = self.run(&format!("{model}_init"), &[Input::SeedU32(seed)])?;
+        Ok(out.remove(0))
+    }
+}

@@ -1,0 +1,225 @@
+//! Typed view of `artifacts/manifest.json` (produced by compile/aot.py).
+//!
+//! The manifest is the single contract between the build-time Python layer
+//! and the Rust runtime: artifact file names, exact input/output tensor
+//! specs, per-model parameter/optimizer-state sizes and the paper's
+//! hyper-parameters.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "u32"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub kind: String, // init | train | tay_train | predict | solve
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Step budget for train artifacts (the budget-ladder rung).
+    pub budget: Option<usize>,
+}
+
+/// Per-model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params_size: usize,
+    pub opt_state_size: usize,
+    pub optimizer: String,
+    /// Paper hyper-parameters (lr, regularization coefficients, ...).
+    pub hyper: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub metrics_layout: Vec<String>,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_list(j: &Json, with_names: bool) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            Ok(TensorSpec {
+                name: if with_names {
+                    t.get("name")?.as_str()?.to_string()
+                } else {
+                    format!("out{i}")
+                },
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let metrics_layout = root
+            .get("metrics_layout")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            let mut hyper = BTreeMap::new();
+            if let Some(h) = m.opt("paper_hyperparams") {
+                for (k, v) in h.as_obj()? {
+                    if let Json::Num(x) = v {
+                        hyper.insert(k.clone(), *x);
+                    }
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    params_size: m.get("params_size")?.as_usize()?,
+                    opt_state_size: m.get("opt_state_size")?.as_usize()?,
+                    optimizer: m.get("optimizer")?.as_str()?.to_string(),
+                    hyper,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in root.get("artifacts")?.as_obj()? {
+            let budget = a
+                .opt("meta")
+                .and_then(|m| m.opt("budget"))
+                .and_then(|b| b.as_f64().ok())
+                .map(|b| b as usize);
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.get("file")?.as_str()?),
+                    model: a.get("model")?.as_str()?.to_string(),
+                    kind: a.get("kind")?.as_str()?.to_string(),
+                    inputs: tensor_list(a.get("inputs")?, true)?,
+                    outputs: tensor_list(a.get("outputs")?, false)?,
+                    budget,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            metrics_layout,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        match self.artifacts.get(name) {
+            Some(a) => Ok(a),
+            None => bail!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        match self.models.get(name) {
+            Some(m) => Ok(m),
+            None => bail!("model {name:?} not in manifest"),
+        }
+    }
+
+    /// Train-artifact budget ladder for a model, ascending by budget.
+    /// `tay` selects the TayNODE variants instead of the plain ones.
+    pub fn train_ladder(&self, model: &str, tay: bool) -> Vec<&ArtifactSpec> {
+        let kind = if tay { "tay_train" } else { "train" };
+        let mut rungs: Vec<&ArtifactSpec> = self
+            .artifacts
+            .values()
+            .filter(|a| a.model == model && a.kind == kind)
+            .collect();
+        rungs.sort_by_key(|a| a.budget.unwrap_or(usize::MAX));
+        rungs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert_eq!(m.metrics_layout.len(), 9);
+        assert!(m.models.contains_key("mnist_node"));
+        let a = m.artifact("mnist_node_train_b32").unwrap();
+        assert_eq!(a.kind, "train");
+        assert_eq!(a.budget, Some(32));
+        assert_eq!(a.inputs[0].name, "params");
+        assert_eq!(
+            a.inputs[0].numel(),
+            m.model("mnist_node").unwrap().params_size
+        );
+    }
+
+    #[test]
+    fn ladder_sorted_ascending() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let ladder = m.train_ladder("mnist_node", false);
+        assert!(ladder.len() >= 2);
+        let budgets: Vec<usize> = ladder.iter().map(|a| a.budget.unwrap()).collect();
+        let mut sorted = budgets.clone();
+        sorted.sort_unstable();
+        assert_eq!(budgets, sorted);
+        // tay ladder is separate
+        let tay = m.train_ladder("mnist_node", true);
+        assert!(tay.iter().all(|a| a.kind == "tay_train"));
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT artifacts, execute them on the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`.  HLO *text* is the interchange format
+//! (see python/compile/aot.py for why).  Python never runs here.
+//!
+//! Structure:
+//!  * `manifest` — typed view of artifacts/manifest.json,
+//!  * `engine`   — client + lazily-compiled executable cache + typed
+//!                 input/output marshalling,
+//!  * `state`    — flat parameter/optimizer vectors and the standard
+//!                 9-element metric block shared by all artifacts.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+
+pub use engine::{Engine, Input};
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+pub use state::{Metrics, TrainState};

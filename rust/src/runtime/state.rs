@@ -1,0 +1,123 @@
+//! Training state and the standard metric block.
+//!
+//! Parameters and optimizer state are opaque flat f32 vectors whose sizes
+//! come from the manifest; `Metrics` decodes the standard 9-element vector
+//! every artifact returns (python/compile/models/common.py METRICS_LAYOUT).
+
+use anyhow::{bail, Result};
+
+/// Decoded standard metric vector.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Metrics {
+    pub loss: f64,
+    /// Task metric: accuracy (classification) or MSE (regression).
+    pub metric: f64,
+    pub nfe: f64,
+    pub naccept: f64,
+    pub nreject: f64,
+    pub success: bool,
+    pub r_e: f64,
+    pub r_s: f64,
+    pub r_aux: f64,
+}
+
+impl Metrics {
+    pub fn decode(v: &[f32]) -> Result<Metrics> {
+        if v.len() != 9 {
+            bail!("metric vector has {} elements, expected 9", v.len());
+        }
+        Ok(Metrics {
+            loss: v[0] as f64,
+            metric: v[1] as f64,
+            nfe: v[2] as f64,
+            naccept: v[3] as f64,
+            nreject: v[4] as f64,
+            success: v[5] > 0.5,
+            r_e: v[6] as f64,
+            r_s: v[7] as f64,
+            r_aux: v[8] as f64,
+        })
+    }
+}
+
+/// Flat parameter + optimizer-state vectors for one model replica.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub opt_state: Vec<f32>,
+    /// Completed optimizer iterations (drives lr inverse decay at L3).
+    pub iter: u64,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>, opt_state_size: usize) -> TrainState {
+        TrainState {
+            params,
+            opt_state: vec![0.0; opt_state_size],
+            iter: 0,
+        }
+    }
+
+    /// Install the outputs of a train artifact (new params + opt state).
+    pub fn update(&mut self, params: Vec<f32>, opt_state: Vec<f32>) -> Result<()> {
+        if params.len() != self.params.len() || opt_state.len() != self.opt_state.len() {
+            bail!(
+                "state size changed: params {} -> {}, opt {} -> {}",
+                self.params.len(),
+                params.len(),
+                self.opt_state.len(),
+                opt_state.len()
+            );
+        }
+        self.params = params;
+        self.opt_state = opt_state;
+        self.iter += 1;
+        Ok(())
+    }
+
+    /// L2 norm of the parameters — cheap NaN/blow-up tripwire.
+    pub fn param_norm(&self) -> f64 {
+        self.params
+            .iter()
+            .map(|&p| (p as f64) * (p as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.params.iter().all(|p| p.is_finite())
+            && self.opt_state.iter().all(|p| p.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_decode() {
+        let v = [1.5, 0.9, 253.0, 42.0, 3.0, 1.0, 0.01, 2.5, 0.0];
+        let m = Metrics::decode(&v).unwrap();
+        assert_eq!(m.loss, 1.5);
+        assert_eq!(m.nfe, 253.0);
+        assert!(m.success);
+        assert!(Metrics::decode(&v[..5]).is_err());
+    }
+
+    #[test]
+    fn state_update_checks_sizes() {
+        let mut s = TrainState::new(vec![0.0; 4], 5);
+        assert!(s.update(vec![1.0; 4], vec![1.0; 5]).is_ok());
+        assert_eq!(s.iter, 1);
+        assert!(s.update(vec![1.0; 3], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn finiteness_tripwire() {
+        let mut s = TrainState::new(vec![1.0; 3], 2);
+        assert!(s.is_finite());
+        s.params[1] = f32::NAN;
+        assert!(!s.is_finite());
+        assert!(s.param_norm().is_nan());
+    }
+}

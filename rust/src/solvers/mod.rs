@@ -1,0 +1,25 @@
+//! Native Rust adaptive differential-equation solver suite.
+//!
+//! A faithful mirror of the Layer-2 JAX solvers (python/compile/solver.py /
+//! sde_solver.py): the same Butcher tableaus (bit-for-bit constants), the
+//! same tolerance-scaled error ratio (paper Eq. 5), PI controller (Eq. 6),
+//! Shampine stiffness ratio (Eq. 8) and white-boxed statistics (R_E, R_S,
+//! NFE).  Three roles:
+//!
+//!  1. **Data generation** — ground-truth spiral ODE/SDE trajectories and
+//!     the latent generators behind the synthetic datasets (rust/src/data).
+//!  2. **Cross-validation** — rust/tests/cross_validate.rs solves the same
+//!     IVP through this suite and through the lowered `spiral_ode_solve`
+//!     artifact and asserts trajectory agreement, pinning down the semantic
+//!     equivalence of the two implementations.
+//!  3. **Reference analytics** — stiffness estimation and NFE accounting
+//!     used by unit/property tests of the coordinator's heuristics.
+
+pub mod ode;
+pub mod problems;
+pub mod sde;
+pub mod tableau;
+
+pub use ode::{solve, solve_saveat, OdeOptions, SolveOutcome, Stats};
+pub use sde::{sde_solve_saveat, SdeOptions};
+pub use tableau::Tableau;

@@ -1,0 +1,427 @@
+//! Native adaptive explicit Runge-Kutta integrator with white-boxed
+//! heuristics — the Rust mirror of python/compile/solver.py.
+//!
+//! Semantics match the JAX solver: Hairer RMS error norm, paper Eq. 5
+//! accept test, PI controller (Eq. 6) with the same gains, FSAL stage
+//! reuse, `R_E = sum E_j |h_j|`, `R_S = sum S_j` (Eq. 9/11) and
+//! DiffEqFlux-style NFE accounting.  f64 state (data generation wants the
+//! extra precision; the JAX side is f32 — cross-validation tolerances
+//! account for that).
+
+use super::tableau::Tableau;
+
+/// Controller constants — keep in sync with python/compile/norms.py.
+const SAFETY: f64 = 0.9;
+const MIN_FACTOR: f64 = 0.2;
+const MAX_FACTOR: f64 = 10.0;
+const PI_BETA: f64 = 0.04;
+const EPS: f64 = 1e-12;
+
+/// White-boxed solver statistics (paper Eq. 9/11 accumulators + counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub r_e: f64,
+    pub r_e2: f64,
+    pub r_s: f64,
+    pub nfe: u64,
+    pub naccept: u64,
+    pub nreject: u64,
+}
+
+impl Stats {
+    pub fn merge(&mut self, o: &Stats) {
+        self.r_e += o.r_e;
+        self.r_e2 += o.r_e2;
+        self.r_s += o.r_s;
+        self.nfe += o.nfe;
+        self.naccept += o.naccept;
+        self.nreject += o.nreject;
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OdeOptions {
+    pub tableau: Tableau,
+    pub rtol: f64,
+    pub atol: f64,
+    pub max_steps: u64,
+    pub dt0: Option<f64>,
+}
+
+impl Default for OdeOptions {
+    fn default() -> Self {
+        Self {
+            tableau: Tableau::tsit5(),
+            rtol: 1e-6,
+            atol: 1e-6,
+            max_steps: 100_000,
+            dt0: None,
+        }
+    }
+}
+
+/// Final state + statistics of one integration.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    pub z: Vec<f64>,
+    pub t: f64,
+    pub stats: Stats,
+    pub success: bool,
+}
+
+fn rms(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
+}
+
+fn error_ratio(e: &[f64], z0: &[f64], z1: &[f64], rtol: f64, atol: f64) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..e.len() {
+        let scale = atol + z0[i].abs().max(z1[i].abs()) * rtol;
+        let r = e[i] / scale;
+        acc += r * r;
+    }
+    (acc / e.len() as f64 + 1e-300).sqrt()
+}
+
+fn pi_factor(q: f64, q_prev: f64, order: usize) -> f64 {
+    let alpha = 1.0 / order as f64 - 0.75 * PI_BETA;
+    let f = SAFETY * q.max(1e-10).powf(-alpha) * q_prev.max(1e-10).powf(PI_BETA);
+    f.clamp(MIN_FACTOR, MAX_FACTOR)
+}
+
+fn reject_factor(q: f64, order: usize) -> f64 {
+    let alpha = 1.0 / order as f64;
+    (SAFETY * q.max(1e-10).powf(-alpha)).clamp(MIN_FACTOR, 1.0)
+}
+
+/// Internal stepping state threaded across segments in saveat solves.
+struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
+    f: F,
+    tab: &'a Tableau,
+    opts: &'a OdeOptions,
+    /// FSAL stage (f at the current (t, z)).
+    k1: Vec<f64>,
+    h: f64,
+    q_prev: f64,
+    stats: Stats,
+    // scratch
+    ks: Vec<Vec<f64>>,
+    zi: Vec<f64>,
+    znew: Vec<f64>,
+    err: Vec<f64>,
+}
+
+impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
+    fn new(mut f: F, tab: &'a Tableau, opts: &'a OdeOptions, z0: &[f64], t0: f64, span: f64) -> Self {
+        let n = z0.len();
+        let mut k1 = vec![0.0; n];
+        f(z0, t0, &mut k1);
+        let h0 = opts
+            .dt0
+            .unwrap_or_else(|| 0.01 * span / rms(&k1).max(1.0));
+        Self {
+            f,
+            tab,
+            opts,
+            k1,
+            h: h0,
+            q_prev: 1.0,
+            stats: Stats {
+                nfe: 1,
+                ..Default::default()
+            },
+            ks: vec![vec![0.0; n]; tab.stages()],
+            zi: vec![0.0; n],
+            znew: vec![0.0; n],
+            err: vec![0.0; n],
+        }
+    }
+
+    /// Integrate from (t, z) to t1 in place.  Returns success.
+    fn advance(&mut self, z: &mut Vec<f64>, t: &mut f64, t1: f64, budget: u64) -> bool {
+        let s = self.tab.stages();
+        let n = z.len();
+        let mut attempts = 0;
+        while *t < t1 - 1e-12 * t1.abs().max(1.0) {
+            if attempts >= budget {
+                return false;
+            }
+            attempts += 1;
+            let h = self.h.min(t1 - *t).max(EPS);
+
+            // Stage cascade (k1 via FSAL).
+            self.ks[0].copy_from_slice(&self.k1);
+            let (sx, sy) = self.tab.stiff_pair;
+            let mut g_x = vec![0.0; if sx == 0 { n } else { 0 }];
+            if sx == 0 {
+                g_x.copy_from_slice(z);
+            }
+            let mut g_y = vec![0.0; n];
+            for i in 1..s {
+                self.zi.copy_from_slice(z);
+                for (j, &aij) in self.tab.a[i].iter().enumerate() {
+                    if aij != 0.0 {
+                        for d in 0..n {
+                            self.zi[d] += h * aij * self.ks[j][d];
+                        }
+                    }
+                }
+                if i == sx {
+                    g_x = self.zi.clone();
+                }
+                if i == sy {
+                    g_y.copy_from_slice(&self.zi);
+                }
+                let ti = *t + self.tab.c[i] * h;
+                let (before, after) = self.ks.split_at_mut(i);
+                let _ = before;
+                (self.f)(&self.zi, ti, &mut after[0]);
+            }
+            self.stats.nfe += self.tab.nfe_per_attempt() as u64;
+
+            // Combination + embedded error (paper Eq. 3).
+            for d in 0..n {
+                let mut acc_b = 0.0;
+                let mut acc_bt = 0.0;
+                for i in 0..s {
+                    acc_b += self.tab.b[i] * self.ks[i][d];
+                    acc_bt += self.tab.btilde[i] * self.ks[i][d];
+                }
+                self.znew[d] = z[d] + h * acc_b;
+                self.err[d] = h * acc_bt;
+            }
+
+            let q = error_ratio(&self.err, z, &self.znew, self.opts.rtol, self.opts.atol);
+            let e_norm = rms(&self.err);
+
+            if q <= 1.0 {
+                // Shampine stiffness ratio (paper Eq. 8).
+                let mut dnum = vec![0.0; n];
+                let mut dden = vec![0.0; n];
+                for d in 0..n {
+                    dnum[d] = self.ks[sy][d] - self.ks[sx][d];
+                    dden[d] = g_y[d] - g_x[d];
+                }
+                let stiff = rms(&dnum) / (rms(&dden) + EPS);
+
+                self.stats.r_e += e_norm * h.abs();
+                self.stats.r_e2 += e_norm * e_norm;
+                self.stats.r_s += stiff;
+                self.stats.naccept += 1;
+                *t += h;
+                std::mem::swap(z, &mut self.znew);
+                // FSAL: last stage is f at the accepted point.
+                self.k1.copy_from_slice(&self.ks[s - 1]);
+                self.h = h * pi_factor(q, self.q_prev, self.tab.order);
+                self.q_prev = q.max(1e-4);
+            } else {
+                self.stats.nreject += 1;
+                self.h = h * reject_factor(q, self.tab.order);
+            }
+        }
+        true
+    }
+}
+
+/// Adaptive solve over [t0, t1].  `f(z, t, dz)` writes the derivative.
+pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
+    f: F,
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    opts: &OdeOptions,
+) -> SolveOutcome {
+    let tab = opts.tableau.clone();
+    let mut stepper = Stepper::new(f, &tab, opts, z0, t0, t1 - t0);
+    let mut z = z0.to_vec();
+    let mut t = t0;
+    let ok = stepper.advance(&mut z, &mut t, t1, opts.max_steps);
+    SolveOutcome {
+        z,
+        t,
+        stats: stepper.stats,
+        success: ok,
+    }
+}
+
+/// Adaptive solve saving the state at each time in `ts` (ts[0] = t0).
+/// Returns (states, outcome-with-final-state).
+pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
+    f: F,
+    z0: &[f64],
+    ts: &[f64],
+    opts: &OdeOptions,
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    assert!(ts.len() >= 2, "need at least two save points");
+    let tab = opts.tableau.clone();
+    let mut stepper = Stepper::new(f, &tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
+    let mut z = z0.to_vec();
+    let mut t = ts[0];
+    let mut out = Vec::with_capacity(ts.len());
+    out.push(z.clone());
+    let mut ok = true;
+    for &t_hi in &ts[1..] {
+        ok &= stepper.advance(&mut z, &mut t, t_hi, opts.max_steps);
+        out.push(z.clone());
+    }
+    (
+        out,
+        SolveOutcome {
+            z,
+            t,
+            stats: stepper.stats,
+            success: ok,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp_decay(z: &[f64], _t: f64, dz: &mut [f64]) {
+        for i in 0..z.len() {
+            dz[i] = -z[i];
+        }
+    }
+
+    #[test]
+    fn exponential_decay_accuracy() {
+        let opts = OdeOptions {
+            rtol: 1e-8,
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let out = solve(exp_decay, &[1.0, 2.0], 0.0, 1.0, &opts);
+        assert!(out.success);
+        assert!((out.z[0] - (-1.0f64).exp()).abs() < 1e-7, "{}", out.z[0]);
+        assert!((out.z[1] - 2.0 * (-1.0f64).exp()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fifth_order_convergence() {
+        // Tighter tolerance should reduce error superlinearly.
+        let errs: Vec<f64> = [1e-4, 1e-6, 1e-8]
+            .iter()
+            .map(|&tol| {
+                let opts = OdeOptions {
+                    rtol: tol,
+                    atol: tol,
+                    ..Default::default()
+                };
+                let out = solve(exp_decay, &[1.0], 0.0, 1.0, &opts);
+                (out.z[0] - (-1.0f64).exp()).abs()
+            })
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] >= errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn harmonic_oscillator_energy() {
+        // z'' = -z  as first-order system; energy must be conserved ~1e-6.
+        let f = |z: &[f64], _t: f64, dz: &mut [f64]| {
+            dz[0] = z[1];
+            dz[1] = -z[0];
+        };
+        let opts = OdeOptions {
+            rtol: 1e-9,
+            atol: 1e-9,
+            ..Default::default()
+        };
+        let out = solve(f, &[1.0, 0.0], 0.0, 10.0, &opts);
+        let energy = out.z[0] * out.z[0] + out.z[1] * out.z[1];
+        assert!((energy - 1.0).abs() < 1e-6, "energy={energy}");
+    }
+
+    #[test]
+    fn nfe_grows_with_tighter_tol() {
+        let nfe: Vec<u64> = [1e-3, 1e-6, 1e-9]
+            .iter()
+            .map(|&tol| {
+                let opts = OdeOptions {
+                    rtol: tol,
+                    atol: tol,
+                    ..Default::default()
+                };
+                solve(exp_decay, &[1.0], 0.0, 1.0, &opts).stats.nfe
+            })
+            .collect();
+        assert!(nfe[0] < nfe[1] && nfe[1] < nfe[2], "{nfe:?}");
+    }
+
+    #[test]
+    fn stiffness_estimate_tracks_lambda() {
+        for lambda in [10.0, 100.0] {
+            let f = |z: &[f64], _t: f64, dz: &mut [f64]| {
+                dz[0] = -lambda * z[0];
+            };
+            let opts = OdeOptions {
+                rtol: 1e-7,
+                atol: 1e-7,
+                ..Default::default()
+            };
+            let out = solve(f, &[1.0], 0.0, 1.0, &opts);
+            let s_per_step = out.stats.r_s / out.stats.naccept as f64;
+            assert!(
+                (s_per_step - lambda).abs() / lambda < 0.2,
+                "lambda={lambda} est={s_per_step}"
+            );
+        }
+    }
+
+    #[test]
+    fn saveat_grid_matches_analytic() {
+        let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
+        let opts = OdeOptions {
+            rtol: 1e-8,
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let (zs, out) = solve_saveat(exp_decay, &[1.0], &ts, &opts);
+        assert!(out.success);
+        for (i, z) in zs.iter().enumerate() {
+            assert!((z[0] - (-ts[i]).exp()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_failure() {
+        let opts = OdeOptions {
+            rtol: 1e-12,
+            atol: 1e-12,
+            max_steps: 3,
+            ..Default::default()
+        };
+        let out = solve(exp_decay, &[1.0], 0.0, 1.0, &opts);
+        assert!(!out.success);
+    }
+
+    #[test]
+    fn dopri5_and_tsit5_agree() {
+        let mk = |tab: Tableau| OdeOptions {
+            tableau: tab,
+            rtol: 1e-9,
+            atol: 1e-9,
+            ..Default::default()
+        };
+        let a = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::tsit5()));
+        let b = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::dopri5()));
+        assert!((a.z[0] - b.z[0]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rejections_occur_on_abrupt_dynamics() {
+        // A sharp transition forces step rejections.
+        let f = |z: &[f64], t: f64, dz: &mut [f64]| {
+            dz[0] = if t < 0.5 { -z[0] } else { -50.0 * z[0] };
+        };
+        let opts = OdeOptions {
+            rtol: 1e-8,
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let out = solve(f, &[1.0], 0.0, 1.0, &opts);
+        assert!(out.success);
+        assert!(out.stats.nreject > 0, "{:?}", out.stats);
+    }
+}

@@ -1,0 +1,246 @@
+//! Explicit embedded Runge-Kutta tableaus (mirror of python tableaus.py).
+//!
+//! Constants are kept bit-for-bit identical to the Python side so the two
+//! solver stacks can be cross-validated trajectory-for-trajectory.
+
+/// An explicit embedded RK tableau (see python/compile/tableaus.py).
+#[derive(Clone, Debug)]
+pub struct Tableau {
+    pub name: &'static str,
+    /// Strictly lower-triangular stage matrix, row-major `a[i][j]`, i < s.
+    pub a: Vec<Vec<f64>>,
+    /// Higher-order solution weights.
+    pub b: Vec<f64>,
+    /// `b - bhat` embedded difference weights (error estimate).
+    pub btilde: Vec<f64>,
+    /// Stage abscissae.
+    pub c: Vec<f64>,
+    pub order: usize,
+    pub fsal: bool,
+    /// Stage index pair with equal `c` for the Shampine stiffness ratio.
+    pub stiff_pair: (usize, usize),
+}
+
+impl Tableau {
+    pub fn stages(&self) -> usize {
+        self.b.len()
+    }
+
+    pub fn nfe_per_attempt(&self) -> usize {
+        if self.fsal {
+            self.stages() - 1
+        } else {
+            self.stages()
+        }
+    }
+
+    /// Tsitouras 5(4) — the paper's Neural-ODE solver.
+    pub fn tsit5() -> Tableau {
+        Tableau {
+            name: "tsit5",
+            a: vec![
+                vec![],
+                vec![0.161],
+                vec![-0.008480655492356989, 0.335480655492357],
+                vec![2.8971530571054935, -6.359448489975075, 4.3622954328695815],
+                vec![
+                    5.325864828439257,
+                    -11.748883564062828,
+                    7.4955393428898365,
+                    -0.09249506636175525,
+                ],
+                vec![
+                    5.86145544294642,
+                    -12.92096931784711,
+                    8.159367898576159,
+                    -0.071584973281401,
+                    -0.028269050394068383,
+                ],
+                vec![
+                    0.09646076681806523,
+                    0.01,
+                    0.4798896504144996,
+                    1.379008574103742,
+                    -3.290069515436081,
+                    2.324710524099774,
+                ],
+            ],
+            b: vec![
+                0.09646076681806523,
+                0.01,
+                0.4798896504144996,
+                1.379008574103742,
+                -3.290069515436081,
+                2.324710524099774,
+                0.0,
+            ],
+            btilde: vec![
+                -0.00178001105222577714,
+                -0.0008164344596567469,
+                0.007880878010261995,
+                -0.1447110071732629,
+                0.5823571654525552,
+                -0.45808210592918697,
+                0.015151515151515152,
+            ],
+            c: vec![0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0],
+            order: 5,
+            fsal: true,
+            stiff_pair: (5, 6),
+        }
+    }
+
+    /// Dormand-Prince 5(4).
+    pub fn dopri5() -> Tableau {
+        let b = vec![
+            35.0 / 384.0,
+            0.0,
+            500.0 / 1113.0,
+            125.0 / 192.0,
+            -2187.0 / 6784.0,
+            11.0 / 84.0,
+            0.0,
+        ];
+        let bhat = [
+            5179.0 / 57600.0,
+            0.0,
+            7571.0 / 16695.0,
+            393.0 / 640.0,
+            -92097.0 / 339200.0,
+            187.0 / 2100.0,
+            1.0 / 40.0,
+        ];
+        Tableau {
+            name: "dopri5",
+            a: vec![
+                vec![],
+                vec![1.0 / 5.0],
+                vec![3.0 / 40.0, 9.0 / 40.0],
+                vec![44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0],
+                vec![
+                    19372.0 / 6561.0,
+                    -25360.0 / 2187.0,
+                    64448.0 / 6561.0,
+                    -212.0 / 729.0,
+                ],
+                vec![
+                    9017.0 / 3168.0,
+                    -355.0 / 33.0,
+                    46732.0 / 5247.0,
+                    49.0 / 176.0,
+                    -5103.0 / 18656.0,
+                ],
+                vec![
+                    35.0 / 384.0,
+                    0.0,
+                    500.0 / 1113.0,
+                    125.0 / 192.0,
+                    -2187.0 / 6784.0,
+                    11.0 / 84.0,
+                ],
+            ],
+            btilde: b.iter().zip(bhat.iter()).map(|(x, y)| x - y).collect(),
+            b,
+            c: vec![0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+            order: 5,
+            fsal: true,
+            stiff_pair: (5, 6),
+        }
+    }
+
+    /// Bogacki-Shampine 3(2).
+    pub fn bs3() -> Tableau {
+        let b = vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0];
+        let bhat = [7.0 / 24.0, 0.25, 1.0 / 3.0, 0.125];
+        Tableau {
+            name: "bs3",
+            a: vec![
+                vec![],
+                vec![0.5],
+                vec![0.0, 0.75],
+                vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0],
+            ],
+            btilde: b.iter().zip(bhat.iter()).map(|(x, y)| x - y).collect(),
+            b,
+            c: vec![0.0, 0.5, 0.75, 1.0],
+            order: 3,
+            fsal: true,
+            stiff_pair: (0, 3),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Tableau> {
+        match name {
+            "tsit5" => Some(Self::tsit5()),
+            "dopri5" => Some(Self::dopri5()),
+            "bs3" => Some(Self::bs3()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Order conditions: sum(b) == 1 and sum(b*c) == 1/2 for every tableau.
+    #[test]
+    fn order_conditions() {
+        for tab in [Tableau::tsit5(), Tableau::dopri5(), Tableau::bs3()] {
+            let sb: f64 = tab.b.iter().sum();
+            assert!((sb - 1.0).abs() < 1e-12, "{}: sum b = {sb}", tab.name);
+            let sbc: f64 = tab.b.iter().zip(&tab.c).map(|(b, c)| b * c).sum();
+            assert!((sbc - 0.5).abs() < 1e-12, "{}: sum b*c = {sbc}", tab.name);
+        }
+    }
+
+    /// Row sums of `a` equal `c` (consistency condition).
+    #[test]
+    fn row_sums_match_c() {
+        for tab in [Tableau::tsit5(), Tableau::dopri5(), Tableau::bs3()] {
+            for (i, row) in tab.a.iter().enumerate() {
+                let rs: f64 = row.iter().sum();
+                assert!(
+                    (rs - tab.c[i]).abs() < 1e-9,
+                    "{} row {i}: {rs} vs c {}",
+                    tab.name,
+                    tab.c[i]
+                );
+            }
+        }
+    }
+
+    /// The embedded difference sums to ~0 (both solutions are consistent).
+    #[test]
+    fn btilde_sums_to_zero() {
+        for tab in [Tableau::tsit5(), Tableau::dopri5(), Tableau::bs3()] {
+            let s: f64 = tab.btilde.iter().sum();
+            assert!(s.abs() < 1e-12, "{}: sum btilde = {s}", tab.name);
+        }
+    }
+
+    /// FSAL: the final stage row of `a` equals `b[..s-1]`.
+    #[test]
+    fn fsal_rows() {
+        for tab in [Tableau::tsit5(), Tableau::dopri5()] {
+            let last = &tab.a[tab.stages() - 1];
+            for (j, a) in last.iter().enumerate() {
+                assert!((a - tab.b[j]).abs() < 1e-12, "{} col {j}", tab.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stiff_pair_has_equal_c() {
+        for tab in [Tableau::tsit5(), Tableau::dopri5()] {
+            let (x, y) = tab.stiff_pair;
+            assert_eq!(tab.c[x], tab.c[y], "{}", tab.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(Tableau::by_name("tsit5").is_some());
+        assert!(Tableau::by_name("rk4").is_none());
+    }
+}

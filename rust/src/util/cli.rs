@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed command line: positionals + key/value options + boolean flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that take a value (everything else with `--` is a flag).
+    valued: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  `valued` lists the option names (without `--`)
+    /// that consume a following value.
+    pub fn parse(argv: impl Iterator<Item = String>, valued: &[&'static str]) -> Result<Args> {
+        let mut out = Args {
+            valued: valued.to_vec(),
+            ..Default::default()
+        };
+        let mut it = argv.peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if out.valued.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} needs a value"))?;
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    /// Error if unknown option names were passed (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(|x| x.to_string())
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(argv("train --model mnist --steps=10 --verbose extra"), &["model"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("model"), Some("mnist"));
+        assert_eq!(a.get("steps"), Some("10"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(argv("--lr 0.5 --n 3"), &["lr", "n"]).unwrap();
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_f64("n", 0.0).is_ok());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("--model"), &["model"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(argv("--lr abc"), &["lr"]).unwrap();
+        assert!(a.get_f64("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn check_known_catches_typo() {
+        let a = Args::parse(argv("--sedes 1"), &["seeds"]).unwrap();
+        assert!(a.check_known(&["seeds"]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure available, so the conveniences a service would
+//! normally pull from crates.io (serde/clap/criterion/proptest/tokio) are
+//! implemented here from scratch: a JSON parser/writer, a deterministic
+//! PRNG suite, a CLI argument parser, a scoped thread pool, a
+//! property-based testing mini-framework, summary statistics, and a
+//! paper-style table renderer.
+
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;
+pub mod threadpool;
+pub mod timer;

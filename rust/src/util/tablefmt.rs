@@ -1,0 +1,100 @@
+//! Paper-style ASCII table rendering for the bench harness.
+//!
+//! Renders `mean ± std` cells with aligned columns, matching the layout of
+//! the paper's Tables 1-4 so bench output can be compared side by side.
+
+/// A simple column-aligned table.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format a `mean ± std` cell.
+    pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+        format!("{mean:.decimals$} ± {std:.decimals$}")
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:<width$} ", c, width = widths[i]));
+            }
+            s.push('|');
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "NFE"]);
+        t.row(vec!["Vanilla".into(), Table::pm(253.0, 3.46, 1)]);
+        t.row(vec!["ERNODE".into(), Table::pm(177.0, 0.0, 1)]);
+        let s = t.render();
+        assert!(s.contains("Vanilla"));
+        assert!(s.contains("253.0 ± 3.5") || s.contains("253.0 ± 3.46"));
+        // all data lines share the same width
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        // char count, not byte count: "±" is multibyte.
+        assert!(lines
+            .windows(2)
+            .all(|w| w[0].chars().count() == w[1].chars().count()));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn wrong_arity_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Cross-validation: the JAX masked-scan adaptive solver (lowered to HLO,
+//! executed via PJRT) against the native Rust solver suite on the same IVP.
+//!
+//! This pins down the semantic equivalence of the two solver stacks — same
+//! tableau constants, same error norm / controller — which is what lets the
+//! Rust suite serve as ground-truth data generator for the experiments.
+
+use regnde::data::spiral;
+use regnde::runtime::{Engine, Input};
+use regnde::solvers::{self, OdeOptions};
+
+fn engine() -> Engine {
+    Engine::new(regnde::default_artifacts_dir()).expect("artifacts built?")
+}
+
+#[test]
+fn spiral_trajectory_jax_vs_rust() {
+    let engine = engine();
+    let ts: Vec<f64> = spiral::uniform_grid(30, 1.5);
+    let ts_f32: Vec<f32> = ts.iter().map(|&t| t as f32).collect();
+
+    // JAX path: the lowered spiral_ode_solve artifact (f32, rtol=1e-6).
+    let out = engine
+        .run(
+            "spiral_ode_solve",
+            &[Input::F32(&[2.0, 0.0]), Input::F32(&ts_f32)],
+        )
+        .unwrap();
+    let jax_traj = &out[0]; // [30, 2]
+
+    // Rust path: native Tsit5 at the same tolerance.
+    let opts = OdeOptions {
+        rtol: 1e-6,
+        atol: 1e-6,
+        ..Default::default()
+    };
+    let (rust_traj, outcome) =
+        solvers::solve_saveat(regnde::solvers::problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+    assert!(outcome.success);
+
+    for (k, rz) in rust_traj.iter().enumerate() {
+        for d in 0..2 {
+            let a = jax_traj[k * 2 + d] as f64;
+            let b = rz[d];
+            assert!(
+                (a - b).abs() < 2e-3,
+                "t={} dim {d}: jax {a} vs rust {b}",
+                ts[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn jax_solver_stats_are_plausible() {
+    let engine = engine();
+    let ts: Vec<f32> = (0..30).map(|i| 1.5 * i as f32 / 29.0).collect();
+    let out = engine
+        .run("spiral_ode_solve", &[Input::F32(&[2.0, 0.0]), Input::F32(&ts)])
+        .unwrap();
+    let m = regnde::runtime::Metrics::decode(&out[1]).unwrap();
+    assert!(m.success, "budget exhausted");
+    assert!(m.nfe > 29.0 * 6.0, "at least one step per segment: {}", m.nfe);
+    assert!(m.r_s > 0.0 && m.r_e >= 0.0);
+    // NFE parity: 6 per attempt + 1 initial (FSAL Tsit5)
+    let attempts = m.naccept + m.nreject;
+    assert_eq!(m.nfe as u64, 1 + 6 * attempts as u64);
+}
+
+#[test]
+fn rust_nfe_within_factor_of_jax() {
+    // Same tolerance, same method: the two stacks should take a comparable
+    // number of f evaluations (f32 vs f64 makes them not identical).
+    let engine = engine();
+    let ts: Vec<f64> = spiral::uniform_grid(30, 1.5);
+    let ts_f32: Vec<f32> = ts.iter().map(|&t| t as f32).collect();
+    let out = engine
+        .run(
+            "spiral_ode_solve",
+            &[Input::F32(&[2.0, 0.0]), Input::F32(&ts_f32)],
+        )
+        .unwrap();
+    let m = regnde::runtime::Metrics::decode(&out[1]).unwrap();
+
+    let opts = OdeOptions {
+        rtol: 1e-6,
+        atol: 1e-6,
+        ..Default::default()
+    };
+    let (_, outcome) =
+        solvers::solve_saveat(regnde::solvers::problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+    let ratio = m.nfe / outcome.stats.nfe as f64;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "NFE ratio jax/rust = {ratio} ({} vs {})",
+        m.nfe,
+        outcome.stats.nfe
+    );
+}

@@ -1,0 +1,137 @@
+//! Integration tests over the full L3 trainer stack: engine + data +
+//! budget routing + schedules, on real (tiny) training runs.
+//!
+//! These use very small epoch/iteration counts — they verify *plumbing and
+//! semantics* (finite metrics, NFE accounting, router behaviour, method
+//! coefficient wiring), not convergence; the benches cover the latter.
+
+use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::Method;
+use regnde::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::new(regnde::default_artifacts_dir()).expect("artifacts built?")
+}
+
+fn tiny() -> TrainOpts {
+    TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 2,
+        seed: 0,
+        verbose: false,
+    }
+}
+
+#[test]
+fn spiral_node_vanilla_runs() {
+    let e = engine();
+    let r = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    assert_eq!(r.epochs.len(), 1);
+    assert!(r.epochs[0].loss.is_finite());
+    assert!(r.predict_nfe > 0.0);
+    assert!(r.train_time_s > 0.0);
+}
+
+#[test]
+fn spiral_node_regularized_accumulates_r_terms() {
+    let e = engine();
+    let m = Method::parse("srnode+ernode").unwrap();
+    let r = experiments::run_by_name(&e, "spiral-node", m, tiny()).unwrap();
+    assert_eq!(r.method, "SRNODE + ERNODE");
+    assert!(r.epochs[0].r_e > 0.0, "R_E accumulated");
+    assert!(r.epochs[0].r_s > 0.0, "R_S accumulated");
+}
+
+#[test]
+fn mnist_node_methods_wire_coefficients() {
+    let e = engine();
+    let vanilla =
+        experiments::run_by_name(&e, "mnist-node", Method::VANILLA, tiny()).unwrap();
+    assert!(vanilla.epochs[0].loss.is_finite());
+    assert!(vanilla.final_test_metric >= 0.0);
+    let steer = experiments::run_by_name(
+        &e,
+        "mnist-node",
+        Method::parse("steer").unwrap(),
+        tiny(),
+    )
+    .unwrap();
+    assert_eq!(steer.method, "STEER");
+    assert!(steer.epochs[0].loss.is_finite());
+}
+
+#[test]
+fn mnist_nsde_runs_and_counts_sde_nfe() {
+    let e = engine();
+    let r = experiments::run_by_name(
+        &e,
+        "mnist-nsde",
+        Method::parse("ernsde").unwrap(),
+        tiny(),
+    )
+    .unwrap();
+    assert_eq!(r.method, "ERNSDE");
+    // SDE accounting: 4 evals per attempt
+    let rec = r.epochs[0];
+    assert!((rec.nfe - 4.0 * (rec.naccept + rec.nreject)).abs() < 1e-6);
+}
+
+#[test]
+fn spiral_nsde_runs() {
+    let e = engine();
+    let r = experiments::run_by_name(
+        &e,
+        "spiral-nsde",
+        Method::parse("srnsde").unwrap(),
+        tiny(),
+    )
+    .unwrap();
+    assert!(r.epochs[0].loss.is_finite());
+    assert!(r.predict_nfe >= 29.0 * 4.0);
+}
+
+#[test]
+fn latent_ode_runs_with_steer_grid_perturbation() {
+    let e = engine();
+    let r = experiments::run_by_name(
+        &e,
+        "latent-ode",
+        Method::parse("steer").unwrap(),
+        tiny(),
+    )
+    .unwrap();
+    assert!(r.epochs[0].loss.is_finite());
+    assert!(r.final_test_loss.is_finite());
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    let e = engine();
+    assert!(experiments::run_by_name(&e, "cifar", Method::VANILLA, tiny()).is_err());
+}
+
+#[test]
+fn replica_seeds_change_results() {
+    let e = engine();
+    let a = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    let b = experiments::run_by_name(
+        &e,
+        "spiral-node",
+        Method::VANILLA,
+        TrainOpts {
+            seed: 1,
+            ..tiny()
+        },
+    )
+    .unwrap();
+    assert_ne!(a.epochs[0].loss, b.epochs[0].loss);
+}
+
+#[test]
+fn same_seed_reproduces() {
+    let e = engine();
+    let a = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    let b = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    assert_eq!(a.epochs[0].loss, b.epochs[0].loss);
+    assert_eq!(a.predict_nfe, b.predict_nfe);
+}

@@ -1,0 +1,97 @@
+//! Whole-manifest smoke: every artifact compiles and executes once with
+//! shape-correct synthetic inputs, and its outputs decode per the manifest.
+//! Also failure-injection tests for the engine's input validation.
+
+use regnde::runtime::{Engine, Input};
+
+fn engine() -> Engine {
+    Engine::new(regnde::default_artifacts_dir()).expect("artifacts built?")
+}
+
+#[test]
+fn all_init_artifacts_produce_finite_params() {
+    let e = engine();
+    for model in ["mnist_node", "latent_ode", "spiral_node", "spiral_nsde", "mnist_nsde"] {
+        let p = e.init_params(model, 3).unwrap();
+        let expected = e.manifest.model(model).unwrap().params_size;
+        assert_eq!(p.len(), expected, "{model}");
+        assert!(p.iter().all(|v| v.is_finite()), "{model}");
+        // glorot init: nonzero weights
+        assert!(p.iter().any(|&v| v != 0.0), "{model}");
+        // different seeds differ
+        let p2 = e.init_params(model, 4).unwrap();
+        assert_ne!(p, p2, "{model}");
+        // same seed identical
+        let p3 = e.init_params(model, 3).unwrap();
+        assert_eq!(p, p3, "{model}");
+    }
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let e = engine();
+    let err = e.run("mnist_node_predict", &[Input::SeedU32(1)]).unwrap_err();
+    assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+}
+
+#[test]
+fn wrong_tensor_shape_is_rejected() {
+    let e = engine();
+    let bad = vec![0.0f32; 3];
+    let x = vec![0.0f32; 32 * 784];
+    let y = vec![0.0f32; 32 * 10];
+    let err = e
+        .run(
+            "mnist_node_predict",
+            &[Input::F32(&bad), Input::F32(&x), Input::F32(&y)],
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("elements"), "{err:#}");
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    let e = engine();
+    assert!(e.run("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn predict_metrics_decode_and_success() {
+    let e = engine();
+    let params = e.init_params("mnist_node", 0).unwrap();
+    let x = vec![0.5f32; 32 * 784];
+    let mut y = vec![0.0f32; 32 * 10];
+    for i in 0..32 {
+        y[i * 10] = 1.0;
+    }
+    let out = e
+        .run(
+            "mnist_node_predict",
+            &[Input::F32(&params), Input::F32(&x), Input::F32(&y)],
+        )
+        .unwrap();
+    assert_eq!(out[0].len(), 32 * 10); // logits
+    let m = regnde::runtime::Metrics::decode(&out[1]).unwrap();
+    assert!(m.success);
+    assert!(m.nfe >= 7.0);
+    assert!((0.0..=1.0).contains(&m.metric));
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let e = engine();
+    let a = e.load("spiral_ode_solve").unwrap();
+    let b = e.load("spiral_ode_solve").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn train_ladder_budgets_strictly_ascend() {
+    let e = engine();
+    for model in ["mnist_node", "latent_ode", "spiral_node", "spiral_nsde", "mnist_nsde"] {
+        let ladder = e.manifest.train_ladder(model, false);
+        assert!(ladder.len() >= 2, "{model}");
+        let budgets: Vec<_> = ladder.iter().map(|a| a.budget.unwrap()).collect();
+        assert!(budgets.windows(2).all(|w| w[0] < w[1]), "{model}: {budgets:?}");
+    }
+}
