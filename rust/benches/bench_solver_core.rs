@@ -1,0 +1,223 @@
+//! Solver-core microbenchmark: single-trajectory stepping rate and
+//! ensemble integration throughput (serial vs thread-pooled).
+//!
+//! This is the perf anchor for the allocation-free solver rewrite: it
+//! times the exact hot loops behind ground-truth generation and the
+//! tolerance/ablation benches, and emits `BENCH_solver_core.json` at the
+//! repo root (schema documented in rust/DESIGN.md §Perf) so the perf
+//! trajectory is tracked PR over PR.
+//!
+//! Scale knobs (env):
+//!   REGNDE_BENCH_SEEDS   measurement repetitions per case (default 3)
+//!   REGNDE_BENCH_TRAJ    ensemble size                    (default 256)
+//!   REGNDE_BENCH_POINTS  SDE save-grid length             (default 30)
+use std::time::Instant;
+
+use regnde::data::spiral::uniform_grid;
+use regnde::solvers::{
+    problems, sde_ensemble_moments, solve, EnsembleOptions, OdeOptions, SdeOptions, Tableau,
+};
+use regnde::util::json::{obj, Json};
+use regnde::util::tablefmt::Table;
+use regnde::util::threadpool::default_workers;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Best-of-`reps` single-trajectory stepping rate for one ODE case.
+fn single_case(
+    name: &str,
+    tableau: Tableau,
+    f: impl Fn(&[f64], f64, &mut [f64]) + Copy,
+    z0: &[f64],
+    t1: f64,
+    reps: usize,
+) -> (Json, Vec<String>) {
+    let opts = OdeOptions {
+        tableau,
+        rtol: 1e-6,
+        atol: 1e-6,
+        max_steps: 10_000_000,
+        ..Default::default()
+    };
+    let mut best_steps_per_sec = 0.0f64;
+    let mut attempts = 0u64;
+    let mut nfe = 0u64;
+    for _ in 0..reps {
+        // Repeat the solve enough times that the timer resolution is
+        // negligible relative to the measured interval.
+        let inner = 50;
+        let t0 = Instant::now();
+        let mut total_attempts = 0u64;
+        let mut total_nfe = 0u64;
+        for _ in 0..inner {
+            let out = solve(f, z0, 0.0, t1, &opts);
+            assert!(out.success, "{name} solve failed");
+            total_attempts += out.stats.attempts();
+            total_nfe += out.stats.nfe;
+            std::hint::black_box(&out.z);
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        best_steps_per_sec = best_steps_per_sec.max(total_attempts as f64 / secs);
+        attempts = total_attempts / inner;
+        nfe = total_nfe / inner;
+    }
+    let row = vec![
+        name.to_string(),
+        format!("{attempts}"),
+        format!("{nfe}"),
+        format!("{best_steps_per_sec:.0}"),
+    ];
+    let j = obj([
+        ("case", Json::from(name)),
+        ("attempts_per_solve", Json::from(attempts as f64)),
+        ("nfe_per_solve", Json::from(nfe as f64)),
+        ("steps_per_sec", Json::from(best_steps_per_sec)),
+        ("rtol", Json::from(1e-6)),
+    ]);
+    (j, row)
+}
+
+fn main() {
+    let reps = env_usize("REGNDE_BENCH_SEEDS", 3).max(1);
+    let n_traj = env_usize("REGNDE_BENCH_TRAJ", 256).max(2);
+    let t_points = env_usize("REGNDE_BENCH_POINTS", 30).max(2);
+    let workers = default_workers();
+
+    // ---- single-trajectory stepping rate ------------------------------
+    let mut table = Table::new(
+        "Solver core — single-trajectory stepping rate (best of reps)",
+        &["case", "attempts/solve", "NFE/solve", "steps/sec"],
+    );
+    let mut singles: Vec<Json> = Vec::new();
+    for (j, row) in [
+        single_case(
+            "spiral_ode/tsit5",
+            Tableau::tsit5(),
+            problems::spiral_ode,
+            &[2.0, 0.0],
+            1.5,
+            reps,
+        ),
+        single_case(
+            "spiral_ode/dopri5",
+            Tableau::dopri5(),
+            problems::spiral_ode,
+            &[2.0, 0.0],
+            1.5,
+            reps,
+        ),
+        single_case(
+            "exp_decay_d16/tsit5",
+            Tableau::tsit5(),
+            |z: &[f64], _t: f64, dz: &mut [f64]| {
+                for i in 0..z.len() {
+                    dz[i] = -z[i];
+                }
+            },
+            &[1.0; 16],
+            5.0,
+            reps,
+        ),
+    ] {
+        singles.push(j);
+        table.row(row);
+    }
+    println!("{}", table.render());
+
+    // ---- ensemble throughput: serial vs pooled ------------------------
+    let ts = uniform_grid(t_points, 1.0);
+    let opts = SdeOptions {
+        rtol: 1e-3,
+        atol: 1e-3,
+        ..Default::default()
+    };
+    let run_ens = |eopts: &EnsembleOptions| -> f64 {
+        let mut best = 0.0f64;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let m = sde_ensemble_moments(
+                &problems::spiral_sde_drift,
+                &problems::spiral_sde_diffusion,
+                &[1.0, 1.0],
+                &ts,
+                n_traj,
+                42,
+                &opts,
+                eopts,
+            );
+            assert!(m.success);
+            std::hint::black_box(&m.mu);
+            best = best.max(n_traj as f64 / t0.elapsed().as_secs_f64().max(1e-9));
+        }
+        best
+    };
+    let serial = run_ens(&EnsembleOptions::serial());
+    let pooled = run_ens(&EnsembleOptions {
+        workers,
+        ..Default::default()
+    });
+    let speedup = pooled / serial.max(1e-9);
+
+    let mut etable = Table::new(
+        "Solver core — spiral DSDE ensemble throughput (trajectories/sec)",
+        &["schedule", "workers", "traj/sec", "speedup"],
+    );
+    etable.row(vec![
+        "serial".into(),
+        "1".into(),
+        format!("{serial:.1}"),
+        "1.00x".into(),
+    ]);
+    etable.row(vec![
+        "pooled".into(),
+        format!("{workers}"),
+        format!("{pooled:.1}"),
+        format!("{speedup:.2}x"),
+    ]);
+    println!("{}", etable.render());
+    println!(
+        "({n_traj} trajectories x {t_points} save points; identical bits serial vs pooled)"
+    );
+
+    // ---- emit BENCH_solver_core.json at the repo root -----------------
+    let report = obj([
+        ("schema", Json::from("bench_solver_core/v1")),
+        ("single_trajectory", Json::Arr(singles)),
+        (
+            "ensemble",
+            obj([
+                ("problem", Json::from("spiral_dsde")),
+                ("n_traj", Json::from(n_traj)),
+                ("t_points", Json::from(t_points)),
+                ("workers", Json::from(workers)),
+                ("serial_traj_per_sec", Json::from(serial)),
+                ("pooled_traj_per_sec", Json::from(pooled)),
+                ("speedup", Json::from(speedup)),
+            ]),
+        ),
+        (
+            "meta",
+            obj([
+                ("reps", Json::from(reps)),
+                (
+                    "available_parallelism",
+                    Json::from(
+                        std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                    ),
+                ),
+            ]),
+        ),
+    ]);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_solver_core.json");
+    std::fs::write(&path, report.to_string_pretty()).expect("write bench report");
+    println!("wrote {}", path.display());
+}

@@ -4,12 +4,15 @@
 //!   du/dt = A u^3 at the save grid, solved at tight tolerance.
 //! * `spiral_sde_moments` — the Table-3 fixture: per-save-point mean and
 //!   variance over an ensemble of spiral DSDE trajectories (paper Eq. 15;
-//!   the paper uses 10k trajectories, configurable here).
+//!   the paper uses 10k trajectories, configurable here).  The ensemble is
+//!   integrated through `solvers::ensemble` — chunked across the thread
+//!   pool with per-trajectory RNG streams, so the fixture is bit-identical
+//!   at any worker count (and on a single-core runner).
 
+use crate::solvers::ensemble::{sde_ensemble_moments, EnsembleOptions};
 use crate::solvers::ode::{solve_saveat, OdeOptions};
 use crate::solvers::problems;
-use crate::solvers::sde::{sde_solve_saveat, SdeOptions};
-use crate::util::rng::Rng;
+use crate::solvers::sde::SdeOptions;
 
 /// One spiral ODE trajectory at the given save times (row-major [T, 2]).
 pub fn spiral_ode_trajectory(u0: [f64; 2], ts: &[f64]) -> Vec<f32> {
@@ -30,40 +33,26 @@ pub fn spiral_sde_moments(
     n_traj: usize,
     seed: u64,
 ) -> (Vec<f32>, Vec<f32>) {
-    let t = ts.len();
-    let mut sum = vec![0.0f64; t * 2];
-    let mut sumsq = vec![0.0f64; t * 2];
-    let mut rng = Rng::new(seed ^ 0x5350_4952_414C); // "SPIRAL"
     let opts = SdeOptions {
         rtol: 1e-3,
         atol: 1e-3,
         ..Default::default()
     };
-    for _ in 0..n_traj {
-        let (zs, _, ok) = sde_solve_saveat(
-            problems::spiral_sde_drift,
-            problems::spiral_sde_diffusion,
-            &u0,
-            ts,
-            &mut rng,
-            &opts,
-        );
-        assert!(ok);
-        for (k, z) in zs.iter().enumerate() {
-            for d in 0..2 {
-                sum[k * 2 + d] += z[d];
-                sumsq[k * 2 + d] += z[d] * z[d];
-            }
-        }
-    }
-    let inv = 1.0 / n_traj as f64;
-    let mu: Vec<f32> = sum.iter().map(|s| (s * inv) as f32).collect();
-    let var: Vec<f32> = sumsq
-        .iter()
-        .zip(&sum)
-        .map(|(sq, s)| ((sq * inv) - (s * inv) * (s * inv)).max(0.0) as f32)
-        .collect();
-    (mu, var)
+    let m = sde_ensemble_moments(
+        &problems::spiral_sde_drift,
+        &problems::spiral_sde_diffusion,
+        &u0,
+        ts,
+        n_traj,
+        seed ^ 0x5350_4952_414C, // "SPIRAL"
+        &opts,
+        &EnsembleOptions::default(),
+    );
+    assert!(m.success, "ground-truth spiral SDE ensemble failed");
+    (
+        m.mu.iter().map(|&v| v as f32).collect(),
+        m.var.iter().map(|&v| v as f32).collect(),
+    )
 }
 
 /// The paper's save grid: `t_points` uniform times over [0, span].
@@ -111,5 +100,35 @@ mod tests {
         // Variance grows from zero.
         assert!(var1[18] > var1[0]);
         assert!(mu1.iter().all(|m| m.is_finite()));
+    }
+
+    #[test]
+    fn moments_independent_of_worker_count() {
+        // The fixture contract: pooled generation reproduces serial bits.
+        let ts = uniform_grid(6, 1.0);
+        let opts = SdeOptions {
+            rtol: 1e-3,
+            atol: 1e-3,
+            ..Default::default()
+        };
+        let mk = |workers: usize| {
+            sde_ensemble_moments(
+                &problems::spiral_sde_drift,
+                &problems::spiral_sde_diffusion,
+                &[1.0, 1.0],
+                &ts,
+                100,
+                1 ^ 0x5350_4952_414C,
+                &opts,
+                &EnsembleOptions {
+                    workers,
+                    ..Default::default()
+                },
+            )
+        };
+        let a = mk(1);
+        let b = mk(3);
+        assert_eq!(a.mu, b.mu);
+        assert_eq!(a.var, b.var);
     }
 }

@@ -1,0 +1,106 @@
+//! Shared step-size controller: the white-boxed heuristics every adaptive
+//! solver in this suite steers by.
+//!
+//! Before this module existed, `ode.rs` and `sde.rs` each carried their own
+//! copy of the SAFETY / MIN_FACTOR / MAX_FACTOR / PI_BETA constants and the
+//! Hairer error norm — two copies that could silently drift apart (and drift
+//! away from python/compile/norms.py, which both must mirror).  Everything
+//! tolerance- and controller-related now lives here, once.
+//!
+//! Semantics are bit-for-bit those of the seed solvers: Hairer RMS error
+//! norm over the tolerance-scaled embedded error (paper Eq. 5), PI
+//! controller gains (Eq. 6) with `alpha = 1/order - 0.75 * beta`, and the
+//! plain rejection backoff clamped to never grow the step.
+
+/// Step-shrink/grow safety factor (keep in sync with python/compile/norms.py).
+pub const SAFETY: f64 = 0.9;
+/// Hard lower clamp on any step-size change factor.
+pub const MIN_FACTOR: f64 = 0.2;
+/// Hard upper clamp on any step-size change factor.
+pub const MAX_FACTOR: f64 = 10.0;
+/// PI controller integral gain (Eq. 6).
+pub const PI_BETA: f64 = 0.04;
+/// Generic tiny guard against division by zero / degenerate spans.
+pub const EPS: f64 = 1e-12;
+
+/// Plain RMS norm with a denormal-safe floor (used for `E_j` and the
+/// Shampine stiffness ratio numerator/denominator).
+#[inline]
+pub fn rms(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
+}
+
+/// Hairer tolerance-scaled error ratio (paper Eq. 5): RMS of
+/// `e_i / (atol + max(|z0_i|, |z1_i|) * rtol)`.  `q <= 1` accepts the step.
+#[inline]
+pub fn error_ratio(e: &[f64], z0: &[f64], z1: &[f64], rtol: f64, atol: f64) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..e.len() {
+        let scale = atol + z0[i].abs().max(z1[i].abs()) * rtol;
+        let r = e[i] / scale;
+        acc += r * r;
+    }
+    (acc / e.len() as f64 + 1e-300).sqrt()
+}
+
+/// PI controller growth factor after an accepted step (paper Eq. 6):
+/// `SAFETY * q^-(1/order - 0.75 beta) * q_prev^beta`, clamped to
+/// [MIN_FACTOR, MAX_FACTOR].
+#[inline]
+pub fn pi_factor(q: f64, q_prev: f64, order: usize) -> f64 {
+    let alpha = 1.0 / order as f64 - 0.75 * PI_BETA;
+    let f = SAFETY * q.max(1e-10).powf(-alpha) * q_prev.max(1e-10).powf(PI_BETA);
+    f.clamp(MIN_FACTOR, MAX_FACTOR)
+}
+
+/// Shrink factor after a rejected step: `SAFETY * q^-(1/order)`, clamped to
+/// [MIN_FACTOR, 1] so a rejection can never grow the step.
+#[inline]
+pub fn reject_factor(q: f64, order: usize) -> f64 {
+    let alpha = 1.0 / order as f64;
+    (SAFETY * q.max(1e-10).powf(-alpha)).clamp(MIN_FACTOR, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rms_of_zeros_is_tiny_not_nan() {
+        let r = rms(&[0.0, 0.0, 0.0]);
+        assert!(r > 0.0 && r < 1e-100);
+    }
+
+    #[test]
+    fn error_ratio_scales_with_tolerance() {
+        let e = [1e-6, -1e-6];
+        let z = [1.0, 1.0];
+        let loose = error_ratio(&e, &z, &z, 1e-3, 1e-3);
+        let tight = error_ratio(&e, &z, &z, 1e-9, 1e-9);
+        assert!(loose < 1.0, "loose={loose}");
+        assert!(tight > 1.0, "tight={tight}");
+    }
+
+    #[test]
+    fn pi_factor_grows_on_small_error() {
+        // q far below 1 => grow, clamped at MAX_FACTOR.
+        assert_eq!(pi_factor(1e-10, 1.0, 5), MAX_FACTOR);
+        // q exactly at the accept boundary => shrink slightly (SAFETY).
+        let f = pi_factor(1.0, 1.0, 5);
+        assert!(f < 1.0 && f > 0.5, "f={f}");
+    }
+
+    #[test]
+    fn reject_factor_never_grows() {
+        for q in [1.0001, 2.0, 10.0, 1e6] {
+            let f = reject_factor(q, 5);
+            assert!((MIN_FACTOR..=1.0).contains(&f), "q={q} f={f}");
+        }
+    }
+
+    #[test]
+    fn factors_clamped_below() {
+        assert_eq!(pi_factor(1e12, 1.0, 5), MIN_FACTOR);
+        assert_eq!(reject_factor(1e12, 5), MIN_FACTOR);
+    }
+}

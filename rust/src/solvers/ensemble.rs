@@ -1,0 +1,403 @@
+//! Parallel ensemble integration: many independent trajectories, each with
+//! its own adaptive stepper, chunked across a [`ThreadPool`].
+//!
+//! This is the throughput layer behind the paper's ensemble workloads —
+//! the 10k-trajectory spiral DSDE moment fixtures (Eq. 15, Table 3) and
+//! multi-initial-condition solver benches — which the seed integrated
+//! strictly serially.  Three guarantees:
+//!
+//!  1. **Per-trajectory equivalence** — each trajectory runs the exact
+//!     single-trajectory solver ([`ode::solve`] / [`sde::sde_solve_saveat`]
+//!     semantics) with independent adaptive steps; an ensemble of N copies
+//!     is bit-identical to N independent solve calls.
+//!  2. **Schedule independence** — results do not depend on worker count
+//!     or thread timing: SDE trajectories draw from per-trajectory RNG
+//!     streams derived from `(seed, index)` up front, work is split into
+//!     fixed-size chunks, and chunk partials are merged in index order.
+//!     `workers = 1` and `workers = 8` produce identical bits.
+//!  3. **Bounded parallelism** — dispatch goes through the thread pool's
+//!     bounded map ([`map_bounded`]), so at most `workers` chunks are in
+//!     flight (10k trajectories never means 10k threads).
+
+use super::ode::{self, OdeOptions, SolveOutcome, Stats};
+use super::sde::{sde_solve_saveat, SdeOptions};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{chunk_ranges, default_workers, map_bounded};
+
+/// How an ensemble is scheduled (orthogonal to solver tolerances).
+#[derive(Clone, Debug)]
+pub struct EnsembleOptions {
+    /// Worker threads; `1` integrates serially on the calling thread.
+    pub workers: usize,
+    /// Trajectories per work item.  Fixed (not derived from `workers`) so
+    /// the chunk partial-merge order — and therefore every output bit —
+    /// is identical at any parallelism level.
+    pub chunk: usize,
+}
+
+impl Default for EnsembleOptions {
+    fn default() -> Self {
+        Self {
+            workers: default_workers(),
+            chunk: 32,
+        }
+    }
+}
+
+impl EnsembleOptions {
+    /// Serial schedule (reference semantics / baseline for benches).
+    pub fn serial() -> Self {
+        Self {
+            workers: 1,
+            ..Default::default()
+        }
+    }
+
+    /// Run `job` over every chunk of `0..n`, merging results in chunk
+    /// order regardless of how (or whether) chunks ran in parallel.
+    fn run_chunks<R: Send>(
+        &self,
+        n: usize,
+        job: impl Fn(std::ops::Range<usize>) -> R + Send + Sync,
+    ) -> Vec<R> {
+        map_bounded(self.workers, chunk_ranges(n, self.chunk), job)
+    }
+}
+
+/// Integrate one ODE from many initial conditions over `[t0, t1]`.
+///
+/// Outcomes are in input order; trajectory `i` is exactly
+/// `ode::solve(f, &z0s[i], t0, t1, opts)`.
+pub fn solve_ensemble<F>(
+    f: &F,
+    z0s: &[Vec<f64>],
+    t0: f64,
+    t1: f64,
+    opts: &OdeOptions,
+    eopts: &EnsembleOptions,
+) -> Vec<SolveOutcome>
+where
+    F: Fn(&[f64], f64, &mut [f64]) + Sync,
+{
+    let per_chunk = eopts.run_chunks(z0s.len(), |range| {
+        range
+            .map(|i| ode::solve(f, &z0s[i], t0, t1, opts))
+            .collect::<Vec<_>>()
+    });
+    per_chunk.into_iter().flatten().collect()
+}
+
+/// One SDE trajectory of an ensemble solve.
+#[derive(Clone, Debug)]
+pub struct SdeTrajectory {
+    /// Saved states at each `ts` entry (`[T][n]`).
+    pub states: Vec<Vec<f64>>,
+    pub stats: Stats,
+    pub success: bool,
+}
+
+/// Derive the RNG for trajectory `i`: a function of `(seed, i)` only, so
+/// streams are independent of scheduling and of each other.
+fn trajectory_rng(seed: u64, i: usize) -> Rng {
+    Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Integrate `n_traj` trajectories of a diagonal-noise SDE from a shared
+/// initial state, saving at each time in `ts`.
+///
+/// Trajectory `i` draws from its own deterministic stream (see
+/// [`trajectory_rng`] derivation); the result is identical for any
+/// `eopts.workers`.
+#[allow(clippy::too_many_arguments)]
+pub fn sde_solve_ensemble<F, G>(
+    drift: &F,
+    diffusion: &G,
+    z0: &[f64],
+    ts: &[f64],
+    n_traj: usize,
+    seed: u64,
+    opts: &SdeOptions,
+    eopts: &EnsembleOptions,
+) -> Vec<SdeTrajectory>
+where
+    F: Fn(&[f64], f64, &mut [f64]) + Sync,
+    G: Fn(&[f64], f64, &mut [f64]) + Sync,
+{
+    let per_chunk = eopts.run_chunks(n_traj, |range| {
+        range
+            .map(|i| {
+                let mut rng = trajectory_rng(seed, i);
+                let (states, stats, success) =
+                    sde_solve_saveat(drift, diffusion, z0, ts, &mut rng, opts);
+                SdeTrajectory {
+                    states,
+                    stats,
+                    success,
+                }
+            })
+            .collect::<Vec<_>>()
+    });
+    per_chunk.into_iter().flatten().collect()
+}
+
+/// Streaming per-save-point first and second moments of an SDE ensemble.
+#[derive(Clone, Debug)]
+pub struct SdeMoments {
+    /// Mean, row-major `[T, n]`.
+    pub mu: Vec<f64>,
+    /// Population variance, row-major `[T, n]`.
+    pub var: Vec<f64>,
+    /// Merged solver statistics over the whole ensemble.
+    pub stats: Stats,
+    pub success: bool,
+}
+
+/// Like [`sde_solve_ensemble`] but folds each chunk into running
+/// sum / sum-of-squares accumulators instead of materializing every
+/// trajectory — O(T·n) memory for a 10k-trajectory ensemble.
+///
+/// Chunk partials are merged in chunk order, so the moments are
+/// bit-identical at any `eopts.workers`.
+#[allow(clippy::too_many_arguments)]
+pub fn sde_ensemble_moments<F, G>(
+    drift: &F,
+    diffusion: &G,
+    z0: &[f64],
+    ts: &[f64],
+    n_traj: usize,
+    seed: u64,
+    opts: &SdeOptions,
+    eopts: &EnsembleOptions,
+) -> SdeMoments
+where
+    F: Fn(&[f64], f64, &mut [f64]) + Sync,
+    G: Fn(&[f64], f64, &mut [f64]) + Sync,
+{
+    assert!(n_traj > 0, "need at least one trajectory");
+    let n = z0.len();
+    let t = ts.len();
+    let per_chunk = eopts.run_chunks(n_traj, |range| {
+        let mut sum = vec![0.0f64; t * n];
+        let mut sumsq = vec![0.0f64; t * n];
+        let mut stats = Stats::default();
+        let mut ok = true;
+        for i in range {
+            let mut rng = trajectory_rng(seed, i);
+            let (states, s, good) =
+                sde_solve_saveat(drift, diffusion, z0, ts, &mut rng, opts);
+            ok &= good;
+            stats.merge(&s);
+            for (k, zk) in states.iter().enumerate() {
+                for d in 0..n {
+                    sum[k * n + d] += zk[d];
+                    sumsq[k * n + d] += zk[d] * zk[d];
+                }
+            }
+        }
+        (sum, sumsq, stats, ok)
+    });
+
+    let mut sum = vec![0.0f64; t * n];
+    let mut sumsq = vec![0.0f64; t * n];
+    let mut stats = Stats::default();
+    let mut success = true;
+    for (s, sq, st, ok) in per_chunk {
+        for i in 0..t * n {
+            sum[i] += s[i];
+            sumsq[i] += sq[i];
+        }
+        stats.merge(&st);
+        success &= ok;
+    }
+    let inv = 1.0 / n_traj as f64;
+    let mu: Vec<f64> = sum.iter().map(|s| s * inv).collect();
+    let var: Vec<f64> = sumsq
+        .iter()
+        .zip(&sum)
+        .map(|(sq, s)| ((sq * inv) - (s * inv) * (s * inv)).max(0.0))
+        .collect();
+    SdeMoments {
+        mu,
+        var,
+        stats,
+        success,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::problems;
+
+    fn exp_decay(z: &[f64], _t: f64, dz: &mut [f64]) {
+        for i in 0..z.len() {
+            dz[i] = -z[i];
+        }
+    }
+
+    #[test]
+    fn ode_ensemble_matches_independent_solves() {
+        let opts = OdeOptions {
+            rtol: 1e-8,
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let z0s: Vec<Vec<f64>> = (0..37)
+            .map(|i| vec![1.0 + 0.1 * i as f64, -0.5 * i as f64])
+            .collect();
+        let eopts = EnsembleOptions {
+            workers: 3,
+            chunk: 4,
+        };
+        let ensemble = solve_ensemble(&exp_decay, &z0s, 0.0, 1.0, &opts, &eopts);
+        assert_eq!(ensemble.len(), z0s.len());
+        for (i, out) in ensemble.iter().enumerate() {
+            let solo = ode::solve(exp_decay, &z0s[i], 0.0, 1.0, &opts);
+            assert!(out.success);
+            assert_eq!(out.z, solo.z, "trajectory {i} state drifted");
+            assert_eq!(out.stats.nfe, solo.stats.nfe);
+            assert_eq!(out.stats.naccept, solo.stats.naccept);
+            assert_eq!(out.stats.nreject, solo.stats.nreject);
+        }
+    }
+
+    #[test]
+    fn sde_ensemble_is_schedule_independent() {
+        let ts = [0.0, 0.5, 1.0];
+        let opts = SdeOptions::default();
+        let serial = sde_solve_ensemble(
+            &problems::spiral_sde_drift,
+            &problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            50,
+            7,
+            &opts,
+            &EnsembleOptions {
+                workers: 1,
+                chunk: 8,
+            },
+        );
+        let pooled = sde_solve_ensemble(
+            &problems::spiral_sde_drift,
+            &problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            50,
+            7,
+            &opts,
+            &EnsembleOptions {
+                workers: 4,
+                chunk: 8,
+            },
+        );
+        assert_eq!(serial.len(), pooled.len());
+        for (a, b) in serial.iter().zip(&pooled) {
+            assert_eq!(a.states, b.states);
+            assert_eq!(a.stats.nfe, b.stats.nfe);
+        }
+    }
+
+    #[test]
+    fn sde_trajectories_differ_from_each_other() {
+        let ts = [0.0, 1.0];
+        let ens = sde_solve_ensemble(
+            &problems::spiral_sde_drift,
+            &problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            4,
+            3,
+            &SdeOptions::default(),
+            &EnsembleOptions::serial(),
+        );
+        assert_ne!(ens[0].states[1], ens[1].states[1], "streams not independent");
+    }
+
+    #[test]
+    fn moments_match_materialized_ensemble() {
+        let ts = [0.0, 0.5, 1.0];
+        let opts = SdeOptions::default();
+        let eopts = EnsembleOptions {
+            workers: 2,
+            chunk: 16,
+        };
+        let n_traj = 64;
+        let full = sde_solve_ensemble(
+            &problems::spiral_sde_drift,
+            &problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            n_traj,
+            11,
+            &opts,
+            &eopts,
+        );
+        let m = sde_ensemble_moments(
+            &problems::spiral_sde_drift,
+            &problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            n_traj,
+            11,
+            &opts,
+            &eopts,
+        );
+        assert!(m.success);
+        for k in 0..ts.len() {
+            for d in 0..2 {
+                let mean = full.iter().map(|tr| tr.states[k][d]).sum::<f64>()
+                    / n_traj as f64;
+                assert!(
+                    (m.mu[k * 2 + d] - mean).abs() < 1e-9,
+                    "mu mismatch at ({k},{d}): {} vs {mean}",
+                    m.mu[k * 2 + d]
+                );
+            }
+        }
+        // t=0: mean exactly z0, zero variance.
+        assert!((m.mu[0] - 1.0).abs() < 1e-12);
+        assert!(m.var[0] < 1e-12);
+        assert!(m.var[4] > m.var[0], "variance must grow from zero");
+        // Stats aggregate over all trajectories.
+        assert_eq!(
+            m.stats.nfe,
+            full.iter().map(|tr| tr.stats.nfe).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn moments_schedule_independent_bits() {
+        let ts = [0.0, 0.4, 0.8];
+        let mk = |workers| {
+            sde_ensemble_moments(
+                &problems::spiral_sde_drift,
+                &problems::spiral_sde_diffusion,
+                &[1.0, 1.0],
+                &ts,
+                48,
+                21,
+                &SdeOptions::default(),
+                &EnsembleOptions { workers, chunk: 8 },
+            )
+        };
+        let a = mk(1);
+        let b = mk(5);
+        assert_eq!(a.mu, b.mu);
+        assert_eq!(a.var, b.var);
+        assert_eq!(a.stats.nfe, b.stats.nfe);
+    }
+
+    #[test]
+    fn empty_ensemble_is_empty() {
+        let outs = solve_ensemble(
+            &exp_decay,
+            &[],
+            0.0,
+            1.0,
+            &OdeOptions::default(),
+            &EnsembleOptions::default(),
+        );
+        assert!(outs.is_empty());
+    }
+}

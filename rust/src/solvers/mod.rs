@@ -14,12 +14,24 @@
 //!     equivalence of the two implementations.
 //!  3. **Reference analytics** — stiffness estimation and NFE accounting
 //!     used by unit/property tests of the coordinator's heuristics.
+//!
+//! Structure (DESIGN.md §Perf): [`controller`] holds the step-size
+//! heuristics shared by the ODE and SDE steppers; [`ode`] / [`sde`] are
+//! the allocation-free single-trajectory cores; [`ensemble`] scales them
+//! to many trajectories across a thread pool with deterministic
+//! per-trajectory RNG streams.
 
+pub mod controller;
+pub mod ensemble;
 pub mod ode;
 pub mod problems;
 pub mod sde;
 pub mod tableau;
 
+pub use ensemble::{
+    sde_ensemble_moments, sde_solve_ensemble, solve_ensemble, EnsembleOptions, SdeMoments,
+    SdeTrajectory,
+};
 pub use ode::{solve, solve_saveat, OdeOptions, SolveOutcome, Stats};
 pub use sde::{sde_solve_saveat, SdeOptions};
 pub use tableau::Tableau;

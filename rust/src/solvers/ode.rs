@@ -7,15 +7,21 @@
 //! DiffEqFlux-style NFE accounting.  f64 state (data generation wants the
 //! extra precision; the JAX side is f32 — cross-validation tolerances
 //! account for that).
+//!
+//! ## Memory layout (DESIGN.md §Perf)
+//!
+//! The accept/reject loop is allocation-free: all solver scratch lives in
+//! one contiguous arena sized `(stages + 5) * n` at construction —
+//! RK stages as a flat row-major `[stages × n]` block (row 0 doubles as
+//! the FSAL stage), followed by the `zi` / `znew` / `err` / `g_x` / `g_y`
+//! working vectors.  Stage combination walks the stage block row-by-row
+//! (contiguous), the tableau is borrowed for the whole solve (never
+//! cloned), and the Shampine stiffness ratio is computed with scalar
+//! accumulators instead of scratch vectors.  Controller constants and the
+//! error norm are shared with the SDE solver via [`super::controller`].
 
+use super::controller::{error_ratio, pi_factor, reject_factor, rms, EPS};
 use super::tableau::Tableau;
-
-/// Controller constants — keep in sync with python/compile/norms.py.
-const SAFETY: f64 = 0.9;
-const MIN_FACTOR: f64 = 0.2;
-const MAX_FACTOR: f64 = 10.0;
-const PI_BETA: f64 = 0.04;
-const EPS: f64 = 1e-12;
 
 /// White-boxed solver statistics (paper Eq. 9/11 accumulators + counters).
 #[derive(Clone, Copy, Debug, Default)]
@@ -37,6 +43,16 @@ impl Stats {
         self.naccept += o.naccept;
         self.nreject += o.nreject;
     }
+
+    /// Total step attempts across the whole solve (accepted + rejected).
+    ///
+    /// Note that in [`solve_saveat`] the `max_steps` budget is *per save
+    /// segment*, so `attempts()` over a T-point grid may legitimately
+    /// exceed `max_steps` (up to `(T-1) * max_steps`); this accessor
+    /// surfaces the true total so callers can account for it.
+    pub fn attempts(&self) -> u64 {
+        self.naccept + self.nreject
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -44,6 +60,10 @@ pub struct OdeOptions {
     pub tableau: Tableau,
     pub rtol: f64,
     pub atol: f64,
+    /// Step-attempt budget **per integration segment**: [`solve`] has one
+    /// segment, [`solve_saveat`] has one per save interval (a 100-point
+    /// grid gets up to 99 × `max_steps` attempts in total — see
+    /// [`Stats::attempts`] for the realized count).
     pub max_steps: u64,
     pub dt0: Option<f64>,
 }
@@ -69,149 +89,142 @@ pub struct SolveOutcome {
     pub success: bool,
 }
 
-fn rms(v: &[f64]) -> f64 {
-    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
-}
-
-fn error_ratio(e: &[f64], z0: &[f64], z1: &[f64], rtol: f64, atol: f64) -> f64 {
-    let mut acc = 0.0;
-    for i in 0..e.len() {
-        let scale = atol + z0[i].abs().max(z1[i].abs()) * rtol;
-        let r = e[i] / scale;
-        acc += r * r;
-    }
-    (acc / e.len() as f64 + 1e-300).sqrt()
-}
-
-fn pi_factor(q: f64, q_prev: f64, order: usize) -> f64 {
-    let alpha = 1.0 / order as f64 - 0.75 * PI_BETA;
-    let f = SAFETY * q.max(1e-10).powf(-alpha) * q_prev.max(1e-10).powf(PI_BETA);
-    f.clamp(MIN_FACTOR, MAX_FACTOR)
-}
-
-fn reject_factor(q: f64, order: usize) -> f64 {
-    let alpha = 1.0 / order as f64;
-    (SAFETY * q.max(1e-10).powf(-alpha)).clamp(MIN_FACTOR, 1.0)
-}
-
 /// Internal stepping state threaded across segments in saveat solves.
+///
+/// All scratch lives in `arena` (see the module docs for the layout); the
+/// accept/reject loop performs zero heap allocation.
 struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
     f: F,
     tab: &'a Tableau,
     opts: &'a OdeOptions,
-    /// FSAL stage (f at the current (t, z)).
-    k1: Vec<f64>,
     h: f64,
     q_prev: f64,
     stats: Stats,
-    // scratch
-    ks: Vec<Vec<f64>>,
-    zi: Vec<f64>,
-    znew: Vec<f64>,
-    err: Vec<f64>,
+    /// Contiguous scratch: `[ks (stages × n) | zi | znew | err | g_x | g_y]`.
+    /// `ks` row 0 is the FSAL stage (f at the current `(t, z)`).
+    arena: Vec<f64>,
 }
 
 impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
     fn new(mut f: F, tab: &'a Tableau, opts: &'a OdeOptions, z0: &[f64], t0: f64, span: f64) -> Self {
         let n = z0.len();
-        let mut k1 = vec![0.0; n];
-        f(z0, t0, &mut k1);
+        let s = tab.stages();
+        let mut arena = vec![0.0; (s + 5) * n];
+        // FSAL seed: ks row 0 = f(z0, t0).
+        f(z0, t0, &mut arena[..n]);
         let h0 = opts
             .dt0
-            .unwrap_or_else(|| 0.01 * span / rms(&k1).max(1.0));
+            .unwrap_or_else(|| 0.01 * span / rms(&arena[..n]).max(1.0));
         Self {
             f,
             tab,
             opts,
-            k1,
             h: h0,
             q_prev: 1.0,
             stats: Stats {
                 nfe: 1,
                 ..Default::default()
             },
-            ks: vec![vec![0.0; n]; tab.stages()],
-            zi: vec![0.0; n],
-            znew: vec![0.0; n],
-            err: vec![0.0; n],
+            arena,
         }
     }
 
     /// Integrate from (t, z) to t1 in place.  Returns success.
-    fn advance(&mut self, z: &mut Vec<f64>, t: &mut f64, t1: f64, budget: u64) -> bool {
+    ///
+    /// A zero-length span is a successful no-op; a negative or non-finite
+    /// span is rejected as a failure rather than silently integrating
+    /// nothing (explicit RK with h > 0 cannot go backwards in time).
+    fn advance(&mut self, z: &mut [f64], t: &mut f64, t1: f64, budget: u64) -> bool {
+        let tol = 1e-12 * t1.abs().max(1.0);
+        if !t1.is_finite() || t1 < *t - tol {
+            return false;
+        }
         let s = self.tab.stages();
         let n = z.len();
+        // One borrow split per segment — no per-attempt bookkeeping.
+        let (ks, rest) = self.arena.split_at_mut(s * n);
+        let (zi, rest) = rest.split_at_mut(n);
+        let (znew, rest) = rest.split_at_mut(n);
+        let (err, rest) = rest.split_at_mut(n);
+        let (g_x, g_y) = rest.split_at_mut(n);
+        let (sx, sy) = self.tab.stiff_pair;
+
         let mut attempts = 0;
-        while *t < t1 - 1e-12 * t1.abs().max(1.0) {
+        while *t < t1 - tol {
             if attempts >= budget {
                 return false;
             }
             attempts += 1;
             let h = self.h.min(t1 - *t).max(EPS);
 
-            // Stage cascade (k1 via FSAL).
-            self.ks[0].copy_from_slice(&self.k1);
-            let (sx, sy) = self.tab.stiff_pair;
-            let mut g_x = vec![0.0; if sx == 0 { n } else { 0 }];
+            // Stage cascade (row 0 = k1 via FSAL, valid from init/accept).
             if sx == 0 {
                 g_x.copy_from_slice(z);
             }
-            let mut g_y = vec![0.0; n];
             for i in 1..s {
-                self.zi.copy_from_slice(z);
+                zi.copy_from_slice(z);
                 for (j, &aij) in self.tab.a[i].iter().enumerate() {
                     if aij != 0.0 {
+                        let kj = &ks[j * n..(j + 1) * n];
                         for d in 0..n {
-                            self.zi[d] += h * aij * self.ks[j][d];
+                            zi[d] += h * aij * kj[d];
                         }
                     }
                 }
                 if i == sx {
-                    g_x = self.zi.clone();
+                    g_x.copy_from_slice(zi);
                 }
                 if i == sy {
-                    g_y.copy_from_slice(&self.zi);
+                    g_y.copy_from_slice(zi);
                 }
                 let ti = *t + self.tab.c[i] * h;
-                let (before, after) = self.ks.split_at_mut(i);
-                let _ = before;
-                (self.f)(&self.zi, ti, &mut after[0]);
+                let (_, ki) = ks.split_at_mut(i * n);
+                (self.f)(zi, ti, &mut ki[..n]);
             }
             self.stats.nfe += self.tab.nfe_per_attempt() as u64;
 
-            // Combination + embedded error (paper Eq. 3).
-            for d in 0..n {
-                let mut acc_b = 0.0;
-                let mut acc_bt = 0.0;
-                for i in 0..s {
-                    acc_b += self.tab.b[i] * self.ks[i][d];
-                    acc_bt += self.tab.btilde[i] * self.ks[i][d];
+            // Combination + embedded error (paper Eq. 3): accumulate the
+            // weighted stage sums row-by-row over the contiguous block.
+            znew.fill(0.0);
+            err.fill(0.0);
+            for i in 0..s {
+                let (bi, bti) = (self.tab.b[i], self.tab.btilde[i]);
+                let ki = &ks[i * n..(i + 1) * n];
+                for d in 0..n {
+                    znew[d] += bi * ki[d];
+                    err[d] += bti * ki[d];
                 }
-                self.znew[d] = z[d] + h * acc_b;
-                self.err[d] = h * acc_bt;
+            }
+            for d in 0..n {
+                znew[d] = z[d] + h * znew[d];
+                err[d] *= h;
             }
 
-            let q = error_ratio(&self.err, z, &self.znew, self.opts.rtol, self.opts.atol);
-            let e_norm = rms(&self.err);
+            let q = error_ratio(err, z, znew, self.opts.rtol, self.opts.atol);
+            let e_norm = rms(err);
 
             if q <= 1.0 {
-                // Shampine stiffness ratio (paper Eq. 8).
-                let mut dnum = vec![0.0; n];
-                let mut dden = vec![0.0; n];
+                // Shampine stiffness ratio (paper Eq. 8) via scalar
+                // accumulators — same FP sequence as rms(dnum)/rms(dden).
+                let mut num = 0.0;
+                let mut den = 0.0;
                 for d in 0..n {
-                    dnum[d] = self.ks[sy][d] - self.ks[sx][d];
-                    dden[d] = g_y[d] - g_x[d];
+                    let dk = ks[sy * n + d] - ks[sx * n + d];
+                    let dg = g_y[d] - g_x[d];
+                    num += dk * dk;
+                    den += dg * dg;
                 }
-                let stiff = rms(&dnum) / (rms(&dden) + EPS);
+                let stiff = (num / n as f64 + 1e-300).sqrt()
+                    / ((den / n as f64 + 1e-300).sqrt() + EPS);
 
                 self.stats.r_e += e_norm * h.abs();
                 self.stats.r_e2 += e_norm * e_norm;
                 self.stats.r_s += stiff;
                 self.stats.naccept += 1;
                 *t += h;
-                std::mem::swap(z, &mut self.znew);
+                z.copy_from_slice(znew);
                 // FSAL: last stage is f at the accepted point.
-                self.k1.copy_from_slice(&self.ks[s - 1]);
+                ks.copy_within((s - 1) * n..s * n, 0);
                 self.h = h * pi_factor(q, self.q_prev, self.tab.order);
                 self.q_prev = q.max(1e-4);
             } else {
@@ -224,6 +237,9 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
 }
 
 /// Adaptive solve over [t0, t1].  `f(z, t, dz)` writes the derivative.
+///
+/// `t1 <= t0` or non-finite endpoints yield `success = false` with the
+/// state unchanged.
 pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
     f: F,
     z0: &[f64],
@@ -231,8 +247,16 @@ pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
     t1: f64,
     opts: &OdeOptions,
 ) -> SolveOutcome {
-    let tab = opts.tableau.clone();
-    let mut stepper = Stepper::new(f, &tab, opts, z0, t0, t1 - t0);
+    if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
+        return SolveOutcome {
+            z: z0.to_vec(),
+            t: t0,
+            stats: Stats::default(),
+            success: false,
+        };
+    }
+    let tab = &opts.tableau;
+    let mut stepper = Stepper::new(f, tab, opts, z0, t0, t1 - t0);
     let mut z = z0.to_vec();
     let mut t = t0;
     let ok = stepper.advance(&mut z, &mut t, t1, opts.max_steps);
@@ -246,6 +270,10 @@ pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
 
 /// Adaptive solve saving the state at each time in `ts` (ts[0] = t0).
 /// Returns (states, outcome-with-final-state).
+///
+/// `ts` must be non-decreasing; `opts.max_steps` budgets each save
+/// *segment* independently (see [`OdeOptions::max_steps`] and
+/// [`Stats::attempts`]).
 pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
     f: F,
     z0: &[f64],
@@ -253,8 +281,12 @@ pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
     opts: &OdeOptions,
 ) -> (Vec<Vec<f64>>, SolveOutcome) {
     assert!(ts.len() >= 2, "need at least two save points");
-    let tab = opts.tableau.clone();
-    let mut stepper = Stepper::new(f, &tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
+    assert!(
+        ts.windows(2).all(|w| w[1] >= w[0]),
+        "save times must be non-decreasing"
+    );
+    let tab = &opts.tableau;
+    let mut stepper = Stepper::new(f, tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
     let mut z = z0.to_vec();
     let mut t = ts[0];
     let mut out = Vec::with_capacity(ts.len());
@@ -423,5 +455,39 @@ mod tests {
         let out = solve(f, &[1.0], 0.0, 1.0, &opts);
         assert!(out.success);
         assert!(out.stats.nreject > 0, "{:?}", out.stats);
+    }
+
+    #[test]
+    fn zero_and_negative_spans_fail_cleanly() {
+        let opts = OdeOptions::default();
+        for t1 in [0.0, -1.0, f64::NAN] {
+            let out = solve(exp_decay, &[1.0], 0.0, t1, &opts);
+            assert!(!out.success, "t1={t1} should not succeed");
+            assert_eq!(out.z, vec![1.0], "state must be untouched");
+            assert_eq!(out.stats.nfe, 0, "no dynamics evaluation");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn saveat_rejects_decreasing_grid() {
+        let _ = solve_saveat(exp_decay, &[1.0], &[0.0, 0.5, 0.4], &OdeOptions::default());
+    }
+
+    #[test]
+    fn attempts_counts_all_step_attempts() {
+        let f = |z: &[f64], t: f64, dz: &mut [f64]| {
+            dz[0] = if t < 0.5 { -z[0] } else { -50.0 * z[0] };
+        };
+        let opts = OdeOptions {
+            rtol: 1e-8,
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let out = solve(f, &[1.0], 0.0, 1.0, &opts);
+        assert_eq!(out.stats.attempts(), out.stats.naccept + out.stats.nreject);
+        assert!(out.stats.attempts() > out.stats.naccept);
+        // NFE bookkeeping: 1 init + nfe_per_attempt per attempt (FSAL Tsit5).
+        assert_eq!(out.stats.nfe, 1 + 6 * out.stats.attempts());
     }
 }

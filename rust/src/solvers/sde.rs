@@ -5,20 +5,28 @@
 //! Brownian-bridge rejection handling (RSwM-lite, DESIGN.md §4).  Used to
 //! generate the ground-truth spiral DSDE ensembles (paper Eq. 15) that the
 //! Neural SDE experiments fit, and as the reference for SDE solver tests.
+//!
+//! Controller constants and the Hairer error norm are shared with the ODE
+//! solver via [`super::controller`] (the embedded pair is order 1, so the
+//! PI exponent is `1 - 0.75 * beta`).  All solver scratch — the four
+//! drift/diffusion evaluations, the Euler-Maruyama and Heun states, the
+//! embedded error, the Brownian increment and the RSwM pending increment —
+//! is preallocated in [`SdeStepper::new`]; the accept/reject loop performs
+//! zero heap allocation (DESIGN.md §Perf).
 
+use super::controller::{error_ratio, pi_factor, reject_factor, rms, EPS};
 use super::ode::Stats;
 use crate::util::rng::Rng;
 
-const SAFETY: f64 = 0.9;
-const MIN_FACTOR: f64 = 0.2;
-const MAX_FACTOR: f64 = 10.0;
-const PI_BETA: f64 = 0.04;
-const EPS: f64 = 1e-12;
+/// Embedded-pair order of the stochastic Heun scheme (controller exponent).
+const ORDER: usize = 1;
 
 #[derive(Clone, Debug)]
 pub struct SdeOptions {
     pub rtol: f64,
     pub atol: f64,
+    /// Step-attempt budget **per save segment** (same contract as
+    /// [`super::ode::OdeOptions::max_steps`]).
     pub max_steps: u64,
     pub dt0: Option<f64>,
 }
@@ -34,27 +42,157 @@ impl Default for SdeOptions {
     }
 }
 
-fn rms(v: &[f64]) -> f64 {
-    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
+/// Allocation-free stepping state for one SDE trajectory.
+///
+/// Scratch layout mirrors the ODE stepper: one contiguous arena holding
+/// `[f1 | g1 | f2 | g2 | z_em | z_heun | err | dw | w_pend]` (9 × n).
+struct SdeStepper<'a, F, G>
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    G: FnMut(&[f64], f64, &mut [f64]),
+{
+    drift: F,
+    diffusion: G,
+    opts: &'a SdeOptions,
+    h: f64,
+    q_prev: f64,
+    /// RSwM-lite pending Brownian interval length.
+    h_pend: f64,
+    stats: Stats,
+    arena: Vec<f64>,
 }
 
-fn error_ratio(e: &[f64], z0: &[f64], z1: &[f64], rtol: f64, atol: f64) -> f64 {
-    let mut acc = 0.0;
-    for i in 0..e.len() {
-        let scale = atol + z0[i].abs().max(z1[i].abs()) * rtol;
-        let r = e[i] / scale;
-        acc += r * r;
+impl<'a, F, G> SdeStepper<'a, F, G>
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    G: FnMut(&[f64], f64, &mut [f64]),
+{
+    fn new(drift: F, diffusion: G, n: usize, span: f64, opts: &'a SdeOptions) -> Self {
+        Self {
+            drift,
+            diffusion,
+            opts,
+            h: opts.dt0.unwrap_or(0.01 * span),
+            q_prev: 1.0,
+            h_pend: 0.0,
+            stats: Stats::default(),
+            arena: vec![0.0; 9 * n],
+        }
     }
-    (acc / e.len() as f64 + 1e-300).sqrt()
+
+    /// Integrate from (t, z) to t_hi in place.  Returns success.
+    fn advance(&mut self, z: &mut [f64], t: &mut f64, t_hi: f64, rng: &mut Rng) -> bool {
+        let n = z.len();
+        let tol = 1e-12 * t_hi.abs().max(1.0);
+        if !t_hi.is_finite() || t_hi < *t - tol {
+            return false;
+        }
+        let (f1, rest) = self.arena.split_at_mut(n);
+        let (g1, rest) = rest.split_at_mut(n);
+        let (f2, rest) = rest.split_at_mut(n);
+        let (g2, rest) = rest.split_at_mut(n);
+        let (z_em, rest) = rest.split_at_mut(n);
+        let (z_heun, rest) = rest.split_at_mut(n);
+        let (err, rest) = rest.split_at_mut(n);
+        let (dw, w_pend) = rest.split_at_mut(n);
+
+        let mut attempts = 0u64;
+        while *t < t_hi - tol {
+            if attempts >= self.opts.max_steps {
+                return false;
+            }
+            attempts += 1;
+            let h_eff = self.h.min(t_hi - *t).max(EPS);
+
+            // Brownian increment: bridge into or extend the pending one.
+            if h_eff < self.h_pend {
+                let frac = h_eff / self.h_pend;
+                let var = (h_eff * (self.h_pend - h_eff) / self.h_pend).max(0.0);
+                for d in 0..n {
+                    dw[d] = frac * w_pend[d] + var.sqrt() * rng.normal();
+                }
+            } else {
+                let extra = (h_eff - self.h_pend).max(0.0);
+                for d in 0..n {
+                    dw[d] = w_pend[d] + extra.sqrt() * rng.normal();
+                }
+            }
+
+            // Heun pair (python sde_solver._heun_attempt).
+            (self.drift)(z, *t, f1);
+            (self.diffusion)(z, *t, g1);
+            for d in 0..n {
+                z_em[d] = z[d] + h_eff * f1[d] + g1[d] * dw[d];
+            }
+            (self.drift)(z_em, *t + h_eff, f2);
+            (self.diffusion)(z_em, *t + h_eff, g2);
+            for d in 0..n {
+                z_heun[d] =
+                    z[d] + 0.5 * h_eff * (f1[d] + f2[d]) + 0.5 * dw[d] * (g1[d] + g2[d]);
+                err[d] = z_heun[d] - z_em[d];
+            }
+            self.stats.nfe += 4;
+
+            let q = error_ratio(err, z, z_heun, self.opts.rtol, self.opts.atol);
+            if q <= 1.0 {
+                let e_norm = rms(err);
+                // Drift-based stiffness surrogate via scalar accumulators
+                // (same FP sequence as rms(f2-f1)/rms(z_em-z)).
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for d in 0..n {
+                    let df = f2[d] - f1[d];
+                    let dz = z_em[d] - z[d];
+                    num += df * df;
+                    den += dz * dz;
+                }
+                self.stats.r_e += e_norm * h_eff;
+                self.stats.r_e2 += e_norm * e_norm;
+                self.stats.r_s += (num / n as f64 + 1e-300).sqrt()
+                    / ((den / n as f64 + 1e-300).sqrt() + EPS);
+                self.stats.naccept += 1;
+                *t += h_eff;
+                z.copy_from_slice(z_heun);
+                self.h = h_eff * pi_factor(q, self.q_prev, ORDER);
+                self.q_prev = q.max(1e-4);
+                // RSwM: the unused tail of the pending increment stays
+                // pending (discarding it would truncate the dW distribution
+                // — acceptance is conditioned on |dW|, so dropped tails bias
+                // every moment of the solution).
+                if h_eff < self.h_pend {
+                    self.h_pend -= h_eff;
+                    for d in 0..n {
+                        w_pend[d] -= dw[d];
+                    }
+                } else {
+                    self.h_pend = 0.0;
+                    w_pend.fill(0.0);
+                }
+            } else {
+                self.stats.nreject += 1;
+                // RSwM: keep the *whole* pending increment; the retry at
+                // smaller h re-bridges into the same total.  If this attempt
+                // extended past the pending interval, the extension becomes
+                // the new pending total.
+                if h_eff >= self.h_pend {
+                    self.h_pend = h_eff;
+                    w_pend.copy_from_slice(dw);
+                }
+                self.h = h_eff * reject_factor(q, ORDER);
+            }
+        }
+        true
+    }
 }
 
 /// Adaptive diagonal-noise SDE solve saving at each time in `ts`.
 ///
 /// `drift(z, t, out)` / `diffusion(z, t, out)` write their values; noise is
-/// driven by `rng`.  Returns (saved states, final stats, success).
+/// driven by `rng`.  Returns (saved states, final stats, success).  `ts`
+/// must be non-decreasing; `opts.max_steps` budgets each save segment.
 pub fn sde_solve_saveat<F, G>(
-    mut drift: F,
-    mut diffusion: G,
+    drift: F,
+    diffusion: G,
     z0: &[f64],
     ts: &[f64],
     rng: &mut Rng,
@@ -65,119 +203,26 @@ where
     G: FnMut(&[f64], f64, &mut [f64]),
 {
     assert!(ts.len() >= 2);
+    assert!(
+        ts.windows(2).all(|w| w[1] >= w[0]),
+        "save times must be non-decreasing"
+    );
     let n = z0.len();
+    let span = ts[ts.len() - 1] - ts[0];
+    let mut stepper = SdeStepper::new(drift, diffusion, n, span, opts);
     let mut z = z0.to_vec();
-    let mut stats = Stats::default();
     let mut success = true;
-
-    let mut h = opts.dt0.unwrap_or(0.01 * (ts[ts.len() - 1] - ts[0]));
-    let mut q_prev: f64 = 1.0;
-    // RSwM-lite pending increment.
-    let mut h_pend = 0.0f64;
-    let mut w_pend = vec![0.0; n];
-
-    let mut f1 = vec![0.0; n];
-    let mut g1 = vec![0.0; n];
-    let mut f2 = vec![0.0; n];
-    let mut g2 = vec![0.0; n];
-    let mut z_em = vec![0.0; n];
-    let mut z_heun = vec![0.0; n];
-    let mut err = vec![0.0; n];
-    let mut dw = vec![0.0; n];
-
     let mut out = Vec::with_capacity(ts.len());
     out.push(z.clone());
-
     for seg in 1..ts.len() {
-        let t_hi = ts[seg];
+        // Seed semantics: each segment starts exactly at its grid time
+        // (not at the last accepted step's floating-point sum), so stage
+        // times and Brownian bridging are ulp-identical to the seed.
         let mut t = ts[seg - 1];
-        let mut attempts = 0u64;
-        while t < t_hi - 1e-12 * t_hi.abs().max(1.0) {
-            if attempts >= opts.max_steps {
-                success = false;
-                break;
-            }
-            attempts += 1;
-            let h_eff = h.min(t_hi - t).max(EPS);
-
-            // Brownian increment: bridge into or extend the pending one.
-            if h_eff < h_pend {
-                let frac = h_eff / h_pend;
-                let var = (h_eff * (h_pend - h_eff) / h_pend).max(0.0);
-                for d in 0..n {
-                    dw[d] = frac * w_pend[d] + var.sqrt() * rng.normal();
-                }
-            } else {
-                let extra = (h_eff - h_pend).max(0.0);
-                for d in 0..n {
-                    dw[d] = w_pend[d] + extra.sqrt() * rng.normal();
-                }
-            }
-
-            // Heun pair (python sde_solver._heun_attempt).
-            drift(&z, t, &mut f1);
-            diffusion(&z, t, &mut g1);
-            for d in 0..n {
-                z_em[d] = z[d] + h_eff * f1[d] + g1[d] * dw[d];
-            }
-            drift(&z_em, t + h_eff, &mut f2);
-            diffusion(&z_em, t + h_eff, &mut g2);
-            for d in 0..n {
-                z_heun[d] =
-                    z[d] + 0.5 * h_eff * (f1[d] + f2[d]) + 0.5 * dw[d] * (g1[d] + g2[d]);
-                err[d] = z_heun[d] - z_em[d];
-            }
-            stats.nfe += 4;
-
-            let q = error_ratio(&err, &z, &z_heun, opts.rtol, opts.atol);
-            if q <= 1.0 {
-                let e_norm = rms(&err);
-                let mut df = vec![0.0; n];
-                let mut dz = vec![0.0; n];
-                for d in 0..n {
-                    df[d] = f2[d] - f1[d];
-                    dz[d] = z_em[d] - z[d];
-                }
-                stats.r_e += e_norm * h_eff;
-                stats.r_e2 += e_norm * e_norm;
-                stats.r_s += rms(&df) / (rms(&dz) + EPS);
-                stats.naccept += 1;
-                t += h_eff;
-                z.copy_from_slice(&z_heun);
-                let alpha = 1.0 - 0.75 * PI_BETA;
-                h = h_eff
-                    * (SAFETY * q.max(1e-10).powf(-alpha) * q_prev.max(1e-10f64).powf(PI_BETA))
-                        .clamp(MIN_FACTOR, MAX_FACTOR);
-                q_prev = q.max(1e-4);
-                // RSwM: the unused tail of the pending increment stays
-                // pending (discarding it would truncate the dW distribution
-                // — acceptance is conditioned on |dW|, so dropped tails bias
-                // every moment of the solution).
-                if h_eff < h_pend {
-                    h_pend -= h_eff;
-                    for d in 0..n {
-                        w_pend[d] -= dw[d];
-                    }
-                } else {
-                    h_pend = 0.0;
-                    w_pend.iter_mut().for_each(|w| *w = 0.0);
-                }
-            } else {
-                stats.nreject += 1;
-                // RSwM: keep the *whole* pending increment; the retry at
-                // smaller h re-bridges into the same total.  If this attempt
-                // extended past the pending interval, the extension becomes
-                // the new pending total.
-                if h_eff >= h_pend {
-                    h_pend = h_eff;
-                    w_pend.copy_from_slice(&dw);
-                }
-                h = h_eff * (SAFETY * q.max(1e-10).powf(-1.0)).clamp(MIN_FACTOR, 1.0);
-            }
-        }
+        success &= stepper.advance(&mut z, &mut t, ts[seg], rng);
         out.push(z.clone());
     }
-    (out, stats, success)
+    (out, stepper.stats, success)
 }
 
 #[cfg(test)]
@@ -286,5 +331,20 @@ mod tests {
             &SdeOptions::default(),
         );
         assert_eq!(stats.nfe, 4 * (stats.naccept + stats.nreject));
+        assert_eq!(stats.attempts(), stats.naccept + stats.nreject);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn rejects_decreasing_grid() {
+        let mut rng = Rng::new(2);
+        let _ = sde_solve_saveat(
+            |z, _t, dz| dz[0] = -z[0],
+            |_z, _t, dg| dg[0] = 0.1,
+            &[1.0],
+            &[0.0, 0.6, 0.5],
+            &mut rng,
+            &SdeOptions::default(),
+        );
     }
 }

@@ -1,8 +1,9 @@
 //! Minimal scoped thread pool (offline substitute for rayon/tokio).
 //!
 //! Used by the coordinator to run independent replica trainings (different
-//! seeds / methods) in parallel and by the data pipeline to overlap batch
-//! synthesis with device execution.
+//! seeds / methods) in parallel, by the data pipeline to overlap batch
+//! synthesis with device execution, and by the solver ensemble layer
+//! (`solvers::ensemble`) to integrate many trajectories concurrently.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -42,6 +43,11 @@ impl ThreadPool {
         }
     }
 
+    /// Configured parallelism (the bound honored by [`ThreadPool::map`]).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
@@ -50,22 +56,91 @@ impl ThreadPool {
             .expect("workers alive");
     }
 
-    /// Run a closure over each item in parallel and collect results in
-    /// input order.  Panics in jobs are propagated.
+    /// Run a closure over each item with bounded parallelism and collect
+    /// results in input order.  Panics in jobs are propagated to the
+    /// caller.
+    ///
+    /// At most [`ThreadPool::size`] items are in flight at any instant —
+    /// mapping 10k items on a 4-worker pool uses 4 concurrent jobs, not
+    /// 10k threads.  Because `items` and `f` may borrow from the caller's
+    /// stack, the work cannot be shipped to the resident workers (their
+    /// job queue requires `'static`); instead `map` runs scoped helper
+    /// threads that drain a shared queue (see [`map_bounded`]), which
+    /// gives the same bounded parallelism with a plain borrowed closure.
     pub fn map<T, R>(&self, items: Vec<T>, f: impl Fn(T) -> R + Send + Sync) -> Vec<R>
     where
         T: Send,
         R: Send,
     {
-        thread::scope(|scope| {
-            let f = &f;
-            let handles: Vec<_> = items
-                .into_iter()
-                .map(|item| scope.spawn(move || f(item)))
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        })
+        map_bounded(self.size(), items, f)
     }
+}
+
+/// Free-function form of [`ThreadPool::map`] for callers that don't hold a
+/// long-lived pool: run `f` over each item with at most `parallelism`
+/// concurrent jobs, preserving input order and propagating panics.
+pub fn map_bounded<T, R>(
+    parallelism: usize,
+    items: Vec<T>,
+    f: impl Fn(T) -> R + Send + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n_items = items.len();
+    let helpers = parallelism.min(n_items);
+    if helpers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Shared pull-queue: each helper claims the next unprocessed item,
+    // so a slow item never stalls the rest of its "chunk".
+    let queue = Mutex::new(items.into_iter().enumerate());
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    thread::scope(|scope| {
+        let (f, queue) = (&f, &queue);
+        let handles: Vec<_> = (0..helpers)
+            .map(|_| {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    // Lock released before running f (guard is a temp).
+                    let next = queue.lock().unwrap().next();
+                    match next {
+                        Some((i, item)) => {
+                            if tx.send((i, f(item))).is_err() {
+                                break;
+                            }
+                        }
+                        None => break,
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        for h in handles {
+            if let Err(panic) = h.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+    });
+    let mut results: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
+    for (i, r) in rx.try_iter() {
+        results[i] = Some(r);
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("all jobs completed"))
+        .collect()
+}
+
+/// Deterministically split `0..n` into `chunk`-sized index ranges (the
+/// last may be short).  Shared by every chunked-map call site so stitch
+/// order never depends on the parallelism level.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<std::ops::Range<usize>> {
+    let c = chunk.max(1);
+    (0..n.div_ceil(c))
+        .map(|k| k * c..((k + 1) * c).min(n))
+        .collect()
 }
 
 impl Drop for ThreadPool {
@@ -115,5 +190,74 @@ mod tests {
         let pool = ThreadPool::new(0);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn map_concurrency_never_exceeds_pool_size() {
+        let pool = ThreadPool::new(4);
+        let in_flight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let out = pool.map((0..1000).collect(), |i: usize| {
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::yield_now();
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(out.len(), 1000);
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 4, "peak concurrency {peak} exceeds pool size 4");
+        assert!(peak >= 2, "expected some parallelism, saw {peak}");
+    }
+
+    #[test]
+    fn map_preserves_order_under_jitter() {
+        // Items finish out of order; results must still be in input order.
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..64).collect(), |i: usize| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            i * 3
+        });
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map((0..16).collect(), |i: usize| {
+            if i == 9 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn map_with_more_workers_than_items() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map(vec![10, 20], |x| x / 10);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn map_bounded_without_a_pool() {
+        let out = map_bounded(3, (0..50).collect(), |i: usize| i + 1);
+        assert_eq!(out, (1..51).collect::<Vec<_>>());
+        // parallelism 0/1 degrade to the serial path
+        assert_eq!(map_bounded(0, vec![5], |x: i32| x * 2), vec![10]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_order() {
+        let chunks = chunk_ranges(23, 7);
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks[0], 0..7);
+        assert_eq!(chunks[3], 21..23);
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 23);
+        assert!(chunk_ranges(0, 7).is_empty());
+        assert_eq!(chunk_ranges(3, 0), vec![0..1, 1..2, 2..3]); // clamps to 1
     }
 }

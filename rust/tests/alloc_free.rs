@@ -1,0 +1,143 @@
+//! Counting-allocator proof of the solver-core contract (DESIGN.md §Perf):
+//! the ODE and SDE accept/reject loops perform **zero heap allocation per
+//! step attempt** — allocation count per solve is a constant independent
+//! of how many steps the integration takes.
+//!
+//! This file is its own test binary so the `#[global_allocator]` hook
+//! cannot interfere with the rest of the suite, and it contains a single
+//! `#[test]` so no concurrent test allocates while we count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use regnde::solvers::ode::{solve, OdeOptions};
+use regnde::solvers::problems;
+use regnde::solvers::sde::{sde_solve_saveat, SdeOptions};
+use regnde::util::rng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::SeqCst);
+    f();
+    ALLOCS.load(Ordering::SeqCst) - before
+}
+
+#[test]
+fn step_loop_is_allocation_free() {
+    // ---- ODE ----------------------------------------------------------
+    let mk = |tol: f64| OdeOptions {
+        rtol: tol,
+        atol: tol,
+        ..Default::default()
+    };
+    // Warm-up (lazy runtime init, first-touch effects).
+    let _ = solve(problems::spiral_ode, &[2.0, 0.0], 0.0, 1.5, &mk(1e-6));
+
+    let mut steps = [0u64; 2];
+    let loose = count_allocs(|| {
+        let out = solve(problems::spiral_ode, &[2.0, 0.0], 0.0, 1.5, &mk(1e-3));
+        assert!(out.success);
+        steps[0] = out.stats.attempts();
+    });
+    let tight = count_allocs(|| {
+        let out = solve(problems::spiral_ode, &[2.0, 0.0], 0.0, 1.5, &mk(1e-9));
+        assert!(out.success);
+        steps[1] = out.stats.attempts();
+    });
+    assert!(
+        steps[1] > 4 * steps[0],
+        "tight solve must take far more steps ({} vs {})",
+        steps[1],
+        steps[0]
+    );
+    // Identical in practice; slack of 8 tolerates stray harness-thread
+    // allocations while still ruling out any per-step allocation (the step
+    // counts differ by hundreds).
+    assert!(
+        tight.abs_diff(loose) <= 8,
+        "ODE allocation count must not scale with step count \
+         ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
+        steps[0],
+        steps[1]
+    );
+
+    // ---- SDE ----------------------------------------------------------
+    let mk = |tol: f64| SdeOptions {
+        rtol: tol,
+        atol: tol,
+        ..Default::default()
+    };
+    let ts = [0.0, 1.0]; // 2 save points: constant save-side allocations
+    let mut rng = Rng::new(5);
+    let _ = sde_solve_saveat(
+        problems::spiral_sde_drift,
+        problems::spiral_sde_diffusion,
+        &[1.0, 1.0],
+        &ts,
+        &mut rng,
+        &mk(1e-2),
+    );
+
+    let mut steps = [0u64; 2];
+    let loose = count_allocs(|| {
+        let mut rng = Rng::new(6);
+        let (_, stats, ok) = sde_solve_saveat(
+            problems::spiral_sde_drift,
+            problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            &mut rng,
+            &mk(1e-1),
+        );
+        assert!(ok);
+        steps[0] = stats.attempts();
+    });
+    let tight = count_allocs(|| {
+        let mut rng = Rng::new(6);
+        let (_, stats, ok) = sde_solve_saveat(
+            problems::spiral_sde_drift,
+            problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &ts,
+            &mut rng,
+            &mk(1e-4),
+        );
+        assert!(ok);
+        steps[1] = stats.attempts();
+    });
+    assert!(
+        steps[1] > 4 * steps[0],
+        "tight SDE solve must take far more steps ({} vs {})",
+        steps[1],
+        steps[0]
+    );
+    assert!(
+        tight.abs_diff(loose) <= 8,
+        "SDE allocation count must not scale with step count \
+         ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
+        steps[0],
+        steps[1]
+    );
+}

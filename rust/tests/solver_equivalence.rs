@@ -1,0 +1,373 @@
+//! Refactor-equivalence suite: the allocation-free flat-arena stepper must
+//! reproduce the seed solver's semantics *exactly*.
+//!
+//! `seed_reference` below is a faithful transcription of the pre-refactor
+//! stepper (per-step `Vec<Vec<f64>>` stages, per-attempt scratch allocs,
+//! cloned tableau) — the behavioral contract the rewrite must preserve.
+//! Every accepted/rejected step takes the same branch with the same floats,
+//! so the counters must be identical and states must agree to <= 1e-12
+//! (they are in fact bit-identical; the tolerance guards against platform
+//! FMA differences only).
+
+use regnde::solvers::ode::{solve, solve_saveat, OdeOptions, Stats};
+use regnde::solvers::problems;
+use regnde::solvers::tableau::Tableau;
+use regnde::solvers::{solve_ensemble, EnsembleOptions};
+use regnde::util::propcheck;
+
+/// The seed (pre-refactor) stepper, kept verbatim as the reference.
+mod seed_reference {
+    use regnde::solvers::ode::{OdeOptions, Stats};
+    use regnde::solvers::tableau::Tableau;
+
+    const SAFETY: f64 = 0.9;
+    const MIN_FACTOR: f64 = 0.2;
+    const MAX_FACTOR: f64 = 10.0;
+    const PI_BETA: f64 = 0.04;
+    const EPS: f64 = 1e-12;
+
+    fn rms(v: &[f64]) -> f64 {
+        (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
+    }
+
+    fn error_ratio(e: &[f64], z0: &[f64], z1: &[f64], rtol: f64, atol: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..e.len() {
+            let scale = atol + z0[i].abs().max(z1[i].abs()) * rtol;
+            let r = e[i] / scale;
+            acc += r * r;
+        }
+        (acc / e.len() as f64 + 1e-300).sqrt()
+    }
+
+    fn pi_factor(q: f64, q_prev: f64, order: usize) -> f64 {
+        let alpha = 1.0 / order as f64 - 0.75 * PI_BETA;
+        let f = SAFETY * q.max(1e-10).powf(-alpha) * q_prev.max(1e-10).powf(PI_BETA);
+        f.clamp(MIN_FACTOR, MAX_FACTOR)
+    }
+
+    fn reject_factor(q: f64, order: usize) -> f64 {
+        let alpha = 1.0 / order as f64;
+        (SAFETY * q.max(1e-10).powf(-alpha)).clamp(MIN_FACTOR, 1.0)
+    }
+
+    struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
+        f: F,
+        tab: &'a Tableau,
+        opts: &'a OdeOptions,
+        k1: Vec<f64>,
+        h: f64,
+        q_prev: f64,
+        stats: Stats,
+        ks: Vec<Vec<f64>>,
+        zi: Vec<f64>,
+        znew: Vec<f64>,
+        err: Vec<f64>,
+    }
+
+    impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
+        fn new(
+            mut f: F,
+            tab: &'a Tableau,
+            opts: &'a OdeOptions,
+            z0: &[f64],
+            t0: f64,
+            span: f64,
+        ) -> Self {
+            let n = z0.len();
+            let mut k1 = vec![0.0; n];
+            f(z0, t0, &mut k1);
+            let h0 = opts.dt0.unwrap_or_else(|| 0.01 * span / rms(&k1).max(1.0));
+            Self {
+                f,
+                tab,
+                opts,
+                k1,
+                h: h0,
+                q_prev: 1.0,
+                stats: Stats {
+                    nfe: 1,
+                    ..Default::default()
+                },
+                ks: vec![vec![0.0; n]; tab.stages()],
+                zi: vec![0.0; n],
+                znew: vec![0.0; n],
+                err: vec![0.0; n],
+            }
+        }
+
+        fn advance(&mut self, z: &mut Vec<f64>, t: &mut f64, t1: f64, budget: u64) -> bool {
+            let s = self.tab.stages();
+            let n = z.len();
+            let mut attempts = 0;
+            while *t < t1 - 1e-12 * t1.abs().max(1.0) {
+                if attempts >= budget {
+                    return false;
+                }
+                attempts += 1;
+                let h = self.h.min(t1 - *t).max(EPS);
+
+                self.ks[0].copy_from_slice(&self.k1);
+                let (sx, sy) = self.tab.stiff_pair;
+                let mut g_x = vec![0.0; if sx == 0 { n } else { 0 }];
+                if sx == 0 {
+                    g_x.copy_from_slice(z);
+                }
+                let mut g_y = vec![0.0; n];
+                for i in 1..s {
+                    self.zi.copy_from_slice(z);
+                    for (j, &aij) in self.tab.a[i].iter().enumerate() {
+                        if aij != 0.0 {
+                            for d in 0..n {
+                                self.zi[d] += h * aij * self.ks[j][d];
+                            }
+                        }
+                    }
+                    if i == sx {
+                        g_x = self.zi.clone();
+                    }
+                    if i == sy {
+                        g_y.copy_from_slice(&self.zi);
+                    }
+                    let ti = *t + self.tab.c[i] * h;
+                    let (before, after) = self.ks.split_at_mut(i);
+                    let _ = before;
+                    (self.f)(&self.zi, ti, &mut after[0]);
+                }
+                self.stats.nfe += self.tab.nfe_per_attempt() as u64;
+
+                for d in 0..n {
+                    let mut acc_b = 0.0;
+                    let mut acc_bt = 0.0;
+                    for i in 0..s {
+                        acc_b += self.tab.b[i] * self.ks[i][d];
+                        acc_bt += self.tab.btilde[i] * self.ks[i][d];
+                    }
+                    self.znew[d] = z[d] + h * acc_b;
+                    self.err[d] = h * acc_bt;
+                }
+
+                let q = error_ratio(&self.err, z, &self.znew, self.opts.rtol, self.opts.atol);
+                let e_norm = rms(&self.err);
+
+                if q <= 1.0 {
+                    let mut dnum = vec![0.0; n];
+                    let mut dden = vec![0.0; n];
+                    for d in 0..n {
+                        dnum[d] = self.ks[sy][d] - self.ks[sx][d];
+                        dden[d] = g_y[d] - g_x[d];
+                    }
+                    let stiff = rms(&dnum) / (rms(&dden) + EPS);
+
+                    self.stats.r_e += e_norm * h.abs();
+                    self.stats.r_e2 += e_norm * e_norm;
+                    self.stats.r_s += stiff;
+                    self.stats.naccept += 1;
+                    *t += h;
+                    std::mem::swap(z, &mut self.znew);
+                    self.k1.copy_from_slice(&self.ks[s - 1]);
+                    self.h = h * pi_factor(q, self.q_prev, self.tab.order);
+                    self.q_prev = q.max(1e-4);
+                } else {
+                    self.stats.nreject += 1;
+                    self.h = h * reject_factor(q, self.tab.order);
+                }
+            }
+            true
+        }
+    }
+
+    pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
+        f: F,
+        z0: &[f64],
+        t0: f64,
+        t1: f64,
+        opts: &OdeOptions,
+    ) -> (Vec<f64>, Stats, bool) {
+        let tab = opts.tableau.clone();
+        let mut stepper = Stepper::new(f, &tab, opts, z0, t0, t1 - t0);
+        let mut z = z0.to_vec();
+        let mut t = t0;
+        let ok = stepper.advance(&mut z, &mut t, t1, opts.max_steps);
+        (z, stepper.stats, ok)
+    }
+
+    pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
+        f: F,
+        z0: &[f64],
+        ts: &[f64],
+        opts: &OdeOptions,
+    ) -> (Vec<Vec<f64>>, Stats, bool) {
+        let tab = opts.tableau.clone();
+        let mut stepper = Stepper::new(f, &tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
+        let mut z = z0.to_vec();
+        let mut t = ts[0];
+        let mut out = Vec::with_capacity(ts.len());
+        out.push(z.clone());
+        let mut ok = true;
+        for &t_hi in &ts[1..] {
+            ok &= stepper.advance(&mut z, &mut t, t_hi, opts.max_steps);
+            out.push(z.clone());
+        }
+        (out, stepper.stats, ok)
+    }
+}
+
+fn assert_stats_equal(new: &Stats, old: &Stats, what: &str) {
+    assert_eq!(new.nfe, old.nfe, "{what}: nfe");
+    assert_eq!(new.naccept, old.naccept, "{what}: naccept");
+    assert_eq!(new.nreject, old.nreject, "{what}: nreject");
+    assert!(
+        (new.r_e - old.r_e).abs() <= 1e-12 * (1.0 + old.r_e.abs()),
+        "{what}: r_e {} vs {}",
+        new.r_e,
+        old.r_e
+    );
+    assert!(
+        (new.r_s - old.r_s).abs() <= 1e-12 * (1.0 + old.r_s.abs()),
+        "{what}: r_s {} vs {}",
+        new.r_s,
+        old.r_s
+    );
+}
+
+fn check_solve_case(
+    name: &str,
+    f: impl Fn(&[f64], f64, &mut [f64]) + Copy,
+    z0: &[f64],
+    t1: f64,
+    tableau: Tableau,
+    tol: f64,
+) {
+    let opts = OdeOptions {
+        tableau,
+        rtol: tol,
+        atol: tol,
+        max_steps: 2_000_000,
+        ..Default::default()
+    };
+    let new = solve(f, z0, 0.0, t1, &opts);
+    let (z_old, stats_old, ok_old) = seed_reference::solve(f, z0, 0.0, t1, &opts);
+    assert!(new.success && ok_old, "{name}: solve failed");
+    assert_stats_equal(&new.stats, &stats_old, name);
+    for d in 0..z0.len() {
+        assert!(
+            (new.z[d] - z_old[d]).abs() <= 1e-12 * (1.0 + z_old[d].abs()),
+            "{name} dim {d}: {} vs {}",
+            new.z[d],
+            z_old[d]
+        );
+    }
+}
+
+#[test]
+fn spiral_matches_seed_semantics() {
+    for tol in [1e-4, 1e-6, 1e-8] {
+        check_solve_case(
+            "spiral/tsit5",
+            problems::spiral_ode,
+            &[2.0, 0.0],
+            1.5,
+            Tableau::tsit5(),
+            tol,
+        );
+        check_solve_case(
+            "spiral/dopri5",
+            problems::spiral_ode,
+            &[2.0, 0.0],
+            1.5,
+            Tableau::dopri5(),
+            tol,
+        );
+    }
+}
+
+#[test]
+fn van_der_pol_matches_seed_semantics() {
+    // Moderately stiff: exercises the reject branch and the Shampine pair.
+    let f = |z: &[f64], _t: f64, dz: &mut [f64]| {
+        let mu = 5.0;
+        dz[0] = z[1];
+        dz[1] = mu * ((1.0 - z[0] * z[0]) * z[1]) - z[0];
+    };
+    for tol in [1e-5, 1e-7] {
+        check_solve_case("vdp/tsit5", f, &[2.0, 0.0], 5.0, Tableau::tsit5(), tol);
+    }
+    // bs3 exercises the sx == 0 stiffness-pair path.
+    check_solve_case("vdp/bs3", f, &[2.0, 0.0], 5.0, Tableau::bs3(), 1e-5);
+}
+
+#[test]
+fn exp_decay_matches_seed_semantics() {
+    let f = |z: &[f64], _t: f64, dz: &mut [f64]| {
+        for i in 0..z.len() {
+            dz[i] = -z[i];
+        }
+    };
+    for tol in [1e-3, 1e-6, 1e-9] {
+        check_solve_case("exp/tsit5", f, &[1.0, 2.0, -0.5], 1.0, Tableau::tsit5(), tol);
+    }
+}
+
+#[test]
+fn saveat_matches_seed_semantics() {
+    let ts: Vec<f64> = (0..30).map(|i| 1.5 * i as f64 / 29.0).collect();
+    let opts = OdeOptions {
+        rtol: 1e-6,
+        atol: 1e-6,
+        ..Default::default()
+    };
+    let (zs_new, out) = solve_saveat(problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+    let (zs_old, stats_old, ok_old) =
+        seed_reference::solve_saveat(problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+    assert!(out.success && ok_old);
+    assert_stats_equal(&out.stats, &stats_old, "saveat");
+    for (k, (a, b)) in zs_new.iter().zip(&zs_old).enumerate() {
+        for d in 0..2 {
+            assert!(
+                (a[d] - b[d]).abs() <= 1e-12 * (1.0 + b[d].abs()),
+                "saveat point {k} dim {d}: {} vs {}",
+                a[d],
+                b[d]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_ensemble_of_copies_matches_independent_solves() {
+    propcheck::check("ensemble == N independent solves", 25, |g| {
+        let dim = g.usize_in(1, 4);
+        let n_copies = g.usize_in(2, 12);
+        let z0: Vec<f64> = g.vec_f64(dim, -2.0, 2.0);
+        let lambda = g.f64_in(0.2, 3.0);
+        let t1 = g.f64_in(0.4, 2.0);
+        let f = move |z: &[f64], _t: f64, dz: &mut [f64]| {
+            for i in 0..z.len() {
+                dz[i] = -lambda * z[i] + 0.1 * z[i] * z[i] * z[i].sin();
+            }
+        };
+        let opts = OdeOptions {
+            rtol: 1e-6,
+            atol: 1e-6,
+            ..Default::default()
+        };
+        let z0s: Vec<Vec<f64>> = (0..n_copies).map(|_| z0.clone()).collect();
+        let eopts = EnsembleOptions {
+            workers: g.usize_in(1, 4),
+            chunk: g.usize_in(1, 5),
+        };
+        let ensemble = solve_ensemble(&f, &z0s, 0.0, t1, &opts, &eopts);
+        let solo = solve(f, &z0, 0.0, t1, &opts);
+        for (i, out) in ensemble.iter().enumerate() {
+            propcheck::ensure(
+                out.z == solo.z
+                    && out.stats.nfe == solo.stats.nfe
+                    && out.stats.naccept == solo.stats.naccept
+                    && out.stats.nreject == solo.stats.nreject,
+                format!("copy {i} diverged from independent solve"),
+            )?;
+        }
+        Ok(())
+    });
+}
