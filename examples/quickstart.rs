@@ -1,22 +1,25 @@
-//! Quickstart: load the artifact manifest, run one regularized vs one
-//! unregularized training run on the spiral Neural ODE, and print the
-//! white-boxed solver statistics the paper is built on.
+//! Quickstart: train one regularized vs one unregularized spiral Neural
+//! ODE on the **native backend** — pure Rust, no artifacts, no XLA — and
+//! print the white-boxed solver statistics the paper is built on.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! (Set `REGNDE_BACKEND=pjrt` with `--features pjrt` + compiled artifacts
+//! to run the same comparison through the AOT engine.)
 
 use regnde::coordinator::experiments::{run_by_name, TrainOpts};
 use regnde::coordinator::Method;
-use regnde::runtime::Engine;
+use regnde::runtime::{backend_from_env, Backend};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::new(regnde::default_artifacts_dir())?;
-    println!("PJRT platform: {}", engine.platform());
+    let backend = backend_from_env(&regnde::default_artifacts_dir())?;
+    println!("backend: {}", backend.name());
+    let info = backend.model("spiral_node")?;
     println!(
-        "manifest: {} artifacts, {} models\n",
-        engine.manifest.artifacts.len(),
-        engine.manifest.models.len()
+        "spiral_node: {} params, {} opt-state floats ({})\n",
+        info.params_size, info.opt_state_size, info.optimizer
     );
 
     let opts = TrainOpts {
@@ -27,11 +30,11 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("--- Vanilla Neural ODE (spiral, Fig. 2 setting) ---");
-    let vanilla = run_by_name(&engine, "spiral-node", Method::VANILLA, opts)?;
+    let vanilla = run_by_name(backend.as_ref(), "spiral-node", Method::VANILLA, opts)?;
 
     println!("\n--- ERNODE + SRNODE (error + stiffness regularized) ---");
     let reg = run_by_name(
-        &engine,
+        backend.as_ref(),
         "spiral-node",
         Method::parse("srnode+ernode")?,
         opts,

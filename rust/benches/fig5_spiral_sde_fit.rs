@@ -3,17 +3,12 @@
 use regnde::bench::{run_grid, BenchConfig};
 use regnde::coordinator::experiments::spiral_nsde;
 use regnde::coordinator::Method;
-use regnde::runtime::Engine;
 
 fn main() {
     let cfg = BenchConfig::from_env(2, 15);
     let methods = ["vanilla", "ernsde"].map(|m| Method::parse(m).unwrap());
     let grid = run_grid("spiral-nsde", &methods, &cfg).expect("bench failed");
 
-    // Re-train quickly to get final params for the ensemble plot? The runs
-    // recorded summary stats; for the band we run one fresh predict with the
-    // last run's seed ensemble through the engine.
-    let engine = Engine::new(regnde::default_artifacts_dir()).unwrap();
     let (_, mu, var, _) = spiral_nsde::ground_truth(0);
     println!("Figure 5 — data moments vs fitted-model GMM loss\n");
     println!("ground-truth moment band (native Rust SDE ensemble):");
@@ -39,6 +34,5 @@ fn main() {
             nfe.std
         );
     }
-    let _ = engine; // engine retained for symmetric API with other figs
     println!("\npaper shape: regularization keeps the moment fit with fewer NFE");
 }

@@ -13,7 +13,7 @@ use anyhow::Result;
 use crate::coordinator::experiments::{run_by_name, TrainOpts};
 use crate::coordinator::recorder::Recorder;
 use crate::coordinator::{Method, RunResult};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::util::stats::Summary;
 use crate::util::tablefmt::Table;
 
@@ -69,20 +69,17 @@ pub fn run_grid(
     methods: &[Method],
     cfg: &BenchConfig,
 ) -> Result<Vec<MethodRuns>> {
-    let engine = Engine::new(crate::default_artifacts_dir())?;
+    // Backend selected via REGNDE_BACKEND (default: native).
+    let backend = crate::runtime::backend_from_env(&crate::default_artifacts_dir())?;
     let recorder = Recorder::new(crate::default_runs_dir())?;
-    // Pre-compile every artifact of this experiment's model so the first
-    // method's train timer doesn't absorb PJRT JIT cost.
+    // Pre-compile every ladder rung of this experiment's model so the
+    // first method's train timer doesn't absorb PJRT JIT cost.
     let model = model_of(experiment);
-    let warm: Vec<String> = engine
-        .manifest
-        .artifacts
-        .values()
-        .filter(|a| a.model == model)
-        .map(|a| a.name.clone())
-        .collect();
-    for name in &warm {
-        engine.load(name)?;
+    if !model.is_empty() {
+        backend.warm(model, false)?;
+        if methods.iter().any(|m| m.taynode) {
+            backend.warm(model, true)?;
+        }
     }
     let mut out = Vec::new();
     for &method in methods {
@@ -94,7 +91,7 @@ pub fn run_grid(
                 seed,
                 verbose: false,
             };
-            let r = run_by_name(&engine, experiment, method, opts)?;
+            let r = run_by_name(backend.as_ref(), experiment, method, opts)?;
             eprintln!(
                 "  [{}] seed {seed}: train {:.1}s predict {:.4}s nfe {:.1}",
                 r.method, r.train_time_s, r.predict_time_s, r.predict_nfe

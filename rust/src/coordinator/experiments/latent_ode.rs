@@ -5,7 +5,7 @@
 //! TayNODE K=2 with coefficient 0.01, STEER = interior-grid perturbation.
 //! Testbed scale: synthetic vitals (physionet_synth), B=32, T=16.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::budget::BudgetRouter;
 use crate::coordinator::method::Method;
@@ -14,7 +14,7 @@ use crate::coordinator::schedule::{ExpAnneal, InvDecay, KlAnneal};
 use crate::coordinator::steer;
 use crate::data::{batcher::Batcher, physionet_synth};
 use crate::runtime::state::{Metrics, TrainState};
-use crate::runtime::{Engine, Input};
+use crate::runtime::{Backend, StepCoefs, TrainData};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -23,10 +23,9 @@ const BATCH: usize = 32;
 const T: usize = 16;
 const D: usize = physionet_synth::CHANNELS;
 
-pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
-    let spec = engine.manifest.model(MODEL)?.clone();
-    let h = &spec.hyper;
-    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let info = backend.model(MODEL)?;
+    let get = |k: &str| -> f64 { info.hyper.get(k).copied().unwrap_or(0.0) };
 
     let lr = InvDecay {
         lr0: get("lr"),
@@ -47,31 +46,16 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
     let train = physionet_synth::generate(n_train, T, opts.seed);
     let test = physionet_synth::generate(BATCH * 2, T, opts.seed ^ 0xDEAD);
 
-    let ladder: Vec<_> = engine
-        .manifest
-        .train_ladder(MODEL, method.taynode)
-        .into_iter()
-        .cloned()
-        .collect();
-    anyhow::ensure!(!ladder.is_empty(), "no train artifacts for {MODEL}");
-    let mut router = BudgetRouter::new(
-        ladder.iter().map(|a| a.budget.unwrap_or(usize::MAX)).collect(),
-    )?;
-
+    let mut router = BudgetRouter::new(backend.ladder(MODEL, method.taynode)?)?;
     let mut state = TrainState::new(
-        engine.init_params(MODEL, opts.seed as u32)?,
-        spec.opt_state_size,
+        backend.init_params(MODEL, opts.seed as u32)?,
+        info.opt_state_size,
     );
     let mut rng = Rng::new(opts.seed ^ 0x7EED);
     let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
 
     let sz = T * D;
-    // Pre-compile every rung + the predict artifact so the stopwatch
-    // measures steady-state training, not PJRT JIT.
-    for art in &ladder {
-        engine.load(&art.name)?;
-    }
-    engine.load(&format!("{MODEL}_predict"))?;
+    backend.warm(MODEL, method.taynode)?;
 
     let mut sw = Stopwatch::new();
     let mut epochs_out = Vec::with_capacity(opts.epochs);
@@ -90,40 +74,29 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             } else {
                 train.ts.clone()
             };
-            let lr_t = lr.at(state.iter) as f32;
-            let ce = coef_e.map_or(0.0, |a| a.at(epoch)) as f32;
-            let kl_t = kl.at(epoch) as f32;
-            let seed = rng.next_u32();
-            loop {
-                let art = &ladder[router.rung()];
-                let out = engine
-                    .run_spec(
-                        art,
-                        &[
-                            Input::F32(&state.params),
-                            Input::F32(&state.opt_state),
-                            Input::F32(&bx),
-                            Input::F32(&bm),
-                            Input::F32(&ts),
-                            Input::Scalar(lr_t),
-                            Input::Scalar(ce),
-                            Input::Scalar(coef_s as f32),
-                            Input::Scalar(coef_aux as f32),
-                            Input::Scalar(kl_t),
-                            Input::SeedU32(seed),
-                        ],
-                    )
-                    .with_context(|| format!("train step on {}", art.name))?;
-                let [params, opt_state, metrics]: [Vec<f32>; 3] =
-                    out.try_into().ok().context("train step arity")?;
-                let m = Metrics::decode(&metrics)?;
-                if router.observe(m.naccept + m.nreject, m.success) {
-                    continue;
-                }
-                state.update(params, opt_state)?;
-                acc.push(&m);
-                break;
-            }
+            let step = StepCoefs {
+                lr: lr.at(state.iter) as f32,
+                coef_e: coef_e.map_or(0.0, |a| a.at(epoch)) as f32,
+                coef_s: coef_s as f32,
+                coef_aux: coef_aux as f32,
+                kl: kl.at(epoch) as f32,
+                seed: rng.next_u32(),
+                ..Default::default()
+            };
+            let m = super::routed_step(
+                backend,
+                MODEL,
+                method.taynode,
+                &mut router,
+                &mut state,
+                &TrainData::Series {
+                    x: &bx,
+                    mask: &bm,
+                    ts: &ts,
+                },
+                &step,
+            )?;
+            acc.push(&m);
         }
         sw.stop();
         anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
@@ -142,7 +115,7 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
         epochs_out.push(rec);
     }
 
-    // Evaluation through the early-exiting predict artifact.
+    // Evaluation through the early-exiting predict path.
     let eval = |data: &physionet_synth::Dataset, batches: usize| -> Result<(Metrics, f64)> {
         let mut ms = Vec::new();
         let mut secs = Vec::new();
@@ -150,18 +123,18 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             let xs = &data.values[b * BATCH * sz..(b + 1) * BATCH * sz];
             let mk = &data.masks[b * BATCH * sz..(b + 1) * BATCH * sz];
             let t0 = std::time::Instant::now();
-            let out = engine.run(
-                &format!("{MODEL}_predict"),
-                &[
-                    Input::F32(&state.params),
-                    Input::F32(xs),
-                    Input::F32(mk),
-                    Input::F32(&data.ts),
-                    Input::SeedU32(12345),
-                ],
+            let (_, m) = backend.predict(
+                MODEL,
+                &state.params,
+                &TrainData::Series {
+                    x: xs,
+                    mask: mk,
+                    ts: &data.ts,
+                },
+                12345,
             )?;
             secs.push(t0.elapsed().as_secs_f64());
-            ms.push(Metrics::decode(&out[1])?);
+            ms.push(m);
         }
         let n = ms.len().max(1) as f64;
         Ok((
@@ -174,7 +147,6 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             secs.iter().sum::<f64>() / n,
         ))
     };
-    engine.load(&format!("{MODEL}_predict"))?;
     let (train_eval, _) = eval(&train, 2)?;
     let (test_eval, pred_s) = eval(&test, 2)?;
 

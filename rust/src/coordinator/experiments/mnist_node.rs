@@ -5,7 +5,7 @@
 //! with lambda = 3.02e-3.  This driver reproduces the grid at testbed scale
 //! (synthetic MNIST, B=32, epochs from `TrainOpts`).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::budget::BudgetRouter;
 use crate::coordinator::method::Method;
@@ -14,7 +14,7 @@ use crate::coordinator::schedule::{ExpAnneal, InvDecay};
 use crate::coordinator::steer::EndTimeSampler;
 use crate::data::{batcher::Batcher, mnist_synth};
 use crate::runtime::state::{Metrics, TrainState};
-use crate::runtime::{Engine, Input};
+use crate::runtime::{Backend, StepCoefs, TrainData};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -29,11 +29,11 @@ pub struct Coefficients {
     pub steer: Option<EndTimeSampler>,
 }
 
-/// Resolve the paper's coefficients for a method from the manifest hyper
+/// Resolve the paper's coefficients for a method from the backend's hyper
 /// block (shared with mnist_nsde where noted).
-pub fn coefficients(engine: &Engine, method: Method, epochs: usize) -> Result<Coefficients> {
-    let h = &engine.manifest.model(MODEL)?.hyper;
-    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+pub fn coefficients(backend: &dyn Backend, method: Method, epochs: usize) -> Result<Coefficients> {
+    let h = backend.model(MODEL)?.hyper;
+    let get = |k: &str| -> f64 { h.get(k).copied().unwrap_or(0.0) };
     Ok(Coefficients {
         lr: InvDecay {
             lr0: get("lr"),
@@ -53,9 +53,9 @@ pub fn coefficients(engine: &Engine, method: Method, epochs: usize) -> Result<Co
     })
 }
 
-pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
-    let spec = engine.manifest.model(MODEL)?.clone();
-    let coefs = coefficients(engine, method, opts.epochs)?;
+pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let info = backend.model(MODEL)?;
+    let coefs = coefficients(backend, method, opts.epochs)?;
 
     // Data: synthetic MNIST (DESIGN.md §4 substitution).
     let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);
@@ -64,29 +64,17 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
     let train_onehot = mnist_synth::one_hot(&train.labels);
     let test_onehot = mnist_synth::one_hot(&test.labels);
 
-    let ladder = engine.manifest.train_ladder(MODEL, method.taynode);
-    anyhow::ensure!(!ladder.is_empty(), "no train artifacts for {MODEL}");
-    let ladder_specs: Vec<_> = ladder.into_iter().cloned().collect();
-    let mut router = BudgetRouter::new(
-        ladder_specs
-            .iter()
-            .map(|a| a.budget.unwrap_or(usize::MAX))
-            .collect(),
-    )?;
-
+    let mut router = BudgetRouter::new(backend.ladder(MODEL, method.taynode)?)?;
     let mut state = TrainState::new(
-        engine.init_params(MODEL, opts.seed as u32)?,
-        spec.opt_state_size,
+        backend.init_params(MODEL, opts.seed as u32)?,
+        info.opt_state_size,
     );
     let mut rng = Rng::new(opts.seed ^ 0x7EED);
     let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
 
-    // Pre-compile every rung + the predict artifact so the stopwatch
-    // measures steady-state training, not PJRT JIT.
-    for art in &ladder_specs {
-        engine.load(&art.name)?;
-    }
-    engine.load(&format!("{MODEL}_predict"))?;
+    // Pre-compile every rung + the predict path so the stopwatch measures
+    // steady-state training, not PJRT JIT (native: no-op).
+    backend.warm(MODEL, method.taynode)?;
 
     let mut sw = Stopwatch::new();
     let mut epochs_out = Vec::with_capacity(opts.epochs);
@@ -100,45 +88,24 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             let idx = batcher.next_batch().to_vec();
             Batcher::gather(&train.images, mnist_synth::DIM, &idx, &mut bx);
             Batcher::gather(&train_onehot, mnist_synth::CLASSES, &idx, &mut by);
-            let lr = coefs.lr.at(state.iter) as f32;
-            let ce = coefs.coef_e.map_or(0.0, |a| a.at(epoch)) as f32;
-            let cs = coefs.coef_s as f32;
-            let caux = coefs.coef_aux as f32;
-            let t1 = coefs
-                .steer
-                .as_ref()
-                .map_or(1.0, |s| s.sample(&mut rng));
-
-            // Budget-ladder routed step (retry the batch on escalation).
-            loop {
-                let art = &ladder_specs[router.rung()];
-                let out = engine
-                    .run_spec(
-                        art,
-                        &[
-                            Input::F32(&state.params),
-                            Input::F32(&state.opt_state),
-                            Input::F32(&bx),
-                            Input::F32(&by),
-                            Input::Scalar(lr),
-                            Input::Scalar(ce),
-                            Input::Scalar(cs),
-                            Input::Scalar(caux),
-                            Input::Scalar(t1),
-                        ],
-                    )
-                    .with_context(|| format!("train step on {}", art.name))?;
-                let [params, opt_state, metrics]: [Vec<f32>; 3] =
-                    out.try_into().ok().context("train step arity")?;
-                let m = Metrics::decode(&metrics)?;
-                let retry = router.observe(m.naccept + m.nreject, m.success);
-                if retry {
-                    continue; // discard truncated step, rerun on bigger rung
-                }
-                state.update(params, opt_state)?;
-                acc.push(&m);
-                break;
-            }
+            let step = StepCoefs {
+                lr: coefs.lr.at(state.iter) as f32,
+                coef_e: coefs.coef_e.map_or(0.0, |a| a.at(epoch)) as f32,
+                coef_s: coefs.coef_s as f32,
+                coef_aux: coefs.coef_aux as f32,
+                t1: coefs.steer.as_ref().map_or(1.0, |s| s.sample(&mut rng)),
+                ..Default::default()
+            };
+            let m = super::routed_step(
+                backend,
+                MODEL,
+                method.taynode,
+                &mut router,
+                &mut state,
+                &TrainData::Classify { x: &bx, y: &by },
+                &step,
+            )?;
+            acc.push(&m);
         }
         sw.stop();
         anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
@@ -157,21 +124,23 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
         epochs_out.push(rec);
     }
 
-    // Prediction timing + held-out metrics via the while-loop artifact.
+    // Prediction timing + held-out metrics via the early-exiting path.
     let eval = |images: &[f32], onehot: &[f32]| -> Result<(Metrics, f64)> {
         let mut ms = Vec::new();
         let mut secs = Vec::new();
         for b in 0..images.len() / (BATCH * mnist_synth::DIM) {
             let xs = &images[b * BATCH * mnist_synth::DIM..(b + 1) * BATCH * mnist_synth::DIM];
-            let ys = &onehot[b * BATCH * mnist_synth::CLASSES
-                ..(b + 1) * BATCH * mnist_synth::CLASSES];
+            let ys = &onehot
+                [b * BATCH * mnist_synth::CLASSES..(b + 1) * BATCH * mnist_synth::CLASSES];
             let t0 = std::time::Instant::now();
-            let out = engine.run(
-                &format!("{MODEL}_predict"),
-                &[Input::F32(&state.params), Input::F32(xs), Input::F32(ys)],
+            let (_, m) = backend.predict(
+                MODEL,
+                &state.params,
+                &TrainData::Classify { x: xs, y: ys },
+                4242,
             )?;
             secs.push(t0.elapsed().as_secs_f64());
-            ms.push(Metrics::decode(&out[1])?);
+            ms.push(m);
         }
         let n = ms.len().max(1) as f64;
         let avg = Metrics {
@@ -182,8 +151,6 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
         };
         Ok((avg, secs.iter().sum::<f64>() / n))
     };
-    // Warm the predict executable before timing.
-    engine.load(&format!("{MODEL}_predict"))?;
     let (train_eval, _) = eval(
         &train.images[..BATCH * 4 * mnist_synth::DIM],
         &train_onehot[..BATCH * 4 * mnist_synth::CLASSES],

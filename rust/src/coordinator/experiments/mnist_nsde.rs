@@ -1,10 +1,10 @@
 //! MNIST Neural SDE driver — paper §4.2.2 (Table 4, Figure 6).
 //!
 //! Paper setting: B=512, Adam(0.01) + InvDecay(1e-5), 40 epochs, constant
-//! coef_e = 10.0 / coef_s = 0.1, prediction = mean logits over 10 driving
-//! paths.  Testbed scale: synthetic MNIST, B=32.
+//! coef_e = 10.0 / coef_s = 0.1, prediction = mean logits over several
+//! driving paths.  Testbed scale: synthetic MNIST, B=32.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::budget::BudgetRouter;
 use crate::coordinator::method::Method;
@@ -12,17 +12,16 @@ use crate::coordinator::metrics::{EpochAccumulator, RunResult};
 use crate::coordinator::schedule::InvDecay;
 use crate::data::{batcher::Batcher, mnist_synth};
 use crate::runtime::state::{Metrics, TrainState};
-use crate::runtime::{Engine, Input};
+use crate::runtime::{Backend, StepCoefs, TrainData};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
 pub const MODEL: &str = "mnist_nsde";
 const BATCH: usize = 32;
 
-pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
-    let spec = engine.manifest.model(MODEL)?.clone();
-    let h = &spec.hyper;
-    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
+pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let info = backend.model(MODEL)?;
+    let get = |k: &str| -> f64 { info.hyper.get(k).copied().unwrap_or(0.0) };
     let lr = InvDecay {
         lr0: get("lr"),
         gamma: get("inv_decay"),
@@ -36,29 +35,15 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
     let train_onehot = mnist_synth::one_hot(&train.labels);
     let test_onehot = mnist_synth::one_hot(&test.labels);
 
-    let ladder: Vec<_> = engine
-        .manifest
-        .train_ladder(MODEL, false)
-        .into_iter()
-        .cloned()
-        .collect();
-    let mut router = BudgetRouter::new(
-        ladder.iter().map(|a| a.budget.unwrap_or(usize::MAX)).collect(),
-    )?;
-
+    let mut router = BudgetRouter::new(backend.ladder(MODEL, false)?)?;
     let mut state = TrainState::new(
-        engine.init_params(MODEL, opts.seed as u32)?,
-        spec.opt_state_size,
+        backend.init_params(MODEL, opts.seed as u32)?,
+        info.opt_state_size,
     );
     let mut rng = Rng::new(opts.seed ^ 0x51DE);
     let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
 
-    // Pre-compile every rung + the predict artifact so the stopwatch
-    // measures steady-state training, not PJRT JIT.
-    for art in &ladder {
-        engine.load(&art.name)?;
-    }
-    engine.load(&format!("{MODEL}_predict"))?;
+    backend.warm(MODEL, false)?;
 
     let mut sw = Stopwatch::new();
     let mut epochs_out = Vec::with_capacity(opts.epochs);
@@ -72,35 +57,23 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             let idx = batcher.next_batch().to_vec();
             Batcher::gather(&train.images, mnist_synth::DIM, &idx, &mut bx);
             Batcher::gather(&train_onehot, mnist_synth::CLASSES, &idx, &mut by);
-            let lr_t = lr.at(state.iter) as f32;
-            let seed = rng.next_u32();
-            loop {
-                let art = &ladder[router.rung()];
-                let out = engine
-                    .run_spec(
-                        art,
-                        &[
-                            Input::F32(&state.params),
-                            Input::F32(&state.opt_state),
-                            Input::F32(&bx),
-                            Input::F32(&by),
-                            Input::Scalar(lr_t),
-                            Input::Scalar(ce as f32),
-                            Input::Scalar(cs as f32),
-                            Input::SeedU32(seed),
-                        ],
-                    )
-                    .with_context(|| format!("train step on {}", art.name))?;
-                let [params, opt_state, metrics]: [Vec<f32>; 3] =
-                    out.try_into().ok().context("train step arity")?;
-                let m = Metrics::decode(&metrics)?;
-                if router.observe(m.naccept + m.nreject, m.success) {
-                    continue;
-                }
-                state.update(params, opt_state)?;
-                acc.push(&m);
-                break;
-            }
+            let step = StepCoefs {
+                lr: lr.at(state.iter) as f32,
+                coef_e: ce as f32,
+                coef_s: cs as f32,
+                seed: rng.next_u32(),
+                ..Default::default()
+            };
+            let m = super::routed_step(
+                backend,
+                MODEL,
+                false,
+                &mut router,
+                &mut state,
+                &TrainData::Classify { x: &bx, y: &by },
+                &step,
+            )?;
+            acc.push(&m);
         }
         sw.stop();
         anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
@@ -119,7 +92,7 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
         epochs_out.push(rec);
     }
 
-    // Evaluation: 10-trajectory mean-logit prediction (inside the artifact).
+    // Evaluation: mean-logit prediction over several driving paths.
     let eval = |images: &[f32], onehot: &[f32], batches: usize| -> Result<(Metrics, f64)> {
         let mut ms = Vec::new();
         let mut secs = Vec::new();
@@ -128,17 +101,14 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             let ys = &onehot
                 [b * BATCH * mnist_synth::CLASSES..(b + 1) * BATCH * mnist_synth::CLASSES];
             let t0 = std::time::Instant::now();
-            let out = engine.run(
-                &format!("{MODEL}_predict"),
-                &[
-                    Input::F32(&state.params),
-                    Input::F32(xs),
-                    Input::F32(ys),
-                    Input::SeedU32(4242),
-                ],
+            let (_, m) = backend.predict(
+                MODEL,
+                &state.params,
+                &TrainData::Classify { x: xs, y: ys },
+                4242,
             )?;
             secs.push(t0.elapsed().as_secs_f64());
-            ms.push(Metrics::decode(&out[1])?);
+            ms.push(m);
         }
         let n = ms.len().max(1) as f64;
         Ok((
@@ -151,7 +121,6 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
             secs.iter().sum::<f64>() / n,
         ))
     };
-    engine.load(&format!("{MODEL}_predict"))?;
     let (train_eval, _) = eval(&train.images, &train_onehot, 2)?;
     let (test_eval, pred_s) = eval(&test.images, &test_onehot, 2)?;
 

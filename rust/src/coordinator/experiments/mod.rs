@@ -1,9 +1,10 @@
 //! Experiment drivers — one per paper experiment.
 //!
-//! Each driver owns its dataset, wires the method grid (coefficients,
-//! schedules, STEER sampling, budget-ladder routing) into the lowered
-//! artifacts and produces [`RunResult`]s that the bench harness turns into
-//! the paper's tables and figures.
+//! Each driver owns its dataset and wires the method grid (coefficients,
+//! schedules, STEER sampling, budget-ladder routing) into a [`Backend`] —
+//! the native discrete-adjoint trainer by default, the PJRT artifact
+//! engine behind the `pjrt` feature — and produces [`RunResult`]s that
+//! the bench harness turns into the paper's tables and figures.
 
 pub mod latent_ode;
 pub mod mnist_node;
@@ -13,8 +14,10 @@ pub mod spiral_nsde;
 
 use anyhow::Result;
 
+use super::budget::BudgetRouter;
 use super::Method;
-use crate::runtime::Engine;
+use crate::runtime::state::{Metrics, TrainState};
+use crate::runtime::{Backend, StepCoefs, TrainData};
 
 /// Common knobs for a training run (scaled-down defaults; the paper's
 /// epoch counts are listed in each driver's docs).
@@ -40,19 +43,44 @@ impl Default for TrainOpts {
     }
 }
 
+/// One budget-ladder-routed train step: run on the router's rung, retry
+/// the same batch on escalation (a truncated solve's gradients are
+/// biased, so its candidate state is discarded), commit otherwise.
+pub(crate) fn routed_step(
+    backend: &dyn Backend,
+    model: &str,
+    tay: bool,
+    router: &mut BudgetRouter,
+    state: &mut TrainState,
+    data: &TrainData,
+    coefs: &StepCoefs,
+) -> Result<Metrics> {
+    loop {
+        let out = backend.train_step(model, tay, router.rung(), state, data, coefs)?;
+        if router.observe(
+            out.metrics.naccept + out.metrics.nreject,
+            out.metrics.success,
+        ) {
+            continue;
+        }
+        state.update(out.params, out.opt_state)?;
+        return Ok(out.metrics);
+    }
+}
+
 /// Dispatch an experiment by name (CLI entry point).
 pub fn run_by_name(
-    engine: &Engine,
+    backend: &dyn Backend,
     experiment: &str,
     method: Method,
     opts: TrainOpts,
 ) -> Result<super::RunResult> {
     match experiment {
-        "mnist-node" => mnist_node::run(engine, method, opts),
-        "latent-ode" | "physionet" => latent_ode::run(engine, method, opts),
-        "spiral-node" => spiral_node::run(engine, method, opts),
-        "spiral-nsde" => spiral_nsde::run(engine, method, opts),
-        "mnist-nsde" => mnist_nsde::run(engine, method, opts),
+        "mnist-node" => mnist_node::run(backend, method, opts),
+        "latent-ode" | "physionet" => latent_ode::run(backend, method, opts),
+        "spiral-node" => spiral_node::run(backend, method, opts),
+        "spiral-nsde" => spiral_nsde::run(backend, method, opts),
+        "mnist-nsde" => mnist_nsde::run(backend, method, opts),
         other => anyhow::bail!(
             "unknown experiment {other:?} (mnist-node|latent-ode|spiral-node|\
              spiral-nsde|mnist-nsde)"

@@ -6,14 +6,14 @@
 //! (data::spiral::spiral_sde_moments); the model predicts a fresh ensemble
 //! each iteration with a coordinator-supplied seed.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::budget::BudgetRouter;
 use crate::coordinator::method::Method;
 use crate::coordinator::metrics::{EpochAccumulator, RunResult};
 use crate::data::spiral;
-use crate::runtime::state::{Metrics, TrainState};
-use crate::runtime::{Engine, Input};
+use crate::runtime::state::TrainState;
+use crate::runtime::{Backend, StepCoefs, TrainData};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -36,38 +36,32 @@ pub fn ground_truth(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     (u0, mu, var, ts.iter().map(|&t| t as f32).collect())
 }
 
-pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
-    let spec = engine.manifest.model(MODEL)?.clone();
-    let h = &spec.hyper;
-    let get = |k: &str| -> f64 { *h.get(k).unwrap_or(&0.0) };
-    let lr = get("lr");
-    let ce = if method.er { get("coef_e") } else { 0.0 };
-    let cs = if method.sr { get("coef_s") } else { 0.0 };
+pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    let info = backend.model(MODEL)?;
+    let get = |k: &str| -> f64 { info.hyper.get(k).copied().unwrap_or(0.0) };
+    let base_coefs = StepCoefs {
+        lr: get("lr") as f32,
+        coef_e: if method.er { get("coef_e") as f32 } else { 0.0 },
+        coef_s: if method.sr { get("coef_s") as f32 } else { 0.0 },
+        ..Default::default()
+    };
 
     let (u0, data_mu, data_var, ts) = ground_truth(opts.seed);
+    let train_data = TrainData::Moments {
+        u0: &u0,
+        mu: &data_mu,
+        var: &data_var,
+        ts: &ts,
+    };
 
-    let ladder: Vec<_> = engine
-        .manifest
-        .train_ladder(MODEL, false)
-        .into_iter()
-        .cloned()
-        .collect();
-    let mut router = BudgetRouter::new(
-        ladder.iter().map(|a| a.budget.unwrap_or(usize::MAX)).collect(),
-    )?;
-
+    let mut router = BudgetRouter::new(backend.ladder(MODEL, false)?)?;
     let mut state = TrainState::new(
-        engine.init_params(MODEL, opts.seed as u32)?,
-        spec.opt_state_size,
+        backend.init_params(MODEL, opts.seed as u32)?,
+        info.opt_state_size,
     );
     let mut rng = Rng::new(opts.seed ^ 0x51DE);
 
-    // Pre-compile every rung + the predict artifact so the stopwatch
-    // measures steady-state training, not PJRT JIT.
-    for art in &ladder {
-        engine.load(&art.name)?;
-    }
-    engine.load(&format!("{MODEL}_predict"))?;
+    backend.warm(MODEL, false)?;
 
     let mut sw = Stopwatch::new();
     let mut epochs_out = Vec::with_capacity(opts.epochs);
@@ -76,36 +70,20 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
         let t0 = std::time::Instant::now();
         sw.start();
         for _ in 0..opts.iters_per_epoch {
-            let seed = rng.next_u32();
-            loop {
-                let art = &ladder[router.rung()];
-                let out = engine
-                    .run_spec(
-                        art,
-                        &[
-                            Input::F32(&state.params),
-                            Input::F32(&state.opt_state),
-                            Input::F32(&u0),
-                            Input::F32(&data_mu),
-                            Input::F32(&data_var),
-                            Input::F32(&ts),
-                            Input::Scalar(lr as f32),
-                            Input::Scalar(ce as f32),
-                            Input::Scalar(cs as f32),
-                            Input::SeedU32(seed),
-                        ],
-                    )
-                    .with_context(|| format!("train step on {}", art.name))?;
-                let [params, opt_state, metrics]: [Vec<f32>; 3] =
-                    out.try_into().ok().context("train step arity")?;
-                let m = Metrics::decode(&metrics)?;
-                if router.observe(m.naccept + m.nreject, m.success) {
-                    continue;
-                }
-                state.update(params, opt_state)?;
-                acc.push(&m);
-                break;
-            }
+            let coefs = StepCoefs {
+                seed: rng.next_u32(),
+                ..base_coefs
+            };
+            let m = super::routed_step(
+                backend,
+                MODEL,
+                false,
+                &mut router,
+                &mut state,
+                &train_data,
+                &coefs,
+            )?;
+            acc.push(&m);
         }
         sw.stop();
         anyhow::ensure!(state.is_finite(), "parameters diverged at epoch {epoch}");
@@ -123,21 +101,9 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
         epochs_out.push(rec);
     }
 
-    engine.load(&format!("{MODEL}_predict"))?;
     let t0 = std::time::Instant::now();
-    let out = engine.run(
-        &format!("{MODEL}_predict"),
-        &[
-            Input::F32(&state.params),
-            Input::F32(&u0),
-            Input::F32(&data_mu),
-            Input::F32(&data_var),
-            Input::F32(&ts),
-            Input::SeedU32(999),
-        ],
-    )?;
+    let (_, m) = backend.predict(MODEL, &state.params, &train_data, 999)?;
     let pred_s = t0.elapsed().as_secs_f64();
-    let m = Metrics::decode(&out[1])?;
 
     Ok(RunResult {
         experiment: "table3_spiral_sde".into(),
@@ -157,18 +123,18 @@ pub fn run(engine: &Engine, method: Method, opts: super::TrainOpts) -> Result<Ru
 }
 
 /// Predicted ensemble at the save grid (Figure 5 series: [T, N_TRAJ, 2]).
-pub fn predict_ensemble(engine: &Engine, params: &[f32], seed: u32) -> Result<Vec<f32>> {
+pub fn predict_ensemble(backend: &dyn Backend, params: &[f32], seed: u32) -> Result<Vec<f32>> {
     let (u0, data_mu, data_var, ts) = ground_truth(0);
-    let out = engine.run(
-        &format!("{MODEL}_predict"),
-        &[
-            Input::F32(params),
-            Input::F32(&u0),
-            Input::F32(&data_mu),
-            Input::F32(&data_var),
-            Input::F32(&ts),
-            Input::SeedU32(seed),
-        ],
+    let (ens, _) = backend.predict(
+        MODEL,
+        params,
+        &TrainData::Moments {
+            u0: &u0,
+            mu: &data_mu,
+            var: &data_var,
+            ts: &ts,
+        },
+        seed,
     )?;
-    Ok(out.into_iter().next().unwrap())
+    Ok(ens)
 }

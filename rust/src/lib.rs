@@ -13,15 +13,23 @@
 //!   `artifacts/*.hlo.txt` (`python/compile/`).
 //! * Layer 3 (this crate): the training coordinator — data pipeline,
 //!   method grid, coefficient schedules, STEER sampling, budget-ladder
-//!   routing, metrics/NFE accounting — running the artifacts via PJRT with
-//!   Python never on the hot path.
+//!   routing, metrics/NFE accounting — driving a [`runtime::Backend`].
+//!   Two backends implement that seam: the **native** path (default) is a
+//!   pure-Rust differentiable training stack — flat-parameter MLPs
+//!   (`models`), discrete adjoints through the accepted steps of the
+//!   adaptive solvers (`solvers::adjoint`), Adam — so the paper's method
+//!   trains end-to-end with no Python or XLA anywhere; the **PJRT** path
+//!   (cargo feature `pjrt`) executes the lowered artifacts with Python
+//!   never on the hot path.
 //!
-//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! See DESIGN.md (§Backend for the trait contract and adjoint tape
+//! layout) for the full system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod models;
 pub mod runtime;
 pub mod solvers;
 pub mod util;

@@ -1,24 +1,29 @@
 //! `regnde` — CLI launcher for the regularized-NDE training framework.
 //!
 //! ```text
-//! regnde list                                  # artifacts + models
-//! regnde validate                              # run every artifact once
+//! regnde list                                  # backend models (+artifacts)
 //! regnde train --exp mnist-node --method ernode [--epochs N] [--iters N]
-//!              [--seeds 0,1,2] [--verbose]
+//!              [--seeds 0,1,2] [--backend native|pjrt] [--verbose]
 //! regnde predict --exp mnist-node --method vanilla
-//! regnde bench --table 1                       # alias of cargo bench target
+//! regnde run spiral-node --method srnode+ernode --epochs 2 [--check-nfe]
+//!                                              # method-vs-vanilla compare
+//! regnde validate                              # run every artifact (pjrt)
 //! ```
+//!
+//! The default backend is the native discrete-adjoint trainer — no
+//! artifacts or XLA required.  `--backend pjrt` selects the AOT engine
+//! (requires `--features pjrt` and compiled artifacts).
 
 use anyhow::{bail, Context, Result};
 
 use regnde::coordinator::experiments::{self, TrainOpts};
 use regnde::coordinator::recorder::Recorder;
 use regnde::coordinator::Method;
-use regnde::runtime::{Engine, Input};
+use regnde::runtime::{make_backend, Backend};
 use regnde::util::cli::Args;
 
 const VALUED: &[&str] = &[
-    "exp", "method", "epochs", "iters", "seeds", "artifacts", "runs",
+    "exp", "method", "epochs", "iters", "seeds", "artifacts", "runs", "backend",
 ];
 
 fn main() {
@@ -29,9 +34,9 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: regnde <list|validate|train|predict> \
-     [--exp E] [--method M] [--epochs N] [--iters N] [--seeds 0,1] \
-     [--artifacts DIR] [--runs DIR] [--verbose]\n\
+    "usage: regnde <list|validate|train|predict|run> \
+     [--backend native|pjrt] [--exp E] [--method M] [--epochs N] [--iters N] \
+     [--seeds 0,1] [--artifacts DIR] [--runs DIR] [--check-nfe] [--verbose]\n\
      experiments: mnist-node latent-ode spiral-node spiral-nsde mnist-nsde\n\
      methods: vanilla steer taynode srnode ernode (+-combined, e.g. srnode+ernode)"
 }
@@ -47,6 +52,7 @@ fn run() -> Result<()> {
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(regnde::default_artifacts_dir);
+    let backend_name = args.get_or("backend", "native").to_string();
 
     match cmd {
         "help" | "--help" => {
@@ -54,27 +60,17 @@ fn run() -> Result<()> {
             Ok(())
         }
         "list" => {
-            let engine = Engine::new(&artifacts)?;
-            println!("platform: {}", engine.platform());
-            println!("\nmodels:");
-            for (name, m) in &engine.manifest.models {
-                println!(
-                    "  {name:<14} params={:<8} opt={} ({})",
-                    m.params_size, m.opt_state_size, m.optimizer
-                );
-            }
-            println!("\nartifacts:");
-            for (name, a) in &engine.manifest.artifacts {
-                println!(
-                    "  {name:<28} kind={:<10} budget={:?}",
-                    a.kind, a.budget
-                );
+            let backend = make_backend(&backend_name, &artifacts)?;
+            list(backend.as_ref())?;
+            #[cfg(feature = "pjrt")]
+            if backend.name() == "pjrt" {
+                list_artifacts(&artifacts)?;
             }
             Ok(())
         }
         "validate" => validate(&artifacts),
         "train" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = make_backend(&backend_name, &artifacts)?;
             let exp = args.get("exp").context("--exp required")?.to_string();
             let method = Method::parse(args.get_or("method", "vanilla"))?;
             let seeds: Vec<u64> = args
@@ -94,7 +90,7 @@ fn run() -> Result<()> {
                     seed,
                     verbose: args.flag("verbose"),
                 };
-                let result = experiments::run_by_name(&engine, &exp, method, opts)?;
+                let result = experiments::run_by_name(backend.as_ref(), &exp, method, opts)?;
                 let path = recorder.save(&result)?;
                 println!(
                     "[{}] seed {seed}: train {:.1}s predict {:.3}s nfe {:.1} \
@@ -110,7 +106,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "predict" => {
-            let engine = Engine::new(&artifacts)?;
+            let backend = make_backend(&backend_name, &artifacts)?;
             let exp = args.get("exp").context("--exp required")?.to_string();
             let method = Method::parse(args.get_or("method", "vanilla"))?;
             // quick one-epoch train then timed predictions
@@ -120,7 +116,7 @@ fn run() -> Result<()> {
                 seed: args.get_u64("seeds", 0)?,
                 verbose: args.flag("verbose"),
             };
-            let result = experiments::run_by_name(&engine, &exp, method, opts)?;
+            let result = experiments::run_by_name(backend.as_ref(), &exp, method, opts)?;
             println!(
                 "[{}] predict {:.4}s nfe {:.1} metric {:.4}",
                 result.method,
@@ -130,13 +126,125 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+        "run" => {
+            let backend = make_backend(&backend_name, &artifacts)?;
+            let exp = args
+                .positional
+                .get(1)
+                .map(|s| s.to_string())
+                .or_else(|| args.get("exp").map(|s| s.to_string()))
+                .context("usage: regnde run <experiment> [--method M]")?;
+            let method = Method::parse(args.get_or("method", "srnode+ernode"))?;
+            let opts = TrainOpts {
+                epochs: args.get_usize("epochs", 2)?,
+                iters_per_epoch: args.get_usize("iters", 25)?,
+                seed: args.get_u64("seeds", 0)?,
+                verbose: args.flag("verbose"),
+            };
+            compare_run(
+                backend.as_ref(),
+                &exp,
+                method,
+                opts,
+                args.flag("check-nfe"),
+            )
+        }
         other => bail!("unknown command {other:?}\n{}", usage()),
     }
 }
 
+fn list(backend: &dyn Backend) -> Result<()> {
+    println!("backend: {}", backend.name());
+    println!("\nmodels:");
+    for model in backend.models() {
+        let info = backend.model(&model)?;
+        let ladder = backend.ladder(&model, false).unwrap_or_default();
+        println!(
+            "  {model:<14} params={:<8} opt={:<8} ({}) ladder={ladder:?}",
+            info.params_size, info.opt_state_size, info.optimizer
+        );
+    }
+    Ok(())
+}
+
+/// The method-vs-vanilla comparison behind CI's native smoke run: trains
+/// both from the same seed and prints the paper-style summary.  With
+/// `check_nfe`, exits nonzero unless the regularized run's final-epoch
+/// NFE is no worse than vanilla's — the paper's core claim.
+fn compare_run(
+    backend: &dyn Backend,
+    exp: &str,
+    method: Method,
+    opts: TrainOpts,
+    check_nfe: bool,
+) -> Result<()> {
+    anyhow::ensure!(
+        method != Method::VANILLA,
+        "`run` compares a regularized method against vanilla; pick a method"
+    );
+    let reg = experiments::run_by_name(backend, exp, method, opts)?;
+    let vanilla = experiments::run_by_name(backend, exp, Method::VANILLA, opts)?;
+
+    println!("\n================ {exp}: regularized vs vanilla ================");
+    for r in [&vanilla, &reg] {
+        let last = r.epochs.last().context("no epochs recorded")?;
+        println!(
+            "{:<18} final-epoch loss {:>9.5} | train NFE {:>7.1} | predict NFE {:>7.1} \
+             | escalations {}",
+            r.method, last.loss, last.nfe, r.predict_nfe, r.escalations
+        );
+    }
+    let reg_first = reg.epochs.first().context("no epochs")?;
+    let reg_last = reg.epochs.last().context("no epochs")?;
+    let van_last = vanilla.epochs.last().context("no epochs")?;
+    println!(
+        "\nregularized: loss {:.5} -> {:.5}, r_e {:.3e}, NFE ratio vanilla/reg = {:.3}x",
+        reg_first.loss,
+        reg_last.loss,
+        reg_last.r_e,
+        van_last.nfe / reg_last.nfe.max(1e-9),
+    );
+
+    if check_nfe {
+        anyhow::ensure!(
+            reg_last.r_e > 0.0,
+            "regularized run must accumulate R_E (got {})",
+            reg_last.r_e
+        );
+        anyhow::ensure!(
+            reg_last.loss < reg_first.loss,
+            "training must decrease the loss ({} -> {})",
+            reg_first.loss,
+            reg_last.loss
+        );
+        anyhow::ensure!(
+            reg_last.nfe <= van_last.nfe,
+            "regularized final-epoch NFE {} exceeds vanilla {}",
+            reg_last.nfe,
+            van_last.nfe
+        );
+        println!("check-nfe: OK (reg {} <= vanilla {})", reg_last.nfe, van_last.nfe);
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn list_artifacts(artifacts: &std::path::Path) -> Result<()> {
+    let engine = regnde::runtime::Engine::new(artifacts)?;
+    println!("platform: {}", engine.platform());
+    println!("\nartifacts:");
+    for (name, a) in &engine.manifest.artifacts {
+        println!("  {name:<28} kind={:<10} budget={:?}", a.kind, a.budget);
+    }
+    Ok(())
+}
+
 /// Run every artifact once with synthetic inputs — a fast whole-manifest
 /// smoke test (also exercised by rust/tests/validate_artifacts.rs).
+#[cfg(feature = "pjrt")]
 fn validate(artifacts: &std::path::Path) -> Result<()> {
+    use regnde::runtime::{Engine, Input};
+
     let engine = Engine::new(artifacts)?;
     let names: Vec<String> = engine.manifest.artifacts.keys().cloned().collect();
     for name in names {
@@ -177,4 +285,9 @@ fn validate(artifacts: &std::path::Path) -> Result<()> {
     }
     println!("all artifacts validated");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn validate(_artifacts: &std::path::Path) -> Result<()> {
+    bail!("`validate` exercises the artifact manifest — rebuild with --features pjrt")
 }

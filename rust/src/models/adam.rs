@@ -1,0 +1,108 @@
+//! Adam on flat parameter vectors (Kingma & Ba 2015).
+//!
+//! Optimizer state is the standard `[m | v]` pair stored as one flat
+//! `f32` vector of size `2 · n_params` — the same opaque-flat-vector
+//! contract the PJRT train artifacts use for their optimizer state, so
+//! [`crate::runtime::TrainState`] carries either backend's state
+//! unchanged.
+
+/// Adam hyper-parameters (`lr` is passed per step — the coordinator owns
+/// the learning-rate schedule).
+#[derive(Clone, Copy, Debug)]
+pub struct Adam {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+impl Adam {
+    /// Size of the flat optimizer state for `n` parameters.
+    pub fn opt_state_size(n_params: usize) -> usize {
+        2 * n_params
+    }
+
+    /// One update in place.  `iter` is the number of *completed* steps
+    /// before this one (bias correction uses `t = iter + 1`).
+    pub fn step(
+        &self,
+        params: &mut [f32],
+        opt_state: &mut [f32],
+        grad: &[f64],
+        lr: f64,
+        iter: u64,
+    ) {
+        let n = params.len();
+        assert_eq!(grad.len(), n, "gradient/parameter size mismatch");
+        assert_eq!(opt_state.len(), 2 * n, "opt state must be [m | v]");
+        let t = (iter + 1) as i32;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        let (ms, vs) = opt_state.split_at_mut(n);
+        for k in 0..n {
+            let g = grad[k];
+            let m = self.beta1 * ms[k] as f64 + (1.0 - self.beta1) * g;
+            let v = self.beta2 * vs[k] as f64 + (1.0 - self.beta2) * g * g;
+            ms[k] = m as f32;
+            vs[k] = v as f32;
+            let update = lr * (m / bc1) / ((v / bc2).sqrt() + self.eps);
+            params[k] = (params[k] as f64 - update) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimize f(p) = Σ (p - 3)²
+        let adam = Adam::default();
+        let mut p = vec![0.0f32; 4];
+        let mut s = vec![0.0f32; 8];
+        for it in 0..500 {
+            let g: Vec<f64> = p.iter().map(|&x| 2.0 * (x as f64 - 3.0)).collect();
+            adam.step(&mut p, &mut s, &g, 0.05, it);
+        }
+        for &x in &p {
+            assert!((x - 3.0).abs() < 0.05, "{x}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // With bias correction, |Δp| ≈ lr on step one regardless of |g|.
+        let adam = Adam::default();
+        for g0 in [1e-4, 1.0, 1e4] {
+            let mut p = vec![0.0f32];
+            let mut s = vec![0.0f32; 2];
+            adam.step(&mut p, &mut s, &[g0], 0.01, 0);
+            assert!(
+                (p[0].abs() as f64 - 0.01).abs() < 1e-3,
+                "g0={g0} -> Δp {}",
+                p[0]
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_sizes() {
+        let adam = Adam::default();
+        let mut p = vec![0.0f32; 2];
+        let mut s = vec![0.0f32; 4];
+        let result = std::panic::catch_unwind(move || {
+            adam.step(&mut p, &mut s, &[1.0], 0.01, 0);
+        });
+        assert!(result.is_err());
+    }
+}

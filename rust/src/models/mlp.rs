@@ -1,0 +1,328 @@
+//! Flat-parameter multi-layer perceptrons with hand-rolled VJPs.
+//!
+//! The native backend keeps every model as one flat `f32` parameter
+//! vector (the same contract the PJRT artifacts use), so an [`Mlp`] is a
+//! *view* over a parameter slice: `[W_0 | b_0 | W_1 | b_1 | ...]` with
+//! `W_l` row-major `[out × in]`.  Hidden layers are `tanh`; the output
+//! layer is linear unless `final_tanh` is set.  `cube_input` prepends the
+//! paper's spiral idiom `x ↦ x³` (DiffEqFlux's `Chain(x -> x.^3, ...)`).
+//!
+//! [`Mlp::vjp`] is the accumulating vector-Jacobian product the discrete
+//! adjoint walks through: it recomputes the forward activations (cheap —
+//! no tape) and adds `wᵀ∂f/∂x` / `wᵀ∂f/∂θ` into caller buffers.
+
+use crate::util::rng::Rng;
+
+/// MLP shape: `dims = [in, hidden..., out]`.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    /// Feature map `x ↦ x³` before the first layer.
+    pub cube_input: bool,
+    /// Apply `tanh` to the output layer too (used for encoders).
+    pub final_tanh: bool,
+}
+
+/// Reusable forward/backward scratch for one [`Mlp`] (no per-call heap
+/// allocation on the solver hot path).
+#[derive(Clone, Debug)]
+pub struct MlpScratch {
+    /// Input feature + post-activation of every layer, concatenated.
+    acts: Vec<f64>,
+    delta: Vec<f64>,
+    delta2: Vec<f64>,
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize]) -> Mlp {
+        assert!(dims.len() >= 2, "MLP needs at least [in, out]");
+        Mlp {
+            dims: dims.to_vec(),
+            cube_input: false,
+            final_tanh: false,
+        }
+    }
+
+    /// With the cubic input feature (spiral dynamics idiom).
+    pub fn cubed(dims: &[usize]) -> Mlp {
+        Mlp {
+            cube_input: true,
+            ..Mlp::new(dims)
+        }
+    }
+
+    /// With `tanh` on the output layer (encoder idiom).
+    pub fn tanh_out(dims: &[usize]) -> Mlp {
+        Mlp {
+            final_tanh: true,
+            ..Mlp::new(dims)
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Flat parameter count: `Σ_l (in_l + 1) · out_l`.
+    pub fn n_params(&self) -> usize {
+        self.dims
+            .windows(2)
+            .map(|w| (w[0] + 1) * w[1])
+            .sum()
+    }
+
+    /// (w_offset, b_offset, in, out) of layer `l` within the flat slice.
+    fn layer(&self, l: usize) -> (usize, usize, usize, usize) {
+        let mut off = 0;
+        for w in self.dims.windows(2).take(l) {
+            off += (w[0] + 1) * w[1];
+        }
+        let (i, o) = (self.dims[l], self.dims[l + 1]);
+        (off, off + i * o, i, o)
+    }
+
+    pub fn scratch(&self) -> MlpScratch {
+        let max = *self.dims.iter().max().unwrap();
+        MlpScratch {
+            acts: vec![0.0; self.dims.iter().sum()],
+            delta: vec![0.0; max],
+            delta2: vec![0.0; max],
+        }
+    }
+
+    /// Xavier-uniform init into `out[..self.n_params()]`, biases zero.
+    pub fn init(&self, rng: &mut Rng, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n_params());
+        for l in 0..self.n_layers() {
+            let (woff, boff, i, o) = self.layer(l);
+            let limit = (6.0 / (i + o) as f64).sqrt();
+            for w in &mut out[woff..woff + i * o] {
+                *w = rng.range(-limit, limit) as f32;
+            }
+            for b in &mut out[boff..boff + o] {
+                *b = 0.0;
+            }
+        }
+    }
+
+    /// Forward pass; fills `scratch.acts` with the input feature and each
+    /// layer's post-activation, and copies the output layer into `out`.
+    pub fn forward(&self, theta: &[f64], x: &[f64], out: &mut [f64], scratch: &mut MlpScratch) {
+        debug_assert_eq!(out.len(), self.out_dim());
+        self.forward_acts(theta, x, scratch);
+        let last_off: usize = self.dims[..self.n_layers()].iter().sum();
+        out.copy_from_slice(&scratch.acts[last_off..last_off + self.out_dim()]);
+    }
+
+    /// Forward pass into the scratch activations only (no output copy) —
+    /// what [`Mlp::vjp`] uses, allocation-free.
+    fn forward_acts(&self, theta: &[f64], x: &[f64], scratch: &mut MlpScratch) {
+        debug_assert_eq!(x.len(), self.in_dim());
+        let acts = &mut scratch.acts;
+        // Input feature.
+        for d in 0..self.dims[0] {
+            acts[d] = if self.cube_input { x[d] * x[d] * x[d] } else { x[d] };
+        }
+        let mut in_off = 0;
+        let mut out_off = self.dims[0];
+        for l in 0..self.n_layers() {
+            let (woff, boff, i, o) = self.layer(l);
+            let last = l == self.n_layers() - 1;
+            for r in 0..o {
+                let wrow = &theta[woff + r * i..woff + (r + 1) * i];
+                let mut acc = theta[boff + r];
+                for c in 0..i {
+                    acc += wrow[c] * acts[in_off + c];
+                }
+                acts[out_off + r] = if !last || self.final_tanh { acc.tanh() } else { acc };
+            }
+            in_off = out_off;
+            out_off += o;
+        }
+        let _ = in_off;
+    }
+
+    /// Accumulating VJP: adds `wᵀ ∂f/∂x` into `gx` and `wᵀ ∂f/∂θ` into
+    /// `gtheta` (both `+=`).  Recomputes the forward internally.
+    pub fn vjp(
+        &self,
+        theta: &[f64],
+        x: &[f64],
+        w: &[f64],
+        gx: &mut [f64],
+        gtheta: &mut [f64],
+        scratch: &mut MlpScratch,
+    ) {
+        debug_assert_eq!(w.len(), self.out_dim());
+        debug_assert_eq!(gx.len(), self.in_dim());
+        debug_assert_eq!(gtheta.len(), self.n_params());
+        // Forward to refresh activations (no tape — recompute is cheaper
+        // than storing per-stage activations on the adjoint tape).
+        self.forward_acts(theta, x, scratch);
+
+        // delta = w (∘ tanh' if the output layer is activated).
+        let n_l = self.n_layers();
+        let last_off: usize = self.dims[..n_l].iter().sum();
+        for r in 0..self.out_dim() {
+            let mut d = w[r];
+            if self.final_tanh {
+                let a = scratch.acts[last_off + r];
+                d *= 1.0 - a * a;
+            }
+            scratch.delta[r] = d;
+        }
+
+        for l in (0..n_l).rev() {
+            let (woff, boff, i, o) = self.layer(l);
+            let in_off: usize = self.dims[..l].iter().sum();
+            // gW += delta ⊗ in_act ; gb += delta
+            for r in 0..o {
+                let d = scratch.delta[r];
+                if d == 0.0 {
+                    continue;
+                }
+                let grow = &mut gtheta[woff + r * i..woff + (r + 1) * i];
+                for c in 0..i {
+                    grow[c] += d * scratch.acts[in_off + c];
+                }
+                gtheta[boff + r] += d;
+            }
+            // delta_prev = Wᵀ delta (∘ activation' of the previous layer).
+            for c in 0..i {
+                let mut acc = 0.0;
+                for r in 0..o {
+                    acc += theta[woff + r * i + c] * scratch.delta[r];
+                }
+                scratch.delta2[c] = acc;
+            }
+            if l > 0 {
+                // Previous layer is tanh-activated: multiply by 1 - a².
+                for c in 0..i {
+                    let a = scratch.acts[in_off + c];
+                    scratch.delta2[c] *= 1.0 - a * a;
+                }
+            }
+            std::mem::swap(&mut scratch.delta, &mut scratch.delta2);
+        }
+        // Through the input feature map.
+        for d in 0..self.in_dim() {
+            let g = scratch.delta[d];
+            gx[d] += if self.cube_input { g * 3.0 * x[d] * x[d] } else { g };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check(mlp: &Mlp, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let np = mlp.n_params();
+        let mut p32 = vec![0.0f32; np];
+        mlp.init(&mut rng, &mut p32);
+        let theta: Vec<f64> = p32.iter().map(|&v| v as f64).collect();
+        let x: Vec<f64> = (0..mlp.in_dim()).map(|_| rng.range(-1.0, 1.0)).collect();
+        let w: Vec<f64> = (0..mlp.out_dim()).map(|_| rng.range(-1.0, 1.0)).collect();
+
+        let mut scratch = mlp.scratch();
+        let mut gx = vec![0.0; mlp.in_dim()];
+        let mut gt = vec![0.0; np];
+        mlp.vjp(&theta, &x, &w, &mut gx, &mut gt, &mut scratch);
+
+        let loss = |theta: &[f64], x: &[f64]| -> f64 {
+            let mut out = vec![0.0; mlp.out_dim()];
+            let mut s = mlp.scratch();
+            mlp.forward(theta, x, &mut out, &mut s);
+            out.iter().zip(&w).map(|(o, w)| o * w).sum()
+        };
+        let eps = 1e-6;
+        for k in 0..np {
+            let mut tp = theta.clone();
+            tp[k] += eps;
+            let mut tm = theta.clone();
+            tm[k] -= eps;
+            let fd = (loss(&tp, &x) - loss(&tm, &x)) / (2.0 * eps);
+            assert!(
+                (gt[k] - fd).abs() < 1e-6 * fd.abs().max(1.0),
+                "param {k}: vjp {} vs fd {fd}",
+                gt[k]
+            );
+        }
+        for k in 0..mlp.in_dim() {
+            let mut xp = x.clone();
+            xp[k] += eps;
+            let mut xm = x.clone();
+            xm[k] -= eps;
+            let fd = (loss(&theta, &xp) - loss(&theta, &xm)) / (2.0 * eps);
+            assert!(
+                (gx[k] - fd).abs() < 1e-6 * fd.abs().max(1.0),
+                "input {k}: vjp {} vs fd {fd}",
+                gx[k]
+            );
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        fd_check(&Mlp::new(&[3, 5, 2]), 1);
+        fd_check(&Mlp::cubed(&[2, 8, 2]), 2);
+        fd_check(&Mlp::tanh_out(&[4, 3]), 3);
+        fd_check(&Mlp::new(&[2, 4]), 4);
+    }
+
+    #[test]
+    fn param_count_and_layout() {
+        let m = Mlp::new(&[2, 16, 2]);
+        assert_eq!(m.n_params(), 3 * 16 + 17 * 2);
+        let (w0, b0, i0, o0) = m.layer(0);
+        assert_eq!((w0, b0, i0, o0), (0, 32, 2, 16));
+        let (w1, _, i1, o1) = m.layer(1);
+        assert_eq!((w1, i1, o1), (48, 16, 2));
+    }
+
+    #[test]
+    fn init_is_seeded_and_finite() {
+        let m = Mlp::new(&[4, 8, 4]);
+        let mut a = vec![0.0f32; m.n_params()];
+        let mut b = vec![0.0f32; m.n_params()];
+        m.init(&mut Rng::new(7), &mut a);
+        m.init(&mut Rng::new(7), &mut b);
+        assert_eq!(a, b);
+        m.init(&mut Rng::new(8), &mut b);
+        assert_ne!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(a.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn vjp_accumulates() {
+        let m = Mlp::new(&[2, 3]);
+        let mut rng = Rng::new(5);
+        let mut p32 = vec![0.0f32; m.n_params()];
+        m.init(&mut rng, &mut p32);
+        let theta: Vec<f64> = p32.iter().map(|&v| v as f64).collect();
+        let mut s = m.scratch();
+        let (x, w) = ([0.3, -0.2], [1.0, 0.5, -0.5]);
+        let mut gx1 = vec![0.0; 2];
+        let mut gt1 = vec![0.0; m.n_params()];
+        m.vjp(&theta, &x, &w, &mut gx1, &mut gt1, &mut s);
+        let mut gx2 = gx1.clone();
+        let mut gt2 = gt1.clone();
+        m.vjp(&theta, &x, &w, &mut gx2, &mut gt2, &mut s);
+        for (a, b) in gt1.iter().zip(&gt2) {
+            assert!((2.0 * a - b).abs() < 1e-12, "gtheta must accumulate");
+        }
+        for (a, b) in gx1.iter().zip(&gx2) {
+            assert!((2.0 * a - b).abs() < 1e-12, "gx must accumulate");
+        }
+    }
+}

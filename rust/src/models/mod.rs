@@ -1,0 +1,14 @@
+//! Native model substrate: flat-parameter networks + optimizers.
+//!
+//! The PJRT path lowers models/optimizers to HLO at build time; this
+//! module is their pure-Rust counterpart so the native backend
+//! (`runtime::native`) can train without artifacts.  Everything operates
+//! on flat vectors — parameters are `[W_0 | b_0 | ...]` slices viewed
+//! through [`Mlp`], optimizer state is `[m | v]` through [`Adam`] — so
+//! `runtime::TrainState` is backend-agnostic.
+
+pub mod adam;
+pub mod mlp;
+
+pub use adam::Adam;
+pub use mlp::{Mlp, MlpScratch};

@@ -1,0 +1,180 @@
+//! The backend seam: one trait, two training runtimes.
+//!
+//! Every experiment driver in `coordinator::experiments` is generic over
+//! `&dyn Backend`, which owns the model-facing half of a training step:
+//!
+//!  * **`NativeBackend`** (`runtime::native`, always built) — pure-Rust
+//!    flat-parameter models integrated by the native adaptive solvers,
+//!    trained via discrete adjoints through the accepted steps
+//!    (`solvers::adjoint`).  This is what tier-1 CI exercises end-to-end.
+//!  * **`Engine`** (`runtime::engine`, behind the `pjrt` cargo feature) —
+//!    the AOT path: lowered HLO artifacts executed through PJRT.
+//!
+//! The contract mirrors the artifact signatures: flat `f32` parameter /
+//! optimizer-state vectors, experiment data handed over as a typed
+//! [`TrainData`] payload, scalar coefficients in [`StepCoefs`], and the
+//! standard 9-element [`Metrics`] block back.  `train_step` returns the
+//! *candidate* next state in a [`StepOutput`] without committing it —
+//! the budget-ladder router decides whether a truncated step is retried
+//! on a bigger rung or accepted (see `coordinator::budget`).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::state::{Metrics, TrainState};
+
+/// A typed runtime input tensor (shared by both backends' marshalling).
+#[derive(Clone, Debug)]
+pub enum Input<'a> {
+    /// Dense f32 tensor (row-major); shape checked against the spec.
+    F32(&'a [f32]),
+    /// f32 scalar.
+    Scalar(f32),
+    /// u32 scalar (RNG seeds).
+    SeedU32(u32),
+}
+
+/// Experiment data for one train/predict call, in the shape the paper's
+/// five experiments use.  Borrowed — the coordinator owns the dataset.
+#[derive(Clone, Copy, Debug)]
+pub enum TrainData<'a> {
+    /// Ground-truth trajectory fit (spiral NODE, Fig. 2):
+    /// `data` is row-major `[T, d]`, `ts` the save grid.
+    Trajectory { data: &'a [f32], ts: &'a [f32] },
+    /// Ensemble moment matching (spiral NSDE, Table 3): `u0` row-major
+    /// `[n_traj, d]`, `mu`/`var` row-major `[T, d]`, `ts` the save grid.
+    Moments {
+        u0: &'a [f32],
+        mu: &'a [f32],
+        var: &'a [f32],
+        ts: &'a [f32],
+    },
+    /// Batched classification (MNIST NODE/NSDE): `x` `[B, D]`, one-hot
+    /// `y` `[B, C]`.
+    Classify { x: &'a [f32], y: &'a [f32] },
+    /// Masked time series (Physionet Latent ODE): `x`/`mask` row-major
+    /// `[B, T, C]`, `ts` the shared grid.
+    Series {
+        x: &'a [f32],
+        mask: &'a [f32],
+        ts: &'a [f32],
+    },
+}
+
+impl TrainData<'_> {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TrainData::Trajectory { .. } => "trajectory",
+            TrainData::Moments { .. } => "moments",
+            TrainData::Classify { .. } => "classify",
+            TrainData::Series { .. } => "series",
+        }
+    }
+}
+
+/// Scalar coefficients of one train step (the coordinator owns every
+/// schedule; backends just consume the values).
+#[derive(Clone, Copy, Debug)]
+pub struct StepCoefs {
+    pub lr: f32,
+    /// `R_E` coefficient (ERNODE/ERNSDE), 0 disables.
+    pub coef_e: f32,
+    /// `R_S` coefficient (SRNODE/SRNSDE), 0 disables.
+    pub coef_s: f32,
+    /// TayNODE auxiliary coefficient (PJRT `tay_train` artifacts only).
+    pub coef_aux: f32,
+    /// KL-annealing coefficient (Latent ODE).
+    pub kl: f32,
+    /// Integration end time (STEER samples this per iteration).
+    pub t1: f32,
+    /// Per-step RNG seed (SDE driving noise, encoder sampling).
+    pub seed: u32,
+}
+
+impl Default for StepCoefs {
+    fn default() -> Self {
+        StepCoefs {
+            lr: 0.01,
+            coef_e: 0.0,
+            coef_s: 0.0,
+            coef_aux: 0.0,
+            kl: 0.0,
+            t1: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Uncommitted result of one train step: the candidate next state plus
+/// the step's metric block.  The caller commits via
+/// [`TrainState::update`] once the budget router accepts the step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub params: Vec<f32>,
+    pub opt_state: Vec<f32>,
+    pub metrics: Metrics,
+}
+
+/// Per-model metadata (the backend-agnostic slice of the PJRT manifest's
+/// `ModelSpec`).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub params_size: usize,
+    pub opt_state_size: usize,
+    pub optimizer: String,
+    /// Paper hyper-parameters (lr, regularization coefficients, ...).
+    pub hyper: BTreeMap<String, f64>,
+}
+
+/// A training/inference runtime for the paper's model zoo.
+pub trait Backend {
+    /// Short runtime name ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Names of the models this backend can run (stable order).
+    fn models(&self) -> Vec<String>;
+
+    /// Metadata for `model` (errors on unknown models).
+    fn model(&self, model: &str) -> Result<ModelInfo>;
+
+    /// Ascending step-attempt budgets — the budget-ladder rungs the
+    /// router escalates/descends over.  `tay` selects the TayNODE ladder
+    /// where the backend distinguishes it.
+    fn ladder(&self, model: &str, tay: bool) -> Result<Vec<usize>>;
+
+    /// Seeded parameter initialization (flat vector of
+    /// `ModelInfo::params_size`).
+    fn init_params(&self, model: &str, seed: u32) -> Result<Vec<f32>>;
+
+    /// Amortize compile/setup cost for every rung + the predict path
+    /// (PJRT JIT warm-up; native no-op).
+    fn warm(&self, model: &str, tay: bool) -> Result<()> {
+        let _ = (model, tay);
+        Ok(())
+    }
+
+    /// One optimizer step on ladder rung `rung`.  Does **not** commit:
+    /// returns the candidate state + metrics for the router to judge.
+    fn train_step(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<StepOutput>;
+
+    /// Inference with the early-exiting (fully adaptive) solver.
+    /// Returns the primary output tensor (trajectory / logits / ...) and
+    /// the standard metric block.
+    fn predict(
+        &self,
+        model: &str,
+        params: &[f32],
+        data: &TrainData,
+        seed: u32,
+    ) -> Result<(Vec<f32>, Metrics)>;
+}

@@ -10,18 +10,11 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{Backend, ModelInfo, StepCoefs, StepOutput, TrainData};
 use super::manifest::{ArtifactSpec, Manifest, TensorSpec};
+use super::state::{Metrics, TrainState};
 
-/// A typed runtime input.
-#[derive(Clone, Debug)]
-pub enum Input<'a> {
-    /// Dense f32 tensor (row-major); shape checked against the spec.
-    F32(&'a [f32]),
-    /// f32 scalar.
-    Scalar(f32),
-    /// u32 scalar (RNG seeds).
-    SeedU32(u32),
-}
+pub use super::backend::Input;
 
 pub struct Engine {
     pub manifest: Manifest,
@@ -171,5 +164,189 @@ impl Engine {
     pub fn init_params(&self, model: &str, seed: u32) -> Result<Vec<f32>> {
         let mut out = self.run(&format!("{model}_init"), &[Input::SeedU32(seed)])?;
         Ok(out.remove(0))
+    }
+
+    /// Ladder artifact for `(model, tay)` at `rung` (borrowed — the train
+    /// hot path must not clone tensor specs per step).
+    fn train_artifact(&self, model: &str, tay: bool, rung: usize) -> Result<&ArtifactSpec> {
+        let ladder = self.manifest.train_ladder(model, tay);
+        match ladder.get(rung) {
+            Some(a) => Ok(*a),
+            None => bail!(
+                "rung {rung} out of ladder for {model} (len {})",
+                ladder.len()
+            ),
+        }
+    }
+}
+
+/// The AOT path behind the backend seam: artifact input lists are
+/// assembled per model in the exact positional order the lowering
+/// declares (python/compile/aot.py).
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.manifest.models.keys().cloned().collect()
+    }
+
+    fn model(&self, model: &str) -> Result<ModelInfo> {
+        let m = self.manifest.model(model)?;
+        Ok(ModelInfo {
+            name: m.name.clone(),
+            params_size: m.params_size,
+            opt_state_size: m.opt_state_size,
+            optimizer: m.optimizer.clone(),
+            hyper: m.hyper.clone(),
+        })
+    }
+
+    fn ladder(&self, model: &str, tay: bool) -> Result<Vec<usize>> {
+        let rungs: Vec<usize> = self
+            .manifest
+            .train_ladder(model, tay)
+            .iter()
+            .map(|a| a.budget.unwrap_or(usize::MAX))
+            .collect();
+        if rungs.is_empty() {
+            bail!("no train artifacts for {model}");
+        }
+        Ok(rungs)
+    }
+
+    fn init_params(&self, model: &str, seed: u32) -> Result<Vec<f32>> {
+        Engine::init_params(self, model, seed)
+    }
+
+    fn warm(&self, model: &str, tay: bool) -> Result<()> {
+        for art in self.manifest.train_ladder(model, tay) {
+            self.load(&art.name)?;
+        }
+        self.load(&format!("{model}_predict"))?;
+        Ok(())
+    }
+
+    fn train_step(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<StepOutput> {
+        let art = self.train_artifact(model, tay, rung)?;
+        let lr = Input::Scalar(coefs.lr);
+        let ce = Input::Scalar(coefs.coef_e);
+        let cs = Input::Scalar(coefs.coef_s);
+        let mut inputs = vec![Input::F32(&state.params), Input::F32(&state.opt_state)];
+        match (model, *data) {
+            ("spiral_node", TrainData::Trajectory { data, ts }) => {
+                inputs.extend([Input::F32(data), Input::F32(ts), lr, ce, cs]);
+            }
+            ("spiral_nsde", TrainData::Moments { u0, mu, var, ts }) => {
+                inputs.extend([
+                    Input::F32(u0),
+                    Input::F32(mu),
+                    Input::F32(var),
+                    Input::F32(ts),
+                    lr,
+                    ce,
+                    cs,
+                    Input::SeedU32(coefs.seed),
+                ]);
+            }
+            ("mnist_node", TrainData::Classify { x, y }) => {
+                inputs.extend([
+                    Input::F32(x),
+                    Input::F32(y),
+                    lr,
+                    ce,
+                    cs,
+                    Input::Scalar(coefs.coef_aux),
+                    Input::Scalar(coefs.t1),
+                ]);
+            }
+            ("mnist_nsde", TrainData::Classify { x, y }) => {
+                inputs.extend([
+                    Input::F32(x),
+                    Input::F32(y),
+                    lr,
+                    ce,
+                    cs,
+                    Input::SeedU32(coefs.seed),
+                ]);
+            }
+            ("latent_ode", TrainData::Series { x, mask, ts }) => {
+                inputs.extend([
+                    Input::F32(x),
+                    Input::F32(mask),
+                    Input::F32(ts),
+                    lr,
+                    ce,
+                    cs,
+                    Input::Scalar(coefs.coef_aux),
+                    Input::Scalar(coefs.kl),
+                    Input::SeedU32(coefs.seed),
+                ]);
+            }
+            (m, d) => bail!("engine: model {m} cannot train on {:?} data", d.kind()),
+        }
+        let out = self
+            .run_spec(art, &inputs)
+            .with_context(|| format!("train step on {}", art.name))?;
+        let [params, opt_state, metrics]: [Vec<f32>; 3] =
+            out.try_into().ok().context("train step arity")?;
+        let metrics = Metrics::decode(&metrics)?;
+        Ok(StepOutput {
+            params,
+            opt_state,
+            metrics,
+        })
+    }
+
+    fn predict(
+        &self,
+        model: &str,
+        params: &[f32],
+        data: &TrainData,
+        seed: u32,
+    ) -> Result<(Vec<f32>, Metrics)> {
+        let mut inputs = vec![Input::F32(params)];
+        match (model, *data) {
+            ("spiral_node", TrainData::Trajectory { data, ts }) => {
+                inputs.extend([Input::F32(data), Input::F32(ts)]);
+            }
+            ("spiral_nsde", TrainData::Moments { u0, mu, var, ts }) => {
+                inputs.extend([
+                    Input::F32(u0),
+                    Input::F32(mu),
+                    Input::F32(var),
+                    Input::F32(ts),
+                    Input::SeedU32(seed),
+                ]);
+            }
+            ("mnist_node", TrainData::Classify { x, y }) => {
+                inputs.extend([Input::F32(x), Input::F32(y)]);
+            }
+            ("mnist_nsde", TrainData::Classify { x, y }) => {
+                inputs.extend([Input::F32(x), Input::F32(y), Input::SeedU32(seed)]);
+            }
+            ("latent_ode", TrainData::Series { x, mask, ts }) => {
+                inputs.extend([
+                    Input::F32(x),
+                    Input::F32(mask),
+                    Input::F32(ts),
+                    Input::SeedU32(seed),
+                ]);
+            }
+            (m, d) => bail!("engine: model {m} cannot predict on {:?} data", d.kind()),
+        }
+        let mut out = self.run(&format!("{model}_predict"), &inputs)?;
+        anyhow::ensure!(out.len() >= 2, "predict artifact must return [out, metrics]");
+        let metrics = Metrics::decode(&out[1])?;
+        Ok((out.remove(0), metrics))
     }
 }

@@ -1,21 +1,63 @@
-//! PJRT runtime: load AOT artifacts, execute them on the hot path.
+//! Training runtimes behind the [`Backend`] seam.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin):
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute`.  HLO *text* is the interchange format
-//! (see python/compile/aot.py for why).  Python never runs here.
-//!
-//! Structure:
-//!  * `manifest` — typed view of artifacts/manifest.json,
-//!  * `engine`   — client + lazily-compiled executable cache + typed
-//!                 input/output marshalling,
-//!  * `state`    — flat parameter/optimizer vectors and the standard
-//!                 9-element metric block shared by all artifacts.
+//! * `backend` — the trait every experiment driver is generic over, plus
+//!   the shared payload types (`TrainData`, `StepCoefs`, `StepOutput`,
+//!   `ModelInfo`, `Input`),
+//! * `native`  — pure-Rust differentiable training (flat-parameter MLPs,
+//!   discrete adjoints through the native adaptive solvers, Adam).  The
+//!   default: no artifacts, no XLA, runs in tier-1 CI,
+//! * `state`   — flat parameter/optimizer vectors and the standard
+//!   9-element metric block shared by both backends,
+//! * `engine` / `manifest` (feature `pjrt`) — the AOT path: typed view of
+//!   `artifacts/manifest.json`, PJRT client + compiled-executable cache +
+//!   typed input/output marshalling.  HLO *text* is the interchange
+//!   format (see python/compile/aot.py); Python never runs here.
 
-pub mod engine;
-pub mod manifest;
+pub mod backend;
+pub mod native;
 pub mod state;
 
-pub use engine::{Engine, Input};
-pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod manifest;
+
+pub use backend::{Backend, Input, ModelInfo, StepCoefs, StepOutput, TrainData};
+pub use native::NativeBackend;
 pub use state::{Metrics, TrainState};
+
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+#[cfg(feature = "pjrt")]
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+
+/// Construct a backend by name.
+///
+/// * `"native"` — always available.
+/// * `"pjrt"`   — requires the `pjrt` cargo feature *and* compiled
+///   artifacts under `artifacts_dir`.
+pub fn make_backend(
+    name: &str,
+    artifacts_dir: &std::path::Path,
+) -> anyhow::Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(Engine::new(artifacts_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            let _ = artifacts_dir;
+            anyhow::bail!(
+                "this build has no PJRT support — rebuild with `--features pjrt` \
+                 (and real xla-rs bindings in place of the vendored stub)"
+            )
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Backend selected by the `REGNDE_BACKEND` env var (default `"native"`).
+pub fn backend_from_env(artifacts_dir: &std::path::Path) -> anyhow::Result<Box<dyn Backend>> {
+    let name = std::env::var("REGNDE_BACKEND").unwrap_or_else(|_| "native".to_string());
+    make_backend(&name, artifacts_dir)
+}

@@ -97,8 +97,10 @@ pub struct SdeTrajectory {
 }
 
 /// Derive the RNG for trajectory `i`: a function of `(seed, i)` only, so
-/// streams are independent of scheduling and of each other.
-fn trajectory_rng(seed: u64, i: usize) -> Rng {
+/// streams are independent of scheduling and of each other.  Shared with
+/// the native backend's NSDE ensembles (`runtime::native`) so both draw
+/// from the same stream family.
+pub(crate) fn trajectory_rng(seed: u64, i: usize) -> Rng {
     Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 

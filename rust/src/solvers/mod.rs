@@ -21,6 +21,7 @@
 //! to many trajectories across a thread pool with deterministic
 //! per-trajectory RNG streams.
 
+pub mod adjoint;
 pub mod controller;
 pub mod ensemble;
 pub mod ode;
@@ -28,10 +29,11 @@ pub mod problems;
 pub mod sde;
 pub mod tableau;
 
+pub use adjoint::{ode_backward, ode_replay, sde_backward, sde_replay, OdeTape, SdeTape};
 pub use ensemble::{
     sde_ensemble_moments, sde_solve_ensemble, solve_ensemble, EnsembleOptions, SdeMoments,
     SdeTrajectory,
 };
-pub use ode::{solve, solve_saveat, OdeOptions, SolveOutcome, Stats};
-pub use sde::{sde_solve_saveat, SdeOptions};
+pub use ode::{solve, solve_saveat, solve_saveat_taped, OdeOptions, SolveOutcome, Stats};
+pub use sde::{sde_solve_saveat, sde_solve_saveat_taped, SdeOptions};
 pub use tableau::Tableau;

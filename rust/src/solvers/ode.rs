@@ -20,6 +20,7 @@
 //! accumulators instead of scratch vectors.  Controller constants and the
 //! error norm are shared with the SDE solver via [`super::controller`].
 
+use super::adjoint::OdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, EPS};
 use super::tableau::Tableau;
 
@@ -103,10 +104,21 @@ struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
     /// Contiguous scratch: `[ks (stages × n) | zi | znew | err | g_x | g_y]`.
     /// `ks` row 0 is the FSAL stage (f at the current `(t, z)`).
     arena: Vec<f64>,
+    /// Optional discrete-adjoint tape: every *accepted* step records
+    /// `(t, h, z_start, stages)` before the state is committed.  `None`
+    /// leaves the stepper bit-identical to the untaped solver.
+    tape: Option<&'a mut OdeTape>,
 }
 
 impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
-    fn new(mut f: F, tab: &'a Tableau, opts: &'a OdeOptions, z0: &[f64], t0: f64, span: f64) -> Self {
+    fn new(
+        mut f: F,
+        tab: &'a Tableau,
+        opts: &'a OdeOptions,
+        z0: &[f64],
+        t0: f64,
+        span: f64,
+    ) -> Self {
         let n = z0.len();
         let s = tab.stages();
         let mut arena = vec![0.0; (s + 5) * n];
@@ -126,6 +138,7 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
                 ..Default::default()
             },
             arena,
+            tape: None,
         }
     }
 
@@ -221,6 +234,9 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
                 self.stats.r_e2 += e_norm * e_norm;
                 self.stats.r_s += stiff;
                 self.stats.naccept += 1;
+                if let Some(tape) = self.tape.as_deref_mut() {
+                    tape.push_step(*t, h, z, ks);
+                }
                 *t += h;
                 z.copy_from_slice(znew);
                 // FSAL: last stage is f at the accepted point.
@@ -295,6 +311,55 @@ pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
     for &t_hi in &ts[1..] {
         ok &= stepper.advance(&mut z, &mut t, t_hi, opts.max_steps);
         out.push(z.clone());
+    }
+    (
+        out,
+        SolveOutcome {
+            z,
+            t,
+            stats: stepper.stats,
+            success: ok,
+        },
+    )
+}
+
+/// [`solve_saveat`] with a discrete-adjoint tape and a **total**
+/// step-attempt budget (the budget-ladder contract: one rung bounds the
+/// whole train-time solve, not each save segment).
+///
+/// The tape is reset and then records every accepted step plus a save
+/// mark per grid point (including `ts[0]`), ready for
+/// [`super::adjoint::ode_backward`].  On budget exhaustion the solve
+/// stops early with `success = false`; the remaining save points repeat
+/// the last state so output shapes stay grid-sized.
+pub fn solve_saveat_taped<F: FnMut(&[f64], f64, &mut [f64])>(
+    f: F,
+    z0: &[f64],
+    ts: &[f64],
+    opts: &OdeOptions,
+    total_budget: u64,
+    tape: &mut OdeTape,
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    assert!(ts.len() >= 2, "need at least two save points");
+    assert!(
+        ts.windows(2).all(|w| w[1] >= w[0]),
+        "save times must be non-decreasing"
+    );
+    tape.reset(z0.len(), opts.tableau.stages());
+    let tab = &opts.tableau;
+    let mut stepper = Stepper::new(f, tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
+    stepper.tape = Some(tape);
+    let mut z = z0.to_vec();
+    let mut t = ts[0];
+    let mut out = Vec::with_capacity(ts.len());
+    out.push(z.clone());
+    stepper.tape.as_deref_mut().unwrap().mark_save();
+    let mut ok = true;
+    for &t_hi in &ts[1..] {
+        let remaining = total_budget.saturating_sub(stepper.stats.attempts());
+        ok &= stepper.advance(&mut z, &mut t, t_hi, remaining);
+        out.push(z.clone());
+        stepper.tape.as_deref_mut().unwrap().mark_save();
     }
     (
         out,
@@ -472,6 +537,43 @@ mod tests {
     #[should_panic(expected = "non-decreasing")]
     fn saveat_rejects_decreasing_grid() {
         let _ = solve_saveat(exp_decay, &[1.0], &[0.0, 0.5, 0.4], &OdeOptions::default());
+    }
+
+    #[test]
+    fn taped_solve_is_bit_identical_to_untaped() {
+        use crate::solvers::adjoint::OdeTape;
+        let ts: Vec<f64> = (0..8).map(|i| i as f64 * 0.2).collect();
+        let opts = OdeOptions {
+            rtol: 1e-7,
+            atol: 1e-7,
+            ..Default::default()
+        };
+        let (zs, out) = solve_saveat(exp_decay, &[1.0, 0.5], &ts, &opts);
+        let mut tape = OdeTape::new();
+        let (zs_t, out_t) =
+            solve_saveat_taped(exp_decay, &[1.0, 0.5], &ts, &opts, u64::MAX, &mut tape);
+        assert_eq!(zs, zs_t, "tape recording must not perturb the solve");
+        assert_eq!(out.stats.nfe, out_t.stats.nfe);
+        assert_eq!(out.stats.naccept, out_t.stats.naccept);
+        assert_eq!(tape.len() as u64, out.stats.naccept);
+        assert_eq!(tape.save_marks().len(), ts.len());
+        assert_eq!(*tape.save_marks().last().unwrap(), tape.len());
+    }
+
+    #[test]
+    fn taped_solve_respects_total_budget() {
+        use crate::solvers::adjoint::OdeTape;
+        let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
+        let opts = OdeOptions {
+            rtol: 1e-9,
+            atol: 1e-9,
+            ..Default::default()
+        };
+        let mut tape = OdeTape::new();
+        let (zs, out) = solve_saveat_taped(exp_decay, &[1.0], &ts, &opts, 3, &mut tape);
+        assert!(!out.success, "3 attempts cannot cover 10 segments");
+        assert!(out.stats.attempts() <= 3);
+        assert_eq!(zs.len(), ts.len(), "outputs stay grid-shaped");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! is preallocated in [`SdeStepper::new`]; the accept/reject loop performs
 //! zero heap allocation (DESIGN.md §Perf).
 
+use super::adjoint::SdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, EPS};
 use super::ode::Stats;
 use crate::util::rng::Rng;
@@ -60,6 +61,9 @@ where
     h_pend: f64,
     stats: Stats,
     arena: Vec<f64>,
+    /// Optional discrete-adjoint tape: accepted steps record
+    /// `(t, h, z_start, ΔW)`.  `None` keeps the stepper bit-identical.
+    tape: Option<&'a mut SdeTape>,
 }
 
 impl<'a, F, G> SdeStepper<'a, F, G>
@@ -77,11 +81,20 @@ where
             h_pend: 0.0,
             stats: Stats::default(),
             arena: vec![0.0; 9 * n],
+            tape: None,
         }
     }
 
     /// Integrate from (t, z) to t_hi in place.  Returns success.
-    fn advance(&mut self, z: &mut [f64], t: &mut f64, t_hi: f64, rng: &mut Rng) -> bool {
+    /// `budget` bounds the step attempts of *this* call.
+    fn advance(
+        &mut self,
+        z: &mut [f64],
+        t: &mut f64,
+        t_hi: f64,
+        rng: &mut Rng,
+        budget: u64,
+    ) -> bool {
         let n = z.len();
         let tol = 1e-12 * t_hi.abs().max(1.0);
         if !t_hi.is_finite() || t_hi < *t - tol {
@@ -98,7 +111,7 @@ where
 
         let mut attempts = 0u64;
         while *t < t_hi - tol {
-            if attempts >= self.opts.max_steps {
+            if attempts >= budget {
                 return false;
             }
             attempts += 1;
@@ -151,6 +164,9 @@ where
                 self.stats.r_s += (num / n as f64 + 1e-300).sqrt()
                     / ((den / n as f64 + 1e-300).sqrt() + EPS);
                 self.stats.naccept += 1;
+                if let Some(tape) = self.tape.as_deref_mut() {
+                    tape.push_step(*t, h_eff, z, dw);
+                }
                 *t += h_eff;
                 z.copy_from_slice(z_heun);
                 self.h = h_eff * pi_factor(q, self.q_prev, ORDER);
@@ -219,8 +235,55 @@ where
         // (not at the last accepted step's floating-point sum), so stage
         // times and Brownian bridging are ulp-identical to the seed.
         let mut t = ts[seg - 1];
-        success &= stepper.advance(&mut z, &mut t, ts[seg], rng);
+        success &= stepper.advance(&mut z, &mut t, ts[seg], rng, opts.max_steps);
         out.push(z.clone());
+    }
+    (out, stepper.stats, success)
+}
+
+/// [`sde_solve_saveat`] with a discrete-adjoint tape and a **total**
+/// step-attempt budget across all save segments (the budget-ladder
+/// contract).  The tape records every accepted `(t, h, z_start, ΔW)` plus
+/// a save mark per grid point, ready for
+/// [`super::adjoint::sde_backward`]; on budget exhaustion the solve stops
+/// early with success `false` and the remaining save points repeat the
+/// last state.
+#[allow(clippy::too_many_arguments)]
+pub fn sde_solve_saveat_taped<F, G>(
+    drift: F,
+    diffusion: G,
+    z0: &[f64],
+    ts: &[f64],
+    rng: &mut Rng,
+    opts: &SdeOptions,
+    total_budget: u64,
+    tape: &mut SdeTape,
+) -> (Vec<Vec<f64>>, Stats, bool)
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    G: FnMut(&[f64], f64, &mut [f64]),
+{
+    assert!(ts.len() >= 2);
+    assert!(
+        ts.windows(2).all(|w| w[1] >= w[0]),
+        "save times must be non-decreasing"
+    );
+    let n = z0.len();
+    tape.reset(n);
+    let span = ts[ts.len() - 1] - ts[0];
+    let mut stepper = SdeStepper::new(drift, diffusion, n, span, opts);
+    stepper.tape = Some(tape);
+    let mut z = z0.to_vec();
+    let mut success = true;
+    let mut out = Vec::with_capacity(ts.len());
+    out.push(z.clone());
+    stepper.tape.as_deref_mut().unwrap().mark_save();
+    for seg in 1..ts.len() {
+        let mut t = ts[seg - 1];
+        let remaining = total_budget.saturating_sub(stepper.stats.attempts());
+        success &= stepper.advance(&mut z, &mut t, ts[seg], rng, remaining);
+        out.push(z.clone());
+        stepper.tape.as_deref_mut().unwrap().mark_save();
     }
     (out, stepper.stats, success)
 }
@@ -317,6 +380,38 @@ mod tests {
         let mean = sum / n_traj as f64;
         let expect = (mu + 0.5 * sig * sig).exp();
         assert!((mean - expect).abs() / expect < 0.05, "{mean} vs {expect}");
+    }
+
+    #[test]
+    fn taped_solve_is_bit_identical_to_untaped() {
+        let ts = [0.0, 0.3, 0.7, 1.0];
+        let opts = SdeOptions {
+            rtol: 1e-3,
+            atol: 1e-3,
+            ..Default::default()
+        };
+        let drift = |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0];
+        let diffusion = |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.3;
+        let mut rng_a = Rng::new(11);
+        let (zs, stats, ok) =
+            sde_solve_saveat(drift, diffusion, &[1.0], &ts, &mut rng_a, &opts);
+        let mut rng_b = Rng::new(11);
+        let mut tape = SdeTape::new();
+        let (zs_t, stats_t, ok_t) = sde_solve_saveat_taped(
+            drift,
+            diffusion,
+            &[1.0],
+            &ts,
+            &mut rng_b,
+            &opts,
+            u64::MAX,
+            &mut tape,
+        );
+        assert!(ok && ok_t);
+        assert_eq!(zs, zs_t, "tape recording must not perturb the solve");
+        assert_eq!(stats.nfe, stats_t.nfe);
+        assert_eq!(tape.len() as u64, stats.naccept);
+        assert_eq!(tape.save_marks().len(), ts.len());
     }
 
     #[test]

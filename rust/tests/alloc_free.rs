@@ -10,9 +10,10 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use regnde::solvers::ode::{solve, OdeOptions};
+use regnde::solvers::adjoint::{OdeTape, SdeTape};
+use regnde::solvers::ode::{solve, solve_saveat_taped, OdeOptions};
 use regnde::solvers::problems;
-use regnde::solvers::sde::{sde_solve_saveat, SdeOptions};
+use regnde::solvers::sde::{sde_solve_saveat, sde_solve_saveat_taped, SdeOptions};
 use regnde::util::rng::Rng;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
@@ -136,6 +137,127 @@ fn step_loop_is_allocation_free() {
     assert!(
         tight.abs_diff(loose) <= 8,
         "SDE allocation count must not scale with step count \
+         ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
+        steps[0],
+        steps[1]
+    );
+
+    // ---- ODE adjoint tape -------------------------------------------------
+    // The accept/reject loop stays allocation-free with a tape attached:
+    // recording appends into the tape's buffers, so once the tape has
+    // grown to capacity (the warm-up solve below), re-running at any
+    // tolerance performs a constant number of allocations — zero per
+    // step attempt beyond the recorded accepted-step tape.
+    let mk = |tol: f64| OdeOptions {
+        rtol: tol,
+        atol: tol,
+        ..Default::default()
+    };
+    let ts = [0.0, 1.5];
+    let mut tape = OdeTape::new();
+    // Warm-up at the tightest tolerance grows the tape to max capacity.
+    let _ =
+        solve_saveat_taped(problems::spiral_ode, &[2.0, 0.0], &ts, &mk(1e-9), u64::MAX, &mut tape);
+
+    let mut steps = [0u64; 2];
+    let loose = count_allocs(|| {
+        let (_, out) = solve_saveat_taped(
+            problems::spiral_ode,
+            &[2.0, 0.0],
+            &ts,
+            &mk(1e-3),
+            u64::MAX,
+            &mut tape,
+        );
+        assert!(out.success);
+        steps[0] = out.stats.attempts();
+    });
+    let tight = count_allocs(|| {
+        let (_, out) = solve_saveat_taped(
+            problems::spiral_ode,
+            &[2.0, 0.0],
+            &ts,
+            &mk(1e-9),
+            u64::MAX,
+            &mut tape,
+        );
+        assert!(out.success);
+        steps[1] = out.stats.attempts();
+    });
+    assert!(
+        steps[1] > 4 * steps[0],
+        "tight taped solve must take far more steps ({} vs {})",
+        steps[1],
+        steps[0]
+    );
+    assert!(
+        tight.abs_diff(loose) <= 8,
+        "taped ODE allocation count must not scale with step count \
+         ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
+        steps[0],
+        steps[1]
+    );
+
+    // ---- SDE adjoint tape -------------------------------------------------
+    let mk = |tol: f64| SdeOptions {
+        rtol: tol,
+        atol: tol,
+        ..Default::default()
+    };
+    let mut tape = SdeTape::new();
+    {
+        let mut rng = Rng::new(6);
+        let _ = sde_solve_saveat_taped(
+            problems::spiral_sde_drift,
+            problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &[0.0, 1.0],
+            &mut rng,
+            &mk(1e-4),
+            u64::MAX,
+            &mut tape,
+        );
+    }
+    let mut steps = [0u64; 2];
+    let loose = count_allocs(|| {
+        let mut rng = Rng::new(6);
+        let (_, stats, ok) = sde_solve_saveat_taped(
+            problems::spiral_sde_drift,
+            problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &[0.0, 1.0],
+            &mut rng,
+            &mk(1e-1),
+            u64::MAX,
+            &mut tape,
+        );
+        assert!(ok);
+        steps[0] = stats.attempts();
+    });
+    let tight = count_allocs(|| {
+        let mut rng = Rng::new(6);
+        let (_, stats, ok) = sde_solve_saveat_taped(
+            problems::spiral_sde_drift,
+            problems::spiral_sde_diffusion,
+            &[1.0, 1.0],
+            &[0.0, 1.0],
+            &mut rng,
+            &mk(1e-4),
+            u64::MAX,
+            &mut tape,
+        );
+        assert!(ok);
+        steps[1] = stats.attempts();
+    });
+    assert!(
+        steps[1] > 4 * steps[0],
+        "tight taped SDE solve must take far more steps ({} vs {})",
+        steps[1],
+        steps[0]
+    );
+    assert!(
+        tight.abs_diff(loose) <= 8,
+        "taped SDE allocation count must not scale with step count \
          ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
         steps[0],
         steps[1]

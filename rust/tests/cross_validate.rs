@@ -4,6 +4,10 @@
 //! This pins down the semantic equivalence of the two solver stacks — same
 //! tableau constants, same error norm / controller — which is what lets the
 //! Rust suite serve as ground-truth data generator for the experiments.
+//!
+//! Requires `--features pjrt`, real xla bindings and compiled artifacts.
+
+#![cfg(feature = "pjrt")]
 
 use regnde::data::spiral;
 use regnde::runtime::{Engine, Input};

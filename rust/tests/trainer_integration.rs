@@ -1,16 +1,21 @@
-//! Integration tests over the full L3 trainer stack: engine + data +
+//! Integration tests over the full L3 trainer stack: backend + data +
 //! budget routing + schedules, on real (tiny) training runs.
 //!
 //! These use very small epoch/iteration counts — they verify *plumbing and
 //! semantics* (finite metrics, NFE accounting, router behaviour, method
 //! coefficient wiring), not convergence; the benches cover the latter.
+//!
+//! Everything here runs on the native discrete-adjoint backend, so the
+//! whole file executes in tier-1 CI with no artifacts or XLA.  The same
+//! assertions against the PJRT engine live in the feature-gated `pjrt`
+//! module at the bottom.
 
 use regnde::coordinator::experiments::{self, TrainOpts};
 use regnde::coordinator::Method;
-use regnde::runtime::Engine;
+use regnde::runtime::{Backend, NativeBackend};
 
-fn engine() -> Engine {
-    Engine::new(regnde::default_artifacts_dir()).expect("artifacts built?")
+fn backend() -> NativeBackend {
+    NativeBackend::new()
 }
 
 fn tiny() -> TrainOpts {
@@ -24,8 +29,8 @@ fn tiny() -> TrainOpts {
 
 #[test]
 fn spiral_node_vanilla_runs() {
-    let e = engine();
-    let r = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    let be = backend();
+    let r = experiments::run_by_name(&be, "spiral-node", Method::VANILLA, tiny()).unwrap();
     assert_eq!(r.epochs.len(), 1);
     assert!(r.epochs[0].loss.is_finite());
     assert!(r.predict_nfe > 0.0);
@@ -34,23 +39,48 @@ fn spiral_node_vanilla_runs() {
 
 #[test]
 fn spiral_node_regularized_accumulates_r_terms() {
-    let e = engine();
+    let be = backend();
     let m = Method::parse("srnode+ernode").unwrap();
-    let r = experiments::run_by_name(&e, "spiral-node", m, tiny()).unwrap();
+    let r = experiments::run_by_name(&be, "spiral-node", m, tiny()).unwrap();
     assert_eq!(r.method, "SRNODE + ERNODE");
     assert!(r.epochs[0].r_e > 0.0, "R_E accumulated");
     assert!(r.epochs[0].r_s > 0.0, "R_S accumulated");
 }
 
 #[test]
+fn spiral_node_regularization_changes_training() {
+    // ERNODE's R_E gradient must actually steer the parameters: same
+    // seed, different trajectory than vanilla after a few steps.
+    let be = backend();
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 5,
+        seed: 0,
+        verbose: false,
+    };
+    let v = experiments::run_by_name(&be, "spiral-node", Method::VANILLA, opts).unwrap();
+    let e = experiments::run_by_name(
+        &be,
+        "spiral-node",
+        Method::parse("ernode").unwrap(),
+        opts,
+    )
+    .unwrap();
+    assert_ne!(
+        v.final_test_loss, e.final_test_loss,
+        "regularizer gradient must alter the fit"
+    );
+}
+
+#[test]
 fn mnist_node_methods_wire_coefficients() {
-    let e = engine();
+    let be = backend();
     let vanilla =
-        experiments::run_by_name(&e, "mnist-node", Method::VANILLA, tiny()).unwrap();
+        experiments::run_by_name(&be, "mnist-node", Method::VANILLA, tiny()).unwrap();
     assert!(vanilla.epochs[0].loss.is_finite());
     assert!(vanilla.final_test_metric >= 0.0);
     let steer = experiments::run_by_name(
-        &e,
+        &be,
         "mnist-node",
         Method::parse("steer").unwrap(),
         tiny(),
@@ -62,9 +92,9 @@ fn mnist_node_methods_wire_coefficients() {
 
 #[test]
 fn mnist_nsde_runs_and_counts_sde_nfe() {
-    let e = engine();
+    let be = backend();
     let r = experiments::run_by_name(
-        &e,
+        &be,
         "mnist-nsde",
         Method::parse("ernsde").unwrap(),
         tiny(),
@@ -74,13 +104,14 @@ fn mnist_nsde_runs_and_counts_sde_nfe() {
     // SDE accounting: 4 evals per attempt
     let rec = r.epochs[0];
     assert!((rec.nfe - 4.0 * (rec.naccept + rec.nreject)).abs() < 1e-6);
+    assert!(rec.r_e > 0.0, "ERNSDE accumulates R_E");
 }
 
 #[test]
 fn spiral_nsde_runs() {
-    let e = engine();
+    let be = backend();
     let r = experiments::run_by_name(
-        &e,
+        &be,
         "spiral-nsde",
         Method::parse("srnsde").unwrap(),
         tiny(),
@@ -92,9 +123,9 @@ fn spiral_nsde_runs() {
 
 #[test]
 fn latent_ode_runs_with_steer_grid_perturbation() {
-    let e = engine();
+    let be = backend();
     let r = experiments::run_by_name(
-        &e,
+        &be,
         "latent-ode",
         Method::parse("steer").unwrap(),
         tiny(),
@@ -106,22 +137,19 @@ fn latent_ode_runs_with_steer_grid_perturbation() {
 
 #[test]
 fn unknown_experiment_rejected() {
-    let e = engine();
-    assert!(experiments::run_by_name(&e, "cifar", Method::VANILLA, tiny()).is_err());
+    let be = backend();
+    assert!(experiments::run_by_name(&be, "cifar", Method::VANILLA, tiny()).is_err());
 }
 
 #[test]
 fn replica_seeds_change_results() {
-    let e = engine();
-    let a = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    let be = backend();
+    let a = experiments::run_by_name(&be, "spiral-node", Method::VANILLA, tiny()).unwrap();
     let b = experiments::run_by_name(
-        &e,
+        &be,
         "spiral-node",
         Method::VANILLA,
-        TrainOpts {
-            seed: 1,
-            ..tiny()
-        },
+        TrainOpts { seed: 1, ..tiny() },
     )
     .unwrap();
     assert_ne!(a.epochs[0].loss, b.epochs[0].loss);
@@ -129,9 +157,76 @@ fn replica_seeds_change_results() {
 
 #[test]
 fn same_seed_reproduces() {
-    let e = engine();
-    let a = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
-    let b = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    let be = backend();
+    let a = experiments::run_by_name(&be, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    let b = experiments::run_by_name(&be, "spiral-node", Method::VANILLA, tiny()).unwrap();
     assert_eq!(a.epochs[0].loss, b.epochs[0].loss);
     assert_eq!(a.predict_nfe, b.predict_nfe);
+}
+
+#[test]
+fn router_escalates_on_tiny_budgets_and_recovers() {
+    // Force the first rungs to be unusable: the router must escalate to
+    // the top rung, retry the batches there, and finish the run.
+    let be = NativeBackend::new().with_ladder("spiral_node", vec![2, 4, 8192]);
+    let r = experiments::run_by_name(&be, "spiral-node", Method::VANILLA, tiny()).unwrap();
+    assert!(r.escalations >= 2, "tiny rungs must force escalation");
+    assert!(r.epochs[0].loss.is_finite());
+    assert_eq!(r.epochs[0].rung, 2, "run must settle on the top rung");
+}
+
+#[test]
+fn native_backend_reports_model_info() {
+    let be = backend();
+    for model in ["spiral_node", "spiral_nsde", "mnist_node", "mnist_nsde", "latent_ode"] {
+        let info = be.model(model).unwrap();
+        assert!(info.params_size > 0);
+        assert_eq!(info.opt_state_size, 2 * info.params_size);
+        assert!(info.hyper.contains_key("lr"), "{model} must expose lr");
+        let ladder = be.ladder(model, false).unwrap();
+        assert!(ladder.windows(2).all(|w| w[0] < w[1]));
+    }
+}
+
+/// The same plumbing assertions against the PJRT artifact engine.
+/// Requires `--features pjrt`, real xla bindings and compiled artifacts.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use regnde::runtime::Engine;
+
+    fn engine() -> Engine {
+        Engine::new(regnde::default_artifacts_dir()).expect("artifacts built?")
+    }
+
+    #[test]
+    fn spiral_node_vanilla_runs_on_engine() {
+        let e = engine();
+        let r = experiments::run_by_name(&e, "spiral-node", Method::VANILLA, tiny()).unwrap();
+        assert!(r.epochs[0].loss.is_finite());
+        assert!(r.predict_nfe > 0.0);
+    }
+
+    #[test]
+    fn spiral_node_regularized_accumulates_r_terms_on_engine() {
+        let e = engine();
+        let m = Method::parse("srnode+ernode").unwrap();
+        let r = experiments::run_by_name(&e, "spiral-node", m, tiny()).unwrap();
+        assert!(r.epochs[0].r_e > 0.0);
+        assert!(r.epochs[0].r_s > 0.0);
+    }
+
+    #[test]
+    fn mnist_nsde_counts_sde_nfe_on_engine() {
+        let e = engine();
+        let r = experiments::run_by_name(
+            &e,
+            "mnist-nsde",
+            Method::parse("ernsde").unwrap(),
+            tiny(),
+        )
+        .unwrap();
+        let rec = r.epochs[0];
+        assert!((rec.nfe - 4.0 * (rec.naccept + rec.nreject)).abs() < 1e-6);
+    }
 }

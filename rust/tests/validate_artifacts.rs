@@ -1,6 +1,10 @@
 //! Whole-manifest smoke: every artifact compiles and executes once with
 //! shape-correct synthetic inputs, and its outputs decode per the manifest.
 //! Also failure-injection tests for the engine's input validation.
+//!
+//! Requires `--features pjrt`, real xla bindings and compiled artifacts.
+
+#![cfg(feature = "pjrt")]
 
 use regnde::runtime::{Engine, Input};
 

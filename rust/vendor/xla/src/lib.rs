@@ -1,0 +1,132 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The build image has no network access and no prebuilt XLA/PJRT shared
+//! library, so this vendored crate provides the exact API surface
+//! `regnde::runtime::engine` consumes — enough for `cargo check --features
+//! pjrt` to typecheck the whole PJRT path.  Every entry point that would
+//! touch a real PJRT plugin returns [`Error::Unavailable`] at runtime.
+//!
+//! Production deployments swap this one dependency line in
+//! `rust/Cargo.toml` for the real bindings
+//! (`xla = { git = "https://github.com/LaurentMazare/xla-rs" }` plus
+//! `XLA_EXTENSION_DIR`); no Rust source changes are required because the
+//! signatures below mirror the real crate.
+
+use std::fmt;
+
+/// Stub error: the PJRT runtime is not linked into this build.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real xla-rs PJRT bindings \
+                 (this build vendors rust/vendor/xla, a typecheck-only stub)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the engine marshals (f32 tensors, u32 seeds).
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for u32 {}
+
+/// Host-side literal (dense tensor or tuple).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar<T: NativeType>(_x: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable bound to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
