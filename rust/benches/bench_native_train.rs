@@ -1,0 +1,99 @@
+//! Native training perf smoke: a short spiral-NODE `srnode+ernode` run
+//! through the discrete-adjoint backend — forward tape + backward pass
+//! differentiating `data_loss + coef_e·R_E + coef_s·R_S` — timed end to
+//! end, with the paper-claim invariants asserted inline.
+//!
+//! Emits `BENCH_native_train.json` at the repo root (schema documented in
+//! rust/DESIGN.md §Perf) so the native-training perf trajectory is
+//! tracked PR over PR alongside `BENCH_solver_core.json`.
+//!
+//! Scale knobs (env):
+//!   REGNDE_BENCH_EPOCHS  training epochs            (default 3)
+//!   REGNDE_BENCH_ITERS   optimizer steps per epoch  (default 25)
+
+use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::Method;
+use regnde::runtime::NativeBackend;
+use regnde::util::cli::env_usize;
+use regnde::util::json::{obj, Json};
+use regnde::util::tablefmt::Table;
+
+fn main() {
+    let epochs = env_usize("REGNDE_BENCH_EPOCHS", 3).max(1);
+    let iters = env_usize("REGNDE_BENCH_ITERS", 25).max(1);
+    let method = Method::parse("srnode+ernode").expect("method");
+    let opts = TrainOpts {
+        epochs,
+        iters_per_epoch: iters,
+        seed: 0,
+        verbose: false,
+    };
+
+    let be = NativeBackend::new();
+    let run = experiments::run_by_name(&be, "spiral-node", method, opts).expect("train run");
+
+    let first = run.epochs.first().expect("epochs recorded");
+    let last = run.epochs.last().expect("epochs recorded");
+    let total_steps = (epochs * iters) as f64;
+    let steps_per_sec = total_steps / run.train_time_s.max(1e-9);
+
+    // The invariants the CI smoke rides on: both regularizers accumulate,
+    // the stiffness gradient is part of the update (PR 3), and the short
+    // run still optimizes.
+    assert!(last.r_e > 0.0, "R_E must accumulate (got {})", last.r_e);
+    assert!(last.r_s > 0.0, "R_S must accumulate (got {})", last.r_s);
+    assert!(
+        last.loss.is_finite() && last.loss < first.loss,
+        "training must decrease the loss ({} -> {})",
+        first.loss,
+        last.loss
+    );
+
+    let mut table = Table::new(
+        "Native training — spiral NODE, SRNODE + ERNODE (discrete adjoint)",
+        &["epochs x iters", "steps/sec", "final loss", "final NFE", "r_e", "r_s"],
+    );
+    table.row(vec![
+        format!("{epochs} x {iters}"),
+        format!("{steps_per_sec:.2}"),
+        format!("{:.5}", last.loss),
+        format!("{:.1}", last.nfe),
+        format!("{:.3e}", last.r_e),
+        format!("{:.3e}", last.r_s),
+    ]);
+    println!("{}", table.render());
+
+    let report = obj([
+        ("schema", Json::from("bench_native_train/v1")),
+        ("experiment", Json::from(run.experiment.as_str())),
+        ("method", Json::from(run.method.as_str())),
+        ("epochs", Json::from(epochs)),
+        ("iters_per_epoch", Json::from(iters)),
+        ("train_time_s", Json::from(run.train_time_s)),
+        ("steps_per_sec", Json::from(steps_per_sec)),
+        ("loss_first_epoch", Json::from(first.loss)),
+        ("loss_final_epoch", Json::from(last.loss)),
+        ("nfe_final_epoch", Json::from(last.nfe)),
+        ("r_e_final_epoch", Json::from(last.r_e)),
+        ("r_s_final_epoch", Json::from(last.r_s)),
+        ("predict_nfe", Json::from(run.predict_nfe)),
+        ("predict_time_s", Json::from(run.predict_time_s)),
+        ("escalations", Json::from(run.escalations as usize)),
+        (
+            "meta",
+            obj([(
+                "available_parallelism",
+                Json::from(
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1),
+                ),
+            )]),
+        ),
+    ]);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_native_train.json");
+    std::fs::write(&path, report.to_string_pretty()).expect("write bench report");
+    println!("wrote {}", path.display());
+}

@@ -17,16 +17,10 @@ use regnde::data::spiral::uniform_grid;
 use regnde::solvers::{
     problems, sde_ensemble_moments, solve, EnsembleOptions, OdeOptions, SdeOptions, Tableau,
 };
+use regnde::util::cli::env_usize;
 use regnde::util::json::{obj, Json};
 use regnde::util::tablefmt::Table;
 use regnde::util::threadpool::default_workers;
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
 
 /// Best-of-`reps` single-trajectory stepping rate for one ODE case.
 fn single_case(

@@ -27,13 +27,10 @@ impl BenchConfig {
     /// Read scale knobs from the environment (defaults keep a full table
     /// bench in the minutes range on this CPU testbed).
     pub fn from_env(default_epochs: usize, default_iters: usize) -> Self {
-        let get = |k: &str, d: usize| -> usize {
-            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
-        };
-        let n_seeds = get("REGNDE_BENCH_SEEDS", 2);
+        let n_seeds = crate::util::cli::env_usize("REGNDE_BENCH_SEEDS", 2);
         Self {
-            epochs: get("REGNDE_BENCH_EPOCHS", default_epochs),
-            iters: get("REGNDE_BENCH_ITERS", default_iters),
+            epochs: crate::util::cli::env_usize("REGNDE_BENCH_EPOCHS", default_epochs),
+            iters: crate::util::cli::env_usize("REGNDE_BENCH_ITERS", default_iters),
             seeds: (0..n_seeds as u64).collect(),
         }
     }

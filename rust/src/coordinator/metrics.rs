@@ -13,6 +13,8 @@ pub struct EpochRecord {
     pub naccept: f64,
     pub nreject: f64,
     pub r_e: f64,
+    /// `Σ E_j²` variant accumulator (native backend; 0 on PJRT).
+    pub r_e2: f64,
     pub r_s: f64,
     pub wall_s: f64,
     pub rung: usize,
@@ -28,6 +30,7 @@ impl EpochRecord {
             ("naccept", self.naccept.into()),
             ("nreject", self.nreject.into()),
             ("r_e", self.r_e.into()),
+            ("r_e2", self.r_e2.into()),
             ("r_s", self.r_s.into()),
             ("wall_s", self.wall_s.into()),
             ("rung", self.rung.into()),
@@ -51,6 +54,7 @@ impl EpochAccumulator {
         self.sums.naccept += m.naccept;
         self.sums.nreject += m.nreject;
         self.sums.r_e += m.r_e;
+        self.sums.r_e2 += m.r_e2;
         self.sums.r_s += m.r_s;
     }
 
@@ -64,6 +68,7 @@ impl EpochAccumulator {
             naccept: self.sums.naccept / n,
             nreject: self.sums.nreject / n,
             r_e: self.sums.r_e / n,
+            r_e2: self.sums.r_e2 / n,
             r_s: self.sums.r_s / n,
             wall_s,
             rung,
@@ -133,14 +138,18 @@ mod tests {
             acc.push(&Metrics {
                 loss: i as f64,
                 nfe: 10.0 * i as f64,
+                r_e2: 2.0 * i as f64,
                 ..Default::default()
             });
         }
         let rec = acc.finish(3, 1.5, 1);
         assert_eq!(rec.loss, 1.5);
         assert_eq!(rec.nfe, 15.0);
+        assert_eq!(rec.r_e2, 3.0, "r_e2 must ride the epoch average");
         assert_eq!(rec.epoch, 3);
         assert_eq!(rec.rung, 1);
+        let j = rec.to_json();
+        assert!(j.get("r_e2").is_some(), "r_e2 must be recorded");
     }
 
     #[test]

@@ -169,8 +169,10 @@ fn list(backend: &dyn Backend) -> Result<()> {
 
 /// The method-vs-vanilla comparison behind CI's native smoke run: trains
 /// both from the same seed and prints the paper-style summary.  With
-/// `check_nfe`, exits nonzero unless the regularized run's final-epoch
-/// NFE is no worse than vanilla's — the paper's core claim.
+/// `check_nfe`, exits nonzero unless the regularized run accumulates its
+/// regularizers, decreases the loss, ends with NFE no worse than
+/// vanilla's, and — for `sr` methods — actually *trains* on the
+/// stiffness gradient (zeroing coef_s must change the trajectory).
 fn compare_run(
     backend: &dyn Backend,
     exp: &str,
@@ -198,10 +200,12 @@ fn compare_run(
     let reg_last = reg.epochs.last().context("no epochs")?;
     let van_last = vanilla.epochs.last().context("no epochs")?;
     println!(
-        "\nregularized: loss {:.5} -> {:.5}, r_e {:.3e}, NFE ratio vanilla/reg = {:.3}x",
+        "\nregularized: loss {:.5} -> {:.5}, r_e {:.3e}, r_s {:.3e}, \
+         NFE ratio vanilla/reg = {:.3}x",
         reg_first.loss,
         reg_last.loss,
         reg_last.r_e,
+        reg_last.r_s,
         van_last.nfe / reg_last.nfe.max(1e-9),
     );
 
@@ -223,6 +227,31 @@ fn compare_run(
             reg_last.nfe,
             van_last.nfe
         );
+        if method.sr {
+            anyhow::ensure!(
+                reg_last.r_s > 0.0,
+                "sr method must accumulate R_S (got {})",
+                reg_last.r_s
+            );
+            // Gradient-path liveness: the same run with coef_s zeroed
+            // (the sr component removed) must land on different
+            // parameters.  If it doesn't, R_S is riding the loss value
+            // without reaching the Adam update.
+            let no_sr = Method { sr: false, ..method };
+            let base_run;
+            let base = if no_sr == Method::VANILLA {
+                &vanilla
+            } else {
+                base_run = experiments::run_by_name(backend, exp, no_sr, opts)?;
+                &base_run
+            };
+            anyhow::ensure!(
+                reg.final_train_loss != base.final_train_loss,
+                "zeroing coef_s left training unchanged — stiffness \
+                 gradient path is dead"
+            );
+            println!("check-sr: OK (R_S {:.3e}, coef_s path live)", reg_last.r_s);
+        }
         println!("check-nfe: OK (reg {} <= vanilla {})", reg_last.nfe, van_last.nfe);
     }
     Ok(())

@@ -4,13 +4,23 @@
 //! Each of the five experiment models is a composition of flat-parameter
 //! MLPs (`models::mlp`) around the native adaptive solvers: the forward
 //! solve records a discrete-adjoint tape of the accepted steps
-//! (`solvers::adjoint`), the backward pass pulls the data loss *and* the
-//! white-boxed `R_E = Σ E_j |h_j|` regularizer back through those steps,
-//! and Adam updates the same flat `TrainState` vectors the PJRT
-//! artifacts use.  `R_S` is accumulated and *reported* (and enters the
-//! loss value) but is treated as a constant by the gradient — the
-//! stiffness regularizer's discrete derivative is deferred to the PJRT
-//! path.  TayNODE's high-order terms are likewise PJRT-only: the native
+//! (`solvers::adjoint`), the backward pass pulls the data loss *and*
+//! **both** white-boxed regularizers — `R_E = Σ E_j |h_j|` (Eq. 9) and
+//! the Shampine stiffness ratio `R_S = Σ S_j` (Eq. 8/11) — back through
+//! those steps, and Adam updates the same flat `TrainState` vectors the
+//! PJRT artifacts use.  The update therefore sees exactly the objective
+//! the metrics report: `∇(data_loss + coef_e·R_E + coef_s·R_S)`.
+//!
+//! The stiffness adjoint needs no extra tape storage: the ODE tape's
+//! per-step record `[z_start | k_0 … k_{s-1}]` lets the backward pass
+//! reconstruct the equal-`c` stage states `g_x`/`g_y` entering `S_j`
+//! (`g_i = z + h Σ_j a_ij k_j`), and the SDE tape's `[z_start | ΔW]`
+//! record lets it recompute the Heun internals behind the drift-based
+//! surrogate.  The accepted step sequence (and the Brownian increments)
+//! stay frozen exactly as for `R_E` — `ode_replay`/`sde_replay` re-run
+//! that frozen program and return both accumulators so
+//! `tests/adjoint_gradcheck.rs` can finite-difference the full SRNODE
+//! objective.  TayNODE's high-order terms remain PJRT-only: the native
 //! `tay` ladder aliases the plain one with `r_aux = 0` (avoiding exactly
 //! the K-th-order AD the paper positions itself against).
 //!
@@ -333,6 +343,7 @@ fn metrics(loss: f64, metric: f64, stats: &Stats, success: bool) -> Metrics {
         nreject: stats.nreject as f64,
         success,
         r_e: stats.r_e,
+        r_e2: stats.r_e2,
         r_s: stats.r_s,
         r_aux: 0.0,
     }
@@ -437,6 +448,8 @@ impl Backend for NativeBackend {
         let budget = m.ladder[rung] as u64;
         let theta = to_f64(&state.params);
         let mut grad = vec![0.0; theta.len()];
+        let coef_e = coefs.coef_e as f64;
+        let coef_s = coefs.coef_s as f64;
 
         let (data_loss, metric, stats, success) = match (&m.arch, data) {
             (Arch::SpiralNode { dynamics }, TrainData::Trajectory { data, ts }) => {
@@ -447,7 +460,8 @@ impl Backend for NativeBackend {
                     ts,
                     &Self::ode_opts(m.train_tol),
                     budget,
-                    coefs.coef_e as f64,
+                    coef_e,
+                    coef_s,
                     &mut grad,
                 )?
             }
@@ -463,7 +477,8 @@ impl Backend for NativeBackend {
                     ts,
                     &Self::sde_opts(m.train_tol),
                     budget,
-                    coefs.coef_e as f64,
+                    coef_e,
+                    coef_s,
                     coefs.seed,
                     &mut grad,
                 )?
@@ -480,7 +495,8 @@ impl Backend for NativeBackend {
                     coefs.t1 as f64,
                     &Self::ode_opts(m.train_tol),
                     budget,
-                    coefs.coef_e as f64,
+                    coef_e,
+                    coef_s,
                     &mut grad,
                 )?
             }
@@ -503,7 +519,8 @@ impl Backend for NativeBackend {
                 y,
                 &Self::sde_opts(m.train_tol),
                 budget,
-                coefs.coef_e as f64,
+                coef_e,
+                coef_s,
                 coefs.seed,
                 &mut grad,
             )?,
@@ -520,15 +537,17 @@ impl Backend for NativeBackend {
                     coefs.kl as f64,
                     &Self::ode_opts(m.train_tol),
                     budget,
-                    coefs.coef_e as f64,
+                    coef_e,
+                    coef_s,
                     &mut grad,
                 )?
             }
             (_, d) => bail!("model {model} cannot train on {:?} data", d.kind()),
         };
 
-        let loss =
-            data_loss + coefs.coef_e as f64 * stats.r_e + coefs.coef_s as f64 * stats.r_s;
+        // The reported loss and the gradient now compose identically:
+        // both are data_loss + coef_e·R_E + coef_s·R_S.
+        let loss = data_loss + coef_e * stats.r_e + coef_s * stats.r_s;
 
         let mut params = state.params.clone();
         let mut opt_state = state.opt_state.clone();
@@ -649,6 +668,7 @@ fn spiral_node_pass(
     opts: &OdeOptions,
     budget: u64,
     coef_e: f64,
+    coef_s: f64,
     grad: &mut [f64],
 ) -> Result<(f64, f64, Stats, bool)> {
     let d = dynamics.in_dim();
@@ -685,6 +705,7 @@ fn spiral_node_pass(
         &opts.tableau,
         &save_grads,
         coef_e,
+        coef_s,
         grad,
         |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
             dynamics.vjp(theta, z, w, gz, gp, &mut sb);
@@ -777,6 +798,7 @@ fn spiral_nsde_pass(
     opts: &SdeOptions,
     budget: u64,
     coef_e: f64,
+    coef_s: f64,
     seed: u32,
     grad: &mut [f64],
 ) -> Result<(f64, f64, Stats, bool)> {
@@ -843,6 +865,7 @@ fn spiral_nsde_pass(
                 &tapes[i],
                 &sg,
                 coef_e,
+                coef_s,
                 grad,
                 |z: &[f64], _t: f64, dz: &mut [f64]| drift.forward(th_drift, z, dz, &mut sdb),
                 |z: &[f64], _t: f64, dg: &mut [f64]| {
@@ -1015,6 +1038,7 @@ fn mnist_node_pass(
     opts: &OdeOptions,
     budget: u64,
     coef_e: f64,
+    coef_s: f64,
     grad: &mut [f64],
 ) -> Result<(f64, f64, Stats, bool)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
@@ -1056,6 +1080,7 @@ fn mnist_node_pass(
         &opts.tableau,
         &save_grads,
         coef_e,
+        coef_s,
         grad,
         |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
             let gdyn = &mut gp[dyn_range.clone()];
@@ -1127,6 +1152,7 @@ fn mnist_nsde_pass(
     opts: &SdeOptions,
     budget: u64,
     coef_e: f64,
+    coef_s: f64,
     seed: u32,
     grad: &mut [f64],
 ) -> Result<(f64, f64, Stats, bool)> {
@@ -1181,6 +1207,7 @@ fn mnist_nsde_pass(
         &tape,
         &save_grads,
         coef_e,
+        coef_s,
         grad,
         |z: &[f64], _t: f64, dz: &mut [f64]| {
             for r in 0..b {
@@ -1308,6 +1335,7 @@ fn latent_ode_pass(
     opts: &OdeOptions,
     budget: u64,
     coef_e: f64,
+    coef_s: f64,
     grad: &mut [f64],
 ) -> Result<(f64, f64, Stats, bool)> {
     let c = dec.out_dim();
@@ -1404,6 +1432,7 @@ fn latent_ode_pass(
         &opts.tableau,
         &save_grads,
         coef_e,
+        coef_s,
         grad,
         |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
             let gdyn = &mut gp[dyn_range.clone()];
@@ -1579,6 +1608,80 @@ mod tests {
         assert!(
             last < first,
             "25 Adam steps must reduce the loss ({first} -> {last})"
+        );
+    }
+
+    /// Run a few committed train steps and return the final parameters.
+    /// Several steps, not one: Adam's bias-corrected first update is
+    /// `≈ lr · sign(g)`, so a small gradient perturbation only becomes
+    /// visible in f32 parameters once `m`/`v` carry history.
+    fn train_params(
+        be: &NativeBackend,
+        model: &str,
+        data: &TrainData,
+        coefs: &StepCoefs,
+        steps: usize,
+    ) -> (Vec<f32>, Metrics) {
+        let info = be.model(model).unwrap();
+        let mut state =
+            TrainState::new(be.init_params(model, 0).unwrap(), info.opt_state_size);
+        let mut last = Metrics::default();
+        for _ in 0..steps {
+            let out = be.train_step(model, false, 0, &state, data, coefs).unwrap();
+            last = out.metrics;
+            state.update(out.params, out.opt_state).unwrap();
+        }
+        (state.params, last)
+    }
+
+    #[test]
+    fn coef_s_gradient_path_is_live() {
+        // Same init, same data: toggling coef_s must change the trained
+        // parameters — the stiffness regularizer is differentiated through
+        // the tape, not just added to the reported loss value.
+        let (traj, ts) = spiral_fixture(16);
+        let be = NativeBackend::new();
+        let data = TrainData::Trajectory { data: &traj, ts: &ts };
+        let with_sr = StepCoefs {
+            coef_e: 100.0,
+            coef_s: 0.02,
+            ..Default::default()
+        };
+        let without = StepCoefs {
+            coef_e: 100.0,
+            coef_s: 0.0,
+            ..Default::default()
+        };
+        let (pa, ma) = train_params(&be, "spiral_node", &data, &with_sr, 3);
+        let (pb, _) = train_params(&be, "spiral_node", &data, &without, 3);
+        assert!(ma.r_s > 0.0, "R_S must accumulate");
+        assert_ne!(
+            pa, pb,
+            "coef_s must alter the ODE gradient, not just the loss value"
+        );
+
+        // SDE path: same check on the spiral NSDE moment objective.
+        let ts_sde = spiral::uniform_grid(8, 0.5);
+        let ts_f32: Vec<f32> = ts_sde.iter().map(|&t| t as f32).collect();
+        let (mu, var) = spiral::spiral_sde_moments([1.0, 1.0], &ts_sde, 64, 1);
+        let u0: Vec<f32> = (0..8).flat_map(|_| [1.0f32, 1.0]).collect();
+        let data = TrainData::Moments { u0: &u0, mu: &mu, var: &var, ts: &ts_f32 };
+        let with_sr = StepCoefs {
+            coef_s: 0.01,
+            seed: 7,
+            ..Default::default()
+        };
+        let without = StepCoefs {
+            coef_s: 0.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let (pa, ma) = train_params(&be, "spiral_nsde", &data, &with_sr, 3);
+        let (pb, _) = train_params(&be, "spiral_nsde", &data, &without, 3);
+        assert!(ma.r_s > 0.0);
+        assert_ne!(
+            pa, pb,
+            "coef_s must alter the SDE gradient, not just the loss value"
         );
     }
 

@@ -17,6 +17,10 @@ pub struct Metrics {
     pub nreject: f64,
     pub success: bool,
     pub r_e: f64,
+    /// `Σ E_j²` — the unsquared-mean R_E variant (§4.1.2 note), the
+    /// natural diagnostic for tolerance sweeps.  Native backend only; the
+    /// 9-element artifact vector does not carry it (decoded as 0).
+    pub r_e2: f64,
     pub r_s: f64,
     pub r_aux: f64,
 }
@@ -34,6 +38,7 @@ impl Metrics {
             nreject: v[4] as f64,
             success: v[5] > 0.5,
             r_e: v[6] as f64,
+            r_e2: 0.0,
             r_s: v[7] as f64,
             r_aux: v[8] as f64,
         })

@@ -1,19 +1,34 @@
 //! Discrete adjoint sensitivities through the adaptive solvers.
 //!
 //! This is the paper's core trick made native: because the solver
-//! white-boxes its internal heuristics, the regularizer `R_E = Σ E_j |h_j|`
-//! is an explicit function of quantities the forward solve already
-//! computes, and its gradient — like the data loss's — can be obtained by
-//! a *discrete* adjoint walk back through the **accepted** steps.  No
-//! continuous adjoint ODE, no Kelly-et-al higher-order AD: one
-//! vector-Jacobian product per stage per accepted step.
+//! white-boxes its internal heuristics, **both** regularizers — the local
+//! error estimate `R_E = Σ E_j |h_j|` (Eq. 9) and the Shampine stiffness
+//! ratio `R_S = Σ S_j` (Eq. 8/11) — are explicit functions of quantities
+//! the forward solve already computes, and their gradients — like the
+//! data loss's — can be obtained by a *discrete* adjoint walk back
+//! through the **accepted** steps.  No continuous adjoint ODE, no
+//! Kelly-et-al higher-order AD: one vector-Jacobian product per stage per
+//! accepted step.
+//!
+//! The ODE stiffness term on step `j` is
+//! `S_j = ‖k_sy − k_sx‖ / (‖g_y − g_x‖ + ε)` on the tableau's equal-`c`
+//! stage pair; the stage states `g_x`/`g_y` are reconstructed from the
+//! record (`g_i = z + h Σ_j a_ij k_j`), so its VJP needs no extra tape
+//! storage.  Because `S_j` depends on `z` only through `g_y − g_x`, the
+//! direct `∂g/∂z = I` contributions cancel and the pull-back lands
+//! entirely on the recorded stage values.  The SDE surrogate
+//! `S_j = ‖f_2 − f_1‖ / (‖z_em − z‖ + ε)` is differentiated through the
+//! recomputed Heun internals.  The epsilon convention is owned by
+//! [`super::controller::stiffness_ratio`] and shared with the forward
+//! steppers so forward/backward FP sequences stay bit-identical.
 //!
 //! The step sequence `(t_j, h_j)` (and, for SDEs, the Brownian increments
 //! `ΔW_j`) is treated as fixed — the standard discrete-adjoint convention,
 //! matching how the lowered JAX artifacts differentiate the masked scan.
 //! [`ode_replay`] / [`sde_replay`] re-run exactly that frozen discrete
-//! program, which is what the finite-difference gradient checks in
-//! `tests/adjoint_gradcheck.rs` compare against.
+//! program (returning the replayed `R_E` *and* `R_S`), which is what the
+//! finite-difference gradient checks in `tests/adjoint_gradcheck.rs`
+//! compare against.
 //!
 //! ## Tape memory layout (DESIGN.md §Backend)
 //!
@@ -33,7 +48,7 @@
 
 #![allow(clippy::too_many_arguments)]
 
-use super::controller::rms;
+use super::controller::{rms, stiffness_norm, stiffness_ratio, EPS, RMS_FLOOR};
 use super::tableau::Tableau;
 
 /// Accumulating vector-Jacobian product of a dynamics function:
@@ -134,14 +149,18 @@ impl OdeTape {
 ///   as the forward `ts` grid; `save_grads.len()` must equal the number
 ///   of recorded save marks).
 /// * `coef_e` additionally differentiates `coef_e · R_E` with
-///   `R_E = Σ_j E_j h_j` over the recorded steps (pass `0.0` to get the
+///   `R_E = Σ_j E_j |h_j|` over the recorded steps (pass `0.0` to get the
 ///   plain data-loss adjoint).
+/// * `coef_s` additionally differentiates `coef_s · R_S` with
+///   `R_S = Σ_j S_j`, the Shampine stiffness ratio on the tableau's
+///   equal-`c` stage pair (pass `0.0` to treat `R_S` as absent).
 /// * `f_vjp` is the accumulating VJP of the dynamics (see [`VjpFn`]).
 pub fn ode_backward(
     tape: &OdeTape,
     tab: &Tableau,
     save_grads: &[Vec<f64>],
     coef_e: f64,
+    coef_s: f64,
     grad_params: &mut [f64],
     mut f_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
 ) -> Vec<f64> {
@@ -155,6 +174,7 @@ pub fn ode_backward(
     );
     assert!(marks.first().is_none_or(|&m| m == 0), "tape must mark t0");
 
+    let (sx, sy) = tab.stiff_pair;
     let mut lambda = vec![0.0; n];
     let mut w = vec![0.0; s * n];
     let mut wi = vec![0.0; n];
@@ -162,6 +182,10 @@ pub fn ode_backward(
     let mut gz = vec![0.0; n];
     let mut err = vec![0.0; n];
     let mut dl_err = vec![0.0; n];
+    let mut g_x = vec![0.0; n];
+    let mut g_y = vec![0.0; n];
+    let mut dk = vec![0.0; n];
+    let mut dg = vec![0.0; n];
 
     for si in (1..marks.len()).rev() {
         for d in 0..n {
@@ -173,7 +197,7 @@ pub fn ode_backward(
 
             // Recompute the embedded error of this step from the stages:
             // err = h Σ_i btilde_i k_i, E = rms(err); the R_E term
-            // contributes dL/derr = coef_e · h · err / (n E).
+            // contributes dL/derr = coef_e · |h| · err / (n E).
             if coef_e != 0.0 {
                 err.fill(0.0);
                 for (i, &bt) in tab.btilde.iter().enumerate() {
@@ -188,7 +212,7 @@ pub fn ode_backward(
                     err[d] *= h;
                 }
                 let e = rms(&err);
-                let scale = coef_e * h / (n as f64 * e);
+                let scale = coef_e * h.abs() / (n as f64 * e);
                 for d in 0..n {
                     dl_err[d] = scale * err[d];
                 }
@@ -203,6 +227,59 @@ pub fn ode_backward(
                         acc += bti * dl_err[d];
                     }
                     w[i * n + d] = h * acc;
+                }
+            }
+
+            // R_S term: S = ‖k_sy − k_sx‖ / (‖g_y − g_x‖ + EPS) with the
+            // stage states reconstructed from the record exactly as the
+            // forward built them (g_i = z + h Σ_j a_ij k_j).  With
+            // N = stiffness_norm(Σ dk²), D₀ = stiffness_norm(Σ dg²) and
+            // D = D₀ + EPS:
+            //   ∂S/∂dk_d =  dk_d / (n N D)
+            //   ∂S/∂dg_d = −N dg_d / (n D₀ D²)
+            // The ∂g/∂z = I parts of g_y and g_x cancel (S sees only
+            // their difference), so the pull-back lands on the stage
+            // cotangents alone: directly on w[sx]/w[sy] through dk, and
+            // on every earlier stage through dg with weight
+            // h (a[sy][j] − a[sx][j]).
+            if coef_s != 0.0 {
+                for (g, stage) in [(&mut g_x, sx), (&mut g_y, sy)] {
+                    g.copy_from_slice(z);
+                    for (jj, &aij) in tab.a[stage].iter().enumerate() {
+                        if aij != 0.0 {
+                            let kj = &ks[jj * n..(jj + 1) * n];
+                            for d in 0..n {
+                                g[d] += h * aij * kj[d];
+                            }
+                        }
+                    }
+                }
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for d in 0..n {
+                    dk[d] = ks[sy * n + d] - ks[sx * n + d];
+                    dg[d] = g_y[d] - g_x[d];
+                    num += dk[d] * dk[d];
+                    den += dg[d] * dg[d];
+                }
+                let nn = stiffness_norm(num, n);
+                let d0 = stiffness_norm(den, n);
+                let dd = d0 + EPS;
+                let c_num = coef_s / (n as f64 * nn * dd);
+                let c_den = -coef_s * nn / (n as f64 * d0 * dd * dd);
+                for d in 0..n {
+                    let uk = c_num * dk[d];
+                    w[sy * n + d] += uk;
+                    w[sx * n + d] -= uk;
+                }
+                for (jj, &ay) in tab.a[sy].iter().enumerate() {
+                    let ax = tab.a[sx].get(jj).copied().unwrap_or(0.0);
+                    let coeff = h * (ay - ax);
+                    if coeff != 0.0 {
+                        for d in 0..n {
+                            w[jj * n + d] += coeff * c_den * dg[d];
+                        }
+                    }
                 }
             }
 
@@ -245,21 +322,27 @@ pub fn ode_backward(
 
 /// Re-run the exact discrete program an [`OdeTape`] recorded — same
 /// `(t_j, h_j)` sequence, full stage cascade — under a (possibly
-/// perturbed) dynamics `f`.  Returns the states at the save marks and the
-/// replayed `R_E`.  This is the function the finite-difference gradient
-/// checks difference: the adjoint differentiates precisely this program.
+/// perturbed) dynamics `f`.  Returns the states at the save marks, the
+/// replayed `R_E` and the replayed `R_S` (stiffness-pair stage states
+/// captured exactly as the forward stepper captures them).  This is the
+/// function the finite-difference gradient checks difference: the adjoint
+/// differentiates precisely this program.
 pub fn ode_replay(
     tape: &OdeTape,
     tab: &Tableau,
     z0: &[f64],
     mut f: impl FnMut(&[f64], f64, &mut [f64]),
-) -> (Vec<Vec<f64>>, f64) {
+) -> (Vec<Vec<f64>>, f64, f64) {
     let n = tape.n;
     let s = tape.stages;
+    let (sx, sy) = tab.stiff_pair;
     let mut z = z0.to_vec();
     let mut ks = vec![0.0; s * n];
     let mut zi = vec![0.0; n];
+    let mut g_x = vec![0.0; n];
+    let mut g_y = vec![0.0; n];
     let mut r_e = 0.0;
+    let mut r_s = 0.0;
     let marks = tape.save_marks();
     let mut out = Vec::with_capacity(marks.len());
     out.push(z.clone());
@@ -274,6 +357,12 @@ pub fn ode_replay(
                             zi[d] += h * aij * ks[jj * n + d];
                         }
                     }
+                }
+                if i == sx {
+                    g_x.copy_from_slice(&zi);
+                }
+                if i == sy {
+                    g_y.copy_from_slice(&zi);
                 }
                 let ti = t + tab.c[i] * h;
                 let (_, ki) = ks.split_at_mut(i * n);
@@ -290,11 +379,20 @@ pub fn ode_replay(
                 z[d] += h * znew;
                 err_sq += (h * e) * (h * e);
             }
-            r_e += (err_sq / n as f64 + 1e-300).sqrt() * h.abs();
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for d in 0..n {
+                let dk = ks[sy * n + d] - ks[sx * n + d];
+                let dg = g_y[d] - g_x[d];
+                num += dk * dk;
+                den += dg * dg;
+            }
+            r_e += (err_sq / n as f64 + RMS_FLOOR).sqrt() * h.abs();
+            r_s += stiffness_ratio(num, den, n);
         }
         out.push(z.clone());
     }
-    (out, r_e)
+    (out, r_e, r_s)
 }
 
 /// Recorded forward pass of an adaptive stochastic-Heun SDE solve.
@@ -374,10 +472,16 @@ impl SdeTape {
 /// `drift_vjp`/`diffusion_vjp` are their accumulating VJPs.  Both VJPs
 /// accumulate into the same `grad_params` vector — the caller's closures
 /// are responsible for writing to their own parameter sub-ranges.
+///
+/// `coef_e` differentiates `coef_e · R_E = coef_e · Σ E_j |h_j|`;
+/// `coef_s` differentiates `coef_s · R_S` with the drift-based stiffness
+/// surrogate `S_j = ‖f_2 − f_1‖ / (‖z_em − z‖ + EPS)` the forward stepper
+/// accumulates.  Pass `0.0` to disable either term.
 pub fn sde_backward(
     tape: &SdeTape,
     save_grads: &[Vec<f64>],
     coef_e: f64,
+    coef_s: f64,
     grad_params: &mut [f64],
     mut drift: impl FnMut(&[f64], f64, &mut [f64]),
     mut diffusion: impl FnMut(&[f64], f64, &mut [f64]),
@@ -404,6 +508,8 @@ pub fn sde_backward(
     let mut lam_em = vec![0.0; n];
     let mut wbuf = vec![0.0; n];
     let mut lam_z = vec![0.0; n];
+    let mut u_df = vec![0.0; n];
+    let mut u_dz = vec![0.0; n];
 
     for si in (1..marks.len()).rev() {
         for d in 0..n {
@@ -433,7 +539,7 @@ pub fn sde_backward(
             // from err's -dz_em dependence.
             if coef_e != 0.0 {
                 let e = rms(&err);
-                let scale = coef_e * h / (n as f64 * e);
+                let scale = coef_e * h.abs() / (n as f64 * e);
                 for d in 0..n {
                     let de = scale * err[d];
                     a_tot[d] = lambda[d] + de;
@@ -444,10 +550,44 @@ pub fn sde_backward(
                 lam_em.fill(0.0);
             }
 
+            // R_S surrogate S = ‖f2 − f1‖ / (‖z_em − z‖ + EPS): with
+            // N = stiffness_norm(Σ df²), D₀ = stiffness_norm(Σ dz²),
+            // D = D₀ + EPS the cotangents are
+            //   u_df_d = coef_s ·  df_d / (n N D)        (on f2 − f1)
+            //   u_dz_d = coef_s · −N dz_d / (n D₀ D²)    (on z_em − z)
+            // u_dz lands on z_em (+) / z (−); u_df lands on f2 (+) /
+            // f1 (−).  The z_em share joins lam_em *before* the f2/g2
+            // pull-backs so it flows through the whole Euler-Maruyama
+            // sub-step like any other z_em cotangent.
+            if coef_s != 0.0 {
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for d in 0..n {
+                    let df = f2[d] - f1[d];
+                    let dz = zem[d] - z[d];
+                    num += df * df;
+                    den += dz * dz;
+                }
+                let nn = stiffness_norm(num, n);
+                let d0 = stiffness_norm(den, n);
+                let dd = d0 + EPS;
+                let c_num = coef_s / (n as f64 * nn * dd);
+                let c_den = -coef_s * nn / (n as f64 * d0 * dd * dd);
+                for d in 0..n {
+                    u_df[d] = c_num * (f2[d] - f1[d]);
+                    u_dz[d] = c_den * (zem[d] - z[d]);
+                    lam_em[d] += u_dz[d];
+                }
+            } else {
+                u_df.fill(0.0);
+                u_dz.fill(0.0);
+            }
+
             // z_heun = z + h/2 (f1 + f2) + dw/2 ∘ (g1 + g2): pull back
-            // through f2/g2 (evaluated at z_em) into lam_em.
+            // through f2/g2 (evaluated at z_em) into lam_em.  f2 also
+            // carries the R_S numerator cotangent +u_df.
             for d in 0..n {
-                wbuf[d] = 0.5 * h * a_tot[d];
+                wbuf[d] = 0.5 * h * a_tot[d] + u_df[d];
             }
             drift_vjp(&zem, t + h, &wbuf, &mut lam_em, grad_params);
             for d in 0..n {
@@ -456,12 +596,14 @@ pub fn sde_backward(
             diffusion_vjp(&zem, t + h, &wbuf, &mut lam_em, grad_params);
 
             // z_em = z + h f1 + g1 ∘ dw: direct z terms plus f1/g1 (which
-            // also receive the z_heun-side cotangents).
+            // also receive the z_heun-side cotangents).  f1 carries the
+            // R_S numerator cotangent −u_df; z carries −u_dz from the
+            // denominator's z_em − z difference.
             for d in 0..n {
-                lam_z[d] = a_tot[d] + lam_em[d];
+                lam_z[d] = a_tot[d] + lam_em[d] - u_dz[d];
             }
             for d in 0..n {
-                wbuf[d] = 0.5 * h * a_tot[d] + h * lam_em[d];
+                wbuf[d] = 0.5 * h * a_tot[d] + h * lam_em[d] - u_df[d];
             }
             drift_vjp(z, t, &wbuf, &mut lam_z, grad_params);
             for d in 0..n {
@@ -478,14 +620,14 @@ pub fn sde_backward(
 }
 
 /// Re-run the frozen discrete SDE program (same `(t, h, ΔW)` records)
-/// under perturbed drift/diffusion.  Returns save states and replayed
-/// `R_E` — the FD counterpart of [`sde_backward`].
+/// under perturbed drift/diffusion.  Returns save states, replayed `R_E`
+/// and replayed `R_S` — the FD counterpart of [`sde_backward`].
 pub fn sde_replay(
     tape: &SdeTape,
     z0: &[f64],
     mut drift: impl FnMut(&[f64], f64, &mut [f64]),
     mut diffusion: impl FnMut(&[f64], f64, &mut [f64]),
-) -> (Vec<Vec<f64>>, f64) {
+) -> (Vec<Vec<f64>>, f64, f64) {
     let n = tape.n;
     let mut z = z0.to_vec();
     let mut f1 = vec![0.0; n];
@@ -494,6 +636,7 @@ pub fn sde_replay(
     let mut g2 = vec![0.0; n];
     let mut zem = vec![0.0; n];
     let mut r_e = 0.0;
+    let mut r_s = 0.0;
     let marks = tape.save_marks();
     let mut out = Vec::with_capacity(marks.len());
     out.push(z.clone());
@@ -508,6 +651,16 @@ pub fn sde_replay(
             }
             drift(&zem, t + h, &mut f2);
             diffusion(&zem, t + h, &mut g2);
+            // Stiffness surrogate before z is overwritten (same scalar
+            // accumulators and FP sequence as the forward stepper).
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for d in 0..n {
+                let df = f2[d] - f1[d];
+                let dz = zem[d] - z[d];
+                num += df * df;
+                den += dz * dz;
+            }
             // Same expression shapes as the forward stepper so the
             // replayed bits match the taped solve at the base point.
             let mut err_sq = 0.0;
@@ -518,11 +671,12 @@ pub fn sde_replay(
                 err_sq += e * e;
                 z[d] = z_heun;
             }
-            r_e += (err_sq / n as f64 + 1e-300).sqrt() * h;
+            r_e += (err_sq / n as f64 + RMS_FLOOR).sqrt() * h.abs();
+            r_s += stiffness_ratio(num, den, n);
         }
         out.push(z.clone());
     }
-    (out, r_e)
+    (out, r_e, r_s)
 }
 
 #[cfg(test)]
@@ -556,6 +710,7 @@ mod tests {
             &opts.tableau,
             &save_grads,
             0.0,
+            0.0,
             &mut gp,
             |z, _t, w, gz, gth| {
                 gz[0] += w[0] * theta;
@@ -565,7 +720,7 @@ mod tests {
 
         let eps = 1e-6;
         let loss = |th: f64| {
-            let (s, _) = ode_replay(&tape, &opts.tableau, &[1.0], f(th));
+            let (s, _, _) = ode_replay(&tape, &opts.tableau, &[1.0], f(th));
             s[2][0]
         };
         let fd = (loss(theta + eps) - loss(theta - eps)) / (2.0 * eps);
@@ -582,7 +737,7 @@ mod tests {
         );
         // replay reproduces the taped forward trajectory (up to the
         // FSAL-stage rounding difference — see tests/adjoint_gradcheck.rs)
-        let (rs, _) = ode_replay(&tape, &opts.tableau, &[1.0], f(theta));
+        let (rs, _, _) = ode_replay(&tape, &opts.tableau, &[1.0], f(theta));
         for (a, b) in rs.iter().zip(&zs) {
             assert!((a[0] - b[0]).abs() < 1e-10);
         }
@@ -613,6 +768,7 @@ mod tests {
             &opts.tableau,
             &save_grads,
             1.0,
+            0.0,
             &mut gp,
             |z, _t, w, gz, gth| {
                 let c = (theta * z[0]).cos();
@@ -631,5 +787,208 @@ mod tests {
             "adjoint {} vs fd {fd}",
             gp[0]
         );
+    }
+
+    /// R_S-only gradient (coef_s = 1, zero data cotangents, coef_e = 0)
+    /// vs FD of the replayed stiffness accumulator.
+    #[test]
+    fn stiffness_gradient_matches_fd() {
+        let theta = 1.3f64;
+        let ts = [0.0, 1.0];
+        let opts = OdeOptions {
+            rtol: 1e-6,
+            atol: 1e-6,
+            ..Default::default()
+        };
+        // Nonlinear dynamics so R_S depends on θ nontrivially.
+        let f = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| {
+            dz[0] = (th * z[0]).sin();
+        };
+        let mut tape = OdeTape::new();
+        let (_, out) = solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+        assert!(out.success && !tape.is_empty());
+
+        // Replay at the base point reproduces the forward accumulator
+        // (FSAL-stage rounding only).
+        let (_, _, rs0) = ode_replay(&tape, &opts.tableau, &[0.8], f(theta));
+        assert!(
+            (rs0 - out.stats.r_s).abs() <= 1e-9 * out.stats.r_s.max(1e-9),
+            "replayed R_S {rs0} vs forward {}",
+            out.stats.r_s
+        );
+
+        let save_grads = vec![vec![0.0], vec![0.0]];
+        let mut gp = vec![0.0; 1];
+        ode_backward(
+            &tape,
+            &opts.tableau,
+            &save_grads,
+            0.0,
+            1.0,
+            &mut gp,
+            |z, _t, w, gz, gth| {
+                let c = (theta * z[0]).cos();
+                gz[0] += w[0] * theta * c;
+                gth[0] += w[0] * z[0] * c;
+            },
+        );
+        let eps = 1e-5;
+        let rs = |th: f64| ode_replay(&tape, &opts.tableau, &[0.8], f(th)).2;
+        let fd = (rs(theta + eps) - rs(theta - eps)) / (2.0 * eps);
+        assert!(
+            fd.abs() > 1e-8,
+            "R_S must actually depend on θ for this check to bite (fd={fd})"
+        );
+        assert!(
+            (gp[0] - fd).abs() / fd.abs().max(1e-12) < 1e-4,
+            "adjoint {} vs fd {fd}",
+            gp[0]
+        );
+    }
+
+    /// Hand-built tape with a *negative* step: `R_E = Σ E_j |h_j|` must
+    /// stay nonnegative in replay, and the backward R_E scale must use
+    /// |h| so the adjoint still matches FD of the replayed program.
+    #[test]
+    fn reversed_time_step_keeps_r_e_nonnegative() {
+        let tab = Tableau::tsit5();
+        let s = tab.stages();
+        let theta = 0.9f64;
+        let f = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| {
+            dz[0] = (th * z[0]).sin();
+        };
+
+        let mut tape = OdeTape::with_capacity(1, s, 2);
+        tape.reset(1, s);
+        tape.mark_save();
+        // Replay/backward never read the recorded stage values of a step
+        // they recompute, so zeros suffice for the ks block here.
+        tape.push_step(0.0, -0.25, &[1.0], &vec![0.0; s]);
+        tape.mark_save();
+
+        let (_, r_e, _) = ode_replay(&tape, &tab, &[1.0], f(theta));
+        assert!(r_e >= 0.0, "R_E must be nonnegative on reversed steps: {r_e}");
+        assert!(r_e > 0.0, "nontrivial dynamics must accumulate error");
+
+        let save_grads = vec![vec![0.0], vec![0.0]];
+        let mut gp = vec![0.0; 1];
+        // The adjoint reconstructs the error from the *recorded* stage
+        // block, which the hand-built tape fills with zeros — rebuild the
+        // record from a replayed stage cascade first so the backward sees
+        // the stages the replay actually produces.
+        let mut real_ks = vec![0.0; s];
+        {
+            let mut dyn_f = f(theta);
+            let mut zi = [0.0f64; 1];
+            for i in 0..s {
+                zi[0] = 1.0;
+                for (jj, &aij) in tab.a[i].iter().enumerate() {
+                    zi[0] += -0.25 * aij * real_ks[jj];
+                }
+                let mut ki = [0.0f64; 1];
+                dyn_f(&zi, tab.c[i] * -0.25, &mut ki);
+                real_ks[i] = ki[0];
+            }
+        }
+        let mut tape2 = OdeTape::with_capacity(1, s, 2);
+        tape2.reset(1, s);
+        tape2.mark_save();
+        tape2.push_step(0.0, -0.25, &[1.0], &real_ks);
+        tape2.mark_save();
+
+        ode_backward(
+            &tape2,
+            &tab,
+            &save_grads,
+            1.0,
+            0.0,
+            &mut gp,
+            |z, _t, w, gz, gth| {
+                let c = (theta * z[0]).cos();
+                gz[0] += w[0] * theta * c;
+                gth[0] += w[0] * z[0] * c;
+            },
+        );
+        let eps = 1e-5;
+        let re = |th: f64| ode_replay(&tape2, &tab, &[1.0], f(th)).1;
+        let fd = (re(theta + eps) - re(theta - eps)) / (2.0 * eps);
+        assert!(
+            (gp[0] - fd).abs() / fd.abs().max(1e-12) < 1e-4,
+            "reversed-step adjoint {} vs fd {fd}",
+            gp[0]
+        );
+    }
+
+    /// SDE mirror of the reversed-time regression: replayed R_E stays
+    /// nonnegative and the backward |h| scale matches FD.
+    #[test]
+    fn sde_reversed_time_step_keeps_r_e_nonnegative() {
+        use crate::solvers::sde::sde_solve_saveat_taped;
+        let theta = 0.8f64;
+        let sigma = 0.3f64;
+        let drift = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| {
+            dz[0] = (th * z[0]).sin();
+        };
+        let diffusion = move |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = sigma;
+
+        let mut tape = SdeTape::with_capacity(1, 2);
+        tape.reset(1);
+        tape.mark_save();
+        tape.push_step(0.0, -0.3, &[1.0], &[0.2]);
+        tape.mark_save();
+
+        let (_, r_e, _) = sde_replay(&tape, &[1.0], drift(theta), diffusion);
+        assert!(r_e >= 0.0, "SDE R_E must be nonnegative on reversed steps: {r_e}");
+        assert!(r_e > 0.0, "nontrivial Heun pair must accumulate error");
+
+        let save_grads = vec![vec![0.0], vec![0.0]];
+        let mut gp = vec![0.0; 1];
+        sde_backward(
+            &tape,
+            &save_grads,
+            1.0,
+            0.0,
+            &mut gp,
+            drift(theta),
+            diffusion,
+            |z, _t, w, gz, gth| {
+                let c = (theta * z[0]).cos();
+                gz[0] += w[0] * theta * c;
+                gth[0] += w[0] * z[0] * c;
+            },
+            |_z, _t, _w, _gz, _gp| {},
+        );
+        let eps = 1e-5;
+        let re = |th: f64| sde_replay(&tape, &[1.0], drift(th), diffusion).1;
+        let fd = (re(theta + eps) - re(theta - eps)) / (2.0 * eps);
+        assert!(
+            (gp[0] - fd).abs() / fd.abs().max(1e-12) < 1e-4,
+            "reversed-step SDE adjoint {} vs fd {fd}",
+            gp[0]
+        );
+
+        // Forward solves only march forward, so also pin the normal-time
+        // accumulators against each other: taped solve vs replay bits.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut fwd_tape = SdeTape::new();
+        let opts = crate::solvers::sde::SdeOptions {
+            rtol: 1e-2,
+            atol: 1e-2,
+            ..Default::default()
+        };
+        let (_, stats, ok) = sde_solve_saveat_taped(
+            drift(theta),
+            diffusion,
+            &[1.0],
+            &[0.0, 0.5, 1.0],
+            &mut rng,
+            &opts,
+            u64::MAX,
+            &mut fwd_tape,
+        );
+        assert!(ok);
+        let (_, re_fwd, rs_fwd) = sde_replay(&fwd_tape, &[1.0], drift(theta), diffusion);
+        assert!((re_fwd - stats.r_e).abs() <= 1e-12 * (1.0 + stats.r_e));
+        assert!((rs_fwd - stats.r_s).abs() <= 1e-12 * (1.0 + stats.r_s));
     }
 }

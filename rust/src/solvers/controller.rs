@@ -22,12 +22,39 @@ pub const MAX_FACTOR: f64 = 10.0;
 pub const PI_BETA: f64 = 0.04;
 /// Generic tiny guard against division by zero / degenerate spans.
 pub const EPS: f64 = 1e-12;
+/// Denormal-safe floor added under every RMS square root in this suite
+/// ([`rms`], [`error_ratio`], [`stiffness_norm`], and the replayed error
+/// norms in `solvers::adjoint`): a zero vector yields ~1e-150 instead of
+/// 0, so downstream ratios never divide by exactly zero.
+pub const RMS_FLOOR: f64 = 1e-300;
 
-/// Plain RMS norm with a denormal-safe floor (used for `E_j` and the
-/// Shampine stiffness ratio numerator/denominator).
+/// Plain RMS norm with the [`RMS_FLOOR`] denormal floor (used for `E_j`
+/// and the Shampine stiffness ratio numerator/denominator).
 #[inline]
 pub fn rms(v: &[f64]) -> f64 {
-    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
+    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + RMS_FLOOR).sqrt()
+}
+
+/// Floored RMS from a squared-sum accumulator: `sqrt(sq / n + RMS_FLOOR)`.
+/// Same FP sequence as [`rms`] over a materialized difference vector,
+/// without needing the scratch (DESIGN.md §Perf).
+#[inline]
+pub fn stiffness_norm(sq: f64, n: usize) -> f64 {
+    (sq / n as f64 + RMS_FLOOR).sqrt()
+}
+
+/// Shampine stiffness ratio (paper Eq. 8) from squared-sum accumulators.
+///
+/// **The** single epsilon convention for the stiffness estimate, shared
+/// by the forward steppers (`ode.rs` / `sde.rs`), the discrete adjoint
+/// and the replay paths (`adjoint.rs`) so forward and backward FP
+/// sequences stay bit-identical: both norms carry the [`RMS_FLOOR`]
+/// denormal floor inside their square roots (never-zero, never-NaN), and
+/// the denominator norm additionally gets `+ EPS` so a fixed point
+/// (`g_y == g_x`) reads as "not stiff" (~0) rather than overflowing.
+#[inline]
+pub fn stiffness_ratio(num_sq: f64, den_sq: f64, n: usize) -> f64 {
+    stiffness_norm(num_sq, n) / (stiffness_norm(den_sq, n) + EPS)
 }
 
 /// Hairer tolerance-scaled error ratio (paper Eq. 5): RMS of
@@ -40,7 +67,7 @@ pub fn error_ratio(e: &[f64], z0: &[f64], z1: &[f64], rtol: f64, atol: f64) -> f
         let r = e[i] / scale;
         acc += r * r;
     }
-    (acc / e.len() as f64 + 1e-300).sqrt()
+    (acc / e.len() as f64 + RMS_FLOOR).sqrt()
 }
 
 /// PI controller growth factor after an accepted step (paper Eq. 6):
@@ -102,5 +129,29 @@ mod tests {
     fn factors_clamped_below() {
         assert_eq!(pi_factor(1e12, 1.0, 5), MIN_FACTOR);
         assert_eq!(reject_factor(1e12, 5), MIN_FACTOR);
+    }
+
+    #[test]
+    fn stiffness_norm_matches_rms_bits() {
+        // The scalar-accumulator path must reproduce rms() exactly.
+        let v = [0.3, -1.7, 2.5];
+        let sq: f64 = v.iter().map(|x| x * x).sum();
+        assert_eq!(stiffness_norm(sq, v.len()), rms(&v));
+    }
+
+    #[test]
+    fn stiffness_ratio_guards() {
+        // True fixed point (both differences zero): ~0, not NaN.
+        let fp = stiffness_ratio(0.0, 0.0, 2);
+        assert!(fp.is_finite() && fp < 1.0, "fp={fp}");
+        // Zero denominator alone: EPS-bounded, finite.
+        let s = stiffness_ratio(1.0, 0.0, 2);
+        assert!(s.is_finite());
+        // Zero numerator: tiny but nonzero (floor over EPS-padded norm).
+        let z = stiffness_ratio(0.0, 1.0, 2);
+        assert!(z.is_finite() && z < 1e-100);
+        // Plain case: ratio of the two RMS norms.
+        let r = stiffness_ratio(4.0, 1.0, 1);
+        assert!((r - 2.0 / (1.0 + EPS)).abs() < 1e-15, "r={r}");
     }
 }

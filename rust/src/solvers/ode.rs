@@ -21,7 +21,7 @@
 //! error norm are shared with the SDE solver via [`super::controller`].
 
 use super::adjoint::OdeTape;
-use super::controller::{error_ratio, pi_factor, reject_factor, rms, EPS};
+use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
 use super::tableau::Tableau;
 
 /// White-boxed solver statistics (paper Eq. 9/11 accumulators + counters).
@@ -218,7 +218,9 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
 
             if q <= 1.0 {
                 // Shampine stiffness ratio (paper Eq. 8) via scalar
-                // accumulators — same FP sequence as rms(dnum)/rms(dden).
+                // accumulators — same FP sequence as rms(dnum)/rms(dden),
+                // epsilon convention owned by `controller::stiffness_ratio`
+                // and shared with the adjoint/replay paths.
                 let mut num = 0.0;
                 let mut den = 0.0;
                 for d in 0..n {
@@ -227,8 +229,7 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
                     num += dk * dk;
                     den += dg * dg;
                 }
-                let stiff = (num / n as f64 + 1e-300).sqrt()
-                    / ((den / n as f64 + 1e-300).sqrt() + EPS);
+                let stiff = stiffness_ratio(num, den, n);
 
                 self.stats.r_e += e_norm * h.abs();
                 self.stats.r_e2 += e_norm * e_norm;

@@ -15,7 +15,7 @@
 //! zero heap allocation (DESIGN.md §Perf).
 
 use super::adjoint::SdeTape;
-use super::controller::{error_ratio, pi_factor, reject_factor, rms, EPS};
+use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
 use super::ode::Stats;
 use crate::util::rng::Rng;
 
@@ -150,7 +150,9 @@ where
             if q <= 1.0 {
                 let e_norm = rms(err);
                 // Drift-based stiffness surrogate via scalar accumulators
-                // (same FP sequence as rms(f2-f1)/rms(z_em-z)).
+                // (same FP sequence as rms(f2-f1)/rms(z_em-z)), epsilon
+                // convention owned by `controller::stiffness_ratio` and
+                // shared with the adjoint/replay paths.
                 let mut num = 0.0;
                 let mut den = 0.0;
                 for d in 0..n {
@@ -159,10 +161,12 @@ where
                     num += df * df;
                     den += dz * dz;
                 }
-                self.stats.r_e += e_norm * h_eff;
+                // R_E = Σ E_j |h_j| (Eq. 9) — |h| unified with the ODE
+                // stepper and both adjoint paths (h_eff > 0 here, so the
+                // abs() is bit-free insurance, not a behavior change).
+                self.stats.r_e += e_norm * h_eff.abs();
                 self.stats.r_e2 += e_norm * e_norm;
-                self.stats.r_s += (num / n as f64 + 1e-300).sqrt()
-                    / ((den / n as f64 + 1e-300).sqrt() + EPS);
+                self.stats.r_s += stiffness_ratio(num, den, n);
                 self.stats.naccept += 1;
                 if let Some(tape) = self.tape.as_deref_mut() {
                     tape.push_step(*t, h_eff, z, dw);

@@ -1,4 +1,5 @@
-//! Tiny CLI argument parser (offline substitute for clap).
+//! Tiny CLI argument parser (offline substitute for clap), plus the
+//! shared environment scale-knob reader the bench binaries use.
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
 //! with typed accessors and a generated usage string.
@@ -6,6 +7,17 @@
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+/// Read a `usize` scale knob from the environment (`REGNDE_BENCH_*`
+/// style), falling back to `default` when unset or unparseable.  Shared
+/// by `bench::BenchConfig` and the standalone bench binaries so the knob
+/// semantics cannot drift between them.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 /// Parsed command line: positionals + key/value options + boolean flags.
 #[derive(Debug, Default)]

@@ -1,13 +1,15 @@
 //! Central-finite-difference checks of the discrete adjoint on tiny
-//! MLP-dynamics spiral problems (ISSUE 2 acceptance criterion: relative
-//! error < 1e-4 over the data loss and over loss + λ·R_E).
+//! MLP-dynamics spiral problems (ISSUE 2/3 acceptance criterion: relative
+//! error < 1e-4 over the full SRNODE objective
+//! `data_loss + coef_e·R_E + coef_s·R_S` on both the ODE and SDE paths,
+//! including every coefficient combination with a term switched off).
 //!
 //! The adjoint differentiates the *discrete program* the solver executed
 //! — the accepted `(t, h)` sequence (and, for SDEs, the Brownian
 //! increments) held fixed — so the finite differences are taken over
 //! [`ode_replay`]/[`sde_replay`], which re-run exactly that program under
-//! perturbed parameters.  In f64 the two should agree to ~1e-8; the 1e-4
-//! gate leaves two orders of headroom.
+//! perturbed parameters and return both replayed accumulators.  In f64
+//! the two should agree to ~1e-8; the 1e-4 gate leaves headroom.
 
 use regnde::data::spiral;
 use regnde::models::Mlp;
@@ -35,8 +37,12 @@ fn rel_err(adj: &[f64], fd: &[f64]) -> f64 {
     num / den.max(1e-12)
 }
 
+/// The (coef_e, coef_s) grid every FD check sweeps: plain data loss, each
+/// regularizer alone, and the combined SRNODE + ERNODE objective.
+const COEF_GRID: [(f64, f64); 4] = [(0.0, 0.0), (0.1, 0.0), (0.0, 0.05), (0.1, 0.05)];
+
 /// ODE: MSE against the Fig.-2 spiral ground truth at 5 save points,
-/// with and without the λ·R_E term.
+/// swept over the regularizer coefficient grid (full SRNODE objective).
 #[test]
 fn ode_adjoint_matches_central_differences() {
     let mlp = Mlp::cubed(&[2, 8, 2]);
@@ -65,11 +71,11 @@ fn ode_adjoint_matches_central_differences() {
     );
     assert!(out.success && !tape.is_empty());
 
-    // Loss of the frozen program under any parameter vector.
+    // Objective of the frozen program under any parameter vector.
     let denom = (ts_count * 2) as f64;
-    let loss = |th: &[f64], lambda: f64| -> f64 {
+    let loss = |th: &[f64], coef_e: f64, coef_s: f64| -> f64 {
         let mut s = mlp.scratch();
-        let (saves, r_e) = ode_replay(&tape, &opts.tableau, &[2.0, 0.0], |z, _t, dz| {
+        let (saves, r_e, r_s) = ode_replay(&tape, &opts.tableau, &[2.0, 0.0], |z, _t, dz| {
             mlp.forward(th, z, dz, &mut s)
         });
         let mut mse = 0.0;
@@ -79,13 +85,13 @@ fn ode_adjoint_matches_central_differences() {
                 mse += d * d / denom;
             }
         }
-        mse + lambda * r_e
+        mse + coef_e * r_e + coef_s * r_s
     };
 
     // Replay at the base point must reproduce the taped forward exactly.
     {
         let mut s = mlp.scratch();
-        let (saves, r_e) = ode_replay(&tape, &opts.tableau, &[2.0, 0.0], |z, _t, dz| {
+        let (saves, r_e, r_s) = ode_replay(&tape, &opts.tableau, &[2.0, 0.0], |z, _t, dz| {
             mlp.forward(&theta, z, dz, &mut s)
         });
         // The replay recomputes the FSAL stage fresh (the stepper reused
@@ -103,9 +109,15 @@ fn ode_adjoint_matches_central_differences() {
             }
         }
         assert!((r_e - out.stats.r_e).abs() < 1e-9 * out.stats.r_e.max(1e-9));
+        assert!(
+            (r_s - out.stats.r_s).abs() < 1e-9 * out.stats.r_s.max(1e-9),
+            "replayed R_S {r_s} vs forward {}",
+            out.stats.r_s
+        );
+        assert!(r_s > 0.0, "R_S must accumulate on the spiral fit");
     }
 
-    for lambda in [0.0, 0.1] {
+    for (coef_e, coef_s) in COEF_GRID {
         // Adjoint gradient.
         let mut save_grads = vec![vec![0.0; 2]; ts_count];
         for (t, z) in zs.iter().enumerate() {
@@ -119,7 +131,8 @@ fn ode_adjoint_matches_central_differences() {
             &tape,
             &opts.tableau,
             &save_grads,
-            lambda,
+            coef_e,
+            coef_s,
             &mut grad,
             |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
                 mlp.vjp(&theta, z, w, gz, gp, &mut sb);
@@ -134,13 +147,14 @@ fn ode_adjoint_matches_central_differences() {
             tp[k] += eps;
             let mut tm = theta.clone();
             tm[k] -= eps;
-            fd[k] = (loss(&tp, lambda) - loss(&tm, lambda)) / (2.0 * eps);
+            fd[k] = (loss(&tp, coef_e, coef_s) - loss(&tm, coef_e, coef_s)) / (2.0 * eps);
         }
 
         let err = rel_err(&grad, &fd);
         assert!(
             err < 1e-4,
-            "lambda={lambda}: adjoint vs FD relative error {err:.3e} (gate 1e-4)"
+            "coef_e={coef_e} coef_s={coef_s}: adjoint vs FD relative error \
+             {err:.3e} (gate 1e-4)"
         );
     }
 }
@@ -189,10 +203,10 @@ fn sde_adjoint_matches_central_differences() {
     assert!(ok && !tape.is_empty());
 
     let denom = (ts.len() * 2) as f64;
-    let loss = |th: &[f64], lambda: f64| -> f64 {
+    let loss = |th: &[f64], coef_e: f64, coef_s: f64| -> f64 {
         let mut sd = drift.scratch();
         let mut sg = diffusion.scratch();
-        let (saves, r_e) = sde_replay(
+        let (saves, r_e, r_s) = sde_replay(
             &tape,
             &[1.0, 1.0],
             |z, _t, dz| drift.forward(&th[..n_drift], z, dz, &mut sd),
@@ -205,14 +219,14 @@ fn sde_adjoint_matches_central_differences() {
                 mse += d * d / denom;
             }
         }
-        mse + lambda * r_e
+        mse + coef_e * r_e + coef_s * r_s
     };
 
     // Replay reproduces the taped forward at the base point.
     {
         let mut sd = drift.scratch();
         let mut sg = diffusion.scratch();
-        let (saves, r_e) = sde_replay(
+        let (saves, r_e, r_s) = sde_replay(
             &tape,
             &[1.0, 1.0],
             |z, _t, dz| drift.forward(&theta[..n_drift], z, dz, &mut sd),
@@ -224,9 +238,15 @@ fn sde_adjoint_matches_central_differences() {
             }
         }
         assert!((r_e - stats.r_e).abs() < 1e-12);
+        assert!(
+            (r_s - stats.r_s).abs() < 1e-12 * (1.0 + stats.r_s),
+            "replayed R_S {r_s} vs forward {}",
+            stats.r_s
+        );
+        assert!(r_s > 0.0, "R_S must accumulate on the SDE fit");
     }
 
-    for lambda in [0.0, 0.1] {
+    for (coef_e, coef_s) in COEF_GRID {
         let mut save_grads = vec![vec![0.0; 2]; ts.len()];
         for (t, z) in zs.iter().enumerate() {
             for k in 0..2 {
@@ -241,7 +261,8 @@ fn sde_adjoint_matches_central_differences() {
         sde_backward(
             &tape,
             &save_grads,
-            lambda,
+            coef_e,
+            coef_s,
             &mut grad,
             |z: &[f64], _t: f64, dz: &mut [f64]| {
                 drift.forward(&theta[..n_drift], z, dz, &mut sdb)
@@ -264,12 +285,13 @@ fn sde_adjoint_matches_central_differences() {
             tp[k] += eps;
             let mut tm = theta.clone();
             tm[k] -= eps;
-            fd[k] = (loss(&tp, lambda) - loss(&tm, lambda)) / (2.0 * eps);
+            fd[k] = (loss(&tp, coef_e, coef_s) - loss(&tm, coef_e, coef_s)) / (2.0 * eps);
         }
         let err = rel_err(&grad, &fd);
         assert!(
             err < 1e-4,
-            "lambda={lambda}: SDE adjoint vs FD relative error {err:.3e} (gate 1e-4)"
+            "coef_e={coef_e} coef_s={coef_s}: SDE adjoint vs FD relative error \
+             {err:.3e} (gate 1e-4)"
         );
     }
 }

@@ -44,6 +44,7 @@ fn spiral_node_regularized_accumulates_r_terms() {
     let r = experiments::run_by_name(&be, "spiral-node", m, tiny()).unwrap();
     assert_eq!(r.method, "SRNODE + ERNODE");
     assert!(r.epochs[0].r_e > 0.0, "R_E accumulated");
+    assert!(r.epochs[0].r_e2 > 0.0, "ΣE² variant surfaced in epoch records");
     assert!(r.epochs[0].r_s > 0.0, "R_S accumulated");
 }
 
@@ -70,6 +71,43 @@ fn spiral_node_regularization_changes_training() {
         v.final_test_loss, e.final_test_loss,
         "regularizer gradient must alter the fit"
     );
+}
+
+#[test]
+fn sr_method_combos_have_live_coef_s() {
+    // The Method::parse combos that reach the native backend with a
+    // nonzero coef_s must produce a *gradient* effect, not just a loss
+    // offset: on the same seed, toggling the sr component off changes
+    // the realized training trajectory.  `srnode+ernode` runs on
+    // spiral-node (both regularizers in one objective); `steer+srnode`
+    // runs on mnist-node, the experiment where STEER's per-iteration
+    // end-time sampling is actually wired (its RNG stream is seeded per
+    // run, so both sides draw identical t1 sequences and coef_s is the
+    // only difference).
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 4,
+        seed: 0,
+        verbose: false,
+    };
+    for (exp, with_sr, without_sr) in [
+        ("spiral-node", "srnode+ernode", "ernode"),
+        ("mnist-node", "steer+srnode", "steer"),
+    ] {
+        let be = backend();
+        let sr =
+            experiments::run_by_name(&be, exp, Method::parse(with_sr).unwrap(), opts)
+                .unwrap();
+        let base =
+            experiments::run_by_name(&be, exp, Method::parse(without_sr).unwrap(), opts)
+                .unwrap();
+        assert!(sr.epochs[0].r_s > 0.0, "{with_sr}: R_S must accumulate");
+        assert_ne!(
+            sr.final_test_loss, base.final_test_loss,
+            "{exp}: {with_sr} vs {without_sr}: coef_s must steer the \
+             parameters (gradient path dead?)"
+        );
+    }
 }
 
 #[test]
