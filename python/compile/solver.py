@@ -138,8 +138,9 @@ def _attempt(f, tab: Tableau, z: Array, t: Array, h: Array, k1: Array, rtol, ato
     # Paper Eq. 8 — Shampine stiffness ratio from the equal-c stage pair.
     ix, iy = tab.stiff_pair
     if ix == 0:
-        g_x = z  # stage 0 input is z itself (c_0 = 0 tableaus use (0, s-1)
-        #          only when c happens to match; bs3 uses t vs t+h endpoints)
+        g_x = z  # stage 0 input is z itself (only taken for an equal-c
+        #          pair with ix == 0; bs3 has no equal-c pair, so its
+        #          degenerate (3, 3) pair makes the estimate read ~0)
     num = norms.hairer_norm(ks[iy] - ks[ix])
     den = norms.hairer_norm(g_y - g_x) + EPS
     stiff = num / den

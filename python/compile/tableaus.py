@@ -151,12 +151,18 @@ def dopri5() -> Tableau:
 
 
 def bs3() -> Tableau:
-    """Bogacki-Shampine 3(2) — cheap low-order pair (ablation alternative)."""
+    """Bogacki-Shampine 3(2) — cheap low-order pair (ablation alternative).
+
+    BS3 has no two distinct stages with equal ``c``, so there is no valid
+    Shampine pair; the degenerate ``(3, 3)`` makes the stiffness estimate
+    read ~0 ("not stiff") instead of comparing stages at different times
+    (kept bit-for-bit in sync with rust/src/solvers/tableau.rs).
+    """
     a = _lower([[1 / 2], [0.0, 3 / 4], [2 / 9, 1 / 3, 4 / 9]])
     b = np.array([2 / 9, 1 / 3, 4 / 9, 0.0])
     bhat = np.array([7 / 24, 1 / 4, 1 / 3, 1 / 8])
     c = np.array([0.0, 1 / 2, 3 / 4, 1.0])
-    return Tableau("bs3", a, b, b - bhat, c, order=3, fsal=True, stiff_pair=(0, 3))
+    return Tableau("bs3", a, b, b - bhat, c, order=3, fsal=True, stiff_pair=(3, 3))
 
 
 _REGISTRY = {"tsit5": tsit5, "dopri5": dopri5, "bs3": bs3}

@@ -15,7 +15,8 @@ use std::time::Instant;
 
 use regnde::data::spiral::uniform_grid;
 use regnde::solvers::{
-    problems, sde_ensemble_moments, solve, EnsembleOptions, OdeOptions, SdeOptions, Tableau,
+    problems, sde_ensemble_moments, solve, EnsembleOptions, OdeSystem, Saveat, SdeOptions,
+    SolveOptions, StepBudget, Tableau, Taping,
 };
 use regnde::util::cli::env_usize;
 use regnde::util::json::{obj, Json};
@@ -31,13 +32,10 @@ fn single_case(
     t1: f64,
     reps: usize,
 ) -> (Json, Vec<String>) {
-    let opts = OdeOptions {
-        tableau,
-        rtol: 1e-6,
-        atol: 1e-6,
-        max_steps: 10_000_000,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new()
+        .with_tableau(tableau)
+        .with_tolerance(1e-6)
+        .with_budget(StepBudget::PerSegment(10_000_000));
     let mut best_steps_per_sec = 0.0f64;
     let mut attempts = 0u64;
     let mut nfe = 0u64;
@@ -49,7 +47,16 @@ fn single_case(
         let mut total_attempts = 0u64;
         let mut total_nfe = 0u64;
         for _ in 0..inner {
-            let out = solve(f, z0, 0.0, t1, &opts);
+            let mut sys = OdeSystem(f);
+            let (_, out) = solve(
+                &mut sys,
+                z0,
+                Saveat::Span { t0: 0.0, t1 },
+                &opts,
+                None,
+                Taping::Off,
+                &mut [],
+            );
             assert!(out.success, "{name} solve failed");
             total_attempts += out.stats.attempts();
             total_nfe += out.stats.nfe;

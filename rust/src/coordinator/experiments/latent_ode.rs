@@ -37,6 +37,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         total_epochs: opts.epochs,
     });
     let coef_s = if method.sr { get("coef_s") } else { 0.0 };
+    let coef_l = if method.lr { get("coef_l") } else { 0.0 };
     let coef_aux = if method.taynode { get("taylor_coef") } else { 0.0 };
     let kl = KlAnneal {
         rho: get("kl_anneal"),
@@ -78,6 +79,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
                 lr: lr.at(state.iter) as f32,
                 coef_e: coef_e.map_or(0.0, |a| a.at(epoch)) as f32,
                 coef_s: coef_s as f32,
+                coef_l: coef_l as f32,
                 coef_aux: coef_aux as f32,
                 kl: kl.at(epoch) as f32,
                 seed: rng.next_u32(),

@@ -25,6 +25,8 @@ pub struct Coefficients {
     pub lr: InvDecay,
     pub coef_e: Option<ExpAnneal>,
     pub coef_s: f64,
+    /// Sampled-step local regularization coefficient (LRNODE).
+    pub coef_l: f64,
     pub coef_aux: f64,
     pub steer: Option<EndTimeSampler>,
 }
@@ -45,6 +47,7 @@ pub fn coefficients(backend: &dyn Backend, method: Method, epochs: usize) -> Res
             total_epochs: epochs,
         }),
         coef_s: if method.sr { get("coef_s") } else { 0.0 },
+        coef_l: if method.lr { get("coef_l") } else { 0.0 },
         coef_aux: if method.taynode { get("taylor_coef") } else { 0.0 },
         steer: method.steer.then(|| EndTimeSampler {
             t_nominal: get("t1"),
@@ -92,8 +95,10 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
                 lr: coefs.lr.at(state.iter) as f32,
                 coef_e: coefs.coef_e.map_or(0.0, |a| a.at(epoch)) as f32,
                 coef_s: coefs.coef_s as f32,
+                coef_l: coefs.coef_l as f32,
                 coef_aux: coefs.coef_aux as f32,
                 t1: coefs.steer.as_ref().map_or(1.0, |s| s.sample(&mut rng)),
+                seed: rng.next_u32(),
                 ..Default::default()
             };
             let m = super::routed_step(

@@ -28,6 +28,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
     };
     let ce = if method.er { get("coef_e") } else { 0.0 };
     let cs = if method.sr { get("coef_s") } else { 0.0 };
+    let cl = if method.lr { get("coef_l") } else { 0.0 };
 
     let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);
     let train = mnist_synth::generate(n_train, opts.seed);
@@ -61,6 +62,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
                 lr: lr.at(state.iter) as f32,
                 coef_e: ce as f32,
                 coef_s: cs as f32,
+                coef_l: cl as f32,
                 seed: rng.next_u32(),
                 ..Default::default()
             };

@@ -43,6 +43,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         lr: get("lr") as f32,
         coef_e: if method.er { get("coef_e") as f32 } else { 0.0 },
         coef_s: if method.sr { get("coef_s") as f32 } else { 0.0 },
+        coef_l: if method.lr { get("coef_l") as f32 } else { 0.0 },
         ..Default::default()
     };
 

@@ -1,4 +1,5 @@
-//! The regularization methods compared in the paper's Tables 1-4.
+//! The regularization methods compared in the paper's Tables 1-4, plus
+//! the locally regularized follow-up (Pal et al. 2023).
 
 use anyhow::{bail, Result};
 
@@ -9,6 +10,10 @@ pub struct Method {
     pub er: bool,
     /// SRNODE/SRNSDE: stiffness regularization (paper Eq. 11).
     pub sr: bool,
+    /// LRNODE/LRNSDE: sampled-step *local* error regularization (Pal et
+    /// al. 2023) — one uniformly sampled accepted step's `E_ĵ |h_ĵ|`
+    /// instead of the global sum.
+    pub lr: bool,
     /// STEER baseline: stochastic end time (Behl et al. 2020).
     pub steer: bool,
     /// TayNODE baseline: K-th derivative regularization (Kelly et al. 2020).
@@ -19,6 +24,7 @@ impl Method {
     pub const VANILLA: Method = Method {
         er: false,
         sr: false,
+        lr: false,
         steer: false,
         taynode: false,
     };
@@ -32,15 +38,16 @@ impl Method {
             match part {
                 "ernode" | "ernsde" | "er" => m.er = true,
                 "srnode" | "srnsde" | "sr" => m.sr = true,
+                "lrnode" | "lrnsde" | "lr" => m.lr = true,
                 "steer" => m.steer = true,
                 "taynode" | "tay" => m.taynode = true,
                 other => bail!(
                     "unknown method component {other:?} \
-                     (vanilla|ernode|srnode|steer|taynode, '+'-combined)"
+                     (vanilla|ernode|srnode|lrnode|steer|taynode, '+'-combined)"
                 ),
             }
         }
-        if m.taynode && (m.er || m.sr) {
+        if m.taynode && (m.er || m.sr || m.lr) {
             bail!("taynode is a standalone baseline in the paper");
         }
         Ok(m)
@@ -62,6 +69,9 @@ impl Method {
         if self.er {
             parts.push(format!("ER{suffix}"));
         }
+        if self.lr {
+            parts.push(format!("LR{suffix}"));
+        }
         if parts.is_empty() {
             format!("Vanilla {suffix}")
         } else {
@@ -69,7 +79,8 @@ impl Method {
         }
     }
 
-    /// The method grid of Table 1/2 (ODE experiments).
+    /// The method grid of Table 1/2 (ODE experiments), extended with the
+    /// local-regularization variant.
     pub fn table_grid_ode() -> Vec<Method> {
         [
             "vanilla",
@@ -77,6 +88,7 @@ impl Method {
             "taynode",
             "srnode",
             "ernode",
+            "lrnode",
             "steer+srnode",
             "steer+ernode",
             "srnode+ernode",
@@ -86,9 +98,10 @@ impl Method {
         .collect()
     }
 
-    /// The method grid of Table 3/4 (SDE experiments).
+    /// The method grid of Table 3/4 (SDE experiments), extended with the
+    /// local-regularization variant.
     pub fn table_grid_sde() -> Vec<Method> {
-        ["vanilla", "srnsde", "ernsde"]
+        ["vanilla", "srnsde", "ernsde", "lrnsde"]
             .iter()
             .map(|s| Method::parse(s).unwrap())
             .collect()
@@ -102,15 +115,27 @@ mod tests {
     #[test]
     fn parse_combos() {
         let m = Method::parse("steer+ernode").unwrap();
-        assert!(m.steer && m.er && !m.sr && !m.taynode);
+        assert!(m.steer && m.er && !m.sr && !m.lr && !m.taynode);
         assert_eq!(m.label(false), "STEER + ERNODE");
         assert_eq!(Method::parse("vanilla").unwrap(), Method::VANILLA);
+    }
+
+    #[test]
+    fn parse_lrnode() {
+        let m = Method::parse("lrnode").unwrap();
+        assert!(m.lr && !m.er && !m.sr);
+        assert_eq!(m.label(false), "LRNODE");
+        assert_eq!(Method::parse("lrnsde").unwrap().label(true), "LRNSDE");
+        let combo = Method::parse("srnode+lrnode").unwrap();
+        assert!(combo.sr && combo.lr);
+        assert_eq!(combo.label(false), "SRNODE + LRNODE");
     }
 
     #[test]
     fn parse_rejects_bad() {
         assert!(Method::parse("magic").is_err());
         assert!(Method::parse("taynode+ernode").is_err());
+        assert!(Method::parse("taynode+lrnode").is_err());
     }
 
     #[test]
@@ -123,8 +148,10 @@ mod tests {
     }
 
     #[test]
-    fn grids_match_paper() {
-        assert_eq!(Method::table_grid_ode().len(), 8);
-        assert_eq!(Method::table_grid_sde().len(), 3);
+    fn grids_match_paper_plus_local() {
+        assert_eq!(Method::table_grid_ode().len(), 9);
+        assert_eq!(Method::table_grid_sde().len(), 4);
+        assert!(Method::table_grid_ode().iter().any(|m| m.lr));
+        assert!(Method::table_grid_sde().iter().any(|m| m.lr));
     }
 }

@@ -16,6 +16,9 @@ pub struct EpochRecord {
     /// `Σ E_j²` variant accumulator (native backend; 0 on PJRT).
     pub r_e2: f64,
     pub r_s: f64,
+    /// Sampled-step local regularizer `R_L` (LRNODE/LRNSDE; native
+    /// backend, 0 elsewhere or when the method is off).
+    pub r_l: f64,
     pub wall_s: f64,
     pub rung: usize,
 }
@@ -32,6 +35,7 @@ impl EpochRecord {
             ("r_e", self.r_e.into()),
             ("r_e2", self.r_e2.into()),
             ("r_s", self.r_s.into()),
+            ("r_l", self.r_l.into()),
             ("wall_s", self.wall_s.into()),
             ("rung", self.rung.into()),
         ])
@@ -56,6 +60,7 @@ impl EpochAccumulator {
         self.sums.r_e += m.r_e;
         self.sums.r_e2 += m.r_e2;
         self.sums.r_s += m.r_s;
+        self.sums.r_l += m.r_l;
     }
 
     pub fn finish(self, epoch: usize, wall_s: f64, rung: usize) -> EpochRecord {
@@ -70,6 +75,7 @@ impl EpochAccumulator {
             r_e: self.sums.r_e / n,
             r_e2: self.sums.r_e2 / n,
             r_s: self.sums.r_s / n,
+            r_l: self.sums.r_l / n,
             wall_s,
             rung,
         }
@@ -150,6 +156,7 @@ mod tests {
         assert_eq!(rec.rung, 1);
         let j = rec.to_json();
         assert!(j.get("r_e2").is_some(), "r_e2 must be recorded");
+        assert!(j.get("r_l").is_some(), "r_l must be recorded");
     }
 
     #[test]

@@ -39,11 +39,11 @@ impl Recorder {
         let json_path = self.dir.join(format!("{base}.json"));
         fs::write(&json_path, r.to_json().to_string_pretty())?;
         let mut csv = String::from(
-            "epoch,loss,metric,nfe,naccept,nreject,r_e,r_e2,r_s,wall_s,rung\n",
+            "epoch,loss,metric,nfe,naccept,nreject,r_e,r_e2,r_s,r_l,wall_s,rung\n",
         );
         for e in &r.epochs {
             csv.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 e.epoch,
                 e.loss,
                 e.metric,
@@ -53,6 +53,7 @@ impl Recorder {
                 e.r_e,
                 e.r_e2,
                 e.r_s,
+                e.r_l,
                 e.wall_s,
                 e.rung
             ));

@@ -10,18 +10,22 @@
 //!   at any worker count (and on a single-core runner).
 
 use crate::solvers::ensemble::{sde_ensemble_moments, EnsembleOptions};
-use crate::solvers::ode::{solve_saveat, OdeOptions};
 use crate::solvers::problems;
 use crate::solvers::sde::SdeOptions;
+use crate::solvers::{solve, OdeSystem, Saveat, SolveOptions, Taping};
 
 /// One spiral ODE trajectory at the given save times (row-major [T, 2]).
 pub fn spiral_ode_trajectory(u0: [f64; 2], ts: &[f64]) -> Vec<f32> {
-    let opts = OdeOptions {
-        rtol: 1e-9,
-        atol: 1e-9,
-        ..Default::default()
-    };
-    let (zs, out) = solve_saveat(problems::spiral_ode, &u0, ts, &opts);
+    let mut sys = OdeSystem(problems::spiral_ode);
+    let (zs, out) = solve(
+        &mut sys,
+        &u0,
+        Saveat::Grid(ts),
+        &SolveOptions::new().with_tolerance(1e-9),
+        None,
+        Taping::Off,
+        &mut [],
+    );
     assert!(out.success, "ground-truth spiral solve failed");
     zs.iter().flat_map(|z| z.iter().map(|&v| v as f32)).collect()
 }

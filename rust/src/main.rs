@@ -7,12 +7,16 @@
 //! regnde predict --exp mnist-node --method vanilla
 //! regnde run spiral-node --method srnode+ernode --epochs 2 [--check-nfe]
 //!                                              # method-vs-vanilla compare
+//! regnde run spiral-node --method ernode --solver dopri5
+//!                                              # pick the RK tableau
 //! regnde validate                              # run every artifact (pjrt)
 //! ```
 //!
 //! The default backend is the native discrete-adjoint trainer — no
 //! artifacts or XLA required.  `--backend pjrt` selects the AOT engine
-//! (requires `--features pjrt` and compiled artifacts).
+//! (requires `--features pjrt` and compiled artifacts).  `--solver`
+//! picks the native backend's RK tableau by name (case-insensitive:
+//! tsit5, dopri5, bs3).
 
 use anyhow::{bail, Context, Result};
 
@@ -23,7 +27,7 @@ use regnde::runtime::{make_backend, Backend};
 use regnde::util::cli::Args;
 
 const VALUED: &[&str] = &[
-    "exp", "method", "epochs", "iters", "seeds", "artifacts", "runs", "backend",
+    "exp", "method", "epochs", "iters", "seeds", "artifacts", "runs", "backend", "solver",
 ];
 
 fn main() {
@@ -33,12 +37,16 @@ fn main() {
     }
 }
 
-fn usage() -> &'static str {
-    "usage: regnde <list|validate|train|predict|run> \
-     [--backend native|pjrt] [--exp E] [--method M] [--epochs N] [--iters N] \
-     [--seeds 0,1] [--artifacts DIR] [--runs DIR] [--check-nfe] [--verbose]\n\
-     experiments: mnist-node latent-ode spiral-node spiral-nsde mnist-nsde\n\
-     methods: vanilla steer taynode srnode ernode (+-combined, e.g. srnode+ernode)"
+fn usage() -> String {
+    format!(
+        "usage: regnde <list|validate|train|predict|run> \
+         [--backend native|pjrt] [--solver {}] [--exp E] [--method M] \
+         [--epochs N] [--iters N] [--seeds 0,1] [--artifacts DIR] [--runs DIR] \
+         [--check-nfe] [--verbose]\n\
+         experiments: mnist-node latent-ode spiral-node spiral-nsde mnist-nsde\n\
+         methods: vanilla steer taynode srnode ernode lrnode (+-combined, e.g. srnode+ernode)",
+        regnde::solvers::Tableau::names().join("|")
+    )
 }
 
 fn run() -> Result<()> {
@@ -53,6 +61,8 @@ fn run() -> Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(regnde::default_artifacts_dir);
     let backend_name = args.get_or("backend", "native").to_string();
+    let solver = args.get("solver").map(|s| s.to_string());
+    let solver = solver.as_deref();
 
     match cmd {
         "help" | "--help" => {
@@ -60,7 +70,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "list" => {
-            let backend = make_backend(&backend_name, &artifacts)?;
+            let backend = make_backend(&backend_name, &artifacts, solver)?;
             list(backend.as_ref())?;
             #[cfg(feature = "pjrt")]
             if backend.name() == "pjrt" {
@@ -70,7 +80,7 @@ fn run() -> Result<()> {
         }
         "validate" => validate(&artifacts),
         "train" => {
-            let backend = make_backend(&backend_name, &artifacts)?;
+            let backend = make_backend(&backend_name, &artifacts, solver)?;
             let exp = args.get("exp").context("--exp required")?.to_string();
             let method = Method::parse(args.get_or("method", "vanilla"))?;
             let seeds: Vec<u64> = args
@@ -106,7 +116,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "predict" => {
-            let backend = make_backend(&backend_name, &artifacts)?;
+            let backend = make_backend(&backend_name, &artifacts, solver)?;
             let exp = args.get("exp").context("--exp required")?.to_string();
             let method = Method::parse(args.get_or("method", "vanilla"))?;
             // quick one-epoch train then timed predictions
@@ -127,7 +137,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "run" => {
-            let backend = make_backend(&backend_name, &artifacts)?;
+            let backend = make_backend(&backend_name, &artifacts, solver)?;
             let exp = args
                 .positional
                 .get(1)
@@ -170,9 +180,13 @@ fn list(backend: &dyn Backend) -> Result<()> {
 /// The method-vs-vanilla comparison behind CI's native smoke run: trains
 /// both from the same seed and prints the paper-style summary.  With
 /// `check_nfe`, exits nonzero unless the regularized run accumulates its
-/// regularizers, decreases the loss, ends with NFE no worse than
-/// vanilla's, and — for `sr` methods — actually *trains* on the
-/// stiffness gradient (zeroing coef_s must change the trajectory).
+/// regularizers, decreases the loss, and ends with NFE no worse than
+/// vanilla's — the NFE gate is waived only when the sampled-step local
+/// term is the *sole* regularizer (the headline NFE claim belongs to
+/// the global `er`/`sr` terms).  `sr` methods must actually *train* on
+/// the stiffness gradient (zeroing coef_s must change the trajectory),
+/// and `lr` methods likewise on the sampled-step local gradient
+/// (R_L > 0 and zeroing coef_l must change the trajectory).
 fn compare_run(
     backend: &dyn Backend,
     exp: &str,
@@ -200,12 +214,13 @@ fn compare_run(
     let reg_last = reg.epochs.last().context("no epochs")?;
     let van_last = vanilla.epochs.last().context("no epochs")?;
     println!(
-        "\nregularized: loss {:.5} -> {:.5}, r_e {:.3e}, r_s {:.3e}, \
+        "\nregularized: loss {:.5} -> {:.5}, r_e {:.3e}, r_s {:.3e}, r_l {:.3e}, \
          NFE ratio vanilla/reg = {:.3}x",
         reg_first.loss,
         reg_last.loss,
         reg_last.r_e,
         reg_last.r_s,
+        reg_last.r_l,
         van_last.nfe / reg_last.nfe.max(1e-9),
     );
 
@@ -221,12 +236,21 @@ fn compare_run(
             reg_first.loss,
             reg_last.loss
         );
-        anyhow::ensure!(
-            reg_last.nfe <= van_last.nfe,
-            "regularized final-epoch NFE {} exceeds vanilla {}",
-            reg_last.nfe,
-            van_last.nfe
-        );
+        // The NFE-vs-vanilla gate is waived only when the sampled-step
+        // local term is the sole regularizer: the paper's headline NFE
+        // claim belongs to the global er/sr terms (and the steer/taynode
+        // baselines keep their historical gate), and a sampled-step-only
+        // run is not required to beat vanilla after a smoke-length
+        // budget.
+        let waive_nfe = method.lr && !method.er && !method.sr;
+        if !waive_nfe {
+            anyhow::ensure!(
+                reg_last.nfe <= van_last.nfe,
+                "regularized final-epoch NFE {} exceeds vanilla {}",
+                reg_last.nfe,
+                van_last.nfe
+            );
+        }
         if method.sr {
             anyhow::ensure!(
                 reg_last.r_s > 0.0,
@@ -252,7 +276,40 @@ fn compare_run(
             );
             println!("check-sr: OK (R_S {:.3e}, coef_s path live)", reg_last.r_s);
         }
-        println!("check-nfe: OK (reg {} <= vanilla {})", reg_last.nfe, van_last.nfe);
+        if method.lr {
+            anyhow::ensure!(
+                reg_last.r_l > 0.0,
+                "lr method must sample a live local regularizer (got R_L = {})",
+                reg_last.r_l
+            );
+            // Gradient-path liveness: the same run with coef_l zeroed
+            // (the lr component removed) must land on different
+            // parameters — the sampled step's error cotangent has to
+            // reach the Adam update, not just the loss value.
+            let no_lr = Method { lr: false, ..method };
+            let base_run;
+            let base = if no_lr == Method::VANILLA {
+                &vanilla
+            } else {
+                base_run = experiments::run_by_name(backend, exp, no_lr, opts)?;
+                &base_run
+            };
+            anyhow::ensure!(
+                reg.final_train_loss != base.final_train_loss,
+                "zeroing coef_l left training unchanged — sampled-step \
+                 gradient path is dead"
+            );
+            println!("check-lr: OK (R_L {:.3e}, coef_l path live)", reg_last.r_l);
+        }
+        if waive_nfe {
+            println!(
+                "check-nfe: OK (NFE gate waived for sampled-step-only method; \
+                 reg {} vs vanilla {})",
+                reg_last.nfe, van_last.nfe
+            );
+        } else {
+            println!("check-nfe: OK (reg {} <= vanilla {})", reg_last.nfe, van_last.nfe);
+        }
     }
     Ok(())
 }

@@ -82,6 +82,11 @@ pub struct StepCoefs {
     pub coef_e: f32,
     /// `R_S` coefficient (SRNODE/SRNSDE), 0 disables.
     pub coef_s: f32,
+    /// Sampled-step local error coefficient (LRNODE/LRNSDE), 0 disables.
+    /// Native backend only: the forward solve reservoir-samples one
+    /// accepted step (seeded by [`StepCoefs::seed`]) and the discrete
+    /// adjoint differentiates exactly that step's `E_ĵ |h_ĵ|` term.
+    pub coef_l: f32,
     /// TayNODE auxiliary coefficient (PJRT `tay_train` artifacts only).
     pub coef_aux: f32,
     /// KL-annealing coefficient (Latent ODE).
@@ -98,6 +103,7 @@ impl Default for StepCoefs {
             lr: 0.01,
             coef_e: 0.0,
             coef_s: 0.0,
+            coef_l: 0.0,
             coef_aux: 0.0,
             kl: 0.0,
             t1: 1.0,

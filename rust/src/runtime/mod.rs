@@ -33,20 +33,36 @@ pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
 
 /// Construct a backend by name.
 ///
-/// * `"native"` — always available.
+/// * `"native"` — always available; `solver` selects its RK tableau by
+///   name (`Tableau::parse`, case-insensitive; default `tsit5`).
 /// * `"pjrt"`   — requires the `pjrt` cargo feature *and* compiled
-///   artifacts under `artifacts_dir`.
+///   artifacts under `artifacts_dir`; its solver is baked into the
+///   lowered artifacts, so `solver` must be `None`.
 pub fn make_backend(
     name: &str,
     artifacts_dir: &std::path::Path,
+    solver: Option<&str>,
 ) -> anyhow::Result<Box<dyn Backend>> {
     match name {
-        "native" => Ok(Box::new(NativeBackend::new())),
+        "native" => {
+            let be = NativeBackend::new();
+            let be = match solver {
+                Some(s) => be.with_solver(s)?,
+                None => be,
+            };
+            Ok(Box::new(be))
+        }
         #[cfg(feature = "pjrt")]
-        "pjrt" => Ok(Box::new(Engine::new(artifacts_dir)?)),
+        "pjrt" => {
+            anyhow::ensure!(
+                solver.is_none(),
+                "--solver is native-only: the PJRT artifacts bake their tableau in at lowering"
+            );
+            Ok(Box::new(Engine::new(artifacts_dir)?))
+        }
         #[cfg(not(feature = "pjrt"))]
         "pjrt" => {
-            let _ = artifacts_dir;
+            let _ = (artifacts_dir, solver);
             anyhow::bail!(
                 "this build has no PJRT support — rebuild with `--features pjrt` \
                  (and real xla-rs bindings in place of the vendored stub)"
@@ -59,5 +75,5 @@ pub fn make_backend(
 /// Backend selected by the `REGNDE_BACKEND` env var (default `"native"`).
 pub fn backend_from_env(artifacts_dir: &std::path::Path) -> anyhow::Result<Box<dyn Backend>> {
     let name = std::env::var("REGNDE_BACKEND").unwrap_or_else(|_| "native".to_string());
-    make_backend(&name, artifacts_dir)
+    make_backend(&name, artifacts_dir, None)
 }

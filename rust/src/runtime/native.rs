@@ -2,14 +2,19 @@
 //! Python, no XLA, no artifacts.
 //!
 //! Each of the five experiment models is a composition of flat-parameter
-//! MLPs (`models::mlp`) around the native adaptive solvers: the forward
-//! solve records a discrete-adjoint tape of the accepted steps
-//! (`solvers::adjoint`), the backward pass pulls the data loss *and*
-//! **both** white-boxed regularizers — `R_E = Σ E_j |h_j|` (Eq. 9) and
-//! the Shampine stiffness ratio `R_S = Σ S_j` (Eq. 8/11) — back through
+//! MLPs (`models::mlp`) around the native adaptive solvers, packaged as
+//! solver [`System`]s (`MlpOde` / `MlpSde`: row-batched dynamics + VJP
+//! hooks) and integrated through the unified driver (`solvers::driver`):
+//! the forward drive records a discrete-adjoint tape of the accepted
+//! steps and feeds every step to a [`LocalReg`] observer, the backward
+//! walk (`solvers::adjoint`) pulls the data loss *and* the white-boxed
+//! regularizers — `R_E = Σ E_j |h_j|` (Eq. 9), the Shampine stiffness
+//! ratio `R_S = Σ S_j` (Eq. 8/11), and the sampled-step local term
+//! `R_L = E_ĵ |h_ĵ|` (LRNODE/LRNSDE, Pal et al. 2023) — back through
 //! those steps, and Adam updates the same flat `TrainState` vectors the
 //! PJRT artifacts use.  The update therefore sees exactly the objective
-//! the metrics report: `∇(data_loss + coef_e·R_E + coef_s·R_S)`.
+//! the metrics report:
+//! `∇(data_loss + coef_e·R_E + coef_s·R_S + coef_l·R_L)`.
 //!
 //! The stiffness adjoint needs no extra tape storage: the ODE tape's
 //! per-step record `[z_start | k_0 … k_{s-1}]` lets the backward pass
@@ -48,9 +53,13 @@ use anyhow::{bail, ensure, Result};
 use super::backend::{Backend, ModelInfo, StepCoefs, StepOutput, TrainData};
 use super::state::{Metrics, TrainState};
 use crate::models::{Adam, Mlp, MlpScratch};
-use crate::solvers::adjoint::{ode_backward, sde_backward, OdeTape, SdeTape};
-use crate::solvers::ode::{solve_saveat_taped, OdeOptions, Stats};
-use crate::solvers::sde::{sde_solve_saveat_taped, SdeOptions};
+use crate::solvers::adjoint::{ode_backward_sys, sde_backward_sys, OdeTape, RegCoefs, SdeTape};
+use crate::solvers::driver::{Saveat, SolveOptions, StepBudget};
+use crate::solvers::observer::{LocalReg, StepObserver};
+use crate::solvers::ode::{self, OdeOptions, Stats};
+use crate::solvers::sde::{self, SdeOptions};
+use crate::solvers::system::System;
+use crate::solvers::tableau::Tableau;
 use crate::util::rng::Rng;
 
 /// Latent width shared by the MNIST models (encoder output / ODE state).
@@ -135,6 +144,10 @@ struct NativeModel {
 /// Pure-Rust [`Backend`] over the five paper models.
 pub struct NativeBackend {
     models: BTreeMap<String, NativeModel>,
+    /// RK tableau of every ODE solve (train + predict); the SDE models'
+    /// stochastic Heun scheme is fixed and ignores it.  Selected at the
+    /// CLI boundary via `--solver` / [`NativeBackend::with_solver`].
+    tableau: Tableau,
 }
 
 impl Default for NativeBackend {
@@ -161,6 +174,7 @@ impl NativeBackend {
                     ("lr", 0.02),
                     ("coef_e", 100.0),
                     ("coef_s", 0.02),
+                    ("coef_l", 100.0),
                     ("t1", 1.0),
                 ]),
                 train_tol: 1e-4,
@@ -175,7 +189,12 @@ impl NativeBackend {
                     diffusion: Mlp::new(&[2, 8, 2]),
                 },
                 ladder: vec![8192, 32768, 131072],
-                hyper: hyper(&[("lr", 0.02), ("coef_e", 1.0), ("coef_s", 0.01)]),
+                hyper: hyper(&[
+                    ("lr", 0.02),
+                    ("coef_e", 1.0),
+                    ("coef_s", 0.01),
+                    ("coef_l", 1.0),
+                ]),
                 train_tol: 1e-2,
                 predict_tol: 1e-2,
             },
@@ -195,6 +214,7 @@ impl NativeBackend {
                     ("coef_e_start", 100.0),
                     ("coef_e_end", 10.0),
                     ("coef_s", 0.0285),
+                    ("coef_l", 100.0),
                     ("taylor_coef", 3.02e-3),
                     ("t1", 1.0),
                     ("steer_b", 0.5),
@@ -218,6 +238,7 @@ impl NativeBackend {
                     ("inv_decay", 1e-5),
                     ("coef_e", 10.0),
                     ("coef_s", 0.1),
+                    ("coef_l", 10.0),
                 ]),
                 train_tol: 1e-2,
                 predict_tol: 1e-2,
@@ -238,6 +259,7 @@ impl NativeBackend {
                     ("coef_e_start", 1000.0),
                     ("coef_e_end", 100.0),
                     ("coef_s", 0.285),
+                    ("coef_l", 1000.0),
                     ("taylor_coef", 0.01),
                     ("kl_anneal", 0.99),
                 ]),
@@ -245,7 +267,10 @@ impl NativeBackend {
                 predict_tol: 1e-3,
             },
         );
-        NativeBackend { models }
+        NativeBackend {
+            models,
+            tableau: Tableau::tsit5(),
+        }
     }
 
     /// Test hook: replace a model's budget ladder (e.g. with tiny rungs
@@ -255,6 +280,19 @@ impl NativeBackend {
             m.ladder = ladder;
         }
         self
+    }
+
+    /// Select the RK tableau of every ODE solve by name
+    /// (case-insensitive; the CLI's `--solver` flag).  Unknown names get
+    /// the registry-listing error of [`Tableau::parse`].
+    pub fn with_solver(mut self, name: &str) -> Result<NativeBackend> {
+        self.tableau = Tableau::parse(name).map_err(anyhow::Error::msg)?;
+        Ok(self)
+    }
+
+    /// The active RK tableau (what `--solver` selected; default `tsit5`).
+    pub fn solver(&self) -> &Tableau {
+        &self.tableau
     }
 
     fn get(&self, model: &str) -> Result<&NativeModel> {
@@ -267,12 +305,31 @@ impl NativeBackend {
         }
     }
 
-    fn ode_opts(tol: f64) -> OdeOptions {
+    /// Legacy-shaped options of the ODE predict paths.
+    fn ode_opts(&self, tol: f64) -> OdeOptions {
         OdeOptions {
+            tableau: self.tableau.clone(),
             rtol: tol,
             atol: tol,
             ..Default::default()
         }
+    }
+
+    /// Unified options of an ODE train solve: backend tableau, paper
+    /// tolerance, **total** attempt budget (the budget-ladder rung).
+    fn ode_train_opts(&self, tol: f64, budget: u64) -> SolveOptions {
+        SolveOptions::new()
+            .with_tableau(self.tableau.clone())
+            .with_tolerance(tol)
+            .with_budget(StepBudget::Total(budget))
+    }
+
+    /// Unified options of an SDE train solve (Heun scheme is fixed, so
+    /// no tableau choice).
+    fn sde_train_opts(tol: f64, budget: u64) -> SolveOptions {
+        SolveOptions::new()
+            .with_tolerance(tol)
+            .with_budget(StepBudget::Total(budget))
     }
 
     fn sde_opts(tol: f64) -> SdeOptions {
@@ -345,7 +402,207 @@ fn metrics(loss: f64, metric: f64, stats: &Stats, success: bool) -> Metrics {
         r_e: stats.r_e,
         r_e2: stats.r_e2,
         r_s: stats.r_s,
+        r_l: 0.0,
         r_aux: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model systems: the native models as solver `System`s
+// ---------------------------------------------------------------------------
+
+/// Row-batched MLP dynamics over a flat `[rows, l]` state — every native
+/// ODE model's dynamics block as one [`System`], replacing the per-pass
+/// forward/VJP closure pairs.  The VJP accumulates its parameter
+/// cotangent into `gp[grad_range]` (the dynamics part's slice of the
+/// full flat gradient).
+struct MlpOde<'a> {
+    mlp: &'a Mlp,
+    /// This part's parameter slice (already cut out of the flat vector).
+    theta: &'a [f64],
+    rows: usize,
+    grad_range: std::ops::Range<usize>,
+    fwd: MlpScratch,
+    bwd: MlpScratch,
+}
+
+impl<'a> MlpOde<'a> {
+    fn new(
+        mlp: &'a Mlp,
+        theta: &'a [f64],
+        rows: usize,
+        grad_range: std::ops::Range<usize>,
+    ) -> MlpOde<'a> {
+        MlpOde {
+            mlp,
+            theta,
+            rows,
+            grad_range,
+            fwd: mlp.scratch(),
+            bwd: mlp.scratch(),
+        }
+    }
+}
+
+impl System for MlpOde<'_> {
+    fn drift(&mut self, z: &[f64], _t: f64, dz: &mut [f64]) {
+        let l = self.mlp.in_dim();
+        for r in 0..self.rows {
+            self.mlp.forward(
+                self.theta,
+                &z[r * l..(r + 1) * l],
+                &mut dz[r * l..(r + 1) * l],
+                &mut self.fwd,
+            );
+        }
+    }
+
+    fn drift_vjp(&mut self, z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        let l = self.mlp.in_dim();
+        let g = &mut gp[self.grad_range.clone()];
+        for r in 0..self.rows {
+            self.mlp.vjp(
+                self.theta,
+                &z[r * l..(r + 1) * l],
+                &w[r * l..(r + 1) * l],
+                &mut gz[r * l..(r + 1) * l],
+                g,
+                &mut self.bwd,
+            );
+        }
+    }
+}
+
+/// Row-batched drift + diagonal-diffusion MLP pair — every native NSDE
+/// model's dynamics block as one diffusive [`System`].
+struct MlpSde<'a> {
+    drift: &'a Mlp,
+    th_drift: &'a [f64],
+    drift_range: std::ops::Range<usize>,
+    diffusion: &'a Mlp,
+    th_diff: &'a [f64],
+    diff_range: std::ops::Range<usize>,
+    rows: usize,
+    dfwd: MlpScratch,
+    dbwd: MlpScratch,
+    gfwd: MlpScratch,
+    gbwd: MlpScratch,
+}
+
+impl<'a> MlpSde<'a> {
+    fn new(
+        drift: &'a Mlp,
+        th_drift: &'a [f64],
+        drift_range: std::ops::Range<usize>,
+        diffusion: &'a Mlp,
+        th_diff: &'a [f64],
+        diff_range: std::ops::Range<usize>,
+        rows: usize,
+    ) -> MlpSde<'a> {
+        MlpSde {
+            drift,
+            th_drift,
+            drift_range,
+            diffusion,
+            th_diff,
+            diff_range,
+            rows,
+            dfwd: drift.scratch(),
+            dbwd: drift.scratch(),
+            gfwd: diffusion.scratch(),
+            gbwd: diffusion.scratch(),
+        }
+    }
+}
+
+impl System for MlpSde<'_> {
+    fn drift(&mut self, z: &[f64], _t: f64, dz: &mut [f64]) {
+        let l = self.drift.in_dim();
+        for r in 0..self.rows {
+            self.drift.forward(
+                self.th_drift,
+                &z[r * l..(r + 1) * l],
+                &mut dz[r * l..(r + 1) * l],
+                &mut self.dfwd,
+            );
+        }
+    }
+
+    fn has_diffusion(&self) -> bool {
+        true
+    }
+
+    fn diffusion(&mut self, z: &[f64], _t: f64, dg: &mut [f64]) {
+        let l = self.diffusion.in_dim();
+        for r in 0..self.rows {
+            self.diffusion.forward(
+                self.th_diff,
+                &z[r * l..(r + 1) * l],
+                &mut dg[r * l..(r + 1) * l],
+                &mut self.gfwd,
+            );
+        }
+    }
+
+    fn drift_vjp(&mut self, z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        let l = self.drift.in_dim();
+        let g = &mut gp[self.drift_range.clone()];
+        for r in 0..self.rows {
+            self.drift.vjp(
+                self.th_drift,
+                &z[r * l..(r + 1) * l],
+                &w[r * l..(r + 1) * l],
+                &mut gz[r * l..(r + 1) * l],
+                g,
+                &mut self.dbwd,
+            );
+        }
+    }
+
+    fn diffusion_vjp(&mut self, z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        let l = self.diffusion.in_dim();
+        let g = &mut gp[self.diff_range.clone()];
+        for r in 0..self.rows {
+            self.diffusion.vjp(
+                self.th_diff,
+                &z[r * l..(r + 1) * l],
+                &w[r * l..(r + 1) * l],
+                &mut gz[r * l..(r + 1) * l],
+                g,
+                &mut self.gbwd,
+            );
+        }
+    }
+}
+
+/// LocalReg sampling seed of one train-step solve (`traj` distinguishes
+/// ensemble members so they sample independent steps).
+fn local_seed(seed: u32, traj: usize) -> u64 {
+    (seed as u64 ^ 0x10CA_1B0B)
+        .wrapping_add((traj as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// The sampled-step observer of one training solve: live and seeded for
+/// lr methods (`coef_l != 0`), inert otherwise — non-lr methods must
+/// not pay a per-accepted-step sampling draw they discard.
+fn local_sampler(coef_l: f64, seed: u32, traj: usize) -> LocalReg {
+    if coef_l != 0.0 {
+        LocalReg::new(local_seed(seed, traj))
+    } else {
+        LocalReg::disabled()
+    }
+}
+
+/// Resolve a [`LocalReg`] observation into backward weights: the
+/// regularizer coefficients (global + sampled-step local term) and the
+/// reported `R_L` value.  With `coef_l = 0` the observation is ignored.
+fn resolve_local(reg: RegCoefs, local: &LocalReg, coef_l: f64) -> (RegCoefs, f64) {
+    if coef_l == 0.0 {
+        return (reg, 0.0);
+    }
+    match local.sampled_step() {
+        Some(step) => (reg.with_local(step, coef_l), local.value()),
+        None => (reg, 0.0),
     }
 }
 
@@ -450,18 +707,20 @@ impl Backend for NativeBackend {
         let mut grad = vec![0.0; theta.len()];
         let coef_e = coefs.coef_e as f64;
         let coef_s = coefs.coef_s as f64;
+        let coef_l = coefs.coef_l as f64;
 
-        let (data_loss, metric, stats, success) = match (&m.arch, data) {
+        let (data_loss, metric, stats, success, r_l) = match (&m.arch, data) {
             (Arch::SpiralNode { dynamics }, TrainData::Trajectory { data, ts }) => {
                 spiral_node_pass(
                     dynamics,
                     &theta,
                     data,
                     ts,
-                    &Self::ode_opts(m.train_tol),
-                    budget,
+                    &self.ode_train_opts(m.train_tol, budget),
                     coef_e,
                     coef_s,
+                    coef_l,
+                    coefs.seed,
                     &mut grad,
                 )?
             }
@@ -475,10 +734,11 @@ impl Backend for NativeBackend {
                     mu,
                     var,
                     ts,
-                    &Self::sde_opts(m.train_tol),
+                    m.train_tol,
                     budget,
                     coef_e,
                     coef_s,
+                    coef_l,
                     coefs.seed,
                     &mut grad,
                 )?
@@ -493,10 +753,11 @@ impl Backend for NativeBackend {
                     x,
                     y,
                     coefs.t1 as f64,
-                    &Self::ode_opts(m.train_tol),
-                    budget,
+                    &self.ode_train_opts(m.train_tol, budget),
                     coef_e,
                     coef_s,
+                    coef_l,
+                    coefs.seed,
                     &mut grad,
                 )?
             }
@@ -517,10 +778,10 @@ impl Backend for NativeBackend {
                 &theta,
                 x,
                 y,
-                &Self::sde_opts(m.train_tol),
-                budget,
+                &Self::sde_train_opts(m.train_tol, budget),
                 coef_e,
                 coef_s,
+                coef_l,
                 coefs.seed,
                 &mut grad,
             )?,
@@ -535,19 +796,21 @@ impl Backend for NativeBackend {
                     mask,
                     ts,
                     coefs.kl as f64,
-                    &Self::ode_opts(m.train_tol),
-                    budget,
+                    &self.ode_train_opts(m.train_tol, budget),
                     coef_e,
                     coef_s,
+                    coef_l,
+                    coefs.seed,
                     &mut grad,
                 )?
             }
             (_, d) => bail!("model {model} cannot train on {:?} data", d.kind()),
         };
 
-        // The reported loss and the gradient now compose identically:
-        // both are data_loss + coef_e·R_E + coef_s·R_S.
-        let loss = data_loss + coef_e * stats.r_e + coef_s * stats.r_s;
+        // The reported loss and the gradient compose identically: both
+        // are data_loss + coef_e·R_E + coef_s·R_S + coef_l·R_L (the
+        // sampled-step local term).
+        let loss = data_loss + coef_e * stats.r_e + coef_s * stats.r_s + coef_l * r_l;
 
         let mut params = state.params.clone();
         let mut opt_state = state.opt_state.clone();
@@ -558,10 +821,12 @@ impl Backend for NativeBackend {
             coefs.lr as f64,
             state.iter,
         );
+        let mut step_metrics = metrics(loss, metric, &stats, success);
+        step_metrics.r_l = r_l;
         Ok(StepOutput {
             params,
             opt_state,
-            metrics: metrics(loss, metric, &stats, success),
+            metrics: step_metrics,
         })
     }
 
@@ -587,7 +852,7 @@ impl Backend for NativeBackend {
                     &theta,
                     data,
                     ts,
-                    &Self::ode_opts(m.predict_tol),
+                    &self.ode_opts(m.predict_tol),
                 )?;
                 Ok((pred, metrics(loss, loss, &stats, ok)))
             }
@@ -614,7 +879,7 @@ impl Backend for NativeBackend {
                     &theta,
                     x,
                     y,
-                    &Self::ode_opts(m.predict_tol),
+                    &self.ode_opts(m.predict_tol),
                 )?;
                 Ok((logits, metrics(loss, acc, &stats, ok)))
             }
@@ -648,7 +913,7 @@ impl Backend for NativeBackend {
                     x,
                     mask,
                     ts,
-                    &Self::ode_opts(m.predict_tol),
+                    &self.ode_opts(m.predict_tol),
                 )
             }
             (_, d) => bail!("model {model} cannot predict on {:?} data", d.kind()),
@@ -665,27 +930,29 @@ fn spiral_node_pass(
     theta: &[f64],
     data: &[f32],
     ts: &[f32],
-    opts: &OdeOptions,
-    budget: u64,
+    opts: &SolveOptions,
     coef_e: f64,
     coef_s: f64,
+    coef_l: f64,
+    seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool)> {
+) -> Result<(f64, f64, Stats, bool, f64)> {
     let d = dynamics.in_dim();
     ensure!(ts.len() >= 2, "need at least two save points");
     ensure!(data.len() == ts.len() * d, "trajectory shape mismatch");
     let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
     let z0: Vec<f64> = data[..d].iter().map(|&v| v as f64).collect();
 
+    let mut sys = MlpOde::new(dynamics, theta, 1, 0..grad.len());
     let mut tape = OdeTape::new();
-    let mut sf = dynamics.scratch();
-    let (zs, out) = solve_saveat_taped(
-        |z: &[f64], _t: f64, dz: &mut [f64]| dynamics.forward(theta, z, dz, &mut sf),
+    let mut local = local_sampler(coef_l, seed, 0);
+    let (zs, out) = ode::drive(
+        &mut sys,
         &z0,
-        &ts64,
+        Saveat::Grid(&ts64),
         opts,
-        budget,
-        &mut tape,
+        Some(&mut tape),
+        &mut [&mut local],
     );
 
     let denom = (ts.len() * d) as f64;
@@ -699,19 +966,9 @@ fn spiral_node_pass(
         }
     }
 
-    let mut sb = dynamics.scratch();
-    ode_backward(
-        &tape,
-        &opts.tableau,
-        &save_grads,
-        coef_e,
-        coef_s,
-        grad,
-        |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-            dynamics.vjp(theta, z, w, gz, gp, &mut sb);
-        },
-    );
-    Ok((mse, mse, out.stats, out.success))
+    let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
+    ode_backward_sys(&tape, &opts.tableau, &save_grads, &reg, grad, &mut sys);
+    Ok((mse, mse, out.stats, out.success, r_l))
 }
 
 fn spiral_node_predict(
@@ -795,13 +1052,14 @@ fn spiral_nsde_pass(
     mu: &[f32],
     var: &[f32],
     ts: &[f32],
-    opts: &SdeOptions,
+    tol: f64,
     budget: u64,
     coef_e: f64,
     coef_s: f64,
+    coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool)> {
+) -> Result<(f64, f64, Stats, bool, f64)> {
     let d = drift.in_dim();
     let t_pts = ts.len();
     ensure!(t_pts >= 2, "need at least two save points");
@@ -812,43 +1070,52 @@ fn spiral_nsde_pass(
     let th_drift = &theta[arch.range(0)];
     let th_diff = &theta[arch.range(1)];
 
-    let mut sdf = drift.scratch();
-    let mut sgf = diffusion.scratch();
+    let mut sys = MlpSde::new(
+        drift,
+        th_drift,
+        arch.range(0),
+        diffusion,
+        th_diff,
+        arch.range(1),
+        1,
+    );
     let mut stats = Stats::default();
     let mut success = true;
     let mut tapes: Vec<SdeTape> = Vec::with_capacity(n_traj);
     let mut states: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_traj);
+    // Per-trajectory backward weights (LRNSDE samples one step per
+    // trajectory's solve); R_L sums the sampled terms.
+    let mut regs: Vec<RegCoefs> = Vec::with_capacity(n_traj);
+    let mut r_l = 0.0;
     for i in 0..n_traj {
         let z0: Vec<f64> = u0[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect();
         let mut rng = traj_rng(seed as u64 ^ 0x51DE, i);
         let remaining = budget.saturating_sub(stats.attempts());
+        let opts = NativeBackend::sde_train_opts(tol, remaining);
         let mut tape = SdeTape::new();
-        let (zs, st, ok) = sde_solve_saveat_taped(
-            |z: &[f64], _t: f64, dz: &mut [f64]| drift.forward(th_drift, z, dz, &mut sdf),
-            |z: &[f64], _t: f64, dg: &mut [f64]| diffusion.forward(th_diff, z, dg, &mut sgf),
+        let mut local = local_sampler(coef_l, seed, i);
+        let (zs, out) = sde::drive(
+            &mut sys,
             &z0,
-            &ts64,
+            Saveat::Grid(&ts64),
             &mut rng,
-            opts,
-            remaining,
-            &mut tape,
+            &opts,
+            Some(&mut tape),
+            &mut [&mut local],
         );
-        stats.merge(&st);
-        success &= ok;
+        stats.merge(&out.stats);
+        success &= out.success;
         tapes.push(tape);
         states.push(zs);
+        let (reg, value) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
+        r_l += value;
+        regs.push(reg);
     }
 
     let (gmm, mu_p, var_p) = moment_loss(&states, mu, var, t_pts, d);
 
     {
         let denom = (t_pts * d) as f64;
-        let drift_range = arch.range(0);
-        let diff_range = arch.range(1);
-        let mut sdb = drift.scratch();
-        let mut sgb = diffusion.scratch();
-        let mut sdv = drift.scratch();
-        let mut sgv = diffusion.scratch();
         let mut sg = vec![vec![0.0; d]; t_pts];
         for i in 0..n_traj {
             for t in 0..t_pts {
@@ -861,26 +1128,10 @@ fn spiral_nsde_pass(
                 }
             }
             // u0 is data: the returned z0 cotangent is discarded.
-            sde_backward(
-                &tapes[i],
-                &sg,
-                coef_e,
-                coef_s,
-                grad,
-                |z: &[f64], _t: f64, dz: &mut [f64]| drift.forward(th_drift, z, dz, &mut sdb),
-                |z: &[f64], _t: f64, dg: &mut [f64]| {
-                    diffusion.forward(th_diff, z, dg, &mut sgb)
-                },
-                |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-                    drift.vjp(th_drift, z, w, gz, &mut gp[drift_range.clone()], &mut sdv);
-                },
-                |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-                    diffusion.vjp(th_diff, z, w, gz, &mut gp[diff_range.clone()], &mut sgv);
-                },
-            );
+            sde_backward_sys(&tapes[i], &sg, &regs[i], grad, &mut sys);
         }
     }
-    Ok((gmm, gmm, stats, success))
+    Ok((gmm, gmm, stats, success, r_l))
 }
 
 fn spiral_nsde_predict(
@@ -1035,12 +1286,13 @@ fn mnist_node_pass(
     x: &[f32],
     y: &[f32],
     t1: f64,
-    opts: &OdeOptions,
-    budget: u64,
+    opts: &SolveOptions,
     coef_e: f64,
     coef_s: f64,
+    coef_l: f64,
+    seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool)> {
+) -> Result<(f64, f64, Stats, bool, f64)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
@@ -1053,51 +1305,26 @@ fn mnist_node_pass(
     let mut se = enc.scratch();
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
 
+    let mut sys = MlpOde::new(dynamics, th_dyn, b, arch.range(1));
     let mut tape = OdeTape::new();
-    let mut sf = dynamics.scratch();
-    let (zs, out) = solve_saveat_taped(
-        |z: &[f64], _t: f64, dz: &mut [f64]| {
-            for r in 0..b {
-                let (zi, di) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                dynamics.forward(th_dyn, zi, di, &mut sf);
-            }
-        },
+    let mut local = local_sampler(coef_l, seed, 0);
+    let (zs, out) = ode::drive(
+        &mut sys,
         &z0,
-        &[0.0, t_end],
+        Saveat::Grid(&[0.0, t_end]),
         opts,
-        budget,
-        &mut tape,
+        Some(&mut tape),
+        &mut [&mut local],
     );
 
     let (ce_loss, acc, dzt, _) =
         classify_batch(clf, th_clf, &zs[1], y, b, Some(&mut grad[arch.range(2)]));
 
     let save_grads = vec![vec![0.0; b * l], dzt];
-    let dyn_range = arch.range(1);
-    let mut sb = dynamics.scratch();
-    let dz0 = ode_backward(
-        &tape,
-        &opts.tableau,
-        &save_grads,
-        coef_e,
-        coef_s,
-        grad,
-        |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-            let gdyn = &mut gp[dyn_range.clone()];
-            for r in 0..b {
-                dynamics.vjp(
-                    th_dyn,
-                    &z[r * l..(r + 1) * l],
-                    &w[r * l..(r + 1) * l],
-                    &mut gz[r * l..(r + 1) * l],
-                    gdyn,
-                    &mut sb,
-                );
-            }
-        },
-    );
+    let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
+    let dz0 = ode_backward_sys(&tape, &opts.tableau, &save_grads, &reg, grad, &mut sys);
     encoder_backward(enc, th_enc, x, &dz0, b, &mut grad[arch.range(0)], &mut se);
-    Ok((ce_loss, acc, out.stats, out.success))
+    Ok((ce_loss, acc, out.stats, out.success, r_l))
 }
 
 fn mnist_node_predict(
@@ -1149,13 +1376,13 @@ fn mnist_nsde_pass(
     theta: &[f64],
     x: &[f32],
     y: &[f32],
-    opts: &SdeOptions,
-    budget: u64,
+    opts: &SolveOptions,
     coef_e: f64,
     coef_s: f64,
+    coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool)> {
+) -> Result<(f64, f64, Stats, bool, f64)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
@@ -1168,88 +1395,36 @@ fn mnist_nsde_pass(
     let mut se = enc.scratch();
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
 
+    let mut sys = MlpSde::new(
+        drift,
+        th_drift,
+        arch.range(1),
+        diffusion,
+        th_diff,
+        arch.range(2),
+        b,
+    );
     let mut rng = Rng::new(seed as u64 ^ 0x51DE);
     let mut tape = SdeTape::new();
-    let mut sdf = drift.scratch();
-    let mut sgf = diffusion.scratch();
-    let (zs, stats, ok) = sde_solve_saveat_taped(
-        |z: &[f64], _t: f64, dz: &mut [f64]| {
-            for r in 0..b {
-                let (zi, oi) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                drift.forward(th_drift, zi, oi, &mut sdf);
-            }
-        },
-        |z: &[f64], _t: f64, dg: &mut [f64]| {
-            for r in 0..b {
-                let (zi, oi) = (&z[r * l..(r + 1) * l], &mut dg[r * l..(r + 1) * l]);
-                diffusion.forward(th_diff, zi, oi, &mut sgf);
-            }
-        },
+    let mut local = local_sampler(coef_l, seed, 0);
+    let (zs, out) = sde::drive(
+        &mut sys,
         &z0,
-        &[0.0, 1.0],
+        Saveat::Grid(&[0.0, 1.0]),
         &mut rng,
         opts,
-        budget,
-        &mut tape,
+        Some(&mut tape),
+        &mut [&mut local],
     );
 
     let (ce_loss, acc, dzt, _) =
         classify_batch(clf, th_clf, &zs[1], y, b, Some(&mut grad[arch.range(3)]));
 
     let save_grads = vec![vec![0.0; b * l], dzt];
-    let drift_range = arch.range(1);
-    let diff_range = arch.range(2);
-    let mut sdb = drift.scratch();
-    let mut sgb = diffusion.scratch();
-    let mut sdv = drift.scratch();
-    let mut sgv = diffusion.scratch();
-    let dz0 = sde_backward(
-        &tape,
-        &save_grads,
-        coef_e,
-        coef_s,
-        grad,
-        |z: &[f64], _t: f64, dz: &mut [f64]| {
-            for r in 0..b {
-                let (zi, oi) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                drift.forward(th_drift, zi, oi, &mut sdb);
-            }
-        },
-        |z: &[f64], _t: f64, dg: &mut [f64]| {
-            for r in 0..b {
-                let (zi, oi) = (&z[r * l..(r + 1) * l], &mut dg[r * l..(r + 1) * l]);
-                diffusion.forward(th_diff, zi, oi, &mut sgb);
-            }
-        },
-        |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-            let g = &mut gp[drift_range.clone()];
-            for r in 0..b {
-                drift.vjp(
-                    th_drift,
-                    &z[r * l..(r + 1) * l],
-                    &w[r * l..(r + 1) * l],
-                    &mut gz[r * l..(r + 1) * l],
-                    g,
-                    &mut sdv,
-                );
-            }
-        },
-        |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-            let g = &mut gp[diff_range.clone()];
-            for r in 0..b {
-                diffusion.vjp(
-                    th_diff,
-                    &z[r * l..(r + 1) * l],
-                    &w[r * l..(r + 1) * l],
-                    &mut gz[r * l..(r + 1) * l],
-                    g,
-                    &mut sgv,
-                );
-            }
-        },
-    );
+    let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
+    let dz0 = sde_backward_sys(&tape, &save_grads, &reg, grad, &mut sys);
     encoder_backward(enc, th_enc, x, &dz0, b, &mut grad[arch.range(0)], &mut se);
-    Ok((ce_loss, acc, stats, ok))
+    Ok((ce_loss, acc, out.stats, out.success, r_l))
 }
 
 fn mnist_nsde_predict(
@@ -1332,12 +1507,13 @@ fn latent_ode_pass(
     mask: &[f32],
     ts: &[f32],
     kl_coef: f64,
-    opts: &OdeOptions,
-    budget: u64,
+    opts: &SolveOptions,
     coef_e: f64,
     coef_s: f64,
+    coef_l: f64,
+    seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool)> {
+) -> Result<(f64, f64, Stats, bool, f64)> {
     let c = dec.out_dim();
     let t_pts = ts.len();
     ensure!(t_pts >= 2, "need at least two save points");
@@ -1373,20 +1549,16 @@ fn latent_ode_pass(
         );
     }
 
+    let mut sys = MlpOde::new(dynamics, th_dyn, b, arch.range(1));
     let mut tape = OdeTape::new();
-    let mut sf = dynamics.scratch();
-    let (zs, out) = solve_saveat_taped(
-        |z: &[f64], _t: f64, dz: &mut [f64]| {
-            for r in 0..b {
-                let (zi, di) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                dynamics.forward(th_dyn, zi, di, &mut sf);
-            }
-        },
+    let mut local = local_sampler(coef_l, seed, 0);
+    let (zs, out) = ode::drive(
+        &mut sys,
         &z0,
-        &ts64,
+        Saveat::Grid(&ts64),
         opts,
-        budget,
-        &mut tape,
+        Some(&mut tape),
+        &mut [&mut local],
     );
 
     // Masked reconstruction MSE + decoder backward per save point.
@@ -1425,29 +1597,8 @@ fn latent_ode_pass(
     // KL-annealed latent prior term: kl · ½ mean(z0²).
     let kl_term = kl_coef * 0.5 * z0.iter().map(|z| z * z).sum::<f64>() / (b * l) as f64;
 
-    let dyn_range = arch.range(1);
-    let mut sb = dynamics.scratch();
-    let mut dz0 = ode_backward(
-        &tape,
-        &opts.tableau,
-        &save_grads,
-        coef_e,
-        coef_s,
-        grad,
-        |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
-            let gdyn = &mut gp[dyn_range.clone()];
-            for r in 0..b {
-                dynamics.vjp(
-                    th_dyn,
-                    &z[r * l..(r + 1) * l],
-                    &w[r * l..(r + 1) * l],
-                    &mut gz[r * l..(r + 1) * l],
-                    gdyn,
-                    &mut sb,
-                );
-            }
-        },
-    );
+    let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
+    let mut dz0 = ode_backward_sys(&tape, &opts.tableau, &save_grads, &reg, grad, &mut sys);
     for (g, z) in dz0.iter_mut().zip(&z0) {
         *g += kl_coef * z / (b * l) as f64;
     }
@@ -1468,7 +1619,7 @@ fn latent_ode_pass(
             );
         }
     }
-    Ok((mse + kl_term, mse, out.stats, out.success))
+    Ok((mse + kl_term, mse, out.stats, out.success, r_l))
 }
 
 fn latent_ode_predict(
@@ -1682,6 +1833,88 @@ mod tests {
         assert_ne!(
             pa, pb,
             "coef_s must alter the SDE gradient, not just the loss value"
+        );
+    }
+
+    #[test]
+    fn coef_l_gradient_path_is_live() {
+        // Same init, same data, same seed: toggling coef_l must change
+        // the trained parameters — the sampled-step local regularizer is
+        // differentiated through the tape at the sampled step, not just
+        // added to the reported loss value.
+        let (traj, ts) = spiral_fixture(16);
+        let be = NativeBackend::new();
+        let data = TrainData::Trajectory { data: &traj, ts: &ts };
+        let with_lr = StepCoefs {
+            coef_l: 100.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let without = StepCoefs {
+            coef_l: 0.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let (pa, ma) = train_params(&be, "spiral_node", &data, &with_lr, 3);
+        let (pb, mb) = train_params(&be, "spiral_node", &data, &without, 3);
+        assert!(ma.r_l > 0.0, "sampled R_L must be reported");
+        assert!(
+            ma.r_l <= ma.r_e,
+            "one step's error term cannot exceed the R_E sum"
+        );
+        assert_eq!(mb.r_l, 0.0, "R_L reads 0 when the method is off");
+        assert_ne!(
+            pa, pb,
+            "coef_l must alter the gradient, not just the loss value"
+        );
+
+        // SDE path: same check on the spiral NSDE moment objective.
+        let ts_sde = spiral::uniform_grid(8, 0.5);
+        let ts_f32: Vec<f32> = ts_sde.iter().map(|&t| t as f32).collect();
+        let (mu, var) = spiral::spiral_sde_moments([1.0, 1.0], &ts_sde, 64, 1);
+        let u0: Vec<f32> = (0..8).flat_map(|_| [1.0f32, 1.0]).collect();
+        let data = TrainData::Moments { u0: &u0, mu: &mu, var: &var, ts: &ts_f32 };
+        let with_lr = StepCoefs {
+            coef_l: 1.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let without = StepCoefs {
+            coef_l: 0.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let (pa, ma) = train_params(&be, "spiral_nsde", &data, &with_lr, 3);
+        let (pb, _) = train_params(&be, "spiral_nsde", &data, &without, 3);
+        assert!(ma.r_l > 0.0, "ensemble R_L sums the per-trajectory samples");
+        assert_ne!(
+            pa, pb,
+            "coef_l must alter the SDE gradient, not just the loss value"
+        );
+    }
+
+    #[test]
+    fn with_solver_switches_the_ode_tableau() {
+        let (traj, ts) = spiral_fixture(16);
+        let data = TrainData::Trajectory { data: &traj, ts: &ts };
+        let coefs = StepCoefs {
+            coef_e: 100.0,
+            ..Default::default()
+        };
+        let tsit = NativeBackend::new();
+        assert_eq!(tsit.solver().name, "tsit5");
+        let dopri = NativeBackend::new().with_solver("DoPri5").unwrap();
+        assert_eq!(dopri.solver().name, "dopri5");
+        assert!(NativeBackend::new().with_solver("rk4").is_err());
+
+        let (pa, ma) = train_params(&tsit, "spiral_node", &data, &coefs, 2);
+        let (pb, mb) = train_params(&dopri, "spiral_node", &data, &coefs, 2);
+        assert!(ma.loss.is_finite() && mb.loss.is_finite());
+        assert!(pb.iter().all(|p| p.is_finite()));
+        assert_ne!(
+            (ma.nfe, pa.first().copied()),
+            (mb.nfe, pb.first().copied()),
+            "a different tableau must change the realized solve"
         );
     }
 

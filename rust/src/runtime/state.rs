@@ -22,6 +22,10 @@ pub struct Metrics {
     /// 9-element artifact vector does not carry it (decoded as 0).
     pub r_e2: f64,
     pub r_s: f64,
+    /// Sampled-step local regularizer value `R_L = E_ĵ |h_ĵ|`
+    /// (LRNODE/LRNSDE).  Native backend only; the 9-element artifact
+    /// vector does not carry it (decoded as 0).
+    pub r_l: f64,
     pub r_aux: f64,
 }
 
@@ -40,6 +44,7 @@ impl Metrics {
             r_e: v[6] as f64,
             r_e2: 0.0,
             r_s: v[7] as f64,
+            r_l: 0.0,
             r_aux: v[8] as f64,
         })
     }

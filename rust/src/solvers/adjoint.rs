@@ -30,6 +30,17 @@
 //! finite-difference gradient checks in `tests/adjoint_gradcheck.rs`
 //! compare against.
 //!
+//! The unified-API entry points [`ode_backward_sys`] /
+//! [`sde_backward_sys`] take the dynamics as a [`System`] (its VJP
+//! hooks) and the regularizer weights as [`RegCoefs`], which besides the
+//! global `coef_e`/`coef_s` sums supports the **sampled-step local**
+//! error term of LRNODE/LRNSDE (`RegCoefs::local_e`): the step sampled
+//! by [`super::observer::LocalReg`] during the forward solve gets an
+//! extra error-cotangent weight, and nothing else changes —
+//! [`ode_replay_errors`] / [`sde_replay_errors`] expose the per-step
+//! terms so `tests/lrnode_gradcheck.rs` can finite-difference exactly
+//! that objective.
+//!
 //! ## Tape memory layout (DESIGN.md §Backend)
 //!
 //! The ODE tape stores one record per **accepted** step (rejected attempts
@@ -49,6 +60,7 @@
 #![allow(clippy::too_many_arguments)]
 
 use super::controller::{rms, stiffness_norm, stiffness_ratio, EPS, RMS_FLOOR};
+use super::system::{OdeSystemVjp, SdeSystemVjp, System};
 use super::tableau::Tableau;
 
 /// Accumulating vector-Jacobian product of a dynamics function:
@@ -56,6 +68,52 @@ use super::tableau::Tableau;
 /// `wᵀ ∂f/∂θ` into `gparams` (both `+=`, never overwrite).
 pub trait VjpFn: FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]) {}
 impl<T: FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64])> VjpFn for T {}
+
+/// Regularizer coefficients of one backward walk.
+///
+/// `coef_e`/`coef_s` weight the **global** sums `R_E = Σ_j E_j |h_j|`
+/// and `R_S = Σ_j S_j` exactly as the legacy scalar arguments did.
+/// `local_e` additionally weights the error term of **one** step — the
+/// locally regularized objective (LRNODE/LRNSDE, Pal et al. 2023) whose
+/// step is sampled by [`super::observer::LocalReg`] during the forward
+/// solve.  The effective per-step error coefficient is
+/// `coef_e + local_e.1` on the sampled step and `coef_e` elsewhere, so a
+/// `None` keeps the walk bit-identical to the legacy path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegCoefs {
+    /// Global `R_E` coefficient (0 disables).
+    pub coef_e: f64,
+    /// Global `R_S` coefficient (0 disables).
+    pub coef_s: f64,
+    /// Sampled-step local error regularization: `(step index, coefficient)`.
+    pub local_e: Option<(usize, f64)>,
+}
+
+impl RegCoefs {
+    /// The legacy global-sum objective `coef_e · R_E + coef_s · R_S`.
+    pub fn global(coef_e: f64, coef_s: f64) -> RegCoefs {
+        RegCoefs {
+            coef_e,
+            coef_s,
+            local_e: None,
+        }
+    }
+
+    /// Add a sampled-step local error term `coef · E_step |h_step|`.
+    pub fn with_local(mut self, step: usize, coef: f64) -> RegCoefs {
+        self.local_e = Some((step, coef));
+        self
+    }
+
+    /// Effective error-term coefficient at recorded step `j`.
+    #[inline]
+    fn e_at(&self, j: usize) -> f64 {
+        match self.local_e {
+            Some((step, coef)) if step == j => self.coef_e + coef,
+            _ => self.coef_e,
+        }
+    }
+}
 
 /// Recorded forward pass of an adaptive explicit-RK solve.
 #[derive(Clone, Debug, Default)]
@@ -155,6 +213,9 @@ impl OdeTape {
 ///   `R_S = Σ_j S_j`, the Shampine stiffness ratio on the tableau's
 ///   equal-`c` stage pair (pass `0.0` to treat `R_S` as absent).
 /// * `f_vjp` is the accumulating VJP of the dynamics (see [`VjpFn`]).
+///
+/// Legacy shim over [`ode_backward_sys`] with a closure-lifted
+/// [`System`] and global [`RegCoefs`]; kept for one release.
 pub fn ode_backward(
     tape: &OdeTape,
     tab: &Tableau,
@@ -162,7 +223,33 @@ pub fn ode_backward(
     coef_e: f64,
     coef_s: f64,
     grad_params: &mut [f64],
-    mut f_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+    f_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+) -> Vec<f64> {
+    let mut sys = OdeSystemVjp {
+        drift: |_z: &[f64], _t: f64, _dz: &mut [f64]| {},
+        vjp: f_vjp,
+    };
+    ode_backward_sys(
+        tape,
+        tab,
+        save_grads,
+        &RegCoefs::global(coef_e, coef_s),
+        grad_params,
+        &mut sys,
+    )
+}
+
+/// [`ode_backward`] over a [`System`] (its [`System::drift_vjp`] hook)
+/// with full [`RegCoefs`] — the unified-API discrete adjoint, including
+/// the sampled-step local error term (`RegCoefs::local_e`, the LRNODE
+/// objective; gradchecked in `tests/lrnode_gradcheck.rs`).
+pub fn ode_backward_sys<S: System>(
+    tape: &OdeTape,
+    tab: &Tableau,
+    save_grads: &[Vec<f64>],
+    reg: &RegCoefs,
+    grad_params: &mut [f64],
+    sys: &mut S,
 ) -> Vec<f64> {
     let n = tape.n;
     let s = tape.stages;
@@ -194,11 +281,15 @@ pub fn ode_backward(
         for j in (marks[si - 1]..marks[si]).rev() {
             let (t, h) = tape.steps[j];
             let (z, ks) = tape.record(j);
+            // Per-step error coefficient: the global coef_e plus, on the
+            // sampled step, the local (LRNODE) coefficient.
+            let ce = reg.e_at(j);
+            let cs = reg.coef_s;
 
             // Recompute the embedded error of this step from the stages:
             // err = h Σ_i btilde_i k_i, E = rms(err); the R_E term
-            // contributes dL/derr = coef_e · |h| · err / (n E).
-            if coef_e != 0.0 {
+            // contributes dL/derr = ce · |h| · err / (n E).
+            if ce != 0.0 {
                 err.fill(0.0);
                 for (i, &bt) in tab.btilde.iter().enumerate() {
                     if bt != 0.0 {
@@ -212,7 +303,7 @@ pub fn ode_backward(
                     err[d] *= h;
                 }
                 let e = rms(&err);
-                let scale = coef_e * h.abs() / (n as f64 * e);
+                let scale = ce * h.abs() / (n as f64 * e);
                 for d in 0..n {
                     dl_err[d] = scale * err[d];
                 }
@@ -223,7 +314,7 @@ pub fn ode_backward(
                 let (bi, bti) = (tab.b[i], tab.btilde[i]);
                 for d in 0..n {
                     let mut acc = bi * lambda[d];
-                    if coef_e != 0.0 {
+                    if ce != 0.0 {
                         acc += bti * dl_err[d];
                     }
                     w[i * n + d] = h * acc;
@@ -242,7 +333,7 @@ pub fn ode_backward(
             // cotangents alone: directly on w[sx]/w[sy] through dk, and
             // on every earlier stage through dg with weight
             // h (a[sy][j] − a[sx][j]).
-            if coef_s != 0.0 {
+            if cs != 0.0 {
                 for (g, stage) in [(&mut g_x, sx), (&mut g_y, sy)] {
                     g.copy_from_slice(z);
                     for (jj, &aij) in tab.a[stage].iter().enumerate() {
@@ -265,8 +356,8 @@ pub fn ode_backward(
                 let nn = stiffness_norm(num, n);
                 let d0 = stiffness_norm(den, n);
                 let dd = d0 + EPS;
-                let c_num = coef_s / (n as f64 * nn * dd);
-                let c_den = -coef_s * nn / (n as f64 * d0 * dd * dd);
+                let c_num = cs / (n as f64 * nn * dd);
+                let c_den = -cs * nn / (n as f64 * d0 * dd * dd);
                 for d in 0..n {
                     let uk = c_num * dk[d];
                     w[sy * n + d] += uk;
@@ -300,7 +391,7 @@ pub fn ode_backward(
                     }
                 }
                 gz.fill(0.0);
-                f_vjp(&zi, t + tab.c[i] * h, &wi, &mut gz, grad_params);
+                sys.drift_vjp(&zi, t + tab.c[i] * h, &wi, &mut gz, grad_params);
                 for d in 0..n {
                     lambda[d] += gz[d];
                 }
@@ -331,8 +422,41 @@ pub fn ode_replay(
     tape: &OdeTape,
     tab: &Tableau,
     z0: &[f64],
-    mut f: impl FnMut(&[f64], f64, &mut [f64]),
+    f: impl FnMut(&[f64], f64, &mut [f64]),
 ) -> (Vec<Vec<f64>>, f64, f64) {
+    let mut r_e = 0.0;
+    let mut r_s = 0.0;
+    let out = ode_replay_visit(tape, tab, z0, f, |_, e_term, s_term| {
+        r_e += e_term;
+        r_s += s_term;
+    });
+    (out, r_e, r_s)
+}
+
+/// Per-step error terms `E_j |h_j|` of the replayed frozen program —
+/// the FD counterpart of the sampled-step (LRNODE) objective: entry `j`
+/// is exactly the term [`RegCoefs::local_e`] weights at step `j` (and
+/// summing the entries in order reproduces the replayed `R_E` bits).
+pub fn ode_replay_errors(
+    tape: &OdeTape,
+    tab: &Tableau,
+    z0: &[f64],
+    f: impl FnMut(&[f64], f64, &mut [f64]),
+) -> Vec<f64> {
+    let mut errs = vec![0.0; tape.len()];
+    ode_replay_visit(tape, tab, z0, f, |j, e_term, _| errs[j] = e_term);
+    errs
+}
+
+/// Shared replay walk: re-runs the frozen program and hands each step's
+/// `(j, E_j |h_j|, S_j)` to `on_step`, returning the save-mark states.
+fn ode_replay_visit(
+    tape: &OdeTape,
+    tab: &Tableau,
+    z0: &[f64],
+    mut f: impl FnMut(&[f64], f64, &mut [f64]),
+    mut on_step: impl FnMut(usize, f64, f64),
+) -> Vec<Vec<f64>> {
     let n = tape.n;
     let s = tape.stages;
     let (sx, sy) = tab.stiff_pair;
@@ -341,8 +465,6 @@ pub fn ode_replay(
     let mut zi = vec![0.0; n];
     let mut g_x = vec![0.0; n];
     let mut g_y = vec![0.0; n];
-    let mut r_e = 0.0;
-    let mut r_s = 0.0;
     let marks = tape.save_marks();
     let mut out = Vec::with_capacity(marks.len());
     out.push(z.clone());
@@ -387,12 +509,15 @@ pub fn ode_replay(
                 num += dk * dk;
                 den += dg * dg;
             }
-            r_e += (err_sq / n as f64 + RMS_FLOOR).sqrt() * h.abs();
-            r_s += stiffness_ratio(num, den, n);
+            on_step(
+                j,
+                (err_sq / n as f64 + RMS_FLOOR).sqrt() * h.abs(),
+                stiffness_ratio(num, den, n),
+            );
         }
         out.push(z.clone());
     }
-    (out, r_e, r_s)
+    out
 }
 
 /// Recorded forward pass of an adaptive stochastic-Heun SDE solve.
@@ -477,16 +602,44 @@ impl SdeTape {
 /// `coef_s` differentiates `coef_s · R_S` with the drift-based stiffness
 /// surrogate `S_j = ‖f_2 − f_1‖ / (‖z_em − z‖ + EPS)` the forward stepper
 /// accumulates.  Pass `0.0` to disable either term.
+///
+/// Legacy shim over [`sde_backward_sys`] with a closure-lifted
+/// [`System`] and global [`RegCoefs`]; kept for one release.
 pub fn sde_backward(
     tape: &SdeTape,
     save_grads: &[Vec<f64>],
     coef_e: f64,
     coef_s: f64,
     grad_params: &mut [f64],
-    mut drift: impl FnMut(&[f64], f64, &mut [f64]),
-    mut diffusion: impl FnMut(&[f64], f64, &mut [f64]),
-    mut drift_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
-    mut diffusion_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+    drift: impl FnMut(&[f64], f64, &mut [f64]),
+    diffusion: impl FnMut(&[f64], f64, &mut [f64]),
+    drift_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+    diffusion_vjp: impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+) -> Vec<f64> {
+    let mut sys = SdeSystemVjp {
+        drift,
+        diffusion,
+        drift_vjp,
+        diffusion_vjp,
+    };
+    sde_backward_sys(
+        tape,
+        save_grads,
+        &RegCoefs::global(coef_e, coef_s),
+        grad_params,
+        &mut sys,
+    )
+}
+
+/// [`sde_backward`] over a [`System`] (drift/diffusion re-evaluation +
+/// both VJP hooks) with full [`RegCoefs`] — including the sampled-step
+/// local error term (`RegCoefs::local_e`, the LRNSDE objective).
+pub fn sde_backward_sys<S: System>(
+    tape: &SdeTape,
+    save_grads: &[Vec<f64>],
+    reg: &RegCoefs,
+    grad_params: &mut [f64],
+    sys: &mut S,
 ) -> Vec<f64> {
     let n = tape.n;
     let marks = tape.save_marks();
@@ -518,15 +671,19 @@ pub fn sde_backward(
         for j in (marks[si - 1]..marks[si]).rev() {
             let (t, h) = tape.steps[j];
             let (z, dw) = tape.record(j);
+            // Per-step error coefficient: the global coef_e plus, on the
+            // sampled step, the local (LRNSDE) coefficient.
+            let ce = reg.e_at(j);
+            let cs = reg.coef_s;
 
             // Recompute the Heun pair's internals at this step.
-            drift(z, t, &mut f1);
-            diffusion(z, t, &mut g1);
+            sys.drift(z, t, &mut f1);
+            sys.diffusion(z, t, &mut g1);
             for d in 0..n {
                 zem[d] = z[d] + h * f1[d] + g1[d] * dw[d];
             }
-            drift(&zem, t + h, &mut f2);
-            diffusion(&zem, t + h, &mut g2);
+            sys.drift(&zem, t + h, &mut f2);
+            sys.diffusion(&zem, t + h, &mut g2);
             // err = z_heun - z_em, with the forward stepper's expression
             // shape so the recomputed E matches the recorded one.
             for d in 0..n {
@@ -537,9 +694,9 @@ pub fn sde_backward(
 
             // a_tot = dL/dz_heun (data adjoint + R_E term), lam_em starts
             // from err's -dz_em dependence.
-            if coef_e != 0.0 {
+            if ce != 0.0 {
                 let e = rms(&err);
-                let scale = coef_e * h.abs() / (n as f64 * e);
+                let scale = ce * h.abs() / (n as f64 * e);
                 for d in 0..n {
                     let de = scale * err[d];
                     a_tot[d] = lambda[d] + de;
@@ -559,7 +716,7 @@ pub fn sde_backward(
             // f1 (−).  The z_em share joins lam_em *before* the f2/g2
             // pull-backs so it flows through the whole Euler-Maruyama
             // sub-step like any other z_em cotangent.
-            if coef_s != 0.0 {
+            if cs != 0.0 {
                 let mut num = 0.0;
                 let mut den = 0.0;
                 for d in 0..n {
@@ -571,8 +728,8 @@ pub fn sde_backward(
                 let nn = stiffness_norm(num, n);
                 let d0 = stiffness_norm(den, n);
                 let dd = d0 + EPS;
-                let c_num = coef_s / (n as f64 * nn * dd);
-                let c_den = -coef_s * nn / (n as f64 * d0 * dd * dd);
+                let c_num = cs / (n as f64 * nn * dd);
+                let c_den = -cs * nn / (n as f64 * d0 * dd * dd);
                 for d in 0..n {
                     u_df[d] = c_num * (f2[d] - f1[d]);
                     u_dz[d] = c_den * (zem[d] - z[d]);
@@ -589,11 +746,11 @@ pub fn sde_backward(
             for d in 0..n {
                 wbuf[d] = 0.5 * h * a_tot[d] + u_df[d];
             }
-            drift_vjp(&zem, t + h, &wbuf, &mut lam_em, grad_params);
+            sys.drift_vjp(&zem, t + h, &wbuf, &mut lam_em, grad_params);
             for d in 0..n {
                 wbuf[d] = 0.5 * dw[d] * a_tot[d];
             }
-            diffusion_vjp(&zem, t + h, &wbuf, &mut lam_em, grad_params);
+            sys.diffusion_vjp(&zem, t + h, &wbuf, &mut lam_em, grad_params);
 
             // z_em = z + h f1 + g1 ∘ dw: direct z terms plus f1/g1 (which
             // also receive the z_heun-side cotangents).  f1 carries the
@@ -605,11 +762,11 @@ pub fn sde_backward(
             for d in 0..n {
                 wbuf[d] = 0.5 * h * a_tot[d] + h * lam_em[d] - u_df[d];
             }
-            drift_vjp(z, t, &wbuf, &mut lam_z, grad_params);
+            sys.drift_vjp(z, t, &wbuf, &mut lam_z, grad_params);
             for d in 0..n {
                 wbuf[d] = 0.5 * dw[d] * a_tot[d] + dw[d] * lam_em[d];
             }
-            diffusion_vjp(z, t, &wbuf, &mut lam_z, grad_params);
+            sys.diffusion_vjp(z, t, &wbuf, &mut lam_z, grad_params);
             lambda.copy_from_slice(&lam_z);
         }
     }
@@ -625,9 +782,41 @@ pub fn sde_backward(
 pub fn sde_replay(
     tape: &SdeTape,
     z0: &[f64],
+    drift: impl FnMut(&[f64], f64, &mut [f64]),
+    diffusion: impl FnMut(&[f64], f64, &mut [f64]),
+) -> (Vec<Vec<f64>>, f64, f64) {
+    let mut r_e = 0.0;
+    let mut r_s = 0.0;
+    let out = sde_replay_visit(tape, z0, drift, diffusion, |_, e_term, s_term| {
+        r_e += e_term;
+        r_s += s_term;
+    });
+    (out, r_e, r_s)
+}
+
+/// Per-step error terms `E_j |h_j|` of the replayed frozen SDE program —
+/// the FD counterpart of the sampled-step (LRNSDE) objective (see
+/// [`ode_replay_errors`]).
+pub fn sde_replay_errors(
+    tape: &SdeTape,
+    z0: &[f64],
+    drift: impl FnMut(&[f64], f64, &mut [f64]),
+    diffusion: impl FnMut(&[f64], f64, &mut [f64]),
+) -> Vec<f64> {
+    let mut errs = vec![0.0; tape.len()];
+    sde_replay_visit(tape, z0, drift, diffusion, |j, e_term, _| errs[j] = e_term);
+    errs
+}
+
+/// Shared SDE replay walk: hands each step's `(j, E_j |h_j|, S_j)` to
+/// `on_step`, returning the save-mark states.
+fn sde_replay_visit(
+    tape: &SdeTape,
+    z0: &[f64],
     mut drift: impl FnMut(&[f64], f64, &mut [f64]),
     mut diffusion: impl FnMut(&[f64], f64, &mut [f64]),
-) -> (Vec<Vec<f64>>, f64, f64) {
+    mut on_step: impl FnMut(usize, f64, f64),
+) -> Vec<Vec<f64>> {
     let n = tape.n;
     let mut z = z0.to_vec();
     let mut f1 = vec![0.0; n];
@@ -635,8 +824,6 @@ pub fn sde_replay(
     let mut f2 = vec![0.0; n];
     let mut g2 = vec![0.0; n];
     let mut zem = vec![0.0; n];
-    let mut r_e = 0.0;
-    let mut r_s = 0.0;
     let marks = tape.save_marks();
     let mut out = Vec::with_capacity(marks.len());
     out.push(z.clone());
@@ -671,12 +858,15 @@ pub fn sde_replay(
                 err_sq += e * e;
                 z[d] = z_heun;
             }
-            r_e += (err_sq / n as f64 + RMS_FLOOR).sqrt() * h.abs();
-            r_s += stiffness_ratio(num, den, n);
+            on_step(
+                j,
+                (err_sq / n as f64 + RMS_FLOOR).sqrt() * h.abs(),
+                stiffness_ratio(num, den, n),
+            );
         }
         out.push(z.clone());
     }
-    (out, r_e, r_s)
+    out
 }
 
 #[cfg(test)]

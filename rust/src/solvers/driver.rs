@@ -1,0 +1,455 @@
+//! The unified white-box `solve()` API.
+//!
+//! One entry point for every integration in this suite: a [`System`]
+//! (ODE or SDE), an initial state, a [`Saveat`] spec, [`SolveOptions`]
+//! and — as *configuration rather than separate functions* — optional
+//! [`Taping`] for the discrete adjoint and any number of
+//! [`StepObserver`]s watching the solver's internal heuristics.
+//!
+//! ```
+//! use regnde::solvers::{solve, OdeSystem, Saveat, SolveOptions, Taping};
+//! use regnde::solvers::observer::{ErrorIntegral, StepObserver};
+//!
+//! let mut sys = OdeSystem(|z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0]);
+//! let mut r_e = ErrorIntegral::new();
+//! let (saves, out) = solve(
+//!     &mut sys,
+//!     &[1.0],
+//!     Saveat::Span { t0: 0.0, t1: 1.0 },
+//!     &SolveOptions::new().with_tolerance(1e-8),
+//!     None,            // RNG: only SDE systems need one
+//!     Taping::Off,
+//!     &mut [&mut r_e],
+//! );
+//! assert!(out.success);
+//! assert_eq!(saves.len(), 2);              // z0 and the endpoint
+//! assert_eq!(r_e.value(), out.stats.r_e);  // observers see what Stats sees
+//! ```
+//!
+//! Dispatch is driven by [`System::has_diffusion`]: drift-only systems
+//! run the adaptive RK driver ([`super::ode::drive`]), diffusive systems
+//! the stochastic Heun driver ([`super::sde::drive`]) and must pass an
+//! RNG.  The legacy entry points (`ode::solve`, `ode::solve_saveat`,
+//! `ode::solve_saveat_taped` and their `sde_*` mirrors) are thin shims
+//! over these drivers, kept for one release.
+//!
+//! ## Step budgets
+//!
+//! The seed's `max_steps` was silently *per save segment*, which made a
+//! T-point grid worth up to `(T-1) · max_steps` attempts while the taped
+//! training entry points quietly used a *total* budget instead.
+//! [`StepBudget`] makes that choice explicit:
+//!
+//! * [`StepBudget::PerSegment`] — each save interval gets the full
+//!   budget (the seed's data-generation semantics),
+//! * [`StepBudget::Total`] — one budget bounds the whole solve (the
+//!   budget-ladder training contract; exhaustion returns
+//!   `success = false` so the router can escalate).
+
+use super::adjoint::{OdeTape, SdeTape};
+use super::ode::{self, SolveOutcome, Stats};
+use super::observer::StepObserver;
+use super::sde;
+use super::system::System;
+use super::tableau::Tableau;
+use crate::util::rng::Rng;
+
+/// Step-attempt budget semantics of one solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepBudget {
+    /// Every save segment independently gets this many attempts (a
+    /// T-point grid may use up to `(T-1) ×` this total — see
+    /// [`super::ode::Stats::attempts`]).
+    PerSegment(u64),
+    /// One budget for the whole solve, summed over segments (the
+    /// budget-ladder training contract).
+    Total(u64),
+}
+
+impl StepBudget {
+    /// Attempts available for the next segment given `used` so far.
+    #[inline]
+    pub(super) fn for_segment(&self, used: u64) -> u64 {
+        match *self {
+            StepBudget::PerSegment(b) => b,
+            StepBudget::Total(b) => b.saturating_sub(used),
+        }
+    }
+}
+
+/// Options of one unified solve — tableau, tolerances, budget, initial
+/// step.  Built with chainable `with_*` methods:
+///
+/// ```
+/// use regnde::solvers::{SolveOptions, StepBudget, Tableau};
+/// let opts = SolveOptions::new()
+///     .with_tableau(Tableau::dopri5())
+///     .with_tolerance(1e-8)
+///     .with_budget(StepBudget::Total(4096));
+/// assert_eq!(opts.rtol, 1e-8);
+/// ```
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// RK tableau (ignored by the stochastic Heun stack, whose scheme is
+    /// fixed).
+    pub tableau: Tableau,
+    pub rtol: f64,
+    pub atol: f64,
+    pub budget: StepBudget,
+    /// Initial step size; `None` uses the stack's heuristic.
+    pub dt0: Option<f64>,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            tableau: Tableau::tsit5(),
+            rtol: 1e-6,
+            atol: 1e-6,
+            budget: StepBudget::PerSegment(100_000),
+            dt0: None,
+        }
+    }
+}
+
+impl SolveOptions {
+    pub fn new() -> SolveOptions {
+        SolveOptions::default()
+    }
+
+    pub fn with_tableau(mut self, tableau: Tableau) -> SolveOptions {
+        self.tableau = tableau;
+        self
+    }
+
+    /// Set `rtol = atol = tol` (the paper's convention).
+    pub fn with_tolerance(mut self, tol: f64) -> SolveOptions {
+        self.rtol = tol;
+        self.atol = tol;
+        self
+    }
+
+    pub fn with_tolerances(mut self, rtol: f64, atol: f64) -> SolveOptions {
+        self.rtol = rtol;
+        self.atol = atol;
+        self
+    }
+
+    pub fn with_budget(mut self, budget: StepBudget) -> SolveOptions {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_dt0(mut self, dt0: f64) -> SolveOptions {
+        self.dt0 = Some(dt0);
+        self
+    }
+}
+
+/// Where to save states along the solve.
+#[derive(Clone, Copy, Debug)]
+pub enum Saveat<'a> {
+    /// Integrate `[t0, t1]` as one segment, saving `z0` and the endpoint.
+    /// Non-finite endpoints or `t1 <= t0` fail cleanly
+    /// (`success = false`, state untouched, zero dynamics evaluations).
+    Span { t0: f64, t1: f64 },
+    /// Save at every time of a non-decreasing grid (`len >= 2`,
+    /// `grid[0]` is the start time).  Violations panic — a malformed
+    /// grid is a programming error, not an integration failure.
+    Grid(&'a [f64]),
+}
+
+/// Discrete-adjoint taping as solve configuration.  The variant must
+/// match the system's stack ([`System::has_diffusion`]); a mismatch
+/// panics.  The tape is always reset at the start of the solve — even
+/// one that fails cleanly on an invalid [`Saveat::Span`] — so a reused
+/// tape never carries a previous solve's records.
+pub enum Taping<'a> {
+    Off,
+    Ode(&'a mut OdeTape),
+    Sde(&'a mut SdeTape),
+}
+
+/// Resolve a [`Saveat`] into the save grid both stack drivers integrate
+/// over: `span_store` backs the two-point grid of a [`Saveat::Span`],
+/// and an invalid span yields the clean-failure return value (state
+/// untouched, zero dynamics evaluations).  Malformed grids panic — a
+/// caller bug, not an integration failure.
+pub(super) fn resolve_saveat<'a>(
+    saveat: Saveat<'a>,
+    span_store: &'a mut [f64; 2],
+    z0: &[f64],
+) -> Result<&'a [f64], (Vec<Vec<f64>>, SolveOutcome)> {
+    match saveat {
+        Saveat::Span { t0, t1 } => {
+            if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
+                return Err((
+                    vec![z0.to_vec()],
+                    SolveOutcome {
+                        z: z0.to_vec(),
+                        t: t0,
+                        stats: Stats::default(),
+                        success: false,
+                    },
+                ));
+            }
+            *span_store = [t0, t1];
+            Ok(&span_store[..])
+        }
+        Saveat::Grid(g) => {
+            assert!(g.len() >= 2, "need at least two save points");
+            assert!(
+                g.windows(2).all(|w| w[1] >= w[0]),
+                "save times must be non-decreasing"
+            );
+            Ok(g)
+        }
+    }
+}
+
+/// Solve a [`System`] — *the* unified entry point.
+///
+/// * drift-only systems run the adaptive RK driver (`rng` unused),
+/// * diffusive systems run the stochastic Heun driver and require
+///   `rng: Some(..)`.
+///
+/// Returns the saved states (per [`Saveat`]) and the final
+/// [`SolveOutcome`] whose [`super::ode::Stats`] carry the white-boxed
+/// accumulators.  Every accepted step is also offered to `observers`.
+pub fn solve<S: System>(
+    sys: &mut S,
+    z0: &[f64],
+    saveat: Saveat<'_>,
+    opts: &SolveOptions,
+    rng: Option<&mut Rng>,
+    taping: Taping<'_>,
+    observers: &mut [&mut dyn StepObserver],
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    if sys.has_diffusion() {
+        let rng = rng.expect("a diffusive System needs an RNG: pass Some(&mut rng)");
+        let tape = match taping {
+            Taping::Off => None,
+            Taping::Sde(tape) => Some(tape),
+            Taping::Ode(_) => panic!("ODE tape passed for a diffusive (SDE) system"),
+        };
+        sde::drive(sys, z0, saveat, rng, opts, tape, observers)
+    } else {
+        let tape = match taping {
+            Taping::Off => None,
+            Taping::Ode(tape) => Some(tape),
+            Taping::Sde(_) => panic!("SDE tape passed for a drift-only (ODE) system"),
+        };
+        ode::drive(sys, z0, saveat, opts, tape, observers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::observer::{ErrorIntegral, LocalReg, StiffnessSum};
+    use crate::solvers::ode::OdeOptions;
+    use crate::solvers::system::{OdeSystem, SdeSystem};
+
+    fn exp_decay(z: &[f64], _t: f64, dz: &mut [f64]) {
+        for i in 0..z.len() {
+            dz[i] = -z[i];
+        }
+    }
+
+    #[test]
+    fn unified_ode_solve_matches_legacy_bits() {
+        let legacy_opts = OdeOptions {
+            rtol: 1e-7,
+            atol: 1e-7,
+            ..Default::default()
+        };
+        let legacy = ode::solve(exp_decay, &[1.0, 2.0], 0.0, 1.0, &legacy_opts);
+        let mut sys = OdeSystem(exp_decay);
+        let (saves, out) = solve(
+            &mut sys,
+            &[1.0, 2.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            Taping::Off,
+            &mut [],
+        );
+        assert!(out.success);
+        assert_eq!(out.z, legacy.z, "unified and legacy paths must agree bit-for-bit");
+        assert_eq!(out.stats.nfe, legacy.stats.nfe);
+        assert_eq!(out.stats.r_e, legacy.stats.r_e);
+        assert_eq!(saves.len(), 2);
+        assert_eq!(saves[0], vec![1.0, 2.0]);
+        assert_eq!(saves[1], out.z);
+    }
+
+    #[test]
+    fn observers_see_what_stats_see() {
+        let mut sys = OdeSystem(exp_decay);
+        let mut re = ErrorIntegral::new();
+        let mut rs = StiffnessSum::new();
+        let (_, out) = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new().with_tolerance(1e-8),
+            None,
+            Taping::Off,
+            &mut [&mut re, &mut rs],
+        );
+        assert!(out.success && out.stats.naccept > 0);
+        assert_eq!(re.value(), out.stats.r_e, "R_E observer must be bit-identical");
+        assert_eq!(rs.value(), out.stats.r_s, "R_S observer must be bit-identical");
+    }
+
+    #[test]
+    fn unified_sde_dispatch_requires_and_uses_rng() {
+        let mut sys = SdeSystem {
+            drift: |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0],
+            diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.3,
+        };
+        let mut rng = Rng::new(11);
+        let ts = [0.0, 0.5, 1.0];
+        let (saves, out) = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Grid(&ts),
+            &SolveOptions::new().with_tolerance(1e-2),
+            Some(&mut rng),
+            Taping::Off,
+            &mut [],
+        );
+        assert!(out.success);
+        assert_eq!(saves.len(), 3);
+        // SDE accounting: 4 dynamics evals per attempt.
+        assert_eq!(out.stats.nfe, 4 * out.stats.attempts());
+    }
+
+    #[test]
+    #[should_panic(expected = "needs an RNG")]
+    fn sde_without_rng_panics() {
+        let mut sys = SdeSystem {
+            drift: |_z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = 0.0,
+            diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.0,
+        };
+        let _ = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new(),
+            None,
+            Taping::Off,
+            &mut [],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "SDE tape passed")]
+    fn mismatched_taping_panics() {
+        let mut sys = OdeSystem(exp_decay);
+        let mut tape = SdeTape::new();
+        let _ = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new(),
+            None,
+            Taping::Sde(&mut tape),
+            &mut [],
+        );
+    }
+
+    #[test]
+    fn total_budget_bounds_whole_grid() {
+        let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
+        let mut sys = OdeSystem(exp_decay);
+        let (saves, out) = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Grid(&ts),
+            &SolveOptions::new()
+                .with_tolerance(1e-9)
+                .with_budget(StepBudget::Total(3)),
+            None,
+            Taping::Off,
+            &mut [],
+        );
+        assert!(!out.success, "3 total attempts cannot cover 10 segments");
+        assert!(out.stats.attempts() <= 3);
+        assert_eq!(saves.len(), ts.len(), "outputs stay grid-shaped");
+    }
+
+    #[test]
+    fn span_failure_semantics_match_legacy() {
+        let mut sys = OdeSystem(exp_decay);
+        for t1 in [0.0, -1.0, f64::NAN] {
+            let (saves, out) = solve(
+                &mut sys,
+                &[1.0],
+                Saveat::Span { t0: 0.0, t1 },
+                &SolveOptions::new(),
+                None,
+                Taping::Off,
+                &mut [],
+            );
+            assert!(!out.success, "t1={t1} must fail");
+            assert_eq!(out.z, vec![1.0], "state untouched");
+            assert_eq!(out.stats.nfe, 0, "no dynamics evaluation");
+            assert_eq!(saves.len(), 1, "only z0 saved on failure");
+        }
+    }
+
+    #[test]
+    fn failed_span_still_resets_a_reused_tape() {
+        let mut sys = OdeSystem(exp_decay);
+        let mut tape = OdeTape::new();
+        // Populate the tape with a real solve.
+        let (_, out) = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new(),
+            None,
+            Taping::Ode(&mut tape),
+            &mut [],
+        );
+        assert!(out.success && !tape.is_empty());
+        // A cleanly-failed solve must not leave stale records behind —
+        // a caller reusing the tape would otherwise walk the previous
+        // solve's program.
+        let (_, out) = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: -1.0 },
+            &SolveOptions::new(),
+            None,
+            Taping::Ode(&mut tape),
+            &mut [],
+        );
+        assert!(!out.success);
+        assert!(tape.is_empty(), "Taping contract: reset even on clean failure");
+        assert!(tape.save_marks().is_empty());
+    }
+
+    #[test]
+    fn local_reg_observer_samples_a_recorded_step() {
+        let mut sys = OdeSystem(exp_decay);
+        let mut tape = OdeTape::new();
+        let mut lr = LocalReg::new(42);
+        let ts = [0.0, 0.5, 1.0];
+        let (_, out) = solve(
+            &mut sys,
+            &[1.0, 0.5],
+            Saveat::Grid(&ts),
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            Taping::Ode(&mut tape),
+            &mut [&mut lr],
+        );
+        assert!(out.success);
+        let j = lr.sampled_step().expect("accepted steps must be sampled");
+        assert!(j < tape.len(), "sampled index {j} must name a tape record");
+        assert!(lr.value() > 0.0);
+        assert!(lr.value() <= out.stats.r_e, "one term cannot exceed the sum");
+    }
+}

@@ -19,8 +19,10 @@
 //!     bounded map ([`map_bounded`]), so at most `workers` chunks are in
 //!     flight (10k trajectories never means 10k threads).
 
+use super::driver::Saveat;
 use super::ode::{self, OdeOptions, SolveOutcome, Stats};
-use super::sde::{sde_solve_saveat, SdeOptions};
+use super::sde::{self, SdeOptions};
+use super::system::{OdeSystem, SdeSystem};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{chunk_ranges, default_workers, map_bounded};
 
@@ -79,9 +81,17 @@ pub fn solve_ensemble<F>(
 where
     F: Fn(&[f64], f64, &mut [f64]) + Sync,
 {
+    // Convert once; every trajectory drives the unified loop directly
+    // (bit-identical to `ode::solve`, which is a shim over the same).
+    let uopts = opts.to_unified();
     let per_chunk = eopts.run_chunks(z0s.len(), |range| {
         range
-            .map(|i| ode::solve(f, &z0s[i], t0, t1, opts))
+            .map(|i| {
+                let mut sys = OdeSystem(|z: &[f64], t: f64, dz: &mut [f64]| f(z, t, dz));
+                let (_, out) =
+                    ode::drive(&mut sys, &z0s[i], Saveat::Span { t0, t1 }, &uopts, None, &mut []);
+                out
+            })
             .collect::<Vec<_>>()
     });
     per_chunk.into_iter().flatten().collect()
@@ -125,16 +135,21 @@ where
     F: Fn(&[f64], f64, &mut [f64]) + Sync,
     G: Fn(&[f64], f64, &mut [f64]) + Sync,
 {
+    let uopts = opts.to_unified();
     let per_chunk = eopts.run_chunks(n_traj, |range| {
         range
             .map(|i| {
                 let mut rng = trajectory_rng(seed, i);
-                let (states, stats, success) =
-                    sde_solve_saveat(drift, diffusion, z0, ts, &mut rng, opts);
+                let mut sys = SdeSystem {
+                    drift: |z: &[f64], t: f64, dz: &mut [f64]| drift(z, t, dz),
+                    diffusion: |z: &[f64], t: f64, dg: &mut [f64]| diffusion(z, t, dg),
+                };
+                let (states, out) =
+                    sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, &uopts, None, &mut []);
                 SdeTrajectory {
                     states,
-                    stats,
-                    success,
+                    stats: out.stats,
+                    success: out.success,
                 }
             })
             .collect::<Vec<_>>()
@@ -178,6 +193,7 @@ where
     assert!(n_traj > 0, "need at least one trajectory");
     let n = z0.len();
     let t = ts.len();
+    let uopts = opts.to_unified();
     let per_chunk = eopts.run_chunks(n_traj, |range| {
         let mut sum = vec![0.0f64; t * n];
         let mut sumsq = vec![0.0f64; t * n];
@@ -185,10 +201,14 @@ where
         let mut ok = true;
         for i in range {
             let mut rng = trajectory_rng(seed, i);
-            let (states, s, good) =
-                sde_solve_saveat(drift, diffusion, z0, ts, &mut rng, opts);
-            ok &= good;
-            stats.merge(&s);
+            let mut sys = SdeSystem {
+                drift: |z: &[f64], t: f64, dz: &mut [f64]| drift(z, t, dz),
+                diffusion: |z: &[f64], t: f64, dg: &mut [f64]| diffusion(z, t, dg),
+            };
+            let (states, out) =
+                sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, &uopts, None, &mut []);
+            ok &= out.success;
+            stats.merge(&out.stats);
             for (k, zk) in states.iter().enumerate() {
                 for d in 0..n {
                     sum[k * n + d] += zk[d];

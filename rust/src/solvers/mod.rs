@@ -1,39 +1,87 @@
-//! Native Rust adaptive differential-equation solver suite.
+//! Native Rust adaptive differential-equation solvers with a **white-box
+//! `solve()` API**: the internal heuristics the paper regularizes (local
+//! error `E_j`, stiffness `S_j`) are a first-class, pluggable observation
+//! surface, not private accumulators.
 //!
-//! A faithful mirror of the Layer-2 JAX solvers (python/compile/solver.py /
-//! sde_solver.py): the same Butcher tableaus (bit-for-bit constants), the
-//! same tolerance-scaled error ratio (paper Eq. 5), PI controller (Eq. 6),
-//! Shampine stiffness ratio (Eq. 8) and white-boxed statistics (R_E, R_S,
-//! NFE).  Three roles:
+//! ## The unified API (DESIGN.md §Solver API)
 //!
-//!  1. **Data generation** — ground-truth spiral ODE/SDE trajectories and
-//!     the latent generators behind the synthetic datasets (rust/src/data).
-//!  2. **Cross-validation** — rust/tests/cross_validate.rs solves the same
-//!     IVP through this suite and through the lowered `spiral_ode_solve`
-//!     artifact and asserts trajectory agreement, pinning down the semantic
-//!     equivalence of the two implementations.
-//!  3. **Reference analytics** — stiffness estimation and NFE accounting
-//!     used by unit/property tests of the coordinator's heuristics.
+//! One call shape serves every integration in the suite:
 //!
-//! Structure (DESIGN.md §Perf): [`controller`] holds the step-size
-//! heuristics shared by the ODE and SDE steppers; [`ode`] / [`sde`] are
-//! the allocation-free single-trajectory cores; [`ensemble`] scales them
-//! to many trajectories across a thread pool with deterministic
-//! per-trajectory RNG streams.
+//! ```text
+//! solve(&mut system, z0, saveat, &options, rng, taping, observers)
+//! ```
+//!
+//! * [`System`] (in [`system`]) — the dynamics: drift, optional diagonal
+//!   diffusion, optional VJP hooks.  [`OdeSystem`] / [`SdeSystem`] lift
+//!   plain closures.  [`System::has_diffusion`] routes the call to the
+//!   adaptive RK stack ([`ode::drive`]) or the stochastic Heun stack
+//!   ([`sde::drive`]) — one generic driver loop per stack.
+//! * [`SolveOptions`] (in [`driver`]) — tableau, tolerances, initial
+//!   step, and an **explicit** [`StepBudget`]: `PerSegment` (each save
+//!   interval gets the full attempt budget — the data-generation
+//!   semantics) or `Total` (one budget bounds the whole solve — the
+//!   budget-ladder training contract).
+//! * [`Saveat`] — a `Span { t0, t1 }` or a non-decreasing `Grid`.
+//! * [`Taping`] — discrete-adjoint recording as configuration: `Off`,
+//!   or an [`OdeTape`] / [`SdeTape`] matching the stack.
+//! * [`StepObserver`]s (in [`observer`]) — invoked once per *accepted*
+//!   step with a [`StepView`] `(index, t, h, E_j, S_j, state, error
+//!   vector)`.  The paper's regularizers are themselves observers:
+//!   [`ErrorIntegral`] (`R_E`), [`ErrorSquared`] (`Σ E_j²`),
+//!   [`StiffnessSum`] (`R_S`) — the driver always installs these three,
+//!   bit-identical to the seed's hard-wired `Stats` fields — and
+//!   [`LocalReg`], the sampled-step local regularizer behind the
+//!   `lrnode`/`lrnsde` methods (Pal et al. 2023).
+//!
+//! Gradients flow through [`adjoint`]: taped solves record the accepted
+//! steps, [`ode_backward_sys`] / [`sde_backward_sys`] walk them in
+//! reverse under [`RegCoefs`] (global `coef_e`/`coef_s` plus the
+//! optional sampled-step local term), and the replay functions re-run
+//! the frozen program for finite-difference checks.
+//!
+//! The closure-based legacy entry points ([`ode::solve`],
+//! [`solve_saveat`], [`solve_saveat_taped`], [`sde_solve_saveat`],
+//! [`sde_solve_saveat_taped`]) are thin deprecated shims over the two
+//! drivers, kept compiling for one release; `tests/solver_equivalence.rs`
+//! pins them bit-for-bit against a transcription of the seed stepper.
+//!
+//! ## Roles
+//!
+//!  1. **Training** — the native backend (`runtime::native`) trains all
+//!     five paper models through taped drives + discrete adjoints.
+//!  2. **Data generation** — ground-truth spiral ODE/SDE trajectories
+//!     and the synthetic-dataset generators (`rust/src/data`), scaled to
+//!     ensembles by [`ensemble`] across a thread pool with deterministic
+//!     per-trajectory RNG streams.
+//!  3. **Cross-validation / reference analytics** — the same Butcher
+//!     tableaus bit-for-bit as python/compile/tableaus.py ([`tableau`],
+//!     with [`Tableau::parse`] at CLI boundaries), shared controller
+//!     heuristics ([`controller`]), canonical problems ([`problems`]).
 
 pub mod adjoint;
 pub mod controller;
+pub mod driver;
 pub mod ensemble;
+pub mod observer;
 pub mod ode;
 pub mod problems;
 pub mod sde;
+pub mod system;
 pub mod tableau;
 
-pub use adjoint::{ode_backward, ode_replay, sde_backward, sde_replay, OdeTape, SdeTape};
+pub use adjoint::{
+    ode_backward, ode_backward_sys, ode_replay, ode_replay_errors, sde_backward,
+    sde_backward_sys, sde_replay, sde_replay_errors, OdeTape, RegCoefs, SdeTape,
+};
+pub use driver::{solve, Saveat, SolveOptions, StepBudget, Taping};
 pub use ensemble::{
     sde_ensemble_moments, sde_solve_ensemble, solve_ensemble, EnsembleOptions, SdeMoments,
     SdeTrajectory,
 };
-pub use ode::{solve, solve_saveat, solve_saveat_taped, OdeOptions, SolveOutcome, Stats};
+pub use observer::{
+    ErrorIntegral, ErrorSquared, LocalReg, StepObserver, StepView, StiffnessSum,
+};
+pub use ode::{solve_saveat, solve_saveat_taped, OdeOptions, SolveOutcome, Stats};
 pub use sde::{sde_solve_saveat, sde_solve_saveat_taped, SdeOptions};
+pub use system::{OdeSystem, OdeSystemVjp, SdeSystem, SdeSystemVjp, System};
 pub use tableau::Tableau;

@@ -1,0 +1,315 @@
+//! [`StepObserver`]: the pluggable white-box surface of the solvers.
+//!
+//! The paper's entire method rests on observing the solver's internal
+//! heuristics — the local error estimate `E_j` and the stiffness estimate
+//! `S_j` of every accepted step.  The seed hard-wired exactly two
+//! consumers of those quantities (the `R_E`/`R_S` accumulators inside
+//! `Stats`); this module makes "open the blackbox" a first-class API:
+//! the unified driver hands every accepted step to any number of
+//! observers as a [`StepView`], and the built-in regularizers are just
+//! observers like any other:
+//!
+//! * [`ErrorIntegral`] — `R_E = Σ E_j |h_j|` (paper Eq. 9),
+//! * [`ErrorSquared`]  — `Σ E_j²`, the unsquared-mean variant (§4.1.2),
+//! * [`StiffnessSum`]  — `R_S = Σ S_j` (paper Eq. 8/11),
+//! * [`LocalReg`]      — the *locally regularized* variant (Pal et al.
+//!   2023, PAPERS.md): uniformly samples **one** accepted step via
+//!   reservoir sampling and exposes that step's `E_ĵ |h_ĵ|` as the
+//!   regularizer — per-step work instead of a global sum.  The sampled
+//!   step index feeds [`super::adjoint::RegCoefs::local_e`] so the
+//!   discrete adjoint differentiates exactly the sampled term.
+//!
+//! Observers run inside the accept branch of the allocation-free step
+//! loop (DESIGN.md §Perf): `on_accept` must not allocate.  The built-in
+//! accumulators perform the same floating-point additions in the same
+//! order as the seed's `Stats` fields, so the reported `R_E`/`R_E²`/`R_S`
+//! stay bit-identical (pinned by `tests/solver_equivalence.rs`).
+
+use crate::util::rng::Rng;
+
+/// Everything the driver knows about one **accepted** step, handed to
+/// every [`StepObserver`].  Borrows point into the solver's scratch
+/// arena — copy out anything that must outlive the callback.
+#[derive(Debug)]
+pub struct StepView<'a> {
+    /// Ordinal of this accepted step within the whole solve (equals the
+    /// tape index when a tape is recording).
+    pub index: u64,
+    /// Step start time.
+    pub t: f64,
+    /// Step size actually taken (positive in forward-time solves).
+    pub h: f64,
+    /// Local error estimate `E_j` (Hairer RMS of the embedded error).
+    pub error: f64,
+    /// Stiffness estimate `S_j` (Shampine ratio for RK, drift surrogate
+    /// for stochastic Heun).
+    pub stiffness: f64,
+    /// The accepted state `z_{j+1}`.
+    pub z: &'a [f64],
+    /// The embedded error vector behind `error`.
+    pub err: &'a [f64],
+}
+
+/// A per-accepted-step observer plugged into the unified driver.
+pub trait StepObserver {
+    /// Called once per accepted step, in step order.
+    fn on_accept(&mut self, view: &StepView<'_>);
+
+    /// The scalar this observer has accumulated so far (its regularizer
+    /// value; `0.0` before any step).
+    fn value(&self) -> f64;
+
+    /// Clear accumulated state for a fresh solve.
+    fn reset(&mut self);
+}
+
+/// `R_E = Σ E_j |h_j|` (paper Eq. 9) — the ERNODE/ERNSDE regularizer.
+#[derive(Clone, Debug, Default)]
+pub struct ErrorIntegral {
+    acc: f64,
+}
+
+impl ErrorIntegral {
+    pub fn new() -> ErrorIntegral {
+        ErrorIntegral::default()
+    }
+}
+
+impl StepObserver for ErrorIntegral {
+    fn on_accept(&mut self, view: &StepView<'_>) {
+        self.acc += view.error * view.h.abs();
+    }
+
+    fn value(&self) -> f64 {
+        self.acc
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0.0;
+    }
+}
+
+/// `Σ E_j²` — the unsquared-mean `R_E` variant (paper §4.1.2 note).
+#[derive(Clone, Debug, Default)]
+pub struct ErrorSquared {
+    acc: f64,
+}
+
+impl ErrorSquared {
+    pub fn new() -> ErrorSquared {
+        ErrorSquared::default()
+    }
+}
+
+impl StepObserver for ErrorSquared {
+    fn on_accept(&mut self, view: &StepView<'_>) {
+        self.acc += view.error * view.error;
+    }
+
+    fn value(&self) -> f64 {
+        self.acc
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0.0;
+    }
+}
+
+/// `R_S = Σ S_j` (paper Eq. 8/11) — the SRNODE/SRNSDE regularizer.
+#[derive(Clone, Debug, Default)]
+pub struct StiffnessSum {
+    acc: f64,
+}
+
+impl StiffnessSum {
+    pub fn new() -> StiffnessSum {
+        StiffnessSum::default()
+    }
+}
+
+impl StepObserver for StiffnessSum {
+    fn on_accept(&mut self, view: &StepView<'_>) {
+        self.acc += view.stiffness;
+    }
+
+    fn value(&self) -> f64 {
+        self.acc
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0.0;
+    }
+}
+
+/// Sampled-step local regularizer (LRNODE/LRNSDE, Pal et al. 2023):
+/// reservoir-samples one accepted step ĵ uniformly over the solve and
+/// exposes `R_L = E_ĵ |h_ĵ|`.
+///
+/// One uniform draw per accepted step, no allocation.  After the solve,
+/// [`LocalReg::sampled_step`] names the step whose error term the value
+/// is — hand it to [`super::adjoint::RegCoefs::local_e`] so the backward
+/// walk differentiates exactly the sampled term (gradcheck:
+/// `tests/lrnode_gradcheck.rs`).  Sampling is deterministic in the seed,
+/// so a retried train step (budget-ladder escalation) resamples the same
+/// sequence.
+#[derive(Clone, Debug)]
+pub struct LocalReg {
+    rng: Rng,
+    enabled: bool,
+    seen: u64,
+    sampled_step: Option<usize>,
+    sampled_value: f64,
+}
+
+impl LocalReg {
+    pub fn new(seed: u64) -> LocalReg {
+        LocalReg {
+            rng: Rng::new(seed),
+            enabled: true,
+            seen: 0,
+            sampled_step: None,
+            sampled_value: 0.0,
+        }
+    }
+
+    /// An inert sampler: can be attached like any observer but ignores
+    /// every step (no RNG draw), never samples, and reports `0.0`.
+    /// Lets call sites keep one wiring path whether or not the local
+    /// regularizer is active.
+    pub fn disabled() -> LocalReg {
+        LocalReg {
+            enabled: false,
+            ..LocalReg::new(0)
+        }
+    }
+
+    /// The uniformly sampled accepted-step index (`None` before any
+    /// accepted step, and always `None` when [`LocalReg::disabled`]).
+    pub fn sampled_step(&self) -> Option<usize> {
+        self.sampled_step
+    }
+}
+
+impl StepObserver for LocalReg {
+    fn on_accept(&mut self, view: &StepView<'_>) {
+        if !self.enabled {
+            return;
+        }
+        self.seen += 1;
+        // Reservoir sampling: step number `seen` replaces the held sample
+        // with probability 1/seen, leaving every step equally likely.
+        if self.rng.uniform() * self.seen as f64 < 1.0 {
+            self.sampled_step = Some(view.index as usize);
+            self.sampled_value = view.error * view.h.abs();
+        }
+    }
+
+    fn value(&self) -> f64 {
+        self.sampled_value
+    }
+
+    fn reset(&mut self) {
+        self.seen = 0;
+        self.sampled_step = None;
+        self.sampled_value = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(index: u64, h: f64, error: f64, stiffness: f64) -> StepView<'static> {
+        StepView {
+            index,
+            t: 0.0,
+            h,
+            error,
+            stiffness,
+            z: &[],
+            err: &[],
+        }
+    }
+
+    #[test]
+    fn builtin_accumulators_match_definitions() {
+        let mut re = ErrorIntegral::new();
+        let mut re2 = ErrorSquared::new();
+        let mut rs = StiffnessSum::new();
+        let steps = [(0.1, 2e-3, 5.0), (-0.2, 3e-3, 7.0), (0.4, 1e-3, 1.0)];
+        for (i, &(h, e, s)) in steps.iter().enumerate() {
+            let v = view(i as u64, h, e, s);
+            re.on_accept(&v);
+            re2.on_accept(&v);
+            rs.on_accept(&v);
+        }
+        let want_re: f64 = steps.iter().map(|(h, e, _)| e * h.abs()).sum();
+        let want_re2: f64 = steps.iter().map(|(_, e, _)| e * e).sum();
+        let want_rs: f64 = steps.iter().map(|(_, _, s)| s).sum();
+        assert_eq!(re.value(), want_re);
+        assert_eq!(re2.value(), want_re2);
+        assert_eq!(rs.value(), want_rs);
+        re.reset();
+        assert_eq!(re.value(), 0.0);
+    }
+
+    #[test]
+    fn local_reg_always_picks_first_step_then_samples() {
+        let mut lr = LocalReg::new(7);
+        assert_eq!(lr.sampled_step(), None);
+        lr.on_accept(&view(0, 0.5, 1e-3, 0.0));
+        // The first step is held with probability 1 (u * 1 < 1 always).
+        assert_eq!(lr.sampled_step(), Some(0));
+        assert_eq!(lr.value(), 1e-3 * 0.5);
+        for i in 1..200 {
+            lr.on_accept(&view(i, 0.5, 1e-3, 0.0));
+        }
+        let j = lr.sampled_step().unwrap();
+        assert!(j < 200);
+    }
+
+    #[test]
+    fn local_reg_sampling_is_roughly_uniform() {
+        // Over many independent solves of 10 steps, every index must be
+        // hit a plausible number of times.
+        let n_runs = 5000;
+        let n_steps = 10u64;
+        let mut counts = [0usize; 10];
+        for run in 0..n_runs {
+            let mut lr = LocalReg::new(run as u64);
+            for i in 0..n_steps {
+                lr.on_accept(&view(i, 0.1, 1e-3, 0.0));
+            }
+            counts[lr.sampled_step().unwrap()] += 1;
+        }
+        let expect = n_runs as f64 / n_steps as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > 0.7 * expect && (c as f64) < 1.3 * expect,
+                "index {i} sampled {c} times, expected ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn disabled_local_reg_is_inert() {
+        let mut lr = LocalReg::disabled();
+        for i in 0..20 {
+            lr.on_accept(&view(i, 0.5, 1e-3, 0.0));
+        }
+        assert_eq!(lr.sampled_step(), None);
+        assert_eq!(lr.value(), 0.0);
+    }
+
+    #[test]
+    fn local_reg_is_deterministic_in_seed() {
+        let run = |seed: u64| {
+            let mut lr = LocalReg::new(seed);
+            for i in 0..50 {
+                lr.on_accept(&view(i, 0.1, (i as f64 + 1.0) * 1e-4, 0.0));
+            }
+            (lr.sampled_step(), lr.value())
+        };
+        assert_eq!(run(3), run(3));
+    }
+}

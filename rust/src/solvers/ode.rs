@@ -1,5 +1,5 @@
-//! Native adaptive explicit Runge-Kutta integrator with white-boxed
-//! heuristics — the Rust mirror of python/compile/solver.py.
+//! Native adaptive explicit Runge-Kutta stack: one generic driver loop
+//! ([`drive`]) behind the unified white-box API ([`super::driver`]).
 //!
 //! Semantics match the JAX solver: Hairer RMS error norm, paper Eq. 5
 //! accept test, PI controller (Eq. 6) with the same gains, FSAL stage
@@ -7,6 +7,17 @@
 //! DiffEqFlux-style NFE accounting.  f64 state (data generation wants the
 //! extra precision; the JAX side is f32 — cross-validation tolerances
 //! account for that).
+//!
+//! The driver integrates a [`System`] over a [`Saveat`] spec under a
+//! [`SolveOptions`] budget, with optional [`OdeTape`] recording and any
+//! number of [`StepObserver`]s.  The white-boxed accumulators in
+//! [`Stats`] are produced by the built-in observers
+//! ([`super::observer::ErrorIntegral`] / [`ErrorSquared`] /
+//! [`StiffnessSum`]) the driver always installs — bit-identical to the
+//! seed's hard-wired fields (pinned by `tests/solver_equivalence.rs`).
+//! The closure-based entry points [`solve`] / [`solve_saveat`] /
+//! [`solve_saveat_taped`] are thin deprecated shims over [`drive`], kept
+//! compiling for one release.
 //!
 //! ## Memory layout (DESIGN.md §Perf)
 //!
@@ -22,6 +33,9 @@
 
 use super::adjoint::OdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
+use super::driver::{Saveat, SolveOptions, StepBudget};
+use super::observer::{ErrorIntegral, ErrorSquared, StepObserver, StepView, StiffnessSum};
+use super::system::{OdeSystem, System};
 use super::tableau::Tableau;
 
 /// White-boxed solver statistics (paper Eq. 9/11 accumulators + counters).
@@ -47,15 +61,21 @@ impl Stats {
 
     /// Total step attempts across the whole solve (accepted + rejected).
     ///
-    /// Note that in [`solve_saveat`] the `max_steps` budget is *per save
-    /// segment*, so `attempts()` over a T-point grid may legitimately
-    /// exceed `max_steps` (up to `(T-1) * max_steps`); this accessor
-    /// surfaces the true total so callers can account for it.
+    /// Note that under [`StepBudget::PerSegment`] the budget applies to
+    /// each save segment independently, so `attempts()` over a T-point
+    /// grid may legitimately exceed the per-segment budget (up to
+    /// `(T-1) ×` it); this accessor surfaces the true total so callers
+    /// can account for it.
     pub fn attempts(&self) -> u64 {
         self.naccept + self.nreject
     }
 }
 
+/// Legacy options of the closure-based ODE entry points.
+///
+/// Kept for one release; new code should build a [`SolveOptions`]
+/// (where the per-segment/total budget choice is explicit) and call
+/// [`drive`] or the unified [`super::driver::solve`].
 #[derive(Clone, Debug)]
 pub struct OdeOptions {
     pub tableau: Tableau,
@@ -81,6 +101,20 @@ impl Default for OdeOptions {
     }
 }
 
+impl OdeOptions {
+    /// The equivalent [`SolveOptions`] (per-segment budget, the seed's
+    /// semantics for these legacy entry points).
+    pub fn to_unified(&self) -> SolveOptions {
+        SolveOptions {
+            tableau: self.tableau.clone(),
+            rtol: self.rtol,
+            atol: self.atol,
+            budget: StepBudget::PerSegment(self.max_steps),
+            dt0: self.dt0,
+        }
+    }
+}
+
 /// Final state + statistics of one integration.
 #[derive(Clone, Debug)]
 pub struct SolveOutcome {
@@ -90,14 +124,14 @@ pub struct SolveOutcome {
     pub success: bool,
 }
 
-/// Internal stepping state threaded across segments in saveat solves.
+/// Internal stepping state threaded across segments of one [`drive`].
 ///
 /// All scratch lives in `arena` (see the module docs for the layout); the
 /// accept/reject loop performs zero heap allocation.
-struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
-    f: F,
+struct Stepper<'a, 'o, S: System> {
+    sys: &'a mut S,
     tab: &'a Tableau,
-    opts: &'a OdeOptions,
+    opts: &'a SolveOptions,
     h: f64,
     q_prev: f64,
     stats: Stats,
@@ -108,27 +142,35 @@ struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
     /// `(t, h, z_start, stages)` before the state is committed.  `None`
     /// leaves the stepper bit-identical to the untaped solver.
     tape: Option<&'a mut OdeTape>,
+    /// Built-in observers behind [`Stats::r_e`] / `r_e2` / `r_s` — same
+    /// additions in the same order as the seed's hard-wired fields.
+    re: ErrorIntegral,
+    re2: ErrorSquared,
+    rs: StiffnessSum,
+    /// Caller-provided observers, offered every accepted step.
+    observers: &'a mut [&'o mut dyn StepObserver],
 }
 
-impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
+impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
     fn new(
-        mut f: F,
-        tab: &'a Tableau,
-        opts: &'a OdeOptions,
+        sys: &'a mut S,
+        opts: &'a SolveOptions,
         z0: &[f64],
         t0: f64,
         span: f64,
+        observers: &'a mut [&'o mut dyn StepObserver],
     ) -> Self {
         let n = z0.len();
+        let tab = &opts.tableau;
         let s = tab.stages();
         let mut arena = vec![0.0; (s + 5) * n];
         // FSAL seed: ks row 0 = f(z0, t0).
-        f(z0, t0, &mut arena[..n]);
+        sys.drift(z0, t0, &mut arena[..n]);
         let h0 = opts
             .dt0
             .unwrap_or_else(|| 0.01 * span / rms(&arena[..n]).max(1.0));
         Self {
-            f,
+            sys,
             tab,
             opts,
             h: h0,
@@ -139,6 +181,10 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
             },
             arena,
             tape: None,
+            re: ErrorIntegral::new(),
+            re2: ErrorSquared::new(),
+            rs: StiffnessSum::new(),
+            observers,
         }
     }
 
@@ -192,7 +238,7 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
                 }
                 let ti = *t + self.tab.c[i] * h;
                 let (_, ki) = ks.split_at_mut(i * n);
-                (self.f)(zi, ti, &mut ki[..n]);
+                self.sys.drift(zi, ti, &mut ki[..n]);
             }
             self.stats.nfe += self.tab.nfe_per_attempt() as u64;
 
@@ -231,9 +277,25 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
                 }
                 let stiff = stiffness_ratio(num, den, n);
 
-                self.stats.r_e += e_norm * h.abs();
-                self.stats.r_e2 += e_norm * e_norm;
-                self.stats.r_s += stiff;
+                // White-box surface: built-in accumulators first (the
+                // Stats contract), then every plugged-in observer.
+                {
+                    let view = StepView {
+                        index: self.stats.naccept,
+                        t: *t,
+                        h,
+                        error: e_norm,
+                        stiffness: stiff,
+                        z: znew,
+                        err,
+                    };
+                    self.re.on_accept(&view);
+                    self.re2.on_accept(&view);
+                    self.rs.on_accept(&view);
+                    for obs in self.observers.iter_mut() {
+                        obs.on_accept(&view);
+                    }
+                }
                 self.stats.naccept += 1;
                 if let Some(tape) = self.tape.as_deref_mut() {
                     tape.push_step(*t, h, z, ks);
@@ -251,12 +313,86 @@ impl<'a, F: FnMut(&[f64], f64, &mut [f64])> Stepper<'a, F> {
         }
         true
     }
+
+    /// Final statistics: counters plus the built-in observer values.
+    fn finish(&self) -> Stats {
+        let mut stats = self.stats;
+        stats.r_e = self.re.value();
+        stats.r_e2 = self.re2.value();
+        stats.r_s = self.rs.value();
+        stats
+    }
+}
+
+/// The single generic ODE driver loop: integrate `sys` over `saveat`
+/// under `opts`, optionally recording a discrete-adjoint `tape` and
+/// offering every accepted step to `observers`.
+///
+/// Returns the saved states (one per save point; [`Saveat::Span`] saves
+/// `z0` and the endpoint) and the final [`SolveOutcome`].  Budget
+/// semantics follow [`SolveOptions::budget`]; with [`StepBudget::Total`]
+/// an exhausted budget stops the solve early with `success = false` and
+/// the remaining save points repeating the last state, so output shapes
+/// stay grid-sized.  When a tape is passed it is reset and records every
+/// accepted step plus a save mark per grid point (including the start),
+/// ready for [`super::adjoint::ode_backward`].
+pub fn drive<S: System>(
+    sys: &mut S,
+    z0: &[f64],
+    saveat: Saveat<'_>,
+    opts: &SolveOptions,
+    mut tape: Option<&mut OdeTape>,
+    observers: &mut [&mut dyn StepObserver],
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    // Reset the tape up front: even a cleanly-failed solve must not
+    // leave a previous solve's records behind (the Taping contract).
+    if let Some(tape) = tape.as_deref_mut() {
+        tape.reset(z0.len(), opts.tableau.stages());
+    }
+    let mut span_store = [0.0; 2];
+    let ts: &[f64] = match super::driver::resolve_saveat(saveat, &mut span_store, z0) {
+        Ok(ts) => ts,
+        Err(fail) => return fail,
+    };
+
+    let mut stepper = Stepper::new(sys, opts, z0, ts[0], ts[ts.len() - 1] - ts[0], observers);
+    stepper.tape = tape;
+
+    let mut z = z0.to_vec();
+    let mut t = ts[0];
+    let mut out = Vec::with_capacity(ts.len());
+    out.push(z.clone());
+    if let Some(tp) = stepper.tape.as_deref_mut() {
+        tp.mark_save();
+    }
+    let mut ok = true;
+    for &t_hi in &ts[1..] {
+        let budget = opts.budget.for_segment(stepper.stats.attempts());
+        ok &= stepper.advance(&mut z, &mut t, t_hi, budget);
+        out.push(z.clone());
+        if let Some(tp) = stepper.tape.as_deref_mut() {
+            tp.mark_save();
+        }
+    }
+    let stats = stepper.finish();
+    (
+        out,
+        SolveOutcome {
+            z,
+            t,
+            stats,
+            success: ok,
+        },
+    )
 }
 
 /// Adaptive solve over [t0, t1].  `f(z, t, dz)` writes the derivative.
 ///
 /// `t1 <= t0` or non-finite endpoints yield `success = false` with the
 /// state unchanged.
+///
+/// Legacy shim over [`drive`] (deprecated in favor of the unified
+/// [`super::driver::solve`]; kept compiling for one release).
 pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
     f: F,
     z0: &[f64],
@@ -264,25 +400,16 @@ pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
     t1: f64,
     opts: &OdeOptions,
 ) -> SolveOutcome {
-    if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
-        return SolveOutcome {
-            z: z0.to_vec(),
-            t: t0,
-            stats: Stats::default(),
-            success: false,
-        };
-    }
-    let tab = &opts.tableau;
-    let mut stepper = Stepper::new(f, tab, opts, z0, t0, t1 - t0);
-    let mut z = z0.to_vec();
-    let mut t = t0;
-    let ok = stepper.advance(&mut z, &mut t, t1, opts.max_steps);
-    SolveOutcome {
-        z,
-        t,
-        stats: stepper.stats,
-        success: ok,
-    }
+    let mut sys = OdeSystem(f);
+    let (_, out) = drive(
+        &mut sys,
+        z0,
+        Saveat::Span { t0, t1 },
+        &opts.to_unified(),
+        None,
+        &mut [],
+    );
+    out
 }
 
 /// Adaptive solve saving the state at each time in `ts` (ts[0] = t0).
@@ -291,37 +418,16 @@ pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
 /// `ts` must be non-decreasing; `opts.max_steps` budgets each save
 /// *segment* independently (see [`OdeOptions::max_steps`] and
 /// [`Stats::attempts`]).
+///
+/// Legacy shim over [`drive`] (deprecated; kept for one release).
 pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
     f: F,
     z0: &[f64],
     ts: &[f64],
     opts: &OdeOptions,
 ) -> (Vec<Vec<f64>>, SolveOutcome) {
-    assert!(ts.len() >= 2, "need at least two save points");
-    assert!(
-        ts.windows(2).all(|w| w[1] >= w[0]),
-        "save times must be non-decreasing"
-    );
-    let tab = &opts.tableau;
-    let mut stepper = Stepper::new(f, tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
-    let mut z = z0.to_vec();
-    let mut t = ts[0];
-    let mut out = Vec::with_capacity(ts.len());
-    out.push(z.clone());
-    let mut ok = true;
-    for &t_hi in &ts[1..] {
-        ok &= stepper.advance(&mut z, &mut t, t_hi, opts.max_steps);
-        out.push(z.clone());
-    }
-    (
-        out,
-        SolveOutcome {
-            z,
-            t,
-            stats: stepper.stats,
-            success: ok,
-        },
-    )
+    let mut sys = OdeSystem(f);
+    drive(&mut sys, z0, Saveat::Grid(ts), &opts.to_unified(), None, &mut [])
 }
 
 /// [`solve_saveat`] with a discrete-adjoint tape and a **total**
@@ -333,6 +439,8 @@ pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
 /// [`super::adjoint::ode_backward`].  On budget exhaustion the solve
 /// stops early with `success = false`; the remaining save points repeat
 /// the last state so output shapes stay grid-sized.
+///
+/// Legacy shim over [`drive`] (deprecated; kept for one release).
 pub fn solve_saveat_taped<F: FnMut(&[f64], f64, &mut [f64])>(
     f: F,
     z0: &[f64],
@@ -341,36 +449,11 @@ pub fn solve_saveat_taped<F: FnMut(&[f64], f64, &mut [f64])>(
     total_budget: u64,
     tape: &mut OdeTape,
 ) -> (Vec<Vec<f64>>, SolveOutcome) {
-    assert!(ts.len() >= 2, "need at least two save points");
-    assert!(
-        ts.windows(2).all(|w| w[1] >= w[0]),
-        "save times must be non-decreasing"
-    );
-    tape.reset(z0.len(), opts.tableau.stages());
-    let tab = &opts.tableau;
-    let mut stepper = Stepper::new(f, tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
-    stepper.tape = Some(tape);
-    let mut z = z0.to_vec();
-    let mut t = ts[0];
-    let mut out = Vec::with_capacity(ts.len());
-    out.push(z.clone());
-    stepper.tape.as_deref_mut().unwrap().mark_save();
-    let mut ok = true;
-    for &t_hi in &ts[1..] {
-        let remaining = total_budget.saturating_sub(stepper.stats.attempts());
-        ok &= stepper.advance(&mut z, &mut t, t_hi, remaining);
-        out.push(z.clone());
-        stepper.tape.as_deref_mut().unwrap().mark_save();
-    }
-    (
-        out,
-        SolveOutcome {
-            z,
-            t,
-            stats: stepper.stats,
-            success: ok,
-        },
-    )
+    let mut sys = OdeSystem(f);
+    let uopts = opts
+        .to_unified()
+        .with_budget(StepBudget::Total(total_budget));
+    drive(&mut sys, z0, Saveat::Grid(ts), &uopts, Some(tape), &mut [])
 }
 
 #[cfg(test)]
@@ -592,5 +675,43 @@ mod tests {
         assert!(out.stats.attempts() > out.stats.naccept);
         // NFE bookkeeping: 1 init + nfe_per_attempt per attempt (FSAL Tsit5).
         assert_eq!(out.stats.nfe, 1 + 6 * out.stats.attempts());
+    }
+
+    #[test]
+    fn drive_step_views_carry_the_tape_index() {
+        // A custom observer sees exactly naccept views, indexed 0..naccept
+        // in order, with positive step sizes and the accepted-step error.
+        struct Probe {
+            seen: Vec<(u64, f64)>,
+        }
+        impl StepObserver for Probe {
+            fn on_accept(&mut self, v: &StepView<'_>) {
+                self.seen.push((v.index, v.error * v.h.abs()));
+            }
+            fn value(&self) -> f64 {
+                self.seen.iter().map(|&(_, e)| e).sum()
+            }
+            fn reset(&mut self) {
+                self.seen.clear();
+            }
+        }
+        let mut probe = Probe { seen: Vec::new() };
+        let mut sys = OdeSystem(exp_decay);
+        let ts = [0.0, 0.5, 1.0];
+        let (_, out) = drive(
+            &mut sys,
+            &[1.0, 2.0],
+            Saveat::Grid(&ts),
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            &mut [&mut probe],
+        );
+        assert!(out.success);
+        assert_eq!(probe.seen.len() as u64, out.stats.naccept);
+        for (i, &(idx, _)) in probe.seen.iter().enumerate() {
+            assert_eq!(idx, i as u64, "views arrive in accepted-step order");
+        }
+        // Summing the per-step R_E terms in order reproduces Stats::r_e.
+        assert_eq!(probe.value(), out.stats.r_e);
     }
 }

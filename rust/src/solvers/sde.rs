@@ -1,27 +1,42 @@
-//! Native adaptive SDE integrator (diagonal noise) — the Rust mirror of
-//! python/compile/sde_solver.py.
+//! Native adaptive SDE stack (diagonal noise): one generic driver loop
+//! ([`drive`]) behind the unified white-box API ([`super::driver`]) —
+//! the Rust mirror of python/compile/sde_solver.py.
 //!
 //! The same adaptive stochastic Heun 1.0/0.5 embedded pair with
 //! Brownian-bridge rejection handling (RSwM-lite, DESIGN.md §4).  Used to
 //! generate the ground-truth spiral DSDE ensembles (paper Eq. 15) that the
 //! Neural SDE experiments fit, and as the reference for SDE solver tests.
 //!
+//! The driver integrates a diffusive [`System`] over a [`Saveat`] spec
+//! under a [`SolveOptions`] budget, with optional [`SdeTape`] recording
+//! and pluggable [`StepObserver`]s; the white-boxed [`Stats`]
+//! accumulators come from the same built-in observers as the ODE stack.
+//! [`sde_solve_saveat`] / [`sde_solve_saveat_taped`] are thin deprecated
+//! shims over [`drive`], kept compiling for one release.
+//!
 //! Controller constants and the Hairer error norm are shared with the ODE
 //! solver via [`super::controller`] (the embedded pair is order 1, so the
 //! PI exponent is `1 - 0.75 * beta`).  All solver scratch — the four
 //! drift/diffusion evaluations, the Euler-Maruyama and Heun states, the
 //! embedded error, the Brownian increment and the RSwM pending increment —
-//! is preallocated in [`SdeStepper::new`]; the accept/reject loop performs
+//! is preallocated in `SdeStepper::new`; the accept/reject loop performs
 //! zero heap allocation (DESIGN.md §Perf).
 
 use super::adjoint::SdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
-use super::ode::Stats;
+use super::driver::{Saveat, SolveOptions, StepBudget};
+use super::observer::{ErrorIntegral, ErrorSquared, StepObserver, StepView, StiffnessSum};
+use super::ode::{SolveOutcome, Stats};
+use super::system::{SdeSystem, System};
 use crate::util::rng::Rng;
 
 /// Embedded-pair order of the stochastic Heun scheme (controller exponent).
 const ORDER: usize = 1;
 
+/// Legacy options of the closure-based SDE entry points.
+///
+/// Kept for one release; new code should build a [`SolveOptions`] and
+/// call [`drive`] or the unified [`super::driver::solve`].
 #[derive(Clone, Debug)]
 pub struct SdeOptions {
     pub rtol: f64,
@@ -43,18 +58,27 @@ impl Default for SdeOptions {
     }
 }
 
+impl SdeOptions {
+    /// The equivalent [`SolveOptions`] (per-segment budget; the tableau
+    /// field is ignored by the Heun stack).
+    pub fn to_unified(&self) -> SolveOptions {
+        SolveOptions {
+            rtol: self.rtol,
+            atol: self.atol,
+            budget: StepBudget::PerSegment(self.max_steps),
+            dt0: self.dt0,
+            ..SolveOptions::default()
+        }
+    }
+}
+
 /// Allocation-free stepping state for one SDE trajectory.
 ///
 /// Scratch layout mirrors the ODE stepper: one contiguous arena holding
 /// `[f1 | g1 | f2 | g2 | z_em | z_heun | err | dw | w_pend]` (9 × n).
-struct SdeStepper<'a, F, G>
-where
-    F: FnMut(&[f64], f64, &mut [f64]),
-    G: FnMut(&[f64], f64, &mut [f64]),
-{
-    drift: F,
-    diffusion: G,
-    opts: &'a SdeOptions,
+struct SdeStepper<'a, 'o, S: System> {
+    sys: &'a mut S,
+    opts: &'a SolveOptions,
     h: f64,
     q_prev: f64,
     /// RSwM-lite pending Brownian interval length.
@@ -64,17 +88,23 @@ where
     /// Optional discrete-adjoint tape: accepted steps record
     /// `(t, h, z_start, ΔW)`.  `None` keeps the stepper bit-identical.
     tape: Option<&'a mut SdeTape>,
+    /// Built-in observers behind [`Stats::r_e`] / `r_e2` / `r_s`.
+    re: ErrorIntegral,
+    re2: ErrorSquared,
+    rs: StiffnessSum,
+    observers: &'a mut [&'o mut dyn StepObserver],
 }
 
-impl<'a, F, G> SdeStepper<'a, F, G>
-where
-    F: FnMut(&[f64], f64, &mut [f64]),
-    G: FnMut(&[f64], f64, &mut [f64]),
-{
-    fn new(drift: F, diffusion: G, n: usize, span: f64, opts: &'a SdeOptions) -> Self {
+impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
+    fn new(
+        sys: &'a mut S,
+        n: usize,
+        span: f64,
+        opts: &'a SolveOptions,
+        observers: &'a mut [&'o mut dyn StepObserver],
+    ) -> Self {
         Self {
-            drift,
-            diffusion,
+            sys,
             opts,
             h: opts.dt0.unwrap_or(0.01 * span),
             q_prev: 1.0,
@@ -82,6 +112,10 @@ where
             stats: Stats::default(),
             arena: vec![0.0; 9 * n],
             tape: None,
+            re: ErrorIntegral::new(),
+            re2: ErrorSquared::new(),
+            rs: StiffnessSum::new(),
+            observers,
         }
     }
 
@@ -132,13 +166,13 @@ where
             }
 
             // Heun pair (python sde_solver._heun_attempt).
-            (self.drift)(z, *t, f1);
-            (self.diffusion)(z, *t, g1);
+            self.sys.drift(z, *t, f1);
+            self.sys.diffusion(z, *t, g1);
             for d in 0..n {
                 z_em[d] = z[d] + h_eff * f1[d] + g1[d] * dw[d];
             }
-            (self.drift)(z_em, *t + h_eff, f2);
-            (self.diffusion)(z_em, *t + h_eff, g2);
+            self.sys.drift(z_em, *t + h_eff, f2);
+            self.sys.diffusion(z_em, *t + h_eff, g2);
             for d in 0..n {
                 z_heun[d] =
                     z[d] + 0.5 * h_eff * (f1[d] + f2[d]) + 0.5 * dw[d] * (g1[d] + g2[d]);
@@ -161,12 +195,28 @@ where
                     num += df * df;
                     den += dz * dz;
                 }
-                // R_E = Σ E_j |h_j| (Eq. 9) — |h| unified with the ODE
-                // stepper and both adjoint paths (h_eff > 0 here, so the
-                // abs() is bit-free insurance, not a behavior change).
-                self.stats.r_e += e_norm * h_eff.abs();
-                self.stats.r_e2 += e_norm * e_norm;
-                self.stats.r_s += stiffness_ratio(num, den, n);
+                let stiff = stiffness_ratio(num, den, n);
+
+                // White-box surface: `R_E = Σ E_j |h_j|` (Eq. 9) on |h|,
+                // unified with the ODE stack (h_eff > 0 here, so the
+                // abs() in ErrorIntegral is bit-free insurance).
+                {
+                    let view = StepView {
+                        index: self.stats.naccept,
+                        t: *t,
+                        h: h_eff,
+                        error: e_norm,
+                        stiffness: stiff,
+                        z: z_heun,
+                        err,
+                    };
+                    self.re.on_accept(&view);
+                    self.re2.on_accept(&view);
+                    self.rs.on_accept(&view);
+                    for obs in self.observers.iter_mut() {
+                        obs.on_accept(&view);
+                    }
+                }
                 self.stats.naccept += 1;
                 if let Some(tape) = self.tape.as_deref_mut() {
                     tape.push_step(*t, h_eff, z, dw);
@@ -203,6 +253,80 @@ where
         }
         true
     }
+
+    /// Final statistics: counters plus the built-in observer values.
+    fn finish(&self) -> Stats {
+        let mut stats = self.stats;
+        stats.r_e = self.re.value();
+        stats.r_e2 = self.re2.value();
+        stats.r_s = self.rs.value();
+        stats
+    }
+}
+
+/// The single generic SDE driver loop: integrate a diffusive `sys` over
+/// `saveat` under `opts`, driven by `rng`, optionally recording a
+/// discrete-adjoint `tape` and offering every accepted step to
+/// `observers`.
+///
+/// Seed semantics: each save segment starts exactly at its grid time
+/// (not at the last accepted step's floating-point sum), so stage times
+/// and Brownian bridging are ulp-identical to the seed.  The tableau in
+/// `opts` is ignored — the stochastic Heun pair is fixed.
+pub fn drive<S: System>(
+    sys: &mut S,
+    z0: &[f64],
+    saveat: Saveat<'_>,
+    rng: &mut Rng,
+    opts: &SolveOptions,
+    mut tape: Option<&mut SdeTape>,
+    observers: &mut [&mut dyn StepObserver],
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    let n = z0.len();
+    // Reset the tape up front: even a cleanly-failed solve must not
+    // leave a previous solve's records behind (the Taping contract).
+    if let Some(tape) = tape.as_deref_mut() {
+        tape.reset(n);
+    }
+    let mut span_store = [0.0; 2];
+    let ts: &[f64] = match super::driver::resolve_saveat(saveat, &mut span_store, z0) {
+        Ok(ts) => ts,
+        Err(fail) => return fail,
+    };
+
+    let span = ts[ts.len() - 1] - ts[0];
+    let mut stepper = SdeStepper::new(sys, n, span, opts, observers);
+    stepper.tape = tape;
+
+    let mut z = z0.to_vec();
+    let mut success = true;
+    let mut t_final = ts[0];
+    let mut out = Vec::with_capacity(ts.len());
+    out.push(z.clone());
+    if let Some(tp) = stepper.tape.as_deref_mut() {
+        tp.mark_save();
+    }
+    for seg in 1..ts.len() {
+        // Seed semantics: each segment starts exactly at its grid time.
+        let mut t = ts[seg - 1];
+        let budget = opts.budget.for_segment(stepper.stats.attempts());
+        success &= stepper.advance(&mut z, &mut t, ts[seg], rng, budget);
+        t_final = t;
+        out.push(z.clone());
+        if let Some(tp) = stepper.tape.as_deref_mut() {
+            tp.mark_save();
+        }
+    }
+    let stats = stepper.finish();
+    (
+        out,
+        SolveOutcome {
+            z,
+            t: t_final,
+            stats,
+            success,
+        },
+    )
 }
 
 /// Adaptive diagonal-noise SDE solve saving at each time in `ts`.
@@ -210,6 +334,9 @@ where
 /// `drift(z, t, out)` / `diffusion(z, t, out)` write their values; noise is
 /// driven by `rng`.  Returns (saved states, final stats, success).  `ts`
 /// must be non-decreasing; `opts.max_steps` budgets each save segment.
+///
+/// Legacy shim over [`drive`] (deprecated in favor of the unified
+/// [`super::driver::solve`]; kept compiling for one release).
 pub fn sde_solve_saveat<F, G>(
     drift: F,
     diffusion: G,
@@ -222,27 +349,17 @@ where
     F: FnMut(&[f64], f64, &mut [f64]),
     G: FnMut(&[f64], f64, &mut [f64]),
 {
-    assert!(ts.len() >= 2);
-    assert!(
-        ts.windows(2).all(|w| w[1] >= w[0]),
-        "save times must be non-decreasing"
+    let mut sys = SdeSystem { drift, diffusion };
+    let (out, outcome) = drive(
+        &mut sys,
+        z0,
+        Saveat::Grid(ts),
+        rng,
+        &opts.to_unified(),
+        None,
+        &mut [],
     );
-    let n = z0.len();
-    let span = ts[ts.len() - 1] - ts[0];
-    let mut stepper = SdeStepper::new(drift, diffusion, n, span, opts);
-    let mut z = z0.to_vec();
-    let mut success = true;
-    let mut out = Vec::with_capacity(ts.len());
-    out.push(z.clone());
-    for seg in 1..ts.len() {
-        // Seed semantics: each segment starts exactly at its grid time
-        // (not at the last accepted step's floating-point sum), so stage
-        // times and Brownian bridging are ulp-identical to the seed.
-        let mut t = ts[seg - 1];
-        success &= stepper.advance(&mut z, &mut t, ts[seg], rng, opts.max_steps);
-        out.push(z.clone());
-    }
-    (out, stepper.stats, success)
+    (out, outcome.stats, outcome.success)
 }
 
 /// [`sde_solve_saveat`] with a discrete-adjoint tape and a **total**
@@ -252,6 +369,8 @@ where
 /// [`super::adjoint::sde_backward`]; on budget exhaustion the solve stops
 /// early with success `false` and the remaining save points repeat the
 /// last state.
+///
+/// Legacy shim over [`drive`] (deprecated; kept for one release).
 #[allow(clippy::too_many_arguments)]
 pub fn sde_solve_saveat_taped<F, G>(
     drift: F,
@@ -267,29 +386,20 @@ where
     F: FnMut(&[f64], f64, &mut [f64]),
     G: FnMut(&[f64], f64, &mut [f64]),
 {
-    assert!(ts.len() >= 2);
-    assert!(
-        ts.windows(2).all(|w| w[1] >= w[0]),
-        "save times must be non-decreasing"
+    let mut sys = SdeSystem { drift, diffusion };
+    let uopts = opts
+        .to_unified()
+        .with_budget(StepBudget::Total(total_budget));
+    let (out, outcome) = drive(
+        &mut sys,
+        z0,
+        Saveat::Grid(ts),
+        rng,
+        &uopts,
+        Some(tape),
+        &mut [],
     );
-    let n = z0.len();
-    tape.reset(n);
-    let span = ts[ts.len() - 1] - ts[0];
-    let mut stepper = SdeStepper::new(drift, diffusion, n, span, opts);
-    stepper.tape = Some(tape);
-    let mut z = z0.to_vec();
-    let mut success = true;
-    let mut out = Vec::with_capacity(ts.len());
-    out.push(z.clone());
-    stepper.tape.as_deref_mut().unwrap().mark_save();
-    for seg in 1..ts.len() {
-        let mut t = ts[seg - 1];
-        let remaining = total_budget.saturating_sub(stepper.stats.attempts());
-        success &= stepper.advance(&mut z, &mut t, ts[seg], rng, remaining);
-        out.push(z.clone());
-        stepper.tape.as_deref_mut().unwrap().mark_save();
-    }
-    (out, stepper.stats, success)
+    (out, outcome.stats, outcome.success)
 }
 
 #[cfg(test)]

@@ -1,0 +1,209 @@
+//! The [`System`] trait: one dynamics interface for both solver stacks.
+//!
+//! Before this trait existed every solver entry point took its dynamics as
+//! ad-hoc closures — `f` for ODEs, `(drift, diffusion)` for SDEs, and four
+//! separate closures for the SDE adjoint — so each new capability (taping,
+//! observation, a new regularizer) multiplied the entry-point surface.  A
+//! `System` packages everything the unified driver ([`super::driver`]) and
+//! the discrete adjoint ([`super::adjoint`]) can ask of a model:
+//!
+//! * [`System::drift`] — the deterministic dynamics `dz/dt` (ODE) or the
+//!   SDE drift term.  Always required.
+//! * [`System::diffusion`] — the diagonal diffusion term.  Optional:
+//!   [`System::has_diffusion`] reports whether it exists, and the driver
+//!   routes drift-only systems through the adaptive RK stack and
+//!   diffusive ones through the stochastic Heun stack.
+//! * [`System::drift_vjp`] / [`System::diffusion_vjp`] — accumulating
+//!   vector-Jacobian products (`gz += wᵀ ∂f/∂z`, `gp += wᵀ ∂f/∂θ`),
+//!   needed only by the discrete-adjoint backward walks.  Systems that
+//!   are never differentiated (data generation, benches) simply do not
+//!   override them.
+//!
+//! Closure-based call sites do not need hand-written impls: the
+//! [`OdeSystem`] / [`SdeSystem`] adapters lift plain dynamics closures,
+//! and [`OdeSystemVjp`] / [`SdeSystemVjp`] additionally carry the VJP
+//! closures for the legacy adjoint entry points.
+
+/// A (possibly stochastic) dynamical system `dz = f(z, t) dt
+/// [+ g(z, t) ∘ dW]` with optional VJP hooks for the discrete adjoint.
+///
+/// All methods take `&mut self` so implementations can own scratch
+/// buffers (the allocation-free contract of DESIGN.md §Perf: the driver
+/// never allocates per step, and neither should the system).
+pub trait System {
+    /// Write the deterministic dynamics (ODE right-hand side / SDE drift)
+    /// at `(z, t)` into `dz`.
+    fn drift(&mut self, z: &[f64], t: f64, dz: &mut [f64]);
+
+    /// Whether this system has a diffusion term.  `false` (the default)
+    /// routes the unified driver through the adaptive RK stack; `true`
+    /// through the stochastic Heun stack (which then requires an RNG).
+    fn has_diffusion(&self) -> bool {
+        false
+    }
+
+    /// Write the diagonal diffusion at `(z, t)` into `dg`.  Only invoked
+    /// when [`System::has_diffusion`] returns `true`.
+    fn diffusion(&mut self, _z: &[f64], _t: f64, _dg: &mut [f64]) {
+        panic!("System::diffusion called on a drift-only system");
+    }
+
+    /// Accumulating VJP of the drift: add `wᵀ ∂f/∂z` into `gz` and
+    /// `wᵀ ∂f/∂θ` into `gp` (both `+=`, never overwrite).  Required only
+    /// by the adjoint walks ([`super::adjoint`]).
+    fn drift_vjp(&mut self, _z: &[f64], _t: f64, _w: &[f64], _gz: &mut [f64], _gp: &mut [f64]) {
+        panic!("System::drift_vjp not provided — this system is not differentiable");
+    }
+
+    /// Accumulating VJP of the diffusion (same contract as
+    /// [`System::drift_vjp`]).  Required only by the SDE adjoint.
+    fn diffusion_vjp(
+        &mut self,
+        _z: &[f64],
+        _t: f64,
+        _w: &[f64],
+        _gz: &mut [f64],
+        _gp: &mut [f64],
+    ) {
+        panic!("System::diffusion_vjp not provided — this system is not differentiable");
+    }
+}
+
+/// Lift a plain ODE closure `f(z, t, dz)` into a [`System`].
+pub struct OdeSystem<F>(pub F);
+
+impl<F: FnMut(&[f64], f64, &mut [f64])> System for OdeSystem<F> {
+    fn drift(&mut self, z: &[f64], t: f64, dz: &mut [f64]) {
+        (self.0)(z, t, dz)
+    }
+}
+
+/// Lift an `(drift, diffusion)` closure pair into a diffusive [`System`].
+pub struct SdeSystem<F, G> {
+    pub drift: F,
+    pub diffusion: G,
+}
+
+impl<F, G> System for SdeSystem<F, G>
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    G: FnMut(&[f64], f64, &mut [f64]),
+{
+    fn drift(&mut self, z: &[f64], t: f64, dz: &mut [f64]) {
+        (self.drift)(z, t, dz)
+    }
+
+    fn has_diffusion(&self) -> bool {
+        true
+    }
+
+    fn diffusion(&mut self, z: &[f64], t: f64, dg: &mut [f64]) {
+        (self.diffusion)(z, t, dg)
+    }
+}
+
+/// ODE closure pair `(drift, vjp)` — the differentiable adapter behind
+/// the legacy [`super::adjoint::ode_backward`] entry point.
+pub struct OdeSystemVjp<F, V> {
+    pub drift: F,
+    pub vjp: V,
+}
+
+impl<F, V> System for OdeSystemVjp<F, V>
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    V: FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+{
+    fn drift(&mut self, z: &[f64], t: f64, dz: &mut [f64]) {
+        (self.drift)(z, t, dz)
+    }
+
+    fn drift_vjp(&mut self, z: &[f64], t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        (self.vjp)(z, t, w, gz, gp)
+    }
+}
+
+/// SDE closure quadruple — the differentiable adapter behind the legacy
+/// [`super::adjoint::sde_backward`] entry point.
+pub struct SdeSystemVjp<F, G, FV, GV> {
+    pub drift: F,
+    pub diffusion: G,
+    pub drift_vjp: FV,
+    pub diffusion_vjp: GV,
+}
+
+impl<F, G, FV, GV> System for SdeSystemVjp<F, G, FV, GV>
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    G: FnMut(&[f64], f64, &mut [f64]),
+    FV: FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+    GV: FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]),
+{
+    fn drift(&mut self, z: &[f64], t: f64, dz: &mut [f64]) {
+        (self.drift)(z, t, dz)
+    }
+
+    fn has_diffusion(&self) -> bool {
+        true
+    }
+
+    fn diffusion(&mut self, z: &[f64], t: f64, dg: &mut [f64]) {
+        (self.diffusion)(z, t, dg)
+    }
+
+    fn drift_vjp(&mut self, z: &[f64], t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        (self.drift_vjp)(z, t, w, gz, gp)
+    }
+
+    fn diffusion_vjp(&mut self, z: &[f64], t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        (self.diffusion_vjp)(z, t, w, gz, gp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ode_adapter_is_drift_only() {
+        let mut sys = OdeSystem(|z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0]);
+        assert!(!sys.has_diffusion());
+        let mut dz = [0.0];
+        sys.drift(&[2.0], 0.0, &mut dz);
+        assert_eq!(dz[0], -2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "drift-only")]
+    fn ode_adapter_panics_on_diffusion() {
+        let mut sys = OdeSystem(|_z: &[f64], _t: f64, _dz: &mut [f64]| {});
+        sys.diffusion(&[1.0], 0.0, &mut [0.0]);
+    }
+
+    #[test]
+    fn sde_adapter_reports_diffusion() {
+        let mut sys = SdeSystem {
+            drift: |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0],
+            diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.5,
+        };
+        assert!(sys.has_diffusion());
+        let mut dg = [0.0];
+        sys.diffusion(&[1.0], 0.0, &mut dg);
+        assert_eq!(dg[0], 0.5);
+    }
+
+    #[test]
+    fn vjp_adapters_accumulate() {
+        let mut sys = OdeSystemVjp {
+            drift: |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = 3.0 * z[0],
+            vjp: |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]| {
+                gz[0] += w[0] * 3.0;
+                gp[0] += w[0] * z[0];
+            },
+        };
+        let (mut gz, mut gp) = ([1.0], [2.0]);
+        sys.drift_vjp(&[5.0], 0.0, &[1.0], &mut gz, &mut gp);
+        assert_eq!(gz[0], 4.0, "must accumulate, not overwrite");
+        assert_eq!(gp[0], 7.0);
+    }
+}

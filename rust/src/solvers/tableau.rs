@@ -149,6 +149,14 @@ impl Tableau {
     }
 
     /// Bogacki-Shampine 3(2).
+    ///
+    /// BS3 has no two distinct stages sharing an abscissa (`c = [0, 1/2,
+    /// 3/4, 1]`), so there is no valid Shampine pair: `stiff_pair` is the
+    /// degenerate `(3, 3)`, which makes the stiffness estimate read ~0
+    /// ("not stiff") through every path — forward accumulation, adjoint
+    /// and replay — instead of the seed's bogus `(0, 3)` pair that
+    /// compared stages evaluated at *different* times (`c` 0 vs 1) and
+    /// reported a time-difference artifact as stiffness.
     pub fn bs3() -> Tableau {
         let b = vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0];
         let bhat = [7.0 / 24.0, 0.25, 1.0 / 3.0, 0.125];
@@ -165,17 +173,46 @@ impl Tableau {
             c: vec![0.0, 0.5, 0.75, 1.0],
             order: 3,
             fsal: true,
-            stiff_pair: (0, 3),
+            stiff_pair: (3, 3),
         }
     }
 
+    /// The registry: `(name, constructor)` pairs — the **single source**
+    /// behind [`Tableau::names`], [`Tableau::by_name`] and
+    /// [`Tableau::parse`], so a newly registered scheme is automatically
+    /// listed in the CLI usage/error text and covered by the registry
+    /// invariants test.
+    const REGISTRY: &'static [(&'static str, fn() -> Tableau)] = &[
+        ("tsit5", Tableau::tsit5),
+        ("dopri5", Tableau::dopri5),
+        ("bs3", Tableau::bs3),
+    ];
+
+    /// Every registered tableau name, in lookup order.
+    pub fn names() -> Vec<&'static str> {
+        Self::REGISTRY.iter().map(|&(n, _)| n).collect()
+    }
+
+    /// Case-insensitive lookup (`"tsit5"`, `"DoPri5"`, ...).  Returns
+    /// `None` for unknown names; prefer [`Tableau::parse`] at user-facing
+    /// boundaries, where the error lists the registry.
     pub fn by_name(name: &str) -> Option<Tableau> {
-        match name {
-            "tsit5" => Some(Self::tsit5()),
-            "dopri5" => Some(Self::dopri5()),
-            "bs3" => Some(Self::bs3()),
-            _ => None,
-        }
+        let lower = name.to_ascii_lowercase();
+        Self::REGISTRY
+            .iter()
+            .find(|&&(n, _)| n == lower)
+            .map(|&(_, make)| make())
+    }
+
+    /// [`Tableau::by_name`] with a helpful error naming the known
+    /// tableaus — the CLI-boundary lookup (`regnde run --solver <name>`).
+    pub fn parse(name: &str) -> Result<Tableau, String> {
+        Self::by_name(name).ok_or_else(|| {
+            format!(
+                "unknown solver tableau {name:?}; known tableaus (case-insensitive): {}",
+                Self::names().join(", ")
+            )
+        })
     }
 }
 
@@ -183,64 +220,116 @@ impl Tableau {
 mod tests {
     use super::*;
 
-    /// Order conditions: sum(b) == 1 and sum(b*c) == 1/2 for every tableau.
-    #[test]
-    fn order_conditions() {
-        for tab in [Tableau::tsit5(), Tableau::dopri5(), Tableau::bs3()] {
-            let sb: f64 = tab.b.iter().sum();
-            assert!((sb - 1.0).abs() < 1e-12, "{}: sum b = {sb}", tab.name);
-            let sbc: f64 = tab.b.iter().zip(&tab.c).map(|(b, c)| b * c).sum();
-            assert!((sbc - 0.5).abs() < 1e-12, "{}: sum b*c = {sbc}", tab.name);
-        }
+    /// Every tableau in the registry, by name (so a registered name that
+    /// `Tableau::by_name` cannot resolve fails loudly).
+    fn registry() -> Vec<Tableau> {
+        Tableau::names()
+            .into_iter()
+            .map(|n| Tableau::by_name(n).expect("registered name must resolve"))
+            .collect()
     }
 
-    /// Row sums of `a` equal `c` (consistency condition).
+    /// Structural + order invariants, asserted for **every** registered
+    /// tableau (the property the registry promises, not a per-scheme
+    /// spot-check):
+    ///
+    /// 1. shapes: `a`/`b`/`btilde`/`c` all sized to `stages()`, `a`
+    ///    strictly lower-triangular (`a[i].len() == i`, explicit scheme);
+    /// 2. consistency: `Σ_j a[i][j] = c[i]` per row;
+    /// 3. order conditions: `Σ b = 1`, `Σ b·c = 1/2`;
+    /// 4. embedded difference: `Σ btilde = 0`;
+    /// 5. a genuinely equal-`c` `stiff_pair` (the Shampine ratio compares
+    ///    stage values at the *same* abscissa; a degenerate `(i, i)` pair
+    ///    declares "no Shampine pair" and reads as not-stiff);
+    /// 6. FSAL coherence: when `fsal`, the last row of `a` equals
+    ///    `b[..s-1]` and `b[s-1] = 0`, with `c[s-1] = 1`.
     #[test]
-    fn row_sums_match_c() {
-        for tab in [Tableau::tsit5(), Tableau::dopri5(), Tableau::bs3()] {
+    fn registry_invariants() {
+        let tabs = registry();
+        assert_eq!(tabs.len(), Tableau::names().len());
+        for tab in &tabs {
+            let s = tab.stages();
+            let name = tab.name;
+            // 1. shapes
+            assert_eq!(tab.a.len(), s, "{name}: a rows");
+            assert_eq!(tab.btilde.len(), s, "{name}: btilde len");
+            assert_eq!(tab.c.len(), s, "{name}: c len");
+            for (i, row) in tab.a.iter().enumerate() {
+                assert_eq!(row.len(), i, "{name}: a[{i}] must be strictly lower-triangular");
+            }
+            assert!((1..=s).contains(&tab.order), "{name}: order sane");
+            // 2. row-sum consistency
             for (i, row) in tab.a.iter().enumerate() {
                 let rs: f64 = row.iter().sum();
                 assert!(
                     (rs - tab.c[i]).abs() < 1e-9,
-                    "{} row {i}: {rs} vs c {}",
-                    tab.name,
+                    "{name} row {i}: Σa = {rs} vs c = {}",
                     tab.c[i]
+                );
+            }
+            // 3. order conditions
+            let sb: f64 = tab.b.iter().sum();
+            assert!((sb - 1.0).abs() < 1e-12, "{name}: Σb = {sb}");
+            let sbc: f64 = tab.b.iter().zip(&tab.c).map(|(b, c)| b * c).sum();
+            assert!((sbc - 0.5).abs() < 1e-12, "{name}: Σb·c = {sbc}");
+            // 4. embedded difference
+            let sbt: f64 = tab.btilde.iter().sum();
+            assert!(sbt.abs() < 1e-12, "{name}: Σbtilde = {sbt}");
+            // 5. equal-c stiffness pair
+            let (x, y) = tab.stiff_pair;
+            assert!(x < s && y < s, "{name}: stiff_pair in range");
+            assert_eq!(
+                tab.c[x], tab.c[y],
+                "{name}: stiff_pair ({x}, {y}) must share an abscissa"
+            );
+            // 6. FSAL coherence
+            if tab.fsal {
+                let last = &tab.a[s - 1];
+                for (j, a) in last.iter().enumerate() {
+                    assert!(
+                        (a - tab.b[j]).abs() < 1e-12,
+                        "{name}: FSAL row col {j}: {a} vs b {}",
+                        tab.b[j]
+                    );
+                }
+                assert_eq!(tab.b[s - 1], 0.0, "{name}: FSAL weight of the reused stage");
+                assert!(
+                    (tab.c[s - 1] - 1.0).abs() < 1e-12,
+                    "{name}: FSAL stage sits at the step end"
                 );
             }
         }
     }
 
-    /// The embedded difference sums to ~0 (both solutions are consistent).
+    /// The proper (non-degenerate) Shampine pairs really are two distinct
+    /// stages, and the only degenerate pair is BS3's documented one.
     #[test]
-    fn btilde_sums_to_zero() {
-        for tab in [Tableau::tsit5(), Tableau::dopri5(), Tableau::bs3()] {
-            let s: f64 = tab.btilde.iter().sum();
-            assert!(s.abs() < 1e-12, "{}: sum btilde = {s}", tab.name);
-        }
-    }
-
-    /// FSAL: the final stage row of `a` equals `b[..s-1]`.
-    #[test]
-    fn fsal_rows() {
-        for tab in [Tableau::tsit5(), Tableau::dopri5()] {
-            let last = &tab.a[tab.stages() - 1];
-            for (j, a) in last.iter().enumerate() {
-                assert!((a - tab.b[j]).abs() < 1e-12, "{} col {j}", tab.name);
+    fn stiff_pairs_distinct_where_a_pair_exists() {
+        for tab in registry() {
+            let (x, y) = tab.stiff_pair;
+            if tab.name == "bs3" {
+                assert_eq!((x, y), (3, 3), "bs3 has no equal-c pair (degenerate)");
+            } else {
+                assert_ne!(x, y, "{}: pair must be two distinct stages", tab.name);
             }
         }
     }
 
     #[test]
-    fn stiff_pair_has_equal_c() {
-        for tab in [Tableau::tsit5(), Tableau::dopri5()] {
-            let (x, y) = tab.stiff_pair;
-            assert_eq!(tab.c[x], tab.c[y], "{}", tab.name);
-        }
+    fn lookup_by_name_is_case_insensitive() {
+        assert!(Tableau::by_name("tsit5").is_some());
+        assert_eq!(Tableau::by_name("DoPri5").unwrap().name, "dopri5");
+        assert_eq!(Tableau::by_name("BS3").unwrap().name, "bs3");
+        assert!(Tableau::by_name("rk4").is_none());
     }
 
     #[test]
-    fn lookup_by_name() {
-        assert!(Tableau::by_name("tsit5").is_some());
-        assert!(Tableau::by_name("rk4").is_none());
+    fn parse_error_lists_known_tableaus() {
+        assert_eq!(Tableau::parse("TSIT5").unwrap().name, "tsit5");
+        let err = Tableau::parse("rk4").unwrap_err();
+        for name in Tableau::names() {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+        assert!(err.contains("rk4"), "error must echo the bad name: {err}");
     }
 }

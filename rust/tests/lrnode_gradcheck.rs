@@ -1,0 +1,275 @@
+//! Gradient checks for the sampled-step **local** regularization
+//! objective (LRNODE / LRNSDE, Pal et al. 2023) on both solver stacks.
+//!
+//! The objective is one accepted step's error term `E_ĵ |h_ĵ|` of the
+//! frozen discrete program (step sequence + Brownian increments fixed),
+//! with ĵ reservoir-sampled by the `LocalReg` observer during the
+//! forward solve.  The discrete adjoint applies the error cotangent at
+//! exactly that step (`RegCoefs::local_e`); `ode_replay_errors` /
+//! `sde_replay_errors` expose the per-step terms, so central finite
+//! differences of entry ĵ are the ground truth the adjoint must match
+//! (< 1e-4 relative, same bar as `tests/adjoint_gradcheck.rs`).
+
+use regnde::solvers::adjoint::{
+    ode_backward_sys, ode_replay, ode_replay_errors, sde_backward_sys, sde_replay,
+    sde_replay_errors, OdeTape, RegCoefs, SdeTape,
+};
+use regnde::solvers::observer::{LocalReg, StepObserver};
+use regnde::solvers::ode::{self, OdeOptions};
+use regnde::solvers::sde::{sde_solve_saveat_taped, SdeOptions};
+use regnde::solvers::{OdeSystem, OdeSystemVjp, Saveat, SdeSystemVjp, StepBudget};
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// Nonlinear scalar dynamics dz/dt = sin(θ z): the error terms depend on
+/// θ nontrivially at every step.
+fn f(th: f64) -> impl Fn(&[f64], f64, &mut [f64]) {
+    move |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = (th * z[0]).sin()
+}
+
+fn f_vjp(th: f64) -> impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]) {
+    move |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gth: &mut [f64]| {
+        let c = (th * z[0]).cos();
+        gz[0] += w[0] * th * c;
+        gth[0] += w[0] * z[0] * c;
+    }
+}
+
+#[test]
+fn ode_sampled_step_gradient_matches_fd() {
+    let theta = 1.3f64;
+    let ts = [0.0, 0.5, 1.0];
+    let opts = OdeOptions {
+        rtol: 1e-6,
+        atol: 1e-6,
+        ..Default::default()
+    };
+    let mut tape = OdeTape::new();
+    let (_, out) =
+        ode::solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+    assert!(out.success && tape.len() >= 3, "need a few steps to sample from");
+
+    // Per-step terms sum (in order) to the replayed R_E, bit-for-bit.
+    let errs = ode_replay_errors(&tape, &opts.tableau, &[0.8], f(theta));
+    assert_eq!(errs.len(), tape.len());
+    let (_, r_e, _) = ode_replay(&tape, &opts.tableau, &[0.8], f(theta));
+    assert_eq!(errs.iter().sum::<f64>(), r_e, "per-step terms must sum to R_E");
+
+    let save_grads = vec![vec![0.0]; ts.len()];
+    let eps = 1e-4;
+    for j in [0, tape.len() / 2, tape.len() - 1] {
+        let mut gp = vec![0.0; 1];
+        let mut sys = OdeSystemVjp {
+            drift: f(theta),
+            vjp: f_vjp(theta),
+        };
+        ode_backward_sys(
+            &tape,
+            &opts.tableau,
+            &save_grads,
+            &RegCoefs::global(0.0, 0.0).with_local(j, 1.0),
+            &mut gp,
+            &mut sys,
+        );
+        let term = |th: f64| ode_replay_errors(&tape, &opts.tableau, &[0.8], f(th))[j];
+        let fd = (term(theta + eps) - term(theta - eps)) / (2.0 * eps);
+        assert!(
+            fd.abs() > 1e-12,
+            "step {j}: term must depend on θ for the check to bite (fd={fd})"
+        );
+        assert!(
+            rel_err(gp[0], fd) < 1e-4,
+            "step {j}: adjoint {} vs fd {fd}",
+            gp[0]
+        );
+    }
+}
+
+#[test]
+fn ode_full_objective_with_local_term_matches_fd() {
+    // data loss + 0.3·R_E + 0.2·R_S + 0.7·E_ĵ|h_ĵ| in one backward walk.
+    let theta = 1.1f64;
+    let ts = [0.0, 1.0];
+    let opts = OdeOptions {
+        rtol: 1e-6,
+        atol: 1e-6,
+        ..Default::default()
+    };
+    let mut tape = OdeTape::new();
+    let (_, out) =
+        ode::solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+    assert!(out.success && tape.len() >= 2);
+    let j = tape.len() / 2;
+    let (coef_e, coef_s, coef_l) = (0.3, 0.2, 0.7);
+
+    let mut gp = vec![0.0; 1];
+    let mut sys = OdeSystemVjp {
+        drift: f(theta),
+        vjp: f_vjp(theta),
+    };
+    // L = z(t1) + regularizers: cotangent 1 at the last save point.
+    let save_grads = vec![vec![0.0], vec![1.0]];
+    ode_backward_sys(
+        &tape,
+        &opts.tableau,
+        &save_grads,
+        &RegCoefs::global(coef_e, coef_s).with_local(j, coef_l),
+        &mut gp,
+        &mut sys,
+    );
+
+    let objective = |th: f64| {
+        let (saves, r_e, r_s) = ode_replay(&tape, &opts.tableau, &[0.8], f(th));
+        let local = ode_replay_errors(&tape, &opts.tableau, &[0.8], f(th))[j];
+        saves[1][0] + coef_e * r_e + coef_s * r_s + coef_l * local
+    };
+    let eps = 1e-5;
+    let fd = (objective(theta + eps) - objective(theta - eps)) / (2.0 * eps);
+    assert!(
+        rel_err(gp[0], fd) < 1e-4,
+        "full-objective adjoint {} vs fd {fd}",
+        gp[0]
+    );
+}
+
+#[test]
+fn ode_local_reg_observer_samples_the_term_the_adjoint_differentiates() {
+    // End-to-end coupling: the value LocalReg reports during the forward
+    // drive is the sampled step's replayed error term (FSAL-stage
+    // rounding only), so forward loss and backward cotangent agree.
+    let theta = 0.9f64;
+    let ts = [0.0, 0.5, 1.0];
+    let mut sys = OdeSystem(f(theta));
+    let mut tape = OdeTape::new();
+    let mut local = LocalReg::new(17);
+    let sopts = regnde::solvers::SolveOptions::new()
+        .with_tolerance(1e-6)
+        .with_budget(StepBudget::Total(100_000));
+    let (_, out) = ode::drive(
+        &mut sys,
+        &[0.8],
+        Saveat::Grid(&ts),
+        &sopts,
+        Some(&mut tape),
+        &mut [&mut local],
+    );
+    assert!(out.success);
+    let j = local.sampled_step().expect("steps were accepted");
+    assert!(j < tape.len());
+    let errs = ode_replay_errors(&tape, &sopts.tableau, &[0.8], f(theta));
+    assert!(
+        (local.value() - errs[j]).abs() <= 1e-9 * errs[j].max(1e-12),
+        "forward-sampled value {} vs replayed term {}",
+        local.value(),
+        errs[j]
+    );
+}
+
+#[test]
+fn sde_sampled_step_gradient_matches_fd() {
+    let theta = 0.8f64;
+    let sigma = 0.3f64;
+    let drift = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = (th * z[0]).sin();
+    let diffusion = move |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = sigma;
+
+    let mut rng = regnde::util::rng::Rng::new(5);
+    let mut tape = SdeTape::new();
+    let opts = SdeOptions {
+        rtol: 1e-2,
+        atol: 1e-2,
+        ..Default::default()
+    };
+    let (_, stats, ok) = sde_solve_saveat_taped(
+        drift(theta),
+        diffusion,
+        &[1.0],
+        &[0.0, 0.5, 1.0],
+        &mut rng,
+        &opts,
+        u64::MAX,
+        &mut tape,
+    );
+    assert!(ok && tape.len() >= 3, "need a few accepted steps");
+
+    // Per-step terms sum (in order) to the replayed R_E, bit-for-bit.
+    let errs = sde_replay_errors(&tape, &[1.0], drift(theta), diffusion);
+    assert_eq!(errs.len(), tape.len());
+    let (_, r_e, _) = sde_replay(&tape, &[1.0], drift(theta), diffusion);
+    assert_eq!(errs.iter().sum::<f64>(), r_e);
+    // And the replay reproduces the forward accumulator.
+    assert!((r_e - stats.r_e).abs() <= 1e-12 * (1.0 + stats.r_e));
+
+    let save_grads = vec![vec![0.0]; 3];
+    let eps = 1e-5;
+    for j in [0, tape.len() / 2, tape.len() - 1] {
+        let mut gp = vec![0.0; 1];
+        let mut sys = SdeSystemVjp {
+            drift: drift(theta),
+            diffusion,
+            drift_vjp: |z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gth: &mut [f64]| {
+                let c = (theta * z[0]).cos();
+                gz[0] += w[0] * theta * c;
+                gth[0] += w[0] * z[0] * c;
+            },
+            diffusion_vjp: |_z: &[f64], _t: f64, _w: &[f64], _gz: &mut [f64], _gp: &mut [f64]| {},
+        };
+        sde_backward_sys(
+            &tape,
+            &save_grads,
+            &RegCoefs::global(0.0, 0.0).with_local(j, 1.0),
+            &mut gp,
+            &mut sys,
+        );
+        let term = |th: f64| sde_replay_errors(&tape, &[1.0], drift(th), diffusion)[j];
+        let fd = (term(theta + eps) - term(theta - eps)) / (2.0 * eps);
+        assert!(
+            fd.abs() > 1e-12,
+            "step {j}: term must depend on θ (fd={fd})"
+        );
+        assert!(
+            rel_err(gp[0], fd) < 1e-4,
+            "step {j}: SDE adjoint {} vs fd {fd}",
+            gp[0]
+        );
+    }
+}
+
+#[test]
+fn local_coefficient_stacks_on_top_of_global_r_e() {
+    // RegCoefs::e_at semantics: local + global on the sampled step must
+    // equal the sum of the two separate walks.
+    let theta = 1.2f64;
+    let ts = [0.0, 1.0];
+    let opts = OdeOptions {
+        rtol: 1e-6,
+        atol: 1e-6,
+        ..Default::default()
+    };
+    let mut tape = OdeTape::new();
+    let (_, out) =
+        ode::solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+    assert!(out.success && tape.len() >= 2);
+    let j = 1;
+    let save_grads = vec![vec![0.0], vec![0.0]];
+
+    let walk = |reg: RegCoefs| {
+        let mut gp = vec![0.0; 1];
+        let mut sys = OdeSystemVjp {
+            drift: f(theta),
+            vjp: f_vjp(theta),
+        };
+        ode_backward_sys(&tape, &opts.tableau, &save_grads, &reg, &mut gp, &mut sys);
+        gp[0]
+    };
+    let combined = walk(RegCoefs::global(0.4, 0.0).with_local(j, 0.6));
+    let global_only = walk(RegCoefs::global(0.4, 0.0));
+    let local_only = walk(RegCoefs::global(0.0, 0.0).with_local(j, 0.6));
+    // Linearity holds exactly in math; allow FP reordering noise only.
+    let scale = combined.abs().max(global_only.abs() + local_only.abs());
+    assert!(
+        (combined - (global_only + local_only)).abs() <= 1e-9 * scale.max(1e-12),
+        "combined {combined} vs split {global_only} + {local_only}"
+    );
+}

@@ -203,6 +203,93 @@ fn same_seed_reproduces() {
 }
 
 #[test]
+fn spiral_node_trains_under_dopri5() {
+    // `--solver dopri5` end-to-end: the previously-unreachable tableau
+    // threads through the backend's solve options into a real training
+    // run (taped forward, discrete adjoint, Adam).
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 5,
+        seed: 0,
+        verbose: false,
+    };
+    let be = NativeBackend::new().with_solver("dopri5").unwrap();
+    let r = experiments::run_by_name(
+        &be,
+        "spiral-node",
+        Method::parse("srnode+ernode").unwrap(),
+        opts,
+    )
+    .unwrap();
+    assert!(r.epochs[0].loss.is_finite());
+    assert!(r.epochs[0].r_e > 0.0, "white-box stats flow under dopri5");
+    assert!(r.epochs[0].r_s > 0.0, "dopri5 has a proper Shampine pair");
+    assert!(r.predict_nfe > 0.0);
+
+    // A different tableau is a genuinely different solve: NFE and the
+    // realized fit diverge from the tsit5 default on the same seed.
+    let tsit = experiments::run_by_name(
+        &backend(),
+        "spiral-node",
+        Method::parse("srnode+ernode").unwrap(),
+        opts,
+    )
+    .unwrap();
+    assert!(
+        (r.epochs[0].nfe, r.final_train_loss) != (tsit.epochs[0].nfe, tsit.final_train_loss),
+        "dopri5 run must differ from tsit5"
+    );
+
+    // Case-insensitive at the CLI boundary; unknown names list the
+    // registry instead of panicking.
+    assert!(NativeBackend::new().with_solver("TSIT5").is_ok());
+    let err = format!("{:#}", NativeBackend::new().with_solver("rk4").unwrap_err());
+    assert!(err.contains("tsit5") && err.contains("dopri5") && err.contains("bs3"));
+}
+
+#[test]
+fn lrnode_method_has_live_sampled_regularizer() {
+    // The lrnode method grid entry: R_L accumulates, rides the epoch
+    // records, and its gradient steers the parameters (same seed,
+    // toggling lr off changes the trajectory).
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 4,
+        seed: 0,
+        verbose: false,
+    };
+    let be = backend();
+    let lr = experiments::run_by_name(&be, "spiral-node", Method::parse("lrnode").unwrap(), opts)
+        .unwrap();
+    assert_eq!(lr.method, "LRNODE");
+    assert!(lr.epochs[0].r_l > 0.0, "sampled R_L must accumulate");
+    let vanilla =
+        experiments::run_by_name(&be, "spiral-node", Method::VANILLA, opts).unwrap();
+    assert_eq!(vanilla.epochs[0].r_l, 0.0, "R_L reads 0 when lr is off");
+    assert_ne!(
+        lr.final_test_loss, vanilla.final_test_loss,
+        "sampled-step gradient must alter the fit"
+    );
+
+    // SDE mirror: lrnsde on the spiral NSDE moment objective.
+    let lrnsde = experiments::run_by_name(
+        &be,
+        "spiral-nsde",
+        Method::parse("lrnsde").unwrap(),
+        TrainOpts {
+            epochs: 1,
+            iters_per_epoch: 2,
+            seed: 0,
+            verbose: false,
+        },
+    )
+    .unwrap();
+    assert_eq!(lrnsde.method, "LRNSDE");
+    assert!(lrnsde.epochs[0].r_l > 0.0, "ensemble R_L must accumulate");
+    assert!(lrnsde.epochs[0].loss.is_finite());
+}
+
+#[test]
 fn router_escalates_on_tiny_budgets_and_recovers() {
     // Force the first rungs to be unusable: the router must escalate to
     // the top rung, retry the batches there, and finish the run.
