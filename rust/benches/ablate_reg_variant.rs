@@ -3,7 +3,7 @@
 //! on the same solves, plus budget-ladder router telemetry under each.
 use regnde::bench::{run_grid, BenchConfig};
 use regnde::coordinator::Method;
-use regnde::solvers::{problems, solve_ensemble, EnsembleOptions, OdeOptions};
+use regnde::solvers::{problems, solve_ensemble, EnsembleOptions, SolveOptions};
 use regnde::util::tablefmt::Table;
 
 fn main() {
@@ -21,11 +21,7 @@ fn main() {
         &["rtol=atol", "sum E|h| (Eq.9)", "sum E^2 (variant)"],
     );
     for tol in [1e-3, 1e-5, 1e-7] {
-        let opts = OdeOptions {
-            rtol: tol,
-            atol: tol,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(tol);
         let outs = solve_ensemble(&problems::spiral_ode, &z0s, 0.0, 1.5, &opts, &eopts);
         let n = outs.len() as f64;
         t.row(vec![

@@ -6,7 +6,7 @@
 //! Each tolerance is measured over an ensemble of initial conditions on
 //! the cubic-spiral ring via `solvers::ensemble`, so the reported
 //! accumulators are averages rather than a single trajectory's.
-use regnde::solvers::{problems, solve_ensemble, EnsembleOptions, OdeOptions};
+use regnde::solvers::{problems, solve_ensemble, EnsembleOptions, SolveOptions};
 use regnde::util::tablefmt::Table;
 
 fn main() {
@@ -24,11 +24,7 @@ fn main() {
         &["rtol=atol", "NFE", "accepted", "rejected", "R_E", "R_S/step"],
     );
     for tol in [1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7, 1e-8] {
-        let opts = OdeOptions {
-            rtol: tol,
-            atol: tol,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(tol);
         let outs = solve_ensemble(&problems::spiral_ode, &z0s, 0.0, 1.5, &opts, &eopts);
         assert!(outs.iter().all(|o| o.success));
         let n = outs.len() as f64;

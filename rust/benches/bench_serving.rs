@@ -1,0 +1,275 @@
+//! Serving benchmark — the end-to-end proof that regularized training
+//! pays off at serve time (ISSUE 5 acceptance).
+//!
+//! Trains a spiral-NODE **vanilla** and an **ernode** model from the
+//! same seed, exports both as serving checkpoints, hosts them behind the
+//! micro-batching TCP server on loopback, and fires concurrent predict
+//! requests at each.  Asserts:
+//!
+//!  * a served single request is **bit-identical** to the in-process
+//!    `Backend::predict` on the same input,
+//!  * every request under load succeeds with NFE reported per response,
+//!  * requests coalesce (mean batch > 1 under concurrency),
+//!  * the ernode model's mean NFE/request is no worse than vanilla's —
+//!    fewer solver steps per batch is exactly what turns into more
+//!    requests per core.
+//!
+//! Emits `BENCH_serving.json` at the repo root (schema in DESIGN.md
+//! §Serving): per-model throughput (req/s), p50/p99 latency, mean batch
+//! size and mean NFE/request.
+//!
+//! Scale knobs (env):
+//!   REGNDE_BENCH_EPOCHS       training epochs per model   (default 3)
+//!   REGNDE_BENCH_ITERS        optimizer steps per epoch   (default 25)
+//!   REGNDE_BENCH_REQUESTS     predict requests per model  (default 256)
+//!   REGNDE_BENCH_CONCURRENCY  client connections          (default 16)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::Method;
+use regnde::runtime::{Backend, NativeBackend, TrainData};
+use regnde::serve::{
+    BatchPolicy, Batcher, Checkpoint, Client, Registry, Request, Response, Server, ServerOpts,
+};
+use regnde::util::cli::env_usize;
+use regnde::util::json::{obj, Json};
+use regnde::util::tablefmt::Table;
+use regnde::util::threadpool::ThreadPool;
+
+struct LoadResult {
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    mean_nfe: f64,
+}
+
+/// Train one method, export its checkpoint, return the trained params.
+fn train_and_export(
+    be: &NativeBackend,
+    method: &str,
+    registry: &Registry,
+    id: &str,
+    epochs: usize,
+    iters: usize,
+) -> Vec<f32> {
+    let opts = TrainOpts {
+        epochs,
+        iters_per_epoch: iters,
+        seed: 0,
+        verbose: false,
+    };
+    let method = Method::parse(method).expect("method");
+    let run = experiments::run_by_name(be, "spiral-node", method, opts).expect("train run");
+    let state = be
+        .export_state("spiral_node", &run.final_params)
+        .expect("export");
+    let ts = experiments::serving_grid("spiral-node");
+    let ckpt = Checkpoint::new(state, "spiral-node", run.method.clone(), ts);
+    registry.insert(id, ckpt).expect("register");
+    run.final_params
+}
+
+/// Fire `requests` predictions across `concurrency` persistent client
+/// connections and collect latency/NFE/batch statistics.
+fn drive_load(addr: &str, model: &str, requests: usize, concurrency: usize) -> LoadResult {
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let per_lane: Vec<Vec<(u64, u64, usize)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|lane| {
+                let next = &next;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= requests {
+                            return out;
+                        }
+                        let u0 = vec![2.0 - 0.001 * (i % 32) as f32, 0.001 * lane as f32];
+                        let req = Request::Predict {
+                            model: model.to_string(),
+                            u0,
+                            budget: None,
+                        };
+                        let t = Instant::now();
+                        let resp = client.request(&req).expect("request");
+                        let micros = t.elapsed().as_micros() as u64;
+                        match resp {
+                            Response::Predict { nfe, batch, .. } => {
+                                assert!(nfe > 0, "NFE must be reported per response");
+                                out.push((micros, nfe, batch));
+                            }
+                            other => panic!("request {i} failed: {other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut lat: Vec<u64> = Vec::with_capacity(requests);
+    let mut nfe_sum = 0.0;
+    let mut batch_sum = 0.0;
+    for (micros, nfe, batch) in per_lane.into_iter().flatten() {
+        lat.push(micros);
+        nfe_sum += nfe as f64;
+        batch_sum += batch as f64;
+    }
+    assert_eq!(lat.len(), requests, "every request must be answered");
+    lat.sort_unstable();
+    let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] as f64 / 1000.0;
+    LoadResult {
+        throughput_rps: requests as f64 / wall,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        mean_batch: batch_sum / requests as f64,
+        mean_nfe: nfe_sum / requests as f64,
+    }
+}
+
+fn result_json(r: &LoadResult) -> Json {
+    obj([
+        ("throughput_rps", Json::from(r.throughput_rps)),
+        ("p50_ms", Json::from(r.p50_ms)),
+        ("p99_ms", Json::from(r.p99_ms)),
+        ("mean_batch", Json::from(r.mean_batch)),
+        ("mean_nfe_per_request", Json::from(r.mean_nfe)),
+    ])
+}
+
+fn main() {
+    let epochs = env_usize("REGNDE_BENCH_EPOCHS", 3).max(1);
+    let iters = env_usize("REGNDE_BENCH_ITERS", 25).max(1);
+    let requests = env_usize("REGNDE_BENCH_REQUESTS", 256).max(8);
+    let concurrency = env_usize("REGNDE_BENCH_CONCURRENCY", 16).clamp(2, requests);
+
+    // ---- train both models and build the registry ---------------------
+    let be = NativeBackend::new();
+    let registry = Arc::new(Registry::in_memory());
+    let vanilla_params =
+        train_and_export(&be, "vanilla", &registry, "spiral-vanilla", epochs, iters);
+    let _ = train_and_export(&be, "ernode", &registry, "spiral-ernode", epochs, iters);
+
+    // ---- host them on loopback ----------------------------------------
+    let pool = Arc::new(ThreadPool::new(4));
+    let policy = BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_micros(5000),
+    };
+    let batcher = Arc::new(Batcher::new(Arc::clone(&registry), pool, policy));
+    let opts = ServerOpts {
+        nfe_quota: u64::MAX,
+    };
+    let (addr, _server) =
+        Server::spawn(Arc::clone(&registry), batcher, opts, "127.0.0.1:0").expect("spawn server");
+    let addr = addr.to_string();
+
+    // ---- bit-exactness: served response == in-process predict ---------
+    {
+        let mut client = Client::connect(&addr).expect("connect");
+        let resp = client
+            .request(&Request::Predict {
+                model: "spiral-vanilla".into(),
+                u0: vec![2.0, 0.0],
+                budget: None,
+            })
+            .expect("predict");
+        let traj = match resp {
+            Response::Predict { traj, .. } => traj,
+            other => panic!("predict failed: {other:?}"),
+        };
+        let (data, ts) = experiments::spiral_node::ground_truth();
+        let payload = TrainData::Trajectory { data: &data, ts: &ts };
+        let (pred, _) = be
+            .predict("spiral_node", &vanilla_params, &payload, 0)
+            .expect("in-process predict");
+        assert_eq!(pred.len(), traj.len());
+        for (a, b) in pred.iter().zip(&traj) {
+            assert_eq!(a.to_bits(), b.to_bits(), "served bits != in-process bits");
+        }
+        println!("bit-exactness: served == in-process predict ({} floats)", traj.len());
+    }
+
+    // ---- measure both models under identical load ---------------------
+    let vanilla = drive_load(&addr, "spiral-vanilla", requests, concurrency);
+    let ernode = drive_load(&addr, "spiral-ernode", requests, concurrency);
+
+    assert!(
+        vanilla.mean_batch > 1.0 || ernode.mean_batch > 1.0,
+        "concurrent load must coalesce somewhere (vanilla {:.2}, ernode {:.2})",
+        vanilla.mean_batch,
+        ernode.mean_batch
+    );
+    // The paper's serving claim: the regularized model spends no more
+    // solver work per request (same gate CI's --check-nfe applies to
+    // training NFE).
+    assert!(
+        ernode.mean_nfe <= vanilla.mean_nfe * 1.05,
+        "ernode mean NFE/request {} must not exceed vanilla's {}",
+        ernode.mean_nfe,
+        vanilla.mean_nfe
+    );
+
+    let mut table = Table::new(
+        "Serving — micro-batched spiral-NODE over loopback TCP",
+        &["model", "req/s", "p50 ms", "p99 ms", "mean batch", "mean NFE/req"],
+    );
+    for (name, r) in [("vanilla", &vanilla), ("ernode", &ernode)] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", r.throughput_rps),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.2}", r.mean_batch),
+            format!("{:.1}", r.mean_nfe),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "NFE ratio vanilla/ernode = {:.3}x ({} requests x {} lanes per model)",
+        vanilla.mean_nfe / ernode.mean_nfe.max(1e-9),
+        requests,
+        concurrency
+    );
+
+    // ---- emit BENCH_serving.json at the repo root ---------------------
+    let nfe_ratio = vanilla.mean_nfe / ernode.mean_nfe.max(1e-9);
+    let report = obj([
+        ("schema", Json::from("bench_serving/v1")),
+        ("experiment", Json::from("spiral-node")),
+        ("vanilla", result_json(&vanilla)),
+        ("ernode", result_json(&ernode)),
+        ("nfe_ratio_vanilla_over_ernode", Json::from(nfe_ratio)),
+        (
+            "meta",
+            obj([
+                ("epochs", Json::from(epochs)),
+                ("iters_per_epoch", Json::from(iters)),
+                ("requests", Json::from(requests)),
+                ("concurrency", Json::from(concurrency)),
+                ("max_batch", Json::from(policy.max_batch)),
+                ("max_wait_us", Json::from(policy.max_wait.as_micros() as usize)),
+                (
+                    "available_parallelism",
+                    Json::from(
+                        std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                    ),
+                ),
+            ]),
+        ),
+    ]);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serving.json");
+    std::fs::write(&path, report.to_string_pretty()).expect("write bench report");
+    println!("wrote {}", path.display());
+}

@@ -15,8 +15,8 @@ use std::time::Instant;
 
 use regnde::data::spiral::uniform_grid;
 use regnde::solvers::{
-    problems, sde_ensemble_moments, solve, EnsembleOptions, OdeSystem, Saveat, SdeOptions,
-    SolveOptions, StepBudget, Tableau, Taping,
+    problems, sde_ensemble_moments, solve, EnsembleOptions, OdeSystem, Saveat, SolveOptions,
+    StepBudget, Tableau, Taping,
 };
 use regnde::util::cli::env_usize;
 use regnde::util::json::{obj, Json};
@@ -132,11 +132,7 @@ fn main() {
 
     // ---- ensemble throughput: serial vs pooled ------------------------
     let ts = uniform_grid(t_points, 1.0);
-    let opts = SdeOptions {
-        rtol: 1e-3,
-        atol: 1e-3,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-3);
     let run_ens = |eopts: &EnsembleOptions| -> f64 {
         let mut best = 0.0f64;
         for _ in 0..reps {

@@ -166,5 +166,6 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         final_test_loss: test_eval.loss,
         escalations: router.escalations,
         descents: router.descents,
+        final_params: state.params,
     })
 }

@@ -87,3 +87,26 @@ pub fn run_by_name(
         ),
     }
 }
+
+/// Backend model name behind an experiment id (what `--checkpoint`
+/// exports through `Backend::export_state`).
+pub fn model_for(experiment: &str) -> Result<&'static str> {
+    Ok(match experiment {
+        "mnist-node" => mnist_node::MODEL,
+        "latent-ode" | "physionet" => latent_ode::MODEL,
+        "spiral-node" => spiral_node::MODEL,
+        "spiral-nsde" => spiral_nsde::MODEL,
+        "mnist-nsde" => mnist_nsde::MODEL,
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    })
+}
+
+/// The fixed serving grid a trajectory experiment's checkpoint carries
+/// (`serve::batcher` coalesces requests over it).  Empty for experiments
+/// whose predict output is not a single trajectory.
+pub fn serving_grid(experiment: &str) -> Vec<f32> {
+    match experiment {
+        "spiral-node" => spiral_node::ground_truth().1,
+        _ => Vec::new(),
+    }
+}

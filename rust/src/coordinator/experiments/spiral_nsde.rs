@@ -120,6 +120,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         final_test_loss: m.loss,
         escalations: router.escalations,
         descents: router.descents,
+        final_params: state.params,
     })
 }
 

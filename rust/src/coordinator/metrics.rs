@@ -108,6 +108,11 @@ pub struct RunResult {
     /// Router telemetry.
     pub escalations: u64,
     pub descents: u64,
+    /// Final committed flat parameters — what `--checkpoint` persists
+    /// via `Backend::export_state` (kept out of the JSON run record,
+    /// which stays a lean metrics trace; the serving checkpoint is the
+    /// parameter artifact).
+    pub final_params: Vec<f32>,
 }
 
 impl RunResult {
@@ -181,6 +186,7 @@ mod tests {
             final_test_loss: 0.08,
             escalations: 1,
             descents: 2,
+            final_params: vec![0.5; 3],
         };
         let j = r.to_json();
         assert_eq!(j.get("method").unwrap().as_str().unwrap(), "ERNODE");

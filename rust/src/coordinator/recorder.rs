@@ -105,6 +105,7 @@ mod tests {
             final_test_loss: 0.4,
             escalations: 0,
             descents: 0,
+            final_params: Vec::new(),
         }
     }
 

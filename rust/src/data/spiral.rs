@@ -11,7 +11,6 @@
 
 use crate::solvers::ensemble::{sde_ensemble_moments, EnsembleOptions};
 use crate::solvers::problems;
-use crate::solvers::sde::SdeOptions;
 use crate::solvers::{solve, OdeSystem, Saveat, SolveOptions, Taping};
 
 /// One spiral ODE trajectory at the given save times (row-major [T, 2]).
@@ -37,11 +36,7 @@ pub fn spiral_sde_moments(
     n_traj: usize,
     seed: u64,
 ) -> (Vec<f32>, Vec<f32>) {
-    let opts = SdeOptions {
-        rtol: 1e-3,
-        atol: 1e-3,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-3);
     let m = sde_ensemble_moments(
         &problems::spiral_sde_drift,
         &problems::spiral_sde_diffusion,
@@ -110,11 +105,7 @@ mod tests {
     fn moments_independent_of_worker_count() {
         // The fixture contract: pooled generation reproduces serial bits.
         let ts = uniform_grid(6, 1.0);
-        let opts = SdeOptions {
-            rtol: 1e-3,
-            atol: 1e-3,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-3);
         let mk = |workers: usize| {
             sde_ensemble_moments(
                 &problems::spiral_sde_drift,

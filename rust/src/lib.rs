@@ -31,6 +31,7 @@ pub mod coordinator;
 pub mod data;
 pub mod models;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod util;
 

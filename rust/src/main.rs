@@ -4,11 +4,17 @@
 //! regnde list                                  # backend models (+artifacts)
 //! regnde train --exp mnist-node --method ernode [--epochs N] [--iters N]
 //!              [--seeds 0,1,2] [--backend native|pjrt] [--verbose]
+//!              [--checkpoint ckpt.json]        # persist the trained model
 //! regnde predict --exp mnist-node --method vanilla
 //! regnde run spiral-node --method srnode+ernode --epochs 2 [--check-nfe]
 //!                                              # method-vs-vanilla compare
 //! regnde run spiral-node --method ernode --solver dopri5
 //!                                              # pick the RK tableau
+//! regnde serve --registry <dir> --addr 127.0.0.1:7878
+//!                                              # micro-batching TCP server
+//! regnde predict --addr 127.0.0.1:7878 --model spiral-er \
+//!                [--u0 2.0,0.0] [--requests 32] [--concurrency 8]
+//!                                              # remote serving client
 //! regnde validate                              # run every artifact (pjrt)
 //! ```
 //!
@@ -16,18 +22,47 @@
 //! artifacts or XLA required.  `--backend pjrt` selects the AOT engine
 //! (requires `--features pjrt` and compiled artifacts).  `--solver`
 //! picks the native backend's RK tableau by name (case-insensitive:
-//! tsit5, dopri5, bs3).
+//! tsit5, dopri5, bs3).  `--checkpoint` persists the trained model as a
+//! serving checkpoint (DESIGN.md §Serving); `serve` hosts a checkpoint
+//! directory and `predict --addr` talks to it.
 
-use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
 
 use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::metrics::RunResult;
 use regnde::coordinator::recorder::Recorder;
 use regnde::coordinator::Method;
 use regnde::runtime::{make_backend, Backend};
+use regnde::serve::{
+    BatchPolicy, Batcher, Checkpoint, Client, Registry, Request, Response, Server, ServerOpts,
+};
 use regnde::util::cli::Args;
+use regnde::util::threadpool::ThreadPool;
 
 const VALUED: &[&str] = &[
-    "exp", "method", "epochs", "iters", "seeds", "artifacts", "runs", "backend", "solver",
+    "exp",
+    "method",
+    "epochs",
+    "iters",
+    "seeds",
+    "artifacts",
+    "runs",
+    "backend",
+    "solver",
+    "checkpoint",
+    "registry",
+    "addr",
+    "model",
+    "u0",
+    "budget",
+    "requests",
+    "concurrency",
+    "max-batch",
+    "max-wait-us",
+    "nfe-quota",
+    "workers",
 ];
 
 fn main() {
@@ -39,10 +74,14 @@ fn main() {
 
 fn usage() -> String {
     format!(
-        "usage: regnde <list|validate|train|predict|run> \
+        "usage: regnde <list|validate|train|predict|run|serve> \
          [--backend native|pjrt] [--solver {}] [--exp E] [--method M] \
          [--epochs N] [--iters N] [--seeds 0,1] [--artifacts DIR] [--runs DIR] \
-         [--check-nfe] [--verbose]\n\
+         [--checkpoint FILE] [--check-nfe] [--verbose]\n\
+         serving: regnde serve --registry DIR [--addr A] [--max-batch N] \
+         [--max-wait-us U] [--nfe-quota Q] [--workers W]\n\
+         \x20        regnde predict --addr A --model ID [--u0 2.0,0.0] \
+         [--budget N] [--requests N] [--concurrency C]\n\
          experiments: mnist-node latent-ode spiral-node spiral-nsde mnist-nsde\n\
          methods: vanilla steer taynode srnode ernode lrnode (+-combined, e.g. srnode+ernode)",
         regnde::solvers::Tableau::names().join("|")
@@ -112,9 +151,15 @@ fn run() -> Result<()> {
                     result.final_test_metric,
                     path.display()
                 );
+                // Multiple seeds overwrite in turn: the checkpoint holds
+                // the last trained replica.
+                if let Some(ckpt) = args.get("checkpoint") {
+                    save_checkpoint(backend.as_ref(), &exp, &result, ckpt)?;
+                }
             }
             Ok(())
         }
+        "predict" if args.get("addr").is_some() => remote_predict(&args),
         "predict" => {
             let backend = make_backend(&backend_name, &artifacts, solver)?;
             let exp = args.get("exp").context("--exp required")?.to_string();
@@ -157,10 +202,144 @@ fn run() -> Result<()> {
                 method,
                 opts,
                 args.flag("check-nfe"),
+                args.get("checkpoint"),
             )
         }
+        "serve" => serve(&args),
         other => bail!("unknown command {other:?}\n{}", usage()),
     }
+}
+
+/// Persist a finished run's model as a serving checkpoint
+/// (`Backend::export_state` + `serve::Checkpoint`).
+fn save_checkpoint(backend: &dyn Backend, exp: &str, result: &RunResult, path: &str) -> Result<()> {
+    let model = experiments::model_for(exp)?;
+    let state = backend.export_state(model, &result.final_params)?;
+    let grid = experiments::serving_grid(exp);
+    let ckpt = Checkpoint::new(state, exp, result.method.clone(), grid);
+    let path = std::path::Path::new(path);
+    ckpt.save(path)?;
+    println!("checkpoint -> {}", path.display());
+    Ok(())
+}
+
+/// `regnde serve --registry <dir>`: host a checkpoint directory behind
+/// the micro-batching prediction server (blocks until a `shutdown`
+/// request).
+fn serve(args: &Args) -> Result<()> {
+    let dir = args.get("registry").context("--registry <dir> required")?;
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 16)?.max(1),
+        max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 2000)?),
+    };
+    let opts = ServerOpts {
+        nfe_quota: args.get_u64("nfe-quota", 1_000_000)?,
+    };
+    let workers = args.get_usize("workers", regnde::util::threadpool::default_workers())?;
+
+    let registry = Arc::new(Registry::open(dir)?);
+    let ids = registry.ids();
+    ensure!(!ids.is_empty(), "registry {dir:?} holds no checkpoints");
+    let pool = Arc::new(ThreadPool::new(workers));
+    let batcher = Arc::new(Batcher::new(Arc::clone(&registry), pool, policy));
+    let listener = std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!(
+        "regnde serve: {} model(s) at {} (max-batch {}, max-wait {}us, quota {} attempts/conn)",
+        ids.len(),
+        listener.local_addr()?,
+        policy.max_batch,
+        policy.max_wait.as_micros(),
+        opts.nfe_quota,
+    );
+    for id in &ids {
+        println!("  {id}");
+    }
+    let server = Arc::new(Server::new(registry, batcher, opts));
+    server.serve(listener)
+}
+
+/// `regnde predict --addr <a> --model <id>`: serving client.  Fires
+/// `--requests` predictions across `--concurrency` connections (each
+/// lane holds one connection; concurrent lanes are what the server
+/// coalesces) and exits nonzero unless every request succeeds.
+fn remote_predict(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("--addr required")?.to_string();
+    let model = args.get("model").context("--model <id> required")?.to_string();
+    let u0: Vec<f32> = args
+        .get_or("u0", "2.0,0.0")
+        .split(',')
+        .map(|s| s.trim().parse::<f32>().context("bad --u0 entry"))
+        .collect::<Result<_>>()?;
+    let budget = match args.get("budget") {
+        Some(b) => Some(b.parse::<u64>().context("--budget expects an integer")?),
+        None => None,
+    };
+    let requests = args.get_usize("requests", 1)?.max(1);
+    let concurrency = args.get_usize("concurrency", 1)?.clamp(1, requests);
+
+    let failures = std::sync::atomic::AtomicUsize::new(0);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut lanes = Vec::new();
+        for lane in 0..concurrency {
+            let (addr, model, u0) = (&addr, &model, &u0);
+            let (failures, next) = (&failures, &next);
+            lanes.push(scope.spawn(move || -> Result<()> {
+                let mut client = Client::connect(addr)?;
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    if i >= requests {
+                        return Ok(());
+                    }
+                    let resp = client.request(&Request::Predict {
+                        model: model.clone(),
+                        u0: u0.clone(),
+                        budget,
+                    })?;
+                    match resp {
+                        Response::Predict {
+                            nfe,
+                            naccept,
+                            nreject,
+                            batch,
+                            micros,
+                            ref traj,
+                            ..
+                        } => {
+                            println!(
+                                "req {i} (lane {lane}): ok nfe={nfe} attempts={} \
+                                 batch={batch} latency={micros}us traj[0..2]=[{:.4}, {:.4}]",
+                                naccept + nreject,
+                                traj.first().copied().unwrap_or(f32::NAN),
+                                traj.get(1).copied().unwrap_or(f32::NAN),
+                            );
+                        }
+                        Response::Error(e) => {
+                            failures.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                            eprintln!("req {i} (lane {lane}): ERROR {e}");
+                        }
+                        other => {
+                            failures.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                            eprintln!("req {i} (lane {lane}): unexpected response {other:?}");
+                        }
+                    }
+                }
+            }));
+        }
+        for lane in lanes {
+            lane.join().expect("client lane panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let failed = failures.load(std::sync::atomic::Ordering::SeqCst);
+    ensure!(
+        failed == 0,
+        "{failed}/{requests} serving request(s) failed"
+    );
+    println!("{requests}/{requests} serving requests ok");
+    Ok(())
 }
 
 fn list(backend: &dyn Backend) -> Result<()> {
@@ -193,6 +372,7 @@ fn compare_run(
     method: Method,
     opts: TrainOpts,
     check_nfe: bool,
+    checkpoint: Option<&str>,
 ) -> Result<()> {
     anyhow::ensure!(
         method != Method::VANILLA,
@@ -200,6 +380,11 @@ fn compare_run(
     );
     let reg = experiments::run_by_name(backend, exp, method, opts)?;
     let vanilla = experiments::run_by_name(backend, exp, Method::VANILLA, opts)?;
+    // --checkpoint persists the *regularized* model (the one the compare
+    // is about) for the serving registry.
+    if let Some(path) = checkpoint {
+        save_checkpoint(backend, exp, &reg, path)?;
+    }
 
     println!("\n================ {exp}: regularized vs vanilla ================");
     for r in [&vanilla, &reg] {

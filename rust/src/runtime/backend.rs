@@ -20,7 +20,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::state::{Metrics, TrainState};
 
@@ -134,6 +134,32 @@ pub struct ModelInfo {
     pub hyper: BTreeMap<String, f64>,
 }
 
+/// Everything a backend needs to reconstruct a trained model for
+/// inference — the backend-owned half of a serving checkpoint
+/// (`serve::checkpoint` adds the coordinator-owned half: experiment id,
+/// method label, serving grid).  Produced by [`Backend::export_state`],
+/// validated back into a usable parameter vector by
+/// [`Backend::import_state`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExportedState {
+    /// Backend model name (`spiral_node`, ...).
+    pub model: String,
+    /// Flat trained parameters (bit-exact; the checkpoint codec must
+    /// round-trip these without loss).
+    pub params: Vec<f32>,
+    /// Solver identifier (`Tableau` name for the native backend).
+    pub solver: String,
+    /// Train-time solver tolerance (rtol = atol).
+    pub train_tol: f64,
+    /// Inference tolerance (the early-exiting predict setting).
+    pub predict_tol: f64,
+    /// Default total step-attempt budget for a served solve (the top
+    /// budget-ladder rung).
+    pub step_budget: u64,
+    /// Paper hyper-parameters (lr, regularization coefficients, ...).
+    pub hyper: BTreeMap<String, f64>,
+}
+
 /// A training/inference runtime for the paper's model zoo.
 pub trait Backend {
     /// Short runtime name ("native" / "pjrt").
@@ -183,4 +209,31 @@ pub trait Backend {
         data: &TrainData,
         seed: u32,
     ) -> Result<(Vec<f32>, Metrics)>;
+
+    /// Package trained parameters into an [`ExportedState`] carrying
+    /// everything this backend needs to serve the model later
+    /// (`serve::checkpoint` persists it).  **Unsupported by default**:
+    /// the PJRT engine's solver/tolerances are baked into its lowered
+    /// artifacts, so it cannot emit a self-describing state — only the
+    /// native backend overrides this pair.
+    fn export_state(&self, model: &str, params: &[f32]) -> Result<ExportedState> {
+        let _ = (model, params);
+        bail!(
+            "backend {:?} does not support state export (serving \
+             checkpoints are native-backend only)",
+            self.name()
+        )
+    }
+
+    /// Validate an [`ExportedState`] against this backend's model zoo and
+    /// return the parameter vector ready for [`Backend::predict`].
+    /// Unsupported by default (see [`Backend::export_state`]).
+    fn import_state(&self, state: &ExportedState) -> Result<Vec<f32>> {
+        let _ = state;
+        bail!(
+            "backend {:?} does not support state import (serving \
+             checkpoints are native-backend only)",
+            self.name()
+        )
+    }
 }

@@ -50,14 +50,14 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
-use super::backend::{Backend, ModelInfo, StepCoefs, StepOutput, TrainData};
+use super::backend::{Backend, ExportedState, ModelInfo, StepCoefs, StepOutput, TrainData};
 use super::state::{Metrics, TrainState};
 use crate::models::{Adam, Mlp, MlpScratch};
 use crate::solvers::adjoint::{ode_backward_sys, sde_backward_sys, OdeTape, RegCoefs, SdeTape};
 use crate::solvers::driver::{Saveat, SolveOptions, StepBudget};
 use crate::solvers::observer::{LocalReg, StepObserver};
-use crate::solvers::ode::{self, OdeOptions, Stats};
-use crate::solvers::sde::{self, SdeOptions};
+use crate::solvers::ode::{self, Stats};
+use crate::solvers::sde;
 use crate::solvers::system::System;
 use crate::solvers::tableau::Tableau;
 use crate::util::rng::Rng;
@@ -305,14 +305,13 @@ impl NativeBackend {
         }
     }
 
-    /// Legacy-shaped options of the ODE predict paths.
-    fn ode_opts(&self, tol: f64) -> OdeOptions {
-        OdeOptions {
-            tableau: self.tableau.clone(),
-            rtol: tol,
-            atol: tol,
-            ..Default::default()
-        }
+    /// Options of the ODE predict paths: backend tableau, the model's
+    /// predict tolerance, default per-segment budget (the early-exiting
+    /// inference setting — no budget ladder at serve time).
+    fn ode_predict_opts(&self, tol: f64) -> SolveOptions {
+        SolveOptions::new()
+            .with_tableau(self.tableau.clone())
+            .with_tolerance(tol)
     }
 
     /// Unified options of an ODE train solve: backend tableau, paper
@@ -332,12 +331,90 @@ impl NativeBackend {
             .with_budget(StepBudget::Total(budget))
     }
 
-    fn sde_opts(tol: f64) -> SdeOptions {
-        SdeOptions {
-            rtol: tol,
-            atol: tol,
-            ..Default::default()
+    /// Options of the SDE predict paths (Heun scheme is fixed; the
+    /// generous per-segment budget matches the historical prediction
+    /// setting).
+    fn sde_predict_opts(tol: f64) -> SolveOptions {
+        SolveOptions::new()
+            .with_tolerance(tol)
+            .with_budget(StepBudget::PerSegment(1_000_000))
+    }
+
+    /// State dimension of a model's single-trajectory serving path
+    /// (`serve::batcher` coalesces requests of this width).  Only models
+    /// whose inference is "integrate one state vector over a grid" are
+    /// row-batchable this way.
+    pub fn traj_state_dim(&self, model: &str) -> Result<usize> {
+        match &self.get(model)?.arch {
+            Arch::SpiralNode { dynamics } => Ok(dynamics.in_dim()),
+            _ => bail!(
+                "model {model:?} has no single-trajectory serving path \
+                 (only trajectory-output models are row-batchable)"
+            ),
         }
+    }
+
+    /// Row-batched trajectory inference — the serving hot path: integrate
+    /// `B` initial states (`u0s`, row-major `[B, d]`) through **one**
+    /// `drive()` over the shared save grid `ts`, so concurrent predict
+    /// requests share every solver step.  Returns one `[T * d]`
+    /// trajectory per request plus the batch solve's [`Stats`] (the NFE
+    /// every rider pays once, jointly) and the success flag.
+    ///
+    /// `budget: Some(b)` bounds the whole batch solve
+    /// ([`StepBudget::Total`], the serving admission unit); `None` keeps
+    /// the default per-segment predict budget.  A batch of one takes
+    /// exactly the steps of [`Backend::predict`] on the same input, so
+    /// an unbatched served response is bit-identical to the in-process
+    /// prediction.
+    pub fn predict_traj_batch(
+        &self,
+        model: &str,
+        params: &[f32],
+        u0s: &[f32],
+        ts: &[f32],
+        budget: Option<u64>,
+    ) -> Result<(Vec<Vec<f32>>, Stats, bool)> {
+        let m = self.get(model)?;
+        let dynamics = match &m.arch {
+            Arch::SpiralNode { dynamics } => dynamics,
+            _ => bail!("model {model:?} has no single-trajectory serving path"),
+        };
+        let d = dynamics.in_dim();
+        ensure!(
+            params.len() == m.arch.n_params(),
+            "params size {} != {}",
+            params.len(),
+            m.arch.n_params()
+        );
+        ensure!(ts.len() >= 2, "need at least two save points");
+        ensure!(
+            !u0s.is_empty() && u0s.len() % d == 0,
+            "u0 batch must be rows of {d} floats (got {})",
+            u0s.len()
+        );
+        let b = u0s.len() / d;
+        let theta = to_f64(params);
+        let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
+        let z0: Vec<f64> = u0s.iter().map(|&v| v as f64).collect();
+
+        let mut opts = self.ode_predict_opts(m.predict_tol);
+        if let Some(total) = budget {
+            opts = opts.with_budget(StepBudget::Total(total));
+        }
+        let mut sys = MlpOde::new(dynamics, &theta, b, 0..0);
+        let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&ts64), &opts, None, &mut []);
+
+        let mut trajs: Vec<Vec<f32>> =
+            (0..b).map(|_| Vec::with_capacity(ts.len() * d)).collect();
+        for z in &zs {
+            for (i, traj) in trajs.iter_mut().enumerate() {
+                for k in 0..d {
+                    traj.push(z[i * d + k] as f32);
+                }
+            }
+        }
+        Ok((trajs, out.stats, out.success))
     }
 }
 
@@ -852,7 +929,7 @@ impl Backend for NativeBackend {
                     &theta,
                     data,
                     ts,
-                    &self.ode_opts(m.predict_tol),
+                    &self.ode_predict_opts(m.predict_tol),
                 )?;
                 Ok((pred, metrics(loss, loss, &stats, ok)))
             }
@@ -866,7 +943,7 @@ impl Backend for NativeBackend {
                     mu,
                     var,
                     ts,
-                    &Self::sde_opts(m.predict_tol),
+                    &Self::sde_predict_opts(m.predict_tol),
                     seed,
                 )
             }
@@ -879,7 +956,7 @@ impl Backend for NativeBackend {
                     &theta,
                     x,
                     y,
-                    &self.ode_opts(m.predict_tol),
+                    &self.ode_predict_opts(m.predict_tol),
                 )?;
                 Ok((logits, metrics(loss, acc, &stats, ok)))
             }
@@ -900,7 +977,7 @@ impl Backend for NativeBackend {
                 &theta,
                 x,
                 y,
-                &Self::sde_opts(m.predict_tol),
+                &Self::sde_predict_opts(m.predict_tol),
                 seed,
             ),
             (Arch::LatentOde { enc, dynamics, dec }, TrainData::Series { x, mask, ts }) => {
@@ -913,11 +990,55 @@ impl Backend for NativeBackend {
                     x,
                     mask,
                     ts,
-                    &self.ode_opts(m.predict_tol),
+                    &self.ode_predict_opts(m.predict_tol),
                 )
             }
             (_, d) => bail!("model {model} cannot predict on {:?} data", d.kind()),
         }
+    }
+
+    fn export_state(&self, model: &str, params: &[f32]) -> Result<ExportedState> {
+        let m = self.get(model)?;
+        ensure!(
+            params.len() == m.arch.n_params(),
+            "params size {} != {} for model {model:?}",
+            params.len(),
+            m.arch.n_params()
+        );
+        ensure!(
+            params.iter().all(|p| p.is_finite()),
+            "refusing to export non-finite parameters for model {model:?}"
+        );
+        Ok(ExportedState {
+            model: model.to_string(),
+            params: params.to_vec(),
+            solver: self.tableau.name.to_string(),
+            train_tol: m.train_tol,
+            predict_tol: m.predict_tol,
+            step_budget: m.ladder.last().copied().unwrap_or(100_000) as u64,
+            hyper: m.hyper.clone(),
+        })
+    }
+
+    fn import_state(&self, state: &ExportedState) -> Result<Vec<f32>> {
+        let m = self.get(&state.model)?;
+        ensure!(
+            state.params.len() == m.arch.n_params(),
+            "checkpoint carries {} parameters but model {:?} has {}",
+            state.params.len(),
+            state.model,
+            m.arch.n_params()
+        );
+        ensure!(
+            state.params.iter().all(|p| p.is_finite()),
+            "checkpoint for model {:?} carries non-finite parameters",
+            state.model
+        );
+        // The solver name must be resolvable so a serving backend can be
+        // reconstructed with `with_solver` (unknown names list the
+        // registry).
+        Tableau::parse(&state.solver).map_err(anyhow::Error::msg)?;
+        Ok(state.params.clone())
     }
 }
 
@@ -976,19 +1097,14 @@ fn spiral_node_predict(
     theta: &[f64],
     data: &[f32],
     ts: &[f32],
-    opts: &OdeOptions,
+    opts: &SolveOptions,
 ) -> Result<(Vec<f32>, f64, Stats, bool)> {
     let d = dynamics.in_dim();
     ensure!(data.len() == ts.len() * d, "trajectory shape mismatch");
     let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
     let z0: Vec<f64> = data[..d].iter().map(|&v| v as f64).collect();
-    let mut sf = dynamics.scratch();
-    let (zs, out) = crate::solvers::ode::solve_saveat(
-        |z: &[f64], _t: f64, dz: &mut [f64]| dynamics.forward(theta, z, dz, &mut sf),
-        &z0,
-        &ts64,
-        opts,
-    );
+    let mut sys = MlpOde::new(dynamics, theta, 1, 0..0);
+    let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&ts64), opts, None, &mut []);
     let denom = (ts.len() * d) as f64;
     let mut mse = 0.0;
     let mut pred = Vec::with_capacity(ts.len() * d);
@@ -1143,7 +1259,7 @@ fn spiral_nsde_predict(
     mu: &[f32],
     var: &[f32],
     ts: &[f32],
-    opts: &SdeOptions,
+    opts: &SolveOptions,
     seed: u32,
 ) -> Result<(Vec<f32>, Metrics)> {
     let d = drift.in_dim();
@@ -1154,24 +1270,17 @@ fn spiral_nsde_predict(
     let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
     let th_drift = &theta[arch.range(0)];
     let th_diff = &theta[arch.range(1)];
-    let mut sdf = drift.scratch();
-    let mut sgf = diffusion.scratch();
+    let mut sys = MlpSde::new(drift, th_drift, 0..0, diffusion, th_diff, 0..0, 1);
     let mut stats = Stats::default();
     let mut success = true;
     let mut states: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_traj);
     for i in 0..n_traj {
         let z0: Vec<f64> = u0[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect();
         let mut rng = traj_rng(seed as u64 ^ 0x9E9D_1C7, i);
-        let (zs, st, ok) = crate::solvers::sde::sde_solve_saveat(
-            |z: &[f64], _t: f64, dz: &mut [f64]| drift.forward(th_drift, z, dz, &mut sdf),
-            |z: &[f64], _t: f64, dg: &mut [f64]| diffusion.forward(th_diff, z, dg, &mut sgf),
-            &z0,
-            &ts64,
-            &mut rng,
-            opts,
-        );
-        stats.merge(&st);
-        success &= ok;
+        let (zs, out) =
+            sde::drive(&mut sys, &z0, Saveat::Grid(&ts64), &mut rng, opts, None, &mut []);
+        stats.merge(&out.stats);
+        success &= out.success;
         states.push(zs);
     }
     let (gmm, _, _) = moment_loss(&states, mu, var, t_pts, d);
@@ -1335,29 +1444,18 @@ fn mnist_node_predict(
     theta: &[f64],
     x: &[f32],
     y: &[f32],
-    opts: &OdeOptions,
+    opts: &SolveOptions,
 ) -> Result<(Vec<f32>, f64, f64, Stats, bool)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
-    let l = dynamics.in_dim();
     let th_enc = &theta[arch.range(0)];
     let th_dyn = &theta[arch.range(1)];
     let th_clf = &theta[arch.range(2)];
     let mut se = enc.scratch();
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
-    let mut sf = dynamics.scratch();
-    let (zs, out) = crate::solvers::ode::solve_saveat(
-        |z: &[f64], _t: f64, dz: &mut [f64]| {
-            for r in 0..b {
-                let (zi, di) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                dynamics.forward(th_dyn, zi, di, &mut sf);
-            }
-        },
-        &z0,
-        &[0.0, 1.0],
-        opts,
-    );
+    let mut sys = MlpOde::new(dynamics, th_dyn, b, 0..0);
+    let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&[0.0, 1.0]), opts, None, &mut []);
     let (loss, acc, _, logits) = classify_batch(clf, th_clf, &zs[1], y, b, None);
     let logits: Vec<f32> = logits.iter().map(|&v| v as f32).collect();
     Ok((logits, loss, acc, out.stats, out.success))
@@ -1436,7 +1534,7 @@ fn mnist_nsde_predict(
     theta: &[f64],
     x: &[f32],
     y: &[f32],
-    opts: &SdeOptions,
+    opts: &SolveOptions,
     seed: u32,
 ) -> Result<(Vec<f32>, Metrics)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
@@ -1454,32 +1552,22 @@ fn mnist_nsde_predict(
     let mut stats = Stats::default();
     let mut success = true;
     let mut mean_logits = vec![0.0f64; b * CLASSES];
-    let mut sdf = drift.scratch();
-    let mut sgf = diffusion.scratch();
+    let mut sys = MlpSde::new(drift, th_drift, 0..0, diffusion, th_diff, 0..0, b);
     let mut sc = clf.scratch();
     let mut lrow = vec![0.0f64; CLASSES];
     for path in 0..PREDICT_PATHS {
         let mut rng = traj_rng(seed as u64 ^ 0x9E9D_1C7, path);
-        let (zs, st, ok) = crate::solvers::sde::sde_solve_saveat(
-            |z: &[f64], _t: f64, dz: &mut [f64]| {
-                for r in 0..b {
-                    let (zi, oi) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                    drift.forward(th_drift, zi, oi, &mut sdf);
-                }
-            },
-            |z: &[f64], _t: f64, dg: &mut [f64]| {
-                for r in 0..b {
-                    let (zi, oi) = (&z[r * l..(r + 1) * l], &mut dg[r * l..(r + 1) * l]);
-                    diffusion.forward(th_diff, zi, oi, &mut sgf);
-                }
-            },
+        let (zs, out) = sde::drive(
+            &mut sys,
             &z0,
-            &[0.0, 1.0],
+            Saveat::Grid(&[0.0, 1.0]),
             &mut rng,
             opts,
+            None,
+            &mut [],
         );
-        stats.merge(&st);
-        success &= ok;
+        stats.merge(&out.stats);
+        success &= out.success;
         for r in 0..b {
             clf.forward(th_clf, &zs[1][r * l..(r + 1) * l], &mut lrow, &mut sc);
             for k in 0..CLASSES {
@@ -1631,7 +1719,7 @@ fn latent_ode_predict(
     x: &[f32],
     mask: &[f32],
     ts: &[f32],
-    opts: &OdeOptions,
+    opts: &SolveOptions,
 ) -> Result<(Vec<f32>, Metrics)> {
     let c = dec.out_dim();
     let t_pts = ts.len();
@@ -1655,18 +1743,8 @@ fn latent_ode_predict(
         series_features(xs, ms, t_pts, c, &mut feats);
         enc.forward(th_enc, &feats, &mut z0[r * l..(r + 1) * l], &mut se);
     }
-    let mut sf = dynamics.scratch();
-    let (zs, out) = crate::solvers::ode::solve_saveat(
-        |z: &[f64], _t: f64, dz: &mut [f64]| {
-            for r in 0..b {
-                let (zi, di) = (&z[r * l..(r + 1) * l], &mut dz[r * l..(r + 1) * l]);
-                dynamics.forward(th_dyn, zi, di, &mut sf);
-            }
-        },
-        &z0,
-        &ts64,
-        opts,
-    );
+    let mut sys = MlpOde::new(dynamics, th_dyn, b, 0..0);
+    let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&ts64), opts, None, &mut []);
     let observed: f64 = mask.iter().map(|&m| m as f64).sum();
     let denom = observed.max(1.0);
     let mut sd = dec.scratch();

@@ -1,0 +1,277 @@
+//! Micro-batching request queue: coalesce concurrent single-trajectory
+//! predict requests into one row-batched solve.
+//!
+//! This is where the paper's NFE savings become serving throughput: a
+//! batch of `B` coalesced requests pays the solver's accepted/rejected
+//! steps **once** (one `drive()` over `[B, d]` rows,
+//! `NativeBackend::predict_traj_batch`), so a regularized model that
+//! needs fewer steps per solve serves more requests per core — and
+//! batching multiplies that by `B`.
+//!
+//! ## Coalescing policy (leader/follower windows)
+//!
+//! Requests for the same model join an open **window**; the first
+//! request of a window is its *leader*.  The leader waits
+//! [`BatchPolicy::max_wait`] for followers to accumulate, then closes
+//! the window and hands the whole batch to the shared [`ThreadPool`] as
+//! one job.  A window never exceeds [`BatchPolicy::max_batch`] requests
+//! — an arrival finding the open window full opens a new window (and
+//! becomes its leader), so overload turns into multiple concurrent
+//! batch solves bounded by the pool width, never an unbounded batch.
+//! `max_wait` is a hard latency floor for coalesced batches: the leader
+//! sleeps the full window even if it fills early (keep it µs-scale).
+//!
+//! Every response carries the batch solve's [`Stats`] (per-request NFE
+//! accounting: the steps a request's solve took, shared by its whole
+//! batch) and the realized batch size.  A failing solve — budget
+//! exhausted, non-finite state, model not row-batchable — fails **only
+//! its own window's requests**; other windows and models are untouched.
+//!
+//! [`ThreadPool`]: crate::util::threadpool::ThreadPool
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::registry::{Registry, ServableModel};
+use crate::solvers::ode::Stats;
+use crate::util::threadpool::ThreadPool;
+
+/// Coalescing knobs of one batcher.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap on requests per batched solve.
+    pub max_batch: usize,
+    /// How long a window's leader waits for followers before the batch
+    /// solves (the micro-batching latency budget).
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(2000),
+        }
+    }
+}
+
+/// One served prediction: the requester's trajectory plus the batch
+/// solve's accounting.
+#[derive(Clone, Debug)]
+pub struct BatchReply {
+    /// Row-major `[T, d]` trajectory over the model's serving grid.
+    pub traj: Vec<f32>,
+    /// NFE of the solve that served this request (shared by the batch).
+    pub nfe: u64,
+    pub naccept: u64,
+    pub nreject: u64,
+    /// How many requests rode the same solve.
+    pub batch: usize,
+}
+
+struct Job {
+    u0: Vec<f32>,
+    budget: u64,
+    tx: mpsc::Sender<Result<BatchReply, String>>,
+}
+
+#[derive(Default)]
+struct Window {
+    jobs: Vec<Job>,
+}
+
+#[derive(Default)]
+struct ModelQueue {
+    /// Open windows by id; a window is removed when its leader closes it.
+    windows: BTreeMap<u64, Window>,
+    /// Id of the newest window still accepting joiners (if any).
+    open: Option<u64>,
+}
+
+/// Aggregate batcher telemetry (served through the `stats` protocol op
+/// and asserted by the batcher tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    pub batches: u64,
+    pub requests: u64,
+    pub max_batch: usize,
+    /// Sum of batch-solve NFE over all batches (mean NFE per request =
+    /// weighted by how many requests shared each solve).
+    pub nfe_total: u64,
+}
+
+impl BatcherStats {
+    pub fn mean_batch(&self) -> f64 {
+        self.requests as f64 / (self.batches as f64).max(1.0)
+    }
+}
+
+/// The micro-batching queue over a [`Registry`] and a shared
+/// [`ThreadPool`].
+pub struct Batcher {
+    registry: Arc<Registry>,
+    pool: Arc<ThreadPool>,
+    policy: BatchPolicy,
+    queues: Mutex<BTreeMap<String, ModelQueue>>,
+    next_window: AtomicU64,
+    stats: Arc<Mutex<BatcherStats>>,
+}
+
+impl Batcher {
+    pub fn new(registry: Arc<Registry>, pool: Arc<ThreadPool>, policy: BatchPolicy) -> Batcher {
+        Batcher {
+            registry,
+            pool,
+            policy,
+            queues: Mutex::new(BTreeMap::new()),
+            next_window: AtomicU64::new(0),
+            stats: Arc::new(Mutex::new(BatcherStats::default())),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Serve one prediction, blocking until its batch solves.  `budget`
+    /// is the request's total step-attempt bound (defaults to the
+    /// checkpoint's); shape and non-finite-input errors are rejected
+    /// here, before the request can join (and poison) a window.  A
+    /// request declaring a budget *below* the checkpoint default rides
+    /// alone: the batch solves under the minimum of its riders' budgets,
+    /// so an underfunded request must not drag a shared window down to a
+    /// bound the other riders never asked for.
+    pub fn submit(&self, model_id: &str, u0: Vec<f32>, budget: Option<u64>) -> Result<BatchReply> {
+        let model = self.registry.get(model_id)?;
+        let d = model.state_dim.ok_or_else(|| {
+            anyhow!(
+                "model {model_id:?} ({}) is not servable via the trajectory batcher",
+                model.model_name()
+            )
+        })?;
+        if u0.is_empty() || u0.len() != d {
+            anyhow::bail!(
+                "model {model_id:?} expects a {d}-dim initial state, got {} floats",
+                u0.len()
+            );
+        }
+        if !u0.iter().all(|v| v.is_finite()) {
+            anyhow::bail!(
+                "model {model_id:?}: initial state must be finite (got {u0:?})"
+            );
+        }
+        let default_budget = model.default_budget();
+        let budget = budget.unwrap_or(default_budget);
+        let coalescible = budget >= default_budget;
+        let (tx, rx) = mpsc::channel();
+
+        // Join the open window, or open a new one and become its leader.
+        // Underfunded requests always open (and close) their own window.
+        let lead = {
+            let mut queues = self.queues.lock().unwrap();
+            let q = queues.entry(model_id.to_string()).or_default();
+            let mut job = Some(Job { u0, budget, tx });
+            if coalescible {
+                if let Some(id) = q.open {
+                    if let Some(w) = q.windows.get_mut(&id) {
+                        if w.jobs.len() < self.policy.max_batch {
+                            w.jobs.push(job.take().unwrap());
+                        }
+                    }
+                }
+            }
+            match job {
+                None => None,
+                Some(job) => {
+                    let id = self.next_window.fetch_add(1, Ordering::Relaxed);
+                    q.windows.insert(id, Window { jobs: vec![job] });
+                    if coalescible {
+                        q.open = Some(id);
+                    }
+                    Some(id)
+                }
+            }
+        };
+
+        if let Some(window_id) = lead {
+            // Leader: hold the window open for followers, then close it
+            // and ship the batch to the pool (the leader's own reply
+            // arrives through its channel like everyone else's).  A solo
+            // (underfunded) window takes no followers, so it skips the
+            // coalescing wait entirely.
+            if coalescible {
+                std::thread::sleep(self.policy.max_wait);
+            }
+            let jobs = {
+                let mut queues = self.queues.lock().unwrap();
+                let q = queues.get_mut(model_id).unwrap();
+                if q.open == Some(window_id) {
+                    q.open = None;
+                }
+                let window = q.windows.remove(&window_id);
+                window.map(|w| w.jobs).unwrap_or_default()
+            };
+            if !jobs.is_empty() {
+                let stats = Arc::clone(&self.stats);
+                self.pool.execute(move || execute_batch(model, jobs, stats));
+            }
+        }
+
+        rx.recv()
+            .map_err(|_| anyhow!("batch executor dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+/// Run one window's batch as a single row-batched solve and route each
+/// trajectory back to its requester.  On failure every rider of *this*
+/// batch gets the error; nothing else is affected.
+fn execute_batch(model: Arc<ServableModel>, jobs: Vec<Job>, stats: Arc<Mutex<BatcherStats>>) {
+    let b = jobs.len();
+    let d = jobs[0].u0.len();
+    let mut u0s = Vec::with_capacity(b * d);
+    for job in &jobs {
+        u0s.extend_from_slice(&job.u0);
+    }
+    // The batch solves under the tightest rider's budget: no request can
+    // be made to exceed the bound it declared (admission control counts
+    // the same unit).
+    let budget = jobs.iter().map(|j| j.budget).min().unwrap_or(u64::MAX);
+
+    match model.predict_batch(&u0s, budget) {
+        Ok((trajs, solve_stats)) => {
+            record(&stats, b, &solve_stats);
+            for (job, traj) in jobs.into_iter().zip(trajs) {
+                let _ = job.tx.send(Ok(BatchReply {
+                    traj,
+                    nfe: solve_stats.nfe,
+                    naccept: solve_stats.naccept,
+                    nreject: solve_stats.nreject,
+                    batch: b,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for job in jobs {
+                let _ = job.tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+fn record(stats: &Mutex<BatcherStats>, batch: usize, solve: &Stats) {
+    let mut s = stats.lock().unwrap();
+    s.batches += 1;
+    s.requests += batch as u64;
+    s.max_batch = s.max_batch.max(batch);
+    s.nfe_total += solve.nfe;
+}

@@ -1,0 +1,401 @@
+//! Versioned serving checkpoints: persist a trained model, bit-exactly.
+//!
+//! A checkpoint is the durable form of a [`runtime::ExportedState`]
+//! (`runtime::Backend::export_state`) plus the coordinator-owned serving
+//! metadata: the experiment id, the method label the model was trained
+//! with, and the fixed serving grid the batcher coalesces requests over.
+//! The on-disk format is a single JSON object (written with
+//! [`util::json`], std-only — no serde):
+//!
+//! ```json
+//! {
+//!   "schema": "regnde-checkpoint",
+//!   "version": 1,
+//!   "model": "spiral_node",            // backend model name
+//!   "experiment": "spiral-node",       // coordinator experiment id
+//!   "method": "ERNODE",                // method label (informational)
+//!   "solver": "tsit5",                 // Tableau name
+//!   "train_tol": 1e-4,
+//!   "predict_tol": 1e-6,
+//!   "step_budget": 8192,               // default Total attempt budget
+//!   "params_len": 354,
+//!   "params_hex": "9a99...",           // f32 LE bytes, 8 hex chars each
+//!   "hyper": { "lr": 0.02, ... },
+//!   "ts": [0.0, 0.05, ...]             // serving grid (trajectory models)
+//! }
+//! ```
+//!
+//! Parameters are stored as **hex-encoded little-endian f32 bytes**, not
+//! decimal numbers, so `save → load` round-trips every bit: a loaded
+//! model's `predict` is bit-identical to the in-memory model's
+//! (`tests/serve_checkpoint.rs` proves it on all five experiment model
+//! shapes).  Loading never panics on bad input — malformed, truncated
+//! and wrong-version files all surface as a typed [`CheckpointError`].
+//!
+//! [`runtime::ExportedState`]: crate::runtime::ExportedState
+//! [`util::json`]: crate::util::json
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::runtime::ExportedState;
+use crate::util::json::{obj, Json};
+
+/// Current checkpoint format version (the `version` field).
+pub const CHECKPOINT_VERSION: u64 = 1;
+/// The `schema` tag every checkpoint carries.
+pub const CHECKPOINT_SCHEMA: &str = "regnde-checkpoint";
+
+/// Typed checkpoint load/decode failure — every malformed input lands on
+/// one of these variants instead of a panic.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem failure (missing file, permissions, ...).
+    Io(std::io::Error),
+    /// The file is not valid JSON (including truncated files).
+    Parse(String),
+    /// Valid JSON, but not a checkpoint (`schema` mismatch).
+    WrongSchema(String),
+    /// A checkpoint from an incompatible format version.
+    WrongVersion { found: u64, want: u64 },
+    /// Structurally invalid checkpoint: missing/ill-typed fields, bad
+    /// hex, or a parameter count that contradicts `params_len`.
+    Malformed(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CheckpointError::Parse(e) => write!(f, "checkpoint is not valid JSON: {e}"),
+            CheckpointError::WrongSchema(s) => {
+                write!(f, "not a checkpoint (schema {s:?}, want {CHECKPOINT_SCHEMA:?})")
+            }
+            CheckpointError::WrongVersion { found, want } => {
+                write!(f, "checkpoint version {found} unsupported (this build reads {want})")
+            }
+            CheckpointError::Malformed(m) => write!(f, "malformed checkpoint: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// A persisted trained model: the backend-exported state plus the
+/// coordinator-owned serving metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// The backend half (model name, params, solver, tolerances, budget,
+    /// hyper block).
+    pub state: ExportedState,
+    /// Coordinator experiment id (`spiral-node`, ...).
+    pub experiment: String,
+    /// Method label the model was trained with (informational).
+    pub method: String,
+    /// Fixed serving grid for trajectory models (`serve::batcher`
+    /// coalesces requests over this shared grid); empty for model kinds
+    /// without a single-trajectory serving path.
+    pub ts: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn new(
+        state: ExportedState,
+        experiment: impl Into<String>,
+        method: impl Into<String>,
+        ts: Vec<f32>,
+    ) -> Checkpoint {
+        Checkpoint {
+            state,
+            experiment: experiment.into(),
+            method: method.into(),
+            ts,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut hyper = BTreeMap::new();
+        for (k, &v) in &self.state.hyper {
+            hyper.insert(k.clone(), Json::from(v));
+        }
+        let mut ts = Vec::with_capacity(self.ts.len());
+        for &t in &self.ts {
+            ts.push(Json::from(t as f64));
+        }
+        obj([
+            ("schema", Json::from(CHECKPOINT_SCHEMA)),
+            ("version", Json::from(CHECKPOINT_VERSION as usize)),
+            ("model", Json::from(self.state.model.as_str())),
+            ("experiment", Json::from(self.experiment.as_str())),
+            ("method", Json::from(self.method.as_str())),
+            ("solver", Json::from(self.state.solver.as_str())),
+            ("train_tol", Json::from(self.state.train_tol)),
+            ("predict_tol", Json::from(self.state.predict_tol)),
+            ("step_budget", Json::from(self.state.step_budget as usize)),
+            ("params_len", Json::from(self.state.params.len())),
+            ("params_hex", Json::from(encode_f32_hex(&self.state.params))),
+            ("hyper", Json::Obj(hyper)),
+            ("ts", Json::Arr(ts)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint, CheckpointError> {
+        let str_field = |key: &str| -> Result<String, CheckpointError> {
+            field(j, key)?
+                .as_str()
+                .map(str::to_string)
+                .map_err(|_| CheckpointError::Malformed(format!("field {key:?} must be a string")))
+        };
+        let num_field = |key: &str| -> Result<f64, CheckpointError> {
+            field(j, key)?
+                .as_f64()
+                .map_err(|_| CheckpointError::Malformed(format!("field {key:?} must be a number")))
+        };
+
+        let schema = str_field("schema")?;
+        if schema != CHECKPOINT_SCHEMA {
+            return Err(CheckpointError::WrongSchema(schema));
+        }
+        let version = num_field("version")? as u64;
+        if version != CHECKPOINT_VERSION {
+            return Err(CheckpointError::WrongVersion {
+                found: version,
+                want: CHECKPOINT_VERSION,
+            });
+        }
+
+        let params_len = num_field("params_len")? as usize;
+        let params = decode_f32_hex(&str_field("params_hex")?)?;
+        if params.len() != params_len {
+            return Err(CheckpointError::Malformed(format!(
+                "params_hex decodes to {} parameters but params_len says {params_len}",
+                params.len()
+            )));
+        }
+
+        let mut hyper = BTreeMap::new();
+        if let Some(h) = j.opt("hyper") {
+            let map = h.as_obj().map_err(|_| {
+                CheckpointError::Malformed("field \"hyper\" must be an object".into())
+            })?;
+            for (k, v) in map {
+                let v = v.as_f64().map_err(|_| {
+                    CheckpointError::Malformed(format!("hyper entry {k:?} must be a number"))
+                })?;
+                hyper.insert(k.clone(), v);
+            }
+        }
+
+        let mut ts = Vec::new();
+        if let Some(t) = j.opt("ts") {
+            let arr = t
+                .as_arr()
+                .map_err(|_| CheckpointError::Malformed("field \"ts\" must be an array".into()))?;
+            for v in arr {
+                let v = v.as_f64().map_err(|_| {
+                    CheckpointError::Malformed("ts entries must be numbers".into())
+                })?;
+                ts.push(v as f32);
+            }
+        }
+
+        Ok(Checkpoint {
+            state: ExportedState {
+                model: str_field("model")?,
+                params,
+                solver: str_field("solver")?,
+                train_tol: num_field("train_tol")?,
+                predict_tol: num_field("predict_tol")?,
+                step_budget: num_field("step_budget")? as u64,
+                hyper,
+            },
+            experiment: str_field("experiment")?,
+            method: str_field("method")?,
+            ts,
+        })
+    }
+
+    /// Write the checkpoint to `path` (pretty JSON; parent directories
+    /// are created).
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Read and decode a checkpoint.  Never panics: every failure mode is
+    /// a typed [`CheckpointError`].
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| CheckpointError::Parse(e.to_string()))?;
+        Checkpoint::from_json(&j)
+    }
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, CheckpointError> {
+    j.opt(key)
+        .ok_or_else(|| CheckpointError::Malformed(format!("missing field {key:?}")))
+}
+
+/// Encode f32s as lowercase hex of their little-endian bytes (8 chars
+/// per value) — decimal-free, so round-trips are bit-exact by
+/// construction.
+pub fn encode_f32_hex(values: &[f32]) -> String {
+    let mut s = String::with_capacity(values.len() * 8);
+    for v in values {
+        for b in v.to_le_bytes() {
+            let _ = write!(s, "{b:02x}");
+        }
+    }
+    s
+}
+
+/// Decode [`encode_f32_hex`] output; rejects odd lengths, partial values
+/// and non-hex characters with a typed error.
+pub fn decode_f32_hex(hex: &str) -> Result<Vec<f32>, CheckpointError> {
+    let bytes = hex.as_bytes();
+    if bytes.len() % 8 != 0 {
+        return Err(CheckpointError::Malformed(format!(
+            "params_hex length {} is not a multiple of 8 (truncated?)",
+            bytes.len()
+        )));
+    }
+    let nib = |c: u8| -> Result<u8, CheckpointError> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(CheckpointError::Malformed(format!(
+                "params_hex contains non-hex byte {:?}",
+                c as char
+            ))),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 8);
+    for chunk in bytes.chunks_exact(8) {
+        let mut le = [0u8; 4];
+        for (i, pair) in chunk.chunks_exact(2).enumerate() {
+            le[i] = (nib(pair[0])? << 4) | nib(pair[1])?;
+        }
+        out.push(f32::from_le_bytes(le));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> ExportedState {
+        ExportedState {
+            model: "spiral_node".into(),
+            params: vec![1.5, -0.25, f32::MIN_POSITIVE, 3.14159e-7, -0.0],
+            solver: "tsit5".into(),
+            train_tol: 1e-4,
+            predict_tol: 1e-6,
+            step_budget: 8192,
+            hyper: [("lr".to_string(), 0.02)].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn hex_codec_is_bit_exact() {
+        let vals = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            1.0e-45, // subnormal
+            core::f32::consts::PI,
+        ];
+        let hex = encode_f32_hex(&vals);
+        assert_eq!(hex.len(), vals.len() * 8);
+        let back = decode_f32_hex(&hex).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost bits");
+        }
+    }
+
+    #[test]
+    fn hex_codec_rejects_garbage() {
+        assert!(matches!(
+            decode_f32_hex("0011223"),
+            Err(CheckpointError::Malformed(_))
+        ));
+        assert!(matches!(
+            decode_f32_hex("0011223g"),
+            Err(CheckpointError::Malformed(_))
+        ));
+        assert!(decode_f32_hex("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![0.0, 0.5, 1.0]);
+        let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back, ck);
+        // Through the textual form too (what save/load really exercise).
+        let text = ck.to_json().to_string_pretty();
+        let back = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        for (a, b) in ck.state.params.iter().zip(&back.state.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.ts, ck.ts);
+    }
+
+    #[test]
+    fn wrong_schema_and_version_are_typed() {
+        let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![]);
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::from("not-a-checkpoint"));
+        }
+        assert!(matches!(
+            Checkpoint::from_json(&j),
+            Err(CheckpointError::WrongSchema(_))
+        ));
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::from(99usize));
+        }
+        assert!(matches!(
+            Checkpoint::from_json(&j),
+            Err(CheckpointError::WrongVersion { found: 99, .. })
+        ));
+    }
+
+    #[test]
+    fn missing_and_inconsistent_fields_are_malformed() {
+        let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![]);
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("params_hex");
+        }
+        assert!(matches!(
+            Checkpoint::from_json(&j),
+            Err(CheckpointError::Malformed(_))
+        ));
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("params_len".into(), Json::from(77usize));
+        }
+        assert!(matches!(
+            Checkpoint::from_json(&j),
+            Err(CheckpointError::Malformed(_))
+        ));
+    }
+}

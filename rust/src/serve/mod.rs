@@ -1,0 +1,62 @@
+//! Inference serving: checkpoints, a model registry, and a
+//! micro-batching NFE-aware prediction server.
+//!
+//! The paper's pitch is cheap *prediction* — regularizing the solver's
+//! internal cost heuristics so the trained NDE needs fewer function
+//! evaluations at inference time.  This subsystem is where that saving
+//! is cashed out as serving capacity: a trained `NativeBackend` model is
+//! persisted, reloaded bit-exactly, and served over TCP with concurrent
+//! requests coalesced into row-batched solves, so fewer accepted steps
+//! per solve directly means more requests per core.  Four layers
+//! (DESIGN.md §Serving):
+//!
+//! * [`checkpoint`] — the durable model format: a versioned, std-only
+//!   JSON file wrapping [`runtime::Backend::export_state`]'s
+//!   [`ExportedState`] (experiment id, method label, tableau name,
+//!   tolerances, step budget, hyper block) with the flat f32 parameters
+//!   **hex-encoded for bit-exactness** — `save → load → predict` is
+//!   bit-identical to the in-memory model (`tests/serve_checkpoint.rs`
+//!   pins all five experiment model shapes).  Malformed, truncated and
+//!   wrong-version files decode to a typed [`CheckpointError`], never a
+//!   panic.  Produced by `regnde run/train … --checkpoint <path>`.
+//! * [`registry`] — a thread-safe id → model map with lazy loading from
+//!   a checkpoint directory: each [`ServableModel`] holds the decoded
+//!   checkpoint, a backend reconstructed with the checkpoint's solver,
+//!   and the validated parameter vector, shared via `Arc` across every
+//!   connection.
+//! * [`batcher`] — the micro-batching queue: concurrent predict requests
+//!   for the same model join a leader/follower *window*
+//!   ([`BatchPolicy`]: `max_batch`, `max_wait`), and each closed window
+//!   becomes **one** row-batched `drive()` solve
+//!   (`NativeBackend::predict_traj_batch`) on the shared
+//!   [`util::threadpool::ThreadPool`].  Replies carry the batch solve's
+//!   `Stats` — per-request NFE accounting — and a failing solve fails
+//!   only its own window's requests.
+//! * [`protocol`] / [`server`] — line-delimited JSON over TCP
+//!   (`std::net`, no new deps): `regnde serve --registry <dir> --addr
+//!   <a>` hosts it, `regnde predict --addr <a> --model <id>` consumes
+//!   it, and per-connection **NFE-budget admission control** rejects
+//!   requests whose declared `StepBudget::Total` would exceed the
+//!   connection's remaining quota ([`ServerOpts::nfe_quota`]).
+//!
+//! Latency/throughput/NFE-per-request numbers are tracked by
+//! `benches/bench_serving.rs` (`BENCH_serving.json`, schema in DESIGN.md
+//! §Serving), which serves a vanilla and an `ernode` checkpoint over
+//! loopback and reports the regularized model's requests-per-second
+//! advantage.
+//!
+//! [`ExportedState`]: crate::runtime::ExportedState
+//! [`runtime::Backend::export_state`]: crate::runtime::Backend::export_state
+//! [`util::threadpool::ThreadPool`]: crate::util::threadpool::ThreadPool
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{BatchPolicy, BatchReply, Batcher, BatcherStats};
+pub use checkpoint::{Checkpoint, CheckpointError};
+pub use protocol::{Request, Response};
+pub use registry::{Registry, ServableModel};
+pub use server::{Client, Server, ServerOpts};

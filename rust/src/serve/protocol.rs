@@ -1,0 +1,341 @@
+//! Wire protocol of the prediction server: line-delimited JSON over TCP.
+//!
+//! One request per line, one response per line, both UTF-8 JSON objects
+//! (`std::net` + [`util::json`] — no new dependencies).  Grammar
+//! (documented normatively in DESIGN.md §Serving):
+//!
+//! ```text
+//! request  := predict | list | stats | shutdown
+//! predict  := {"op":"predict","model":<id>,"u0":[f32...][,"budget":<attempts>]}
+//! list     := {"op":"list"}
+//! stats    := {"op":"stats"}
+//! shutdown := {"op":"shutdown"}
+//!
+//! response := ok | error
+//! error    := {"ok":false,"error":<string>}
+//! ok       := {"ok":true, ...op-specific fields...}
+//!   predict: "model","traj":[f32...],"nfe","naccept","nreject","batch","micros"
+//!   list:    "models":[<id>...]
+//!   stats:   "batches","requests","mean_batch","max_batch","nfe_total"
+//!   shutdown:"closing":true
+//! ```
+//!
+//! `budget` is the request's **total step-attempt bound**
+//! (`StepBudget::Total`) and doubles as the admission-control unit: the
+//! server rejects a predict whose declared budget exceeds the
+//! connection's remaining NFE quota (DESIGN.md §Serving).  Responses
+//! report realized solver work (`nfe`, `naccept`, `nreject`) of the
+//! batch solve that served the request, plus the coalesced batch size.
+//!
+//! [`util::json`]: crate::util::json
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::{BatcherStats, BatchReply};
+use crate::util::json::{obj, Json};
+
+/// A client request (one JSON line).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Predict {
+        model: String,
+        u0: Vec<f32>,
+        /// Total step-attempt budget; `None` uses the checkpoint default.
+        budget: Option<u64>,
+    },
+    List,
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Predict { model, u0, budget } => {
+                let mut fields = vec![
+                    ("op", Json::from("predict")),
+                    ("model", Json::from(model.as_str())),
+                    ("u0", f32_arr(u0)),
+                ];
+                if let Some(b) = budget {
+                    fields.push(("budget", Json::from(*b as usize)));
+                }
+                obj(fields)
+            }
+            Request::List => obj([("op", Json::from("list"))]),
+            Request::Stats => obj([("op", Json::from("stats"))]),
+            Request::Shutdown => obj([("op", Json::from("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        match j.get("op")?.as_str()? {
+            "predict" => {
+                let model = j.get("model").context("predict needs a model id")?;
+                Ok(Request::Predict {
+                    model: model.as_str()?.to_string(),
+                    u0: parse_f32_arr(j.get("u0").context("predict needs u0")?)?,
+                    budget: match j.opt("budget") {
+                        Some(b) => Some(b.as_f64()? as u64),
+                        None => None,
+                    },
+                })
+            }
+            "list" => Ok(Request::List),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown op {other:?} (predict|list|stats|shutdown)"),
+        }
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn decode(line: &str) -> Result<Request> {
+        Request::from_json(&Json::parse(line)?)
+    }
+}
+
+/// A server response (one JSON line).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Predict {
+        model: String,
+        traj: Vec<f32>,
+        nfe: u64,
+        naccept: u64,
+        nreject: u64,
+        batch: usize,
+        /// Server-side latency of this request, microseconds.
+        micros: u64,
+    },
+    List {
+        models: Vec<String>,
+    },
+    Stats {
+        batches: u64,
+        requests: u64,
+        mean_batch: f64,
+        max_batch: usize,
+        nfe_total: u64,
+    },
+    Shutdown,
+    Error(String),
+}
+
+impl Response {
+    pub fn predict(model: &str, reply: &BatchReply, micros: u64) -> Response {
+        Response::Predict {
+            model: model.to_string(),
+            traj: reply.traj.clone(),
+            nfe: reply.nfe,
+            naccept: reply.naccept,
+            nreject: reply.nreject,
+            batch: reply.batch,
+            micros,
+        }
+    }
+
+    pub fn stats(s: &BatcherStats) -> Response {
+        Response::Stats {
+            batches: s.batches,
+            requests: s.requests,
+            mean_batch: s.mean_batch(),
+            max_batch: s.max_batch,
+            nfe_total: s.nfe_total,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Predict {
+                model,
+                traj,
+                nfe,
+                naccept,
+                nreject,
+                batch,
+                micros,
+            } => obj([
+                ("ok", Json::from(true)),
+                ("model", Json::from(model.as_str())),
+                ("traj", f32_arr(traj)),
+                ("nfe", Json::from(*nfe as usize)),
+                ("naccept", Json::from(*naccept as usize)),
+                ("nreject", Json::from(*nreject as usize)),
+                ("batch", Json::from(*batch)),
+                ("micros", Json::from(*micros as usize)),
+            ]),
+            Response::List { models } => {
+                let mut ids = Vec::with_capacity(models.len());
+                for m in models {
+                    ids.push(Json::from(m.as_str()));
+                }
+                obj([("ok", Json::from(true)), ("models", Json::Arr(ids))])
+            }
+            Response::Stats {
+                batches,
+                requests,
+                mean_batch,
+                max_batch,
+                nfe_total,
+            } => obj([
+                ("ok", Json::from(true)),
+                ("batches", Json::from(*batches as usize)),
+                ("requests", Json::from(*requests as usize)),
+                ("mean_batch", Json::from(*mean_batch)),
+                ("max_batch", Json::from(*max_batch)),
+                ("nfe_total", Json::from(*nfe_total as usize)),
+            ]),
+            Response::Shutdown => obj([("ok", Json::from(true)), ("closing", Json::from(true))]),
+            Response::Error(e) => {
+                obj([("ok", Json::from(false)), ("error", Json::Str(e.clone()))])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
+        if !j.get("ok")?.as_bool()? {
+            return Ok(Response::Error(j.get("error")?.as_str()?.to_string()));
+        }
+        if let Some(arr) = j.opt("models") {
+            let mut models = Vec::new();
+            for m in arr.as_arr()? {
+                models.push(m.as_str()?.to_string());
+            }
+            return Ok(Response::List { models });
+        }
+        if j.opt("closing").is_some() {
+            return Ok(Response::Shutdown);
+        }
+        if let Some(traj) = j.opt("traj") {
+            return Ok(Response::Predict {
+                model: j.get("model")?.as_str()?.to_string(),
+                traj: parse_f32_arr(traj)?,
+                nfe: j.get("nfe")?.as_f64()? as u64,
+                naccept: j.get("naccept")?.as_f64()? as u64,
+                nreject: j.get("nreject")?.as_f64()? as u64,
+                batch: j.get("batch")?.as_usize()?,
+                micros: j.get("micros")?.as_f64()? as u64,
+            });
+        }
+        Ok(Response::Stats {
+            batches: j.get("batches")?.as_f64()? as u64,
+            requests: j.get("requests")?.as_f64()? as u64,
+            mean_batch: j.get("mean_batch")?.as_f64()?,
+            max_batch: j.get("max_batch")?.as_usize()?,
+            nfe_total: j.get("nfe_total")?.as_f64()? as u64,
+        })
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn decode(line: &str) -> Result<Response> {
+        Response::from_json(&Json::parse(line)?)
+    }
+}
+
+/// f32 values as a JSON array.  `f64` formatting in [`util::json`] uses
+/// the shortest round-trippable decimal form, and every f32 widens to an
+/// exactly-representable f64, so `f32 -> wire -> f32` is bit-exact.
+///
+/// [`util::json`]: crate::util::json
+fn f32_arr(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::from(x as f64)).collect())
+}
+
+fn parse_f32_arr(j: &Json) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for v in j.as_arr()? {
+        out.push(v.as_f64()? as f32);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Predict {
+                model: "spiral-er".into(),
+                u0: vec![2.0, -0.5],
+                budget: Some(4096),
+            },
+            Request::Predict {
+                model: "m".into(),
+                u0: vec![1.0],
+                budget: None,
+            },
+            Request::List,
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r, "{r:?}");
+        }
+        assert!(Request::decode("{\"op\":\"frobnicate\"}").is_err());
+        assert!(Request::decode("not json").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_is_f32_exact() {
+        let resp = Response::Predict {
+            model: "spiral-er".into(),
+            traj: vec![2.0, -0.0, 1.9375, -0.123456789, f32::MIN_POSITIVE],
+            nfe: 433,
+            naccept: 72,
+            nreject: 0,
+            batch: 7,
+            micros: 1234,
+        };
+        let back = Response::decode(&resp.encode()).unwrap();
+        match (&resp, &back) {
+            (Response::Predict { traj: a, .. }, Response::Predict { traj: b, .. }) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "wire must not perturb f32 bits");
+                }
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn other_responses_roundtrip() {
+        for r in [
+            Response::List {
+                models: vec!["a".into(), "b".into()],
+            },
+            Response::Stats {
+                batches: 3,
+                requests: 17,
+                mean_batch: 17.0 / 3.0,
+                max_batch: 9,
+                nfe_total: 999,
+            },
+            Response::Shutdown,
+            Response::Error("nope".into()),
+        ] {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn wire_lines_are_single_line() {
+        let r = Request::Predict {
+            model: "m".into(),
+            u0: vec![1.0, 2.0],
+            budget: None,
+        };
+        assert!(!r.encode().contains('\n'));
+        assert!(!Response::Error("x\ny".into()).encode().contains('\n'));
+    }
+}

@@ -1,0 +1,259 @@
+//! Thread-safe in-memory model registry with lazy checkpoint loading.
+//!
+//! The registry maps **model ids** (the checkpoint file stem, e.g.
+//! `spiral-er` for `spiral-er.json`) to loaded [`ServableModel`]s: the
+//! decoded checkpoint, a [`NativeBackend`] reconstructed with the
+//! checkpoint's solver, and the validated parameter vector — everything
+//! a predict request needs, resolved once.  Loading is lazy: opening a
+//! registry directory only indexes the ids; a checkpoint is parsed,
+//! validated (`Backend::import_state`) and cached on the first request
+//! that names it, and every later request shares the same
+//! `Arc<ServableModel>`.
+//!
+//! The native backend has no JIT, so "warming" a model is cheap: the
+//! load step parses the solver name, decodes the hex parameter block and
+//! resolves the serving state width up front — a served request performs
+//! no per-request validation beyond its own input shape.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::checkpoint::Checkpoint;
+use crate::runtime::state::Metrics;
+use crate::runtime::{Backend, NativeBackend, TrainData};
+use crate::solvers::ode::Stats;
+
+/// One loaded checkpoint, ready to serve.
+pub struct ServableModel {
+    /// Registry id (checkpoint file stem).
+    pub id: String,
+    /// The decoded checkpoint (metadata + serving grid).
+    pub checkpoint: Checkpoint,
+    /// State width of the single-trajectory serving path; `None` for
+    /// model kinds the batcher cannot row-batch.
+    pub state_dim: Option<usize>,
+    backend: NativeBackend,
+    params: Vec<f32>,
+}
+
+impl ServableModel {
+    /// Validate a checkpoint into a servable model: reconstruct the
+    /// backend with the checkpoint's solver, import the parameters, and
+    /// resolve the serving width.
+    pub fn from_checkpoint(id: impl Into<String>, checkpoint: Checkpoint) -> Result<ServableModel> {
+        let id = id.into();
+        let backend = NativeBackend::new()
+            .with_solver(&checkpoint.state.solver)
+            .with_context(|| format!("model {id:?}: bad solver in checkpoint"))?;
+        let params = backend
+            .import_state(&checkpoint.state)
+            .with_context(|| format!("model {id:?}: checkpoint rejected"))?;
+        let state_dim = backend.traj_state_dim(&checkpoint.state.model).ok();
+        if state_dim.is_some() && checkpoint.ts.len() < 2 {
+            bail!(
+                "model {id:?}: trajectory checkpoint needs a serving grid \
+                 of >= 2 points (got {})",
+                checkpoint.ts.len()
+            );
+        }
+        Ok(ServableModel {
+            id,
+            checkpoint,
+            state_dim,
+            backend,
+            params,
+        })
+    }
+
+    /// Backend model name this checkpoint reconstructs.
+    pub fn model_name(&self) -> &str {
+        &self.checkpoint.state.model
+    }
+
+    /// The validated flat parameter vector (bit-exact from the
+    /// checkpoint).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Default total step-attempt budget of a served solve.
+    pub fn default_budget(&self) -> u64 {
+        self.checkpoint.state.step_budget
+    }
+
+    /// Full-fidelity single-request inference (any model kind).
+    pub fn predict(&self, data: &TrainData, seed: u32) -> Result<(Vec<f32>, Metrics)> {
+        self.backend
+            .predict(self.model_name(), &self.params, data, seed)
+    }
+
+    /// The serving hot path: one row-batched `drive()` over the
+    /// checkpoint's grid for `B` coalesced requests
+    /// (`NativeBackend::predict_traj_batch`).  Errors if this model kind
+    /// is not row-batchable or the solve fails (budget exhausted /
+    /// non-finite state) — the batcher maps that error onto exactly the
+    /// requests that rode this batch.
+    pub fn predict_batch(&self, u0s: &[f32], budget: u64) -> Result<(Vec<Vec<f32>>, Stats)> {
+        if self.state_dim.is_none() {
+            bail!(
+                "model {:?} ({}) is not servable via the trajectory batcher",
+                self.id,
+                self.model_name()
+            );
+        }
+        let (trajs, stats, ok) = self.backend.predict_traj_batch(
+            self.model_name(),
+            &self.params,
+            u0s,
+            &self.checkpoint.ts,
+            Some(budget),
+        )?;
+        if !ok {
+            bail!(
+                "solve failed for model {:?} (step budget {budget} exhausted \
+                 or non-finite state)",
+                self.id
+            );
+        }
+        Ok((trajs, stats))
+    }
+}
+
+/// Thread-safe id → model map with lazy loading from a checkpoint
+/// directory.
+pub struct Registry {
+    dir: Option<PathBuf>,
+    models: Mutex<BTreeMap<String, Arc<ServableModel>>>,
+}
+
+impl Registry {
+    /// Open a checkpoint directory (`<id>.json` files).  The directory
+    /// must exist; checkpoints are indexed now but parsed lazily.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            bail!("registry directory {dir:?} does not exist");
+        }
+        Ok(Registry {
+            dir: Some(dir),
+            models: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// A registry with no backing directory (models arrive via
+    /// [`Registry::insert`] — tests and in-process serving).
+    pub fn in_memory() -> Registry {
+        Registry {
+            dir: None,
+            models: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Validate and register a checkpoint under `id`, replacing any
+    /// previous model with that id.
+    pub fn insert(&self, id: &str, checkpoint: Checkpoint) -> Result<Arc<ServableModel>> {
+        let model = Arc::new(ServableModel::from_checkpoint(id, checkpoint)?);
+        self.models
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// Fetch a model, lazily loading `<dir>/<id>.json` on first use.
+    pub fn get(&self, id: &str) -> Result<Arc<ServableModel>> {
+        if let Some(m) = self.models.lock().unwrap().get(id) {
+            return Ok(Arc::clone(m));
+        }
+        // Load outside the lock (checkpoint decode can be slow); a
+        // concurrent first-load of the same id is harmless — last insert
+        // wins and both Arcs serve identical bits.
+        let dir = self.dir.as_ref().ok_or_else(|| {
+            anyhow!("unknown model {id:?} (in-memory registry has: {:?})", self.ids())
+        })?;
+        let path = dir.join(format!("{id}.json"));
+        if !path.is_file() {
+            bail!("unknown model {id:?} (no {path:?}; registry has: {:?})", self.ids());
+        }
+        let ckpt = Checkpoint::load(&path)
+            .map_err(|e| anyhow!("loading model {id:?} from {path:?}: {e}"))?;
+        let model = Arc::new(ServableModel::from_checkpoint(id, ckpt)?);
+        self.models
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// Every servable id: loaded models plus on-disk checkpoints not yet
+    /// touched.
+    pub fn ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        if let Some(dir) = &self.dir {
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for entry in entries.flatten() {
+                    let path = entry.path();
+                    if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                        if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                            if !ids.iter().any(|i| i == stem) {
+                                ids.push(stem.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        ids.sort();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spiral_checkpoint() -> Checkpoint {
+        let be = NativeBackend::new();
+        let params = be.init_params("spiral_node", 7).unwrap();
+        let state = be.export_state("spiral_node", &params).unwrap();
+        let ts: Vec<f32> = (0..8).map(|i| i as f32 / 7.0).collect();
+        Checkpoint::new(state, "spiral-node", "vanilla", ts)
+    }
+
+    #[test]
+    fn insert_get_and_ids() {
+        let reg = Registry::in_memory();
+        assert!(reg.get("nope").is_err());
+        reg.insert("spiral", spiral_checkpoint()).unwrap();
+        let m = reg.get("spiral").unwrap();
+        assert_eq!(m.model_name(), "spiral_node");
+        assert_eq!(m.state_dim, Some(2));
+        assert_eq!(reg.ids(), vec!["spiral".to_string()]);
+    }
+
+    #[test]
+    fn lazy_load_from_directory() {
+        let dir = std::env::temp_dir().join(format!("regnde-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        spiral_checkpoint().save(&dir.join("lazy.json")).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.ids(), vec!["lazy".to_string()]);
+        let a = reg.get("lazy").unwrap();
+        let b = reg.get("lazy").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must hit the cache");
+        assert!(reg.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trajectory_checkpoint_requires_a_grid() {
+        let be = NativeBackend::new();
+        let params = be.init_params("spiral_node", 7).unwrap();
+        let state = be.export_state("spiral_node", &params).unwrap();
+        let ck = Checkpoint::new(state, "spiral-node", "vanilla", vec![]);
+        assert!(ServableModel::from_checkpoint("bad", ck).is_err());
+    }
+}

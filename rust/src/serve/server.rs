@@ -1,0 +1,379 @@
+//! TCP prediction server + client: `regnde serve` / `regnde predict
+//! --addr`.
+//!
+//! A thin `std::net` loop around the [`Registry`] + [`Batcher`] core:
+//! one thread per connection, one [`protocol`] JSON line per request and
+//! response.  Concurrency therefore comes from *connections* — clients
+//! holding separate connections are what the batcher coalesces into
+//! row-batched solves.
+//!
+//! ## NFE-budget admission control
+//!
+//! Every connection starts with an **NFE quota** measured in solver step
+//! attempts ([`ServerOpts::nfe_quota`]) — the unit
+//! `StepBudget::Total` bounds, and `attempts × nfe_per_attempt` away
+//! from raw NFE.  A predict request declares a total attempt budget
+//! (defaulting to its checkpoint's `step_budget`); the server **rejects
+//! the request up front** if that declared budget exceeds the
+//! connection's remaining quota — a request that *could* exhaust the
+//! quota never reaches the solver.  After a served request, the quota is
+//! charged the *realized* attempts of its batch solve; a *failed* solve
+//! is charged the full declared budget (it may have burned all of it).
+//! Well-behaved cheap requests (the regularized-model case) therefore
+//! stretch the same quota further.
+//!
+//! [`protocol`]: super::protocol
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::Batcher;
+use super::protocol::{Request, Response};
+use super::registry::Registry;
+
+/// Per-server policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    /// Per-connection step-attempt quota (admission control unit).
+    pub nfe_quota: u64,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            nfe_quota: 1_000_000,
+        }
+    }
+}
+
+/// The prediction server: accept loop + per-connection protocol state.
+pub struct Server {
+    registry: Arc<Registry>,
+    batcher: Arc<Batcher>,
+    opts: ServerOpts,
+    shutdown: AtomicBool,
+}
+
+impl Server {
+    pub fn new(registry: Arc<Registry>, batcher: Arc<Batcher>, opts: ServerOpts) -> Server {
+        Server {
+            registry,
+            batcher,
+            opts,
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Serve until a `shutdown` request arrives.  Connections are one
+    /// thread each and are **not drained on shutdown**: this returns as
+    /// soon as the accept loop observes the flag, and a caller that then
+    /// exits the process (the CLI does) cuts any still-running
+    /// connection threads mid-request.  Callers needing a graceful drain
+    /// should stop sending first.
+    pub fn serve(self: &Arc<Self>, listener: TcpListener) -> Result<()> {
+        let addr = listener.local_addr()?;
+        for stream in listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let server = Arc::clone(self);
+            std::thread::spawn(move || server.handle_conn(stream, addr));
+        }
+        Ok(())
+    }
+
+    /// Bind `addr` and serve on a background thread; returns the bound
+    /// address (use port 0 for an ephemeral one).  The loopback path of
+    /// `benches/bench_serving.rs` and the serving tests.
+    pub fn spawn(
+        registry: Arc<Registry>,
+        batcher: Arc<Batcher>,
+        opts: ServerOpts,
+        addr: &str,
+    ) -> Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let bound = listener.local_addr()?;
+        let server = Arc::new(Server::new(registry, batcher, opts));
+        let handle = std::thread::spawn(move || {
+            let _ = server.serve(listener);
+        });
+        Ok((bound, handle))
+    }
+
+    fn handle_conn(&self, stream: TcpStream, server_addr: SocketAddr) {
+        let Ok(read_half) = stream.try_clone() else {
+            return;
+        };
+        let mut reader = BufReader::new(read_half);
+        let mut writer = stream;
+        // Fresh per-connection quota (admission control state).
+        let mut quota = self.opts.nfe_quota;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return, // client hung up
+                Ok(_) => {}
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (resp, closing) = match Request::decode(line.trim()) {
+                Ok(req) => self.process(req, &mut quota),
+                Err(e) => (Response::Error(format!("bad request: {e:#}")), false),
+            };
+            let mut out = resp.encode();
+            out.push('\n');
+            if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
+                return;
+            }
+            if closing {
+                self.shutdown.store(true, Ordering::SeqCst);
+                // Poke the accept loop so it observes the flag.
+                let _ = TcpStream::connect(server_addr);
+                return;
+            }
+        }
+    }
+
+    /// Execute one request against this connection's remaining `quota`.
+    /// Returns the response and whether the connection (and server) is
+    /// closing.  Factored off the socket so admission semantics are unit
+    /// testable.
+    pub fn process(&self, req: Request, quota: &mut u64) -> (Response, bool) {
+        match req {
+            Request::List => (
+                Response::List {
+                    models: self.registry.ids(),
+                },
+                false,
+            ),
+            Request::Stats => (Response::stats(&self.batcher.stats()), false),
+            Request::Shutdown => (Response::Shutdown, true),
+            Request::Predict { model, u0, budget } => {
+                // Admission: resolve the declared (or checkpoint-default)
+                // attempt budget and reject before solving if it could
+                // overrun this connection's remaining quota.
+                let declared = match budget {
+                    Some(b) => b,
+                    None => match self.registry.get(&model) {
+                        Ok(m) => m.default_budget(),
+                        Err(e) => return (Response::Error(format!("{e:#}")), false),
+                    },
+                };
+                if declared > *quota {
+                    return (
+                        Response::Error(format!(
+                            "admission rejected: request budget {declared} attempts \
+                             exceeds remaining connection quota {quota}"
+                        )),
+                        false,
+                    );
+                }
+                let t0 = Instant::now();
+                match self.batcher.submit(&model, u0, Some(declared)) {
+                    Ok(reply) => {
+                        // Charge the realized work of the batch solve.
+                        *quota = quota.saturating_sub(reply.naccept + reply.nreject);
+                        let micros = t0.elapsed().as_micros() as u64;
+                        (Response::predict(&model, &reply, micros), false)
+                    }
+                    Err(e) => {
+                        // A failed solve may still have burned solver
+                        // work (budget exhaustion burns *all* of it), and
+                        // the error path carries no Stats — charge the
+                        // declared budget so failing requests cannot loop
+                        // free solver CPU past the quota.
+                        *quota = quota.saturating_sub(declared);
+                        (Response::Error(format!("{e:#}")), false)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A client connection: one request/response exchange at a time over a
+/// persistent TCP stream (requests from the same `Client` are
+/// sequential; open several `Client`s to exercise the batcher).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            reader,
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        let mut line = req.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Response::decode(resp.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::checkpoint::Checkpoint;
+    use crate::util::threadpool::ThreadPool;
+    use std::time::Duration;
+
+    fn test_server(quota: u64) -> Arc<Server> {
+        let be = NativeBackend::new();
+        let params = be.init_params("spiral_node", 3).unwrap();
+        let state = be.export_state("spiral_node", &params).unwrap();
+        let ts: Vec<f32> = (0..6).map(|i| i as f32 / 5.0).collect();
+        let registry = Arc::new(Registry::in_memory());
+        registry
+            .insert("spiral", Checkpoint::new(state, "spiral-node", "vanilla", ts))
+            .unwrap();
+        let pool = Arc::new(ThreadPool::new(2));
+        let batcher = Arc::new(Batcher::new(
+            Arc::clone(&registry),
+            pool,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+            },
+        ));
+        Arc::new(Server::new(registry, batcher, ServerOpts { nfe_quota: quota }))
+    }
+
+    #[test]
+    fn admission_rejects_over_quota_and_charges_realized_attempts() {
+        let server = test_server(10_000);
+        let mut quota = server.opts.nfe_quota;
+
+        // Declared budget above the quota: rejected up front.
+        let (resp, _) = server.process(
+            Request::Predict {
+                model: "spiral".into(),
+                u0: vec![2.0, 0.0],
+                budget: Some(20_000),
+            },
+            &mut quota,
+        );
+        assert!(matches!(&resp, Response::Error(e) if e.contains("admission")));
+        assert_eq!(quota, 10_000, "rejected requests must not be charged");
+
+        // Within quota: served, and the realized attempts are deducted.
+        let (resp, closing) = server.process(
+            Request::Predict {
+                model: "spiral".into(),
+                u0: vec![2.0, 0.0],
+                budget: Some(9_000),
+            },
+            &mut quota,
+        );
+        assert!(!closing);
+        match resp {
+            Response::Predict { nfe, naccept, nreject, batch, ref traj, .. } => {
+                assert!(nfe > 0 && naccept > 0);
+                assert!(batch >= 1);
+                assert_eq!(traj.len(), 6 * 2);
+                assert_eq!(quota, 10_000 - (naccept + nreject));
+            }
+            other => panic!("expected predict response, got {other:?}"),
+        }
+
+        // Quota drains to the point of refusing the default budget.
+        quota = 5;
+        let (resp, _) = server.process(
+            Request::Predict {
+                model: "spiral".into(),
+                u0: vec![2.0, 0.0],
+                budget: None,
+            },
+            &mut quota,
+        );
+        assert!(matches!(&resp, Response::Error(e) if e.contains("admission")));
+    }
+
+    #[test]
+    fn list_stats_and_shutdown_ops() {
+        let server = test_server(1_000_000);
+        let mut quota = u64::MAX;
+        let (resp, _) = server.process(Request::List, &mut quota);
+        assert_eq!(
+            resp,
+            Response::List {
+                models: vec!["spiral".to_string()]
+            }
+        );
+        let (resp, closing) = server.process(Request::Shutdown, &mut quota);
+        assert_eq!(resp, Response::Shutdown);
+        assert!(closing);
+        let (resp, _) = server.process(Request::Stats, &mut quota);
+        assert!(matches!(resp, Response::Stats { .. }));
+    }
+
+    #[test]
+    fn loopback_end_to_end() {
+        let server = test_server(1_000_000);
+        let registry_models = server.registry.ids();
+        assert_eq!(registry_models, vec!["spiral".to_string()]);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let _ = server.serve(listener);
+            });
+        }
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let resp = client.request(&Request::List).unwrap();
+        assert_eq!(
+            resp,
+            Response::List {
+                models: vec!["spiral".to_string()]
+            }
+        );
+        let resp = client
+            .request(&Request::Predict {
+                model: "spiral".into(),
+                u0: vec![2.0, 0.0],
+                budget: None,
+            })
+            .unwrap();
+        match resp {
+            Response::Predict { ref traj, nfe, .. } => {
+                assert_eq!(traj.len(), 12);
+                assert!(nfe > 0, "NFE must be reported per response");
+                assert_eq!(traj[0], 2.0);
+                assert_eq!(traj[1], 0.0);
+            }
+            other => panic!("expected predict, got {other:?}"),
+        }
+        // Unknown model: typed error, connection stays usable.
+        let resp = client
+            .request(&Request::Predict {
+                model: "ghost".into(),
+                u0: vec![1.0, 1.0],
+                budget: None,
+            })
+            .unwrap();
+        assert!(matches!(resp, Response::Error(_)));
+        let resp = client.request(&Request::Shutdown).unwrap();
+        assert_eq!(resp, Response::Shutdown);
+    }
+}

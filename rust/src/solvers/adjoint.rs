@@ -872,7 +872,25 @@ fn sde_replay_visit(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solvers::ode::{solve_saveat_taped, OdeOptions};
+    use crate::solvers::driver::{Saveat, SolveOptions, StepBudget};
+    use crate::solvers::ode::{self, SolveOutcome};
+    use crate::solvers::system::OdeSystem;
+
+    /// Test shorthand: taped grid solve through the unified driver with
+    /// a total attempt budget (the training contract the old taped
+    /// entry point used).
+    fn solve_taped<F: FnMut(&[f64], f64, &mut [f64])>(
+        f: F,
+        z0: &[f64],
+        ts: &[f64],
+        opts: &SolveOptions,
+        total_budget: u64,
+        tape: &mut OdeTape,
+    ) -> (Vec<Vec<f64>>, SolveOutcome) {
+        let mut sys = OdeSystem(f);
+        let opts = opts.clone().with_budget(StepBudget::Total(total_budget));
+        ode::drive(&mut sys, z0, Saveat::Grid(ts), &opts, Some(tape), &mut [])
+    }
 
     /// Scalar linear ODE dz/dt = θ z with one parameter: the discrete
     /// adjoint must match central finite differences of the replayed
@@ -881,15 +899,10 @@ mod tests {
     fn linear_ode_param_gradient_matches_fd() {
         let theta = -0.7f64;
         let ts = [0.0, 0.4, 1.0];
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-8);
         let mut tape = OdeTape::new();
         let f = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = th * z[0];
-        let (zs, out) =
-            solve_saveat_taped(f(theta), &[1.0], &ts, &opts, 100_000, &mut tape);
+        let (zs, out) = solve_taped(f(theta), &[1.0], &ts, &opts, 100_000, &mut tape);
         assert!(out.success);
 
         // L = z(t2): cotangent 1 at the last save point.
@@ -938,17 +951,13 @@ mod tests {
     fn regularizer_gradient_matches_fd() {
         let theta = 1.3f64;
         let ts = [0.0, 1.0];
-        let opts = OdeOptions {
-            rtol: 1e-6,
-            atol: 1e-6,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-6);
         // Nonlinear dynamics so R_E actually depends on θ nontrivially.
         let f = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| {
             dz[0] = (th * z[0]).sin();
         };
         let mut tape = OdeTape::new();
-        let (_, out) = solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+        let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
         assert!(out.success && !tape.is_empty());
 
         let save_grads = vec![vec![0.0], vec![0.0]];
@@ -985,17 +994,13 @@ mod tests {
     fn stiffness_gradient_matches_fd() {
         let theta = 1.3f64;
         let ts = [0.0, 1.0];
-        let opts = OdeOptions {
-            rtol: 1e-6,
-            atol: 1e-6,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-6);
         // Nonlinear dynamics so R_S depends on θ nontrivially.
         let f = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| {
             dz[0] = (th * z[0]).sin();
         };
         let mut tape = OdeTape::new();
-        let (_, out) = solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+        let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
         assert!(out.success && !tape.is_empty());
 
         // Replay at the base point reproduces the forward accumulator
@@ -1113,7 +1118,8 @@ mod tests {
     /// nonnegative and the backward |h| scale matches FD.
     #[test]
     fn sde_reversed_time_step_keeps_r_e_nonnegative() {
-        use crate::solvers::sde::sde_solve_saveat_taped;
+        use crate::solvers::sde;
+        use crate::solvers::system::SdeSystem;
         let theta = 0.8f64;
         let sigma = 0.3f64;
         let drift = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| {
@@ -1161,22 +1167,24 @@ mod tests {
         // accumulators against each other: taped solve vs replay bits.
         let mut rng = crate::util::rng::Rng::new(3);
         let mut fwd_tape = SdeTape::new();
-        let opts = crate::solvers::sde::SdeOptions {
-            rtol: 1e-2,
-            atol: 1e-2,
-            ..Default::default()
-        };
-        let (_, stats, ok) = sde_solve_saveat_taped(
-            drift(theta),
+        let opts = SolveOptions::new()
+            .with_tolerance(1e-2)
+            .with_budget(StepBudget::Total(u64::MAX));
+        let mut sys = SdeSystem {
+            drift: drift(theta),
             diffusion,
+        };
+        let (_, fwd_out) = sde::drive(
+            &mut sys,
             &[1.0],
-            &[0.0, 0.5, 1.0],
+            Saveat::Grid(&[0.0, 0.5, 1.0]),
             &mut rng,
             &opts,
-            u64::MAX,
-            &mut fwd_tape,
+            Some(&mut fwd_tape),
+            &mut [],
         );
-        assert!(ok);
+        let stats = fwd_out.stats;
+        assert!(fwd_out.success);
         let (_, re_fwd, rs_fwd) = sde_replay(&fwd_tape, &[1.0], drift(theta), diffusion);
         assert!((re_fwd - stats.r_e).abs() <= 1e-12 * (1.0 + stats.r_e));
         assert!((rs_fwd - stats.r_s).abs() <= 1e-12 * (1.0 + stats.r_s));

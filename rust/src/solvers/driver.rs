@@ -29,9 +29,9 @@
 //! Dispatch is driven by [`System::has_diffusion`]: drift-only systems
 //! run the adaptive RK driver ([`super::ode::drive`]), diffusive systems
 //! the stochastic Heun driver ([`super::sde::drive`]) and must pass an
-//! RNG.  The legacy entry points (`ode::solve`, `ode::solve_saveat`,
-//! `ode::solve_saveat_taped` and their `sde_*` mirrors) are thin shims
-//! over these drivers, kept for one release.
+//! RNG.  The pre-unification closure-based entry points (`ode::solve`,
+//! `ode::solve_saveat`, `ode::solve_saveat_taped` and their `sde_*`
+//! mirrors) are retired — this is the only call shape.
 //!
 //! ## Step budgets
 //!
@@ -247,7 +247,6 @@ pub fn solve<S: System>(
 mod tests {
     use super::*;
     use crate::solvers::observer::{ErrorIntegral, LocalReg, StiffnessSum};
-    use crate::solvers::ode::OdeOptions;
     use crate::solvers::system::{OdeSystem, SdeSystem};
 
     fn exp_decay(z: &[f64], _t: f64, dz: &mut [f64]) {
@@ -257,30 +256,38 @@ mod tests {
     }
 
     #[test]
-    fn unified_ode_solve_matches_legacy_bits() {
-        let legacy_opts = OdeOptions {
-            rtol: 1e-7,
-            atol: 1e-7,
-            ..Default::default()
-        };
-        let legacy = ode::solve(exp_decay, &[1.0, 2.0], 0.0, 1.0, &legacy_opts);
+    fn span_is_the_two_point_grid() {
+        // A Span and its equivalent 2-point Grid are the same program:
+        // same bits, same counters, same saves.
+        let opts = SolveOptions::new().with_tolerance(1e-7);
         let mut sys = OdeSystem(exp_decay);
-        let (saves, out) = solve(
+        let (saves_span, out_span) = solve(
             &mut sys,
             &[1.0, 2.0],
             Saveat::Span { t0: 0.0, t1: 1.0 },
-            &SolveOptions::new().with_tolerance(1e-7),
+            &opts,
             None,
             Taping::Off,
             &mut [],
         );
-        assert!(out.success);
-        assert_eq!(out.z, legacy.z, "unified and legacy paths must agree bit-for-bit");
-        assert_eq!(out.stats.nfe, legacy.stats.nfe);
-        assert_eq!(out.stats.r_e, legacy.stats.r_e);
-        assert_eq!(saves.len(), 2);
-        assert_eq!(saves[0], vec![1.0, 2.0]);
-        assert_eq!(saves[1], out.z);
+        let mut sys = OdeSystem(exp_decay);
+        let (saves_grid, out_grid) = solve(
+            &mut sys,
+            &[1.0, 2.0],
+            Saveat::Grid(&[0.0, 1.0]),
+            &opts,
+            None,
+            Taping::Off,
+            &mut [],
+        );
+        assert!(out_span.success && out_grid.success);
+        assert_eq!(out_span.z, out_grid.z, "span and 2-point grid must agree bit-for-bit");
+        assert_eq!(out_span.stats.nfe, out_grid.stats.nfe);
+        assert_eq!(out_span.stats.r_e, out_grid.stats.r_e);
+        assert_eq!(saves_span, saves_grid);
+        assert_eq!(saves_span.len(), 2);
+        assert_eq!(saves_span[0], vec![1.0, 2.0]);
+        assert_eq!(saves_span[1], out_span.z);
     }
 
     #[test]

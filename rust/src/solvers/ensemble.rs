@@ -7,7 +7,7 @@
 //! strictly serially.  Three guarantees:
 //!
 //!  1. **Per-trajectory equivalence** — each trajectory runs the exact
-//!     single-trajectory solver ([`ode::solve`] / [`sde::sde_solve_saveat`]
+//!     single-trajectory driver ([`ode::drive`] / [`sde::drive`]
 //!     semantics) with independent adaptive steps; an ensemble of N copies
 //!     is bit-identical to N independent solve calls.
 //!  2. **Schedule independence** — results do not depend on worker count
@@ -19,9 +19,9 @@
 //!     bounded map ([`map_bounded`]), so at most `workers` chunks are in
 //!     flight (10k trajectories never means 10k threads).
 
-use super::driver::Saveat;
-use super::ode::{self, OdeOptions, SolveOutcome, Stats};
-use super::sde::{self, SdeOptions};
+use super::driver::{Saveat, SolveOptions};
+use super::ode::{self, SolveOutcome, Stats};
+use super::sde;
 use super::system::{OdeSystem, SdeSystem};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{chunk_ranges, default_workers, map_bounded};
@@ -69,27 +69,24 @@ impl EnsembleOptions {
 /// Integrate one ODE from many initial conditions over `[t0, t1]`.
 ///
 /// Outcomes are in input order; trajectory `i` is exactly
-/// `ode::solve(f, &z0s[i], t0, t1, opts)`.
+/// `ode::drive(&mut sys, &z0s[i], Saveat::Span { t0, t1 }, opts, ..)`.
 pub fn solve_ensemble<F>(
     f: &F,
     z0s: &[Vec<f64>],
     t0: f64,
     t1: f64,
-    opts: &OdeOptions,
+    opts: &SolveOptions,
     eopts: &EnsembleOptions,
 ) -> Vec<SolveOutcome>
 where
     F: Fn(&[f64], f64, &mut [f64]) + Sync,
 {
-    // Convert once; every trajectory drives the unified loop directly
-    // (bit-identical to `ode::solve`, which is a shim over the same).
-    let uopts = opts.to_unified();
     let per_chunk = eopts.run_chunks(z0s.len(), |range| {
         range
             .map(|i| {
                 let mut sys = OdeSystem(|z: &[f64], t: f64, dz: &mut [f64]| f(z, t, dz));
                 let (_, out) =
-                    ode::drive(&mut sys, &z0s[i], Saveat::Span { t0, t1 }, &uopts, None, &mut []);
+                    ode::drive(&mut sys, &z0s[i], Saveat::Span { t0, t1 }, opts, None, &mut []);
                 out
             })
             .collect::<Vec<_>>()
@@ -128,14 +125,13 @@ pub fn sde_solve_ensemble<F, G>(
     ts: &[f64],
     n_traj: usize,
     seed: u64,
-    opts: &SdeOptions,
+    opts: &SolveOptions,
     eopts: &EnsembleOptions,
 ) -> Vec<SdeTrajectory>
 where
     F: Fn(&[f64], f64, &mut [f64]) + Sync,
     G: Fn(&[f64], f64, &mut [f64]) + Sync,
 {
-    let uopts = opts.to_unified();
     let per_chunk = eopts.run_chunks(n_traj, |range| {
         range
             .map(|i| {
@@ -145,7 +141,7 @@ where
                     diffusion: |z: &[f64], t: f64, dg: &mut [f64]| diffusion(z, t, dg),
                 };
                 let (states, out) =
-                    sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, &uopts, None, &mut []);
+                    sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, opts, None, &mut []);
                 SdeTrajectory {
                     states,
                     stats: out.stats,
@@ -183,7 +179,7 @@ pub fn sde_ensemble_moments<F, G>(
     ts: &[f64],
     n_traj: usize,
     seed: u64,
-    opts: &SdeOptions,
+    opts: &SolveOptions,
     eopts: &EnsembleOptions,
 ) -> SdeMoments
 where
@@ -193,7 +189,6 @@ where
     assert!(n_traj > 0, "need at least one trajectory");
     let n = z0.len();
     let t = ts.len();
-    let uopts = opts.to_unified();
     let per_chunk = eopts.run_chunks(n_traj, |range| {
         let mut sum = vec![0.0f64; t * n];
         let mut sumsq = vec![0.0f64; t * n];
@@ -206,7 +201,7 @@ where
                 diffusion: |z: &[f64], t: f64, dg: &mut [f64]| diffusion(z, t, dg),
             };
             let (states, out) =
-                sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, &uopts, None, &mut []);
+                sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, opts, None, &mut []);
             ok &= out.success;
             stats.merge(&out.stats);
             for (k, zk) in states.iter().enumerate() {
@@ -259,11 +254,7 @@ mod tests {
 
     #[test]
     fn ode_ensemble_matches_independent_solves() {
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-8);
         let z0s: Vec<Vec<f64>> = (0..37)
             .map(|i| vec![1.0 + 0.1 * i as f64, -0.5 * i as f64])
             .collect();
@@ -274,7 +265,15 @@ mod tests {
         let ensemble = solve_ensemble(&exp_decay, &z0s, 0.0, 1.0, &opts, &eopts);
         assert_eq!(ensemble.len(), z0s.len());
         for (i, out) in ensemble.iter().enumerate() {
-            let solo = ode::solve(exp_decay, &z0s[i], 0.0, 1.0, &opts);
+            let mut sys = OdeSystem(exp_decay);
+            let (_, solo) = ode::drive(
+                &mut sys,
+                &z0s[i],
+                Saveat::Span { t0: 0.0, t1: 1.0 },
+                &opts,
+                None,
+                &mut [],
+            );
             assert!(out.success);
             assert_eq!(out.z, solo.z, "trajectory {i} state drifted");
             assert_eq!(out.stats.nfe, solo.stats.nfe);
@@ -286,7 +285,7 @@ mod tests {
     #[test]
     fn sde_ensemble_is_schedule_independent() {
         let ts = [0.0, 0.5, 1.0];
-        let opts = SdeOptions::default();
+        let opts = SolveOptions::new().with_tolerance(1e-2);
         let serial = sde_solve_ensemble(
             &problems::spiral_sde_drift,
             &problems::spiral_sde_diffusion,
@@ -330,7 +329,7 @@ mod tests {
             &ts,
             4,
             3,
-            &SdeOptions::default(),
+            &SolveOptions::new().with_tolerance(1e-2),
             &EnsembleOptions::serial(),
         );
         assert_ne!(ens[0].states[1], ens[1].states[1], "streams not independent");
@@ -339,7 +338,7 @@ mod tests {
     #[test]
     fn moments_match_materialized_ensemble() {
         let ts = [0.0, 0.5, 1.0];
-        let opts = SdeOptions::default();
+        let opts = SolveOptions::new().with_tolerance(1e-2);
         let eopts = EnsembleOptions {
             workers: 2,
             chunk: 16,
@@ -399,7 +398,7 @@ mod tests {
                 &ts,
                 48,
                 21,
-                &SdeOptions::default(),
+                &SolveOptions::new().with_tolerance(1e-2),
                 &EnsembleOptions { workers, chunk: 8 },
             )
         };
@@ -417,7 +416,7 @@ mod tests {
             &[],
             0.0,
             1.0,
-            &OdeOptions::default(),
+            &SolveOptions::default(),
             &EnsembleOptions::default(),
         );
         assert!(outs.is_empty());

@@ -39,11 +39,13 @@
 //! optional sampled-step local term), and the replay functions re-run
 //! the frozen program for finite-difference checks.
 //!
-//! The closure-based legacy entry points ([`ode::solve`],
-//! [`solve_saveat`], [`solve_saveat_taped`], [`sde_solve_saveat`],
-//! [`sde_solve_saveat_taped`]) are thin deprecated shims over the two
-//! drivers, kept compiling for one release; `tests/solver_equivalence.rs`
-//! pins them bit-for-bit against a transcription of the seed stepper.
+//! The closure-based legacy entry points of the pre-unification release
+//! (`ode::solve`, `solve_saveat`, `solve_saveat_taped`,
+//! `sde_solve_saveat`, `sde_solve_saveat_taped` and their
+//! `OdeOptions`/`SdeOptions` bundles) are **retired**: every caller goes
+//! through [`solve`] or the per-stack drivers, and
+//! `tests/solver_equivalence.rs` pins the unified API bit-for-bit
+//! against a transcription of the seed stepper.
 //!
 //! ## Roles
 //!
@@ -81,7 +83,6 @@ pub use ensemble::{
 pub use observer::{
     ErrorIntegral, ErrorSquared, LocalReg, StepObserver, StepView, StiffnessSum,
 };
-pub use ode::{solve_saveat, solve_saveat_taped, OdeOptions, SolveOutcome, Stats};
-pub use sde::{sde_solve_saveat, sde_solve_saveat_taped, SdeOptions};
+pub use ode::{SolveOutcome, Stats};
 pub use system::{OdeSystem, OdeSystemVjp, SdeSystem, SdeSystemVjp, System};
 pub use tableau::Tableau;

@@ -14,10 +14,9 @@
 //! [`Stats`] are produced by the built-in observers
 //! ([`super::observer::ErrorIntegral`] / [`ErrorSquared`] /
 //! [`StiffnessSum`]) the driver always installs — bit-identical to the
-//! seed's hard-wired fields (pinned by `tests/solver_equivalence.rs`).
-//! The closure-based entry points [`solve`] / [`solve_saveat`] /
-//! [`solve_saveat_taped`] are thin deprecated shims over [`drive`], kept
-//! compiling for one release.
+//! seed's hard-wired fields (pinned by `tests/solver_equivalence.rs`
+//! through the unified API; the closure-based legacy shims of the
+//! pre-unification release are gone).
 //!
 //! ## Memory layout (DESIGN.md §Perf)
 //!
@@ -33,9 +32,9 @@
 
 use super::adjoint::OdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
-use super::driver::{Saveat, SolveOptions, StepBudget};
+use super::driver::{Saveat, SolveOptions};
 use super::observer::{ErrorIntegral, ErrorSquared, StepObserver, StepView, StiffnessSum};
-use super::system::{OdeSystem, System};
+use super::system::System;
 use super::tableau::Tableau;
 
 /// White-boxed solver statistics (paper Eq. 9/11 accumulators + counters).
@@ -61,57 +60,13 @@ impl Stats {
 
     /// Total step attempts across the whole solve (accepted + rejected).
     ///
-    /// Note that under [`StepBudget::PerSegment`] the budget applies to
-    /// each save segment independently, so `attempts()` over a T-point
-    /// grid may legitimately exceed the per-segment budget (up to
-    /// `(T-1) ×` it); this accessor surfaces the true total so callers
-    /// can account for it.
+    /// Note that under [`super::driver::StepBudget::PerSegment`] the
+    /// budget applies to each save segment independently, so
+    /// `attempts()` over a T-point grid may legitimately exceed the
+    /// per-segment budget (up to `(T-1) ×` it); this accessor surfaces
+    /// the true total so callers can account for it.
     pub fn attempts(&self) -> u64 {
         self.naccept + self.nreject
-    }
-}
-
-/// Legacy options of the closure-based ODE entry points.
-///
-/// Kept for one release; new code should build a [`SolveOptions`]
-/// (where the per-segment/total budget choice is explicit) and call
-/// [`drive`] or the unified [`super::driver::solve`].
-#[derive(Clone, Debug)]
-pub struct OdeOptions {
-    pub tableau: Tableau,
-    pub rtol: f64,
-    pub atol: f64,
-    /// Step-attempt budget **per integration segment**: [`solve`] has one
-    /// segment, [`solve_saveat`] has one per save interval (a 100-point
-    /// grid gets up to 99 × `max_steps` attempts in total — see
-    /// [`Stats::attempts`] for the realized count).
-    pub max_steps: u64,
-    pub dt0: Option<f64>,
-}
-
-impl Default for OdeOptions {
-    fn default() -> Self {
-        Self {
-            tableau: Tableau::tsit5(),
-            rtol: 1e-6,
-            atol: 1e-6,
-            max_steps: 100_000,
-            dt0: None,
-        }
-    }
-}
-
-impl OdeOptions {
-    /// The equivalent [`SolveOptions`] (per-segment budget, the seed's
-    /// semantics for these legacy entry points).
-    pub fn to_unified(&self) -> SolveOptions {
-        SolveOptions {
-            tableau: self.tableau.clone(),
-            rtol: self.rtol,
-            atol: self.atol,
-            budget: StepBudget::PerSegment(self.max_steps),
-            dt0: self.dt0,
-        }
     }
 }
 
@@ -330,8 +285,9 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
 ///
 /// Returns the saved states (one per save point; [`Saveat::Span`] saves
 /// `z0` and the endpoint) and the final [`SolveOutcome`].  Budget
-/// semantics follow [`SolveOptions::budget`]; with [`StepBudget::Total`]
-/// an exhausted budget stops the solve early with `success = false` and
+/// semantics follow [`SolveOptions::budget`]; with
+/// [`super::driver::StepBudget::Total`] an exhausted budget stops the
+/// solve early with `success = false` and
 /// the remaining save points repeating the last state, so output shapes
 /// stay grid-sized.  When a tape is passed it is reset and records every
 /// accepted step plus a save mark per grid point (including the start),
@@ -386,79 +342,11 @@ pub fn drive<S: System>(
     )
 }
 
-/// Adaptive solve over [t0, t1].  `f(z, t, dz)` writes the derivative.
-///
-/// `t1 <= t0` or non-finite endpoints yield `success = false` with the
-/// state unchanged.
-///
-/// Legacy shim over [`drive`] (deprecated in favor of the unified
-/// [`super::driver::solve`]; kept compiling for one release).
-pub fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
-    f: F,
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    opts: &OdeOptions,
-) -> SolveOutcome {
-    let mut sys = OdeSystem(f);
-    let (_, out) = drive(
-        &mut sys,
-        z0,
-        Saveat::Span { t0, t1 },
-        &opts.to_unified(),
-        None,
-        &mut [],
-    );
-    out
-}
-
-/// Adaptive solve saving the state at each time in `ts` (ts[0] = t0).
-/// Returns (states, outcome-with-final-state).
-///
-/// `ts` must be non-decreasing; `opts.max_steps` budgets each save
-/// *segment* independently (see [`OdeOptions::max_steps`] and
-/// [`Stats::attempts`]).
-///
-/// Legacy shim over [`drive`] (deprecated; kept for one release).
-pub fn solve_saveat<F: FnMut(&[f64], f64, &mut [f64])>(
-    f: F,
-    z0: &[f64],
-    ts: &[f64],
-    opts: &OdeOptions,
-) -> (Vec<Vec<f64>>, SolveOutcome) {
-    let mut sys = OdeSystem(f);
-    drive(&mut sys, z0, Saveat::Grid(ts), &opts.to_unified(), None, &mut [])
-}
-
-/// [`solve_saveat`] with a discrete-adjoint tape and a **total**
-/// step-attempt budget (the budget-ladder contract: one rung bounds the
-/// whole train-time solve, not each save segment).
-///
-/// The tape is reset and then records every accepted step plus a save
-/// mark per grid point (including `ts[0]`), ready for
-/// [`super::adjoint::ode_backward`].  On budget exhaustion the solve
-/// stops early with `success = false`; the remaining save points repeat
-/// the last state so output shapes stay grid-sized.
-///
-/// Legacy shim over [`drive`] (deprecated; kept for one release).
-pub fn solve_saveat_taped<F: FnMut(&[f64], f64, &mut [f64])>(
-    f: F,
-    z0: &[f64],
-    ts: &[f64],
-    opts: &OdeOptions,
-    total_budget: u64,
-    tape: &mut OdeTape,
-) -> (Vec<Vec<f64>>, SolveOutcome) {
-    let mut sys = OdeSystem(f);
-    let uopts = opts
-        .to_unified()
-        .with_budget(StepBudget::Total(total_budget));
-    drive(&mut sys, z0, Saveat::Grid(ts), &uopts, Some(tape), &mut [])
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solvers::driver::StepBudget;
+    use crate::solvers::system::OdeSystem;
 
     fn exp_decay(z: &[f64], _t: f64, dz: &mut [f64]) {
         for i in 0..z.len() {
@@ -466,13 +354,36 @@ mod tests {
         }
     }
 
+    /// Test shorthand: drive one span solve and return the outcome.
+    fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
+        f: F,
+        z0: &[f64],
+        t0: f64,
+        t1: f64,
+        opts: &SolveOptions,
+    ) -> SolveOutcome {
+        let mut sys = OdeSystem(f);
+        drive(&mut sys, z0, Saveat::Span { t0, t1 }, opts, None, &mut []).1
+    }
+
+    /// Test shorthand: drive one grid solve.
+    fn solve_grid<F: FnMut(&[f64], f64, &mut [f64])>(
+        f: F,
+        z0: &[f64],
+        ts: &[f64],
+        opts: &SolveOptions,
+    ) -> (Vec<Vec<f64>>, SolveOutcome) {
+        let mut sys = OdeSystem(f);
+        drive(&mut sys, z0, Saveat::Grid(ts), opts, None, &mut [])
+    }
+
+    fn tol_opts(tol: f64) -> SolveOptions {
+        SolveOptions::new().with_tolerance(tol)
+    }
+
     #[test]
     fn exponential_decay_accuracy() {
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-8);
         let out = solve(exp_decay, &[1.0, 2.0], 0.0, 1.0, &opts);
         assert!(out.success);
         assert!((out.z[0] - (-1.0f64).exp()).abs() < 1e-7, "{}", out.z[0]);
@@ -485,12 +396,7 @@ mod tests {
         let errs: Vec<f64> = [1e-4, 1e-6, 1e-8]
             .iter()
             .map(|&tol| {
-                let opts = OdeOptions {
-                    rtol: tol,
-                    atol: tol,
-                    ..Default::default()
-                };
-                let out = solve(exp_decay, &[1.0], 0.0, 1.0, &opts);
+                let out = solve(exp_decay, &[1.0], 0.0, 1.0, &tol_opts(tol));
                 (out.z[0] - (-1.0f64).exp()).abs()
             })
             .collect();
@@ -504,11 +410,7 @@ mod tests {
             dz[0] = z[1];
             dz[1] = -z[0];
         };
-        let opts = OdeOptions {
-            rtol: 1e-9,
-            atol: 1e-9,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-9);
         let out = solve(f, &[1.0, 0.0], 0.0, 10.0, &opts);
         let energy = out.z[0] * out.z[0] + out.z[1] * out.z[1];
         assert!((energy - 1.0).abs() < 1e-6, "energy={energy}");
@@ -519,12 +421,7 @@ mod tests {
         let nfe: Vec<u64> = [1e-3, 1e-6, 1e-9]
             .iter()
             .map(|&tol| {
-                let opts = OdeOptions {
-                    rtol: tol,
-                    atol: tol,
-                    ..Default::default()
-                };
-                solve(exp_decay, &[1.0], 0.0, 1.0, &opts).stats.nfe
+                solve(exp_decay, &[1.0], 0.0, 1.0, &tol_opts(tol)).stats.nfe
             })
             .collect();
         assert!(nfe[0] < nfe[1] && nfe[1] < nfe[2], "{nfe:?}");
@@ -536,11 +433,7 @@ mod tests {
             let f = |z: &[f64], _t: f64, dz: &mut [f64]| {
                 dz[0] = -lambda * z[0];
             };
-            let opts = OdeOptions {
-                rtol: 1e-7,
-                atol: 1e-7,
-                ..Default::default()
-            };
+            let opts = tol_opts(1e-7);
             let out = solve(f, &[1.0], 0.0, 1.0, &opts);
             let s_per_step = out.stats.r_s / out.stats.naccept as f64;
             assert!(
@@ -553,12 +446,8 @@ mod tests {
     #[test]
     fn saveat_grid_matches_analytic() {
         let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
-        let (zs, out) = solve_saveat(exp_decay, &[1.0], &ts, &opts);
+        let opts = tol_opts(1e-8);
+        let (zs, out) = solve_grid(exp_decay, &[1.0], &ts, &opts);
         assert!(out.success);
         for (i, z) in zs.iter().enumerate() {
             assert!((z[0] - (-ts[i]).exp()).abs() < 1e-6);
@@ -567,24 +456,14 @@ mod tests {
 
     #[test]
     fn budget_exhaustion_reports_failure() {
-        let opts = OdeOptions {
-            rtol: 1e-12,
-            atol: 1e-12,
-            max_steps: 3,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-12).with_budget(StepBudget::PerSegment(3));
         let out = solve(exp_decay, &[1.0], 0.0, 1.0, &opts);
         assert!(!out.success);
     }
 
     #[test]
     fn dopri5_and_tsit5_agree() {
-        let mk = |tab: Tableau| OdeOptions {
-            tableau: tab,
-            rtol: 1e-9,
-            atol: 1e-9,
-            ..Default::default()
-        };
+        let mk = |tab: Tableau| tol_opts(1e-9).with_tableau(tab);
         let a = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::tsit5()));
         let b = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::dopri5()));
         assert!((a.z[0] - b.z[0]).abs() < 1e-8);
@@ -596,11 +475,7 @@ mod tests {
         let f = |z: &[f64], t: f64, dz: &mut [f64]| {
             dz[0] = if t < 0.5 { -z[0] } else { -50.0 * z[0] };
         };
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-8);
         let out = solve(f, &[1.0], 0.0, 1.0, &opts);
         assert!(out.success);
         assert!(out.stats.nreject > 0, "{:?}", out.stats);
@@ -608,7 +483,7 @@ mod tests {
 
     #[test]
     fn zero_and_negative_spans_fail_cleanly() {
-        let opts = OdeOptions::default();
+        let opts = SolveOptions::default();
         for t1 in [0.0, -1.0, f64::NAN] {
             let out = solve(exp_decay, &[1.0], 0.0, t1, &opts);
             assert!(!out.success, "t1={t1} should not succeed");
@@ -620,22 +495,25 @@ mod tests {
     #[test]
     #[should_panic(expected = "non-decreasing")]
     fn saveat_rejects_decreasing_grid() {
-        let _ = solve_saveat(exp_decay, &[1.0], &[0.0, 0.5, 0.4], &OdeOptions::default());
+        let _ = solve_grid(exp_decay, &[1.0], &[0.0, 0.5, 0.4], &SolveOptions::default());
     }
 
     #[test]
     fn taped_solve_is_bit_identical_to_untaped() {
         use crate::solvers::adjoint::OdeTape;
         let ts: Vec<f64> = (0..8).map(|i| i as f64 * 0.2).collect();
-        let opts = OdeOptions {
-            rtol: 1e-7,
-            atol: 1e-7,
-            ..Default::default()
-        };
-        let (zs, out) = solve_saveat(exp_decay, &[1.0, 0.5], &ts, &opts);
+        let opts = tol_opts(1e-7);
+        let (zs, out) = solve_grid(exp_decay, &[1.0, 0.5], &ts, &opts);
         let mut tape = OdeTape::new();
-        let (zs_t, out_t) =
-            solve_saveat_taped(exp_decay, &[1.0, 0.5], &ts, &opts, u64::MAX, &mut tape);
+        let mut sys = OdeSystem(exp_decay);
+        let (zs_t, out_t) = drive(
+            &mut sys,
+            &[1.0, 0.5],
+            Saveat::Grid(&ts),
+            &opts.clone().with_budget(StepBudget::Total(u64::MAX)),
+            Some(&mut tape),
+            &mut [],
+        );
         assert_eq!(zs, zs_t, "tape recording must not perturb the solve");
         assert_eq!(out.stats.nfe, out_t.stats.nfe);
         assert_eq!(out.stats.naccept, out_t.stats.naccept);
@@ -648,13 +526,17 @@ mod tests {
     fn taped_solve_respects_total_budget() {
         use crate::solvers::adjoint::OdeTape;
         let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
-        let opts = OdeOptions {
-            rtol: 1e-9,
-            atol: 1e-9,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-9);
         let mut tape = OdeTape::new();
-        let (zs, out) = solve_saveat_taped(exp_decay, &[1.0], &ts, &opts, 3, &mut tape);
+        let mut sys = OdeSystem(exp_decay);
+        let (zs, out) = drive(
+            &mut sys,
+            &[1.0],
+            Saveat::Grid(&ts),
+            &opts.with_budget(StepBudget::Total(3)),
+            Some(&mut tape),
+            &mut [],
+        );
         assert!(!out.success, "3 attempts cannot cover 10 segments");
         assert!(out.stats.attempts() <= 3);
         assert_eq!(zs.len(), ts.len(), "outputs stay grid-shaped");
@@ -665,11 +547,7 @@ mod tests {
         let f = |z: &[f64], t: f64, dz: &mut [f64]| {
             dz[0] = if t < 0.5 { -z[0] } else { -50.0 * z[0] };
         };
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-8);
         let out = solve(f, &[1.0], 0.0, 1.0, &opts);
         assert_eq!(out.stats.attempts(), out.stats.naccept + out.stats.nreject);
         assert!(out.stats.attempts() > out.stats.naccept);

@@ -53,16 +53,27 @@ pub fn linear_spectrum(lambdas: Vec<f64>) -> impl Fn(&[f64], f64, &mut [f64]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solvers::ode::{solve, OdeOptions};
+    use crate::solvers::driver::StepBudget;
+    use crate::solvers::ode::{drive, SolveOutcome};
+    use crate::solvers::system::OdeSystem;
+    use crate::solvers::{Saveat, SolveOptions};
+
+    /// Test shorthand: one span solve through the unified driver.
+    fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
+        f: F,
+        z0: &[f64],
+        t0: f64,
+        t1: f64,
+        opts: &SolveOptions,
+    ) -> SolveOutcome {
+        let mut sys = OdeSystem(f);
+        drive(&mut sys, z0, Saveat::Span { t0, t1 }, opts, None, &mut []).1
+    }
 
     #[test]
     fn spiral_decays_inward() {
         // The cubic spiral decays toward the origin while rotating.
-        let opts = OdeOptions {
-            rtol: 1e-8,
-            atol: 1e-8,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-8);
         let out = solve(spiral_ode, &[2.0, 0.0], 0.0, 3.0, &opts);
         assert!(out.success);
         let r0 = 2.0f64;
@@ -84,12 +95,9 @@ mod tests {
 
     #[test]
     fn van_der_pol_nonstiff_vs_stiff_nfe() {
-        let opts = OdeOptions {
-            rtol: 1e-6,
-            atol: 1e-6,
-            max_steps: 2_000_000,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new()
+            .with_tolerance(1e-6)
+            .with_budget(StepBudget::PerSegment(2_000_000));
         let easy = solve(van_der_pol(1.0), &[2.0, 0.0], 0.0, 5.0, &opts);
         let hard = solve(van_der_pol(50.0), &[2.0, 0.0], 0.0, 5.0, &opts);
         assert!(easy.success && hard.success);
@@ -107,11 +115,7 @@ mod tests {
 
     #[test]
     fn spectrum_estimator_ground_truth() {
-        let opts = OdeOptions {
-            rtol: 1e-7,
-            atol: 1e-7,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-7);
         let f = linear_spectrum(vec![-1.0, -5.0, -40.0]);
         let out = solve(f, &[1.0, 1.0, 1.0], 0.0, 1.0, &opts);
         let s = out.stats.r_s / out.stats.naccept as f64;

@@ -11,8 +11,9 @@
 //! under a [`SolveOptions`] budget, with optional [`SdeTape`] recording
 //! and pluggable [`StepObserver`]s; the white-boxed [`Stats`]
 //! accumulators come from the same built-in observers as the ODE stack.
-//! [`sde_solve_saveat`] / [`sde_solve_saveat_taped`] are thin deprecated
-//! shims over [`drive`], kept compiling for one release.
+//! (The closure-based legacy shims of the pre-unification release are
+//! gone — every caller drives this loop through [`drive`] or the
+//! unified [`super::driver::solve`].)
 //!
 //! Controller constants and the Hairer error norm are shared with the ODE
 //! solver via [`super::controller`] (the embedded pair is order 1, so the
@@ -24,53 +25,14 @@
 
 use super::adjoint::SdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
-use super::driver::{Saveat, SolveOptions, StepBudget};
+use super::driver::{Saveat, SolveOptions};
 use super::observer::{ErrorIntegral, ErrorSquared, StepObserver, StepView, StiffnessSum};
 use super::ode::{SolveOutcome, Stats};
-use super::system::{SdeSystem, System};
+use super::system::System;
 use crate::util::rng::Rng;
 
 /// Embedded-pair order of the stochastic Heun scheme (controller exponent).
 const ORDER: usize = 1;
-
-/// Legacy options of the closure-based SDE entry points.
-///
-/// Kept for one release; new code should build a [`SolveOptions`] and
-/// call [`drive`] or the unified [`super::driver::solve`].
-#[derive(Clone, Debug)]
-pub struct SdeOptions {
-    pub rtol: f64,
-    pub atol: f64,
-    /// Step-attempt budget **per save segment** (same contract as
-    /// [`super::ode::OdeOptions::max_steps`]).
-    pub max_steps: u64,
-    pub dt0: Option<f64>,
-}
-
-impl Default for SdeOptions {
-    fn default() -> Self {
-        Self {
-            rtol: 1e-2,
-            atol: 1e-2,
-            max_steps: 1_000_000,
-            dt0: None,
-        }
-    }
-}
-
-impl SdeOptions {
-    /// The equivalent [`SolveOptions`] (per-segment budget; the tableau
-    /// field is ignored by the Heun stack).
-    pub fn to_unified(&self) -> SolveOptions {
-        SolveOptions {
-            rtol: self.rtol,
-            atol: self.atol,
-            budget: StepBudget::PerSegment(self.max_steps),
-            dt0: self.dt0,
-            ..SolveOptions::default()
-        }
-    }
-}
 
 /// Allocation-free stepping state for one SDE trajectory.
 ///
@@ -329,82 +291,33 @@ pub fn drive<S: System>(
     )
 }
 
-/// Adaptive diagonal-noise SDE solve saving at each time in `ts`.
-///
-/// `drift(z, t, out)` / `diffusion(z, t, out)` write their values; noise is
-/// driven by `rng`.  Returns (saved states, final stats, success).  `ts`
-/// must be non-decreasing; `opts.max_steps` budgets each save segment.
-///
-/// Legacy shim over [`drive`] (deprecated in favor of the unified
-/// [`super::driver::solve`]; kept compiling for one release).
-pub fn sde_solve_saveat<F, G>(
-    drift: F,
-    diffusion: G,
-    z0: &[f64],
-    ts: &[f64],
-    rng: &mut Rng,
-    opts: &SdeOptions,
-) -> (Vec<Vec<f64>>, Stats, bool)
-where
-    F: FnMut(&[f64], f64, &mut [f64]),
-    G: FnMut(&[f64], f64, &mut [f64]),
-{
-    let mut sys = SdeSystem { drift, diffusion };
-    let (out, outcome) = drive(
-        &mut sys,
-        z0,
-        Saveat::Grid(ts),
-        rng,
-        &opts.to_unified(),
-        None,
-        &mut [],
-    );
-    (out, outcome.stats, outcome.success)
-}
-
-/// [`sde_solve_saveat`] with a discrete-adjoint tape and a **total**
-/// step-attempt budget across all save segments (the budget-ladder
-/// contract).  The tape records every accepted `(t, h, z_start, ΔW)` plus
-/// a save mark per grid point, ready for
-/// [`super::adjoint::sde_backward`]; on budget exhaustion the solve stops
-/// early with success `false` and the remaining save points repeat the
-/// last state.
-///
-/// Legacy shim over [`drive`] (deprecated; kept for one release).
-#[allow(clippy::too_many_arguments)]
-pub fn sde_solve_saveat_taped<F, G>(
-    drift: F,
-    diffusion: G,
-    z0: &[f64],
-    ts: &[f64],
-    rng: &mut Rng,
-    opts: &SdeOptions,
-    total_budget: u64,
-    tape: &mut SdeTape,
-) -> (Vec<Vec<f64>>, Stats, bool)
-where
-    F: FnMut(&[f64], f64, &mut [f64]),
-    G: FnMut(&[f64], f64, &mut [f64]),
-{
-    let mut sys = SdeSystem { drift, diffusion };
-    let uopts = opts
-        .to_unified()
-        .with_budget(StepBudget::Total(total_budget));
-    let (out, outcome) = drive(
-        &mut sys,
-        z0,
-        Saveat::Grid(ts),
-        rng,
-        &uopts,
-        Some(tape),
-        &mut [],
-    );
-    (out, outcome.stats, outcome.success)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solvers::driver::StepBudget;
+    use crate::solvers::system::SdeSystem;
+
+    /// Test shorthand: drive one grid solve from plain closures.
+    fn solve_grid<F, G>(
+        drift: F,
+        diffusion: G,
+        z0: &[f64],
+        ts: &[f64],
+        rng: &mut Rng,
+        opts: &SolveOptions,
+    ) -> (Vec<Vec<f64>>, Stats, bool)
+    where
+        F: FnMut(&[f64], f64, &mut [f64]),
+        G: FnMut(&[f64], f64, &mut [f64]),
+    {
+        let mut sys = SdeSystem { drift, diffusion };
+        let (out, outcome) = drive(&mut sys, z0, Saveat::Grid(ts), rng, opts, None, &mut []);
+        (out, outcome.stats, outcome.success)
+    }
+
+    fn tol_opts(tol: f64) -> SolveOptions {
+        SolveOptions::new().with_tolerance(tol)
+    }
 
     /// Ornstein-Uhlenbeck: dz = -z dt + sigma dW; stationary var sigma^2/2.
     #[test]
@@ -415,14 +328,10 @@ mod tests {
         let n_traj = 2000;
         // Order-1 weak scheme: solve tightly so the h-bias of the
         // stationary variance ((1+O(h)) sigma^2/2) is below the MC noise.
-        let opts = SdeOptions {
-            rtol: 1e-3,
-            atol: 1e-3,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-3);
         let mut finals = Vec::with_capacity(n_traj);
         for _ in 0..n_traj {
-            let (zs, _, ok) = sde_solve_saveat(
+            let (zs, _, ok) = solve_grid(
                 |z, _t, dz| dz[0] = -z[0],
                 |_z, _t, dg| dg[0] = sigma,
                 &[0.0],
@@ -446,12 +355,8 @@ mod tests {
     fn deterministic_limit() {
         let mut rng = Rng::new(7);
         let ts = [0.0, 0.5, 1.0];
-        let opts = SdeOptions {
-            rtol: 1e-6,
-            atol: 1e-6,
-            ..Default::default()
-        };
-        let (zs, _, ok) = sde_solve_saveat(
+        let opts = tol_opts(1e-6);
+        let (zs, _, ok) = solve_grid(
             |z, _t, dz| dz[0] = -z[0],
             |_z, _t, dg| dg[0] = 0.0,
             &[1.0],
@@ -473,14 +378,10 @@ mod tests {
         let mut rng = Rng::new(99);
         let ts = [0.0, 1.0];
         let n_traj = 4000;
-        let opts = SdeOptions {
-            rtol: 1e-4,
-            atol: 1e-4,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-4);
         let mut sum = 0.0;
         for _ in 0..n_traj {
-            let (zs, _, ok) = sde_solve_saveat(
+            let (zs, _, ok) = solve_grid(
                 |z, _t, dz| dz[0] = mu * z[0],
                 |z, _t, dg| dg[0] = sig * z[0],
                 &[1.0],
@@ -499,28 +400,24 @@ mod tests {
     #[test]
     fn taped_solve_is_bit_identical_to_untaped() {
         let ts = [0.0, 0.3, 0.7, 1.0];
-        let opts = SdeOptions {
-            rtol: 1e-3,
-            atol: 1e-3,
-            ..Default::default()
-        };
+        let opts = tol_opts(1e-3);
         let drift = |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0];
         let diffusion = |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.3;
         let mut rng_a = Rng::new(11);
-        let (zs, stats, ok) =
-            sde_solve_saveat(drift, diffusion, &[1.0], &ts, &mut rng_a, &opts);
+        let (zs, stats, ok) = solve_grid(drift, diffusion, &[1.0], &ts, &mut rng_a, &opts);
         let mut rng_b = Rng::new(11);
         let mut tape = SdeTape::new();
-        let (zs_t, stats_t, ok_t) = sde_solve_saveat_taped(
-            drift,
-            diffusion,
+        let mut sys = SdeSystem { drift, diffusion };
+        let (zs_t, out_t) = drive(
+            &mut sys,
             &[1.0],
-            &ts,
+            Saveat::Grid(&ts),
             &mut rng_b,
-            &opts,
-            u64::MAX,
-            &mut tape,
+            &opts.clone().with_budget(StepBudget::Total(u64::MAX)),
+            Some(&mut tape),
+            &mut [],
         );
+        let (stats_t, ok_t) = (out_t.stats, out_t.success);
         assert!(ok && ok_t);
         assert_eq!(zs, zs_t, "tape recording must not perturb the solve");
         assert_eq!(stats.nfe, stats_t.nfe);
@@ -531,13 +428,13 @@ mod tests {
     #[test]
     fn nfe_counts_four_per_attempt() {
         let mut rng = Rng::new(1);
-        let (_, stats, _) = sde_solve_saveat(
+        let (_, stats, _) = solve_grid(
             |z, _t, dz| dz[0] = -z[0],
             |_z, _t, dg| dg[0] = 0.1,
             &[1.0],
             &[0.0, 1.0],
             &mut rng,
-            &SdeOptions::default(),
+            &tol_opts(1e-2),
         );
         assert_eq!(stats.nfe, 4 * (stats.naccept + stats.nreject));
         assert_eq!(stats.attempts(), stats.naccept + stats.nreject);
@@ -547,13 +444,13 @@ mod tests {
     #[should_panic(expected = "non-decreasing")]
     fn rejects_decreasing_grid() {
         let mut rng = Rng::new(2);
-        let _ = sde_solve_saveat(
+        let _ = solve_grid(
             |z, _t, dz| dz[0] = -z[0],
             |_z, _t, dg| dg[0] = 0.1,
             &[1.0],
             &[0.0, 0.6, 0.5],
             &mut rng,
-            &SdeOptions::default(),
+            &tol_opts(1e-2),
         );
     }
 }

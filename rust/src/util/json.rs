@@ -62,6 +62,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(anyhow!("expected bool, got {self:?}")),
+        }
+    }
+
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
@@ -106,7 +113,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // -0.0 must not take the i64 path (`-0.0 as i64` is 0,
+                // which would drop the sign bit on the wire).
+                if n.fract() == 0.0 && n.abs() < 1e15 && !(*n == 0.0 && n.is_sign_negative()) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -423,5 +432,14 @@ mod tests {
     fn numbers_scientific() {
         assert_eq!(Json::parse("1e3").unwrap().as_f64().unwrap(), 1000.0);
         assert_eq!(Json::parse("-2.5E-2").unwrap().as_f64().unwrap(), -0.025);
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign_bit() {
+        let wire = Json::Num(-0.0).to_string_compact();
+        let back = Json::parse(&wire).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative(), "wire {wire:?} -> {back}");
+        assert_eq!(Json::Num(0.0).to_string_compact(), "0");
+        assert_eq!(Json::Num(-5.0).to_string_compact(), "-5");
     }
 }

@@ -16,8 +16,8 @@ use regnde::models::Mlp;
 use regnde::solvers::adjoint::{
     ode_backward, ode_replay, sde_backward, sde_replay, OdeTape, SdeTape,
 };
-use regnde::solvers::ode::{solve_saveat_taped, OdeOptions};
-use regnde::solvers::sde::{sde_solve_saveat_taped, SdeOptions};
+use regnde::solvers::{ode, sde};
+use regnde::solvers::{OdeSystem, Saveat, SdeSystem, SolveOptions, StepBudget};
 use regnde::util::rng::Rng;
 
 fn init_f64(mlp: &Mlp, seed: u64) -> Vec<f64> {
@@ -52,22 +52,23 @@ fn ode_adjoint_matches_central_differences() {
     let ts: Vec<f64> = (0..5).map(|i| i as f64 * 0.75 / 4.0).collect();
     let target = spiral::spiral_ode_trajectory([2.0, 0.0], &ts);
     let ts_count = ts.len();
-    let opts = OdeOptions {
-        rtol: 1e-6,
-        atol: 1e-6,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new()
+        .with_tolerance(1e-6)
+        .with_budget(StepBudget::Total(1_000_000));
 
     // Forward solve at the base point records the frozen discrete program.
     let mut tape = OdeTape::new();
     let mut scratch = mlp.scratch();
-    let (zs, out) = solve_saveat_taped(
-        |z: &[f64], _t: f64, dz: &mut [f64]| mlp.forward(&theta, z, dz, &mut scratch),
+    let mut sys = OdeSystem(|z: &[f64], _t: f64, dz: &mut [f64]| {
+        mlp.forward(&theta, z, dz, &mut scratch)
+    });
+    let (zs, out) = ode::drive(
+        &mut sys,
         &[2.0, 0.0],
-        &ts,
+        Saveat::Grid(&ts),
         &opts,
-        1_000_000,
-        &mut tape,
+        Some(&mut tape),
+        &mut [],
     );
     assert!(out.success && !tape.is_empty());
 
@@ -174,31 +175,33 @@ fn sde_adjoint_matches_central_differences() {
 
     let ts = [0.0, 0.2, 0.4, 0.6];
     let target = [[1.0, 1.0], [0.9, 1.1], [0.8, 1.15], [0.7, 1.2]];
-    let opts = SdeOptions {
-        rtol: 1e-2,
-        atol: 1e-2,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new()
+        .with_tolerance(1e-2)
+        .with_budget(StepBudget::Total(1_000_000));
 
     let mut tape = SdeTape::new();
     let mut rng = Rng::new(42);
     let (zs, stats, ok) = {
         let mut sd = drift.scratch();
         let mut sg = diffusion.scratch();
-        sde_solve_saveat_taped(
-            |z: &[f64], _t: f64, dz: &mut [f64]| {
+        let mut sys = SdeSystem {
+            drift: |z: &[f64], _t: f64, dz: &mut [f64]| {
                 drift.forward(&theta[..n_drift], z, dz, &mut sd)
             },
-            |z: &[f64], _t: f64, dg: &mut [f64]| {
+            diffusion: |z: &[f64], _t: f64, dg: &mut [f64]| {
                 diffusion.forward(&theta[n_drift..], z, dg, &mut sg)
             },
+        };
+        let (saves, outcome) = sde::drive(
+            &mut sys,
             &[1.0, 1.0],
-            &ts,
+            Saveat::Grid(&ts),
             &mut rng,
             &opts,
-            1_000_000,
-            &mut tape,
-        )
+            Some(&mut tape),
+            &mut [],
+        );
+        (saves, outcome.stats, outcome.success)
     };
     assert!(ok && !tape.is_empty());
 

@@ -11,9 +11,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use regnde::solvers::adjoint::{OdeTape, SdeTape};
-use regnde::solvers::ode::{solve, solve_saveat_taped, OdeOptions};
+use regnde::solvers::ode::SolveOutcome;
 use regnde::solvers::problems;
-use regnde::solvers::sde::{sde_solve_saveat, sde_solve_saveat_taped, SdeOptions};
+use regnde::solvers::{ode, sde};
+use regnde::solvers::{OdeSystem, Saveat, SdeSystem, SolveOptions, Stats, StepBudget};
 use regnde::util::rng::Rng;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
@@ -45,14 +46,54 @@ fn count_allocs(f: impl FnOnce()) -> u64 {
     ALLOCS.load(Ordering::SeqCst) - before
 }
 
+/// Span solve through the unified driver (what the deleted legacy
+/// `ode::solve` shim did).
+fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
+    f: F,
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    opts: &SolveOptions,
+) -> SolveOutcome {
+    let mut sys = OdeSystem(f);
+    ode::drive(&mut sys, z0, Saveat::Span { t0, t1 }, opts, None, &mut []).1
+}
+
+/// Taped grid solve with a total budget (the old `solve_saveat_taped`).
+fn solve_taped<F: FnMut(&[f64], f64, &mut [f64])>(
+    f: F,
+    z0: &[f64],
+    ts: &[f64],
+    opts: &SolveOptions,
+    tape: &mut OdeTape,
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    let mut sys = OdeSystem(f);
+    ode::drive(&mut sys, z0, Saveat::Grid(ts), opts, Some(tape), &mut [])
+}
+
+/// Grid SDE solve (the old `sde_solve_saveat`), optionally taped.
+fn sde_grid<F, G>(
+    drift: F,
+    diffusion: G,
+    z0: &[f64],
+    ts: &[f64],
+    rng: &mut Rng,
+    opts: &SolveOptions,
+    tape: Option<&mut SdeTape>,
+) -> (Vec<Vec<f64>>, Stats, bool)
+where
+    F: FnMut(&[f64], f64, &mut [f64]),
+    G: FnMut(&[f64], f64, &mut [f64]),
+{
+    let mut sys = SdeSystem { drift, diffusion };
+    let (out, outcome) = sde::drive(&mut sys, z0, Saveat::Grid(ts), rng, opts, tape, &mut []);
+    (out, outcome.stats, outcome.success)
+}
+
 #[test]
 fn step_loop_is_allocation_free() {
     // ---- ODE ----------------------------------------------------------
-    let mk = |tol: f64| OdeOptions {
-        rtol: tol,
-        atol: tol,
-        ..Default::default()
-    };
+    let mk = |tol: f64| SolveOptions::new().with_tolerance(tol);
     // Warm-up (lazy runtime init, first-touch effects).
     let _ = solve(problems::spiral_ode, &[2.0, 0.0], 0.0, 1.5, &mk(1e-6));
 
@@ -85,45 +126,44 @@ fn step_loop_is_allocation_free() {
     );
 
     // ---- SDE ----------------------------------------------------------
-    let mk = |tol: f64| SdeOptions {
-        rtol: tol,
-        atol: tol,
-        ..Default::default()
-    };
+    let mk = |tol: f64| SolveOptions::new().with_tolerance(tol);
     let ts = [0.0, 1.0]; // 2 save points: constant save-side allocations
     let mut rng = Rng::new(5);
-    let _ = sde_solve_saveat(
+    let _ = sde_grid(
         problems::spiral_sde_drift,
         problems::spiral_sde_diffusion,
         &[1.0, 1.0],
         &ts,
         &mut rng,
         &mk(1e-2),
+        None,
     );
 
     let mut steps = [0u64; 2];
     let loose = count_allocs(|| {
         let mut rng = Rng::new(6);
-        let (_, stats, ok) = sde_solve_saveat(
+        let (_, stats, ok) = sde_grid(
             problems::spiral_sde_drift,
             problems::spiral_sde_diffusion,
             &[1.0, 1.0],
             &ts,
             &mut rng,
             &mk(1e-1),
+            None,
         );
         assert!(ok);
         steps[0] = stats.attempts();
     });
     let tight = count_allocs(|| {
         let mut rng = Rng::new(6);
-        let (_, stats, ok) = sde_solve_saveat(
+        let (_, stats, ok) = sde_grid(
             problems::spiral_sde_drift,
             problems::spiral_sde_diffusion,
             &[1.0, 1.0],
             &ts,
             &mut rng,
             &mk(1e-4),
+            None,
         );
         assert!(ok);
         steps[1] = stats.attempts();
@@ -148,39 +188,24 @@ fn step_loop_is_allocation_free() {
     // grown to capacity (the warm-up solve below), re-running at any
     // tolerance performs a constant number of allocations — zero per
     // step attempt beyond the recorded accepted-step tape.
-    let mk = |tol: f64| OdeOptions {
-        rtol: tol,
-        atol: tol,
-        ..Default::default()
+    let mk = |tol: f64| {
+        SolveOptions::new()
+            .with_tolerance(tol)
+            .with_budget(StepBudget::Total(u64::MAX))
     };
     let ts = [0.0, 1.5];
     let mut tape = OdeTape::new();
     // Warm-up at the tightest tolerance grows the tape to max capacity.
-    let _ =
-        solve_saveat_taped(problems::spiral_ode, &[2.0, 0.0], &ts, &mk(1e-9), u64::MAX, &mut tape);
+    let _ = solve_taped(problems::spiral_ode, &[2.0, 0.0], &ts, &mk(1e-9), &mut tape);
 
     let mut steps = [0u64; 2];
     let loose = count_allocs(|| {
-        let (_, out) = solve_saveat_taped(
-            problems::spiral_ode,
-            &[2.0, 0.0],
-            &ts,
-            &mk(1e-3),
-            u64::MAX,
-            &mut tape,
-        );
+        let (_, out) = solve_taped(problems::spiral_ode, &[2.0, 0.0], &ts, &mk(1e-3), &mut tape);
         assert!(out.success);
         steps[0] = out.stats.attempts();
     });
     let tight = count_allocs(|| {
-        let (_, out) = solve_saveat_taped(
-            problems::spiral_ode,
-            &[2.0, 0.0],
-            &ts,
-            &mk(1e-9),
-            u64::MAX,
-            &mut tape,
-        );
+        let (_, out) = solve_taped(problems::spiral_ode, &[2.0, 0.0], &ts, &mk(1e-9), &mut tape);
         assert!(out.success);
         steps[1] = out.stats.attempts();
     });
@@ -199,52 +224,49 @@ fn step_loop_is_allocation_free() {
     );
 
     // ---- SDE adjoint tape -------------------------------------------------
-    let mk = |tol: f64| SdeOptions {
-        rtol: tol,
-        atol: tol,
-        ..Default::default()
+    let mk = |tol: f64| {
+        SolveOptions::new()
+            .with_tolerance(tol)
+            .with_budget(StepBudget::Total(u64::MAX))
     };
     let mut tape = SdeTape::new();
     {
         let mut rng = Rng::new(6);
-        let _ = sde_solve_saveat_taped(
+        let _ = sde_grid(
             problems::spiral_sde_drift,
             problems::spiral_sde_diffusion,
             &[1.0, 1.0],
             &[0.0, 1.0],
             &mut rng,
             &mk(1e-4),
-            u64::MAX,
-            &mut tape,
+            Some(&mut tape),
         );
     }
     let mut steps = [0u64; 2];
     let loose = count_allocs(|| {
         let mut rng = Rng::new(6);
-        let (_, stats, ok) = sde_solve_saveat_taped(
+        let (_, stats, ok) = sde_grid(
             problems::spiral_sde_drift,
             problems::spiral_sde_diffusion,
             &[1.0, 1.0],
             &[0.0, 1.0],
             &mut rng,
             &mk(1e-1),
-            u64::MAX,
-            &mut tape,
+            Some(&mut tape),
         );
         assert!(ok);
         steps[0] = stats.attempts();
     });
     let tight = count_allocs(|| {
         let mut rng = Rng::new(6);
-        let (_, stats, ok) = sde_solve_saveat_taped(
+        let (_, stats, ok) = sde_grid(
             problems::spiral_sde_drift,
             problems::spiral_sde_diffusion,
             &[1.0, 1.0],
             &[0.0, 1.0],
             &mut rng,
             &mk(1e-4),
-            u64::MAX,
-            &mut tape,
+            Some(&mut tape),
         );
         assert!(ok);
         steps[1] = stats.attempts();

@@ -11,7 +11,7 @@
 
 use regnde::data::spiral;
 use regnde::runtime::{Engine, Input};
-use regnde::solvers::{self, OdeOptions};
+use regnde::solvers::{ode, OdeSystem, Saveat, SolveOptions};
 
 fn engine() -> Engine {
     Engine::new(regnde::default_artifacts_dir()).expect("artifacts built?")
@@ -33,13 +33,10 @@ fn spiral_trajectory_jax_vs_rust() {
     let jax_traj = &out[0]; // [30, 2]
 
     // Rust path: native Tsit5 at the same tolerance.
-    let opts = OdeOptions {
-        rtol: 1e-6,
-        atol: 1e-6,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-6);
+    let mut sys = OdeSystem(regnde::solvers::problems::spiral_ode);
     let (rust_traj, outcome) =
-        solvers::solve_saveat(regnde::solvers::problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+        ode::drive(&mut sys, &[2.0, 0.0], Saveat::Grid(&ts), &opts, None, &mut []);
     assert!(outcome.success);
 
     for (k, rz) in rust_traj.iter().enumerate() {
@@ -86,13 +83,10 @@ fn rust_nfe_within_factor_of_jax() {
         .unwrap();
     let m = regnde::runtime::Metrics::decode(&out[1]).unwrap();
 
-    let opts = OdeOptions {
-        rtol: 1e-6,
-        atol: 1e-6,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-6);
+    let mut sys = OdeSystem(regnde::solvers::problems::spiral_ode);
     let (_, outcome) =
-        solvers::solve_saveat(regnde::solvers::problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+        ode::drive(&mut sys, &[2.0, 0.0], Saveat::Grid(&ts), &opts, None, &mut []);
     let ratio = m.nfe / outcome.stats.nfe as f64;
     assert!(
         (0.5..2.0).contains(&ratio),

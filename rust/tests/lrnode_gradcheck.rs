@@ -15,9 +15,9 @@ use regnde::solvers::adjoint::{
     sde_replay_errors, OdeTape, RegCoefs, SdeTape,
 };
 use regnde::solvers::observer::{LocalReg, StepObserver};
-use regnde::solvers::ode::{self, OdeOptions};
-use regnde::solvers::sde::{sde_solve_saveat_taped, SdeOptions};
-use regnde::solvers::{OdeSystem, OdeSystemVjp, Saveat, SdeSystemVjp, StepBudget};
+use regnde::solvers::ode::{self, SolveOutcome};
+use regnde::solvers::{sde, SolveOptions};
+use regnde::solvers::{OdeSystem, OdeSystemVjp, Saveat, SdeSystem, SdeSystemVjp, StepBudget};
 
 fn rel_err(a: f64, b: f64) -> f64 {
     (a - b).abs() / b.abs().max(1e-12)
@@ -37,18 +37,27 @@ fn f_vjp(th: f64) -> impl FnMut(&[f64], f64, &[f64], &mut [f64], &mut [f64]) {
     }
 }
 
+/// Taped grid solve through the unified driver with a total budget.
+fn solve_taped<F: FnMut(&[f64], f64, &mut [f64])>(
+    f: F,
+    z0: &[f64],
+    ts: &[f64],
+    opts: &SolveOptions,
+    total_budget: u64,
+    tape: &mut OdeTape,
+) -> (Vec<Vec<f64>>, SolveOutcome) {
+    let mut sys = OdeSystem(f);
+    let opts = opts.clone().with_budget(StepBudget::Total(total_budget));
+    ode::drive(&mut sys, z0, Saveat::Grid(ts), &opts, Some(tape), &mut [])
+}
+
 #[test]
 fn ode_sampled_step_gradient_matches_fd() {
     let theta = 1.3f64;
     let ts = [0.0, 0.5, 1.0];
-    let opts = OdeOptions {
-        rtol: 1e-6,
-        atol: 1e-6,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-6);
     let mut tape = OdeTape::new();
-    let (_, out) =
-        ode::solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+    let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
     assert!(out.success && tape.len() >= 3, "need a few steps to sample from");
 
     // Per-step terms sum (in order) to the replayed R_E, bit-for-bit.
@@ -92,14 +101,9 @@ fn ode_full_objective_with_local_term_matches_fd() {
     // data loss + 0.3·R_E + 0.2·R_S + 0.7·E_ĵ|h_ĵ| in one backward walk.
     let theta = 1.1f64;
     let ts = [0.0, 1.0];
-    let opts = OdeOptions {
-        rtol: 1e-6,
-        atol: 1e-6,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-6);
     let mut tape = OdeTape::new();
-    let (_, out) =
-        ode::solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+    let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
     assert!(out.success && tape.len() >= 2);
     let j = tape.len() / 2;
     let (coef_e, coef_s, coef_l) = (0.3, 0.2, 0.7);
@@ -176,21 +180,25 @@ fn sde_sampled_step_gradient_matches_fd() {
 
     let mut rng = regnde::util::rng::Rng::new(5);
     let mut tape = SdeTape::new();
-    let opts = SdeOptions {
-        rtol: 1e-2,
-        atol: 1e-2,
-        ..Default::default()
+    let opts = SolveOptions::new()
+        .with_tolerance(1e-2)
+        .with_budget(StepBudget::Total(u64::MAX));
+    let (stats, ok) = {
+        let mut sys = SdeSystem {
+            drift: drift(theta),
+            diffusion,
+        };
+        let (_, outcome) = sde::drive(
+            &mut sys,
+            &[1.0],
+            Saveat::Grid(&[0.0, 0.5, 1.0]),
+            &mut rng,
+            &opts,
+            Some(&mut tape),
+            &mut [],
+        );
+        (outcome.stats, outcome.success)
     };
-    let (_, stats, ok) = sde_solve_saveat_taped(
-        drift(theta),
-        diffusion,
-        &[1.0],
-        &[0.0, 0.5, 1.0],
-        &mut rng,
-        &opts,
-        u64::MAX,
-        &mut tape,
-    );
     assert!(ok && tape.len() >= 3, "need a few accepted steps");
 
     // Per-step terms sum (in order) to the replayed R_E, bit-for-bit.
@@ -242,14 +250,9 @@ fn local_coefficient_stacks_on_top_of_global_r_e() {
     // equal the sum of the two separate walks.
     let theta = 1.2f64;
     let ts = [0.0, 1.0];
-    let opts = OdeOptions {
-        rtol: 1e-6,
-        atol: 1e-6,
-        ..Default::default()
-    };
+    let opts = SolveOptions::new().with_tolerance(1e-6);
     let mut tape = OdeTape::new();
-    let (_, out) =
-        ode::solve_saveat_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+    let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
     assert!(out.success && tape.len() >= 2);
     let j = 1;
     let save_grads = vec![vec![0.0], vec![0.0]];

@@ -1,0 +1,235 @@
+//! Micro-batcher acceptance suite (ISSUE 5):
+//!
+//! * concurrent requests from N threads are **coalesced** (observed
+//!   batch sizes > 1 under load),
+//! * responses route back to the correct requester (each trajectory
+//!   starts at its own request's initial state),
+//! * a poisoned/failing solve fails only its own batch's requests —
+//!   other models keep serving,
+//! * an unbatched request is bit-identical to the in-process
+//!   `Backend::predict`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use regnde::runtime::{Backend, NativeBackend, TrainData};
+use regnde::serve::{BatchPolicy, Batcher, Checkpoint, Registry};
+use regnde::util::threadpool::ThreadPool;
+
+const SERVING_POINTS: usize = 8;
+
+fn spiral_checkpoint(step_budget: u64) -> Checkpoint {
+    let be = NativeBackend::new();
+    let params = be.init_params("spiral_node", 5).unwrap();
+    let mut state = be.export_state("spiral_node", &params).unwrap();
+    state.step_budget = step_budget;
+    let ts: Vec<f32> = (0..SERVING_POINTS)
+        .map(|i| i as f32 / (SERVING_POINTS - 1) as f32)
+        .collect();
+    Checkpoint::new(state, "spiral-node", "vanilla", ts)
+}
+
+fn batcher(policy: BatchPolicy) -> (Arc<Registry>, Arc<Batcher>) {
+    let registry = Arc::new(Registry::in_memory());
+    registry.insert("spiral", spiral_checkpoint(100_000)).unwrap();
+    let pool = Arc::new(ThreadPool::new(4));
+    let b = Arc::new(Batcher::new(Arc::clone(&registry), pool, policy));
+    (registry, b)
+}
+
+#[test]
+fn concurrent_requests_coalesce_and_route_correctly() {
+    let n = 8;
+    let policy = BatchPolicy {
+        max_batch: n,
+        max_wait: Duration::from_millis(100),
+    };
+    let (_registry, batcher) = batcher(policy);
+
+    let replies: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let batcher = Arc::clone(&batcher);
+                scope.spawn(move || {
+                    let u0 = vec![1.0 + 0.25 * i as f32, -0.5 * i as f32];
+                    (u0.clone(), batcher.submit("spiral", u0, None))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut max_batch_seen = 0;
+    for (u0, reply) in &replies {
+        let reply = reply.as_ref().expect("all requests must succeed");
+        assert_eq!(reply.traj.len(), SERVING_POINTS * 2);
+        // Routing: the trajectory starts exactly at this request's state
+        // (the first save point is z0, bit-for-bit).
+        assert_eq!(reply.traj[0].to_bits(), u0[0].to_bits());
+        assert_eq!(reply.traj[1].to_bits(), u0[1].to_bits());
+        assert!(reply.nfe > 0, "NFE accounting must ride every reply");
+        assert!(reply.batch >= 1 && reply.batch <= n);
+        max_batch_seen = max_batch_seen.max(reply.batch);
+    }
+    assert!(
+        max_batch_seen > 1,
+        "8 concurrent requests inside a 100ms window must coalesce \
+         (saw max batch {max_batch_seen})"
+    );
+    // Distinct initial states produce distinct trajectories.
+    assert_ne!(replies[0].1.as_ref().unwrap().traj, replies[1].1.as_ref().unwrap().traj);
+
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, n as u64);
+    assert!(stats.batches < n as u64, "coalescing must reduce batch count");
+    assert!(stats.mean_batch() > 1.0);
+    assert_eq!(stats.max_batch, max_batch_seen);
+}
+
+#[test]
+fn max_batch_is_a_hard_cap() {
+    let policy = BatchPolicy {
+        max_batch: 3,
+        max_wait: Duration::from_millis(100),
+    };
+    let (_registry, batcher) = batcher(policy);
+    let replies: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let batcher = Arc::clone(&batcher);
+                scope.spawn(move || {
+                    batcher.submit("spiral", vec![1.0 + 0.1 * i as f32, 0.5], None)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for reply in replies {
+        let reply = reply.expect("requests must succeed");
+        assert!(reply.batch <= 3, "window exceeded max_batch: {}", reply.batch);
+    }
+}
+
+#[test]
+fn single_request_is_bit_identical_to_in_process_predict() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+    };
+    let (registry, batcher) = batcher(policy);
+    let model = registry.get("spiral").unwrap();
+
+    let u0 = [2.0f32, 0.0];
+    let reply = batcher.submit("spiral", u0.to_vec(), None).unwrap();
+    assert_eq!(reply.batch, 1);
+
+    // In-process reference: Backend::predict over the same grid (the
+    // `data` targets only feed the reported MSE, not the trajectory).
+    let be = NativeBackend::new();
+    let ts = model.checkpoint.ts.clone();
+    let mut data = vec![0.0f32; ts.len() * 2];
+    data[0] = u0[0];
+    data[1] = u0[1];
+    let payload = TrainData::Trajectory { data: &data, ts: &ts };
+    let params = model.params();
+    let (pred, metrics) = be.predict("spiral_node", params, &payload, 0).unwrap();
+    assert_eq!(pred.len(), reply.traj.len());
+    for (a, b) in pred.iter().zip(&reply.traj) {
+        assert_eq!(a.to_bits(), b.to_bits(), "served and in-process bits differ");
+    }
+    assert_eq!(metrics.nfe as u64, reply.nfe, "NFE accounting must agree");
+}
+
+#[test]
+fn failing_solve_poisons_only_its_own_batch() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(50),
+    };
+    let (registry, batcher) = batcher(policy);
+    // A model whose checkpoint budget is too small to finish any solve:
+    // every batch that touches it fails.
+    registry.insert("tiny", spiral_checkpoint(2)).unwrap();
+
+    let results: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let batcher = Arc::clone(&batcher);
+                // Interleave: half the requests hit the poisoned model.
+                let id = if i % 2 == 0 { "tiny" } else { "spiral" };
+                scope.spawn(move || (id, batcher.submit(id, vec![1.0, 1.0], None)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (id, result) in results {
+        match id {
+            "tiny" => {
+                let err = format!("{:#}", result.expect_err("tiny budget must fail"));
+                assert!(err.contains("budget"), "unexpected error: {err}");
+            }
+            _ => {
+                let reply = result.expect("healthy model must keep serving");
+                assert!(reply.nfe > 0);
+            }
+        }
+    }
+
+    // And the healthy model still serves after the poisoned batches.
+    assert!(batcher.submit("spiral", vec![0.5, 0.5], None).is_ok());
+}
+
+#[test]
+fn shape_and_model_errors_are_rejected_before_batching() {
+    let (_registry, batcher) = batcher(BatchPolicy::default());
+    let err = batcher.submit("ghost", vec![1.0, 2.0], None).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown model"));
+    let err = batcher.submit("spiral", vec![1.0], None).unwrap_err();
+    assert!(format!("{err:#}").contains("2-dim"));
+    // Non-finite initial states would poison every rider of a window:
+    // rejected up front instead.
+    let bad = vec![f32::NAN, 0.0];
+    let err = batcher.submit("spiral", bad, None).unwrap_err();
+    assert!(format!("{err:#}").contains("finite"));
+    let bad = vec![1.0, f32::INFINITY];
+    let err = batcher.submit("spiral", bad, None).unwrap_err();
+    assert!(format!("{err:#}").contains("finite"));
+    // Rejected requests never reach a window.
+    assert_eq!(batcher.stats().requests, 0);
+}
+
+#[test]
+fn underfunded_requests_ride_alone_and_cannot_poison_a_shared_window() {
+    // A request declaring a budget below the checkpoint default solves
+    // in its own window: its (failing) tiny budget must not drag down
+    // concurrent well-budgeted requests for the same model.
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(50),
+    };
+    let (_registry, batcher) = batcher(policy);
+    let results: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let batcher = Arc::clone(&batcher);
+                // Even lanes declare a hopeless 1-attempt budget.
+                let budget = if i % 2 == 0 { Some(1) } else { None };
+                scope.spawn(move || (budget, batcher.submit("spiral", vec![1.0, 1.0], budget)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (budget, result) in results {
+        match budget {
+            Some(_) => {
+                let err = format!("{:#}", result.expect_err("1 attempt cannot finish"));
+                assert!(err.contains("budget"), "unexpected error: {err}");
+            }
+            None => {
+                let reply = result.expect("well-budgeted riders must be isolated");
+                assert!(reply.batch <= 4, "solo windows must not join the shared one");
+            }
+        }
+    }
+}

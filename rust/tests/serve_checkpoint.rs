@@ -1,0 +1,257 @@
+//! Serving-checkpoint acceptance suite (ISSUE 5):
+//!
+//! 1. `save → load → predict` is **bit-identical** to the in-memory
+//!    model's `predict` on all five experiments' model shapes (the hex
+//!    parameter codec must not lose a single f32 bit, and the decoded
+//!    state must drive the exact same solve).
+//! 2. Malformed, truncated and wrong-version checkpoint files produce
+//!    typed [`CheckpointError`]s — never panics.
+
+use std::path::PathBuf;
+
+use regnde::runtime::{Backend, NativeBackend, TrainData};
+use regnde::serve::{Checkpoint, CheckpointError};
+use regnde::util::rng::Rng;
+
+const IMG_DIM: usize = 784;
+const CLASSES: usize = 10;
+const SERIES_CHANNELS: usize = 8;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("regnde-ckpt-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small but valid data payload for every model kind, owned so the
+/// borrows in `TrainData` have something to point at.
+struct Fixture {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    d: Vec<f32>,
+}
+
+fn fixture(model: &str) -> Fixture {
+    let mut rng = Rng::new(42);
+    match model {
+        "spiral_node" => {
+            let ts: Vec<f32> = (0..8).map(|i| i as f32 / 7.0).collect();
+            let mut data = Vec::with_capacity(ts.len() * 2);
+            for i in 0..ts.len() {
+                data.push(2.0 - 0.1 * i as f32);
+                data.push(0.2 * i as f32);
+            }
+            Fixture {
+                a: data,
+                b: ts,
+                c: vec![],
+                d: vec![],
+            }
+        }
+        "spiral_nsde" => {
+            let ts: Vec<f32> = (0..5).map(|i| i as f32 / 4.0).collect();
+            let u0: Vec<f32> = (0..4).flat_map(|_| [1.0, 1.0]).collect();
+            let mu: Vec<f32> = (0..ts.len() * 2).map(|i| 1.0 - 0.05 * i as f32).collect();
+            let var: Vec<f32> = (0..ts.len() * 2).map(|i| 0.01 * (i + 1) as f32).collect();
+            Fixture {
+                a: u0,
+                b: mu,
+                c: var,
+                d: ts,
+            }
+        }
+        "mnist_node" | "mnist_nsde" => {
+            let b = 2;
+            let x: Vec<f32> = (0..b * IMG_DIM).map(|_| rng.range(0.0, 1.0) as f32).collect();
+            let mut y = vec![0.0f32; b * CLASSES];
+            for r in 0..b {
+                y[r * CLASSES + r % CLASSES] = 1.0;
+            }
+            Fixture {
+                a: x,
+                b: y,
+                c: vec![],
+                d: vec![],
+            }
+        }
+        "latent_ode" => {
+            let (b, t_pts, c) = (2, 5, SERIES_CHANNELS);
+            let x: Vec<f32> = (0..b * t_pts * c).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let mask: Vec<f32> = (0..b * t_pts * c)
+                .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+                .collect();
+            let ts: Vec<f32> = (0..t_pts).map(|i| i as f32 / (t_pts - 1) as f32).collect();
+            Fixture {
+                a: x,
+                b: mask,
+                c: ts,
+                d: vec![],
+            }
+        }
+        other => panic!("no fixture for {other}"),
+    }
+}
+
+fn train_data<'a>(model: &str, f: &'a Fixture) -> TrainData<'a> {
+    match model {
+        "spiral_node" => TrainData::Trajectory { data: &f.a, ts: &f.b },
+        "spiral_nsde" => TrainData::Moments {
+            u0: &f.a,
+            mu: &f.b,
+            var: &f.c,
+            ts: &f.d,
+        },
+        "mnist_node" | "mnist_nsde" => TrainData::Classify { x: &f.a, y: &f.b },
+        "latent_ode" => TrainData::Series {
+            x: &f.a,
+            mask: &f.b,
+            ts: &f.c,
+        },
+        other => panic!("no data for {other}"),
+    }
+}
+
+#[test]
+fn roundtrip_predict_is_bit_identical_on_all_five_model_shapes() {
+    let dir = temp_dir("roundtrip");
+    let be = NativeBackend::new();
+    for model in ["spiral_node", "spiral_nsde", "mnist_node", "mnist_nsde", "latent_ode"] {
+        let params = be.init_params(model, 11).unwrap();
+        let state = be.export_state(model, &params).unwrap();
+        let serving_ts: Vec<f32> = (0..8).map(|i| i as f32 / 7.0).collect();
+        let ckpt = Checkpoint::new(state, model, "vanilla", serving_ts);
+        let path = dir.join(format!("{model}.json"));
+        ckpt.save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ckpt, "{model}: decoded checkpoint must equal the saved one");
+        let restored = be.import_state(&loaded.state).unwrap();
+        assert_eq!(restored.len(), params.len(), "{model}");
+        for (a, b) in params.iter().zip(&restored) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{model}: parameter bits drifted");
+        }
+
+        // Same data, same seed: the loaded model's prediction must be
+        // the in-memory model's prediction, bit for bit.
+        let fix = fixture(model);
+        let data = train_data(model, &fix);
+        let (out_mem, m_mem) = be.predict(model, &params, &data, 7).unwrap();
+        let (out_ckpt, m_ckpt) = be.predict(model, &restored, &data, 7).unwrap();
+        assert_eq!(out_mem.len(), out_ckpt.len(), "{model}");
+        for (a, b) in out_mem.iter().zip(&out_ckpt) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{model}: prediction bits drifted");
+        }
+        assert_eq!(m_mem.nfe, m_ckpt.nfe, "{model}: NFE must match exactly");
+        assert_eq!(m_mem.loss, m_ckpt.loss, "{model}: loss must match exactly");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn export_validates_model_and_shapes() {
+    let be = NativeBackend::new();
+    assert!(be.export_state("nope", &[0.0; 4]).is_err(), "unknown model");
+    assert!(
+        be.export_state("spiral_node", &[0.0; 3]).is_err(),
+        "wrong parameter count"
+    );
+    let mut params = be.init_params("spiral_node", 0).unwrap();
+    params[0] = f32::NAN;
+    assert!(
+        be.export_state("spiral_node", &params).is_err(),
+        "non-finite parameters must not be exported"
+    );
+}
+
+#[test]
+fn import_rejects_mismatched_states() {
+    let be = NativeBackend::new();
+    let params = be.init_params("spiral_node", 0).unwrap();
+    let mut state = be.export_state("spiral_node", &params).unwrap();
+
+    let mut wrong_model = state.clone();
+    wrong_model.model = "mnist_node".into();
+    assert!(
+        be.import_state(&wrong_model).is_err(),
+        "spiral params cannot reconstruct mnist_node"
+    );
+
+    let mut wrong_solver = state.clone();
+    wrong_solver.solver = "rk4".into();
+    assert!(be.import_state(&wrong_solver).is_err(), "unknown solver name");
+
+    state.params[1] = f32::INFINITY;
+    assert!(be.import_state(&state).is_err(), "non-finite parameters");
+}
+
+#[test]
+fn malformed_truncated_and_wrong_version_files_are_typed_errors() {
+    let dir = temp_dir("badfiles");
+    let be = NativeBackend::new();
+    let params = be.init_params("spiral_node", 3).unwrap();
+    let state = be.export_state("spiral_node", &params).unwrap();
+    let ts: Vec<f32> = (0..4).map(|i| i as f32 / 3.0).collect();
+    let ckpt = Checkpoint::new(state, "spiral-node", "ERNODE", ts);
+    let good = dir.join("good.json");
+    ckpt.save(&good).unwrap();
+    let text = std::fs::read_to_string(&good).unwrap();
+
+    // Missing file: Io.
+    let err = Checkpoint::load(&dir.join("missing.json")).unwrap_err();
+    assert!(matches!(err, CheckpointError::Io(_)), "{err}");
+
+    // Not JSON at all: Parse.
+    let p = dir.join("garbage.json");
+    std::fs::write(&p, "this is not json").unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(matches!(err, CheckpointError::Parse(_)), "{err}");
+
+    // Truncated file (cut mid-object): Parse, not a panic.
+    let p = dir.join("truncated.json");
+    std::fs::write(&p, &text[..text.len() / 2]).unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(matches!(err, CheckpointError::Parse(_)), "{err}");
+
+    // Valid JSON, wrong schema tag.
+    let p = dir.join("schema.json");
+    std::fs::write(&p, "{\"schema\": \"something-else\", \"version\": 1}").unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(matches!(err, CheckpointError::WrongSchema(_)), "{err}");
+
+    // Future format version.
+    let p = dir.join("version.json");
+    std::fs::write(&p, text.replace("\"version\": 1", "\"version\": 2")).unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(
+        matches!(err, CheckpointError::WrongVersion { found: 2, .. }),
+        "{err}"
+    );
+
+    // Structurally broken: params_hex truncated to a non-multiple of 8.
+    let p = dir.join("hex.json");
+    let decoded = Checkpoint::load(&good).unwrap();
+    let mut j = decoded.to_json();
+    if let regnde::util::json::Json::Obj(m) = &mut j {
+        let hex = m.get("params_hex").unwrap().as_str().unwrap().to_string();
+        let cut = regnde::util::json::Json::Str(hex[..hex.len() - 3].to_string());
+        m.insert("params_hex".into(), cut);
+    }
+    std::fs::write(&p, j.to_string_pretty()).unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(matches!(err, CheckpointError::Malformed(_)), "{err}");
+
+    // Missing required field.
+    let p = dir.join("missing-field.json");
+    let mut j = decoded.to_json();
+    if let regnde::util::json::Json::Obj(m) = &mut j {
+        m.remove("solver");
+    }
+    std::fs::write(&p, j.to_string_pretty()).unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(matches!(err, CheckpointError::Malformed(_)), "{err}");
+
+    // The good file still loads after all that.
+    assert!(Checkpoint::load(&good).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,23 +1,33 @@
-//! Refactor-equivalence suite: the allocation-free flat-arena stepper must
-//! reproduce the seed solver's semantics *exactly*.
+//! Refactor-equivalence suite: the allocation-free flat-arena stepper
+//! behind the **unified `solve()` API** must reproduce the seed solver's
+//! semantics *exactly*.
 //!
 //! `seed_reference` below is a faithful transcription of the pre-refactor
 //! stepper (per-step `Vec<Vec<f64>>` stages, per-attempt scratch allocs,
-//! cloned tableau) — the behavioral contract the rewrite must preserve.
-//! Every accepted/rejected step takes the same branch with the same floats,
-//! so the counters must be identical and states must agree to <= 1e-12
-//! (they are in fact bit-identical; the tolerance guards against platform
-//! FMA differences only).
+//! cloned tableau, its own options bundle) — the behavioral contract the
+//! rewrite must preserve.  The current side is exercised through
+//! [`regnde::solvers::solve`] / `ode::drive` — the closure-based legacy
+//! shims this suite used to pin are retired, so the unified entry point
+//! *is* the seed-semantics surface now.  Every accepted/rejected step
+//! takes the same branch with the same floats, so the counters must be
+//! identical and states must agree to <= 1e-12 (they are in fact
+//! bit-identical; the tolerance guards against platform FMA differences
+//! only).
 
-use regnde::solvers::ode::{solve, solve_saveat, OdeOptions, Stats};
+use regnde::solvers::ode::Stats;
 use regnde::solvers::problems;
 use regnde::solvers::tableau::Tableau;
-use regnde::solvers::{solve_ensemble, EnsembleOptions};
+use regnde::solvers::{
+    solve_ensemble, EnsembleOptions, OdeSystem, Saveat, SolveOptions, SolveOutcome, StepBudget,
+    Taping,
+};
 use regnde::util::propcheck;
 
-/// The seed (pre-refactor) stepper, kept verbatim as the reference.
+/// The seed (pre-refactor) stepper, kept verbatim as the reference — its
+/// `SeedOptions` mirror the seed's `OdeOptions` bundle (per-segment
+/// `max_steps` semantics).
 mod seed_reference {
-    use regnde::solvers::ode::{OdeOptions, Stats};
+    use regnde::solvers::ode::Stats;
     use regnde::solvers::tableau::Tableau;
 
     const SAFETY: f64 = 0.9;
@@ -25,6 +35,29 @@ mod seed_reference {
     const MAX_FACTOR: f64 = 10.0;
     const PI_BETA: f64 = 0.04;
     const EPS: f64 = 1e-12;
+
+    /// The seed's options bundle (what `OdeOptions` was before the
+    /// unified API).
+    #[derive(Clone, Debug)]
+    pub struct SeedOptions {
+        pub tableau: Tableau,
+        pub rtol: f64,
+        pub atol: f64,
+        pub max_steps: u64,
+        pub dt0: Option<f64>,
+    }
+
+    impl Default for SeedOptions {
+        fn default() -> Self {
+            Self {
+                tableau: Tableau::tsit5(),
+                rtol: 1e-6,
+                atol: 1e-6,
+                max_steps: 100_000,
+                dt0: None,
+            }
+        }
+    }
 
     fn rms(v: &[f64]) -> f64 {
         (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + 1e-300).sqrt()
@@ -54,7 +87,7 @@ mod seed_reference {
     struct Stepper<'a, F: FnMut(&[f64], f64, &mut [f64])> {
         f: F,
         tab: &'a Tableau,
-        opts: &'a OdeOptions,
+        opts: &'a SeedOptions,
         k1: Vec<f64>,
         h: f64,
         q_prev: f64,
@@ -69,7 +102,7 @@ mod seed_reference {
         fn new(
             mut f: F,
             tab: &'a Tableau,
-            opts: &'a OdeOptions,
+            opts: &'a SeedOptions,
             z0: &[f64],
             t0: f64,
             span: f64,
@@ -182,7 +215,7 @@ mod seed_reference {
         z0: &[f64],
         t0: f64,
         t1: f64,
-        opts: &OdeOptions,
+        opts: &SeedOptions,
     ) -> (Vec<f64>, Stats, bool) {
         let tab = opts.tableau.clone();
         let mut stepper = Stepper::new(f, &tab, opts, z0, t0, t1 - t0);
@@ -196,7 +229,7 @@ mod seed_reference {
         f: F,
         z0: &[f64],
         ts: &[f64],
-        opts: &OdeOptions,
+        opts: &SeedOptions,
     ) -> (Vec<Vec<f64>>, Stats, bool) {
         let tab = opts.tableau.clone();
         let mut stepper = Stepper::new(f, &tab, opts, z0, ts[0], ts[ts.len() - 1] - ts[0]);
@@ -211,6 +244,43 @@ mod seed_reference {
         }
         (out, stepper.stats, ok)
     }
+}
+
+use seed_reference::SeedOptions;
+
+/// The unified-API equivalent of a [`SeedOptions`]: same tableau,
+/// tolerances and per-segment budget semantics.
+fn unified(opts: &SeedOptions) -> SolveOptions {
+    let mut u = SolveOptions::new()
+        .with_tableau(opts.tableau.clone())
+        .with_tolerances(opts.rtol, opts.atol)
+        .with_budget(StepBudget::PerSegment(opts.max_steps));
+    if let Some(dt0) = opts.dt0 {
+        u = u.with_dt0(dt0);
+    }
+    u
+}
+
+/// Current side of the comparison: one span solve through the unified
+/// entry point.
+fn unified_solve(
+    f: impl FnMut(&[f64], f64, &mut [f64]),
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    opts: &SeedOptions,
+) -> SolveOutcome {
+    let mut sys = OdeSystem(f);
+    regnde::solvers::solve(
+        &mut sys,
+        z0,
+        Saveat::Span { t0, t1 },
+        &unified(opts),
+        None,
+        Taping::Off,
+        &mut [],
+    )
+    .1
 }
 
 fn assert_stats_equal(new: &Stats, old: &Stats, what: &str) {
@@ -239,14 +309,14 @@ fn check_solve_case(
     tableau: Tableau,
     tol: f64,
 ) {
-    let opts = OdeOptions {
+    let opts = SeedOptions {
         tableau,
         rtol: tol,
         atol: tol,
         max_steps: 2_000_000,
         ..Default::default()
     };
-    let new = solve(f, z0, 0.0, t1, &opts);
+    let new = unified_solve(f, z0, 0.0, t1, &opts);
     let (z_old, stats_old, ok_old) = seed_reference::solve(f, z0, 0.0, t1, &opts);
     assert!(new.success && ok_old, "{name}: solve failed");
     assert_stats_equal(&new.stats, &stats_old, name);
@@ -312,12 +382,21 @@ fn exp_decay_matches_seed_semantics() {
 #[test]
 fn saveat_matches_seed_semantics() {
     let ts: Vec<f64> = (0..30).map(|i| 1.5 * i as f64 / 29.0).collect();
-    let opts = OdeOptions {
+    let opts = SeedOptions {
         rtol: 1e-6,
         atol: 1e-6,
         ..Default::default()
     };
-    let (zs_new, out) = solve_saveat(problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
+    let mut sys = OdeSystem(problems::spiral_ode);
+    let (zs_new, out) = regnde::solvers::solve(
+        &mut sys,
+        &[2.0, 0.0],
+        Saveat::Grid(&ts),
+        &unified(&opts),
+        None,
+        Taping::Off,
+        &mut [],
+    );
     let (zs_old, stats_old, ok_old) =
         seed_reference::solve_saveat(problems::spiral_ode, &[2.0, 0.0], &ts, &opts);
     assert!(out.success && ok_old);
@@ -347,18 +426,23 @@ fn prop_ensemble_of_copies_matches_independent_solves() {
                 dz[i] = -lambda * z[i] + 0.1 * z[i] * z[i] * z[i].sin();
             }
         };
-        let opts = OdeOptions {
-            rtol: 1e-6,
-            atol: 1e-6,
-            ..Default::default()
-        };
+        let opts = SolveOptions::new().with_tolerance(1e-6);
         let z0s: Vec<Vec<f64>> = (0..n_copies).map(|_| z0.clone()).collect();
         let eopts = EnsembleOptions {
             workers: g.usize_in(1, 4),
             chunk: g.usize_in(1, 5),
         };
         let ensemble = solve_ensemble(&f, &z0s, 0.0, t1, &opts, &eopts);
-        let solo = solve(f, &z0, 0.0, t1, &opts);
+        let mut sys = OdeSystem(f);
+        let (_, solo) = regnde::solvers::solve(
+            &mut sys,
+            &z0,
+            Saveat::Span { t0: 0.0, t1 },
+            &opts,
+            None,
+            Taping::Off,
+            &mut [],
+        );
         for (i, out) in ensemble.iter().enumerate() {
             propcheck::ensure(
                 out.z == solo.z
