@@ -22,7 +22,10 @@ fn main() {
     );
     for tol in [1e-3, 1e-5, 1e-7] {
         let opts = SolveOptions::new().with_tolerance(tol);
-        let outs = solve_ensemble(&problems::spiral_ode, &z0s, 0.0, 1.5, &opts, &eopts);
+        let outs: Vec<_> = solve_ensemble(&problems::spiral_ode, &z0s, 0.0, 1.5, &opts, &eopts)
+            .into_iter()
+            .map(|o| o.expect("ablation solve failed"))
+            .collect();
         let n = outs.len() as f64;
         t.row(vec![
             format!("{tol:.0e}"),

@@ -95,6 +95,7 @@ fn drive_load(addr: &str, model: &str, requests: usize, concurrency: usize) -> L
                             model: model.to_string(),
                             u0,
                             budget: None,
+                            deadline_ms: None,
                         };
                         let t = Instant::now();
                         let resp = client.request(&req).expect("request");
@@ -162,10 +163,12 @@ fn main() {
     let policy = BatchPolicy {
         max_batch: 16,
         max_wait: Duration::from_micros(5000),
+        ..Default::default()
     };
     let batcher = Arc::new(Batcher::new(Arc::clone(&registry), pool, policy));
     let opts = ServerOpts {
         nfe_quota: u64::MAX,
+        ..Default::default()
     };
     let (addr, _server) =
         Server::spawn(Arc::clone(&registry), batcher, opts, "127.0.0.1:0").expect("spawn server");
@@ -179,6 +182,7 @@ fn main() {
                 model: "spiral-vanilla".into(),
                 u0: vec![2.0, 0.0],
                 budget: None,
+                deadline_ms: None,
             })
             .expect("predict");
         let traj = match resp {
@@ -239,6 +243,25 @@ fn main() {
         concurrency
     );
 
+    // ---- shed accounting (DESIGN.md §Robustness) ----------------------
+    // The server's stats op reports how many requests backpressure turned
+    // away (admission queue, deadlines, connection cap, draining).  Under
+    // this benchmark's clean load the rate should be 0; the chaos smoke
+    // job reads the same field after injecting faults.
+    let (shed_total, served_total) = {
+        let mut client = Client::connect(&addr).expect("connect for stats");
+        match client.request(&Request::Stats).expect("stats") {
+            Response::Stats { shed, requests, .. } => (shed, requests),
+            other => panic!("stats failed: {other:?}"),
+        }
+    };
+    let shed_rate = shed_total as f64 / (shed_total + served_total).max(1) as f64;
+    println!(
+        "shed: {shed_total} of {} arrivals ({:.4} rate)",
+        shed_total + served_total,
+        shed_rate
+    );
+
     // ---- emit BENCH_serving.json at the repo root ---------------------
     let nfe_ratio = vanilla.mean_nfe / ernode.mean_nfe.max(1e-9);
     let report = obj([
@@ -247,6 +270,8 @@ fn main() {
         ("vanilla", result_json(&vanilla)),
         ("ernode", result_json(&ernode)),
         ("nfe_ratio_vanilla_over_ernode", Json::from(nfe_ratio)),
+        ("shed", Json::from(shed_total as usize)),
+        ("shed_rate", Json::from(shed_rate)),
         (
             "meta",
             obj([

@@ -29,6 +29,9 @@ pub struct BudgetRouter {
     pub escalations: u64,
     pub descents: u64,
     pub retries: u64,
+    /// Batches dropped on non-budget failures (divergent solves: a bigger
+    /// rung cannot fix a NaN vector field, so the step is skipped).
+    pub skips: u64,
 }
 
 impl BudgetRouter {
@@ -48,6 +51,7 @@ impl BudgetRouter {
             escalations: 0,
             descents: 0,
             retries: 0,
+            skips: 0,
         })
     }
 
@@ -59,6 +63,15 @@ impl BudgetRouter {
     /// Step budget of the current rung.
     pub fn budget(&self) -> usize {
         self.budgets[self.rung]
+    }
+
+    /// Record a batch skipped on a non-budget failure (NaN drift,
+    /// step-size underflow): the rung stays put — escalation only answers
+    /// undersized budgets — but the descent window is cleared so a
+    /// divergence episode cannot contribute "low usage" evidence.
+    pub fn note_skip(&mut self) {
+        self.window.clear();
+        self.skips += 1;
     }
 
     /// Record a completed train step.  `attempts` = naccept + nreject,
@@ -119,6 +132,23 @@ mod tests {
         assert!(!r.observe(64.0, false));
         assert_eq!(r.budget(), 64);
         assert_eq!(r.escalations, 2);
+    }
+
+    #[test]
+    fn note_skip_keeps_rung_but_clears_descent_evidence() {
+        let mut r = BudgetRouter::new(vec![16, 32]).unwrap();
+        assert!(r.observe(20.0, false)); // escalate to 32
+        for _ in 0..15 {
+            assert!(!r.observe(8.0, true));
+        }
+        // One divergent batch resets the window: no descent on the next
+        // low-usage step even though 16 successes would have triggered it.
+        r.note_skip();
+        assert_eq!(r.budget(), 32, "skip must not move the rung");
+        assert!(!r.observe(8.0, true));
+        assert_eq!(r.budget(), 32);
+        assert_eq!(r.skips, 1);
+        assert_eq!(r.descents, 0);
     }
 
     #[test]

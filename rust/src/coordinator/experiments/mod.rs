@@ -18,6 +18,7 @@ use super::budget::BudgetRouter;
 use super::Method;
 use crate::runtime::state::{Metrics, TrainState};
 use crate::runtime::{Backend, StepCoefs, TrainData};
+use crate::solvers::error::SolveErrorKind;
 
 /// Common knobs for a training run (scaled-down defaults; the paper's
 /// epoch counts are listed in each driver's docs).
@@ -46,6 +47,17 @@ impl Default for TrainOpts {
 /// One budget-ladder-routed train step: run on the router's rung, retry
 /// the same batch on escalation (a truncated solve's gradients are
 /// biased, so its candidate state is discarded), commit otherwise.
+///
+/// Failure routing keys off the typed [`Metrics::error`] kind
+/// (DESIGN.md §Robustness):
+///
+/// * `BudgetExhausted` — the solve was merely truncated; escalate to the
+///   next rung and retry the batch (the historical behavior).
+/// * any other kind (`NonFiniteState`, `StepSizeUnderflow`, ...) — the
+///   vector field is diverging, which no budget can fix: the batch is
+///   **skipped** (candidate state discarded, parameters untouched,
+///   rung unchanged) instead of burning every rung on it and committing
+///   a NaN update.  Training continues on the next batch.
 pub(crate) fn routed_step(
     backend: &dyn Backend,
     model: &str,
@@ -57,6 +69,10 @@ pub(crate) fn routed_step(
 ) -> Result<Metrics> {
     loop {
         let out = backend.train_step(model, tay, router.rung(), state, data, coefs)?;
+        if matches!(out.metrics.error, Some(kind) if kind != SolveErrorKind::BudgetExhausted) {
+            router.note_skip();
+            return Ok(out.metrics);
+        }
         if router.observe(
             out.metrics.naccept + out.metrics.nreject,
             out.metrics.success,

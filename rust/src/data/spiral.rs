@@ -25,7 +25,7 @@ pub fn spiral_ode_trajectory(u0: [f64; 2], ts: &[f64]) -> Vec<f32> {
         Taping::Off,
         &mut [],
     );
-    assert!(out.success, "ground-truth spiral solve failed");
+    out.expect("ground-truth spiral solve failed");
     zs.iter().flat_map(|z| z.iter().map(|&v| v as f32)).collect()
 }
 
@@ -47,7 +47,7 @@ pub fn spiral_sde_moments(
         &opts,
         &EnsembleOptions::default(),
     );
-    assert!(m.success, "ground-truth spiral SDE ensemble failed");
+    assert!(m.success(), "ground-truth spiral SDE ensemble failed");
     (
         m.mu.iter().map(|&v| v as f32).collect(),
         m.var.iter().map(|&v| v as f32).collect(),

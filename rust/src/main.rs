@@ -13,7 +13,8 @@
 //! regnde serve --registry <dir> --addr 127.0.0.1:7878
 //!                                              # micro-batching TCP server
 //! regnde predict --addr 127.0.0.1:7878 --model spiral-er \
-//!                [--u0 2.0,0.0] [--requests 32] [--concurrency 8]
+//!                [--u0 2.0,0.0] [--requests 32] [--concurrency 8] \
+//!                [--deadline-ms 250] [--retries 3] [--chaos]
 //!                                              # remote serving client
 //! regnde validate                              # run every artifact (pjrt)
 //! ```
@@ -25,6 +26,14 @@
 //! tsit5, dopri5, bs3).  `--checkpoint` persists the trained model as a
 //! serving checkpoint (DESIGN.md §Serving); `serve` hosts a checkpoint
 //! directory and `predict --addr` talks to it.
+//!
+//! The serving client is drain-aware (DESIGN.md §Robustness):
+//! `--deadline-ms` attaches a per-request deadline the server may shed
+//! on, `--retries` retries shed/timed-out requests with exponential
+//! backoff + deterministic jitter, and `--chaos` turns the client into a
+//! fault injector — half-written frames, mid-request disconnects, slow
+//! dribbled writes — that passes only if the server keeps serving
+//! afterwards.
 
 use std::sync::Arc;
 
@@ -61,8 +70,12 @@ const VALUED: &[&str] = &[
     "concurrency",
     "max-batch",
     "max-wait-us",
+    "max-queue",
+    "max-conns",
     "nfe-quota",
     "workers",
+    "deadline-ms",
+    "retries",
 ];
 
 fn main() {
@@ -79,9 +92,11 @@ fn usage() -> String {
          [--epochs N] [--iters N] [--seeds 0,1] [--artifacts DIR] [--runs DIR] \
          [--checkpoint FILE] [--check-nfe] [--verbose]\n\
          serving: regnde serve --registry DIR [--addr A] [--max-batch N] \
-         [--max-wait-us U] [--nfe-quota Q] [--workers W]\n\
+         [--max-wait-us U] [--max-queue N] [--max-conns N] [--nfe-quota Q] \
+         [--workers W]\n\
          \x20        regnde predict --addr A --model ID [--u0 2.0,0.0] \
-         [--budget N] [--requests N] [--concurrency C]\n\
+         [--budget N] [--requests N] [--concurrency C] [--deadline-ms MS] \
+         [--retries N] [--chaos]\n\
          experiments: mnist-node latent-ode spiral-node spiral-nsde mnist-nsde\n\
          methods: vanilla steer taynode srnode ernode lrnode (+-combined, e.g. srnode+ernode)",
         regnde::solvers::Tableau::names().join("|")
@@ -232,9 +247,12 @@ fn serve(args: &Args) -> Result<()> {
     let policy = BatchPolicy {
         max_batch: args.get_usize("max-batch", 16)?.max(1),
         max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 2000)?),
+        max_queue: args.get_usize("max-queue", 256)?.max(1),
     };
     let opts = ServerOpts {
         nfe_quota: args.get_u64("nfe-quota", 1_000_000)?,
+        max_conns: args.get_usize("max-conns", 64)?.max(1),
+        ..Default::default()
     };
     let workers = args.get_usize("workers", regnde::util::threadpool::default_workers())?;
 
@@ -245,11 +263,14 @@ fn serve(args: &Args) -> Result<()> {
     let batcher = Arc::new(Batcher::new(Arc::clone(&registry), pool, policy));
     let listener = std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!(
-        "regnde serve: {} model(s) at {} (max-batch {}, max-wait {}us, quota {} attempts/conn)",
+        "regnde serve: {} model(s) at {} (max-batch {}, max-wait {}us, \
+         max-queue {}, max-conns {}, quota {} attempts/conn)",
         ids.len(),
         listener.local_addr()?,
         policy.max_batch,
         policy.max_wait.as_micros(),
+        policy.max_queue,
+        opts.max_conns,
         opts.nfe_quota,
     );
     for id in &ids {
@@ -259,10 +280,92 @@ fn serve(args: &Args) -> Result<()> {
     server.serve(listener)
 }
 
+/// Exponential backoff with deterministic full jitter for retrying shed
+/// or timed-out requests (DESIGN.md §Robustness).  The jitter is a hash
+/// of (request, lane, attempt) rather than an RNG draw, so concurrent
+/// lanes shed from the same window decorrelate their retries yet every
+/// run of the client is reproducible.
+fn backoff_delay(attempt: usize, lane: usize, req: usize) -> std::time::Duration {
+    let base = 5u64 << attempt.min(6); // 5, 10, 20, ... 320 ms
+    let jitter = (req as u64)
+        .wrapping_mul(0x9E37_79B9)
+        .wrapping_add((lane as u64).wrapping_mul(0x85EB_CA6B))
+        .wrapping_add(attempt as u64)
+        % base;
+    std::time::Duration::from_millis(base + jitter)
+}
+
+/// `--chaos`: a network fault injector.  Each lane cycles through
+/// half-written frames, garbage frames, slow dribbled writes, and
+/// mid-request disconnects (a request sent, then the socket dropped
+/// before reading the reply — the server answers a dead peer).  All
+/// faults are fired before the normal request phase; the client passes
+/// only if the server keeps serving afterwards.
+fn chaos_storm(addr: &str, model: &str, u0: &[f32], rounds: usize, lanes: usize) {
+    use std::io::{Read, Write};
+
+    std::thread::scope(|scope| {
+        for lane in 0..lanes {
+            scope.spawn(move || {
+                for round in 0..rounds {
+                    let Ok(mut stream) = std::net::TcpStream::connect(addr) else {
+                        continue; // connection cap shed — that's containment too
+                    };
+                    let mut line = Request::Predict {
+                        model: model.to_string(),
+                        u0: u0.to_vec(),
+                        budget: None,
+                        deadline_ms: Some(100),
+                    }
+                    .encode();
+                    line.push('\n');
+                    let bytes = line.as_bytes();
+                    match (lane + round) % 4 {
+                        0 => {
+                            // half-written frame, then disconnect
+                            let _ = stream.write_all(&bytes[..bytes.len() / 2]);
+                        }
+                        1 => {
+                            // garbage frame; the reply must be an error,
+                            // not a hangup-by-panic
+                            let _ = stream.write_all(b"}{ not json at all\n");
+                            let mut buf = [0u8; 512];
+                            let _ = stream.read(&mut buf);
+                        }
+                        2 => {
+                            // slow dribbled write, a few bytes at a time —
+                            // exercises the server's partial-line reads
+                            // across its read-timeout ticks
+                            for chunk in bytes.chunks(3) {
+                                if stream.write_all(chunk).is_err() {
+                                    break;
+                                }
+                                std::thread::sleep(std::time::Duration::from_millis(2));
+                            }
+                            let mut buf = [0u8; 512];
+                            let _ = stream.read(&mut buf);
+                        }
+                        _ => {
+                            // full request, then vanish before the reply
+                            let _ = stream.write_all(bytes);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    println!("chaos: {} fault rounds across {lanes} lane(s) injected", rounds * lanes);
+}
+
 /// `regnde predict --addr <a> --model <id>`: serving client.  Fires
 /// `--requests` predictions across `--concurrency` connections (each
 /// lane holds one connection; concurrent lanes are what the server
 /// coalesces) and exits nonzero unless every request succeeds.
+/// `--deadline-ms` attaches a per-request deadline; shed replies and
+/// transport failures are retried up to `--retries` times with
+/// exponential backoff + jitter.  `--chaos` runs the fault-injection
+/// storm first — the normal phase then doubles as the proof that the
+/// server survived it.
 fn remote_predict(args: &Args) -> Result<()> {
     let addr = args.get("addr").context("--addr required")?.to_string();
     let model = args.get("model").context("--model <id> required")?.to_string();
@@ -275,53 +378,118 @@ fn remote_predict(args: &Args) -> Result<()> {
         Some(b) => Some(b.parse::<u64>().context("--budget expects an integer")?),
         None => None,
     };
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(d) => Some(d.parse::<u64>().context("--deadline-ms expects milliseconds")?),
+        None => None,
+    };
+    let retries = args.get_usize("retries", 0)?;
     let requests = args.get_usize("requests", 1)?.max(1);
     let concurrency = args.get_usize("concurrency", 1)?.clamp(1, requests);
 
-    let failures = std::sync::atomic::AtomicUsize::new(0);
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    if args.flag("chaos") {
+        chaos_storm(&addr, &model, &u0, requests.max(8), concurrency.max(4));
+    }
+
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let failures = AtomicUsize::new(0);
+    let sheds = AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
     std::thread::scope(|scope| -> Result<()> {
         let mut lanes = Vec::new();
         for lane in 0..concurrency {
             let (addr, model, u0) = (&addr, &model, &u0);
-            let (failures, next) = (&failures, &next);
+            let (failures, sheds, next) = (&failures, &sheds, &next);
             lanes.push(scope.spawn(move || -> Result<()> {
-                let mut client = Client::connect(addr)?;
-                loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                let mut client = Some(Client::connect(addr)?);
+                'requests: loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
                     if i >= requests {
                         return Ok(());
                     }
-                    let resp = client.request(&Request::Predict {
+                    let req = Request::Predict {
                         model: model.clone(),
                         u0: u0.clone(),
                         budget,
-                    })?;
-                    match resp {
-                        Response::Predict {
-                            nfe,
-                            naccept,
-                            nreject,
-                            batch,
-                            micros,
-                            ref traj,
-                            ..
-                        } => {
-                            println!(
-                                "req {i} (lane {lane}): ok nfe={nfe} attempts={} \
-                                 batch={batch} latency={micros}us traj[0..2]=[{:.4}, {:.4}]",
-                                naccept + nreject,
-                                traj.first().copied().unwrap_or(f32::NAN),
-                                traj.get(1).copied().unwrap_or(f32::NAN),
-                            );
+                        deadline_ms,
+                    };
+                    for attempt in 0..=retries {
+                        let last = attempt == retries;
+                        if attempt > 0 {
+                            std::thread::sleep(backoff_delay(attempt - 1, lane, i));
                         }
-                        Response::Error(e) => {
-                            failures.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                            eprintln!("req {i} (lane {lane}): ERROR {e}");
-                        }
-                        other => {
-                            failures.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                            eprintln!("req {i} (lane {lane}): unexpected response {other:?}");
+                        let conn = match client.as_mut() {
+                            Some(c) => c,
+                            None => match Client::connect(addr) {
+                                Ok(c) => client.insert(c),
+                                Err(e) => {
+                                    if last {
+                                        failures.fetch_add(1, Ordering::SeqCst);
+                                        eprintln!("req {i} (lane {lane}): reconnect failed: {e:#}");
+                                        continue 'requests;
+                                    }
+                                    continue;
+                                }
+                            },
+                        };
+                        match conn.request(&req) {
+                            Ok(Response::Predict {
+                                nfe,
+                                naccept,
+                                nreject,
+                                batch,
+                                micros,
+                                ref traj,
+                                ..
+                            }) => {
+                                println!(
+                                    "req {i} (lane {lane}): ok nfe={nfe} attempts={} \
+                                     batch={batch} latency={micros}us traj[0..2]=[{:.4}, {:.4}]",
+                                    naccept + nreject,
+                                    traj.first().copied().unwrap_or(f32::NAN),
+                                    traj.get(1).copied().unwrap_or(f32::NAN),
+                                );
+                                continue 'requests;
+                            }
+                            Ok(Response::Shed(reason)) => {
+                                // Retryable: the server did no solver work.
+                                sheds.fetch_add(1, Ordering::SeqCst);
+                                if last {
+                                    failures.fetch_add(1, Ordering::SeqCst);
+                                    eprintln!(
+                                        "req {i} (lane {lane}): SHED after {} attempt(s): {reason}",
+                                        retries + 1
+                                    );
+                                    continue 'requests;
+                                }
+                            }
+                            Ok(Response::Error { msg, kind }) => {
+                                // Not blindly retryable: the solve ran and
+                                // failed, or the request itself is bad.
+                                failures.fetch_add(1, Ordering::SeqCst);
+                                match kind {
+                                    Some(k) => eprintln!(
+                                        "req {i} (lane {lane}): ERROR [{k}] {msg}"
+                                    ),
+                                    None => eprintln!("req {i} (lane {lane}): ERROR {msg}"),
+                                }
+                                continue 'requests;
+                            }
+                            Ok(other) => {
+                                failures.fetch_add(1, Ordering::SeqCst);
+                                eprintln!("req {i} (lane {lane}): unexpected response {other:?}");
+                                continue 'requests;
+                            }
+                            Err(e) => {
+                                // Transport failure (timeout, hangup):
+                                // drop the connection and retry on a
+                                // fresh one.
+                                client = None;
+                                if last {
+                                    failures.fetch_add(1, Ordering::SeqCst);
+                                    eprintln!("req {i} (lane {lane}): transport error: {e:#}");
+                                    continue 'requests;
+                                }
+                            }
                         }
                     }
                 }
@@ -333,7 +501,11 @@ fn remote_predict(args: &Args) -> Result<()> {
         Ok(())
     })?;
 
-    let failed = failures.load(std::sync::atomic::Ordering::SeqCst);
+    let failed = failures.load(Ordering::SeqCst);
+    let shed = sheds.load(Ordering::SeqCst);
+    if shed > 0 {
+        println!("{shed} shed repl(y/ies) observed (retried with backoff)");
+    }
     ensure!(
         failed == 0,
         "{failed}/{requests} serving request(s) failed"

@@ -41,8 +41,13 @@
 //!
 //! Budget-ladder semantics: each rung is a **total** step-attempt budget
 //! for the train-time solve (summed over save segments, and over the
-//! ensemble for `spiral_nsde`); exhausting it returns `success = false`
-//! so the coordinator's router escalates and retries the batch.
+//! ensemble for `spiral_nsde`); exhausting it surfaces as a typed
+//! [`SolveErrorKind::BudgetExhausted`] in [`Metrics::error`]
+//! (`success = false`) so the coordinator's router escalates and retries
+//! the batch.  Other failure classes (`NonFiniteState`,
+//! `StepSizeUnderflow` — a diverging vector field, not an undersized
+//! budget) are reported the same way but make the router *skip* the
+//! batch instead of burning rungs on it (DESIGN.md §Robustness).
 
 #![allow(clippy::too_many_arguments)]
 
@@ -55,6 +60,7 @@ use super::state::{Metrics, TrainState};
 use crate::models::{Adam, Mlp, MlpScratch};
 use crate::solvers::adjoint::{ode_backward_sys, sde_backward_sys, OdeTape, RegCoefs, SdeTape};
 use crate::solvers::driver::{Saveat, SolveOptions, StepBudget};
+use crate::solvers::error::{SolveErrorKind, SolveResultExt};
 use crate::solvers::observer::{LocalReg, StepObserver};
 use crate::solvers::ode::{self, Stats};
 use crate::solvers::sde;
@@ -359,7 +365,9 @@ impl NativeBackend {
     /// `drive()` over the shared save grid `ts`, so concurrent predict
     /// requests share every solver step.  Returns one `[T * d]`
     /// trajectory per request plus the batch solve's [`Stats`] (the NFE
-    /// every rider pays once, jointly) and the success flag.
+    /// every rider pays once, jointly) and the solve's typed failure
+    /// class (`None` on success) — the batcher forwards the kind to
+    /// every rider of a poisoned window.
     ///
     /// `budget: Some(b)` bounds the whole batch solve
     /// ([`StepBudget::Total`], the serving admission unit); `None` keeps
@@ -374,7 +382,7 @@ impl NativeBackend {
         u0s: &[f32],
         ts: &[f32],
         budget: Option<u64>,
-    ) -> Result<(Vec<Vec<f32>>, Stats, bool)> {
+    ) -> Result<(Vec<Vec<f32>>, Stats, Option<SolveErrorKind>)> {
         let m = self.get(model)?;
         let dynamics = match &m.arch {
             Arch::SpiralNode { dynamics } => dynamics,
@@ -414,7 +422,7 @@ impl NativeBackend {
                 }
             }
         }
-        Ok((trajs, out.stats, out.success))
+        Ok((trajs, out.stats(), out.error_kind()))
     }
 }
 
@@ -467,15 +475,17 @@ fn softmax_ce(
     (loss / b as f64, correct as f64 / b as f64)
 }
 
-/// Build the standard metric block from solver stats.
-fn metrics(loss: f64, metric: f64, stats: &Stats, success: bool) -> Metrics {
+/// Build the standard metric block from solver stats plus the solve's
+/// typed failure class (`None` on success).
+fn metrics(loss: f64, metric: f64, stats: &Stats, error: Option<SolveErrorKind>) -> Metrics {
     Metrics {
         loss,
         metric,
         nfe: stats.nfe as f64,
         naccept: stats.naccept as f64,
         nreject: stats.nreject as f64,
-        success,
+        success: error.is_none(),
+        error,
         r_e: stats.r_e,
         r_e2: stats.r_e2,
         r_s: stats.r_s,
@@ -786,7 +796,7 @@ impl Backend for NativeBackend {
         let coef_s = coefs.coef_s as f64;
         let coef_l = coefs.coef_l as f64;
 
-        let (data_loss, metric, stats, success, r_l) = match (&m.arch, data) {
+        let (data_loss, metric, stats, solve_err, r_l) = match (&m.arch, data) {
             (Arch::SpiralNode { dynamics }, TrainData::Trajectory { data, ts }) => {
                 spiral_node_pass(
                     dynamics,
@@ -898,7 +908,7 @@ impl Backend for NativeBackend {
             coefs.lr as f64,
             state.iter,
         );
-        let mut step_metrics = metrics(loss, metric, &stats, success);
+        let mut step_metrics = metrics(loss, metric, &stats, solve_err);
         step_metrics.r_l = r_l;
         Ok(StepOutput {
             params,
@@ -924,14 +934,14 @@ impl Backend for NativeBackend {
         let theta = to_f64(params);
         match (&m.arch, data) {
             (Arch::SpiralNode { dynamics }, TrainData::Trajectory { data, ts }) => {
-                let (pred, loss, stats, ok) = spiral_node_predict(
+                let (pred, loss, stats, err) = spiral_node_predict(
                     dynamics,
                     &theta,
                     data,
                     ts,
                     &self.ode_predict_opts(m.predict_tol),
                 )?;
-                Ok((pred, metrics(loss, loss, &stats, ok)))
+                Ok((pred, metrics(loss, loss, &stats, err)))
             }
             (Arch::SpiralNsde { drift, diffusion }, TrainData::Moments { u0, mu, var, ts }) => {
                 spiral_nsde_predict(
@@ -948,7 +958,7 @@ impl Backend for NativeBackend {
                 )
             }
             (Arch::MnistNode { enc, dynamics, clf }, TrainData::Classify { x, y }) => {
-                let (logits, loss, acc, stats, ok) = mnist_node_predict(
+                let (logits, loss, acc, stats, err) = mnist_node_predict(
                     enc,
                     dynamics,
                     clf,
@@ -958,7 +968,7 @@ impl Backend for NativeBackend {
                     y,
                     &self.ode_predict_opts(m.predict_tol),
                 )?;
-                Ok((logits, metrics(loss, acc, &stats, ok)))
+                Ok((logits, metrics(loss, acc, &stats, err)))
             }
             (
                 Arch::MnistNsde {
@@ -1057,7 +1067,7 @@ fn spiral_node_pass(
     coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool, f64)> {
+) -> Result<(f64, f64, Stats, Option<SolveErrorKind>, f64)> {
     let d = dynamics.in_dim();
     ensure!(ts.len() >= 2, "need at least two save points");
     ensure!(data.len() == ts.len() * d, "trajectory shape mismatch");
@@ -1089,7 +1099,7 @@ fn spiral_node_pass(
 
     let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
     ode_backward_sys(&tape, &opts.tableau, &save_grads, &reg, grad, &mut sys);
-    Ok((mse, mse, out.stats, out.success, r_l))
+    Ok((mse, mse, out.stats(), out.error_kind(), r_l))
 }
 
 fn spiral_node_predict(
@@ -1098,7 +1108,7 @@ fn spiral_node_predict(
     data: &[f32],
     ts: &[f32],
     opts: &SolveOptions,
-) -> Result<(Vec<f32>, f64, Stats, bool)> {
+) -> Result<(Vec<f32>, f64, Stats, Option<SolveErrorKind>)> {
     let d = dynamics.in_dim();
     ensure!(data.len() == ts.len() * d, "trajectory shape mismatch");
     let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
@@ -1115,7 +1125,7 @@ fn spiral_node_predict(
             pred.push(z[k] as f32);
         }
     }
-    Ok((pred, mse, out.stats, out.success))
+    Ok((pred, mse, out.stats(), out.error_kind()))
 }
 
 // ---------------------------------------------------------------------------
@@ -1175,7 +1185,7 @@ fn spiral_nsde_pass(
     coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool, f64)> {
+) -> Result<(f64, f64, Stats, Option<SolveErrorKind>, f64)> {
     let d = drift.in_dim();
     let t_pts = ts.len();
     ensure!(t_pts >= 2, "need at least two save points");
@@ -1196,7 +1206,10 @@ fn spiral_nsde_pass(
         1,
     );
     let mut stats = Stats::default();
-    let mut success = true;
+    // First (lowest-index) trajectory failure, matching the ensemble
+    // layer's deterministic pick; later trajectories still run so the
+    // tape set stays complete and the gradient deterministic.
+    let mut solve_err: Option<SolveErrorKind> = None;
     let mut tapes: Vec<SdeTape> = Vec::with_capacity(n_traj);
     let mut states: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_traj);
     // Per-trajectory backward weights (LRNSDE samples one step per
@@ -1219,8 +1232,10 @@ fn spiral_nsde_pass(
             Some(&mut tape),
             &mut [&mut local],
         );
-        stats.merge(&out.stats);
-        success &= out.success;
+        stats.merge(&out.stats());
+        if solve_err.is_none() {
+            solve_err = out.error_kind();
+        }
         tapes.push(tape);
         states.push(zs);
         let (reg, value) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
@@ -1247,7 +1262,7 @@ fn spiral_nsde_pass(
             sde_backward_sys(&tapes[i], &sg, &regs[i], grad, &mut sys);
         }
     }
-    Ok((gmm, gmm, stats, success, r_l))
+    Ok((gmm, gmm, stats, solve_err, r_l))
 }
 
 fn spiral_nsde_predict(
@@ -1272,15 +1287,17 @@ fn spiral_nsde_predict(
     let th_diff = &theta[arch.range(1)];
     let mut sys = MlpSde::new(drift, th_drift, 0..0, diffusion, th_diff, 0..0, 1);
     let mut stats = Stats::default();
-    let mut success = true;
+    let mut solve_err: Option<SolveErrorKind> = None;
     let mut states: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_traj);
     for i in 0..n_traj {
         let z0: Vec<f64> = u0[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect();
         let mut rng = traj_rng(seed as u64 ^ 0x9E9D_1C7, i);
         let (zs, out) =
             sde::drive(&mut sys, &z0, Saveat::Grid(&ts64), &mut rng, opts, None, &mut []);
-        stats.merge(&out.stats);
-        success &= out.success;
+        stats.merge(&out.stats());
+        if solve_err.is_none() {
+            solve_err = out.error_kind();
+        }
         states.push(zs);
     }
     let (gmm, _, _) = moment_loss(&states, mu, var, t_pts, d);
@@ -1293,7 +1310,7 @@ fn spiral_nsde_predict(
             }
         }
     }
-    Ok((out, metrics(gmm, gmm, &stats, success)))
+    Ok((out, metrics(gmm, gmm, &stats, solve_err)))
 }
 
 // ---------------------------------------------------------------------------
@@ -1401,7 +1418,7 @@ fn mnist_node_pass(
     coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool, f64)> {
+) -> Result<(f64, f64, Stats, Option<SolveErrorKind>, f64)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
@@ -1433,7 +1450,7 @@ fn mnist_node_pass(
     let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
     let dz0 = ode_backward_sys(&tape, &opts.tableau, &save_grads, &reg, grad, &mut sys);
     encoder_backward(enc, th_enc, x, &dz0, b, &mut grad[arch.range(0)], &mut se);
-    Ok((ce_loss, acc, out.stats, out.success, r_l))
+    Ok((ce_loss, acc, out.stats(), out.error_kind(), r_l))
 }
 
 fn mnist_node_predict(
@@ -1445,7 +1462,7 @@ fn mnist_node_predict(
     x: &[f32],
     y: &[f32],
     opts: &SolveOptions,
-) -> Result<(Vec<f32>, f64, f64, Stats, bool)> {
+) -> Result<(Vec<f32>, f64, f64, Stats, Option<SolveErrorKind>)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
@@ -1458,7 +1475,7 @@ fn mnist_node_predict(
     let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&[0.0, 1.0]), opts, None, &mut []);
     let (loss, acc, _, logits) = classify_batch(clf, th_clf, &zs[1], y, b, None);
     let logits: Vec<f32> = logits.iter().map(|&v| v as f32).collect();
-    Ok((logits, loss, acc, out.stats, out.success))
+    Ok((logits, loss, acc, out.stats(), out.error_kind()))
 }
 
 // ---------------------------------------------------------------------------
@@ -1480,7 +1497,7 @@ fn mnist_nsde_pass(
     coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool, f64)> {
+) -> Result<(f64, f64, Stats, Option<SolveErrorKind>, f64)> {
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
@@ -1522,7 +1539,7 @@ fn mnist_nsde_pass(
     let (reg, r_l) = resolve_local(RegCoefs::global(coef_e, coef_s), &local, coef_l);
     let dz0 = sde_backward_sys(&tape, &save_grads, &reg, grad, &mut sys);
     encoder_backward(enc, th_enc, x, &dz0, b, &mut grad[arch.range(0)], &mut se);
-    Ok((ce_loss, acc, out.stats, out.success, r_l))
+    Ok((ce_loss, acc, out.stats(), out.error_kind(), r_l))
 }
 
 fn mnist_nsde_predict(
@@ -1550,7 +1567,7 @@ fn mnist_nsde_predict(
 
     // Paper-style prediction: mean logits over several driving paths.
     let mut stats = Stats::default();
-    let mut success = true;
+    let mut solve_err: Option<SolveErrorKind> = None;
     let mut mean_logits = vec![0.0f64; b * CLASSES];
     let mut sys = MlpSde::new(drift, th_drift, 0..0, diffusion, th_diff, 0..0, b);
     let mut sc = clf.scratch();
@@ -1566,8 +1583,10 @@ fn mnist_nsde_predict(
             None,
             &mut [],
         );
-        stats.merge(&out.stats);
-        success &= out.success;
+        stats.merge(&out.stats());
+        if solve_err.is_none() {
+            solve_err = out.error_kind();
+        }
         for r in 0..b {
             clf.forward(th_clf, &zs[1][r * l..(r + 1) * l], &mut lrow, &mut sc);
             for k in 0..CLASSES {
@@ -1578,7 +1597,7 @@ fn mnist_nsde_predict(
     let mut dlogits = vec![0.0; b * CLASSES];
     let (loss, acc) = softmax_ce(&mean_logits, y, b, CLASSES, &mut dlogits);
     let out: Vec<f32> = mean_logits.iter().map(|&v| v as f32).collect();
-    Ok((out, metrics(loss, acc, &stats, success)))
+    Ok((out, metrics(loss, acc, &stats, solve_err)))
 }
 
 // ---------------------------------------------------------------------------
@@ -1601,7 +1620,7 @@ fn latent_ode_pass(
     coef_l: f64,
     seed: u32,
     grad: &mut [f64],
-) -> Result<(f64, f64, Stats, bool, f64)> {
+) -> Result<(f64, f64, Stats, Option<SolveErrorKind>, f64)> {
     let c = dec.out_dim();
     let t_pts = ts.len();
     ensure!(t_pts >= 2, "need at least two save points");
@@ -1707,7 +1726,7 @@ fn latent_ode_pass(
             );
         }
     }
-    Ok((mse + kl_term, mse, out.stats, out.success, r_l))
+    Ok((mse + kl_term, mse, out.stats(), out.error_kind(), r_l))
 }
 
 fn latent_ode_predict(
@@ -1763,7 +1782,7 @@ fn latent_ode_predict(
             }
         }
     }
-    Ok((preds, metrics(mse, mse, &out.stats, out.success)))
+    Ok((preds, metrics(mse, mse, &out.stats(), out.error_kind())))
 }
 
 #[cfg(test)]
@@ -2010,10 +2029,39 @@ mod tests {
             .train_step("spiral_node", false, 0, &state, &data, &StepCoefs::default())
             .unwrap();
         assert!(!out.metrics.success, "2 attempts cannot cover 15 segments");
+        assert_eq!(
+            out.metrics.error,
+            Some(SolveErrorKind::BudgetExhausted),
+            "the router keys escalation off the typed kind"
+        );
         let out = be
             .train_step("spiral_node", false, 2, &state, &data, &StepCoefs::default())
             .unwrap();
         assert!(out.metrics.success, "top rung must succeed");
+        assert_eq!(out.metrics.error, None);
+    }
+
+    #[test]
+    fn non_finite_params_surface_as_typed_error_not_a_panic() {
+        // A blown-up parameter vector makes the first drift evaluation
+        // NaN: train_step must return Ok with a NonFiniteState metric
+        // block (the router skips the batch), and the backward walk over
+        // the failed solve's short tape must stay panic-free.
+        let (traj, ts) = spiral_fixture(16);
+        let be = NativeBackend::new();
+        let info = be.model("spiral_node").unwrap();
+        let mut params = be.init_params("spiral_node", 0).unwrap();
+        params[0] = f32::NAN;
+        let state = TrainState::new(params.clone(), info.opt_state_size);
+        let data = TrainData::Trajectory { data: &traj, ts: &ts };
+        let out = be
+            .train_step("spiral_node", false, 0, &state, &data, &StepCoefs::default())
+            .unwrap();
+        assert!(!out.metrics.success);
+        assert_eq!(out.metrics.error, Some(SolveErrorKind::NonFiniteState));
+        // Predict path contains the same failure.
+        let (_, m) = be.predict("spiral_node", &params, &data, 0).unwrap();
+        assert_eq!(m.error, Some(SolveErrorKind::NonFiniteState));
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::solvers::error::SolveErrorKind;
+
 /// Decoded standard metric vector.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Metrics {
@@ -16,6 +18,11 @@ pub struct Metrics {
     pub naccept: f64,
     pub nreject: f64,
     pub success: bool,
+    /// Typed failure class when `success` is false (native backend; the
+    /// 9-element artifact vector only carries a boolean, decoded as
+    /// `BudgetExhausted` — the only failure the PJRT lowering can hit).
+    /// The budget router keys its skip/escalate policy off this.
+    pub error: Option<SolveErrorKind>,
     pub r_e: f64,
     /// `Σ E_j²` — the unsquared-mean R_E variant (§4.1.2 note), the
     /// natural diagnostic for tolerance sweeps.  Native backend only; the
@@ -34,13 +41,19 @@ impl Metrics {
         if v.len() != 9 {
             bail!("metric vector has {} elements, expected 9", v.len());
         }
+        let success = v[5] > 0.5;
         Ok(Metrics {
             loss: v[0] as f64,
             metric: v[1] as f64,
             nfe: v[2] as f64,
             naccept: v[3] as f64,
             nreject: v[4] as f64,
-            success: v[5] > 0.5,
+            success,
+            error: if success {
+                None
+            } else {
+                Some(SolveErrorKind::BudgetExhausted)
+            },
             r_e: v[6] as f64,
             r_e2: 0.0,
             r_s: v[7] as f64,
@@ -111,7 +124,14 @@ mod tests {
         assert_eq!(m.loss, 1.5);
         assert_eq!(m.nfe, 253.0);
         assert!(m.success);
+        assert_eq!(m.error, None);
         assert!(Metrics::decode(&v[..5]).is_err());
+
+        let mut failed = v;
+        failed[5] = 0.0;
+        let m = Metrics::decode(&failed).unwrap();
+        assert!(!m.success);
+        assert_eq!(m.error, Some(SolveErrorKind::BudgetExhausted));
     }
 
     #[test]

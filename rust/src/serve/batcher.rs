@@ -21,22 +21,37 @@
 //! `max_wait` is a hard latency floor for coalesced batches: the leader
 //! sleeps the full window even if it fills early (keep it µs-scale).
 //!
+//! ## Failure containment (DESIGN.md §Robustness)
+//!
+//! * **Bounded admission**: at most [`BatchPolicy::max_queue`] requests
+//!   may be queued per model across its open windows.  An arrival over
+//!   that bound is **shed** ([`BatchError::Shed`]) without touching the
+//!   solver — backpressure instead of unbounded memory growth.
+//! * **Deadlines**: a request carrying a deadline that expires while it
+//!   waits in a window is shed when the window closes, before the solve
+//!   runs — expired work is never paid for.
+//! * **Typed solve failures**: a failing batch solve fails **only its
+//!   own window's requests**, each rider receiving the solver's
+//!   [`SolveErrorKind`] ([`BatchError::Solve`]); other windows and
+//!   models are untouched.
+//! * **Poison tolerance**: all internal locks recover from a panicked
+//!   holder (`into_inner`) — one crashed executor thread cannot take
+//!   down every later request with poison panics.
+//!
 //! Every response carries the batch solve's [`Stats`] (per-request NFE
 //! accounting: the steps a request's solve took, shared by its whole
-//! batch) and the realized batch size.  A failing solve — budget
-//! exhausted, non-finite state, model not row-batchable — fails **only
-//! its own window's requests**; other windows and models are untouched.
+//! batch) and the realized batch size.
 //!
 //! [`ThreadPool`]: crate::util::threadpool::ThreadPool
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
-use super::registry::{Registry, ServableModel};
+use super::registry::{PredictError, Registry, ServableModel};
+use crate::solvers::error::SolveErrorKind;
 use crate::solvers::ode::Stats;
 use crate::util::threadpool::ThreadPool;
 
@@ -48,6 +63,9 @@ pub struct BatchPolicy {
     /// How long a window's leader waits for followers before the batch
     /// solves (the micro-batching latency budget).
     pub max_wait: Duration,
+    /// Bounded admission: the most requests that may be queued per model
+    /// across its open windows; arrivals beyond it are shed.
+    pub max_queue: usize,
 }
 
 impl Default for BatchPolicy {
@@ -55,6 +73,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 16,
             max_wait: Duration::from_micros(2000),
+            max_queue: 256,
         }
     }
 }
@@ -73,10 +92,40 @@ pub struct BatchReply {
     pub batch: usize,
 }
 
+/// Why a submitted request failed — the typed contract the server maps
+/// onto wire responses (`shed` vs `error`+`kind`, DESIGN.md §Robustness).
+#[derive(Clone, Debug)]
+pub enum BatchError {
+    /// Load-shed before any solver work (admission queue full, deadline
+    /// expired).  Retryable with backoff.
+    Shed(String),
+    /// The batch solve ran and failed with a typed solver error; every
+    /// rider of the poisoned window receives the same kind.
+    Solve { kind: SolveErrorKind, msg: String },
+    /// Rejected before joining a window: unknown model, wrong shape,
+    /// non-finite input.  Not retryable — the same request fails again.
+    Rejected(String),
+}
+
+impl fmt::Display for BatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BatchError::Shed(m) => write!(f, "shed: {m}"),
+            BatchError::Solve { kind, msg } => write!(f, "{msg} [{kind}]"),
+            BatchError::Rejected(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {}
+
 struct Job {
     u0: Vec<f32>,
     budget: u64,
-    tx: mpsc::Sender<Result<BatchReply, String>>,
+    /// Absolute deadline; a job still queued past it is shed at window
+    /// close instead of solved.
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<Result<BatchReply, BatchError>>,
 }
 
 #[derive(Default)]
@@ -92,6 +141,14 @@ struct ModelQueue {
     open: Option<u64>,
 }
 
+impl ModelQueue {
+    /// Requests currently queued across this model's open windows (the
+    /// bounded-admission unit).
+    fn queued(&self) -> usize {
+        self.windows.values().map(|w| w.jobs.len()).sum()
+    }
+}
+
 /// Aggregate batcher telemetry (served through the `stats` protocol op
 /// and asserted by the batcher tests).
 #[derive(Clone, Copy, Debug, Default)]
@@ -102,12 +159,20 @@ pub struct BatcherStats {
     /// Sum of batch-solve NFE over all batches (mean NFE per request =
     /// weighted by how many requests shared each solve).
     pub nfe_total: u64,
+    /// Requests shed by backpressure (queue full or deadline expired)
+    /// without any solver work.
+    pub shed: u64,
 }
 
 impl BatcherStats {
     pub fn mean_batch(&self) -> f64 {
         self.requests as f64 / (self.batches as f64).max(1.0)
     }
+}
+
+/// Poison-tolerant lock (see module docs).
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// The micro-batching queue over a [`Registry`] and a shared
@@ -138,7 +203,11 @@ impl Batcher {
     }
 
     pub fn stats(&self) -> BatcherStats {
-        *self.stats.lock().unwrap()
+        *plock(&self.stats)
+    }
+
+    fn note_shed(&self) {
+        plock(&self.stats).shed += 1;
     }
 
     /// Serve one prediction, blocking until its batch solves.  `budget`
@@ -149,24 +218,40 @@ impl Batcher {
     /// alone: the batch solves under the minimum of its riders' budgets,
     /// so an underfunded request must not drag a shared window down to a
     /// bound the other riders never asked for.
-    pub fn submit(&self, model_id: &str, u0: Vec<f32>, budget: Option<u64>) -> Result<BatchReply> {
-        let model = self.registry.get(model_id)?;
+    ///
+    /// `deadline`: absolute latency bound — expired requests are shed
+    /// (at admission or window close) instead of solved.
+    pub fn submit(
+        &self,
+        model_id: &str,
+        u0: Vec<f32>,
+        budget: Option<u64>,
+        deadline: Option<Instant>,
+    ) -> Result<BatchReply, BatchError> {
+        let model = self
+            .registry
+            .get(model_id)
+            .map_err(|e| BatchError::Rejected(format!("{e:#}")))?;
         let d = model.state_dim.ok_or_else(|| {
-            anyhow!(
+            BatchError::Rejected(format!(
                 "model {model_id:?} ({}) is not servable via the trajectory batcher",
                 model.model_name()
-            )
+            ))
         })?;
         if u0.is_empty() || u0.len() != d {
-            anyhow::bail!(
+            return Err(BatchError::Rejected(format!(
                 "model {model_id:?} expects a {d}-dim initial state, got {} floats",
                 u0.len()
-            );
+            )));
         }
         if !u0.iter().all(|v| v.is_finite()) {
-            anyhow::bail!(
+            return Err(BatchError::Rejected(format!(
                 "model {model_id:?}: initial state must be finite (got {u0:?})"
-            );
+            )));
+        }
+        if deadline.is_some_and(|dl| Instant::now() >= dl) {
+            self.note_shed();
+            return Err(BatchError::Shed("deadline expired before admission".into()));
         }
         let default_budget = model.default_budget();
         let budget = budget.unwrap_or(default_budget);
@@ -176,14 +261,29 @@ impl Batcher {
         // Join the open window, or open a new one and become its leader.
         // Underfunded requests always open (and close) their own window.
         let lead = {
-            let mut queues = self.queues.lock().unwrap();
+            let mut queues = plock(&self.queues);
             let q = queues.entry(model_id.to_string()).or_default();
-            let mut job = Some(Job { u0, budget, tx });
+            if q.queued() >= self.policy.max_queue {
+                drop(queues);
+                self.note_shed();
+                return Err(BatchError::Shed(format!(
+                    "admission queue full ({} queued >= max_queue {})",
+                    self.policy.max_queue, self.policy.max_queue
+                )));
+            }
+            let mut job = Some(Job {
+                u0,
+                budget,
+                deadline,
+                tx,
+            });
             if coalescible {
                 if let Some(id) = q.open {
                     if let Some(w) = q.windows.get_mut(&id) {
                         if w.jobs.len() < self.policy.max_batch {
-                            w.jobs.push(job.take().unwrap());
+                            if let Some(job) = job.take() {
+                                w.jobs.push(job);
+                            }
                         }
                     }
                 }
@@ -211,32 +311,58 @@ impl Batcher {
                 std::thread::sleep(self.policy.max_wait);
             }
             let jobs = {
-                let mut queues = self.queues.lock().unwrap();
-                let q = queues.get_mut(model_id).unwrap();
-                if q.open == Some(window_id) {
-                    q.open = None;
+                let mut queues = plock(&self.queues);
+                match queues.get_mut(model_id) {
+                    Some(q) => {
+                        if q.open == Some(window_id) {
+                            q.open = None;
+                        }
+                        let window = q.windows.remove(&window_id);
+                        window.map(|w| w.jobs).unwrap_or_default()
+                    }
+                    None => Vec::new(),
                 }
-                let window = q.windows.remove(&window_id);
-                window.map(|w| w.jobs).unwrap_or_default()
             };
-            if !jobs.is_empty() {
+            // Deadline shed at window close: riders whose latency budget
+            // expired while coalescing are answered `Shed` now, before
+            // the solve — the batch never pays for work nobody is
+            // waiting on.
+            let now = Instant::now();
+            let (live, expired): (Vec<Job>, Vec<Job>) = jobs
+                .into_iter()
+                .partition(|j| !j.deadline.is_some_and(|dl| now >= dl));
+            for job in expired {
+                self.note_shed();
+                let _ = job.tx.send(Err(BatchError::Shed(
+                    "deadline expired while batching".into(),
+                )));
+            }
+            if !live.is_empty() {
                 let stats = Arc::clone(&self.stats);
-                self.pool.execute(move || execute_batch(model, jobs, stats));
+                self.pool.execute(move || execute_batch(model, live, stats));
             }
         }
 
-        rx.recv()
-            .map_err(|_| anyhow!("batch executor dropped the request"))?
-            .map_err(|e| anyhow!(e))
+        match rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(BatchError::Rejected(
+                "batch executor dropped the request".into(),
+            )),
+        }
     }
 }
 
 /// Run one window's batch as a single row-batched solve and route each
 /// trajectory back to its requester.  On failure every rider of *this*
-/// batch gets the error; nothing else is affected.
-fn execute_batch(model: Arc<ServableModel>, jobs: Vec<Job>, stats: Arc<Mutex<BatcherStats>>) {
+/// batch gets the typed error; nothing else is affected.
+fn execute_batch(
+    model: Arc<ServableModel>,
+    jobs: Vec<Job>,
+    stats: Arc<Mutex<BatcherStats>>,
+) {
     let b = jobs.len();
-    let d = jobs[0].u0.len();
+    let Some(first) = jobs.first() else { return };
+    let d = first.u0.len();
     let mut u0s = Vec::with_capacity(b * d);
     for job in &jobs {
         u0s.extend_from_slice(&job.u0);
@@ -260,16 +386,19 @@ fn execute_batch(model: Arc<ServableModel>, jobs: Vec<Job>, stats: Arc<Mutex<Bat
             }
         }
         Err(e) => {
-            let msg = format!("{e:#}");
+            let err = match e {
+                PredictError::Solve { kind, msg } => BatchError::Solve { kind, msg },
+                PredictError::Invalid(msg) => BatchError::Rejected(msg),
+            };
             for job in jobs {
-                let _ = job.tx.send(Err(msg.clone()));
+                let _ = job.tx.send(Err(err.clone()));
             }
         }
     }
 }
 
 fn record(stats: &Mutex<BatcherStats>, batch: usize, solve: &Stats) {
-    let mut s = stats.lock().unwrap();
+    let mut s = plock(stats);
     s.batches += 1;
     s.requests += batch as u64;
     s.max_batch = s.max_batch.max(batch);

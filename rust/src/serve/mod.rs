@@ -45,9 +45,38 @@
 //! loopback and reports the regularized model's requests-per-second
 //! advantage.
 //!
+//! ## Failure containment (DESIGN.md §Robustness)
+//!
+//! No input reachable from the wire may panic a serving thread; every
+//! failure is **typed** and **scoped**:
+//!
+//! * A solve that runs and dies surfaces the solver's
+//!   [`SolveErrorKind`] end-to-end — [`PredictError::Solve`] out of the
+//!   registry, [`BatchError::Solve`] out of the batcher, and an error
+//!   response carrying the machine-readable `kind` string on the wire —
+//!   and poisons **only its own batch window**; other windows, models
+//!   and connections are untouched.
+//! * **Load shedding** is distinct from failure: a request refused
+//!   before any solver work (bounded admission queue
+//!   [`BatchPolicy::max_queue`], expired `deadline_ms`, connection cap
+//!   [`ServerOpts::max_conns`], draining shutdown) answers
+//!   `{"ok":false,"shed":true,...}` and is safely retryable with
+//!   backoff (`regnde predict --retries` does exactly that).
+//! * **Shutdown drains**: the accept loop stops, in-flight windows
+//!   flush and answer, connection threads are joined — then
+//!   [`Server::serve`] returns.
+//! * Corrupt checkpoints decode to typed [`CheckpointError`]s and
+//!   internal locks recover from panicked holders, so one bad artifact
+//!   or crashed thread cannot take the server down.
+//!
+//! `tests/fault_injection.rs` drives all of this adversarially —
+//! non-finite parameters, hostile wire bytes, mid-request disconnects —
+//! and asserts the server keeps answering.
+//!
 //! [`ExportedState`]: crate::runtime::ExportedState
 //! [`runtime::Backend::export_state`]: crate::runtime::Backend::export_state
 //! [`util::threadpool::ThreadPool`]: crate::util::threadpool::ThreadPool
+//! [`SolveErrorKind`]: crate::solvers::error::SolveErrorKind
 
 pub mod batcher;
 pub mod checkpoint;
@@ -55,8 +84,8 @@ pub mod protocol;
 pub mod registry;
 pub mod server;
 
-pub use batcher::{BatchPolicy, BatchReply, Batcher, BatcherStats};
+pub use batcher::{BatchError, BatchPolicy, BatchReply, Batcher, BatcherStats};
 pub use checkpoint::{Checkpoint, CheckpointError};
 pub use protocol::{Request, Response};
-pub use registry::{Registry, ServableModel};
+pub use registry::{PredictError, Registry, ServableModel};
 pub use server::{Client, Server, ServerOpts};

@@ -6,17 +6,19 @@
 //!
 //! ```text
 //! request  := predict | list | stats | shutdown
-//! predict  := {"op":"predict","model":<id>,"u0":[f32...][,"budget":<attempts>]}
+//! predict  := {"op":"predict","model":<id>,"u0":[f32...]
+//!              [,"budget":<attempts>][,"deadline_ms":<ms>]}
 //! list     := {"op":"list"}
 //! stats    := {"op":"stats"}
 //! shutdown := {"op":"shutdown"}
 //!
-//! response := ok | error
-//! error    := {"ok":false,"error":<string>}
+//! response := ok | shed | error
+//! shed     := {"ok":false,"shed":true,"error":<string>}
+//! error    := {"ok":false,"error":<string>[,"kind":<solve-error-kind>]}
 //! ok       := {"ok":true, ...op-specific fields...}
 //!   predict: "model","traj":[f32...],"nfe","naccept","nreject","batch","micros"
 //!   list:    "models":[<id>...]
-//!   stats:   "batches","requests","mean_batch","max_batch","nfe_total"
+//!   stats:   "batches","requests","mean_batch","max_batch","nfe_total","shed"
 //!   shutdown:"closing":true
 //! ```
 //!
@@ -27,11 +29,26 @@
 //! report realized solver work (`nfe`, `naccept`, `nreject`) of the
 //! batch solve that served the request, plus the coalesced batch size.
 //!
+//! ## Failure containment on the wire (DESIGN.md §Robustness)
+//!
+//! * `deadline_ms` is the client's per-request latency budget: a request
+//!   still queued when its deadline expires is **shed**, not solved.
+//! * A `shed` response means the server did no solver work — the request
+//!   was turned away by backpressure (admission queue full, connection
+//!   cap, deadline expired, draining shutdown).  Shed is the *retryable*
+//!   class: clients back off exponentially and resend.
+//! * An `error` response with a `kind` field carries the typed
+//!   [`SolveErrorKind`] wire string of the batch solve that failed
+//!   (`budget_exhausted`, `non_finite_state`, ...); `kind` is absent for
+//!   request-level rejections (bad shape, unknown model, admission).
+//!   Errors are **not** blindly retryable — the same request fails again.
+//!
 //! [`util::json`]: crate::util::json
 
 use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatcherStats, BatchReply};
+use crate::solvers::error::SolveErrorKind;
 use crate::util::json::{obj, Json};
 
 /// A client request (one JSON line).
@@ -42,6 +59,9 @@ pub enum Request {
         u0: Vec<f32>,
         /// Total step-attempt budget; `None` uses the checkpoint default.
         budget: Option<u64>,
+        /// Per-request latency budget: a request still queued when this
+        /// many milliseconds have passed is shed instead of solved.
+        deadline_ms: Option<u64>,
     },
     List,
     Stats,
@@ -51,7 +71,12 @@ pub enum Request {
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Predict { model, u0, budget } => {
+            Request::Predict {
+                model,
+                u0,
+                budget,
+                deadline_ms,
+            } => {
                 let mut fields = vec![
                     ("op", Json::from("predict")),
                     ("model", Json::from(model.as_str())),
@@ -59,6 +84,9 @@ impl Request {
                 ];
                 if let Some(b) = budget {
                     fields.push(("budget", Json::from(*b as usize)));
+                }
+                if let Some(d) = deadline_ms {
+                    fields.push(("deadline_ms", Json::from(*d as usize)));
                 }
                 obj(fields)
             }
@@ -77,6 +105,10 @@ impl Request {
                     u0: parse_f32_arr(j.get("u0").context("predict needs u0")?)?,
                     budget: match j.opt("budget") {
                         Some(b) => Some(b.as_f64()? as u64),
+                        None => None,
+                    },
+                    deadline_ms: match j.opt("deadline_ms") {
+                        Some(d) => Some(d.as_f64()? as u64),
                         None => None,
                     },
                 })
@@ -120,9 +152,21 @@ pub enum Response {
         mean_batch: f64,
         max_batch: usize,
         nfe_total: u64,
+        /// Requests turned away by backpressure (queue full, deadline
+        /// expired, connection cap, draining shutdown).
+        shed: u64,
     },
     Shutdown,
-    Error(String),
+    /// Load-shed: the server did no solver work for this request.
+    /// Retryable — clients back off and resend.
+    Shed(String),
+    /// Request failed.  `kind` carries the typed [`SolveErrorKind`] when
+    /// the batch solve itself failed; `None` for request-level
+    /// rejections (bad shape, unknown model, admission control).
+    Error {
+        msg: String,
+        kind: Option<SolveErrorKind>,
+    },
 }
 
 impl Response {
@@ -138,6 +182,14 @@ impl Response {
         }
     }
 
+    /// A request-level error (no solver failure class).
+    pub fn error(msg: impl Into<String>) -> Response {
+        Response::Error {
+            msg: msg.into(),
+            kind: None,
+        }
+    }
+
     pub fn stats(s: &BatcherStats) -> Response {
         Response::Stats {
             batches: s.batches,
@@ -145,6 +197,7 @@ impl Response {
             mean_batch: s.mean_batch(),
             max_batch: s.max_batch,
             nfe_total: s.nfe_total,
+            shed: s.shed,
         }
     }
 
@@ -181,6 +234,7 @@ impl Response {
                 mean_batch,
                 max_batch,
                 nfe_total,
+                shed,
             } => obj([
                 ("ok", Json::from(true)),
                 ("batches", Json::from(*batches as usize)),
@@ -188,17 +242,38 @@ impl Response {
                 ("mean_batch", Json::from(*mean_batch)),
                 ("max_batch", Json::from(*max_batch)),
                 ("nfe_total", Json::from(*nfe_total as usize)),
+                ("shed", Json::from(*shed as usize)),
             ]),
             Response::Shutdown => obj([("ok", Json::from(true)), ("closing", Json::from(true))]),
-            Response::Error(e) => {
-                obj([("ok", Json::from(false)), ("error", Json::Str(e.clone()))])
+            Response::Shed(reason) => obj([
+                ("ok", Json::from(false)),
+                ("shed", Json::from(true)),
+                ("error", Json::Str(reason.clone())),
+            ]),
+            Response::Error { msg, kind } => {
+                let mut fields = vec![
+                    ("ok", Json::from(false)),
+                    ("error", Json::Str(msg.clone())),
+                ];
+                if let Some(k) = kind {
+                    fields.push(("kind", Json::from(k.as_str())));
+                }
+                obj(fields)
             }
         }
     }
 
     pub fn from_json(j: &Json) -> Result<Response> {
         if !j.get("ok")?.as_bool()? {
-            return Ok(Response::Error(j.get("error")?.as_str()?.to_string()));
+            let msg = j.get("error")?.as_str()?.to_string();
+            if j.opt("shed").is_some_and(|s| s.as_bool().unwrap_or(false)) {
+                return Ok(Response::Shed(msg));
+            }
+            let kind = match j.opt("kind") {
+                Some(k) => SolveErrorKind::parse(k.as_str()?),
+                None => None,
+            };
+            return Ok(Response::Error { msg, kind });
         }
         if let Some(arr) = j.opt("models") {
             let mut models = Vec::new();
@@ -227,6 +302,10 @@ impl Response {
             mean_batch: j.get("mean_batch")?.as_f64()?,
             max_batch: j.get("max_batch")?.as_usize()?,
             nfe_total: j.get("nfe_total")?.as_f64()? as u64,
+            shed: match j.opt("shed") {
+                Some(s) => s.as_f64()? as u64,
+                None => 0,
+            },
         })
     }
 
@@ -268,11 +347,13 @@ mod tests {
                 model: "spiral-er".into(),
                 u0: vec![2.0, -0.5],
                 budget: Some(4096),
+                deadline_ms: Some(250),
             },
             Request::Predict {
                 model: "m".into(),
                 u0: vec![1.0],
                 budget: None,
+                deadline_ms: None,
             },
             Request::List,
             Request::Stats,
@@ -320,12 +401,41 @@ mod tests {
                 mean_batch: 17.0 / 3.0,
                 max_batch: 9,
                 nfe_total: 999,
+                shed: 4,
             },
             Response::Shutdown,
-            Response::Error("nope".into()),
+            Response::error("nope"),
+            Response::Error {
+                msg: "solve failed".into(),
+                kind: Some(SolveErrorKind::NonFiniteState),
+            },
+            Response::Shed("queue full".into()),
         ] {
             assert_eq!(Response::decode(&r.encode()).unwrap(), r, "{r:?}");
         }
+    }
+
+    #[test]
+    fn every_solve_error_kind_survives_the_wire() {
+        for kind in [
+            SolveErrorKind::NonFiniteState,
+            SolveErrorKind::StepSizeUnderflow,
+            SolveErrorKind::BudgetExhausted,
+            SolveErrorKind::TapeMismatch,
+            SolveErrorKind::BadSpan,
+            SolveErrorKind::MissingRng,
+        ] {
+            let r = Response::Error {
+                msg: format!("solve failed: {kind}"),
+                kind: Some(kind),
+            };
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+        // An unknown kind string degrades to a kind-less error, never a
+        // decode failure (forward compatibility with newer servers).
+        let back =
+            Response::decode("{\"ok\":false,\"error\":\"x\",\"kind\":\"not_a_kind\"}").unwrap();
+        assert_eq!(back, Response::error("x"));
     }
 
     #[test]
@@ -334,8 +444,9 @@ mod tests {
             model: "m".into(),
             u0: vec![1.0, 2.0],
             budget: None,
+            deadline_ms: None,
         };
         assert!(!r.encode().contains('\n'));
-        assert!(!Response::Error("x\ny".into()).encode().contains('\n'));
+        assert!(!Response::error("x\ny").encode().contains('\n'));
     }
 }

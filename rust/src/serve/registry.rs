@@ -16,15 +16,51 @@
 //! no per-request validation beyond its own input shape.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::checkpoint::Checkpoint;
 use crate::runtime::state::Metrics;
 use crate::runtime::{Backend, NativeBackend, TrainData};
+use crate::solvers::error::SolveErrorKind;
 use crate::solvers::ode::Stats;
+
+/// Typed failure of the serving hot path ([`ServableModel::predict_batch`]).
+///
+/// Distinguishes requests the solver never saw from solves that ran and
+/// died — the batcher and the wire protocol preserve the distinction so
+/// clients can tell a mis-shaped request from a model that diverged.
+#[derive(Clone, Debug)]
+pub enum PredictError {
+    /// The request never reached the solver: model kind not
+    /// row-batchable, bad shape, rejected parameters.
+    Invalid(String),
+    /// The batch solve ran and failed; `kind` is the typed solver
+    /// failure every rider of the batch receives over the wire.
+    Solve { kind: SolveErrorKind, msg: String },
+}
+
+impl fmt::Display for PredictError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PredictError::Invalid(m) => f.write_str(m),
+            PredictError::Solve { kind, msg } => write!(f, "{msg} [{kind}]"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// Poison-tolerant lock: a thread that panicked while holding the map
+/// only ever leaves it in a consistent state (inserts are atomic), so
+/// serving continues instead of propagating the poison panic to every
+/// later request.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// One loaded checkpoint, ready to serve.
 pub struct ServableModel {
@@ -92,31 +128,41 @@ impl ServableModel {
 
     /// The serving hot path: one row-batched `drive()` over the
     /// checkpoint's grid for `B` coalesced requests
-    /// (`NativeBackend::predict_traj_batch`).  Errors if this model kind
-    /// is not row-batchable or the solve fails (budget exhausted /
-    /// non-finite state) — the batcher maps that error onto exactly the
-    /// requests that rode this batch.
-    pub fn predict_batch(&self, u0s: &[f32], budget: u64) -> Result<(Vec<Vec<f32>>, Stats)> {
+    /// (`NativeBackend::predict_traj_batch`).  Fails typed
+    /// ([`PredictError`]) if this model kind is not row-batchable or the
+    /// solve dies — the batcher maps the failure onto exactly the
+    /// requests that rode this batch, carrying the [`SolveErrorKind`]
+    /// to every rider.
+    pub fn predict_batch(
+        &self,
+        u0s: &[f32],
+        budget: u64,
+    ) -> Result<(Vec<Vec<f32>>, Stats), PredictError> {
         if self.state_dim.is_none() {
-            bail!(
+            return Err(PredictError::Invalid(format!(
                 "model {:?} ({}) is not servable via the trajectory batcher",
                 self.id,
                 self.model_name()
-            );
+            )));
         }
-        let (trajs, stats, ok) = self.backend.predict_traj_batch(
+        let (trajs, stats, kind) = match self.backend.predict_traj_batch(
             self.model_name(),
             &self.params,
             u0s,
             &self.checkpoint.ts,
             Some(budget),
-        )?;
-        if !ok {
-            bail!(
-                "solve failed for model {:?} (step budget {budget} exhausted \
-                 or non-finite state)",
-                self.id
-            );
+        ) {
+            Ok(out) => out,
+            Err(e) => return Err(PredictError::Invalid(format!("{e:#}"))),
+        };
+        if let Some(kind) = kind {
+            return Err(PredictError::Solve {
+                kind,
+                msg: format!(
+                    "solve failed for model {:?} under step budget {budget}: {kind}",
+                    self.id
+                ),
+            });
         }
         Ok((trajs, stats))
     }
@@ -156,16 +202,13 @@ impl Registry {
     /// previous model with that id.
     pub fn insert(&self, id: &str, checkpoint: Checkpoint) -> Result<Arc<ServableModel>> {
         let model = Arc::new(ServableModel::from_checkpoint(id, checkpoint)?);
-        self.models
-            .lock()
-            .unwrap()
-            .insert(id.to_string(), Arc::clone(&model));
+        plock(&self.models).insert(id.to_string(), Arc::clone(&model));
         Ok(model)
     }
 
     /// Fetch a model, lazily loading `<dir>/<id>.json` on first use.
     pub fn get(&self, id: &str) -> Result<Arc<ServableModel>> {
-        if let Some(m) = self.models.lock().unwrap().get(id) {
+        if let Some(m) = plock(&self.models).get(id) {
             return Ok(Arc::clone(m));
         }
         // Load outside the lock (checkpoint decode can be slow); a
@@ -181,17 +224,14 @@ impl Registry {
         let ckpt = Checkpoint::load(&path)
             .map_err(|e| anyhow!("loading model {id:?} from {path:?}: {e}"))?;
         let model = Arc::new(ServableModel::from_checkpoint(id, ckpt)?);
-        self.models
-            .lock()
-            .unwrap()
-            .insert(id.to_string(), Arc::clone(&model));
+        plock(&self.models).insert(id.to_string(), Arc::clone(&model));
         Ok(model)
     }
 
     /// Every servable id: loaded models plus on-disk checkpoints not yet
     /// touched.
     pub fn ids(&self) -> Vec<String> {
-        let mut ids: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        let mut ids: Vec<String> = plock(&self.models).keys().cloned().collect();
         if let Some(dir) = &self.dir {
             if let Ok(entries) = std::fs::read_dir(dir) {
                 for entry in entries.flatten() {

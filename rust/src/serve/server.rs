@@ -17,22 +17,47 @@
 //! the request up front** if that declared budget exceeds the
 //! connection's remaining quota — a request that *could* exhaust the
 //! quota never reaches the solver.  After a served request, the quota is
-//! charged the *realized* attempts of its batch solve; a *failed* solve
-//! is charged the full declared budget (it may have burned all of it).
-//! Well-behaved cheap requests (the regularized-model case) therefore
-//! stretch the same quota further.
+//! charged the *realized* attempts of its batch solve; a solve that ran
+//! and *failed* is charged the full declared budget (it may have burned
+//! all of it).  Shed and rejected requests did no solver work and are
+//! not charged.  Well-behaved cheap requests (the regularized-model
+//! case) therefore stretch the same quota further.
+//!
+//! ## Failure containment (DESIGN.md §Robustness)
+//!
+//! * **Bounded concurrency**: at most [`ServerOpts::max_conns`]
+//!   connections are served at once; an over-cap connection receives a
+//!   single `shed` line and is closed — overload answers fast instead of
+//!   stacking unbounded threads.
+//! * **Read timeouts**: connection reads poll at
+//!   [`ServerOpts::read_timeout`] so an idle or half-dead client cannot
+//!   pin a thread forever once the server starts draining.
+//! * **Deadlines**: a predict request may carry `deadline_ms`; expired
+//!   requests are shed (by the batcher, before any solve) instead of
+//!   served late.
+//! * **Draining shutdown**: on `shutdown`, the accept loop stops taking
+//!   connections, every in-flight request runs to completion and is
+//!   answered, and [`Server::serve`] returns only after all connection
+//!   threads have been joined.  Requests arriving on an existing
+//!   connection *after* the drain begins are shed, not solved.
+//! * **Typed failures on the wire**: a load-shed answers
+//!   `{"ok":false,"shed":true,...}` (retryable — no solver work was
+//!   done); a solve that ran and died answers an error carrying the
+//!   [`SolveErrorKind`] string, which [`Client`]s can inspect instead of
+//!   blindly retrying.
 //!
 //! [`protocol`]: super::protocol
+//! [`SolveErrorKind`]: crate::solvers::error::SolveErrorKind
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::Batcher;
+use super::batcher::{BatchError, Batcher};
 use super::protocol::{Request, Response};
 use super::registry::Registry;
 
@@ -41,12 +66,21 @@ use super::registry::Registry;
 pub struct ServerOpts {
     /// Per-connection step-attempt quota (admission control unit).
     pub nfe_quota: u64,
+    /// Most connections served concurrently; the rest are shed at
+    /// accept with one `shed` response line.
+    pub max_conns: usize,
+    /// Poll tick for connection reads: how long a blocked read waits
+    /// before re-checking the drain flag.  Not a request deadline —
+    /// partial lines survive across ticks.
+    pub read_timeout: Duration,
 }
 
 impl Default for ServerOpts {
     fn default() -> Self {
         ServerOpts {
             nfe_quota: 1_000_000,
+            max_conns: 64,
+            read_timeout: Duration::from_millis(250),
         }
     }
 }
@@ -57,6 +91,17 @@ pub struct Server {
     batcher: Arc<Batcher>,
     opts: ServerOpts,
     shutdown: AtomicBool,
+    active_conns: AtomicUsize,
+}
+
+/// Occupancy guard: frees the connection slot even if the handler
+/// thread panics, so a crashed connection can never leak capacity.
+struct ConnSlot<'a>(&'a AtomicUsize);
+
+impl Drop for ConnSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Server {
@@ -66,30 +111,53 @@ impl Server {
             batcher,
             opts,
             shutdown: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
         }
     }
 
-    /// Serve until a `shutdown` request arrives.  Connections are one
-    /// thread each and are **not drained on shutdown**: this returns as
-    /// soon as the accept loop observes the flag, and a caller that then
-    /// exits the process (the CLI does) cuts any still-running
-    /// connection threads mid-request.  Callers needing a graceful drain
-    /// should stop sending first.
+    /// Serve until a `shutdown` request arrives, then **drain**: stop
+    /// accepting, let every in-flight request finish and answer, and
+    /// join all connection threads before returning.  A connection that
+    /// sends another request after the drain begins gets a `shed`
+    /// response and is closed.
     pub fn serve(self: &Arc<Self>, listener: TcpListener) -> Result<()> {
         let addr = listener.local_addr()?;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for stream in listener.incoming() {
             if self.shutdown.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
+            handles.retain(|h| !h.is_finished());
+            // Connection-level backpressure: over the cap, answer one
+            // shed line and close instead of spawning a thread.
+            if self.active_conns.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns {
+                self.active_conns.fetch_sub(1, Ordering::SeqCst);
+                let mut stream = stream;
+                let mut out =
+                    Response::Shed("connection limit reached, retry with backoff".into()).encode();
+                out.push('\n');
+                let _ = stream.write_all(out.as_bytes());
+                continue;
+            }
             let server = Arc::clone(self);
-            std::thread::spawn(move || server.handle_conn(stream, addr));
+            handles.push(std::thread::spawn(move || {
+                let _slot = ConnSlot(&server.active_conns);
+                server.handle_conn(stream, addr);
+            }));
+        }
+        // Drain guarantee: every connection thread observes the flag
+        // within one read-timeout tick and exits; in-flight solves
+        // complete and answer first.
+        for h in handles {
+            let _ = h.join();
         }
         Ok(())
     }
 
     /// Bind `addr` and serve on a background thread; returns the bound
-    /// address (use port 0 for an ephemeral one).  The loopback path of
+    /// address (use port 0 for an ephemeral one).  Joining the returned
+    /// handle waits for the full drain.  The loopback path of
     /// `benches/bench_serving.rs` and the serving tests.
     pub fn spawn(
         registry: Arc<Registry>,
@@ -107,6 +175,7 @@ impl Server {
     }
 
     fn handle_conn(&self, stream: TcpStream, server_addr: SocketAddr) {
+        let _ = stream.set_read_timeout(Some(self.opts.read_timeout.max(Duration::from_millis(1))));
         let Ok(read_half) = stream.try_clone() else {
             return;
         };
@@ -116,18 +185,35 @@ impl Server {
         let mut quota = self.opts.nfe_quota;
         let mut line = String::new();
         loop {
-            line.clear();
+            // read_line appends: a partial line interrupted by a poll
+            // timeout stays in `line` and completes on a later tick, so
+            // slow writers get correct framing, not corrupted requests.
             match reader.read_line(&mut line) {
-                Ok(0) | Err(_) => return, // client hung up
+                Ok(0) => return, // client hung up
                 Ok(_) => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return; // draining: nothing in flight here
+                    }
+                    continue;
+                }
+                Err(_) => return,
             }
             if line.trim().is_empty() {
+                line.clear();
                 continue;
             }
-            let (resp, closing) = match Request::decode(line.trim()) {
-                Ok(req) => self.process(req, &mut quota),
-                Err(e) => (Response::Error(format!("bad request: {e:#}")), false),
+            let (resp, closing) = if self.shutdown.load(Ordering::SeqCst) {
+                // Request arrived after the drain began: shed (retryable
+                // elsewhere), never start new solver work.
+                (Response::Shed("server is draining".into()), true)
+            } else {
+                match Request::decode(line.trim()) {
+                    Ok(req) => self.process(req, &mut quota),
+                    Err(e) => (Response::error(format!("bad request: {e:#}")), false),
+                }
             };
+            line.clear();
             let mut out = resp.encode();
             out.push('\n');
             if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
@@ -146,6 +232,11 @@ impl Server {
     /// Returns the response and whether the connection (and server) is
     /// closing.  Factored off the socket so admission semantics are unit
     /// testable.
+    ///
+    /// Quota policy per outcome: served → charge realized attempts;
+    /// solve ran and failed → charge the declared budget (it may have
+    /// burned all of it); shed or rejected → no charge (the solver never
+    /// ran).
     pub fn process(&self, req: Request, quota: &mut u64) -> (Response, bool) {
         match req {
             Request::List => (
@@ -156,7 +247,13 @@ impl Server {
             ),
             Request::Stats => (Response::stats(&self.batcher.stats()), false),
             Request::Shutdown => (Response::Shutdown, true),
-            Request::Predict { model, u0, budget } => {
+            Request::Predict {
+                model,
+                u0,
+                budget,
+                deadline_ms,
+            } => {
+                let t0 = Instant::now();
                 // Admission: resolve the declared (or checkpoint-default)
                 // attempt budget and reject before solving if it could
                 // overrun this connection's remaining quota.
@@ -164,34 +261,48 @@ impl Server {
                     Some(b) => b,
                     None => match self.registry.get(&model) {
                         Ok(m) => m.default_budget(),
-                        Err(e) => return (Response::Error(format!("{e:#}")), false),
+                        Err(e) => return (Response::error(format!("{e:#}")), false),
                     },
                 };
                 if declared > *quota {
                     return (
-                        Response::Error(format!(
+                        Response::error(format!(
                             "admission rejected: request budget {declared} attempts \
                              exceeds remaining connection quota {quota}"
                         )),
                         false,
                     );
                 }
-                let t0 = Instant::now();
-                match self.batcher.submit(&model, u0, Some(declared)) {
+                let deadline = deadline_ms.map(|ms| t0 + Duration::from_millis(ms));
+                match self.batcher.submit(&model, u0, Some(declared), deadline) {
                     Ok(reply) => {
                         // Charge the realized work of the batch solve.
                         *quota = quota.saturating_sub(reply.naccept + reply.nreject);
                         let micros = t0.elapsed().as_micros() as u64;
                         (Response::predict(&model, &reply, micros), false)
                     }
-                    Err(e) => {
-                        // A failed solve may still have burned solver
-                        // work (budget exhaustion burns *all* of it), and
-                        // the error path carries no Stats — charge the
-                        // declared budget so failing requests cannot loop
-                        // free solver CPU past the quota.
+                    Err(BatchError::Shed(msg)) => {
+                        // No solver work was done: retryable, not charged.
+                        (Response::Shed(msg), false)
+                    }
+                    Err(BatchError::Solve { kind, msg }) => {
+                        // The solve ran and died — it may have burned the
+                        // whole declared budget, so charge it all: failing
+                        // requests cannot loop free solver CPU past the
+                        // quota.
                         *quota = quota.saturating_sub(declared);
-                        (Response::Error(format!("{e:#}")), false)
+                        (
+                            Response::Error {
+                                msg,
+                                kind: Some(kind),
+                            },
+                            false,
+                        )
+                    }
+                    Err(BatchError::Rejected(msg)) => {
+                        // Validation failure before any solve: not charged,
+                        // and not retryable as-is (no kind on the wire).
+                        (Response::error(msg), false)
                     }
                 }
             }
@@ -238,7 +349,7 @@ mod tests {
     use crate::util::threadpool::ThreadPool;
     use std::time::Duration;
 
-    fn test_server(quota: u64) -> Arc<Server> {
+    fn test_server(opts: ServerOpts) -> Arc<Server> {
         let be = NativeBackend::new();
         let params = be.init_params("spiral_node", 3).unwrap();
         let state = be.export_state("spiral_node", &params).unwrap();
@@ -254,37 +365,40 @@ mod tests {
             BatchPolicy {
                 max_batch: 4,
                 max_wait: Duration::from_micros(100),
+                ..Default::default()
             },
         ));
-        Arc::new(Server::new(registry, batcher, ServerOpts { nfe_quota: quota }))
+        Arc::new(Server::new(registry, batcher, opts))
+    }
+
+    fn quota_server(quota: u64) -> Arc<Server> {
+        test_server(ServerOpts {
+            nfe_quota: quota,
+            ..Default::default()
+        })
+    }
+
+    fn predict(model: &str, budget: Option<u64>) -> Request {
+        Request::Predict {
+            model: model.into(),
+            u0: vec![2.0, 0.0],
+            budget,
+            deadline_ms: None,
+        }
     }
 
     #[test]
     fn admission_rejects_over_quota_and_charges_realized_attempts() {
-        let server = test_server(10_000);
+        let server = quota_server(10_000);
         let mut quota = server.opts.nfe_quota;
 
         // Declared budget above the quota: rejected up front.
-        let (resp, _) = server.process(
-            Request::Predict {
-                model: "spiral".into(),
-                u0: vec![2.0, 0.0],
-                budget: Some(20_000),
-            },
-            &mut quota,
-        );
-        assert!(matches!(&resp, Response::Error(e) if e.contains("admission")));
+        let (resp, _) = server.process(predict("spiral", Some(20_000)), &mut quota);
+        assert!(matches!(&resp, Response::Error { msg, .. } if msg.contains("admission")));
         assert_eq!(quota, 10_000, "rejected requests must not be charged");
 
         // Within quota: served, and the realized attempts are deducted.
-        let (resp, closing) = server.process(
-            Request::Predict {
-                model: "spiral".into(),
-                u0: vec![2.0, 0.0],
-                budget: Some(9_000),
-            },
-            &mut quota,
-        );
+        let (resp, closing) = server.process(predict("spiral", Some(9_000)), &mut quota);
         assert!(!closing);
         match resp {
             Response::Predict { nfe, naccept, nreject, batch, ref traj, .. } => {
@@ -298,20 +412,37 @@ mod tests {
 
         // Quota drains to the point of refusing the default budget.
         quota = 5;
-        let (resp, _) = server.process(
+        let (resp, _) = server.process(predict("spiral", None), &mut quota);
+        assert!(matches!(&resp, Response::Error { msg, .. } if msg.contains("admission")));
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_and_never_charged() {
+        let server = quota_server(10_000);
+        let mut quota = server.opts.nfe_quota;
+        let (resp, closing) = server.process(
             Request::Predict {
                 model: "spiral".into(),
                 u0: vec![2.0, 0.0],
                 budget: None,
+                deadline_ms: Some(0),
             },
             &mut quota,
         );
-        assert!(matches!(&resp, Response::Error(e) if e.contains("admission")));
+        assert!(!closing);
+        assert!(matches!(resp, Response::Shed(_)), "got {resp:?}");
+        assert_eq!(quota, 10_000, "shed requests must not be charged");
+        // The shed shows up in the stats response.
+        let (resp, _) = server.process(Request::Stats, &mut quota);
+        match resp {
+            Response::Stats { shed, .. } => assert!(shed >= 1, "shed count must be reported"),
+            other => panic!("expected stats, got {other:?}"),
+        }
     }
 
     #[test]
     fn list_stats_and_shutdown_ops() {
-        let server = test_server(1_000_000);
+        let server = quota_server(1_000_000);
         let mut quota = u64::MAX;
         let (resp, _) = server.process(Request::List, &mut quota);
         assert_eq!(
@@ -328,18 +459,18 @@ mod tests {
     }
 
     #[test]
-    fn loopback_end_to_end() {
-        let server = test_server(1_000_000);
+    fn loopback_end_to_end_with_draining_shutdown() {
+        let server = test_server(ServerOpts::default());
         let registry_models = server.registry.ids();
         assert_eq!(registry_models, vec!["spiral".to_string()]);
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        {
+        let serve_handle = {
             let server = Arc::clone(&server);
             std::thread::spawn(move || {
                 let _ = server.serve(listener);
-            });
-        }
+            })
+        };
         let mut client = Client::connect(&addr.to_string()).unwrap();
         let resp = client.request(&Request::List).unwrap();
         assert_eq!(
@@ -348,13 +479,7 @@ mod tests {
                 models: vec!["spiral".to_string()]
             }
         );
-        let resp = client
-            .request(&Request::Predict {
-                model: "spiral".into(),
-                u0: vec![2.0, 0.0],
-                budget: None,
-            })
-            .unwrap();
+        let resp = client.request(&predict("spiral", None)).unwrap();
         match resp {
             Response::Predict { ref traj, nfe, .. } => {
                 assert_eq!(traj.len(), 12);
@@ -365,15 +490,51 @@ mod tests {
             other => panic!("expected predict, got {other:?}"),
         }
         // Unknown model: typed error, connection stays usable.
-        let resp = client
-            .request(&Request::Predict {
-                model: "ghost".into(),
-                u0: vec![1.0, 1.0],
-                budget: None,
-            })
-            .unwrap();
-        assert!(matches!(resp, Response::Error(_)));
+        let resp = client.request(&predict("ghost", None)).unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
         let resp = client.request(&Request::Shutdown).unwrap();
         assert_eq!(resp, Response::Shutdown);
+        // Drain guarantee: serve() joins every connection thread and
+        // returns; a hung drain fails the suite's timeout, a panic in
+        // the serve thread fails the join.
+        serve_handle.join().expect("serve thread must exit cleanly");
+    }
+
+    #[test]
+    fn over_cap_connections_are_shed_at_accept() {
+        let server = test_server(ServerOpts {
+            max_conns: 1,
+            read_timeout: Duration::from_millis(20),
+            ..Default::default()
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let serve_handle = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let _ = server.serve(listener);
+            })
+        };
+        // First connection occupies the only slot...
+        let mut first = Client::connect(&addr.to_string()).unwrap();
+        let resp = first.request(&Request::List).unwrap();
+        assert!(matches!(resp, Response::List { .. }));
+        // ...so the second is shed with one response line, then closed.
+        let mut second = Client::connect(&addr.to_string()).unwrap();
+        let mut resp = String::new();
+        second.reader.read_line(&mut resp).unwrap();
+        let resp = Response::decode(resp.trim()).unwrap();
+        assert!(matches!(resp, Response::Shed(_)), "got {resp:?}");
+        let n = second.reader.read_line(&mut String::new()).unwrap();
+        assert_eq!(n, 0, "shed connection must be closed by the server");
+        // Dropping the first frees the slot within a poll tick.
+        drop(first);
+        std::thread::sleep(Duration::from_millis(100));
+        let mut third = Client::connect(&addr.to_string()).unwrap();
+        let resp = third.request(&Request::List).unwrap();
+        assert!(matches!(resp, Response::List { .. }));
+        let resp = third.request(&Request::Shutdown).unwrap();
+        assert_eq!(resp, Response::Shutdown);
+        serve_handle.join().expect("serve thread must exit cleanly");
     }
 }

@@ -889,7 +889,8 @@ mod tests {
     ) -> (Vec<Vec<f64>>, SolveOutcome) {
         let mut sys = OdeSystem(f);
         let opts = opts.clone().with_budget(StepBudget::Total(total_budget));
-        ode::drive(&mut sys, z0, Saveat::Grid(ts), &opts, Some(tape), &mut [])
+        let (zs, out) = ode::drive(&mut sys, z0, Saveat::Grid(ts), &opts, Some(tape), &mut []);
+        (zs, out.expect("taped test solve failed"))
     }
 
     /// Scalar linear ODE dz/dt = θ z with one parameter: the discrete
@@ -902,8 +903,7 @@ mod tests {
         let opts = SolveOptions::new().with_tolerance(1e-8);
         let mut tape = OdeTape::new();
         let f = |th: f64| move |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = th * z[0];
-        let (zs, out) = solve_taped(f(theta), &[1.0], &ts, &opts, 100_000, &mut tape);
-        assert!(out.success);
+        let (zs, _out) = solve_taped(f(theta), &[1.0], &ts, &opts, 100_000, &mut tape);
 
         // L = z(t2): cotangent 1 at the last save point.
         let save_grads = vec![vec![0.0], vec![0.0], vec![1.0]];
@@ -957,8 +957,8 @@ mod tests {
             dz[0] = (th * z[0]).sin();
         };
         let mut tape = OdeTape::new();
-        let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
-        assert!(out.success && !tape.is_empty());
+        let (_, _out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
+        assert!(!tape.is_empty());
 
         let save_grads = vec![vec![0.0], vec![0.0]];
         let mut gp = vec![0.0; 1];
@@ -1001,7 +1001,7 @@ mod tests {
         };
         let mut tape = OdeTape::new();
         let (_, out) = solve_taped(f(theta), &[0.8], &ts, &opts, 100_000, &mut tape);
-        assert!(out.success && !tape.is_empty());
+        assert!(!tape.is_empty());
 
         // Replay at the base point reproduces the forward accumulator
         // (FSAL-stage rounding only).
@@ -1183,8 +1183,7 @@ mod tests {
             Some(&mut fwd_tape),
             &mut [],
         );
-        let stats = fwd_out.stats;
-        assert!(fwd_out.success);
+        let stats = fwd_out.expect("forward SDE solve failed").stats;
         let (_, re_fwd, rs_fwd) = sde_replay(&fwd_tape, &[1.0], drift(theta), diffusion);
         assert!((re_fwd - stats.r_e).abs() <= 1e-12 * (1.0 + stats.r_e));
         assert!((rs_fwd - stats.r_s).abs() <= 1e-12 * (1.0 + stats.r_s));

@@ -1,0 +1,209 @@
+//! Fault injection for the solver stack: [`ChaosSystem`] wraps any
+//! [`System`] and perturbs its dynamics at configured evaluation indices.
+//!
+//! This is the solver half of the fault-injection harness
+//! (`tests/fault_injection.rs`, DESIGN.md §Robustness): instead of
+//! hand-crafting a pathological vector field per failure mode, wrap the
+//! real one and dial in the fault —
+//!
+//! * **NaN drift** ([`ChaosConfig::nan_drift_at`]) — the k-th drift
+//!   evaluation returns NaN, modelling a learned vector field blowing up
+//!   mid-solve.  Must surface as
+//!   [`SolveErrorKind::NonFiniteState`](super::error::SolveErrorKind).
+//! * **Forced rejects** ([`ChaosConfig::huge_drift_from`]) — from the
+//!   k-th evaluation on, the drift is scaled by a huge factor so the
+//!   embedded error can never meet tolerance, modelling a stiff region.
+//!   Must surface as `StepSizeUnderflow` or `BudgetExhausted`.
+//! * **Slow evaluations** ([`ChaosConfig::sleep_every`]) — every m-th
+//!   evaluation sleeps, modelling an expensive model under load.  Must
+//!   only slow the solve down (deadline/shed territory at the serving
+//!   layer), never change its result.
+//!
+//! Faults trigger on the wrapper's own evaluation counter
+//! ([`ChaosSystem::evals`]), counting drift and diffusion evaluations in
+//! call order, so injection points are deterministic for a given solve.
+
+use super::system::System;
+use std::time::Duration;
+
+/// Which faults to inject and where (evaluation indices are 0-based and
+/// count drift + diffusion calls in order).
+#[derive(Clone, Debug, Default)]
+pub struct ChaosConfig {
+    /// Overwrite the drift with NaN on this evaluation index.
+    pub nan_drift_at: Option<u64>,
+    /// Scale the drift by `1e12` from this evaluation index on, forcing
+    /// step rejections until the controller underflows or the budget
+    /// dies.
+    pub huge_drift_from: Option<u64>,
+    /// Sleep `(every m-th evaluation, duration)` — a slow model.
+    pub sleep_every: Option<(u64, Duration)>,
+}
+
+impl ChaosConfig {
+    pub fn nan_at(at: u64) -> ChaosConfig {
+        ChaosConfig {
+            nan_drift_at: Some(at),
+            ..Default::default()
+        }
+    }
+
+    pub fn huge_from(at: u64) -> ChaosConfig {
+        ChaosConfig {
+            huge_drift_from: Some(at),
+            ..Default::default()
+        }
+    }
+
+    pub fn slow(every: u64, dur: Duration) -> ChaosConfig {
+        ChaosConfig {
+            sleep_every: Some((every, dur)),
+            ..Default::default()
+        }
+    }
+}
+
+/// A [`System`] wrapper injecting the faults of a [`ChaosConfig`] into
+/// an inner system.  Forwards everything (diffusion flag, VJP hooks)
+/// unchanged; with an all-`None` config the wrapped solve is
+/// bit-identical to the bare one.
+pub struct ChaosSystem<S: System> {
+    pub inner: S,
+    pub cfg: ChaosConfig,
+    /// Evaluations (drift + diffusion) seen so far.
+    pub evals: u64,
+}
+
+impl<S: System> ChaosSystem<S> {
+    pub fn new(inner: S, cfg: ChaosConfig) -> ChaosSystem<S> {
+        ChaosSystem {
+            inner,
+            cfg,
+            evals: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        let i = self.evals;
+        self.evals += 1;
+        if let Some((every, dur)) = self.cfg.sleep_every {
+            if every > 0 && i % every == every - 1 {
+                std::thread::sleep(dur);
+            }
+        }
+        i
+    }
+}
+
+impl<S: System> System for ChaosSystem<S> {
+    fn drift(&mut self, z: &[f64], t: f64, dz: &mut [f64]) {
+        let i = self.tick();
+        self.inner.drift(z, t, dz);
+        if self.cfg.nan_drift_at == Some(i) {
+            dz.fill(f64::NAN);
+        }
+        if let Some(from) = self.cfg.huge_drift_from {
+            if i >= from {
+                for v in dz.iter_mut() {
+                    *v *= 1e12;
+                    if *v == 0.0 {
+                        *v = 1e12;
+                    }
+                }
+            }
+        }
+    }
+
+    fn has_diffusion(&self) -> bool {
+        self.inner.has_diffusion()
+    }
+
+    fn diffusion(&mut self, z: &[f64], t: f64, dg: &mut [f64]) {
+        self.tick();
+        self.inner.diffusion(z, t, dg);
+    }
+
+    fn drift_vjp(&mut self, z: &[f64], t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        self.inner.drift_vjp(z, t, w, gz, gp);
+    }
+
+    fn diffusion_vjp(&mut self, z: &[f64], t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
+        self.inner.diffusion_vjp(z, t, w, gz, gp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::driver::{Saveat, SolveOptions};
+    use crate::solvers::error::SolveErrorKind;
+    use crate::solvers::ode;
+    use crate::solvers::system::OdeSystem;
+
+    fn decay() -> OdeSystem<impl FnMut(&[f64], f64, &mut [f64])> {
+        OdeSystem(|z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0])
+    }
+
+    fn run(cfg: ChaosConfig) -> (Vec<Vec<f64>>, crate::solvers::error::SolveResult) {
+        let mut sys = ChaosSystem::new(decay(), cfg);
+        ode::drive(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            &mut [],
+        )
+    }
+
+    #[test]
+    fn no_faults_is_transparent() {
+        let (saves, out) = run(ChaosConfig::default());
+        let mut bare = decay();
+        let (saves_b, out_b) = ode::drive(
+            &mut bare,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            &mut [],
+        );
+        let (out, out_b) = (out.unwrap(), out_b.unwrap());
+        assert_eq!(saves, saves_b, "empty chaos config must be bit-transparent");
+        assert_eq!(out.stats.nfe, out_b.stats.nfe);
+        assert_eq!(out.z, out_b.z);
+    }
+
+    #[test]
+    fn nan_injection_surfaces_as_non_finite_state() {
+        for at in [0, 1, 5, 20] {
+            let (_, out) = run(ChaosConfig::nan_at(at));
+            let err = out.unwrap_err();
+            assert_eq!(err.kind, SolveErrorKind::NonFiniteState, "at={at}");
+            assert!(err.z[0].is_finite(), "committed state stays finite");
+        }
+    }
+
+    #[test]
+    fn forced_rejects_surface_as_underflow_or_budget() {
+        let (_, out) = run(ChaosConfig::huge_from(10));
+        let err = out.unwrap_err();
+        assert!(
+            matches!(
+                err.kind,
+                SolveErrorKind::StepSizeUnderflow | SolveErrorKind::BudgetExhausted
+            ),
+            "{:?}",
+            err.kind
+        );
+        assert!(err.stats.nreject > 0, "{:?}", err.stats);
+    }
+
+    #[test]
+    fn slow_evals_change_nothing_but_time() {
+        let (saves, out) = run(ChaosConfig::slow(7, Duration::from_micros(50)));
+        let (saves_b, out_b) = run(ChaosConfig::default());
+        assert_eq!(saves, saves_b);
+        assert_eq!(out.unwrap().stats.nfe, out_b.unwrap().stats.nfe);
+    }
+}

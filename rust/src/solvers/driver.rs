@@ -21,7 +21,7 @@
 //!     Taping::Off,
 //!     &mut [&mut r_e],
 //! );
-//! assert!(out.success);
+//! let out = out.expect("solve failed");    // failures are typed SolveErrors
 //! assert_eq!(saves.len(), 2);              // z0 and the endpoint
 //! assert_eq!(r_e.value(), out.stats.r_e);  // observers see what Stats sees
 //! ```
@@ -43,11 +43,12 @@
 //! * [`StepBudget::PerSegment`] — each save interval gets the full
 //!   budget (the seed's data-generation semantics),
 //! * [`StepBudget::Total`] — one budget bounds the whole solve (the
-//!   budget-ladder training contract; exhaustion returns
-//!   `success = false` so the router can escalate).
+//!   budget-ladder training contract; exhaustion is a typed
+//!   [`SolveErrorKind::BudgetExhausted`] so the router can escalate).
 
 use super::adjoint::{OdeTape, SdeTape};
-use super::ode::{self, SolveOutcome, Stats};
+use super::error::{SolveError, SolveErrorKind, SolveResult};
+use super::ode::{self, Stats};
 use super::observer::StepObserver;
 use super::sde;
 use super::system::System;
@@ -150,58 +151,70 @@ impl SolveOptions {
 #[derive(Clone, Copy, Debug)]
 pub enum Saveat<'a> {
     /// Integrate `[t0, t1]` as one segment, saving `z0` and the endpoint.
-    /// Non-finite endpoints or `t1 <= t0` fail cleanly
-    /// (`success = false`, state untouched, zero dynamics evaluations).
+    /// Non-finite endpoints or `t1 <= t0` are a
+    /// [`SolveErrorKind::BadSpan`] (state untouched, zero dynamics
+    /// evaluations).
     Span { t0: f64, t1: f64 },
-    /// Save at every time of a non-decreasing grid (`len >= 2`,
-    /// `grid[0]` is the start time).  Violations panic — a malformed
-    /// grid is a programming error, not an integration failure.
+    /// Save at every time of a non-decreasing finite grid (`len >= 2`,
+    /// `grid[0]` is the start time).  Violations are a
+    /// [`SolveErrorKind::BadSpan`] — grids arrive over the wire from
+    /// checkpoints and serving requests, so a malformed one must be a
+    /// typed error, never a panic.
     Grid(&'a [f64]),
 }
 
 /// Discrete-adjoint taping as solve configuration.  The variant must
-/// match the system's stack ([`System::has_diffusion`]); a mismatch
-/// panics.  The tape is always reset at the start of the solve — even
-/// one that fails cleanly on an invalid [`Saveat::Span`] — so a reused
-/// tape never carries a previous solve's records.
+/// match the system's stack ([`System::has_diffusion`]); a mismatch is a
+/// [`SolveErrorKind::TapeMismatch`].  The tape is always reset at the
+/// start of the solve — even one that fails cleanly on an invalid
+/// [`Saveat::Span`] or a taping mismatch — so a reused tape never
+/// carries a previous solve's records.
 pub enum Taping<'a> {
     Off,
     Ode(&'a mut OdeTape),
     Sde(&'a mut SdeTape),
 }
 
+/// The clean-failure return value shared by every pre-integration
+/// check: only `z0` saved, state untouched, zero dynamics evaluations.
+fn clean_failure(kind: SolveErrorKind, t0: f64, z0: &[f64]) -> (Vec<Vec<f64>>, SolveResult) {
+    (
+        vec![z0.to_vec()],
+        Err(SolveError {
+            kind,
+            t: t0,
+            z: z0.to_vec(),
+            stats: Stats::default(),
+        }),
+    )
+}
+
 /// Resolve a [`Saveat`] into the save grid both stack drivers integrate
-/// over: `span_store` backs the two-point grid of a [`Saveat::Span`],
-/// and an invalid span yields the clean-failure return value (state
-/// untouched, zero dynamics evaluations).  Malformed grids panic — a
-/// caller bug, not an integration failure.
+/// over: `span_store` backs the two-point grid of a [`Saveat::Span`].
+/// An invalid span or malformed grid (too short, decreasing, or
+/// non-finite times) yields the clean [`SolveErrorKind::BadSpan`]
+/// failure return value (state untouched, zero dynamics evaluations).
 pub(super) fn resolve_saveat<'a>(
     saveat: Saveat<'a>,
     span_store: &'a mut [f64; 2],
     z0: &[f64],
-) -> Result<&'a [f64], (Vec<Vec<f64>>, SolveOutcome)> {
+) -> Result<&'a [f64], (Vec<Vec<f64>>, SolveResult)> {
     match saveat {
         Saveat::Span { t0, t1 } => {
             if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
-                return Err((
-                    vec![z0.to_vec()],
-                    SolveOutcome {
-                        z: z0.to_vec(),
-                        t: t0,
-                        stats: Stats::default(),
-                        success: false,
-                    },
-                ));
+                return Err(clean_failure(SolveErrorKind::BadSpan, t0, z0));
             }
             *span_store = [t0, t1];
             Ok(&span_store[..])
         }
         Saveat::Grid(g) => {
-            assert!(g.len() >= 2, "need at least two save points");
-            assert!(
-                g.windows(2).all(|w| w[1] >= w[0]),
-                "save times must be non-decreasing"
-            );
+            let bad = g.len() < 2
+                || g.iter().any(|t| !t.is_finite())
+                || g.windows(2).any(|w| w[1] < w[0]);
+            if bad {
+                let t0 = g.first().copied().unwrap_or(f64::NAN);
+                return Err(clean_failure(SolveErrorKind::BadSpan, t0, z0));
+            }
             Ok(g)
         }
     }
@@ -213,9 +226,14 @@ pub(super) fn resolve_saveat<'a>(
 /// * diffusive systems run the stochastic Heun driver and require
 ///   `rng: Some(..)`.
 ///
-/// Returns the saved states (per [`Saveat`]) and the final
-/// [`SolveOutcome`] whose [`super::ode::Stats`] carry the white-boxed
-/// accumulators.  Every accepted step is also offered to `observers`.
+/// Returns the saved states (per [`Saveat`]) and
+/// `Result<SolveOutcome, SolveError>` whose [`super::ode::Stats`] carry
+/// the white-boxed accumulators.  Every accepted step is also offered
+/// to `observers`.  Misconfiguration — a diffusive system without an
+/// RNG ([`SolveErrorKind::MissingRng`]) or a [`Taping`] variant for the
+/// wrong stack ([`SolveErrorKind::TapeMismatch`]) — is a typed error,
+/// never a panic: these arrive from user input (checkpoints, serving
+/// requests), not just from first-party callers.
 pub fn solve<S: System>(
     sys: &mut S,
     z0: &[f64],
@@ -224,20 +242,37 @@ pub fn solve<S: System>(
     rng: Option<&mut Rng>,
     taping: Taping<'_>,
     observers: &mut [&mut dyn StepObserver],
-) -> (Vec<Vec<f64>>, SolveOutcome) {
+) -> (Vec<Vec<f64>>, SolveResult) {
+    let t0 = match saveat {
+        Saveat::Span { t0, .. } => t0,
+        Saveat::Grid(g) => g.first().copied().unwrap_or(f64::NAN),
+    };
     if sys.has_diffusion() {
-        let rng = rng.expect("a diffusive System needs an RNG: pass Some(&mut rng)");
         let tape = match taping {
             Taping::Off => None,
             Taping::Sde(tape) => Some(tape),
-            Taping::Ode(_) => panic!("ODE tape passed for a diffusive (SDE) system"),
+            Taping::Ode(tape) => {
+                // Honor the Taping contract even on failure: the reused
+                // tape must not keep a previous solve's records.
+                tape.reset(z0.len(), opts.tableau.stages());
+                return clean_failure(SolveErrorKind::TapeMismatch, t0, z0);
+            }
+        };
+        let Some(rng) = rng else {
+            if let Some(tape) = tape {
+                tape.reset(z0.len());
+            }
+            return clean_failure(SolveErrorKind::MissingRng, t0, z0);
         };
         sde::drive(sys, z0, saveat, rng, opts, tape, observers)
     } else {
         let tape = match taping {
             Taping::Off => None,
             Taping::Ode(tape) => Some(tape),
-            Taping::Sde(_) => panic!("SDE tape passed for a drift-only (ODE) system"),
+            Taping::Sde(tape) => {
+                tape.reset(z0.len());
+                return clean_failure(SolveErrorKind::TapeMismatch, t0, z0);
+            }
         };
         ode::drive(sys, z0, saveat, opts, tape, observers)
     }
@@ -280,7 +315,7 @@ mod tests {
             Taping::Off,
             &mut [],
         );
-        assert!(out_span.success && out_grid.success);
+        let (out_span, out_grid) = (out_span.unwrap(), out_grid.unwrap());
         assert_eq!(out_span.z, out_grid.z, "span and 2-point grid must agree bit-for-bit");
         assert_eq!(out_span.stats.nfe, out_grid.stats.nfe);
         assert_eq!(out_span.stats.r_e, out_grid.stats.r_e);
@@ -304,7 +339,8 @@ mod tests {
             Taping::Off,
             &mut [&mut re, &mut rs],
         );
-        assert!(out.success && out.stats.naccept > 0);
+        let out = out.unwrap();
+        assert!(out.stats.naccept > 0);
         assert_eq!(re.value(), out.stats.r_e, "R_E observer must be bit-identical");
         assert_eq!(rs.value(), out.stats.r_s, "R_S observer must be bit-identical");
     }
@@ -326,20 +362,19 @@ mod tests {
             Taping::Off,
             &mut [],
         );
-        assert!(out.success);
+        let out = out.unwrap();
         assert_eq!(saves.len(), 3);
         // SDE accounting: 4 dynamics evals per attempt.
         assert_eq!(out.stats.nfe, 4 * out.stats.attempts());
     }
 
     #[test]
-    #[should_panic(expected = "needs an RNG")]
-    fn sde_without_rng_panics() {
+    fn sde_without_rng_is_a_typed_error() {
         let mut sys = SdeSystem {
             drift: |_z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = 0.0,
             diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.0,
         };
-        let _ = solve(
+        let (saves, out) = solve(
             &mut sys,
             &[1.0],
             Saveat::Span { t0: 0.0, t1: 1.0 },
@@ -348,22 +383,49 @@ mod tests {
             Taping::Off,
             &mut [],
         );
+        let err = out.unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::MissingRng);
+        assert_eq!(err.stats.nfe, 0, "no dynamics evaluation");
+        assert_eq!(saves, vec![vec![1.0]], "only z0 saved");
     }
 
     #[test]
-    #[should_panic(expected = "SDE tape passed")]
-    fn mismatched_taping_panics() {
+    fn mismatched_taping_is_a_typed_error() {
+        // SDE tape on an ODE system and vice versa: both directions are
+        // typed TapeMismatch errors, and the wrong tape is still reset
+        // (the Taping contract holds even on failure).
         let mut sys = OdeSystem(exp_decay);
-        let mut tape = SdeTape::new();
-        let _ = solve(
+        let mut sde_tape = SdeTape::new();
+        let (saves, out) = solve(
             &mut sys,
             &[1.0],
             Saveat::Span { t0: 0.0, t1: 1.0 },
             &SolveOptions::new(),
             None,
-            Taping::Sde(&mut tape),
+            Taping::Sde(&mut sde_tape),
             &mut [],
         );
+        assert_eq!(out.unwrap_err().kind, SolveErrorKind::TapeMismatch);
+        assert_eq!(saves, vec![vec![1.0]]);
+        assert!(sde_tape.is_empty());
+
+        let mut sys = SdeSystem {
+            drift: |_z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = 0.0,
+            diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.0,
+        };
+        let mut ode_tape = OdeTape::new();
+        let mut rng = Rng::new(5);
+        let (_, out) = solve(
+            &mut sys,
+            &[1.0],
+            Saveat::Span { t0: 0.0, t1: 1.0 },
+            &SolveOptions::new(),
+            Some(&mut rng),
+            Taping::Ode(&mut ode_tape),
+            &mut [],
+        );
+        assert_eq!(out.unwrap_err().kind, SolveErrorKind::TapeMismatch);
+        assert!(ode_tape.is_empty());
     }
 
     #[test]
@@ -381,8 +443,13 @@ mod tests {
             Taping::Off,
             &mut [],
         );
-        assert!(!out.success, "3 total attempts cannot cover 10 segments");
-        assert!(out.stats.attempts() <= 3);
+        let err = out.unwrap_err();
+        assert_eq!(
+            err.kind,
+            SolveErrorKind::BudgetExhausted,
+            "3 total attempts cannot cover 10 segments"
+        );
+        assert!(err.stats.attempts() <= 3);
         assert_eq!(saves.len(), ts.len(), "outputs stay grid-shaped");
     }
 
@@ -399,9 +466,10 @@ mod tests {
                 Taping::Off,
                 &mut [],
             );
-            assert!(!out.success, "t1={t1} must fail");
-            assert_eq!(out.z, vec![1.0], "state untouched");
-            assert_eq!(out.stats.nfe, 0, "no dynamics evaluation");
+            let err = out.unwrap_err();
+            assert_eq!(err.kind, SolveErrorKind::BadSpan, "t1={t1} must fail");
+            assert_eq!(err.z, vec![1.0], "state untouched");
+            assert_eq!(err.stats.nfe, 0, "no dynamics evaluation");
             assert_eq!(saves.len(), 1, "only z0 saved on failure");
         }
     }
@@ -420,7 +488,7 @@ mod tests {
             Taping::Ode(&mut tape),
             &mut [],
         );
-        assert!(out.success && !tape.is_empty());
+        assert!(out.is_ok() && !tape.is_empty());
         // A cleanly-failed solve must not leave stale records behind —
         // a caller reusing the tape would otherwise walk the previous
         // solve's program.
@@ -433,7 +501,7 @@ mod tests {
             Taping::Ode(&mut tape),
             &mut [],
         );
-        assert!(!out.success);
+        assert!(out.is_err());
         assert!(tape.is_empty(), "Taping contract: reset even on clean failure");
         assert!(tape.save_marks().is_empty());
     }
@@ -453,7 +521,7 @@ mod tests {
             Taping::Ode(&mut tape),
             &mut [&mut lr],
         );
-        assert!(out.success);
+        let out = out.unwrap();
         let j = lr.sampled_step().expect("accepted steps must be sampled");
         assert!(j < tape.len(), "sampled index {j} must name a tape record");
         assert!(lr.value() > 0.0);

@@ -20,7 +20,8 @@
 //!     flight (10k trajectories never means 10k threads).
 
 use super::driver::{Saveat, SolveOptions};
-use super::ode::{self, SolveOutcome, Stats};
+use super::error::{SolveError, SolveResult, SolveResultExt};
+use super::ode::{self, Stats};
 use super::sde;
 use super::system::{OdeSystem, SdeSystem};
 use crate::util::rng::Rng;
@@ -68,8 +69,11 @@ impl EnsembleOptions {
 
 /// Integrate one ODE from many initial conditions over `[t0, t1]`.
 ///
-/// Outcomes are in input order; trajectory `i` is exactly
+/// Results are in input order; trajectory `i` is exactly
 /// `ode::drive(&mut sys, &z0s[i], Saveat::Span { t0, t1 }, opts, ..)`.
+/// Failure containment is per trajectory: a trajectory that fails
+/// carries its own typed [`SolveError`] (fail-fast for that trajectory)
+/// and leaves every other trajectory unaffected.
 pub fn solve_ensemble<F>(
     f: &F,
     z0s: &[Vec<f64>],
@@ -77,7 +81,7 @@ pub fn solve_ensemble<F>(
     t1: f64,
     opts: &SolveOptions,
     eopts: &EnsembleOptions,
-) -> Vec<SolveOutcome>
+) -> Vec<SolveResult>
 where
     F: Fn(&[f64], f64, &mut [f64]) + Sync,
 {
@@ -94,13 +98,23 @@ where
     per_chunk.into_iter().flatten().collect()
 }
 
-/// One SDE trajectory of an ensemble solve.
+/// One SDE trajectory of an ensemble solve.  Failure containment is
+/// per trajectory: `error` carries this trajectory's typed failure (if
+/// any) and says nothing about its siblings.
 #[derive(Clone, Debug)]
 pub struct SdeTrajectory {
-    /// Saved states at each `ts` entry (`[T][n]`).
+    /// Saved states at each `ts` entry (`[T][n]`; grid-shaped even on
+    /// failure, repeating the last committed state).
     pub states: Vec<Vec<f64>>,
     pub stats: Stats,
-    pub success: bool,
+    pub error: Option<SolveError>,
+}
+
+impl SdeTrajectory {
+    /// The seed's `success` flag: no typed failure.
+    pub fn success(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 /// Derive the RNG for trajectory `i`: a function of `(seed, i)` only, so
@@ -144,8 +158,8 @@ where
                     sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, opts, None, &mut []);
                 SdeTrajectory {
                     states,
-                    stats: out.stats,
-                    success: out.success,
+                    stats: out.stats(),
+                    error: out.err(),
                 }
             })
             .collect::<Vec<_>>()
@@ -162,7 +176,16 @@ pub struct SdeMoments {
     pub var: Vec<f64>,
     /// Merged solver statistics over the whole ensemble.
     pub stats: Stats,
-    pub success: bool,
+    /// First (lowest trajectory index) typed failure, if any trajectory
+    /// failed; deterministic because chunk partials merge in index order.
+    pub error: Option<SolveError>,
+}
+
+impl SdeMoments {
+    /// The seed's `success` flag: every trajectory solved cleanly.
+    pub fn success(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 /// Like [`sde_solve_ensemble`] but folds each chunk into running
@@ -193,7 +216,7 @@ where
         let mut sum = vec![0.0f64; t * n];
         let mut sumsq = vec![0.0f64; t * n];
         let mut stats = Stats::default();
-        let mut ok = true;
+        let mut first_err: Option<SolveError> = None;
         for i in range {
             let mut rng = trajectory_rng(seed, i);
             let mut sys = SdeSystem {
@@ -202,8 +225,10 @@ where
             };
             let (states, out) =
                 sde::drive(&mut sys, z0, Saveat::Grid(ts), &mut rng, opts, None, &mut []);
-            ok &= out.success;
-            stats.merge(&out.stats);
+            stats.merge(&out.stats());
+            if first_err.is_none() {
+                first_err = out.err();
+            }
             for (k, zk) in states.iter().enumerate() {
                 for d in 0..n {
                     sum[k * n + d] += zk[d];
@@ -211,20 +236,22 @@ where
                 }
             }
         }
-        (sum, sumsq, stats, ok)
+        (sum, sumsq, stats, first_err)
     });
 
     let mut sum = vec![0.0f64; t * n];
     let mut sumsq = vec![0.0f64; t * n];
     let mut stats = Stats::default();
-    let mut success = true;
-    for (s, sq, st, ok) in per_chunk {
+    let mut error = None;
+    for (s, sq, st, chunk_err) in per_chunk {
         for i in 0..t * n {
             sum[i] += s[i];
             sumsq[i] += sq[i];
         }
         stats.merge(&st);
-        success &= ok;
+        if error.is_none() {
+            error = chunk_err;
+        }
     }
     let inv = 1.0 / n_traj as f64;
     let mu: Vec<f64> = sum.iter().map(|s| s * inv).collect();
@@ -237,7 +264,7 @@ where
         mu,
         var,
         stats,
-        success,
+        error,
     }
 }
 
@@ -274,7 +301,8 @@ mod tests {
                 None,
                 &mut [],
             );
-            assert!(out.success);
+            let out = out.as_ref().expect("trajectory failed");
+            let solo = solo.unwrap();
             assert_eq!(out.z, solo.z, "trajectory {i} state drifted");
             assert_eq!(out.stats.nfe, solo.stats.nfe);
             assert_eq!(out.stats.naccept, solo.stats.naccept);
@@ -364,7 +392,7 @@ mod tests {
             &opts,
             &eopts,
         );
-        assert!(m.success);
+        assert!(m.success());
         for k in 0..ts.len() {
             for d in 0..2 {
                 let mean = full.iter().map(|tr| tr.states[k][d]).sum::<f64>()

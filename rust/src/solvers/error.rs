@@ -1,0 +1,206 @@
+//! Typed solver failures: the failure-containment contract of the stack.
+//!
+//! Every integration driven through [`super::ode::drive`],
+//! [`super::sde::drive`] or the unified [`super::driver::solve`] returns
+//! `Result<SolveOutcome, SolveError>` — there is no silent truncation and
+//! no panic reachable from user input.  A [`SolveError`] names *why* the
+//! solve failed ([`SolveErrorKind`]) and carries the last committed state
+//! and the realized [`Stats`], so callers (the budget ladder, the serving
+//! batcher, the CLI) can decide whether to retry, escalate, shed or
+//! surface the failure without re-deriving any of the work done.
+//!
+//! The kinds map one-to-one onto stable wire strings
+//! ([`SolveErrorKind::as_str`] / [`SolveErrorKind::parse`]) so the
+//! serving protocol can carry the failure class to remote clients
+//! (DESIGN.md §Robustness).
+
+use super::ode::{SolveOutcome, Stats};
+use std::fmt;
+
+/// Why a solve failed.  `Copy` so it can ride inside
+/// [`crate::runtime::state::Metrics`] and across thread boundaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveErrorKind {
+    /// A proposed state or embedded error went NaN/±inf mid-attempt (a
+    /// learned vector field blew up).  Detected at step-attempt
+    /// granularity — the seed ground at an unchanged step size until the
+    /// budget died because `q = NaN` rejects forever.
+    NonFiniteState,
+    /// The controller drove the step size below [`super::controller::EPS`]
+    /// after a rejection: even the floor step cannot meet tolerance (the
+    /// stiff-region failure mode `R_S` exists to steer away from).
+    StepSizeUnderflow,
+    /// The [`super::driver::StepBudget`] was exhausted before reaching
+    /// the end of the span (previously a silent `success = false`
+    /// truncation).
+    BudgetExhausted,
+    /// The [`super::driver::Taping`] variant does not match the system's
+    /// stack (ODE tape for a diffusive system or vice versa).
+    TapeMismatch,
+    /// A non-finite / non-increasing span or malformed save grid.
+    BadSpan,
+    /// A diffusive system was solved without an RNG.
+    MissingRng,
+}
+
+impl SolveErrorKind {
+    /// Stable wire identifier (serving protocol `kind` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SolveErrorKind::NonFiniteState => "non_finite_state",
+            SolveErrorKind::StepSizeUnderflow => "step_size_underflow",
+            SolveErrorKind::BudgetExhausted => "budget_exhausted",
+            SolveErrorKind::TapeMismatch => "tape_mismatch",
+            SolveErrorKind::BadSpan => "bad_span",
+            SolveErrorKind::MissingRng => "missing_rng",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str) for client-side decoding.
+    pub fn parse(s: &str) -> Option<SolveErrorKind> {
+        Some(match s {
+            "non_finite_state" => SolveErrorKind::NonFiniteState,
+            "step_size_underflow" => SolveErrorKind::StepSizeUnderflow,
+            "budget_exhausted" => SolveErrorKind::BudgetExhausted,
+            "tape_mismatch" => SolveErrorKind::TapeMismatch,
+            "bad_span" => SolveErrorKind::BadSpan,
+            "missing_rng" => SolveErrorKind::MissingRng,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for SolveErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A failed solve: the failure class plus everything the solve realized
+/// before dying, so callers can inspect partial work (the saves returned
+/// alongside stay grid-shaped, repeating the last committed state).
+#[derive(Clone, Debug)]
+pub struct SolveError {
+    pub kind: SolveErrorKind,
+    /// Integration time reached when the solve failed.
+    pub t: f64,
+    /// Last committed state (the proposed non-finite state is never
+    /// committed, so this is finite whenever the initial state was).
+    pub z: Vec<f64>,
+    /// Solver work realized before the failure (NFE, accepts, rejects,
+    /// regularizer accumulators).
+    pub stats: Stats,
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "solve failed: {} at t={} after {} attempts ({} nfe)",
+            self.kind,
+            self.t,
+            self.stats.attempts(),
+            self.stats.nfe
+        )
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// The return type of every drive in this suite.
+pub type SolveResult = Result<SolveOutcome, SolveError>;
+
+/// Uniform accessors over `Result<SolveOutcome, SolveError>` — both arms
+/// carry a final state, a final time and realized stats, and most
+/// callers (training passes, data generation, benches) want those
+/// regardless of which arm they got.
+pub trait SolveResultExt {
+    /// Realized statistics, success or not.
+    fn stats(&self) -> Stats;
+    /// The failure kind, `None` on success.
+    fn error_kind(&self) -> Option<SolveErrorKind>;
+    /// `true` on the `Ok` arm (the seed's `success` flag).
+    fn is_success(&self) -> bool;
+    /// Decompose into `(z_final, t_final, stats, error_kind)`.
+    fn into_parts(self) -> (Vec<f64>, f64, Stats, Option<SolveErrorKind>);
+}
+
+impl SolveResultExt for SolveResult {
+    fn stats(&self) -> Stats {
+        match self {
+            Ok(o) => o.stats,
+            Err(e) => e.stats,
+        }
+    }
+
+    fn error_kind(&self) -> Option<SolveErrorKind> {
+        match self {
+            Ok(_) => None,
+            Err(e) => Some(e.kind),
+        }
+    }
+
+    fn is_success(&self) -> bool {
+        self.is_ok()
+    }
+
+    fn into_parts(self) -> (Vec<f64>, f64, Stats, Option<SolveErrorKind>) {
+        match self {
+            Ok(o) => (o.z, o.t, o.stats, None),
+            Err(e) => (e.z, e.t, e.stats, Some(e.kind)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_strings_round_trip() {
+        for kind in [
+            SolveErrorKind::NonFiniteState,
+            SolveErrorKind::StepSizeUnderflow,
+            SolveErrorKind::BudgetExhausted,
+            SolveErrorKind::TapeMismatch,
+            SolveErrorKind::BadSpan,
+            SolveErrorKind::MissingRng,
+        ] {
+            assert_eq!(SolveErrorKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(SolveErrorKind::parse("garbage"), None);
+    }
+
+    #[test]
+    fn display_names_the_failure() {
+        let e = SolveError {
+            kind: SolveErrorKind::NonFiniteState,
+            t: 0.5,
+            z: vec![1.0],
+            stats: Stats::default(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("non_finite_state") && s.contains("t=0.5"), "{s}");
+    }
+
+    #[test]
+    fn result_ext_covers_both_arms() {
+        let ok: SolveResult = Ok(SolveOutcome {
+            z: vec![2.0],
+            t: 1.0,
+            stats: Stats::default(),
+        });
+        assert!(ok.is_success());
+        assert_eq!(ok.error_kind(), None);
+        let err: SolveResult = Err(SolveError {
+            kind: SolveErrorKind::BudgetExhausted,
+            t: 0.3,
+            z: vec![1.5],
+            stats: Stats::default(),
+        });
+        assert!(!err.is_success());
+        assert_eq!(err.error_kind(), Some(SolveErrorKind::BudgetExhausted));
+        let (z, t, _, kind) = err.into_parts();
+        assert_eq!((z, t, kind), (vec![1.5], 0.3, Some(SolveErrorKind::BudgetExhausted)));
+    }
+}

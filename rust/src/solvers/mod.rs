@@ -39,6 +39,23 @@
 //! optional sampled-step local term), and the replay functions re-run
 //! the frozen program for finite-difference checks.
 //!
+//! ## Failure containment (DESIGN.md §Robustness)
+//!
+//! Every drive returns `Result<SolveOutcome, SolveError>` ([`error`]):
+//! no panic is reachable from user input and nothing fails silently.
+//! [`SolveErrorKind`] names the failure class — `NonFiniteState` (a
+//! learned vector field blew up mid-attempt), `StepSizeUnderflow` (a
+//! rejection drove the step below the EPS floor), `BudgetExhausted`
+//! (the [`StepBudget`] died first), `BadSpan` (malformed span/grid),
+//! `TapeMismatch` / `MissingRng` (misconfiguration) — and the
+//! [`SolveError`] carries the last committed state plus realized
+//! [`Stats`] so callers can retry, escalate or shed without re-deriving
+//! work.  Failed drives stay grid-shaped (remaining save points repeat
+//! the last committed state) and fail fast: the first failed segment
+//! ends the integration.  [`chaos::ChaosSystem`] wraps any [`System`]
+//! with configurable fault injection (NaN drift, slow evaluations,
+//! forced rejects) to prove these paths in `tests/fault_injection.rs`.
+//!
 //! The closure-based legacy entry points of the pre-unification release
 //! (`ode::solve`, `solve_saveat`, `solve_saveat_taped`,
 //! `sde_solve_saveat`, `sde_solve_saveat_taped` and their
@@ -61,9 +78,11 @@
 //!     heuristics ([`controller`]), canonical problems ([`problems`]).
 
 pub mod adjoint;
+pub mod chaos;
 pub mod controller;
 pub mod driver;
 pub mod ensemble;
+pub mod error;
 pub mod observer;
 pub mod ode;
 pub mod problems;
@@ -75,7 +94,9 @@ pub use adjoint::{
     ode_backward, ode_backward_sys, ode_replay, ode_replay_errors, sde_backward,
     sde_backward_sys, sde_replay, sde_replay_errors, OdeTape, RegCoefs, SdeTape,
 };
+pub use chaos::{ChaosConfig, ChaosSystem};
 pub use driver::{solve, Saveat, SolveOptions, StepBudget, Taping};
+pub use error::{SolveError, SolveErrorKind, SolveResult, SolveResultExt};
 pub use ensemble::{
     sde_ensemble_moments, sde_solve_ensemble, solve_ensemble, EnsembleOptions, SdeMoments,
     SdeTrajectory,

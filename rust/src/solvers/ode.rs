@@ -33,6 +33,7 @@
 use super::adjoint::OdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
 use super::driver::{Saveat, SolveOptions};
+use super::error::{SolveError, SolveErrorKind, SolveResult};
 use super::observer::{ErrorIntegral, ErrorSquared, StepObserver, StepView, StiffnessSum};
 use super::system::System;
 use super::tableau::Tableau;
@@ -70,13 +71,14 @@ impl Stats {
     }
 }
 
-/// Final state + statistics of one integration.
+/// Final state + statistics of one successful integration.  Failures
+/// return [`SolveError`] instead (same fields plus the failure kind), so
+/// "the solve succeeded" is simply the `Ok` arm of [`SolveResult`].
 #[derive(Clone, Debug)]
 pub struct SolveOutcome {
     pub z: Vec<f64>,
     pub t: f64,
     pub stats: Stats,
-    pub success: bool,
 }
 
 /// Internal stepping state threaded across segments of one [`drive`].
@@ -143,15 +145,28 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
         }
     }
 
-    /// Integrate from (t, z) to t1 in place.  Returns success.
+    /// Integrate from (t, z) to t1 in place.
     ///
     /// A zero-length span is a successful no-op; a negative or non-finite
-    /// span is rejected as a failure rather than silently integrating
-    /// nothing (explicit RK with h > 0 cannot go backwards in time).
-    fn advance(&mut self, z: &mut [f64], t: &mut f64, t1: f64, budget: u64) -> bool {
+    /// span is a [`SolveErrorKind::BadSpan`] (explicit RK with h > 0
+    /// cannot go backwards in time).  Failures are detected at
+    /// step-attempt granularity: a non-finite proposed state or embedded
+    /// error is [`SolveErrorKind::NonFiniteState`] (never committed), a
+    /// rejection that drives the step below [`EPS`] is
+    /// [`SolveErrorKind::StepSizeUnderflow`], and running out of
+    /// `budget` is [`SolveErrorKind::BudgetExhausted`].  The success
+    /// path is bit-identical to the seed loop — every check is a pure
+    /// read inserted where the seed would have ground on futilely.
+    fn advance(
+        &mut self,
+        z: &mut [f64],
+        t: &mut f64,
+        t1: f64,
+        budget: u64,
+    ) -> Result<(), SolveErrorKind> {
         let tol = 1e-12 * t1.abs().max(1.0);
         if !t1.is_finite() || t1 < *t - tol {
-            return false;
+            return Err(SolveErrorKind::BadSpan);
         }
         let s = self.tab.stages();
         let n = z.len();
@@ -166,7 +181,7 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
         let mut attempts = 0;
         while *t < t1 - tol {
             if attempts >= budget {
-                return false;
+                return Err(SolveErrorKind::BudgetExhausted);
             }
             attempts += 1;
             let h = self.h.min(t1 - *t).max(EPS);
@@ -212,6 +227,14 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
             for d in 0..n {
                 znew[d] = z[d] + h * znew[d];
                 err[d] *= h;
+            }
+
+            // A non-finite proposed state or embedded error can never be
+            // accepted (q goes NaN/inf) — without this check the seed
+            // ground at an unchanged step size until the budget died.
+            // Pure read: the success-path FP sequence is untouched.
+            if !znew.iter().all(|v| v.is_finite()) || !err.iter().all(|v| v.is_finite()) {
+                return Err(SolveErrorKind::NonFiniteState);
             }
 
             let q = error_ratio(err, z, znew, self.opts.rtol, self.opts.atol);
@@ -264,9 +287,16 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
             } else {
                 self.stats.nreject += 1;
                 self.h = h * reject_factor(q, self.tab.order);
+                // The controller wants a step below the EPS floor: even
+                // the floor step failed tolerance, so further attempts
+                // only grind (the seed clamped to EPS and re-rejected
+                // until the budget died).
+                if self.h < EPS {
+                    return Err(SolveErrorKind::StepSizeUnderflow);
+                }
             }
         }
-        true
+        Ok(())
     }
 
     /// Final statistics: counters plus the built-in observer values.
@@ -284,14 +314,16 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
 /// offering every accepted step to `observers`.
 ///
 /// Returns the saved states (one per save point; [`Saveat::Span`] saves
-/// `z0` and the endpoint) and the final [`SolveOutcome`].  Budget
-/// semantics follow [`SolveOptions::budget`]; with
-/// [`super::driver::StepBudget::Total`] an exhausted budget stops the
-/// solve early with `success = false` and
-/// the remaining save points repeating the last state, so output shapes
-/// stay grid-sized.  When a tape is passed it is reset and records every
-/// accepted step plus a save mark per grid point (including the start),
-/// ready for [`super::adjoint::ode_backward`].
+/// `z0` and the endpoint) and `Result<SolveOutcome, SolveError>`.
+/// Budget semantics follow [`SolveOptions::budget`]; exhaustion stops
+/// the solve with [`SolveErrorKind::BudgetExhausted`].  The solve is
+/// fail-fast: the first failed segment ends the integration (no later
+/// segment is attempted) and the remaining save points repeat the last
+/// committed state, so output shapes stay grid-sized and the tape still
+/// carries one save mark per grid point.  When a tape is passed it is
+/// reset and records every accepted step plus a save mark per grid
+/// point (including the start), ready for
+/// [`super::adjoint::ode_backward`].
 pub fn drive<S: System>(
     sys: &mut S,
     z0: &[f64],
@@ -299,7 +331,7 @@ pub fn drive<S: System>(
     opts: &SolveOptions,
     mut tape: Option<&mut OdeTape>,
     observers: &mut [&mut dyn StepObserver],
-) -> (Vec<Vec<f64>>, SolveOutcome) {
+) -> (Vec<Vec<f64>>, SolveResult) {
     // Reset the tape up front: even a cleanly-failed solve must not
     // leave a previous solve's records behind (the Taping contract).
     if let Some(tape) = tape.as_deref_mut() {
@@ -321,25 +353,25 @@ pub fn drive<S: System>(
     if let Some(tp) = stepper.tape.as_deref_mut() {
         tp.mark_save();
     }
-    let mut ok = true;
+    let mut failure = None;
     for &t_hi in &ts[1..] {
-        let budget = opts.budget.for_segment(stepper.stats.attempts());
-        ok &= stepper.advance(&mut z, &mut t, t_hi, budget);
+        if failure.is_none() {
+            let budget = opts.budget.for_segment(stepper.stats.attempts());
+            if let Err(kind) = stepper.advance(&mut z, &mut t, t_hi, budget) {
+                failure = Some(kind);
+            }
+        }
         out.push(z.clone());
         if let Some(tp) = stepper.tape.as_deref_mut() {
             tp.mark_save();
         }
     }
     let stats = stepper.finish();
-    (
-        out,
-        SolveOutcome {
-            z,
-            t,
-            stats,
-            success: ok,
-        },
-    )
+    let result = match failure {
+        None => Ok(SolveOutcome { z, t, stats }),
+        Some(kind) => Err(SolveError { kind, t, z, stats }),
+    };
+    (out, result)
 }
 
 #[cfg(test)]
@@ -354,14 +386,14 @@ mod tests {
         }
     }
 
-    /// Test shorthand: drive one span solve and return the outcome.
+    /// Test shorthand: drive one span solve and return the result.
     fn solve<F: FnMut(&[f64], f64, &mut [f64])>(
         f: F,
         z0: &[f64],
         t0: f64,
         t1: f64,
         opts: &SolveOptions,
-    ) -> SolveOutcome {
+    ) -> SolveResult {
         let mut sys = OdeSystem(f);
         drive(&mut sys, z0, Saveat::Span { t0, t1 }, opts, None, &mut []).1
     }
@@ -372,7 +404,7 @@ mod tests {
         z0: &[f64],
         ts: &[f64],
         opts: &SolveOptions,
-    ) -> (Vec<Vec<f64>>, SolveOutcome) {
+    ) -> (Vec<Vec<f64>>, SolveResult) {
         let mut sys = OdeSystem(f);
         drive(&mut sys, z0, Saveat::Grid(ts), opts, None, &mut [])
     }
@@ -384,8 +416,7 @@ mod tests {
     #[test]
     fn exponential_decay_accuracy() {
         let opts = tol_opts(1e-8);
-        let out = solve(exp_decay, &[1.0, 2.0], 0.0, 1.0, &opts);
-        assert!(out.success);
+        let out = solve(exp_decay, &[1.0, 2.0], 0.0, 1.0, &opts).unwrap();
         assert!((out.z[0] - (-1.0f64).exp()).abs() < 1e-7, "{}", out.z[0]);
         assert!((out.z[1] - 2.0 * (-1.0f64).exp()).abs() < 1e-7);
     }
@@ -396,7 +427,7 @@ mod tests {
         let errs: Vec<f64> = [1e-4, 1e-6, 1e-8]
             .iter()
             .map(|&tol| {
-                let out = solve(exp_decay, &[1.0], 0.0, 1.0, &tol_opts(tol));
+                let out = solve(exp_decay, &[1.0], 0.0, 1.0, &tol_opts(tol)).unwrap();
                 (out.z[0] - (-1.0f64).exp()).abs()
             })
             .collect();
@@ -411,7 +442,7 @@ mod tests {
             dz[1] = -z[0];
         };
         let opts = tol_opts(1e-9);
-        let out = solve(f, &[1.0, 0.0], 0.0, 10.0, &opts);
+        let out = solve(f, &[1.0, 0.0], 0.0, 10.0, &opts).unwrap();
         let energy = out.z[0] * out.z[0] + out.z[1] * out.z[1];
         assert!((energy - 1.0).abs() < 1e-6, "energy={energy}");
     }
@@ -421,7 +452,7 @@ mod tests {
         let nfe: Vec<u64> = [1e-3, 1e-6, 1e-9]
             .iter()
             .map(|&tol| {
-                solve(exp_decay, &[1.0], 0.0, 1.0, &tol_opts(tol)).stats.nfe
+                solve(exp_decay, &[1.0], 0.0, 1.0, &tol_opts(tol)).unwrap().stats.nfe
             })
             .collect();
         assert!(nfe[0] < nfe[1] && nfe[1] < nfe[2], "{nfe:?}");
@@ -434,7 +465,7 @@ mod tests {
                 dz[0] = -lambda * z[0];
             };
             let opts = tol_opts(1e-7);
-            let out = solve(f, &[1.0], 0.0, 1.0, &opts);
+            let out = solve(f, &[1.0], 0.0, 1.0, &opts).unwrap();
             let s_per_step = out.stats.r_s / out.stats.naccept as f64;
             assert!(
                 (s_per_step - lambda).abs() / lambda < 0.2,
@@ -448,7 +479,7 @@ mod tests {
         let ts: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
         let opts = tol_opts(1e-8);
         let (zs, out) = solve_grid(exp_decay, &[1.0], &ts, &opts);
-        assert!(out.success);
+        assert!(out.is_ok());
         for (i, z) in zs.iter().enumerate() {
             assert!((z[0] - (-ts[i]).exp()).abs() < 1e-6);
         }
@@ -457,15 +488,54 @@ mod tests {
     #[test]
     fn budget_exhaustion_reports_failure() {
         let opts = tol_opts(1e-12).with_budget(StepBudget::PerSegment(3));
-        let out = solve(exp_decay, &[1.0], 0.0, 1.0, &opts);
-        assert!(!out.success);
+        let err = solve(exp_decay, &[1.0], 0.0, 1.0, &opts).unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::BudgetExhausted);
+        assert!(err.stats.attempts() <= 3);
+        assert!(err.z.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nan_drift_is_a_typed_error_not_a_grind() {
+        // A vector field that goes NaN mid-solve must surface as
+        // NonFiniteState on the attempt that proposed it — not grind at
+        // an unchanged step size until the budget dies.
+        let f = |z: &[f64], t: f64, dz: &mut [f64]| {
+            dz[0] = if t > 0.5 { f64::NAN } else { -z[0] };
+        };
+        let err = solve(f, &[1.0], 0.0, 1.0, &tol_opts(1e-6)).unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::NonFiniteState);
+        // The failure is cheap: a handful of attempts, not the 100k budget.
+        assert!(err.stats.attempts() < 100, "{:?}", err.stats);
+        // The last committed state is still finite.
+        assert!(err.z[0].is_finite());
+        assert!(err.t <= 1.0 && err.t >= 0.0);
+    }
+
+    #[test]
+    fn exploding_error_is_step_size_underflow() {
+        // Huge but finite dynamics whose embedded error can never meet
+        // tolerance: the controller shrinks h to the EPS floor and the
+        // solve dies as StepSizeUnderflow instead of rejecting forever.
+        let f = |_z: &[f64], _t: f64, dz: &mut [f64]| {
+            dz[0] = 1e300;
+        };
+        let err = solve(f, &[1.0], 0.0, 1.0, &tol_opts(1e-9)).unwrap_err();
+        assert!(
+            matches!(
+                err.kind,
+                SolveErrorKind::StepSizeUnderflow | SolveErrorKind::NonFiniteState
+            ),
+            "{:?}",
+            err.kind
+        );
+        assert!(err.stats.attempts() < 1000, "typed failure must be cheap");
     }
 
     #[test]
     fn dopri5_and_tsit5_agree() {
         let mk = |tab: Tableau| tol_opts(1e-9).with_tableau(tab);
-        let a = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::tsit5()));
-        let b = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::dopri5()));
+        let a = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::tsit5())).unwrap();
+        let b = solve(exp_decay, &[1.0], 0.0, 1.0, &mk(Tableau::dopri5())).unwrap();
         assert!((a.z[0] - b.z[0]).abs() < 1e-8);
     }
 
@@ -476,8 +546,7 @@ mod tests {
             dz[0] = if t < 0.5 { -z[0] } else { -50.0 * z[0] };
         };
         let opts = tol_opts(1e-8);
-        let out = solve(f, &[1.0], 0.0, 1.0, &opts);
-        assert!(out.success);
+        let out = solve(f, &[1.0], 0.0, 1.0, &opts).unwrap();
         assert!(out.stats.nreject > 0, "{:?}", out.stats);
     }
 
@@ -485,17 +554,21 @@ mod tests {
     fn zero_and_negative_spans_fail_cleanly() {
         let opts = SolveOptions::default();
         for t1 in [0.0, -1.0, f64::NAN] {
-            let out = solve(exp_decay, &[1.0], 0.0, t1, &opts);
-            assert!(!out.success, "t1={t1} should not succeed");
-            assert_eq!(out.z, vec![1.0], "state must be untouched");
-            assert_eq!(out.stats.nfe, 0, "no dynamics evaluation");
+            let err = solve(exp_decay, &[1.0], 0.0, t1, &opts).unwrap_err();
+            assert_eq!(err.kind, SolveErrorKind::BadSpan, "t1={t1}");
+            assert_eq!(err.z, vec![1.0], "state must be untouched");
+            assert_eq!(err.stats.nfe, 0, "no dynamics evaluation");
         }
     }
 
     #[test]
-    #[should_panic(expected = "non-decreasing")]
     fn saveat_rejects_decreasing_grid() {
-        let _ = solve_grid(exp_decay, &[1.0], &[0.0, 0.5, 0.4], &SolveOptions::default());
+        let (zs, out) =
+            solve_grid(exp_decay, &[1.0], &[0.0, 0.5, 0.4], &SolveOptions::default());
+        let err = out.unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::BadSpan);
+        assert_eq!(err.stats.nfe, 0, "no dynamics evaluation");
+        assert_eq!(zs, vec![vec![1.0]], "only z0 saved");
     }
 
     #[test]
@@ -504,6 +577,7 @@ mod tests {
         let ts: Vec<f64> = (0..8).map(|i| i as f64 * 0.2).collect();
         let opts = tol_opts(1e-7);
         let (zs, out) = solve_grid(exp_decay, &[1.0, 0.5], &ts, &opts);
+        let out = out.unwrap();
         let mut tape = OdeTape::new();
         let mut sys = OdeSystem(exp_decay);
         let (zs_t, out_t) = drive(
@@ -514,6 +588,7 @@ mod tests {
             Some(&mut tape),
             &mut [],
         );
+        let out_t = out_t.unwrap();
         assert_eq!(zs, zs_t, "tape recording must not perturb the solve");
         assert_eq!(out.stats.nfe, out_t.stats.nfe);
         assert_eq!(out.stats.naccept, out_t.stats.naccept);
@@ -537,9 +612,15 @@ mod tests {
             Some(&mut tape),
             &mut [],
         );
-        assert!(!out.success, "3 attempts cannot cover 10 segments");
-        assert!(out.stats.attempts() <= 3);
+        let err = out.unwrap_err();
+        assert_eq!(
+            err.kind,
+            SolveErrorKind::BudgetExhausted,
+            "3 attempts cannot cover 10 segments"
+        );
+        assert!(err.stats.attempts() <= 3);
         assert_eq!(zs.len(), ts.len(), "outputs stay grid-shaped");
+        assert_eq!(tape.save_marks().len(), ts.len(), "one mark per grid point");
     }
 
     #[test]
@@ -548,7 +629,7 @@ mod tests {
             dz[0] = if t < 0.5 { -z[0] } else { -50.0 * z[0] };
         };
         let opts = tol_opts(1e-8);
-        let out = solve(f, &[1.0], 0.0, 1.0, &opts);
+        let out = solve(f, &[1.0], 0.0, 1.0, &opts).unwrap();
         assert_eq!(out.stats.attempts(), out.stats.naccept + out.stats.nreject);
         assert!(out.stats.attempts() > out.stats.naccept);
         // NFE bookkeeping: 1 init + nfe_per_attempt per attempt (FSAL Tsit5).
@@ -584,7 +665,7 @@ mod tests {
             None,
             &mut [&mut probe],
         );
-        assert!(out.success);
+        let out = out.unwrap();
         assert_eq!(probe.seen.len() as u64, out.stats.naccept);
         for (i, &(idx, _)) in probe.seen.iter().enumerate() {
             assert_eq!(idx, i as u64, "views arrive in accepted-step order");

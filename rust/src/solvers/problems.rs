@@ -67,7 +67,9 @@ mod tests {
         opts: &SolveOptions,
     ) -> SolveOutcome {
         let mut sys = OdeSystem(f);
-        drive(&mut sys, z0, Saveat::Span { t0, t1 }, opts, None, &mut []).1
+        drive(&mut sys, z0, Saveat::Span { t0, t1 }, opts, None, &mut [])
+            .1
+            .expect("test solve failed")
     }
 
     #[test]
@@ -75,7 +77,6 @@ mod tests {
         // The cubic spiral decays toward the origin while rotating.
         let opts = SolveOptions::new().with_tolerance(1e-8);
         let out = solve(spiral_ode, &[2.0, 0.0], 0.0, 3.0, &opts);
-        assert!(out.success);
         let r0 = 2.0f64;
         let r1 = (out.z[0] * out.z[0] + out.z[1] * out.z[1]).sqrt();
         assert!(r1 < r0, "radius grew: {r1}");
@@ -100,7 +101,6 @@ mod tests {
             .with_budget(StepBudget::PerSegment(2_000_000));
         let easy = solve(van_der_pol(1.0), &[2.0, 0.0], 0.0, 5.0, &opts);
         let hard = solve(van_der_pol(50.0), &[2.0, 0.0], 0.0, 5.0, &opts);
-        assert!(easy.success && hard.success);
         assert!(
             hard.stats.nfe > 3 * easy.stats.nfe,
             "stiff NFE {} vs nonstiff {}",

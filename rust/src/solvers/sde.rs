@@ -26,6 +26,7 @@
 use super::adjoint::SdeTape;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
 use super::driver::{Saveat, SolveOptions};
+use super::error::{SolveError, SolveErrorKind, SolveResult};
 use super::observer::{ErrorIntegral, ErrorSquared, StepObserver, StepView, StiffnessSum};
 use super::ode::{SolveOutcome, Stats};
 use super::system::System;
@@ -81,8 +82,11 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
         }
     }
 
-    /// Integrate from (t, z) to t_hi in place.  Returns success.
-    /// `budget` bounds the step attempts of *this* call.
+    /// Integrate from (t, z) to t_hi in place.  `budget` bounds the step
+    /// attempts of *this* call.  Failure detection mirrors the ODE
+    /// stepper: non-finite proposed states, post-rejection step-size
+    /// underflow and budget exhaustion each return their typed
+    /// [`SolveErrorKind`]; the success path is bit-identical to the seed.
     fn advance(
         &mut self,
         z: &mut [f64],
@@ -90,11 +94,11 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
         t_hi: f64,
         rng: &mut Rng,
         budget: u64,
-    ) -> bool {
+    ) -> Result<(), SolveErrorKind> {
         let n = z.len();
         let tol = 1e-12 * t_hi.abs().max(1.0);
         if !t_hi.is_finite() || t_hi < *t - tol {
-            return false;
+            return Err(SolveErrorKind::BadSpan);
         }
         let (f1, rest) = self.arena.split_at_mut(n);
         let (g1, rest) = rest.split_at_mut(n);
@@ -108,7 +112,7 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
         let mut attempts = 0u64;
         while *t < t_hi - tol {
             if attempts >= budget {
-                return false;
+                return Err(SolveErrorKind::BudgetExhausted);
             }
             attempts += 1;
             let h_eff = self.h.min(t_hi - *t).max(EPS);
@@ -141,6 +145,14 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
                 err[d] = z_heun[d] - z_em[d];
             }
             self.stats.nfe += 4;
+
+            // A non-finite proposed state or embedded error can never be
+            // accepted (q goes NaN/inf) — typed failure instead of
+            // grinding until the budget dies.  Pure read: the
+            // success-path FP sequence is untouched.
+            if !z_heun.iter().all(|v| v.is_finite()) || !err.iter().all(|v| v.is_finite()) {
+                return Err(SolveErrorKind::NonFiniteState);
+            }
 
             let q = error_ratio(err, z, z_heun, self.opts.rtol, self.opts.atol);
             if q <= 1.0 {
@@ -211,9 +223,15 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
                     w_pend.copy_from_slice(dw);
                 }
                 self.h = h_eff * reject_factor(q, ORDER);
+                // The controller wants a step below the EPS floor: even
+                // the floor step failed tolerance (the seed clamped to
+                // EPS and re-rejected until the budget died).
+                if self.h < EPS {
+                    return Err(SolveErrorKind::StepSizeUnderflow);
+                }
             }
         }
-        true
+        Ok(())
     }
 
     /// Final statistics: counters plus the built-in observer values.
@@ -243,7 +261,7 @@ pub fn drive<S: System>(
     opts: &SolveOptions,
     mut tape: Option<&mut SdeTape>,
     observers: &mut [&mut dyn StepObserver],
-) -> (Vec<Vec<f64>>, SolveOutcome) {
+) -> (Vec<Vec<f64>>, SolveResult) {
     let n = z0.len();
     // Reset the tape up front: even a cleanly-failed solve must not
     // leave a previous solve's records behind (the Taping contract).
@@ -261,34 +279,46 @@ pub fn drive<S: System>(
     stepper.tape = tape;
 
     let mut z = z0.to_vec();
-    let mut success = true;
+    let mut failure = None;
     let mut t_final = ts[0];
     let mut out = Vec::with_capacity(ts.len());
     out.push(z.clone());
     if let Some(tp) = stepper.tape.as_deref_mut() {
         tp.mark_save();
     }
+    // Fail-fast: the first failed segment ends the integration; the
+    // remaining save points repeat the last committed state (outputs
+    // stay grid-shaped, the tape keeps one save mark per grid point).
     for seg in 1..ts.len() {
-        // Seed semantics: each segment starts exactly at its grid time.
-        let mut t = ts[seg - 1];
-        let budget = opts.budget.for_segment(stepper.stats.attempts());
-        success &= stepper.advance(&mut z, &mut t, ts[seg], rng, budget);
-        t_final = t;
+        if failure.is_none() {
+            // Seed semantics: each segment starts exactly at its grid time.
+            let mut t = ts[seg - 1];
+            let budget = opts.budget.for_segment(stepper.stats.attempts());
+            if let Err(kind) = stepper.advance(&mut z, &mut t, ts[seg], rng, budget) {
+                failure = Some(kind);
+            }
+            t_final = t;
+        }
         out.push(z.clone());
         if let Some(tp) = stepper.tape.as_deref_mut() {
             tp.mark_save();
         }
     }
     let stats = stepper.finish();
-    (
-        out,
-        SolveOutcome {
+    let result = match failure {
+        None => Ok(SolveOutcome {
             z,
             t: t_final,
             stats,
-            success,
-        },
-    )
+        }),
+        Some(kind) => Err(SolveError {
+            kind,
+            t: t_final,
+            z,
+            stats,
+        }),
+    };
+    (out, result)
 }
 
 #[cfg(test)]
@@ -311,8 +341,10 @@ mod tests {
         G: FnMut(&[f64], f64, &mut [f64]),
     {
         let mut sys = SdeSystem { drift, diffusion };
-        let (out, outcome) = drive(&mut sys, z0, Saveat::Grid(ts), rng, opts, None, &mut []);
-        (out, outcome.stats, outcome.success)
+        let (out, result) = drive(&mut sys, z0, Saveat::Grid(ts), rng, opts, None, &mut []);
+        use crate::solvers::error::SolveResultExt;
+        let ok = result.is_success();
+        (out, result.stats(), ok)
     }
 
     fn tol_opts(tol: f64) -> SolveOptions {
@@ -417,8 +449,9 @@ mod tests {
             Some(&mut tape),
             &mut [],
         );
-        let (stats_t, ok_t) = (out_t.stats, out_t.success);
-        assert!(ok && ok_t);
+        let out_t = out_t.unwrap();
+        let stats_t = out_t.stats;
+        assert!(ok);
         assert_eq!(zs, zs_t, "tape recording must not perturb the solve");
         assert_eq!(stats.nfe, stats_t.nfe);
         assert_eq!(tape.len() as u64, stats.naccept);
@@ -441,16 +474,76 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "non-decreasing")]
     fn rejects_decreasing_grid() {
         let mut rng = Rng::new(2);
-        let _ = solve_grid(
-            |z, _t, dz| dz[0] = -z[0],
-            |_z, _t, dg| dg[0] = 0.1,
+        let mut sys = SdeSystem {
+            drift: |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0],
+            diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.1,
+        };
+        let (zs, out) = drive(
+            &mut sys,
             &[1.0],
-            &[0.0, 0.6, 0.5],
+            Saveat::Grid(&[0.0, 0.6, 0.5]),
             &mut rng,
             &tol_opts(1e-2),
+            None,
+            &mut [],
         );
+        let err = out.unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::BadSpan);
+        assert_eq!(err.stats.nfe, 0, "no dynamics evaluation");
+        assert_eq!(zs, vec![vec![1.0]], "only z0 saved");
+    }
+
+    #[test]
+    fn nan_drift_is_a_typed_error() {
+        // The drift goes NaN mid-solve: typed NonFiniteState on that
+        // attempt, cheap, never a grind to budget exhaustion.
+        let mut rng = Rng::new(3);
+        let mut sys = SdeSystem {
+            drift: |z: &[f64], t: f64, dz: &mut [f64]| {
+                dz[0] = if t > 0.5 { f64::NAN } else { -z[0] };
+            },
+            diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.2,
+        };
+        let (zs, out) = drive(
+            &mut sys,
+            &[1.0],
+            Saveat::Grid(&[0.0, 1.0]),
+            &mut rng,
+            &tol_opts(1e-3),
+            None,
+            &mut [],
+        );
+        let err = out.unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::NonFiniteState);
+        assert!(err.stats.attempts() < 1000, "{:?}", err.stats);
+        assert!(err.z[0].is_finite(), "last committed state stays finite");
+        assert_eq!(zs.len(), 2, "outputs stay grid-shaped");
+    }
+
+    #[test]
+    fn negative_and_nan_spans_fail_cleanly() {
+        for t1 in [0.0, -1.0, f64::NAN] {
+            let mut rng = Rng::new(4);
+            let mut sys = SdeSystem {
+                drift: |z: &[f64], _t: f64, dz: &mut [f64]| dz[0] = -z[0],
+                diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg[0] = 0.1,
+            };
+            let (zs, out) = drive(
+                &mut sys,
+                &[1.0],
+                Saveat::Span { t0: 0.0, t1 },
+                &mut rng,
+                &tol_opts(1e-2),
+                None,
+                &mut [],
+            );
+            let err = out.unwrap_err();
+            assert_eq!(err.kind, SolveErrorKind::BadSpan, "t1={t1}");
+            assert_eq!(err.z, vec![1.0], "state untouched");
+            assert_eq!(err.stats.nfe, 0);
+            assert_eq!(zs.len(), 1, "only z0 saved");
+        }
     }
 }

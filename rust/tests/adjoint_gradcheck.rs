@@ -17,7 +17,7 @@ use regnde::solvers::adjoint::{
     ode_backward, ode_replay, sde_backward, sde_replay, OdeTape, SdeTape,
 };
 use regnde::solvers::{ode, sde};
-use regnde::solvers::{OdeSystem, Saveat, SdeSystem, SolveOptions, StepBudget};
+use regnde::solvers::{OdeSystem, Saveat, SdeSystem, SolveOptions, SolveResultExt, StepBudget};
 use regnde::util::rng::Rng;
 
 fn init_f64(mlp: &Mlp, seed: u64) -> Vec<f64> {
@@ -70,7 +70,8 @@ fn ode_adjoint_matches_central_differences() {
         Some(&mut tape),
         &mut [],
     );
-    assert!(out.success && !tape.is_empty());
+    let out = out.expect("base-point forward solve failed");
+    assert!(!tape.is_empty());
 
     // Objective of the frozen program under any parameter vector.
     let denom = (ts_count * 2) as f64;
@@ -201,7 +202,7 @@ fn sde_adjoint_matches_central_differences() {
             Some(&mut tape),
             &mut [],
         );
-        (saves, outcome.stats, outcome.success)
+        (saves, outcome.stats(), outcome.is_success())
     };
     assert!(ok && !tape.is_empty());
 

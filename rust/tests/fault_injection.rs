@@ -1,0 +1,487 @@
+//! Fault-injection harness (ISSUE 6 acceptance): every injected fault —
+//! solver-level chaos or network-level abuse — surfaces as a typed
+//! [`SolveError`], a typed batch/serve error, or a shed reply.  Never a
+//! panic, and never a silently-wrong answer.
+//!
+//! Three layers, matching DESIGN.md §Robustness:
+//!
+//! 1. **Solver**: [`ChaosSystem`] injects NaN drift, forced rejects and
+//!    slow evaluations into ODE and SDE drives and ensembles.
+//! 2. **Backend**: all five experiment models take a poisoned (NaN)
+//!    parameter vector through `train_step` and `predict` and must
+//!    return `Ok` with a typed `Metrics::error`, not panic or `Err`.
+//! 3. **Server**: a live loopback server survives malformed frames,
+//!    half-written frames, mid-request disconnects and slow dribbled
+//!    writes, keeps serving afterwards, and drains — every in-flight
+//!    request is answered — before `serve()` returns.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use regnde::data::{mnist_synth, physionet_synth, spiral};
+use regnde::runtime::{Backend, NativeBackend, StepCoefs, TrainData, TrainState};
+use regnde::serve::{
+    BatchError, BatchPolicy, Batcher, Checkpoint, Client, Registry, Request, Response, Server,
+    ServerOpts,
+};
+use regnde::solvers::{
+    ode, sde, ChaosConfig, ChaosSystem, OdeSystem, Saveat, SdeSystem, SolveErrorKind,
+    SolveOptions, StepBudget,
+};
+use regnde::util::rng::Rng;
+use regnde::util::threadpool::ThreadPool;
+
+// ---------------------------------------------------------------------
+// Layer 1: solver chaos
+// ---------------------------------------------------------------------
+
+fn spiral_drift(z: &[f64], _t: f64, dz: &mut [f64]) {
+    dz[0] = -0.1 * z[0] + 2.0 * z[1];
+    dz[1] = -2.0 * z[0] - 0.1 * z[1];
+}
+
+#[test]
+fn ode_chaos_faults_surface_as_typed_errors_never_panics() {
+    // NaN drift at several injection points: NonFiniteState, with the
+    // last committed state still finite and stats reflecting real work.
+    for at in [0, 3, 17, 40] {
+        let mut sys = ChaosSystem::new(OdeSystem(spiral_drift), ChaosConfig::nan_at(at));
+        let (saves, out) = ode::drive(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            &mut [],
+        );
+        let err = out.unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::NonFiniteState, "at={at}");
+        assert!(err.z.iter().all(|v| v.is_finite()), "committed state finite");
+        // Grid-shaped partial output: both save points exist even though
+        // the solve died mid-span.
+        assert_eq!(saves.len(), 2, "failed solves keep grid-shaped saves");
+        assert!(saves.iter().flatten().all(|v| v.is_finite()));
+    }
+
+    // Forced rejects: the controller either underflows dt or burns the
+    // budget — both typed, neither a hang nor a panic.
+    let mut sys = ChaosSystem::new(OdeSystem(spiral_drift), ChaosConfig::huge_from(8));
+    let (_, out) = ode::drive(
+        &mut sys,
+        &[2.0, 0.0],
+        Saveat::Span { t0: 0.0, t1: 1.5 },
+        &SolveOptions::new()
+            .with_tolerance(1e-7)
+            .with_budget(StepBudget::Total(512)),
+        None,
+        &mut [],
+    );
+    let err = out.unwrap_err();
+    assert!(
+        matches!(
+            err.kind,
+            SolveErrorKind::StepSizeUnderflow | SolveErrorKind::BudgetExhausted
+        ),
+        "{:?}",
+        err.kind
+    );
+    assert!(err.stats.nreject > 0, "forced rejects must be visible in stats");
+
+    // Slow evaluations are a latency fault only: bit-identical results.
+    let run = |cfg: ChaosConfig| {
+        let mut sys = ChaosSystem::new(OdeSystem(spiral_drift), cfg);
+        ode::drive(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &SolveOptions::new().with_tolerance(1e-7),
+            None,
+            &mut [],
+        )
+    };
+    let (slow_saves, slow) = run(ChaosConfig::slow(5, Duration::from_micros(200)));
+    let (clean_saves, clean) = run(ChaosConfig::default());
+    assert_eq!(slow_saves, clean_saves, "slow evals must not change the result");
+    assert_eq!(slow.unwrap().stats.nfe, clean.unwrap().stats.nfe);
+}
+
+#[test]
+fn sde_chaos_faults_surface_as_typed_errors_never_panics() {
+    let mk = |cfg: ChaosConfig| {
+        ChaosSystem::new(
+            SdeSystem {
+                drift: spiral_drift,
+                diffusion: |_z: &[f64], _t: f64, dg: &mut [f64]| dg.fill(0.1),
+            },
+            cfg,
+        )
+    };
+    // NaN drift mid-solve (diffusion evals interleave, so the counter
+    // crosses both callbacks).
+    for at in [0, 2, 9] {
+        let mut sys = mk(ChaosConfig::nan_at(at));
+        let mut rng = Rng::new(7);
+        let (saves, out) = sde::drive(
+            &mut sys,
+            &[1.0, 1.0],
+            Saveat::Span { t0: 0.0, t1: 0.5 },
+            &mut rng,
+            &SolveOptions::new().with_tolerance(1e-3),
+            None,
+            &mut [],
+        );
+        let err = out.unwrap_err();
+        assert_eq!(err.kind, SolveErrorKind::NonFiniteState, "at={at}");
+        assert!(saves.iter().flatten().all(|v| v.is_finite()));
+    }
+    // Forced rejects under a hard budget.
+    let mut sys = mk(ChaosConfig::huge_from(6));
+    let mut rng = Rng::new(7);
+    let (_, out) = sde::drive(
+        &mut sys,
+        &[1.0, 1.0],
+        Saveat::Span { t0: 0.0, t1: 0.5 },
+        &mut rng,
+        &SolveOptions::new()
+            .with_tolerance(1e-3)
+            .with_budget(StepBudget::Total(256)),
+        None,
+        &mut [],
+    );
+    let err = out.unwrap_err();
+    assert!(
+        matches!(
+            err.kind,
+            SolveErrorKind::StepSizeUnderflow | SolveErrorKind::BudgetExhausted
+        ),
+        "{:?}",
+        err.kind
+    );
+}
+
+// ---------------------------------------------------------------------
+// Layer 2: all five experiment models contain a poisoned parameter
+// vector as a typed error
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_five_models_contain_nan_params_as_typed_errors() {
+    let be = NativeBackend::new();
+
+    // Per-model fixture data, matching each arch's TrainData kind.
+    let ts_traj: Vec<f32> = (0..12).map(|i| i as f32 / 11.0).collect();
+    let traj: Vec<f32> = spiral::spiral_ode_trajectory(
+        [2.0, 0.0],
+        &ts_traj.iter().map(|&t| t as f64).collect::<Vec<_>>(),
+    );
+
+    let ts_sde = spiral::uniform_grid(6, 0.5);
+    let ts_sde_f32: Vec<f32> = ts_sde.iter().map(|&t| t as f32).collect();
+    let (mu, var) = spiral::spiral_sde_moments([1.0, 1.0], &ts_sde, 16, 1);
+    let u0: Vec<f32> = (0..6).flat_map(|_| [1.0f32, 1.0]).collect();
+
+    let b = 3;
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..b * mnist_synth::DIM)
+        .map(|_| rng.range(0.0, 1.0) as f32)
+        .collect();
+    let mut y = vec![0.0f32; b * mnist_synth::CLASSES];
+    for r in 0..b {
+        y[r * mnist_synth::CLASSES + r % mnist_synth::CLASSES] = 1.0;
+    }
+
+    let t_pts = 5;
+    let c = physionet_synth::CHANNELS;
+    let sx: Vec<f32> = (0..b * t_pts * c).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let mask: Vec<f32> = (0..b * t_pts * c)
+        .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+        .collect();
+    let ts_series: Vec<f32> = (0..t_pts).map(|i| i as f32 / (t_pts - 1) as f32).collect();
+
+    let cases: Vec<(&str, TrainData)> = vec![
+        ("spiral_node", TrainData::Trajectory { data: &traj, ts: &ts_traj }),
+        (
+            "spiral_nsde",
+            TrainData::Moments { u0: &u0, mu: &mu, var: &var, ts: &ts_sde_f32 },
+        ),
+        ("mnist_node", TrainData::Classify { x: &x, y: &y }),
+        ("mnist_nsde", TrainData::Classify { x: &x, y: &y }),
+        ("latent_ode", TrainData::Series { x: &sx, mask: &mask, ts: &ts_series }),
+    ];
+
+    for (model, data) in &cases {
+        let model = *model;
+        let info = be.model(model).unwrap();
+        let mut params = be.init_params(model, 0).unwrap();
+        // Poison every parameter: the first drift (or encoder) pass goes
+        // NaN no matter where a given arch reads first.
+        params.iter_mut().for_each(|v| *v = f32::NAN);
+        let state = TrainState::new(params.clone(), info.opt_state_size);
+
+        let out = be
+            .train_step(model, false, 0, &state, data, &StepCoefs::default())
+            .unwrap_or_else(|e| panic!("{model}: train_step must contain the fault: {e:#}"));
+        assert!(!out.metrics.success, "{model}: poisoned step cannot succeed");
+        assert_eq!(
+            out.metrics.error,
+            Some(SolveErrorKind::NonFiniteState),
+            "{model}: typed error must name the failure"
+        );
+
+        let (_, m) = be
+            .predict(model, &params, data, 0)
+            .unwrap_or_else(|e| panic!("{model}: predict must contain the fault: {e:#}"));
+        assert_eq!(
+            m.error,
+            Some(SolveErrorKind::NonFiniteState),
+            "{model}: predict carries the same typed error"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 3: live-server chaos + drain guarantee
+// ---------------------------------------------------------------------
+
+/// A servable spiral checkpoint; `step_budget` starves the solve when
+/// tiny (non-finite parameters are — correctly — rejected at import, so
+/// budget exhaustion is the injectable typed solve failure here).
+fn spiral_checkpoint(be: &NativeBackend, seed: u32, step_budget: u64) -> Checkpoint {
+    let params = be.init_params("spiral_node", seed).unwrap();
+    let mut state = be.export_state("spiral_node", &params).unwrap();
+    state.step_budget = step_budget;
+    let ts: Vec<f32> = (0..6).map(|i| i as f32 / 5.0).collect();
+    Checkpoint::new(state, "spiral-node", "vanilla", ts)
+}
+
+fn spawn_server(
+    max_wait: Duration,
+) -> (String, std::thread::JoinHandle<()>, Arc<Registry>) {
+    let be = NativeBackend::new();
+    let registry = Arc::new(Registry::in_memory());
+    registry.insert("spiral", spiral_checkpoint(&be, 3, 100_000)).unwrap();
+    registry.insert("poisoned", spiral_checkpoint(&be, 3, 2)).unwrap();
+    let pool = Arc::new(ThreadPool::new(4));
+    let batcher = Arc::new(Batcher::new(
+        Arc::clone(&registry),
+        pool,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait,
+            ..Default::default()
+        },
+    ));
+    let opts = ServerOpts {
+        read_timeout: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let (addr, handle) =
+        Server::spawn(Arc::clone(&registry), batcher, opts, "127.0.0.1:0").unwrap();
+    (addr.to_string(), handle, registry)
+}
+
+/// Read one newline-terminated reply off a raw socket (byte-wise, so a
+/// reply split across TCP segments still assembles).
+fn read_reply(s: &mut TcpStream) -> String {
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    while let Ok(1) = s.read(&mut byte) {
+        if byte[0] == b'\n' {
+            break;
+        }
+        buf.push(byte[0]);
+    }
+    String::from_utf8_lossy(&buf).to_string()
+}
+
+fn predict_line(model: &str, deadline_ms: Option<u64>) -> Vec<u8> {
+    let mut line = Request::Predict {
+        model: model.into(),
+        u0: vec![2.0, 0.0],
+        budget: None,
+        deadline_ms,
+    }
+    .encode();
+    line.push('\n');
+    line.into_bytes()
+}
+
+#[test]
+fn poisoned_model_returns_typed_error_over_the_wire() {
+    let (addr, handle, _registry) = spawn_server(Duration::from_micros(200));
+    let mut client = Client::connect(&addr).unwrap();
+    match client
+        .request(&Request::Predict {
+            model: "poisoned".into(),
+            u0: vec![2.0, 0.0],
+            budget: None,
+            deadline_ms: None,
+        })
+        .unwrap()
+    {
+        Response::Error { kind, msg } => {
+            assert_eq!(kind, Some(SolveErrorKind::BudgetExhausted), "{msg}");
+        }
+        other => panic!("poisoned solve must fail typed, got {other:?}"),
+    }
+    // The same connection and the healthy model both still work.
+    match client
+        .request(&Request::Predict {
+            model: "spiral".into(),
+            u0: vec![2.0, 0.0],
+            budget: None,
+            deadline_ms: None,
+        })
+        .unwrap()
+    {
+        Response::Predict { nfe, .. } => assert!(nfe > 0),
+        other => panic!("healthy model must keep serving, got {other:?}"),
+    }
+    assert!(matches!(client.request(&Request::Shutdown).unwrap(), Response::Shutdown));
+    handle.join().unwrap();
+}
+
+#[test]
+fn network_chaos_never_kills_the_server() {
+    let (addr, handle, _registry) = spawn_server(Duration::from_micros(200));
+    let line = predict_line("spiral", Some(100));
+
+    for round in 0..3 {
+        // Half-written frame, then disconnect.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&line[..line.len() / 2]).unwrap();
+        drop(s);
+
+        // Garbage frame: must earn an error reply, not a hangup.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"}{ definitely not json\n").unwrap();
+        let reply = read_reply(&mut s);
+        let resp = Response::decode(&reply)
+            .unwrap_or_else(|e| panic!("round {round}: unparsable reply {reply:?}: {e:#}"));
+        assert!(
+            matches!(resp, Response::Error { .. }),
+            "garbage must earn a typed error, got {resp:?}"
+        );
+        drop(s);
+
+        // Full request, then vanish before the reply (the server answers
+        // a dead peer and must shrug off the write error).
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&line).unwrap();
+        drop(s);
+
+        // Slow dribbled write across several read-timeout ticks: the
+        // server must reassemble the frame, not corrupt it.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        for chunk in line.chunks(7) {
+            s.write_all(chunk).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let reply = read_reply(&mut s);
+        assert!(
+            reply.contains("\"ok\":true") || reply.contains("\"shed\":true"),
+            "dribbled frame must be served or shed, got {reply}"
+        );
+    }
+
+    // After all that abuse, a clean client still gets a prediction.
+    let mut client = Client::connect(&addr).unwrap();
+    match client
+        .request(&Request::Predict {
+            model: "spiral".into(),
+            u0: vec![2.0, 0.0],
+            budget: None,
+            deadline_ms: None,
+        })
+        .unwrap()
+    {
+        Response::Predict { nfe, .. } => assert!(nfe > 0),
+        other => panic!("server must keep serving after chaos, got {other:?}"),
+    }
+    assert!(matches!(client.request(&Request::Shutdown).unwrap(), Response::Shutdown));
+    handle.join().unwrap();
+}
+
+#[test]
+fn draining_shutdown_answers_every_in_flight_request() {
+    // A slow coalescing window keeps requests in flight long enough for
+    // the shutdown to race them; the drain guarantee says every one of
+    // them still gets a reply (served or shed — never a dead socket).
+    let (addr, handle, _registry) = spawn_server(Duration::from_millis(80));
+    let n = 6;
+    // Every lane connects before the shutdown fires (barrier), so each
+    // request is genuinely in flight on an accepted connection.
+    let barrier = std::sync::Barrier::new(n + 1);
+    let replies: Vec<Response> = std::thread::scope(|scope| {
+        let lanes: Vec<_> = (0..n)
+            .map(|i| {
+                let addr = addr.clone();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    barrier.wait();
+                    client
+                        .request(&Request::Predict {
+                            model: "spiral".into(),
+                            u0: vec![2.0 - 0.01 * i as f32, 0.0],
+                            budget: None,
+                            deadline_ms: None,
+                        })
+                        .unwrap_or_else(|e| {
+                            panic!("in-flight request {i} must be answered during drain: {e:#}")
+                        })
+                })
+            })
+            .collect();
+        barrier.wait();
+        // Let every lane get its request in flight, then pull the plug.
+        std::thread::sleep(Duration::from_millis(25));
+        let mut client = Client::connect(&addr).unwrap();
+        match client.request(&Request::Shutdown) {
+            Ok(Response::Shutdown) => {}
+            Ok(other) => panic!("unexpected shutdown reply {other:?}"),
+            Err(e) => panic!("shutdown request failed: {e:#}"),
+        }
+        lanes.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // serve() returns only after the drain: joining here proves it.
+    handle.join().unwrap();
+    for (i, resp) in replies.iter().enumerate() {
+        assert!(
+            matches!(resp, Response::Predict { .. } | Response::Shed(_)),
+            "request {i}: drained requests are served or shed, got {resp:?}"
+        );
+    }
+    // And new connections are refused once the listener is gone.
+    assert!(
+        Client::connect(&addr).is_err()
+            || Client::connect(&addr)
+                .and_then(|mut c| c.request(&Request::List))
+                .is_err(),
+        "the drained server must not accept new work"
+    );
+}
+
+#[test]
+fn batcher_contains_poisoned_checkpoints_without_wedging() {
+    // Direct batcher-level check of the typed Solve error (no sockets):
+    // a poisoned window reports the SolveErrorKind; the healthy model is
+    // untouched before, during and after.
+    let be = NativeBackend::new();
+    let registry = Arc::new(Registry::in_memory());
+    registry.insert("spiral", spiral_checkpoint(&be, 3, 100_000)).unwrap();
+    registry.insert("poisoned", spiral_checkpoint(&be, 3, 2)).unwrap();
+    let pool = Arc::new(ThreadPool::new(2));
+    let batcher = Batcher::new(Arc::clone(&registry), pool, BatchPolicy::default());
+
+    match batcher.submit("poisoned", vec![2.0, 0.0], None, None) {
+        Err(BatchError::Solve { kind, .. }) => {
+            assert_eq!(kind, SolveErrorKind::BudgetExhausted)
+        }
+        other => panic!("expected typed Solve error, got {other:?}"),
+    }
+    let reply = batcher.submit("spiral", vec![2.0, 0.0], None, None).unwrap();
+    assert!(reply.nfe > 0, "healthy model unaffected by the poisoned one");
+}

@@ -10,10 +10,10 @@
 //!   `Backend::predict`.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use regnde::runtime::{Backend, NativeBackend, TrainData};
-use regnde::serve::{BatchPolicy, Batcher, Checkpoint, Registry};
+use regnde::serve::{BatchError, BatchPolicy, Batcher, Checkpoint, Registry};
 use regnde::util::threadpool::ThreadPool;
 
 const SERVING_POINTS: usize = 8;
@@ -43,6 +43,7 @@ fn concurrent_requests_coalesce_and_route_correctly() {
     let policy = BatchPolicy {
         max_batch: n,
         max_wait: Duration::from_millis(100),
+        ..Default::default()
     };
     let (_registry, batcher) = batcher(policy);
 
@@ -52,7 +53,7 @@ fn concurrent_requests_coalesce_and_route_correctly() {
                 let batcher = Arc::clone(&batcher);
                 scope.spawn(move || {
                     let u0 = vec![1.0 + 0.25 * i as f32, -0.5 * i as f32];
-                    (u0.clone(), batcher.submit("spiral", u0, None))
+                    (u0.clone(), batcher.submit("spiral", u0, None, None))
                 })
             })
             .collect();
@@ -91,6 +92,7 @@ fn max_batch_is_a_hard_cap() {
     let policy = BatchPolicy {
         max_batch: 3,
         max_wait: Duration::from_millis(100),
+        ..Default::default()
     };
     let (_registry, batcher) = batcher(policy);
     let replies: Vec<_> = std::thread::scope(|scope| {
@@ -98,7 +100,7 @@ fn max_batch_is_a_hard_cap() {
             .map(|i| {
                 let batcher = Arc::clone(&batcher);
                 scope.spawn(move || {
-                    batcher.submit("spiral", vec![1.0 + 0.1 * i as f32, 0.5], None)
+                    batcher.submit("spiral", vec![1.0 + 0.1 * i as f32, 0.5], None, None)
                 })
             })
             .collect();
@@ -115,12 +117,13 @@ fn single_request_is_bit_identical_to_in_process_predict() {
     let policy = BatchPolicy {
         max_batch: 4,
         max_wait: Duration::from_micros(100),
+        ..Default::default()
     };
     let (registry, batcher) = batcher(policy);
     let model = registry.get("spiral").unwrap();
 
     let u0 = [2.0f32, 0.0];
-    let reply = batcher.submit("spiral", u0.to_vec(), None).unwrap();
+    let reply = batcher.submit("spiral", u0.to_vec(), None, None).unwrap();
     assert_eq!(reply.batch, 1);
 
     // In-process reference: Backend::predict over the same grid (the
@@ -145,6 +148,7 @@ fn failing_solve_poisons_only_its_own_batch() {
     let policy = BatchPolicy {
         max_batch: 4,
         max_wait: Duration::from_millis(50),
+        ..Default::default()
     };
     let (registry, batcher) = batcher(policy);
     // A model whose checkpoint budget is too small to finish any solve:
@@ -157,7 +161,7 @@ fn failing_solve_poisons_only_its_own_batch() {
                 let batcher = Arc::clone(&batcher);
                 // Interleave: half the requests hit the poisoned model.
                 let id = if i % 2 == 0 { "tiny" } else { "spiral" };
-                scope.spawn(move || (id, batcher.submit(id, vec![1.0, 1.0], None)))
+                scope.spawn(move || (id, batcher.submit(id, vec![1.0, 1.0], None, None)))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -177,23 +181,23 @@ fn failing_solve_poisons_only_its_own_batch() {
     }
 
     // And the healthy model still serves after the poisoned batches.
-    assert!(batcher.submit("spiral", vec![0.5, 0.5], None).is_ok());
+    assert!(batcher.submit("spiral", vec![0.5, 0.5], None, None).is_ok());
 }
 
 #[test]
 fn shape_and_model_errors_are_rejected_before_batching() {
     let (_registry, batcher) = batcher(BatchPolicy::default());
-    let err = batcher.submit("ghost", vec![1.0, 2.0], None).unwrap_err();
+    let err = batcher.submit("ghost", vec![1.0, 2.0], None, None).unwrap_err();
     assert!(format!("{err:#}").contains("unknown model"));
-    let err = batcher.submit("spiral", vec![1.0], None).unwrap_err();
+    let err = batcher.submit("spiral", vec![1.0], None, None).unwrap_err();
     assert!(format!("{err:#}").contains("2-dim"));
     // Non-finite initial states would poison every rider of a window:
     // rejected up front instead.
     let bad = vec![f32::NAN, 0.0];
-    let err = batcher.submit("spiral", bad, None).unwrap_err();
+    let err = batcher.submit("spiral", bad, None, None).unwrap_err();
     assert!(format!("{err:#}").contains("finite"));
     let bad = vec![1.0, f32::INFINITY];
-    let err = batcher.submit("spiral", bad, None).unwrap_err();
+    let err = batcher.submit("spiral", bad, None, None).unwrap_err();
     assert!(format!("{err:#}").contains("finite"));
     // Rejected requests never reach a window.
     assert_eq!(batcher.stats().requests, 0);
@@ -207,6 +211,7 @@ fn underfunded_requests_ride_alone_and_cannot_poison_a_shared_window() {
     let policy = BatchPolicy {
         max_batch: 8,
         max_wait: Duration::from_millis(50),
+        ..Default::default()
     };
     let (_registry, batcher) = batcher(policy);
     let results: Vec<_> = std::thread::scope(|scope| {
@@ -215,7 +220,7 @@ fn underfunded_requests_ride_alone_and_cannot_poison_a_shared_window() {
                 let batcher = Arc::clone(&batcher);
                 // Even lanes declare a hopeless 1-attempt budget.
                 let budget = if i % 2 == 0 { Some(1) } else { None };
-                scope.spawn(move || (budget, batcher.submit("spiral", vec![1.0, 1.0], budget)))
+                scope.spawn(move || (budget, batcher.submit("spiral", vec![1.0, 1.0], budget, None)))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -232,4 +237,76 @@ fn underfunded_requests_ride_alone_and_cannot_poison_a_shared_window() {
             }
         }
     }
+}
+
+#[test]
+fn expired_deadline_is_shed_at_admission_without_solver_work() {
+    let (_registry, batcher) = batcher(BatchPolicy::default());
+    let err = batcher
+        .submit("spiral", vec![1.0, 0.0], None, Some(Instant::now()))
+        .unwrap_err();
+    match err {
+        BatchError::Shed(reason) => assert!(reason.contains("deadline"), "{reason}"),
+        other => panic!("expected Shed, got {other:?}"),
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, 0, "shed requests never reach a window");
+    assert_eq!(stats.shed, 1);
+}
+
+#[test]
+fn deadline_expiring_during_coalescing_is_shed_at_window_close() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(60),
+        ..Default::default()
+    };
+    let (_registry, batcher) = batcher(policy);
+    // The leader holds its window open for 60ms; a 5ms deadline expires
+    // while coalescing, so the close sheds the request before solving.
+    let err = batcher
+        .submit(
+            "spiral",
+            vec![1.0, 0.0],
+            None,
+            Some(Instant::now() + Duration::from_millis(5)),
+        )
+        .unwrap_err();
+    assert!(matches!(err, BatchError::Shed(_)), "{err:?}");
+    assert_eq!(batcher.stats().shed, 1);
+    // The batcher is not wedged: a deadline-less request still solves.
+    assert!(batcher.submit("spiral", vec![1.0, 0.0], None, None).is_ok());
+}
+
+#[test]
+fn full_admission_queue_sheds_instead_of_queueing_unboundedly() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(150),
+        max_queue: 1,
+    };
+    let (_registry, batcher) = batcher(policy);
+    std::thread::scope(|scope| {
+        let leader = {
+            let batcher = Arc::clone(&batcher);
+            scope.spawn(move || batcher.submit("spiral", vec![1.0, 0.0], None, None))
+        };
+        // Let the leader open its window, then arrive while it is still
+        // coalescing: with max_queue 1 the arrival must shed, not block.
+        std::thread::sleep(Duration::from_millis(40));
+        let err = batcher
+            .submit("spiral", vec![2.0, 0.0], None, None)
+            .unwrap_err();
+        match err {
+            BatchError::Shed(reason) => assert!(reason.contains("queue"), "{reason}"),
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert!(
+            leader.join().unwrap().is_ok(),
+            "the leader itself must still be served"
+        );
+    });
+    assert!(batcher.stats().shed >= 1);
+    // Once the window drained, the queue has room again.
+    assert!(batcher.submit("spiral", vec![0.5, 0.5], None, None).is_ok());
 }

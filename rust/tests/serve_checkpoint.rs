@@ -255,3 +255,102 @@ fn malformed_truncated_and_wrong_version_files_are_typed_errors() {
     assert!(Checkpoint::load(&good).is_ok());
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------
+// Property tests (ISSUE 6): random corruption never panics the parser
+// ---------------------------------------------------------------------
+
+/// The containment property of `Checkpoint::load`: any byte-level
+/// corruption either fails with a typed [`CheckpointError`] (whose
+/// Display names the problem) or — when the corruption happens to leave
+/// a structurally valid checkpoint, e.g. a bit flip inside the hex
+/// parameter payload — loads a checkpoint that the backend can then
+/// accept or reject through its own typed path.  Nothing panics.
+fn load_is_contained(path: &std::path::Path, what: &str) -> Result<(), String> {
+    match Checkpoint::load(path) {
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.is_empty() {
+                return Err(format!("{what}: typed error must describe itself"));
+            }
+            Ok(())
+        }
+        Ok(loaded) => {
+            // Survivor checkpoints must still go through import
+            // validation without panicking (Err is fine).
+            let be = NativeBackend::new();
+            let _ = be.import_state(&loaded.state);
+            Ok(())
+        }
+    }
+}
+
+#[test]
+fn property_truncated_checkpoints_never_panic() {
+    use regnde::util::propcheck::{check, Gen};
+    let dir = temp_dir("prop-truncate");
+    let be = NativeBackend::new();
+    let params = be.init_params("spiral_node", 3).unwrap();
+    let state = be.export_state("spiral_node", &params).unwrap();
+    let ts: Vec<f32> = (0..4).map(|i| i as f32 / 3.0).collect();
+    let good = dir.join("good.json");
+    Checkpoint::new(state, "spiral-node", "vanilla", ts).save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let p = dir.join("corrupt.json");
+
+    check("checkpoint/truncate", 128, |g: &mut Gen| {
+        let cut = g.usize_in(0, bytes.len() - 1);
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        load_is_contained(&p, &format!("truncated at {cut}/{}", bytes.len()))
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn property_bit_flipped_checkpoints_never_panic() {
+    use regnde::util::propcheck::{check, Gen};
+    let dir = temp_dir("prop-bitflip");
+    let be = NativeBackend::new();
+    let params = be.init_params("spiral_node", 3).unwrap();
+    let state = be.export_state("spiral_node", &params).unwrap();
+    let ts: Vec<f32> = (0..4).map(|i| i as f32 / 3.0).collect();
+    let good = dir.join("good.json");
+    Checkpoint::new(state, "spiral-node", "vanilla", ts).save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let p = dir.join("corrupt.json");
+
+    check("checkpoint/bitflip", 128, |g: &mut Gen| {
+        let mut corrupt = bytes.clone();
+        // Flip 1..=8 random bits anywhere in the file (including inside
+        // the hex parameter payload and the JSON structure).
+        let flips = g.usize_in(1, 8);
+        for _ in 0..flips {
+            let at = g.usize_in(0, corrupt.len() - 1);
+            let bit = g.usize_in(0, 7);
+            corrupt[at] ^= 1 << bit;
+        }
+        std::fs::write(&p, &corrupt).unwrap();
+        load_is_contained(&p, &format!("{flips} bit flips"))
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn property_garbage_bytes_are_typed_errors_never_panics() {
+    use regnde::util::propcheck::{check, ensure, Gen};
+    let dir = temp_dir("prop-garbage");
+    let p = dir.join("garbage.json");
+
+    check("checkpoint/garbage", 128, |g: &mut Gen| {
+        // Arbitrary bytes, arbitrary length — including invalid UTF-8
+        // (must come back as Io, not a panic inside read_to_string).
+        let len = g.usize_in(0, 512);
+        let junk: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        std::fs::write(&p, &junk).unwrap();
+        match Checkpoint::load(&p) {
+            Err(e) => ensure(!e.to_string().is_empty(), "error must describe itself"),
+            Ok(_) => ensure(false, format!("{len} random bytes cannot be a checkpoint")),
+        }
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
