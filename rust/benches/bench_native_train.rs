@@ -1,7 +1,11 @@
 //! Native training perf smoke: a short spiral-NODE `srnode+ernode` run
 //! through the discrete-adjoint backend — forward tape + backward pass
 //! differentiating `data_loss + coef_e·R_E + coef_s·R_S` — timed end to
-//! end, with the paper-claim invariants asserted inline.
+//! end, with the paper-claim invariants asserted inline.  The run is
+//! executed twice — once with `kernels::set_scalar_fallback(true)` (the
+//! retained per-row scalar path) and once on the vectorized batched
+//! kernels — so each report carries the epoch-wall-clock before/after of
+//! the kernel hot path.
 //!
 //! Emits `BENCH_native_train.json` at the repo root (schema documented in
 //! rust/DESIGN.md §Perf) so the native-training perf trajectory is
@@ -13,6 +17,7 @@
 
 use regnde::coordinator::experiments::{self, TrainOpts};
 use regnde::coordinator::Method;
+use regnde::models::kernels;
 use regnde::runtime::NativeBackend;
 use regnde::util::cli::env_usize;
 use regnde::util::json::{obj, Json};
@@ -30,12 +35,20 @@ fn main() {
     };
 
     let be = NativeBackend::new();
+    // Ablation leg first: identical run on the per-row scalar path.
+    kernels::set_scalar_fallback(true);
+    let run_scalar =
+        experiments::run_by_name(&be, "spiral-node", method, opts).expect("train run (scalar)");
+    kernels::set_scalar_fallback(false);
     let run = experiments::run_by_name(&be, "spiral-node", method, opts).expect("train run");
 
     let first = run.epochs.first().expect("epochs recorded");
     let last = run.epochs.last().expect("epochs recorded");
     let total_steps = (epochs * iters) as f64;
     let steps_per_sec = total_steps / run.train_time_s.max(1e-9);
+    let epoch_time_scalar_s = run_scalar.train_time_s / epochs as f64;
+    let epoch_time_kernel_s = run.train_time_s / epochs as f64;
+    let kernel_speedup = epoch_time_scalar_s / epoch_time_kernel_s.max(1e-9);
 
     // The invariants the CI smoke rides on: both regularizers accumulate,
     // the stiffness gradient is part of the update (PR 3), and the short
@@ -51,26 +64,40 @@ fn main() {
 
     let mut table = Table::new(
         "Native training — spiral NODE, SRNODE + ERNODE (discrete adjoint)",
-        &["epochs x iters", "steps/sec", "final loss", "final NFE", "r_e", "r_s"],
+        &[
+            "epochs x iters",
+            "steps/sec",
+            "epoch scalar (s)",
+            "epoch kernel (s)",
+            "speedup",
+            "final loss",
+            "r_e",
+            "r_s",
+        ],
     );
     table.row(vec![
         format!("{epochs} x {iters}"),
         format!("{steps_per_sec:.2}"),
+        format!("{epoch_time_scalar_s:.3}"),
+        format!("{epoch_time_kernel_s:.3}"),
+        format!("{kernel_speedup:.2}x"),
         format!("{:.5}", last.loss),
-        format!("{:.1}", last.nfe),
         format!("{:.3e}", last.r_e),
         format!("{:.3e}", last.r_s),
     ]);
     println!("{}", table.render());
 
     let report = obj([
-        ("schema", Json::from("bench_native_train/v1")),
+        ("schema", Json::from("bench_native_train/v2")),
         ("experiment", Json::from(run.experiment.as_str())),
         ("method", Json::from(run.method.as_str())),
         ("epochs", Json::from(epochs)),
         ("iters_per_epoch", Json::from(iters)),
         ("train_time_s", Json::from(run.train_time_s)),
         ("steps_per_sec", Json::from(steps_per_sec)),
+        ("epoch_time_scalar_s", Json::from(epoch_time_scalar_s)),
+        ("epoch_time_kernel_s", Json::from(epoch_time_kernel_s)),
+        ("kernel_speedup", Json::from(kernel_speedup)),
         ("loss_first_epoch", Json::from(first.loss)),
         ("loss_final_epoch", Json::from(last.loss)),
         ("nfe_final_epoch", Json::from(last.nfe)),

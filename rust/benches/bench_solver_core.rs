@@ -1,11 +1,13 @@
-//! Solver-core microbenchmark: single-trajectory stepping rate and
-//! ensemble integration throughput (serial vs thread-pooled).
+//! Solver-core microbenchmark: single-trajectory stepping rate, the
+//! batch-width sweep over the vectorized MLP kernels (scalar-fallback vs
+//! kernel ablation on identical call paths), and ensemble integration
+//! throughput (serial vs thread-pooled).
 //!
-//! This is the perf anchor for the allocation-free solver rewrite: it
-//! times the exact hot loops behind ground-truth generation and the
-//! tolerance/ablation benches, and emits `BENCH_solver_core.json` at the
-//! repo root (schema documented in rust/DESIGN.md §Perf) so the perf
-//! trajectory is tracked PR over PR.
+//! This is the perf anchor for the allocation-free solver rewrite and
+//! the batched-kernel hot path: it times the exact loops behind
+//! ground-truth generation, native training and serving, and emits
+//! `BENCH_solver_core.json` at the repo root (schema documented in
+//! rust/DESIGN.md §Perf) so the perf trajectory is tracked PR over PR.
 //!
 //! Scale knobs (env):
 //!   REGNDE_BENCH_SEEDS   measurement repetitions per case (default 3)
@@ -14,14 +16,99 @@
 use std::time::Instant;
 
 use regnde::data::spiral::uniform_grid;
+use regnde::models::{kernels, Mlp};
 use regnde::solvers::{
     problems, sde_ensemble_moments, solve, EnsembleOptions, OdeSystem, Saveat, SolveOptions,
     StepBudget, Tableau, Taping,
 };
 use regnde::util::cli::env_usize;
 use regnde::util::json::{obj, Json};
+use regnde::util::rng::Rng;
 use regnde::util::tablefmt::Table;
 use regnde::util::threadpool::default_workers;
+
+/// Batch-sweep MLP shape: the MNIST-class dynamics block scaled to a
+/// 64-wide hidden layer (the ISSUE's sweep point).
+const SWEEP_DIMS: [usize; 3] = [16, 64, 16];
+
+/// GEMM flops per NFE per row: forward + two matmuls (`2·Σ inᵢ·outᵢ`);
+/// tanh cost excluded — this is a GEMM-flop rate, not a full-op count.
+const FLOPS_PER_ROW_NFE: f64 = 2.0 * (16.0 * 64.0 + 64.0 * 16.0);
+
+/// One batch-width sweep point: drive `rows` copies of the MLP vector
+/// field through the adaptive stepper twice — scalar-fallback leg, then
+/// kernel leg — on the exact same call path (`Mlp::forward_batch` +
+/// fused `rk_combine`, toggled by `kernels::set_scalar_fallback`).
+fn batch_sweep_case(rows: usize, reps: usize) -> (Json, Vec<String>) {
+    let mlp = Mlp::new(&SWEEP_DIMS);
+    let mut p32 = vec![0.0f32; mlp.n_params()];
+    mlp.init(&mut Rng::new(77), &mut p32);
+    let theta: Vec<f64> = p32.iter().map(|&v| v as f64 * 0.5).collect();
+    let mut rng = Rng::new(78);
+    let z0: Vec<f64> = (0..rows * SWEEP_DIMS[0]).map(|_| rng.range(-1.0, 1.0)).collect();
+    let opts = SolveOptions::new()
+        .with_tolerance(1e-6)
+        .with_budget(StepBudget::PerSegment(10_000_000));
+    // Scale inner repeats down with batch width so every sweep point
+    // measures a comparable wall-clock interval.
+    let inner = (512 / rows).max(8);
+
+    let mut leg = |scalar: bool| -> (f64, f64) {
+        kernels::set_scalar_fallback(scalar);
+        let mut scratch = mlp.batch_scratch(rows);
+        let mut best_rate = 0.0f64;
+        let mut best_gflops = 0.0f64;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let mut attempts = 0u64;
+            let mut nfe = 0u64;
+            for _ in 0..inner {
+                let mut sys = OdeSystem(|z: &[f64], _t: f64, dz: &mut [f64]| {
+                    mlp.forward_batch(&theta, z, dz, &mut scratch)
+                });
+                let (_, out) = solve(
+                    &mut sys,
+                    &z0,
+                    Saveat::Span { t0: 0.0, t1: 1.5 },
+                    &opts,
+                    None,
+                    Taping::Off,
+                    &mut [],
+                );
+                let out = out.unwrap_or_else(|e| panic!("batch sweep solve failed: {e}"));
+                attempts += out.stats.attempts();
+                nfe += out.stats.nfe;
+                std::hint::black_box(&out.z);
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            best_rate = best_rate.max(attempts as f64 / secs);
+            let flops = nfe as f64 * rows as f64 * FLOPS_PER_ROW_NFE;
+            best_gflops = best_gflops.max(flops / secs / 1e9);
+        }
+        kernels::set_scalar_fallback(false);
+        (best_rate, best_gflops)
+    };
+    let (scalar_rate, _) = leg(true);
+    let (kernel_rate, kernel_gflops) = leg(false);
+    let speedup = kernel_rate / scalar_rate.max(1e-9);
+
+    let row = vec![
+        format!("{rows}"),
+        format!("{scalar_rate:.0}"),
+        format!("{kernel_rate:.0}"),
+        format!("{speedup:.2}x"),
+        format!("{kernel_gflops:.2}"),
+    ];
+    let j = obj([
+        ("rows", Json::from(rows)),
+        ("hidden", Json::from(SWEEP_DIMS[1])),
+        ("scalar_steps_per_sec", Json::from(scalar_rate)),
+        ("kernel_steps_per_sec", Json::from(kernel_rate)),
+        ("speedup", Json::from(speedup)),
+        ("kernel_gflops", Json::from(kernel_gflops)),
+    ]);
+    (j, row)
+}
 
 /// Best-of-`reps` single-trajectory stepping rate for one ODE case.
 fn single_case(
@@ -130,6 +217,19 @@ fn main() {
     }
     println!("{}", table.render());
 
+    // ---- batch-width sweep: scalar vs kernel ablation -----------------
+    let mut btable = Table::new(
+        "Solver core — MLP [16,64,16] batch sweep (scalar vs kernel, steps/sec)",
+        &["rows", "scalar", "kernel", "speedup", "kernel GFLOP/s"],
+    );
+    let mut sweep: Vec<Json> = Vec::new();
+    for rows in [1usize, 8, 32, 128] {
+        let (j, row) = batch_sweep_case(rows, reps);
+        sweep.push(j);
+        btable.row(row);
+    }
+    println!("{}", btable.render());
+
     // ---- ensemble throughput: serial vs pooled ------------------------
     let ts = uniform_grid(t_points, 1.0);
     let opts = SolveOptions::new().with_tolerance(1e-3);
@@ -183,8 +283,9 @@ fn main() {
 
     // ---- emit BENCH_solver_core.json at the repo root -----------------
     let report = obj([
-        ("schema", Json::from("bench_solver_core/v1")),
+        ("schema", Json::from("bench_solver_core/v2")),
         ("single_trajectory", Json::Arr(singles)),
+        ("batch_sweep", Json::Arr(sweep)),
         (
             "ensemble",
             obj([

@@ -1,0 +1,417 @@
+//! Vectorized batched MLP kernels + the fused RK stage-combine — the
+//! native port of the seed's Pallas prototypes
+//! (`python/compile/kernels/fused_dense.py`, `rk_combine.py`).
+//!
+//! Every NFE the paper's regularizers fight to eliminate is a row-batched
+//! MLP forward (and VJP during adjoint training), so these kernels own
+//! the FLOP-dominant inner loops of all five experiments:
+//!
+//! * [`dense_act`] — batched GEMM `[rows × in] · Wᵀ` with fused bias and
+//!   activation.  Cache-blocked over [`ROW_BLOCK`] batch rows (one weight
+//!   row stays register/L1-resident across the block) and explicitly
+//!   vectorized with [`LANES`]-wide independent `f64` accumulators, which
+//!   break the serial dependency chain of a naive dot product so the
+//!   compiler can keep multiple FMAs in flight (and auto-vectorize).
+//! * [`dense_backward_params`] / [`dense_backward_input`] — the matching
+//!   batched VJP: `gW += Δᵀ·X`, `gb += Σ_r Δ`, `dX = Δ·W`.  Both are
+//!   element-wise `axpy` sweeps whose per-element accumulation order is
+//!   **identical** to the retained per-row scalar path, so the backward
+//!   kernels are bit-for-bit the scalar reference, just vectorized.
+//! * [`rk_combine`] — the fused RK stage combination + embedded error
+//!   (`z_new = z + h·Σ bᵢkᵢ`, `err = h·Σ b̃ᵢkᵢ`) in **one** pass over the
+//!   solver's stage arena: dims are chunked [`LANES`] wide and stages run
+//!   as the inner loop, so each dim's sum still accumulates in tableau
+//!   stage order and the result is bit-identical to the seed's two-pass
+//!   loop (pinned by `tests/solver_equivalence.rs`).
+//!
+//! ## Accumulation-order policy (decide, don't drift)
+//!
+//! * Forward GEMM ([`dense_act`]): the [`LANES`]-chunked reduction
+//!   **reassociates** the dot product relative to the seed's left-to-right
+//!   sum.  The order is *fixed* (chunk lanes, then a fixed-shape tree
+//!   reduction, then the remainder tail) and contains no FMA contraction,
+//!   so results are deterministic and platform-independent — but they
+//!   differ from the scalar reference by bounded rounding, pinned to an
+//!   explicit tolerance in `tests/kernel_equivalence.rs`.  Each output
+//!   element depends only on its own row, never on `rows` or the block
+//!   decomposition, so a batch of one is bit-identical to the same row
+//!   inside a batch of 128 (the serving-consistency contract).
+//! * Backward kernels and [`rk_combine`]: per-element accumulation order
+//!   matches the scalar path exactly — bit-identical, no tolerance
+//!   needed.
+//!
+//! ## Scalar-fallback ablation knob
+//!
+//! [`set_scalar_fallback`] routes `Mlp::forward_batch`/`vjp_batch` back
+//! to the retained per-row scalar path and [`rk_combine`] to its
+//! reference loop, so the benches can measure scalar-vs-kernel on
+//! otherwise identical code paths (`benches/bench_solver_core.rs` batch
+//! sweep, `benches/bench_native_train.rs` epoch wall-clock).  It is a
+//! process-global flag for ablation only — not a per-call mode.
+
+// Kernel signatures mirror the BLAS convention (buffers + explicit
+// dimensions) rather than bundling shape structs — every argument is a
+// hot-loop slice or extent.
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Independent accumulator lanes of the chunked reductions (8 × f64 =
+/// one cache line; enough ILP to hide FP-add latency on current cores).
+pub const LANES: usize = 8;
+
+/// Batch rows per cache block of [`dense_act`]: one weight row is reused
+/// across the whole block while the block's input rows stay hot
+/// (`ROW_BLOCK × in_dim × 8` bytes — L1-resident for every dynamics net;
+/// the 784-wide MNIST encoder streams from L2 but still reuses each
+/// weight row `ROW_BLOCK` times).
+pub const ROW_BLOCK: usize = 8;
+
+/// Activation fused into the [`dense_act`] output write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Tanh,
+}
+
+static SCALAR_FALLBACK: AtomicBool = AtomicBool::new(false);
+
+/// Route the batched entry points back to the retained scalar paths
+/// (ablation benches only; see the module docs).
+pub fn set_scalar_fallback(on: bool) {
+    SCALAR_FALLBACK.store(on, Ordering::Relaxed);
+}
+
+/// Whether the scalar-fallback ablation knob is set.
+pub fn scalar_fallback() -> bool {
+    SCALAR_FALLBACK.load(Ordering::Relaxed)
+}
+
+/// Chunked dot product: [`LANES`] independent accumulators over the
+/// body, a fixed-shape tree reduction, then the remainder tail.  The
+/// reduction order is fixed and FMA-free, so the result is deterministic
+/// and platform-independent (but reassociated relative to a serial sum —
+/// see the module-level accumulation-order policy).
+#[inline]
+fn dot_lanes(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut lanes = [0.0f64; LANES];
+    for k in 0..chunks {
+        let ab = &a[k * LANES..(k + 1) * LANES];
+        let bb = &b[k * LANES..(k + 1) * LANES];
+        for ((acc, &av), &bv) in lanes.iter_mut().zip(ab).zip(bb) {
+            *acc += av * bv;
+        }
+    }
+    let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for k in chunks * LANES..n {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// Batched dense layer with fused bias + activation:
+/// `out[r, o] = act(b[o] + Σ_c w[o, c]·x[r, c])` for `r < rows`.
+///
+/// `w` is row-major `[out_dim × in_dim]`, `x`/`out` row-major
+/// `[rows × in_dim]` / `[rows × out_dim]`.  Cache-blocked over
+/// [`ROW_BLOCK`] rows with the [`dot_lanes`] vectorized reduction; each
+/// output element is independent of `rows`, so any batch decomposition
+/// produces identical bits per element.
+pub fn dense_act(
+    w: &[f64],
+    bias: &[f64],
+    x: &[f64],
+    rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    act: Act,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(bias.len(), out_dim);
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(out.len(), rows * out_dim);
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + ROW_BLOCK).min(rows);
+        for o in 0..out_dim {
+            let wrow = &w[o * in_dim..(o + 1) * in_dim];
+            let bo = bias[o];
+            for r in r0..r1 {
+                let v = bo + dot_lanes(wrow, &x[r * in_dim..(r + 1) * in_dim]);
+                out[r * out_dim + o] = match act {
+                    Act::Tanh => v.tanh(),
+                    Act::Linear => v,
+                };
+            }
+        }
+        r0 = r1;
+    }
+}
+
+/// Scalar reference of [`dense_act`] with the seed's accumulation order
+/// (bias first, then a serial left-to-right sum over `in_dim`) — the
+/// equivalence anchor of `tests/kernel_equivalence.rs` and the forward
+/// body of the per-row scalar fallback.
+pub fn dense_act_ref(
+    w: &[f64],
+    bias: &[f64],
+    x: &[f64],
+    rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    act: Act,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(bias.len(), out_dim);
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(out.len(), rows * out_dim);
+    for r in 0..rows {
+        let xrow = &x[r * in_dim..(r + 1) * in_dim];
+        for o in 0..out_dim {
+            let wrow = &w[o * in_dim..(o + 1) * in_dim];
+            let mut acc = bias[o];
+            for (&wv, &xv) in wrow.iter().zip(xrow) {
+                acc += wv * xv;
+            }
+            out[r * out_dim + o] = match act {
+                Act::Tanh => acc.tanh(),
+                Act::Linear => acc,
+            };
+        }
+    }
+}
+
+/// Batched parameter VJP of a dense layer: `gw[o, c] += Σ_r Δ[r, o]·x[r, c]`
+/// and `gb[o] += Σ_r Δ[r, o]` (both **accumulate**, matching the `+=`
+/// contract of `Mlp::vjp`).  Rows accumulate in batch order and each
+/// `gw` element is a serial `axpy` sweep, so the result is bit-identical
+/// to the retained per-row scalar path (zero-`Δ` rows are skipped there
+/// too).
+pub fn dense_backward_params(
+    delta: &[f64],
+    x: &[f64],
+    rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    gw: &mut [f64],
+    gb: &mut [f64],
+) {
+    debug_assert_eq!(delta.len(), rows * out_dim);
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(gw.len(), out_dim * in_dim);
+    debug_assert_eq!(gb.len(), out_dim);
+    for r in 0..rows {
+        let drow = &delta[r * out_dim..(r + 1) * out_dim];
+        let xrow = &x[r * in_dim..(r + 1) * in_dim];
+        for (o, &d) in drow.iter().enumerate() {
+            if d == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[o * in_dim..(o + 1) * in_dim];
+            for (g, &xv) in grow.iter_mut().zip(xrow) {
+                *g += d * xv;
+            }
+            gb[o] += d;
+        }
+    }
+}
+
+/// Batched input VJP of a dense layer: `dx[r, c] = Σ_o w[o, c]·Δ[r, o]`
+/// (**overwrites** `dx`; callers apply the previous layer's activation
+/// derivative afterwards).  Formulated as per-row `axpy` sweeps over the
+/// weight rows, so each `dx` element accumulates over `o` in the same
+/// order as the scalar path's per-column sum — bit-identical.
+pub fn dense_backward_input(
+    w: &[f64],
+    delta: &[f64],
+    rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    dx: &mut [f64],
+) {
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(delta.len(), rows * out_dim);
+    debug_assert_eq!(dx.len(), rows * in_dim);
+    for r in 0..rows {
+        let drow = &delta[r * out_dim..(r + 1) * out_dim];
+        let dxrow = &mut dx[r * in_dim..(r + 1) * in_dim];
+        dxrow.fill(0.0);
+        for (o, &d) in drow.iter().enumerate() {
+            let wrow = &w[o * in_dim..(o + 1) * in_dim];
+            for (dst, &wv) in dxrow.iter_mut().zip(wrow) {
+                *dst += d * wv;
+            }
+        }
+    }
+}
+
+/// Fused RK stage combination + embedded error estimate (the
+/// `rk_combine.py` port): `znew[d] = z[d] + h·Σᵢ b[i]·ks[i, d]` and
+/// `err[d] = h·Σᵢ b̃[i]·ks[i, d]` in **one** pass over the row-major
+/// `[stages × n]` stage arena.
+///
+/// Dims are chunked [`LANES`] wide with stages as the inner loop, so each
+/// dim's accumulator still adds stage terms in tableau order `i = 0..s` —
+/// the exact FP sequence of the seed's two-pass loop, hence bit-identical
+/// output (the `tests/solver_equivalence.rs` pin holds by construction,
+/// not by tolerance).  Allocation-free.
+pub fn rk_combine(
+    ks: &[f64],
+    stages: usize,
+    n: usize,
+    b: &[f64],
+    btilde: &[f64],
+    z: &[f64],
+    h: f64,
+    znew: &mut [f64],
+    err: &mut [f64],
+) {
+    debug_assert!(ks.len() >= stages * n);
+    debug_assert!(b.len() >= stages && btilde.len() >= stages);
+    debug_assert_eq!(z.len(), n);
+    debug_assert_eq!(znew.len(), n);
+    debug_assert_eq!(err.len(), n);
+    if scalar_fallback() {
+        rk_combine_ref(ks, stages, n, b, btilde, z, h, znew, err);
+        return;
+    }
+    let chunks = n / LANES;
+    for blk in 0..chunks {
+        let base = blk * LANES;
+        let mut az = [0.0f64; LANES];
+        let mut ae = [0.0f64; LANES];
+        for i in 0..stages {
+            let (bi, bti) = (b[i], btilde[i]);
+            let kb = &ks[i * n + base..i * n + base + LANES];
+            for l in 0..LANES {
+                az[l] += bi * kb[l];
+                ae[l] += bti * kb[l];
+            }
+        }
+        for l in 0..LANES {
+            znew[base + l] = z[base + l] + h * az[l];
+            err[base + l] = h * ae[l];
+        }
+    }
+    for d in chunks * LANES..n {
+        let mut az = 0.0;
+        let mut ae = 0.0;
+        for i in 0..stages {
+            az += b[i] * ks[i * n + d];
+            ae += btilde[i] * ks[i * n + d];
+        }
+        znew[d] = z[d] + h * az;
+        err[d] = h * ae;
+    }
+}
+
+/// Reference (seed-transcription) stage combination: two accumulation
+/// sweeps over the stage block plus a finalize pass — the loop the fused
+/// [`rk_combine`] replaces, kept for the ablation benches and the
+/// bit-equality check in `tests/kernel_equivalence.rs`.
+pub fn rk_combine_ref(
+    ks: &[f64],
+    stages: usize,
+    n: usize,
+    b: &[f64],
+    btilde: &[f64],
+    z: &[f64],
+    h: f64,
+    znew: &mut [f64],
+    err: &mut [f64],
+) {
+    znew.fill(0.0);
+    err.fill(0.0);
+    for i in 0..stages {
+        let (bi, bti) = (b[i], btilde[i]);
+        let ki = &ks[i * n..(i + 1) * n];
+        for d in 0..n {
+            znew[d] += bi * ki[d];
+            err[d] += bti * ki[d];
+        }
+    }
+    for d in 0..n {
+        znew[d] = z[d] + h * znew[d];
+        err[d] *= h;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.range(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn dense_act_close_to_reference_on_odd_shapes() {
+        let mut rng = Rng::new(17);
+        for &(rows, i, o) in &[(1usize, 1usize, 1usize), (3, 7, 5), (13, 70, 9), (8, 16, 64)] {
+            let w = randv(&mut rng, o * i);
+            let b = randv(&mut rng, o);
+            let x = randv(&mut rng, rows * i);
+            let mut fast = vec![0.0; rows * o];
+            let mut slow = vec![0.0; rows * o];
+            for act in [Act::Linear, Act::Tanh] {
+                dense_act(&w, &b, &x, rows, i, o, act, &mut fast);
+                dense_act_ref(&w, &b, &x, rows, i, o, act, &mut slow);
+                for (a, s) in fast.iter().zip(&slow) {
+                    assert!(
+                        (a - s).abs() <= 1e-12 * (1.0 + s.abs()),
+                        "{rows}x{i}x{o}: {a} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_act_is_batch_decomposition_invariant() {
+        // Row 5 of a 13-row batch must be bit-identical to the same row
+        // run as a batch of one (the serving-consistency contract).
+        let mut rng = Rng::new(23);
+        let (rows, i, o) = (13, 21, 6);
+        let w = randv(&mut rng, o * i);
+        let b = randv(&mut rng, o);
+        let x = randv(&mut rng, rows * i);
+        let mut full = vec![0.0; rows * o];
+        dense_act(&w, &b, &x, rows, i, o, Act::Tanh, &mut full);
+        for r in 0..rows {
+            let mut one = vec![0.0; o];
+            dense_act(&w, &b, &x[r * i..(r + 1) * i], 1, i, o, Act::Tanh, &mut one);
+            assert_eq!(
+                one.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                full[r * o..(r + 1) * o].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row {r} must not depend on the batch around it"
+            );
+        }
+    }
+
+    #[test]
+    fn rk_combine_bit_identical_to_reference() {
+        let mut rng = Rng::new(31);
+        for &(stages, n) in &[(7usize, 2usize), (7, 16), (4, 70), (9, 1), (7, 8)] {
+            let ks = randv(&mut rng, stages * n);
+            let b = randv(&mut rng, stages);
+            let bt = randv(&mut rng, stages);
+            let z = randv(&mut rng, n);
+            let h = rng.range(1e-4, 0.3);
+            let (mut z1, mut e1) = (vec![0.0; n], vec![0.0; n]);
+            let (mut z2, mut e2) = (vec![0.0; n], vec![0.0; n]);
+            rk_combine(&ks, stages, n, &b, &bt, &z, h, &mut z1, &mut e1);
+            rk_combine_ref(&ks, stages, n, &b, &bt, &z, h, &mut z2, &mut e2);
+            for d in 0..n {
+                assert_eq!(z1[d].to_bits(), z2[d].to_bits(), "znew[{d}] ({stages}x{n})");
+                assert_eq!(e1[d].to_bits(), e2[d].to_bits(), "err[{d}] ({stages}x{n})");
+            }
+        }
+    }
+}

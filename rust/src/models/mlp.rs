@@ -10,7 +10,17 @@
 //! [`Mlp::vjp`] is the accumulating vector-Jacobian product the discrete
 //! adjoint walks through: it recomputes the forward activations (cheap —
 //! no tape) and adds `wᵀ∂f/∂x` / `wᵀ∂f/∂θ` into caller buffers.
+//!
+//! The solver hot path goes through the **row-batched** entry points
+//! [`Mlp::forward_batch`] / [`Mlp::vjp_batch`]: one
+//! [`super::kernels::dense_act`] / backward-kernel pass per layer over a
+//! flat `[rows × dim]` activation scratch ([`MlpBatchScratch`]), instead
+//! of a per-row scalar loop.  The per-row [`Mlp::forward`] / [`Mlp::vjp`]
+//! pair is retained as the scalar reference (equivalence-tested in
+//! `tests/kernel_equivalence.rs` and reachable at runtime through the
+//! `kernels::set_scalar_fallback` ablation knob).
 
+use super::kernels::{self, Act};
 use crate::util::rng::Rng;
 
 /// MLP shape: `dims = [in, hidden..., out]`.
@@ -21,6 +31,10 @@ pub struct Mlp {
     pub cube_input: bool,
     /// Apply `tanh` to the output layer too (used for encoders).
     pub final_tanh: bool,
+    /// Precomputed per-layer `(w_offset, b_offset, in, out)` within the
+    /// flat parameter slice.  [`Mlp::layer`] used to rebuild these with
+    /// an O(L) scan per call — O(L²) per forward/VJP pass.
+    layers: Vec<(usize, usize, usize, usize)>,
 }
 
 /// Reusable forward/backward scratch for one [`Mlp`] (no per-call heap
@@ -33,13 +47,44 @@ pub struct MlpScratch {
     delta2: Vec<f64>,
 }
 
+/// Reusable row-batched forward/backward scratch for one [`Mlp`]: a flat
+/// `[rows × dim]` activation block per layer boundary plus two delta
+/// blocks, all sized at construction so the batched kernels stay
+/// allocation-free on the solver hot path.
+#[derive(Clone, Debug)]
+pub struct MlpBatchScratch {
+    rows: usize,
+    /// Layer-boundary activations, boundary-major: block `b` holds the
+    /// row-major `[rows × dims[b]]` activations at boundary `b`.
+    acts: Vec<f64>,
+    delta: Vec<f64>,
+    delta2: Vec<f64>,
+    /// Per-row scalar scratch backing the `kernels::scalar_fallback`
+    /// ablation leg (same allocation-free contract).
+    row: MlpScratch,
+}
+
+impl MlpBatchScratch {
+    /// Batch width this scratch was sized for.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
 impl Mlp {
     pub fn new(dims: &[usize]) -> Mlp {
         assert!(dims.len() >= 2, "MLP needs at least [in, out]");
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        let mut off = 0;
+        for w in dims.windows(2) {
+            layers.push((off, off + w[0] * w[1], w[0], w[1]));
+            off += (w[0] + 1) * w[1];
+        }
         Mlp {
             dims: dims.to_vec(),
             cube_input: false,
             final_tanh: false,
+            layers,
         }
     }
 
@@ -79,14 +124,10 @@ impl Mlp {
             .sum()
     }
 
-    /// (w_offset, b_offset, in, out) of layer `l` within the flat slice.
+    /// (w_offset, b_offset, in, out) of layer `l` within the flat slice
+    /// — an O(1) lookup into the table built at construction.
     fn layer(&self, l: usize) -> (usize, usize, usize, usize) {
-        let mut off = 0;
-        for w in self.dims.windows(2).take(l) {
-            off += (w[0] + 1) * w[1];
-        }
-        let (i, o) = (self.dims[l], self.dims[l + 1]);
-        (off, off + i * o, i, o)
+        self.layers[l]
     }
 
     pub fn scratch(&self) -> MlpScratch {
@@ -95,6 +136,21 @@ impl Mlp {
             acts: vec![0.0; self.dims.iter().sum()],
             delta: vec![0.0; max],
             delta2: vec![0.0; max],
+        }
+    }
+
+    /// Scratch for the row-batched entry points, sized for `rows` states
+    /// per call ([`Mlp::forward_batch`] / [`Mlp::vjp_batch`]).
+    pub fn batch_scratch(&self, rows: usize) -> MlpBatchScratch {
+        assert!(rows > 0, "batch scratch needs at least one row");
+        let total: usize = self.dims.iter().sum();
+        let max = *self.dims.iter().max().unwrap();
+        MlpBatchScratch {
+            rows,
+            acts: vec![0.0; rows * total],
+            delta: vec![0.0; rows * max],
+            delta2: vec![0.0; rows * max],
+            row: self.scratch(),
         }
     }
 
@@ -216,6 +272,160 @@ impl Mlp {
         for d in 0..self.in_dim() {
             let g = scratch.delta[d];
             gx[d] += if self.cube_input { g * 3.0 * x[d] * x[d] } else { g };
+        }
+    }
+
+    /// Row-batched forward pass: `x` / `out` are row-major
+    /// `[rows × in_dim]` / `[rows × out_dim]` with `rows` fixed by the
+    /// scratch.  One [`kernels::dense_act`] pass per layer over the flat
+    /// activation scratch; every output element is independent of the
+    /// batch around it (a batch of one is bit-identical to the same row
+    /// of a batch of 128 — the serving-consistency contract).
+    /// Allocation-free.
+    pub fn forward_batch(
+        &self,
+        theta: &[f64],
+        x: &[f64],
+        out: &mut [f64],
+        scratch: &mut MlpBatchScratch,
+    ) {
+        let rows = scratch.rows;
+        debug_assert_eq!(x.len(), rows * self.in_dim());
+        debug_assert_eq!(out.len(), rows * self.out_dim());
+        if kernels::scalar_fallback() {
+            // Retained per-row scalar path (the ablation leg).
+            let (i, o) = (self.in_dim(), self.out_dim());
+            for r in 0..rows {
+                self.forward(
+                    theta,
+                    &x[r * i..(r + 1) * i],
+                    &mut out[r * o..(r + 1) * o],
+                    &mut scratch.row,
+                );
+            }
+            return;
+        }
+        self.forward_batch_acts(theta, x, scratch);
+        let last_off = scratch.rows * self.dims[..self.n_layers()].iter().sum::<usize>();
+        out.copy_from_slice(&scratch.acts[last_off..last_off + rows * self.out_dim()]);
+    }
+
+    /// Batched forward into the scratch activation blocks only — shared
+    /// by [`Mlp::forward_batch`] and [`Mlp::vjp_batch`].
+    fn forward_batch_acts(&self, theta: &[f64], x: &[f64], scratch: &mut MlpBatchScratch) {
+        let rows = scratch.rows;
+        let d0 = self.dims[0];
+        // Input feature block.
+        for (dst, &src) in scratch.acts[..rows * d0].iter_mut().zip(x) {
+            *dst = if self.cube_input { src * src * src } else { src };
+        }
+        let mut in_off = 0usize;
+        let mut out_off = rows * d0;
+        for l in 0..self.n_layers() {
+            let (woff, boff, i, o) = self.layers[l];
+            let last = l == self.n_layers() - 1;
+            let act = if !last || self.final_tanh { Act::Tanh } else { Act::Linear };
+            let (inb, outb) = scratch.acts.split_at_mut(out_off);
+            kernels::dense_act(
+                &theta[woff..woff + i * o],
+                &theta[boff..boff + o],
+                &inb[in_off..in_off + rows * i],
+                rows,
+                i,
+                o,
+                act,
+                &mut outb[..rows * o],
+            );
+            in_off = out_off;
+            out_off += rows * o;
+        }
+    }
+
+    /// Row-batched accumulating VJP: adds each row's `wᵀ∂f/∂x` into the
+    /// matching row of `gx` (row-major `[rows × in_dim]`) and the
+    /// batch-summed `wᵀ∂f/∂θ` into `gtheta` (both `+=`, the same
+    /// contract as [`Mlp::vjp`]; rows accumulate in batch order, exactly
+    /// like the per-row scalar loop).  Recomputes the forward internally
+    /// — one backward-kernel pass per layer.  Allocation-free.
+    pub fn vjp_batch(
+        &self,
+        theta: &[f64],
+        x: &[f64],
+        w: &[f64],
+        gx: &mut [f64],
+        gtheta: &mut [f64],
+        scratch: &mut MlpBatchScratch,
+    ) {
+        let rows = scratch.rows;
+        debug_assert_eq!(x.len(), rows * self.in_dim());
+        debug_assert_eq!(w.len(), rows * self.out_dim());
+        debug_assert_eq!(gx.len(), rows * self.in_dim());
+        debug_assert_eq!(gtheta.len(), self.n_params());
+        if kernels::scalar_fallback() {
+            // Retained per-row scalar path (the ablation leg).
+            let (i, o) = (self.in_dim(), self.out_dim());
+            for r in 0..rows {
+                self.vjp(
+                    theta,
+                    &x[r * i..(r + 1) * i],
+                    &w[r * o..(r + 1) * o],
+                    &mut gx[r * i..(r + 1) * i],
+                    gtheta,
+                    &mut scratch.row,
+                );
+            }
+            return;
+        }
+        self.forward_batch_acts(theta, x, scratch);
+
+        // delta = w (∘ tanh' if the output layer is activated).
+        let n_l = self.n_layers();
+        let od = self.out_dim();
+        let last_off = rows * self.dims[..n_l].iter().sum::<usize>();
+        for (k, dst) in scratch.delta[..rows * od].iter_mut().enumerate() {
+            let mut d = w[k];
+            if self.final_tanh {
+                let a = scratch.acts[last_off + k];
+                d *= 1.0 - a * a;
+            }
+            *dst = d;
+        }
+
+        for l in (0..n_l).rev() {
+            let (woff, boff, i, o) = self.layers[l];
+            let in_off = rows * self.dims[..l].iter().sum::<usize>();
+            let inb = &scratch.acts[in_off..in_off + rows * i];
+            // gW += Δᵀ ⊗ in_acts ; gb += Σ_r Δ  (w and b are adjacent in
+            // the flat slice: woff..boff is W, boff..boff+o is b).
+            {
+                let (gw, gb) = gtheta[woff..boff + o].split_at_mut(i * o);
+                kernels::dense_backward_params(&scratch.delta[..rows * o], inb, rows, i, o, gw, gb);
+            }
+            // Δ_prev = Δ · W (∘ activation' of the previous layer).
+            kernels::dense_backward_input(
+                &theta[woff..woff + i * o],
+                &scratch.delta[..rows * o],
+                rows,
+                i,
+                o,
+                &mut scratch.delta2[..rows * i],
+            );
+            if l > 0 {
+                for (dv, &a) in scratch.delta2[..rows * i].iter_mut().zip(inb) {
+                    *dv *= 1.0 - a * a;
+                }
+            }
+            std::mem::swap(&mut scratch.delta, &mut scratch.delta2);
+        }
+        // Through the input feature map.
+        let d0 = self.dims[0];
+        for (k, g) in gx[..rows * d0].iter_mut().enumerate() {
+            let d = scratch.delta[k];
+            *g += if self.cube_input {
+                d * 3.0 * x[k] * x[k]
+            } else {
+                d
+            };
         }
     }
 }

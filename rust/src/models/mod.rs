@@ -6,9 +6,18 @@
 //! on flat vectors — parameters are `[W_0 | b_0 | ...]` slices viewed
 //! through [`Mlp`], optimizer state is `[m | v]` through [`Adam`] — so
 //! `runtime::TrainState` is backend-agnostic.
+//!
+//! The FLOP-dominant inner loops live in [`kernels`] (DESIGN.md §Perf):
+//! cache-blocked, lane-vectorized batched GEMM + VJP kernels behind
+//! [`Mlp::forward_batch`] / [`Mlp::vjp_batch`] (one pass per layer over a
+//! flat `[rows × dim]` scratch, [`MlpBatchScratch`]), and the fused RK
+//! stage-combine the ODE stepper calls once per attempt.  The per-row
+//! scalar [`Mlp::forward`] / [`Mlp::vjp`] pair is the retained reference,
+//! reachable through the `kernels::set_scalar_fallback` ablation knob.
 
 pub mod adam;
+pub mod kernels;
 pub mod mlp;
 
 pub use adam::Adam;
-pub use mlp::{Mlp, MlpScratch};
+pub use mlp::{Mlp, MlpBatchScratch, MlpScratch};

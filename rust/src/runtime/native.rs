@@ -4,7 +4,11 @@
 //! Each of the five experiment models is a composition of flat-parameter
 //! MLPs (`models::mlp`) around the native adaptive solvers, packaged as
 //! solver [`System`]s (`MlpOde` / `MlpSde`: row-batched dynamics + VJP
-//! hooks) and integrated through the unified driver (`solvers::driver`):
+//! hooks on the vectorized `models::kernels` entry points
+//! [`Mlp::forward_batch`] / [`Mlp::vjp_batch`] — one kernel pass per
+//! layer over the whole batch, scratch sized at construction so solver
+//! attempts stay allocation-free; DESIGN.md §Perf) and integrated
+//! through the unified driver (`solvers::driver`):
 //! the forward drive records a discrete-adjoint tape of the accepted
 //! steps and feeds every step to a [`LocalReg`] observer, the backward
 //! walk (`solvers::adjoint`) pulls the data loss *and* the white-boxed
@@ -57,7 +61,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::backend::{Backend, ExportedState, ModelInfo, StepCoefs, StepOutput, TrainData};
 use super::state::{Metrics, TrainState};
-use crate::models::{Adam, Mlp, MlpScratch};
+use crate::models::{Adam, Mlp, MlpBatchScratch};
 use crate::solvers::adjoint::{ode_backward_sys, sde_backward_sys, OdeTape, RegCoefs, SdeTape};
 use crate::solvers::driver::{Saveat, SolveOptions, StepBudget};
 use crate::solvers::error::{SolveErrorKind, SolveResultExt};
@@ -499,18 +503,20 @@ fn metrics(loss: f64, metric: f64, stats: &Stats, error: Option<SolveErrorKind>)
 // ---------------------------------------------------------------------------
 
 /// Row-batched MLP dynamics over a flat `[rows, l]` state — every native
-/// ODE model's dynamics block as one [`System`], replacing the per-pass
-/// forward/VJP closure pairs.  The VJP accumulates its parameter
-/// cotangent into `gp[grad_range]` (the dynamics part's slice of the
-/// full flat gradient).
+/// ODE model's dynamics block as one [`System`].  Drift and VJP go
+/// through the batched kernel entry points ([`Mlp::forward_batch`] /
+/// [`Mlp::vjp_batch`]): one vectorized pass per layer over the whole
+/// batch, scratch sized at construction (allocation-free per solver
+/// attempt).  The VJP accumulates its parameter cotangent into
+/// `gp[grad_range]` (the dynamics part's slice of the full flat
+/// gradient).
 struct MlpOde<'a> {
     mlp: &'a Mlp,
     /// This part's parameter slice (already cut out of the flat vector).
     theta: &'a [f64],
-    rows: usize,
     grad_range: std::ops::Range<usize>,
-    fwd: MlpScratch,
-    bwd: MlpScratch,
+    fwd: MlpBatchScratch,
+    bwd: MlpBatchScratch,
 }
 
 impl<'a> MlpOde<'a> {
@@ -523,45 +529,27 @@ impl<'a> MlpOde<'a> {
         MlpOde {
             mlp,
             theta,
-            rows,
             grad_range,
-            fwd: mlp.scratch(),
-            bwd: mlp.scratch(),
+            fwd: mlp.batch_scratch(rows),
+            bwd: mlp.batch_scratch(rows),
         }
     }
 }
 
 impl System for MlpOde<'_> {
     fn drift(&mut self, z: &[f64], _t: f64, dz: &mut [f64]) {
-        let l = self.mlp.in_dim();
-        for r in 0..self.rows {
-            self.mlp.forward(
-                self.theta,
-                &z[r * l..(r + 1) * l],
-                &mut dz[r * l..(r + 1) * l],
-                &mut self.fwd,
-            );
-        }
+        self.mlp.forward_batch(self.theta, z, dz, &mut self.fwd);
     }
 
     fn drift_vjp(&mut self, z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
-        let l = self.mlp.in_dim();
         let g = &mut gp[self.grad_range.clone()];
-        for r in 0..self.rows {
-            self.mlp.vjp(
-                self.theta,
-                &z[r * l..(r + 1) * l],
-                &w[r * l..(r + 1) * l],
-                &mut gz[r * l..(r + 1) * l],
-                g,
-                &mut self.bwd,
-            );
-        }
+        self.mlp.vjp_batch(self.theta, z, w, gz, g, &mut self.bwd);
     }
 }
 
 /// Row-batched drift + diagonal-diffusion MLP pair — every native NSDE
-/// model's dynamics block as one diffusive [`System`].
+/// model's dynamics block as one diffusive [`System`], on the same
+/// batched kernel entry points as [`MlpOde`].
 struct MlpSde<'a> {
     drift: &'a Mlp,
     th_drift: &'a [f64],
@@ -569,11 +557,10 @@ struct MlpSde<'a> {
     diffusion: &'a Mlp,
     th_diff: &'a [f64],
     diff_range: std::ops::Range<usize>,
-    rows: usize,
-    dfwd: MlpScratch,
-    dbwd: MlpScratch,
-    gfwd: MlpScratch,
-    gbwd: MlpScratch,
+    dfwd: MlpBatchScratch,
+    dbwd: MlpBatchScratch,
+    gfwd: MlpBatchScratch,
+    gbwd: MlpBatchScratch,
 }
 
 impl<'a> MlpSde<'a> {
@@ -593,26 +580,17 @@ impl<'a> MlpSde<'a> {
             diffusion,
             th_diff,
             diff_range,
-            rows,
-            dfwd: drift.scratch(),
-            dbwd: drift.scratch(),
-            gfwd: diffusion.scratch(),
-            gbwd: diffusion.scratch(),
+            dfwd: drift.batch_scratch(rows),
+            dbwd: drift.batch_scratch(rows),
+            gfwd: diffusion.batch_scratch(rows),
+            gbwd: diffusion.batch_scratch(rows),
         }
     }
 }
 
 impl System for MlpSde<'_> {
     fn drift(&mut self, z: &[f64], _t: f64, dz: &mut [f64]) {
-        let l = self.drift.in_dim();
-        for r in 0..self.rows {
-            self.drift.forward(
-                self.th_drift,
-                &z[r * l..(r + 1) * l],
-                &mut dz[r * l..(r + 1) * l],
-                &mut self.dfwd,
-            );
-        }
+        self.drift.forward_batch(self.th_drift, z, dz, &mut self.dfwd);
     }
 
     fn has_diffusion(&self) -> bool {
@@ -620,45 +598,17 @@ impl System for MlpSde<'_> {
     }
 
     fn diffusion(&mut self, z: &[f64], _t: f64, dg: &mut [f64]) {
-        let l = self.diffusion.in_dim();
-        for r in 0..self.rows {
-            self.diffusion.forward(
-                self.th_diff,
-                &z[r * l..(r + 1) * l],
-                &mut dg[r * l..(r + 1) * l],
-                &mut self.gfwd,
-            );
-        }
+        self.diffusion.forward_batch(self.th_diff, z, dg, &mut self.gfwd);
     }
 
     fn drift_vjp(&mut self, z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
-        let l = self.drift.in_dim();
         let g = &mut gp[self.drift_range.clone()];
-        for r in 0..self.rows {
-            self.drift.vjp(
-                self.th_drift,
-                &z[r * l..(r + 1) * l],
-                &w[r * l..(r + 1) * l],
-                &mut gz[r * l..(r + 1) * l],
-                g,
-                &mut self.dbwd,
-            );
-        }
+        self.drift.vjp_batch(self.th_drift, z, w, gz, g, &mut self.dbwd);
     }
 
     fn diffusion_vjp(&mut self, z: &[f64], _t: f64, w: &[f64], gz: &mut [f64], gp: &mut [f64]) {
-        let l = self.diffusion.in_dim();
         let g = &mut gp[self.diff_range.clone()];
-        for r in 0..self.rows {
-            self.diffusion.vjp(
-                self.th_diff,
-                &z[r * l..(r + 1) * l],
-                &w[r * l..(r + 1) * l],
-                &mut gz[r * l..(r + 1) * l],
-                g,
-                &mut self.gbwd,
-            );
-        }
+        self.diffusion.vjp_batch(self.th_diff, z, w, gz, g, &mut self.gbwd);
     }
 }
 
@@ -1317,24 +1267,19 @@ fn spiral_nsde_predict(
 // mnist_node: encode -> NODE -> classify (Table 1)
 // ---------------------------------------------------------------------------
 
-/// Encode a `[b, IMG_DIM]` batch into the flat latent state `[b * l]`.
+/// Encode a `[b, IMG_DIM]` batch into the flat latent state `[b * l]`
+/// — one batched kernel pass per encoder layer.
 fn encode_batch(
     enc: &Mlp,
     th_enc: &[f64],
     x: &[f32],
     b: usize,
-    scratch: &mut MlpScratch,
+    scratch: &mut MlpBatchScratch,
 ) -> Vec<f64> {
-    let l = enc.out_dim();
     let in_dim = enc.in_dim();
-    let mut xrow = vec![0.0; in_dim];
-    let mut z0 = vec![0.0; b * l];
-    for r in 0..b {
-        for k in 0..in_dim {
-            xrow[k] = x[r * in_dim + k] as f64;
-        }
-        enc.forward(th_enc, &xrow, &mut z0[r * l..(r + 1) * l], scratch);
-    }
+    let xin: Vec<f64> = x[..b * in_dim].iter().map(|&v| v as f64).collect();
+    let mut z0 = vec![0.0; b * enc.out_dim()];
+    enc.forward_batch(th_enc, &xin, &mut z0, scratch);
     z0
 }
 
@@ -1350,30 +1295,14 @@ fn classify_batch(
 ) -> (f64, f64, Vec<f64>, Vec<f64>) {
     let l = clf.in_dim();
     let c = clf.out_dim();
-    let mut sc = clf.scratch();
+    let mut sc = clf.batch_scratch(b);
     let mut logits = vec![0.0; b * c];
-    for r in 0..b {
-        clf.forward(
-            th_clf,
-            &zt[r * l..(r + 1) * l],
-            &mut logits[r * c..(r + 1) * c],
-            &mut sc,
-        );
-    }
+    clf.forward_batch(th_clf, zt, &mut logits, &mut sc);
     let mut dlogits = vec![0.0; b * c];
     let (loss, acc) = softmax_ce(&logits, y, b, c, &mut dlogits);
     let mut dzt = vec![0.0; b * l];
     if let Some(gclf) = gclf {
-        for r in 0..b {
-            clf.vjp(
-                th_clf,
-                &zt[r * l..(r + 1) * l],
-                &dlogits[r * c..(r + 1) * c],
-                &mut dzt[r * l..(r + 1) * l],
-                gclf,
-                &mut sc,
-            );
-        }
+        clf.vjp_batch(th_clf, zt, &dlogits, &mut dzt, gclf, &mut sc);
     }
     (loss, acc, dzt, logits)
 }
@@ -1386,21 +1315,14 @@ fn encoder_backward(
     dz0: &[f64],
     b: usize,
     genc: &mut [f64],
-    scratch: &mut MlpScratch,
+    scratch: &mut MlpBatchScratch,
 ) {
-    let l = enc.out_dim();
     let in_dim = enc.in_dim();
-    let mut xrow = vec![0.0; in_dim];
-    let mut gx = vec![0.0; in_dim];
-    for r in 0..b {
-        for k in 0..in_dim {
-            xrow[k] = x[r * in_dim + k] as f64;
-        }
-        // Inputs are data — their cotangent is discarded (but a buffer is
-        // still required by the accumulating VJP signature).
-        gx.fill(0.0);
-        enc.vjp(th_enc, &xrow, &dz0[r * l..(r + 1) * l], &mut gx, genc, scratch);
-    }
+    let xin: Vec<f64> = x[..b * in_dim].iter().map(|&v| v as f64).collect();
+    // Inputs are data — their cotangent is discarded (but a buffer is
+    // still required by the accumulating VJP signature).
+    let mut gx = vec![0.0; b * in_dim];
+    enc.vjp_batch(th_enc, &xin, dz0, &mut gx, genc, scratch);
 }
 
 fn mnist_node_pass(
@@ -1428,7 +1350,7 @@ fn mnist_node_pass(
     let th_dyn = &theta[arch.range(1)];
     let th_clf = &theta[arch.range(2)];
 
-    let mut se = enc.scratch();
+    let mut se = enc.batch_scratch(b);
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
 
     let mut sys = MlpOde::new(dynamics, th_dyn, b, arch.range(1));
@@ -1469,7 +1391,7 @@ fn mnist_node_predict(
     let th_enc = &theta[arch.range(0)];
     let th_dyn = &theta[arch.range(1)];
     let th_clf = &theta[arch.range(2)];
-    let mut se = enc.scratch();
+    let mut se = enc.batch_scratch(b);
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
     let mut sys = MlpOde::new(dynamics, th_dyn, b, 0..0);
     let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&[0.0, 1.0]), opts, None, &mut []);
@@ -1507,7 +1429,7 @@ fn mnist_nsde_pass(
     let th_diff = &theta[arch.range(2)];
     let th_clf = &theta[arch.range(3)];
 
-    let mut se = enc.scratch();
+    let mut se = enc.batch_scratch(b);
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
 
     let mut sys = MlpSde::new(
@@ -1557,12 +1479,11 @@ fn mnist_nsde_predict(
     ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
     let b = x.len() / IMG_DIM;
     ensure!(y.len() == b * CLASSES, "one-hot batch shape");
-    let l = drift.in_dim();
     let th_enc = &theta[arch.range(0)];
     let th_drift = &theta[arch.range(1)];
     let th_diff = &theta[arch.range(2)];
     let th_clf = &theta[arch.range(3)];
-    let mut se = enc.scratch();
+    let mut se = enc.batch_scratch(b);
     let z0 = encode_batch(enc, th_enc, x, b, &mut se);
 
     // Paper-style prediction: mean logits over several driving paths.
@@ -1570,8 +1491,8 @@ fn mnist_nsde_predict(
     let mut solve_err: Option<SolveErrorKind> = None;
     let mut mean_logits = vec![0.0f64; b * CLASSES];
     let mut sys = MlpSde::new(drift, th_drift, 0..0, diffusion, th_diff, 0..0, b);
-    let mut sc = clf.scratch();
-    let mut lrow = vec![0.0f64; CLASSES];
+    let mut sc = clf.batch_scratch(b);
+    let mut logits = vec![0.0f64; b * CLASSES];
     for path in 0..PREDICT_PATHS {
         let mut rng = traj_rng(seed as u64 ^ 0x9E9D_1C7, path);
         let (zs, out) = sde::drive(
@@ -1587,11 +1508,9 @@ fn mnist_nsde_predict(
         if solve_err.is_none() {
             solve_err = out.error_kind();
         }
-        for r in 0..b {
-            clf.forward(th_clf, &zs[1][r * l..(r + 1) * l], &mut lrow, &mut sc);
-            for k in 0..CLASSES {
-                mean_logits[r * CLASSES + k] += lrow[k] / PREDICT_PATHS as f64;
-            }
+        clf.forward_batch(th_clf, &zs[1], &mut logits, &mut sc);
+        for (m, &v) in mean_logits.iter_mut().zip(&logits) {
+            *m += v / PREDICT_PATHS as f64;
         }
     }
     let mut dlogits = vec![0.0; b * CLASSES];
@@ -1636,7 +1555,7 @@ fn latent_ode_pass(
     let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
 
     // Mask-aware pooled encoding.
-    let mut se = enc.scratch();
+    let mut se = enc.batch_scratch(b);
     let mut feats = vec![0.0; b * 2 * c];
     let mut z0 = vec![0.0; b * l];
     for r in 0..b {
@@ -1648,13 +1567,8 @@ fn latent_ode_pass(
             c,
             &mut feats[r * 2 * c..(r + 1) * 2 * c],
         );
-        enc.forward(
-            th_enc,
-            &feats[r * 2 * c..(r + 1) * 2 * c],
-            &mut z0[r * l..(r + 1) * l],
-            &mut se,
-        );
     }
+    enc.forward_batch(th_enc, &feats, &mut z0, &mut se);
 
     let mut sys = MlpOde::new(dynamics, th_dyn, b, arch.range(1));
     let mut tape = OdeTape::new();
@@ -1671,33 +1585,25 @@ fn latent_ode_pass(
     // Masked reconstruction MSE + decoder backward per save point.
     let observed: f64 = mask.iter().map(|&m| m as f64).sum();
     let denom = observed.max(1.0);
-    let mut sd = dec.scratch();
-    let mut pred = vec![0.0; c];
-    let mut wrow = vec![0.0; c];
+    let mut sd = dec.batch_scratch(b);
+    let mut pred = vec![0.0; b * c];
+    let mut wblk = vec![0.0; b * c];
     let mut mse = 0.0;
     let mut save_grads = vec![vec![0.0; b * l]; t_pts];
     {
         let gdec = &mut grad[arch.range(2)];
         for t in 0..t_pts {
+            dec.forward_batch(th_dec, &zs[t], &mut pred, &mut sd);
             for r in 0..b {
-                let zrow = &zs[t][r * l..(r + 1) * l];
-                dec.forward(th_dec, zrow, &mut pred, &mut sd);
                 let base = r * t_pts * c + t * c;
                 for k in 0..c {
                     let m = mask[base + k] as f64;
-                    let diff = pred[k] - x[base + k] as f64;
+                    let diff = pred[r * c + k] - x[base + k] as f64;
                     mse += m * diff * diff / denom;
-                    wrow[k] = 2.0 * m * diff / denom;
+                    wblk[r * c + k] = 2.0 * m * diff / denom;
                 }
-                dec.vjp(
-                    th_dec,
-                    zrow,
-                    &wrow,
-                    &mut save_grads[t][r * l..(r + 1) * l],
-                    gdec,
-                    &mut sd,
-                );
             }
+            dec.vjp_batch(th_dec, &zs[t], &wblk, &mut save_grads[t], gdec, &mut sd);
         }
     }
 
@@ -1710,21 +1616,12 @@ fn latent_ode_pass(
         *g += kl_coef * z / (b * l) as f64;
     }
 
-    // Encoder backward over the pooled features.
+    // Encoder backward over the pooled features (input cotangent is
+    // discarded — the features are data).
     {
         let genc = &mut grad[arch.range(0)];
-        let mut gx = vec![0.0; 2 * c];
-        for r in 0..b {
-            gx.fill(0.0);
-            enc.vjp(
-                th_enc,
-                &feats[r * 2 * c..(r + 1) * 2 * c],
-                &dz0[r * l..(r + 1) * l],
-                &mut gx,
-                genc,
-                &mut se,
-            );
-        }
+        let mut gx = vec![0.0; b * 2 * c];
+        enc.vjp_batch(th_enc, &feats, &dz0, &mut gx, genc, &mut se);
     }
     Ok((mse + kl_term, mse, out.stats(), out.error_kind(), r_l))
 }
@@ -1753,32 +1650,32 @@ fn latent_ode_predict(
     let th_dec = &theta[arch.range(2)];
     let ts64: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
 
-    let mut se = enc.scratch();
-    let mut feats = vec![0.0; 2 * c];
+    let mut se = enc.batch_scratch(b);
+    let mut feats = vec![0.0; b * 2 * c];
     let mut z0 = vec![0.0; b * l];
     for r in 0..b {
         let sz = t_pts * c;
         let (xs, ms) = (&x[r * sz..(r + 1) * sz], &mask[r * sz..(r + 1) * sz]);
-        series_features(xs, ms, t_pts, c, &mut feats);
-        enc.forward(th_enc, &feats, &mut z0[r * l..(r + 1) * l], &mut se);
+        series_features(xs, ms, t_pts, c, &mut feats[r * 2 * c..(r + 1) * 2 * c]);
     }
+    enc.forward_batch(th_enc, &feats, &mut z0, &mut se);
     let mut sys = MlpOde::new(dynamics, th_dyn, b, 0..0);
     let (zs, out) = ode::drive(&mut sys, &z0, Saveat::Grid(&ts64), opts, None, &mut []);
     let observed: f64 = mask.iter().map(|&m| m as f64).sum();
     let denom = observed.max(1.0);
-    let mut sd = dec.scratch();
-    let mut pred_row = vec![0.0; c];
+    let mut sd = dec.batch_scratch(b);
+    let mut pred = vec![0.0; b * c];
     let mut mse = 0.0;
     let mut preds = vec![0.0f32; b * t_pts * c];
-    for t in 0..t_pts {
+    for (t, zt) in zs.iter().enumerate() {
+        dec.forward_batch(th_dec, zt, &mut pred, &mut sd);
         for r in 0..b {
-            dec.forward(th_dec, &zs[t][r * l..(r + 1) * l], &mut pred_row, &mut sd);
             let base = r * t_pts * c + t * c;
             for k in 0..c {
                 let m = mask[base + k] as f64;
-                let diff = pred_row[k] - x[base + k] as f64;
+                let diff = pred[r * c + k] - x[base + k] as f64;
                 mse += m * diff * diff / denom;
-                preds[base + k] = pred_row[k] as f32;
+                preds[base + k] = pred[r * c + k] as f32;
             }
         }
     }

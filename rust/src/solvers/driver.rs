@@ -27,9 +27,12 @@
 //! ```
 //!
 //! Dispatch is driven by [`System::has_diffusion`]: drift-only systems
-//! run the adaptive RK driver ([`super::ode::drive`]), diffusive systems
-//! the stochastic Heun driver ([`super::sde::drive`]) and must pass an
-//! RNG.  The pre-unification closure-based entry points (`ode::solve`,
+//! run the adaptive RK driver ([`super::ode::drive`]) — whose per-attempt
+//! stage combination + embedded error estimate are fused into one
+//! lane-vectorized pass over the stage arena
+//! (`crate::models::kernels::rk_combine`, DESIGN.md §Perf) — diffusive
+//! systems the stochastic Heun driver ([`super::sde::drive`]) and must
+//! pass an RNG.  The pre-unification closure-based entry points (`ode::solve`,
 //! `ode::solve_saveat`, `ode::solve_saveat_taped` and their `sde_*`
 //! mirrors) are retired — this is the only call shape.
 //!

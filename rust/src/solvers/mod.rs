@@ -33,6 +33,13 @@
 //!   [`LocalReg`], the sampled-step local regularizer behind the
 //!   `lrnode`/`lrnsde` methods (Pal et al. 2023).
 //!
+//! The RK stepper's stage combination + embedded error estimate are
+//! fused into one pass over the stage arena
+//! (`models::kernels::rk_combine`), dims chunked 8 lanes wide with the
+//! tableau's stage order preserved per dim — bit-identical to the seed
+//! two-pass loop by construction (DESIGN.md §Perf), so the
+//! `tests/solver_equivalence.rs` pin is unaffected.
+//!
 //! Gradients flow through [`adjoint`]: taped solves record the accepted
 //! steps, [`ode_backward_sys`] / [`sde_backward_sys`] walk them in
 //! reverse under [`RegCoefs`] (global `coef_e`/`coef_s` plus the

@@ -24,13 +24,19 @@
 //! one contiguous arena sized `(stages + 5) * n` at construction —
 //! RK stages as a flat row-major `[stages × n]` block (row 0 doubles as
 //! the FSAL stage), followed by the `zi` / `znew` / `err` / `g_x` / `g_y`
-//! working vectors.  Stage combination walks the stage block row-by-row
-//! (contiguous), the tableau is borrowed for the whole solve (never
-//! cloned), and the Shampine stiffness ratio is computed with scalar
-//! accumulators instead of scratch vectors.  Controller constants and the
-//! error norm are shared with the SDE solver via [`super::controller`].
+//! working vectors.  Stage combination and the embedded error estimate
+//! are **fused into one pass** over the stage block
+//! ([`crate::models::kernels::rk_combine`]): dims chunked into vector
+//! lanes, stages as the inner loop, so stages stream through cache once
+//! per attempt while each dim still accumulates in tableau stage order —
+//! bit-identical to the seed's two-pass loop.  The tableau is borrowed
+//! for the whole solve (never cloned), and the Shampine stiffness ratio
+//! is computed with scalar accumulators instead of scratch vectors.
+//! Controller constants and the error norm are shared with the SDE
+//! solver via [`super::controller`].
 
 use super::adjoint::OdeTape;
+use crate::models::kernels;
 use super::controller::{error_ratio, pi_factor, reject_factor, rms, stiffness_ratio, EPS};
 use super::driver::{Saveat, SolveOptions};
 use super::error::{SolveError, SolveErrorKind, SolveResult};
@@ -212,22 +218,13 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
             }
             self.stats.nfe += self.tab.nfe_per_attempt() as u64;
 
-            // Combination + embedded error (paper Eq. 3): accumulate the
-            // weighted stage sums row-by-row over the contiguous block.
-            znew.fill(0.0);
-            err.fill(0.0);
-            for i in 0..s {
-                let (bi, bti) = (self.tab.b[i], self.tab.btilde[i]);
-                let ki = &ks[i * n..(i + 1) * n];
-                for d in 0..n {
-                    znew[d] += bi * ki[d];
-                    err[d] += bti * ki[d];
-                }
-            }
-            for d in 0..n {
-                znew[d] = z[d] + h * znew[d];
-                err[d] *= h;
-            }
+            // Combination + embedded error (paper Eq. 3), fused into one
+            // pass over the stage arena (`models::kernels::rk_combine`,
+            // the rk_combine.py port): dims are chunked into vector
+            // lanes with stages as the inner loop, so each dim still
+            // accumulates in tableau stage order — bit-identical to the
+            // seed's two-pass loop (tests/solver_equivalence.rs).
+            kernels::rk_combine(ks, s, n, &self.tab.b, &self.tab.btilde, z, h, znew, err);
 
             // A non-finite proposed state or embedded error can never be
             // accepted (q goes NaN/inf) — without this check the seed

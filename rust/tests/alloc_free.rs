@@ -10,6 +10,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use regnde::models::Mlp;
 use regnde::solvers::adjoint::{OdeTape, SdeTape};
 use regnde::solvers::ode::SolveOutcome;
 use regnde::solvers::problems;
@@ -286,4 +287,69 @@ fn step_loop_is_allocation_free() {
         steps[0],
         steps[1]
     );
+
+    // ---- Batched MLP kernels ----------------------------------------------
+    // The vectorized batched kernels + the fused RK stage-combine keep the
+    // contract: driving an MLP vector field through `forward_batch` (which
+    // routes every stage evaluation AND the stage combination through
+    // `models::kernels`) adds zero per-attempt heap allocations.
+    let mlp = Mlp::new(&[16, 64, 16]);
+    let rows = 8;
+    let theta: Vec<f64> = {
+        let mut p32 = vec![0.0f32; mlp.n_params()];
+        mlp.init(&mut Rng::new(21), &mut p32);
+        p32.iter().map(|&v| v as f64 * 0.5).collect()
+    };
+    let z0: Vec<f64> = {
+        let mut rng = Rng::new(22);
+        (0..rows * 16).map(|_| rng.range(-1.0, 1.0)).collect()
+    };
+    let mk = |tol: f64| SolveOptions::new().with_tolerance(tol);
+    let mut steps = [0u64; 2];
+    let (loose, tight);
+    {
+        let mut scratch = mlp.batch_scratch(rows);
+        let mut drift =
+            |z: &[f64], _t: f64, dz: &mut [f64]| mlp.forward_batch(&theta, z, dz, &mut scratch);
+        // Warm-up.
+        let _ = solve(&mut drift, &z0, 0.0, 1.5, &mk(1e-6));
+        loose = count_allocs(|| {
+            let out = solve(&mut drift, &z0, 0.0, 1.5, &mk(1e-3));
+            steps[0] = out.stats.attempts();
+        });
+        tight = count_allocs(|| {
+            let out = solve(&mut drift, &z0, 0.0, 1.5, &mk(1e-9));
+            steps[1] = out.stats.attempts();
+        });
+    }
+    assert!(
+        steps[1] > 4 * steps[0],
+        "tight batched-MLP solve must take far more steps ({} vs {})",
+        steps[1],
+        steps[0]
+    );
+    assert!(
+        tight.abs_diff(loose) <= 8,
+        "batched-kernel solve allocation count must not scale with step \
+         count ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
+        steps[0],
+        steps[1]
+    );
+
+    // Direct check: repeated batched VJP passes allocate nothing at all.
+    let mut scratch = mlp.batch_scratch(rows);
+    let w: Vec<f64> = {
+        let mut rng = Rng::new(23);
+        (0..rows * 16).map(|_| rng.range(-1.0, 1.0)).collect()
+    };
+    let mut gx = vec![0.0; rows * 16];
+    let mut gt = vec![0.0; mlp.n_params()];
+    // Warm-up pass.
+    mlp.vjp_batch(&theta, &z0, &w, &mut gx, &mut gt, &mut scratch);
+    let n = count_allocs(|| {
+        for _ in 0..64 {
+            mlp.vjp_batch(&theta, &z0, &w, &mut gx, &mut gt, &mut scratch);
+        }
+    });
+    assert_eq!(n, 0, "vjp_batch must be allocation-free ({n} allocs/64 calls)");
 }

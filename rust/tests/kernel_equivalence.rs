@@ -1,0 +1,328 @@
+//! Property suite pinning the vectorized batched kernels
+//! (`models::kernels`) to their scalar references.
+//!
+//! Tolerance policy (DESIGN.md §Perf): the forward GEMM re-associates the
+//! reduction (8-lane tree + serial tail) so it is compared to the seed
+//! order under a 1e-12 relative tolerance; it is still *deterministic*
+//! (two runs are bit-identical) and *batch-decomposition invariant* (a
+//! batch of one reproduces the same row of a batch of 128 bit-for-bit).
+//! The fused RK stage-combine and the scalar-fallback ablation path
+//! preserve the reference FP sequence exactly, so those are pinned
+//! bit-for-bit, not by tolerance.
+//!
+//! Everything runs inside ONE `#[test]` function: the
+//! `kernels::set_scalar_fallback` knob is process-global, and parallel
+//! test threads toggling it would race.
+
+use regnde::models::kernels::{self, Act};
+use regnde::models::Mlp;
+use regnde::util::propcheck::{check, ensure, ensure_close, Gen};
+use regnde::util::rng::Rng;
+
+/// Random flat parameter vector in (-1, 1).
+fn rand_theta(g: &mut Gen, mlp: &Mlp) -> Vec<f64> {
+    g.vec_f64(mlp.n_params(), -1.0, 1.0)
+}
+
+/// Random MLP: 1–3 layers, dims 1–70, one of the three constructor
+/// variants (plain / cubed input / tanh output).
+fn rand_mlp(g: &mut Gen) -> Mlp {
+    let n_layers = g.usize_in(1, 3);
+    let dims: Vec<usize> = (0..=n_layers).map(|_| g.usize_in(1, 70)).collect();
+    match g.usize_in(0, 2) {
+        0 => Mlp::new(&dims),
+        1 => Mlp::cubed(&dims),
+        _ => Mlp::tanh_out(&dims),
+    }
+}
+
+fn dense_act_matches_reference() {
+    check("dense_act vs reference", 64, |g| {
+        let rows = g.usize_in(1, 128);
+        let in_dim = g.usize_in(1, 70);
+        let out_dim = g.usize_in(1, 70);
+        let act = if g.bool() { Act::Tanh } else { Act::Linear };
+        let w = g.vec_f64(out_dim * in_dim, -2.0, 2.0);
+        let bias = g.vec_f64(out_dim, -1.0, 1.0);
+        let x = g.vec_f64(rows * in_dim, -2.0, 2.0);
+        let mut out = vec![0.0; rows * out_dim];
+        let mut out_ref = vec![0.0; rows * out_dim];
+        kernels::dense_act(&w, &bias, &x, rows, in_dim, out_dim, act, &mut out);
+        kernels::dense_act_ref(&w, &bias, &x, rows, in_dim, out_dim, act, &mut out_ref);
+        for (k, (&a, &b)) in out.iter().zip(&out_ref).enumerate() {
+            ensure_close(a, b, 1e-12, &format!("dense_act[{k}]"))?;
+        }
+
+        // Exact-order determinism: a second run is bit-identical.
+        let mut out2 = vec![0.0; rows * out_dim];
+        kernels::dense_act(&w, &bias, &x, rows, in_dim, out_dim, act, &mut out2);
+        for (k, (&a, &b)) in out.iter().zip(&out2).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("dense_act rerun differs at {k}: {a} vs {b}"),
+            )?;
+        }
+
+        // Batch-decomposition invariance: any single row alone
+        // reproduces its in-batch bits (serving-consistency contract).
+        let r = g.usize_in(0, rows - 1);
+        let mut row_out = vec![0.0; out_dim];
+        kernels::dense_act(
+            &w,
+            &bias,
+            &x[r * in_dim..(r + 1) * in_dim],
+            1,
+            in_dim,
+            out_dim,
+            act,
+            &mut row_out,
+        );
+        for (k, (&a, &b)) in row_out.iter().zip(&out[r * out_dim..]).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("row {r} out[{k}] batch-dependent: {a} vs {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+fn forward_batch_matches_per_row() {
+    check("forward_batch vs per-row forward", 64, |g| {
+        let mlp = rand_mlp(g);
+        let rows = g.usize_in(1, 16);
+        let theta = rand_theta(g, &mlp);
+        let (i, o) = (mlp.in_dim(), mlp.out_dim());
+        let x = g.vec_f64(rows * i, -2.0, 2.0);
+
+        let mut out = vec![0.0; rows * o];
+        let mut scratch = mlp.batch_scratch(rows);
+        mlp.forward_batch(&theta, &x, &mut out, &mut scratch);
+
+        let mut row_out = vec![0.0; o];
+        let mut sc = mlp.scratch();
+        for r in 0..rows {
+            mlp.forward(&theta, &x[r * i..(r + 1) * i], &mut row_out, &mut sc);
+            for (k, (&a, &b)) in row_out.iter().zip(&out[r * o..]).enumerate() {
+                ensure_close(a, b, 1e-12, &format!("forward_batch row {r} [{k}]"))?;
+            }
+        }
+
+        // Determinism: re-running the batched pass is bit-identical.
+        let mut out2 = vec![0.0; rows * o];
+        mlp.forward_batch(&theta, &x, &mut out2, &mut scratch);
+        for (k, (&a, &b)) in out.iter().zip(&out2).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("forward_batch rerun differs at {k}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+fn vjp_batch_matches_per_row() {
+    check("vjp_batch vs per-row vjp", 64, |g| {
+        let mlp = rand_mlp(g);
+        let rows = g.usize_in(1, 16);
+        let theta = rand_theta(g, &mlp);
+        let (i, o) = (mlp.in_dim(), mlp.out_dim());
+        let x = g.vec_f64(rows * i, -2.0, 2.0);
+        let w = g.vec_f64(rows * o, -1.0, 1.0);
+
+        let mut gx = vec![0.0; rows * i];
+        let mut gt = vec![0.0; mlp.n_params()];
+        let mut scratch = mlp.batch_scratch(rows);
+        mlp.vjp_batch(&theta, &x, &w, &mut gx, &mut gt, &mut scratch);
+
+        let mut gx_ref = vec![0.0; rows * i];
+        let mut gt_ref = vec![0.0; mlp.n_params()];
+        let mut sc = mlp.scratch();
+        for r in 0..rows {
+            mlp.vjp(
+                &theta,
+                &x[r * i..(r + 1) * i],
+                &w[r * o..(r + 1) * o],
+                &mut gx_ref[r * i..(r + 1) * i],
+                &mut gt_ref,
+                &mut sc,
+            );
+        }
+        for (k, (&a, &b)) in gx.iter().zip(&gx_ref).enumerate() {
+            ensure_close(a, b, 1e-10, &format!("vjp_batch gx[{k}]"))?;
+        }
+        for (k, (&a, &b)) in gt.iter().zip(&gt_ref).enumerate() {
+            ensure_close(a, b, 1e-10, &format!("vjp_batch gtheta[{k}]"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Finite-difference gradcheck of the batched VJP (< 1e-4) on the loss
+/// `Σ_r w_r · f(x_r)`.
+fn fd_check_batch(mlp: &Mlp, rows: usize, seed: u64) {
+    let mut g = Gen { rng: Rng::new(seed) };
+    let theta = rand_theta(&mut g, mlp);
+    let (i, o) = (mlp.in_dim(), mlp.out_dim());
+    let x = g.vec_f64(rows * i, -1.0, 1.0);
+    let w = g.vec_f64(rows * o, -1.0, 1.0);
+
+    let mut gx = vec![0.0; rows * i];
+    let mut gt = vec![0.0; mlp.n_params()];
+    let mut scratch = mlp.batch_scratch(rows);
+    mlp.vjp_batch(&theta, &x, &w, &mut gx, &mut gt, &mut scratch);
+
+    let mut loss = |theta: &[f64], x: &[f64]| -> f64 {
+        let mut out = vec![0.0; rows * o];
+        mlp.forward_batch(theta, x, &mut out, &mut scratch);
+        out.iter().zip(&w).map(|(o, w)| o * w).sum()
+    };
+    let eps = 1e-6;
+    for k in 0..mlp.n_params() {
+        let mut tp = theta.clone();
+        tp[k] += eps;
+        let mut tm = theta.clone();
+        tm[k] -= eps;
+        let fd = (loss(&tp, &x) - loss(&tm, &x)) / (2.0 * eps);
+        assert!(
+            (gt[k] - fd).abs() < 1e-4 * fd.abs().max(1.0),
+            "param {k}: vjp_batch {} vs fd {fd}",
+            gt[k]
+        );
+    }
+    for k in 0..rows * i {
+        let mut xp = x.clone();
+        xp[k] += eps;
+        let mut xm = x.clone();
+        xm[k] -= eps;
+        let fd = (loss(&theta, &xp) - loss(&theta, &xm)) / (2.0 * eps);
+        assert!(
+            (gx[k] - fd).abs() < 1e-4 * fd.abs().max(1.0),
+            "input {k}: vjp_batch {} vs fd {fd}",
+            gx[k]
+        );
+    }
+}
+
+fn rk_combine_is_bit_identical() {
+    check("rk_combine vs reference (bitwise)", 64, |g| {
+        let stages = g.usize_in(1, 9);
+        let n = g.usize_in(1, 70);
+        let ks = g.vec_f64(stages * n, -3.0, 3.0);
+        let b = g.vec_f64(stages, -1.0, 1.0);
+        let btilde = g.vec_f64(stages, -0.1, 0.1);
+        let z = g.vec_f64(n, -2.0, 2.0);
+        let h = g.f64_in(1e-4, 0.5);
+        let mut znew = vec![0.0; n];
+        let mut err = vec![0.0; n];
+        let mut znew_ref = vec![0.0; n];
+        let mut err_ref = vec![0.0; n];
+        kernels::rk_combine(&ks, stages, n, &b, &btilde, &z, h, &mut znew, &mut err);
+        kernels::rk_combine_ref(
+            &ks,
+            stages,
+            n,
+            &b,
+            &btilde,
+            &z,
+            h,
+            &mut znew_ref,
+            &mut err_ref,
+        );
+        for d in 0..n {
+            ensure(
+                znew[d].to_bits() == znew_ref[d].to_bits(),
+                format!("znew[{d}]: {} vs {}", znew[d], znew_ref[d]),
+            )?;
+            ensure(
+                err[d].to_bits() == err_ref[d].to_bits(),
+                format!("err[{d}]: {} vs {}", err[d], err_ref[d]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The ablation knob must route the batched entry points onto the exact
+/// scalar path (bit-identical to calling the per-row API directly).
+fn scalar_fallback_routes_to_reference() {
+    let mlp = Mlp::cubed(&[2, 16, 2]);
+    let mut g = Gen { rng: Rng::new(0xAB1A) };
+    let theta = rand_theta(&mut g, &mlp);
+    let rows = 5;
+    let x = g.vec_f64(rows * 2, -1.0, 1.0);
+    let w = g.vec_f64(rows * 2, -1.0, 1.0);
+
+    assert!(!kernels::scalar_fallback(), "knob must default off");
+    kernels::set_scalar_fallback(true);
+    assert!(kernels::scalar_fallback());
+
+    let mut out = vec![0.0; rows * 2];
+    let mut gx = vec![0.0; rows * 2];
+    let mut gt = vec![0.0; mlp.n_params()];
+    let mut scratch = mlp.batch_scratch(rows);
+    mlp.forward_batch(&theta, &x, &mut out, &mut scratch);
+    mlp.vjp_batch(&theta, &x, &w, &mut gx, &mut gt, &mut scratch);
+
+    kernels::set_scalar_fallback(false);
+
+    let mut sc = mlp.scratch();
+    let mut row_out = vec![0.0; 2];
+    let mut gx_ref = vec![0.0; rows * 2];
+    let mut gt_ref = vec![0.0; mlp.n_params()];
+    for r in 0..rows {
+        mlp.forward(&theta, &x[r * 2..(r + 1) * 2], &mut row_out, &mut sc);
+        for k in 0..2 {
+            assert_eq!(
+                row_out[k].to_bits(),
+                out[r * 2 + k].to_bits(),
+                "fallback forward must BE the scalar path"
+            );
+        }
+        mlp.vjp(
+            &theta,
+            &x[r * 2..(r + 1) * 2],
+            &w[r * 2..(r + 1) * 2],
+            &mut gx_ref[r * 2..(r + 1) * 2],
+            &mut gt_ref,
+            &mut sc,
+        );
+    }
+    for (a, b) in gx.iter().zip(&gx_ref) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in gt.iter().zip(&gt_ref) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // rk_combine under the knob is the reference two-pass loop.
+    kernels::set_scalar_fallback(true);
+    let (stages, n) = (7, 19);
+    let mut g = Gen { rng: Rng::new(0xF0) };
+    let ks = g.vec_f64(stages * n, -1.0, 1.0);
+    let b = g.vec_f64(stages, -1.0, 1.0);
+    let bt = g.vec_f64(stages, -0.1, 0.1);
+    let z = g.vec_f64(n, -1.0, 1.0);
+    let (mut zn, mut er) = (vec![0.0; n], vec![0.0; n]);
+    let (mut zn_ref, mut er_ref) = (vec![0.0; n], vec![0.0; n]);
+    kernels::rk_combine(&ks, stages, n, &b, &bt, &z, 0.125, &mut zn, &mut er);
+    kernels::set_scalar_fallback(false);
+    kernels::rk_combine_ref(&ks, stages, n, &b, &bt, &z, 0.125, &mut zn_ref, &mut er_ref);
+    assert_eq!(zn, zn_ref);
+    assert_eq!(er, er_ref);
+}
+
+/// One sequential test: the scalar-fallback knob is process-global, so
+/// the sections must not run on parallel test threads.
+#[test]
+fn kernel_equivalence_suite() {
+    dense_act_matches_reference();
+    forward_batch_matches_per_row();
+    vjp_batch_matches_per_row();
+    fd_check_batch(&Mlp::new(&[3, 5, 2]), 4, 11);
+    fd_check_batch(&Mlp::cubed(&[2, 6, 2]), 3, 12);
+    fd_check_batch(&Mlp::tanh_out(&[4, 3]), 2, 13);
+    fd_check_batch(&Mlp::new(&[2, 4]), 9, 14);
+    rk_combine_is_bit_identical();
+    scalar_fallback_routes_to_reference();
+}

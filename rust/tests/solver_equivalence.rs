@@ -13,6 +13,15 @@
 //! identical and states must agree to <= 1e-12 (they are in fact
 //! bit-identical; the tolerance guards against platform FMA differences
 //! only).
+//!
+//! The fused stage-combine (`models::kernels::rk_combine`) keeps this
+//! pin intact *by construction*: it chunks dims 8 wide with the stage
+//! loop innermost, so every dim still accumulates stage terms in tableau
+//! order — the exact FP sequence of the seed's two-pass loop.  Only the
+//! *network* forward GEMM re-associates its reduction, and that lives
+//! outside this suite's closures; its tolerance contract is pinned by
+//! `tests/kernel_equivalence.rs` (accumulation-order policy in
+//! DESIGN.md §Perf).
 
 use regnde::solvers::ode::Stats;
 use regnde::solvers::problems;
