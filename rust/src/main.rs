@@ -496,7 +496,10 @@ fn remote_predict(args: &Args) -> Result<()> {
             }));
         }
         for lane in lanes {
-            lane.join().expect("client lane panicked")?;
+            match lane.join() {
+                Ok(res) => res?,
+                Err(_) => bail!("client lane panicked"),
+            }
         }
         Ok(())
     })?;

@@ -93,6 +93,7 @@ pub fn scalar_fallback() -> bool {
 /// and platform-independent (but reassociated relative to a serial sum —
 /// see the module-level accumulation-order policy).
 #[inline]
+// analyze: hot-path
 fn dot_lanes(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
@@ -121,6 +122,7 @@ fn dot_lanes(a: &[f64], b: &[f64]) -> f64 {
 /// [`ROW_BLOCK`] rows with the [`dot_lanes`] vectorized reduction; each
 /// output element is independent of `rows`, so any batch decomposition
 /// produces identical bits per element.
+// analyze: hot-path
 pub fn dense_act(
     w: &[f64],
     bias: &[f64],
@@ -193,6 +195,7 @@ pub fn dense_act_ref(
 /// `gw` element is a serial `axpy` sweep, so the result is bit-identical
 /// to the retained per-row scalar path (zero-`Δ` rows are skipped there
 /// too).
+// analyze: hot-path
 pub fn dense_backward_params(
     delta: &[f64],
     x: &[f64],
@@ -227,6 +230,7 @@ pub fn dense_backward_params(
 /// derivative afterwards).  Formulated as per-row `axpy` sweeps over the
 /// weight rows, so each `dx` element accumulates over `o` in the same
 /// order as the scalar path's per-column sum — bit-identical.
+// analyze: hot-path
 pub fn dense_backward_input(
     w: &[f64],
     delta: &[f64],
@@ -261,6 +265,7 @@ pub fn dense_backward_input(
 /// the exact FP sequence of the seed's two-pass loop, hence bit-identical
 /// output (the `tests/solver_equivalence.rs` pin holds by construction,
 /// not by tolerance).  Allocation-free.
+// analyze: hot-path
 pub fn rk_combine(
     ks: &[f64],
     stages: usize,

@@ -121,7 +121,7 @@ impl Mlp {
         self.dims
             .windows(2)
             .map(|w| (w[0] + 1) * w[1])
-            .sum()
+            .sum::<usize>()
     }
 
     /// (w_offset, b_offset, in, out) of layer `l` within the flat slice
@@ -133,7 +133,7 @@ impl Mlp {
     pub fn scratch(&self) -> MlpScratch {
         let max = *self.dims.iter().max().unwrap();
         MlpScratch {
-            acts: vec![0.0; self.dims.iter().sum()],
+            acts: vec![0.0; self.dims.iter().sum::<usize>()],
             delta: vec![0.0; max],
             delta2: vec![0.0; max],
         }
@@ -143,7 +143,7 @@ impl Mlp {
     /// per call ([`Mlp::forward_batch`] / [`Mlp::vjp_batch`]).
     pub fn batch_scratch(&self, rows: usize) -> MlpBatchScratch {
         assert!(rows > 0, "batch scratch needs at least one row");
-        let total: usize = self.dims.iter().sum();
+        let total: usize = self.dims.iter().sum::<usize>();
         let max = *self.dims.iter().max().unwrap();
         MlpBatchScratch {
             rows,
@@ -171,15 +171,17 @@ impl Mlp {
 
     /// Forward pass; fills `scratch.acts` with the input feature and each
     /// layer's post-activation, and copies the output layer into `out`.
+    // analyze: hot-path
     pub fn forward(&self, theta: &[f64], x: &[f64], out: &mut [f64], scratch: &mut MlpScratch) {
         debug_assert_eq!(out.len(), self.out_dim());
         self.forward_acts(theta, x, scratch);
-        let last_off: usize = self.dims[..self.n_layers()].iter().sum();
+        let last_off: usize = self.dims[..self.n_layers()].iter().sum::<usize>();
         out.copy_from_slice(&scratch.acts[last_off..last_off + self.out_dim()]);
     }
 
     /// Forward pass into the scratch activations only (no output copy) —
     /// what [`Mlp::vjp`] uses, allocation-free.
+    // analyze: hot-path
     fn forward_acts(&self, theta: &[f64], x: &[f64], scratch: &mut MlpScratch) {
         debug_assert_eq!(x.len(), self.in_dim());
         let acts = &mut scratch.acts;
@@ -208,6 +210,7 @@ impl Mlp {
 
     /// Accumulating VJP: adds `wᵀ ∂f/∂x` into `gx` and `wᵀ ∂f/∂θ` into
     /// `gtheta` (both `+=`).  Recomputes the forward internally.
+    // analyze: hot-path
     pub fn vjp(
         &self,
         theta: &[f64],
@@ -226,7 +229,7 @@ impl Mlp {
 
         // delta = w (∘ tanh' if the output layer is activated).
         let n_l = self.n_layers();
-        let last_off: usize = self.dims[..n_l].iter().sum();
+        let last_off: usize = self.dims[..n_l].iter().sum::<usize>();
         for r in 0..self.out_dim() {
             let mut d = w[r];
             if self.final_tanh {
@@ -238,7 +241,7 @@ impl Mlp {
 
         for l in (0..n_l).rev() {
             let (woff, boff, i, o) = self.layer(l);
-            let in_off: usize = self.dims[..l].iter().sum();
+            let in_off: usize = self.dims[..l].iter().sum::<usize>();
             // gW += delta ⊗ in_act ; gb += delta
             for r in 0..o {
                 let d = scratch.delta[r];
@@ -282,6 +285,7 @@ impl Mlp {
     /// batch around it (a batch of one is bit-identical to the same row
     /// of a batch of 128 — the serving-consistency contract).
     /// Allocation-free.
+    // analyze: hot-path
     pub fn forward_batch(
         &self,
         theta: &[f64],
@@ -312,6 +316,7 @@ impl Mlp {
 
     /// Batched forward into the scratch activation blocks only — shared
     /// by [`Mlp::forward_batch`] and [`Mlp::vjp_batch`].
+    // analyze: hot-path
     fn forward_batch_acts(&self, theta: &[f64], x: &[f64], scratch: &mut MlpBatchScratch) {
         let rows = scratch.rows;
         let d0 = self.dims[0];
@@ -347,6 +352,7 @@ impl Mlp {
     /// contract as [`Mlp::vjp`]; rows accumulate in batch order, exactly
     /// like the per-row scalar loop).  Recomputes the forward internally
     /// — one backward-kernel pass per layer.  Allocation-free.
+    // analyze: hot-path
     pub fn vjp_batch(
         &self,
         theta: &[f64],

@@ -263,12 +263,13 @@ impl Batcher {
         let lead = {
             let mut queues = plock(&self.queues);
             let q = queues.entry(model_id.to_string()).or_default();
-            if q.queued() >= self.policy.max_queue {
+            let queued = q.queued();
+            if queued >= self.policy.max_queue {
                 drop(queues);
                 self.note_shed();
                 return Err(BatchError::Shed(format!(
                     "admission queue full ({} queued >= max_queue {})",
-                    self.policy.max_queue, self.policy.max_queue
+                    queued, self.policy.max_queue
                 )));
             }
             let mut job = Some(Job {

@@ -44,8 +44,10 @@ use crate::runtime::ExportedState;
 use crate::util::json::{obj, Json};
 
 /// Current checkpoint format version (the `version` field).
+// analyze: wire(checkpoint-schema)
 pub const CHECKPOINT_VERSION: u64 = 1;
 /// The `schema` tag every checkpoint carries.
+// analyze: wire(checkpoint-schema)
 pub const CHECKPOINT_SCHEMA: &str = "regnde-checkpoint";
 
 /// Typed checkpoint load/decode failure — every malformed input lands on
@@ -287,6 +289,7 @@ pub fn decode_f32_hex(hex: &str) -> Result<Vec<f32>, CheckpointError> {
     for chunk in bytes.chunks_exact(8) {
         let mut le = [0u8; 4];
         for (i, pair) in chunk.chunks_exact(2).enumerate() {
+            // analyze: allow(index) -- i < 4 and pair.len() == 2 by construction: chunks_exact(2) over an 8-byte chunks_exact(8) window
             le[i] = (nib(pair[0])? << 4) | nib(pair[1])?;
         }
         out.push(f32::from_le_bytes(le));

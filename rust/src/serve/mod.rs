@@ -73,6 +73,19 @@
 //! non-finite parameters, hostile wire bytes, mid-request disconnects —
 //! and asserts the server keeps answering.
 //!
+//! ## Enforced invariants (DESIGN.md §Static Analysis)
+//!
+//! Serving code is the strictest `regnde-analyze` lint scope: no
+//! panic-family calls *and* no bare slice indexing outside tests
+//! (`L2`), lock acquisition follows the committed
+//! `rust/tools/analyze/lock_order.txt` ranks with no guard held across
+//! I/O or a batch drive (`L4`), and every protocol tag, error kind and
+//! checkpoint schema string on the wire is pinned by
+//! `rust/tools/analyze/wire_registry.txt` (`L3`) — renaming one is an
+//! explicit two-file change.  The nightly TSan job hammers the batcher
+//! window-close / drain-shutdown races dynamically
+//! (`tests/serve_stress.rs`).
+//!
 //! [`ExportedState`]: crate::runtime::ExportedState
 //! [`runtime::Backend::export_state`]: crate::runtime::Backend::export_state
 //! [`util::threadpool::ThreadPool`]: crate::util::threadpool::ThreadPool

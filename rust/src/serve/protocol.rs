@@ -51,6 +51,77 @@ use super::batcher::{BatcherStats, BatchReply};
 use crate::solvers::error::SolveErrorKind;
 use crate::util::json::{obj, Json};
 
+/// Every field name and `op` value on the wire, as named constants — the
+/// single source of truth for the protocol vocabulary.  The L3
+/// wire-stability lint (`rust/tools/analyze`, DESIGN.md §Static
+/// Analysis) extracts this module and diffs it against the committed
+/// `wire_registry.txt`, so renaming a tag is an explicit two-file
+/// change that shows up in review as a registry edit.
+// analyze: wire(protocol-tags)
+pub mod tags {
+    /// Request discriminator field.
+    pub const OP: &str = "op";
+    pub const OP_PREDICT: &str = "predict";
+    pub const OP_LIST: &str = "list";
+    pub const OP_STATS: &str = "stats";
+    pub const OP_SHUTDOWN: &str = "shutdown";
+    /// Model id (predict request and response).
+    pub const MODEL: &str = "model";
+    pub const U0: &str = "u0";
+    pub const BUDGET: &str = "budget";
+    pub const DEADLINE_MS: &str = "deadline_ms";
+    /// Response success flag — present on every response.
+    pub const OK: &str = "ok";
+    pub const ERROR: &str = "error";
+    /// Doubles as the shed marker (`"shed":true`) and the shed counter
+    /// in stats responses.
+    pub const SHED: &str = "shed";
+    pub const KIND: &str = "kind";
+    pub const TRAJ: &str = "traj";
+    pub const NFE: &str = "nfe";
+    pub const NACCEPT: &str = "naccept";
+    pub const NREJECT: &str = "nreject";
+    pub const BATCH: &str = "batch";
+    pub const MICROS: &str = "micros";
+    pub const MODELS: &str = "models";
+    pub const CLOSING: &str = "closing";
+    pub const BATCHES: &str = "batches";
+    pub const REQUESTS: &str = "requests";
+    pub const MEAN_BATCH: &str = "mean_batch";
+    pub const MAX_BATCH: &str = "max_batch";
+    pub const NFE_TOTAL: &str = "nfe_total";
+
+    /// Every tag above — the registry round-trip test walks this.
+    pub const ALL: &[&str] = &[
+        OP,
+        OP_PREDICT,
+        OP_LIST,
+        OP_STATS,
+        OP_SHUTDOWN,
+        MODEL,
+        U0,
+        BUDGET,
+        DEADLINE_MS,
+        OK,
+        ERROR,
+        SHED,
+        KIND,
+        TRAJ,
+        NFE,
+        NACCEPT,
+        NREJECT,
+        BATCH,
+        MICROS,
+        MODELS,
+        CLOSING,
+        BATCHES,
+        REQUESTS,
+        MEAN_BATCH,
+        MAX_BATCH,
+        NFE_TOTAL,
+    ];
+}
+
 /// A client request (one JSON line).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -78,44 +149,44 @@ impl Request {
                 deadline_ms,
             } => {
                 let mut fields = vec![
-                    ("op", Json::from("predict")),
-                    ("model", Json::from(model.as_str())),
-                    ("u0", f32_arr(u0)),
+                    (tags::OP, Json::from(tags::OP_PREDICT)),
+                    (tags::MODEL, Json::from(model.as_str())),
+                    (tags::U0, f32_arr(u0)),
                 ];
                 if let Some(b) = budget {
-                    fields.push(("budget", Json::from(*b as usize)));
+                    fields.push((tags::BUDGET, Json::from(*b as usize)));
                 }
                 if let Some(d) = deadline_ms {
-                    fields.push(("deadline_ms", Json::from(*d as usize)));
+                    fields.push((tags::DEADLINE_MS, Json::from(*d as usize)));
                 }
                 obj(fields)
             }
-            Request::List => obj([("op", Json::from("list"))]),
-            Request::Stats => obj([("op", Json::from("stats"))]),
-            Request::Shutdown => obj([("op", Json::from("shutdown"))]),
+            Request::List => obj([(tags::OP, Json::from(tags::OP_LIST))]),
+            Request::Stats => obj([(tags::OP, Json::from(tags::OP_STATS))]),
+            Request::Shutdown => obj([(tags::OP, Json::from(tags::OP_SHUTDOWN))]),
         }
     }
 
     pub fn from_json(j: &Json) -> Result<Request> {
-        match j.get("op")?.as_str()? {
-            "predict" => {
-                let model = j.get("model").context("predict needs a model id")?;
+        match j.get(tags::OP)?.as_str()? {
+            tags::OP_PREDICT => {
+                let model = j.get(tags::MODEL).context("predict needs a model id")?;
                 Ok(Request::Predict {
                     model: model.as_str()?.to_string(),
-                    u0: parse_f32_arr(j.get("u0").context("predict needs u0")?)?,
-                    budget: match j.opt("budget") {
+                    u0: parse_f32_arr(j.get(tags::U0).context("predict needs u0")?)?,
+                    budget: match j.opt(tags::BUDGET) {
                         Some(b) => Some(b.as_f64()? as u64),
                         None => None,
                     },
-                    deadline_ms: match j.opt("deadline_ms") {
+                    deadline_ms: match j.opt(tags::DEADLINE_MS) {
                         Some(d) => Some(d.as_f64()? as u64),
                         None => None,
                     },
                 })
             }
-            "list" => Ok(Request::List),
-            "stats" => Ok(Request::Stats),
-            "shutdown" => Ok(Request::Shutdown),
+            tags::OP_LIST => Ok(Request::List),
+            tags::OP_STATS => Ok(Request::Stats),
+            tags::OP_SHUTDOWN => Ok(Request::Shutdown),
             other => bail!("unknown op {other:?} (predict|list|stats|shutdown)"),
         }
     }
@@ -212,21 +283,21 @@ impl Response {
                 batch,
                 micros,
             } => obj([
-                ("ok", Json::from(true)),
-                ("model", Json::from(model.as_str())),
-                ("traj", f32_arr(traj)),
-                ("nfe", Json::from(*nfe as usize)),
-                ("naccept", Json::from(*naccept as usize)),
-                ("nreject", Json::from(*nreject as usize)),
-                ("batch", Json::from(*batch)),
-                ("micros", Json::from(*micros as usize)),
+                (tags::OK, Json::from(true)),
+                (tags::MODEL, Json::from(model.as_str())),
+                (tags::TRAJ, f32_arr(traj)),
+                (tags::NFE, Json::from(*nfe as usize)),
+                (tags::NACCEPT, Json::from(*naccept as usize)),
+                (tags::NREJECT, Json::from(*nreject as usize)),
+                (tags::BATCH, Json::from(*batch)),
+                (tags::MICROS, Json::from(*micros as usize)),
             ]),
             Response::List { models } => {
                 let mut ids = Vec::with_capacity(models.len());
                 for m in models {
                     ids.push(Json::from(m.as_str()));
                 }
-                obj([("ok", Json::from(true)), ("models", Json::Arr(ids))])
+                obj([(tags::OK, Json::from(true)), (tags::MODELS, Json::Arr(ids))])
             }
             Response::Stats {
                 batches,
@@ -236,27 +307,29 @@ impl Response {
                 nfe_total,
                 shed,
             } => obj([
-                ("ok", Json::from(true)),
-                ("batches", Json::from(*batches as usize)),
-                ("requests", Json::from(*requests as usize)),
-                ("mean_batch", Json::from(*mean_batch)),
-                ("max_batch", Json::from(*max_batch)),
-                ("nfe_total", Json::from(*nfe_total as usize)),
-                ("shed", Json::from(*shed as usize)),
+                (tags::OK, Json::from(true)),
+                (tags::BATCHES, Json::from(*batches as usize)),
+                (tags::REQUESTS, Json::from(*requests as usize)),
+                (tags::MEAN_BATCH, Json::from(*mean_batch)),
+                (tags::MAX_BATCH, Json::from(*max_batch)),
+                (tags::NFE_TOTAL, Json::from(*nfe_total as usize)),
+                (tags::SHED, Json::from(*shed as usize)),
             ]),
-            Response::Shutdown => obj([("ok", Json::from(true)), ("closing", Json::from(true))]),
+            Response::Shutdown => {
+                obj([(tags::OK, Json::from(true)), (tags::CLOSING, Json::from(true))])
+            }
             Response::Shed(reason) => obj([
-                ("ok", Json::from(false)),
-                ("shed", Json::from(true)),
-                ("error", Json::Str(reason.clone())),
+                (tags::OK, Json::from(false)),
+                (tags::SHED, Json::from(true)),
+                (tags::ERROR, Json::Str(reason.clone())),
             ]),
             Response::Error { msg, kind } => {
                 let mut fields = vec![
-                    ("ok", Json::from(false)),
-                    ("error", Json::Str(msg.clone())),
+                    (tags::OK, Json::from(false)),
+                    (tags::ERROR, Json::Str(msg.clone())),
                 ];
                 if let Some(k) = kind {
-                    fields.push(("kind", Json::from(k.as_str())));
+                    fields.push((tags::KIND, Json::from(k.as_str())));
                 }
                 obj(fields)
             }
@@ -264,45 +337,45 @@ impl Response {
     }
 
     pub fn from_json(j: &Json) -> Result<Response> {
-        if !j.get("ok")?.as_bool()? {
-            let msg = j.get("error")?.as_str()?.to_string();
-            if j.opt("shed").is_some_and(|s| s.as_bool().unwrap_or(false)) {
+        if !j.get(tags::OK)?.as_bool()? {
+            let msg = j.get(tags::ERROR)?.as_str()?.to_string();
+            if j.opt(tags::SHED).is_some_and(|s| s.as_bool().unwrap_or(false)) {
                 return Ok(Response::Shed(msg));
             }
-            let kind = match j.opt("kind") {
+            let kind = match j.opt(tags::KIND) {
                 Some(k) => SolveErrorKind::parse(k.as_str()?),
                 None => None,
             };
             return Ok(Response::Error { msg, kind });
         }
-        if let Some(arr) = j.opt("models") {
+        if let Some(arr) = j.opt(tags::MODELS) {
             let mut models = Vec::new();
             for m in arr.as_arr()? {
                 models.push(m.as_str()?.to_string());
             }
             return Ok(Response::List { models });
         }
-        if j.opt("closing").is_some() {
+        if j.opt(tags::CLOSING).is_some() {
             return Ok(Response::Shutdown);
         }
-        if let Some(traj) = j.opt("traj") {
+        if let Some(traj) = j.opt(tags::TRAJ) {
             return Ok(Response::Predict {
-                model: j.get("model")?.as_str()?.to_string(),
+                model: j.get(tags::MODEL)?.as_str()?.to_string(),
                 traj: parse_f32_arr(traj)?,
-                nfe: j.get("nfe")?.as_f64()? as u64,
-                naccept: j.get("naccept")?.as_f64()? as u64,
-                nreject: j.get("nreject")?.as_f64()? as u64,
-                batch: j.get("batch")?.as_usize()?,
-                micros: j.get("micros")?.as_f64()? as u64,
+                nfe: j.get(tags::NFE)?.as_f64()? as u64,
+                naccept: j.get(tags::NACCEPT)?.as_f64()? as u64,
+                nreject: j.get(tags::NREJECT)?.as_f64()? as u64,
+                batch: j.get(tags::BATCH)?.as_usize()?,
+                micros: j.get(tags::MICROS)?.as_f64()? as u64,
             });
         }
         Ok(Response::Stats {
-            batches: j.get("batches")?.as_f64()? as u64,
-            requests: j.get("requests")?.as_f64()? as u64,
-            mean_batch: j.get("mean_batch")?.as_f64()?,
-            max_batch: j.get("max_batch")?.as_usize()?,
-            nfe_total: j.get("nfe_total")?.as_f64()? as u64,
-            shed: match j.opt("shed") {
+            batches: j.get(tags::BATCHES)?.as_f64()? as u64,
+            requests: j.get(tags::REQUESTS)?.as_f64()? as u64,
+            mean_batch: j.get(tags::MEAN_BATCH)?.as_f64()?,
+            max_batch: j.get(tags::MAX_BATCH)?.as_usize()?,
+            nfe_total: j.get(tags::NFE_TOTAL)?.as_f64()? as u64,
+            shed: match j.opt(tags::SHED) {
                 Some(s) => s.as_f64()? as u64,
                 None => 0,
             },

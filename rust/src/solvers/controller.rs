@@ -32,7 +32,14 @@ pub const RMS_FLOOR: f64 = 1e-300;
 /// and the Shampine stiffness ratio numerator/denominator).
 #[inline]
 pub fn rms(v: &[f64]) -> f64 {
-    (v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64 + RMS_FLOOR).sqrt()
+    // Explicit left-to-right fold: the accumulation order is part of the
+    // bit-exactness contract (DESIGN.md §Perf), so spell it out rather
+    // than lean on `Iterator::sum` being sequential.
+    let mut sq = 0.0;
+    for x in v {
+        sq += x * x;
+    }
+    (sq / v.len() as f64 + RMS_FLOOR).sqrt()
 }
 
 /// Floored RMS from a squared-sum accumulator: `sqrt(sq / n + RMS_FLOOR)`.

@@ -280,6 +280,10 @@ mod tests {
     }
 
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn ode_ensemble_matches_independent_solves() {
         let opts = SolveOptions::new().with_tolerance(1e-8);
         let z0s: Vec<Vec<f64>> = (0..37)
@@ -311,6 +315,10 @@ mod tests {
     }
 
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn sde_ensemble_is_schedule_independent() {
         let ts = [0.0, 0.5, 1.0];
         let opts = SolveOptions::new().with_tolerance(1e-2);
@@ -348,6 +356,10 @@ mod tests {
     }
 
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn sde_trajectories_differ_from_each_other() {
         let ts = [0.0, 1.0];
         let ens = sde_solve_ensemble(
@@ -364,6 +376,10 @@ mod tests {
     }
 
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn moments_match_materialized_ensemble() {
         let ts = [0.0, 0.5, 1.0];
         let opts = SolveOptions::new().with_tolerance(1e-2);
@@ -416,6 +432,10 @@ mod tests {
     }
 
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn moments_schedule_independent_bits() {
         let ts = [0.0, 0.4, 0.8];
         let mk = |workers| {

@@ -44,7 +44,10 @@ pub enum SolveErrorKind {
 }
 
 impl SolveErrorKind {
-    /// Stable wire identifier (serving protocol `kind` field).
+    /// Stable wire identifier (serving protocol `kind` field).  The L3
+    /// wire-stability lint (`rust/tools/analyze`) extracts these strings
+    /// and diffs them against the committed `wire_registry.txt`.
+    // analyze: wire(solve-error-kind)
     pub fn as_str(self) -> &'static str {
         match self {
             SolveErrorKind::NonFiniteState => "non_finite_state",
@@ -57,6 +60,7 @@ impl SolveErrorKind {
     }
 
     /// Inverse of [`as_str`](Self::as_str) for client-side decoding.
+    // analyze: wire(solve-error-kind)
     pub fn parse(s: &str) -> Option<SolveErrorKind> {
         Some(match s {
             "non_finite_state" => SolveErrorKind::NonFiniteState,

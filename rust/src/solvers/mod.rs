@@ -83,6 +83,17 @@
 //!     tableaus bit-for-bit as python/compile/tableaus.py ([`tableau`],
 //!     with [`Tableau::parse`] at CLI boundaries), shared controller
 //!     heuristics ([`controller`]), canonical problems ([`problems`]).
+//!
+//! ## Enforced invariants (DESIGN.md §Static Analysis)
+//!
+//! This module is in the `regnde-analyze` lint perimeter: the
+//! step-attempt loops are `// analyze: hot-path` (allocation-free),
+//! panics are unreachable outside `#[cfg(test)]` (errors flow through
+//! typed [`SolveError`]s), [`SolveErrorKind`] wire strings are pinned
+//! by the committed wire registry, and FP accumulation avoids
+//! hash-order and untyped-`.sum()` nondeterminism.  CI runs the lints
+//! (`cargo run -p regnde-analyze -- --deny-all`) and Miri over these
+//! unit tests on every PR.
 
 pub mod adjoint;
 pub mod chaos;

@@ -163,6 +163,7 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
     /// `budget` is [`SolveErrorKind::BudgetExhausted`].  The success
     /// path is bit-identical to the seed loop — every check is a pure
     /// read inserted where the seed would have ground on futilely.
+    // analyze: hot-path
     fn advance(
         &mut self,
         z: &mut [f64],

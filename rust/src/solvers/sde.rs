@@ -87,6 +87,7 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
     /// stepper: non-finite proposed states, post-rejection step-size
     /// underflow and budget exhaustion each return their typed
     /// [`SolveErrorKind`]; the success path is bit-identical to the seed.
+    // analyze: hot-path
     fn advance(
         &mut self,
         z: &mut [f64],
@@ -353,6 +354,10 @@ mod tests {
 
     /// Ornstein-Uhlenbeck: dz = -z dt + sigma dW; stationary var sigma^2/2.
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn ou_moments() {
         let sigma = 0.5;
         let mut rng = Rng::new(123);
@@ -404,6 +409,10 @@ mod tests {
     /// the **Stratonovich** solution, for which E[z_t] = z0 exp((mu +
     /// sig^2/2) t).  Solved at tight tolerance to suppress weak-order bias.
     #[test]
+    // Statistical / many-trajectory: minutes under the Miri
+    // interpreter for no extra UB coverage (DESIGN.md §Static
+    // Analysis).
+    #[cfg_attr(miri, ignore)]
     fn gbm_stratonovich_mean() {
         let mu = 0.5f64;
         let sig = 0.3;

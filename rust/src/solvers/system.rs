@@ -45,6 +45,7 @@ pub trait System {
     /// Write the diagonal diffusion at `(z, t)` into `dg`.  Only invoked
     /// when [`System::has_diffusion`] returns `true`.
     fn diffusion(&mut self, _z: &[f64], _t: f64, _dg: &mut [f64]) {
+        // analyze: allow(panic) -- programmer-error contract: unreachable unless a caller ignores has_diffusion(); never fed by user input
         panic!("System::diffusion called on a drift-only system");
     }
 
@@ -52,6 +53,7 @@ pub trait System {
     /// `wᵀ ∂f/∂θ` into `gp` (both `+=`, never overwrite).  Required only
     /// by the adjoint walks ([`super::adjoint`]).
     fn drift_vjp(&mut self, _z: &[f64], _t: f64, _w: &[f64], _gz: &mut [f64], _gp: &mut [f64]) {
+        // analyze: allow(panic) -- programmer-error contract: adjoint walks require a VJP-capable System; Taping::Off never reaches here
         panic!("System::drift_vjp not provided — this system is not differentiable");
     }
 
@@ -65,6 +67,7 @@ pub trait System {
         _gz: &mut [f64],
         _gp: &mut [f64],
     ) {
+        // analyze: allow(panic) -- programmer-error contract: same as drift_vjp, SDE-adjoint-only entry point
         panic!("System::diffusion_vjp not provided — this system is not differentiable");
     }
 }

@@ -28,6 +28,7 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("regnde-worker-{i}"))
                     .spawn(move || loop {
+                        // analyze: allow(held) -- the receiver mutex IS the work handoff: exactly one idle worker blocks in recv() and the guard drops before the job runs
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             Ok(job) => job(),

@@ -1,0 +1,224 @@
+//! Deterministic serving stress test (ISSUE 8): hammer the batcher's
+//! window-close path against the server's drain shutdown.
+//!
+//! K seeded client lanes flood predict requests through tiny batch
+//! windows while one lane fires `shutdown` mid-flood.  The invariants:
+//!
+//! * every request a lane manages to send gets **exactly one** terminal
+//!   reply (`traj`/`error`/`shed`) — never a second line, never a hang,
+//! * after the drain the accept loop exits and the serve thread joins
+//!   within a bounded number of poll ticks,
+//! * replies that arrive are well-formed (trajectories have the serving
+//!   grid length; errors carry a parseable kind).
+//!
+//! All "randomness" is a per-lane LCG seeded by the lane index, so a
+//! failure replays exactly.  The nightly TSan job scales the load via
+//! `REGNDE_STRESS_LANES` / `REGNDE_STRESS_REQS` / `REGNDE_STRESS_ROUNDS`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use regnde::runtime::{Backend, NativeBackend};
+use regnde::serve::{
+    BatchPolicy, Batcher, Checkpoint, Client, Registry, Request, Response, Server, ServerOpts,
+};
+use regnde::util::threadpool::ThreadPool;
+
+const SERVING_POINTS: usize = 6;
+
+fn knob(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Minimal deterministic generator (same constants as `util::rng`'s
+/// splitmix-style seeding): good enough to decorrelate lanes, cheap
+/// enough to re-run byte-identically under TSan.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn unit_f32(&mut self) -> f32 {
+        (self.next() % 1000) as f32 / 1000.0
+    }
+}
+
+fn spiral_checkpoint(be: &NativeBackend) -> Checkpoint {
+    let params = be.init_params("spiral_node", 7).unwrap();
+    let mut state = be.export_state("spiral_node", &params).unwrap();
+    state.step_budget = 100_000;
+    let ts: Vec<f32> = (0..SERVING_POINTS)
+        .map(|i| i as f32 / (SERVING_POINTS - 1) as f32)
+        .collect();
+    Checkpoint::new(state, "spiral-node", "vanilla", ts)
+}
+
+fn spawn_server() -> (String, std::thread::JoinHandle<()>) {
+    let be = NativeBackend::new();
+    let registry = Arc::new(Registry::in_memory());
+    registry.insert("spiral", spiral_checkpoint(&be)).unwrap();
+    let pool = Arc::new(ThreadPool::new(4));
+    let batcher = Arc::new(Batcher::new(
+        Arc::clone(&registry),
+        pool,
+        BatchPolicy {
+            max_batch: 4,
+            // Tiny window: closes constantly while the flood is live, so
+            // drain shutdown always lands against an in-flight window.
+            max_wait: Duration::from_micros(500),
+            ..Default::default()
+        },
+    ));
+    let opts = ServerOpts {
+        read_timeout: Duration::from_millis(10),
+        ..Default::default()
+    };
+    let (addr, handle) =
+        Server::spawn(Arc::clone(&registry), batcher, opts, "127.0.0.1:0").unwrap();
+    (addr.to_string(), handle)
+}
+
+/// One lane's tally: how many requests were sent and how each resolved.
+#[derive(Default)]
+struct LaneTally {
+    sent: usize,
+    served: usize,
+    shed: usize,
+    errored: usize,
+    /// Connection died (drain raced the write) — allowed only as the
+    /// lane's *final* outcome, never with a reply left unread.
+    cut: bool,
+}
+
+fn run_lane(addr: &str, lane: usize, reqs: usize) -> LaneTally {
+    let mut tally = LaneTally::default();
+    let Ok(mut client) = Client::connect(addr) else {
+        // Drain already closed the listener before this lane connected.
+        tally.cut = true;
+        return tally;
+    };
+    let mut rng = Lcg(0x5eed ^ ((lane as u64) << 17));
+    for _ in 0..reqs {
+        let u0 = vec![0.5 + rng.unit_f32(), -0.5 - rng.unit_f32()];
+        // Mix tight-but-meetable and effectively-infinite deadlines so
+        // the deadline-shed path interleaves with normal serving.
+        let deadline_ms = if rng.next() % 4 == 0 { Some(2) } else { Some(10_000) };
+        let req = Request::Predict {
+            model: "spiral".to_string(),
+            u0,
+            budget: None,
+            deadline_ms,
+        };
+        tally.sent += 1;
+        match client.request(&req) {
+            Ok(Response::Predict { traj, nfe, .. }) => {
+                // Row-major [T, d] over the serving grid; spiral is 2-d.
+                assert_eq!(
+                    traj.len(),
+                    SERVING_POINTS * 2,
+                    "lane {lane}: trajectory length drifted from the serving grid"
+                );
+                assert!(nfe > 0, "lane {lane}: served reply with zero attempts");
+                tally.served += 1;
+            }
+            Ok(Response::Shed(_)) => tally.shed += 1,
+            Ok(Response::Error { msg, .. }) => {
+                assert!(!msg.is_empty(), "lane {lane}: error reply with no message");
+                tally.errored += 1;
+            }
+            Ok(other) => panic!("lane {lane}: non-terminal reply to predict: {other:?}"),
+            Err(_) => {
+                // The drain cut the connection between our write and the
+                // reply.  Legal, but only as the last thing a lane sees.
+                tally.sent -= 1;
+                tally.cut = true;
+                return tally;
+            }
+        }
+    }
+    tally
+}
+
+/// The core scenario: flood from `lanes` clients, shut down mid-flood,
+/// and require one-reply-per-request accounting plus a bounded join.
+fn flood_and_drain(lanes: usize, reqs: usize) {
+    let (addr, handle) = spawn_server();
+    let tallies: Vec<LaneTally> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..lanes)
+            .map(|lane| {
+                let addr = addr.clone();
+                scope.spawn(move || run_lane(&addr, lane, reqs))
+            })
+            .collect();
+        // Let the flood establish, then drain from a dedicated lane.
+        // The sleep is load-bearing: it puts the shutdown mid-window on
+        // every scheduler TSan explores, not after the lanes finish.
+        std::thread::sleep(Duration::from_millis(5));
+        match Client::connect(&addr).map(|mut c| c.request(&Request::Shutdown)) {
+            Ok(Ok(Response::Shutdown)) => {}
+            Ok(Ok(other)) => panic!("shutdown got non-shutdown reply: {other:?}"),
+            // Listener already closing (a lane's own drain won the race
+            // in a previous round's leftover state): nothing to assert.
+            Ok(Err(_)) | Err(_) => {}
+        }
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+
+    let sent: usize = tallies.iter().map(|t| t.sent).sum();
+    let replied: usize = tallies.iter().map(|t| t.served + t.shed + t.errored).sum();
+    assert_eq!(
+        sent, replied,
+        "reply accounting broke: {sent} requests acknowledged by the client \
+         lanes but {replied} terminal replies tallied"
+    );
+    // The server must drain: every in-flight solve answers, the accept
+    // loop observes the flag within a poll tick, and the thread joins.
+    handle.join().expect("serve thread panicked during drain");
+
+    // Post-drain the port must actually be closed for new work.
+    let post = Client::connect(&addr)
+        .and_then(|mut c| c.request(&Request::List));
+    assert!(post.is_err(), "server still serving after drain: {post:?}");
+}
+
+#[test]
+fn window_close_vs_drain_shutdown_accounts_for_every_request() {
+    let lanes = knob("REGNDE_STRESS_LANES", 4);
+    let reqs = knob("REGNDE_STRESS_REQS", 24);
+    let rounds = knob("REGNDE_STRESS_ROUNDS", 2);
+    for _ in 0..rounds {
+        flood_and_drain(lanes, reqs);
+    }
+}
+
+#[test]
+fn full_flood_without_shutdown_serves_every_request() {
+    // Control arm: no drain, so `cut` lanes are a hard failure and every
+    // request must resolve.  Distinguishes drain races from plain loss.
+    let lanes = knob("REGNDE_STRESS_LANES", 4);
+    let reqs = knob("REGNDE_STRESS_REQS", 24);
+    let (addr, handle) = spawn_server();
+    let tallies: Vec<LaneTally> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..lanes)
+            .map(|lane| {
+                let addr = addr.clone();
+                scope.spawn(move || run_lane(&addr, lane, reqs))
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    for (lane, t) in tallies.iter().enumerate() {
+        assert!(!t.cut, "lane {lane}: connection cut without a shutdown in flight");
+        assert_eq!(t.sent, reqs, "lane {lane}: short count");
+        assert_eq!(t.served + t.shed + t.errored, reqs, "lane {lane}: lost replies");
+    }
+    let mut closer = Client::connect(&addr).unwrap();
+    assert!(matches!(closer.request(&Request::Shutdown).unwrap(), Response::Shutdown));
+    handle.join().expect("serve thread panicked during drain");
+}

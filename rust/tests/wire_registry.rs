@@ -1,0 +1,94 @@
+//! Wire-registry round-trip suite (ISSUE 8, satellite 2).
+//!
+//! The L3 wire-stability lint (`rust/tools/analyze`) diffs the string
+//! literals inside `// analyze: wire(<group>)` items against the
+//! committed `wire_registry.txt`.  That proves the *registry* and the
+//! *code* agree character-for-character — but not that the strings are
+//! semantically live.  This suite closes the loop from the other side:
+//! every registered `solve-error-kind` literal must parse back to a
+//! `SolveErrorKind` whose `as_str` reproduces it, the `protocol-tags`
+//! group must equal `protocol::tags::ALL` exactly, and the
+//! `checkpoint-schema` group must match the checkpoint constants.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::Path;
+
+use regnde::serve::checkpoint::{CHECKPOINT_SCHEMA, CHECKPOINT_VERSION};
+use regnde::serve::protocol::tags;
+use regnde::solvers::SolveErrorKind;
+
+/// Every variant, spelled out so adding a variant without touching this
+/// test (and the registry) fails the exhaustiveness match below.
+const ALL_KINDS: [SolveErrorKind; 6] = [
+    SolveErrorKind::NonFiniteState,
+    SolveErrorKind::StepSizeUnderflow,
+    SolveErrorKind::BudgetExhausted,
+    SolveErrorKind::TapeMismatch,
+    SolveErrorKind::BadSpan,
+    SolveErrorKind::MissingRng,
+];
+
+/// Parse `wire_registry.txt` into (group, literal) pairs.  Same grammar
+/// as the lint tool's `parse_registry`: `#` comments, blank lines, and
+/// one `group: literal` entry per line.
+fn registry() -> Vec<(String, String)> {
+    // CARGO_MANIFEST_DIR = <repo>/rust for integration tests.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tools/analyze/wire_registry.txt");
+    let text = fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut out = Vec::new();
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (group, literal) = line
+            .split_once(':')
+            .unwrap_or_else(|| panic!("malformed registry line {raw:?}"));
+        out.push((group.trim().to_string(), literal.trim().to_string()));
+    }
+    out
+}
+
+fn group(name: &str) -> BTreeSet<String> {
+    registry()
+        .into_iter()
+        .filter(|(g, _)| g == name)
+        .map(|(_, l)| l)
+        .collect()
+}
+
+#[test]
+fn solve_error_kinds_round_trip_through_the_registry() {
+    let declared = group("solve-error-kind");
+    // Registry → code: every registered literal parses, and re-encoding
+    // reproduces the exact registered string.
+    for literal in &declared {
+        let kind = SolveErrorKind::parse(literal)
+            .unwrap_or_else(|| panic!("registry wire string {literal:?} does not parse"));
+        assert_eq!(kind.as_str(), literal, "as_str/parse disagree for {literal:?}");
+    }
+    // Code → registry: every variant's wire string is registered.
+    let emitted: BTreeSet<String> = ALL_KINDS.iter().map(|k| k.as_str().to_string()).collect();
+    assert_eq!(emitted, declared, "SolveErrorKind variants drifted from wire_registry.txt");
+    assert_eq!(emitted.len(), ALL_KINDS.len(), "duplicate wire strings across variants");
+}
+
+#[test]
+fn protocol_tags_match_the_registry_exactly() {
+    let declared = group("protocol-tags");
+    let in_code: BTreeSet<String> = tags::ALL.iter().map(|t| t.to_string()).collect();
+    assert_eq!(in_code.len(), tags::ALL.len(), "duplicate entries in tags::ALL");
+    assert_eq!(in_code, declared, "protocol tag vocabulary drifted from wire_registry.txt");
+}
+
+#[test]
+fn checkpoint_schema_constants_are_registered() {
+    let declared = group("checkpoint-schema");
+    let expected: BTreeSet<String> =
+        [CHECKPOINT_SCHEMA.to_string(), CHECKPOINT_VERSION.to_string()]
+            .into_iter()
+            .collect();
+    assert_eq!(expected, declared, "checkpoint schema constants drifted from wire_registry.txt");
+}

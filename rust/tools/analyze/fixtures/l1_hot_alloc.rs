@@ -1,0 +1,24 @@
+// Known-bad fixture for L1 hot-path-alloc (rust/tools/analyze).
+// Expected findings are asserted line-exactly in tests/fixtures.rs.
+
+// analyze: hot-path
+fn hot(v: &mut Vec<f64>, x: f64) -> f64 {
+    v.push(x); // L1.alloc: `.push()`
+    let s = format!("{x}"); // L1.alloc: `format!`
+    let w = v.clone(); // L1.alloc: `.clone()`
+    let b = Vec::with_capacity(8); // L1.alloc: `Vec::`
+    s.len() as f64 + w.len() as f64 + b.len() as f64
+}
+
+// analyze: hot-path
+fn hot_clean(acc: &mut [f64], x: f64) -> f64 {
+    acc[0] += x; // indexing is L2's business, and util/ is out of L2 scope
+    acc[0]
+}
+
+fn cold(v: &[f64]) -> Vec<f64> {
+    v.to_vec() // fine: not annotated
+}
+
+// analyze: hot-path
+struct NotAFn; // A0.dangling-hot-path: annotation must precede a fn

@@ -1,0 +1,28 @@
+// Known-bad fixture for L2 panic-freedom (lives at a serve/ pseudo-path,
+// so the `[i]`-indexing sub-lint applies too).
+
+fn f(v: &[u8], o: Option<u8>) -> u8 {
+    let a = o.unwrap(); // L2.panic
+    let b = v[0]; // L2.index
+    if a > 3 {
+        panic!("boom"); // L2.panic
+    }
+    // analyze: allow(panic) -- fixture: documented escape hatch
+    let c = o.expect("fixture"); // suppressed by the allow above
+    // analyze: allow(panic)
+    let d = o.unwrap(); // A0.missing-reason above, so this still fires
+    a + b + c + d
+}
+
+// analyze: allow(index) -- fixture: stale, suppresses nothing
+fn g() -> u8 {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        None::<u8>.unwrap(); // fine: test region
+    }
+}

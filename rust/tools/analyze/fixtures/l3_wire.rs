@@ -1,0 +1,10 @@
+// Known-bad fixture for L3 wire-string stability.  The test pairs this
+// with a synthetic registry containing `fixture_tag` and `ghost_tag`.
+
+// analyze: wire(fixture-group)
+pub const KNOWN: &str = "fixture_tag";
+
+// analyze: wire(fixture-group)
+pub const DRIFTED: &str = "unregistered_tag";
+
+pub const UNTRACKED: &str = "not_extracted"; // not annotated: invisible to L3

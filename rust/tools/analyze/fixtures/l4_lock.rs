@@ -1,0 +1,39 @@
+// Known-bad fixture for L4 lock discipline.  The test pairs this with a
+// synthetic order file declaring `queues` rank 10, `stats` rank 20.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+struct S {
+    queues: Mutex<u32>,
+    stats: Mutex<u32>,
+    other: Mutex<u32>,
+    sock: TcpStream,
+}
+
+impl S {
+    fn bad_hold(&mut self) {
+        let g = self.stats.lock();
+        let _ = self.sock.write_all(b"x"); // L4.held: stats guard live
+        drop(g);
+        let _ = self.sock.write_all(b"y"); // fine: guard dropped
+    }
+
+    fn bad_order(&self) {
+        let s = self.stats.lock(); // rank 20
+        let q = self.queues.lock(); // L4.order: rank 10 under rank 20
+        let _ = (s, q);
+    }
+
+    fn fine_order(&self) {
+        let q = self.queues.lock(); // rank 10
+        let s = self.stats.lock(); // fine: ranks ascend
+        let _ = (q, s);
+    }
+
+    fn undeclared(&self) {
+        let o = self.other.lock(); // L4.undeclared
+        let _ = o;
+    }
+}

@@ -1,0 +1,31 @@
+// Known-bad fixture for L5 FP determinism (solvers/ pseudo-path).
+
+use std::collections::HashMap; // L5.hash
+
+fn counts(keys: &[u32]) -> HashMap<u32, u32> { // L5.hash (type position)
+    let mut m = HashMap::new(); // L5.hash
+    for k in keys {
+        *m.entry(*k).or_insert(0) += 1;
+    }
+    m
+}
+
+fn bad_sum(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>() // L5.sum: float turbofish
+}
+
+fn bad_untyped(v: &[f64]) -> f64 {
+    v.iter().sum() // L5.sum: untyped accumulator
+}
+
+fn fine_int(v: &[usize]) -> usize {
+    v.iter().sum::<usize>() // fine: integer accumulation is exact
+}
+
+fn fine_loop(v: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for x in v {
+        acc += x;
+    }
+    acc
+}

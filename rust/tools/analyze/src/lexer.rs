@@ -1,0 +1,356 @@
+//! A minimal Rust lexer — just enough token structure for the lint
+//! passes, in the same no-dependency spirit as `rust/src/util/json.rs`.
+//!
+//! The lexer understands exactly what the lints need and nothing more:
+//! line/nested-block comments (kept as tokens, since annotations live in
+//! them), string/raw-string/byte-string literals (kept with their inner
+//! text, since L3 compares wire strings), char-vs-lifetime
+//! disambiguation, numbers, identifiers (including `r#raw`), and
+//! single-char punctuation.  It does not build an AST; the lint passes
+//! recover the little structure they need (attributes, item extents,
+//! brace depth, `fn` bodies) from the token stream.
+//!
+//! Escapes inside string literals are kept verbatim (`\"` stays two
+//! chars): the wire strings L3 extracts are plain identifiers-on-the-
+//! wire and never contain escapes, so no unescaping pass is needed.  A
+//! `\` + newline line-continuation still advances the line counter so
+//! diagnostics stay aligned after multi-line format strings.
+
+/// Token class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+    Comment,
+}
+
+/// One token: class, text, and the 1-based source line it starts on.
+/// Comment tokens carry their trimmed body (doc-comment markers
+/// stripped); string tokens carry the raw inner text.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `#*"` at position `i` — the tail of a raw-string opener.
+fn raw_opener(b: &[char], mut i: usize) -> bool {
+    while i < b.len() && b[i] == '#' {
+        i += 1;
+    }
+    i < b.len() && b[i] == '"'
+}
+
+/// `"` at `j` closes a raw string opened with `hashes` hash marks.
+fn raw_closer(b: &[char], j: usize, hashes: usize) -> bool {
+    if b[j] != '"' {
+        return false;
+    }
+    for k in 0..hashes {
+        if j + 1 + k >= b.len() || b[j + 1 + k] != '#' {
+            return false;
+        }
+    }
+    true
+}
+
+/// Tokenize `src`.  Never fails: unterminated constructs run to EOF.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (annotations live here).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let mut text: String = b[i + 2..j].iter().collect();
+            // Doc-comment markers: `///` and `//!`.
+            if text.starts_with('/') || text.starts_with('!') {
+                text.remove(0);
+            }
+            toks.push(Tok {
+                kind: Kind::Comment,
+                text: text.trim().to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: Kind::Comment,
+                text: b[i..j].iter().collect::<String>().trim().to_string(),
+                line: start,
+            });
+            i = j;
+            continue;
+        }
+        // Raw strings: r"..", r#".."#, br"..", br#".."#.
+        let rawish = (c == 'r' && raw_opener(&b, i + 1))
+            || (c == 'b' && i + 1 < n && b[i + 1] == 'r' && raw_opener(&b, i + 2));
+        if rawish {
+            let mut j = i + 1;
+            if c == 'b' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            j += 1; // opening quote
+            let body_start = j;
+            let start = line;
+            while j < n && !raw_closer(&b, j, hashes) {
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: b[body_start..j.min(n)].iter().collect(),
+                line: start,
+            });
+            i = (j + 1 + hashes).min(n + 1);
+            continue;
+        }
+        // Raw identifier r#foo.
+        if c == 'r' && i + 2 < n && b[i + 1] == '#' && is_ident_start(b[i + 2]) {
+            let mut j = i + 2;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: b[i + 2..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Byte string / byte char: strip the `b` and fall through.
+        let mut i2 = i;
+        let mut c2 = c;
+        if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+            i2 = i + 1;
+            c2 = b[i2];
+        }
+        if c2 == '"' {
+            let start = line;
+            let mut j = i2 + 1;
+            let mut buf = String::new();
+            while j < n {
+                if b[j] == '\\' {
+                    if j + 1 < n && b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    buf.push(b[j]);
+                    if j + 1 < n {
+                        buf.push(b[j + 1]);
+                    }
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' {
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                buf.push(b[j]);
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: buf,
+                line: start,
+            });
+            i = j + 1;
+            continue;
+        }
+        if c2 == '\'' {
+            let lifetime = i2 + 1 < n
+                && is_ident_start(b[i2 + 1])
+                && (i2 + 2 >= n || b[i2 + 2] != '\'');
+            if lifetime {
+                let mut j = i2 + 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: b[i2 + 1..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let mut j = i2 + 1;
+            if j < n && b[j] == '\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Char,
+                text: b[i2..(j + 1).min(n)].iter().collect(),
+                line,
+            });
+            i = j + 1;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            // Fraction: `.` followed by a digit (so `0..n` stays a range).
+            if j < n && b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+            }
+            // Signed exponent: `1e-12`.
+            if j < n && (b[j] == '+' || b[j] == '-') && (b[j - 1] == 'e' || b[j - 1] == 'E') {
+                j += 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: Kind::Num,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_strings_lifetimes() {
+        let toks = kinds("// analyze: hot-path\nfn f<'a>(s: &'a str) { let x = \"ab\"; }");
+        assert_eq!(toks[0], (Kind::Comment, "analyze: hot-path".to_string()));
+        assert!(toks.contains(&(Kind::Lifetime, "a".to_string())));
+        assert!(toks.contains(&(Kind::Str, "ab".to_string())));
+    }
+
+    #[test]
+    fn char_literal_is_not_a_lifetime() {
+        let toks = kinds("let c = 'x'; let n = '\\n';");
+        assert!(toks.iter().any(|t| t.0 == Kind::Char && t.1 == "'x'"));
+        assert!(!toks.iter().any(|t| t.0 == Kind::Lifetime));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = kinds("r#\"a \"quoted\" b\"# b\"bytes\" br\"raw\"");
+        assert_eq!(toks[0], (Kind::Str, "a \"quoted\" b".to_string()));
+        assert_eq!(toks[1], (Kind::Str, "bytes".to_string()));
+        assert_eq!(toks[2], (Kind::Str, "raw".to_string()));
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let toks = kinds("1e-12 0..n 3.5 0x1f");
+        assert_eq!(toks[0], (Kind::Num, "1e-12".to_string()));
+        assert_eq!(toks[1], (Kind::Num, "0".to_string()));
+        assert_eq!(toks[2], (Kind::Punct, ".".to_string()));
+        assert_eq!(toks[3], (Kind::Punct, ".".to_string()));
+        assert_eq!(toks[4], (Kind::Ident, "n".to_string()));
+        assert_eq!(toks[5], (Kind::Num, "3.5".to_string()));
+        assert_eq!(toks[6], (Kind::Num, "0x1f".to_string()));
+    }
+
+    #[test]
+    fn line_continuation_keeps_line_numbers() {
+        let src = "let s = \"a \\\n  b\";\nlet t = 1;";
+        let toks = lex(src);
+        let t = toks.iter().find(|t| t.text == "t").unwrap();
+        assert_eq!(t.line, 3);
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let toks = kinds("/* outer /* inner */ tail */ x");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1], (Kind::Ident, "x".to_string()));
+    }
+}

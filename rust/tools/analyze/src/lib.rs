@@ -1,0 +1,285 @@
+//! `regnde-analyze` — a std-only invariant linter for the regnde tree.
+//!
+//! The repo's headline guarantees (alloc-free step attempts, panic-free
+//! serving/solver stacks, stable wire strings, the batcher's lock
+//! discipline, FP-deterministic accumulation) are enforced dynamically
+//! by tests; this tool enforces them *statically*, so a regression fails
+//! CI before a stress test has to get lucky.  Lint catalog, annotation
+//! grammar and allowlist policy: `rust/DESIGN.md` §Static Analysis.
+//!
+//! * **L1 hot-path-alloc** — no allocation inside fns annotated
+//!   `// analyze: hot-path`.
+//! * **L2 panic-freedom** — no `unwrap`/`expect`/`panic!`-family (and in
+//!   `serve/` no `[i]`-indexing) outside `#[cfg(test)]`, in the scoped
+//!   modules.
+//! * **L3 wire-string stability** — literals of items annotated
+//!   `// analyze: wire(<group>)` must exactly match the committed
+//!   `wire_registry.txt`.
+//! * **L4 lock discipline** — no blocking call under a live `.lock()`
+//!   guard; acquisition order must follow `lock_order.txt`.
+//! * **L5 FP-determinism** — no `HashMap`/`HashSet`, no float-ambiguous
+//!   `.sum()`/`.product()`, in reassociation-sensitive modules.
+//!
+//! Per-site escapes are `// analyze: allow(<id>) -- <reason>` (the
+//! reason is mandatory and a stale allow is itself a finding); file-level
+//! suppressions live in `baseline.txt` (committed empty — the tree is
+//! clean — and kept honest by the same staleness rule).
+
+pub mod lexer;
+pub mod lints;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use lints::{lint_file, AllowSite, Finding, LockOrder};
+
+/// One `<group>: <literal>` line of `wire_registry.txt`.
+#[derive(Clone, Debug)]
+pub struct RegistryEntry {
+    pub group: String,
+    pub literal: String,
+    pub line: usize,
+}
+
+/// One `<lint> <file> -- <reason>` line of `baseline.txt`.
+#[derive(Clone, Debug)]
+pub struct BaselineEntry {
+    pub lint: String,
+    pub file: String,
+    pub reason: String,
+    pub line: usize,
+}
+
+/// Loaded configuration (the three committed files next to the tool).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub order: LockOrder,
+    pub registry: Vec<RegistryEntry>,
+    pub baseline: Vec<BaselineEntry>,
+}
+
+impl Config {
+    /// Load from a `rust/tools/analyze/` directory.  Missing files mean
+    /// empty sections (useful for tests; the committed tree has all
+    /// three).
+    pub fn load(dir: &Path) -> io::Result<Config> {
+        let mut cfg = Config::default();
+        if let Ok(text) = fs::read_to_string(dir.join("lock_order.txt")) {
+            cfg.order = parse_lock_order(&text);
+        }
+        if let Ok(text) = fs::read_to_string(dir.join("wire_registry.txt")) {
+            cfg.registry = parse_registry(&text);
+        }
+        if let Ok(text) = fs::read_to_string(dir.join("baseline.txt")) {
+            cfg.baseline = parse_baseline(&text);
+        }
+        Ok(cfg)
+    }
+}
+
+/// Strip a trailing `# comment` and surrounding whitespace.
+fn data(line: &str) -> &str {
+    line.split('#').next().unwrap_or("").trim()
+}
+
+pub fn parse_lock_order(text: &str) -> LockOrder {
+    let mut order = LockOrder::default();
+    for line in text.lines() {
+        let s = data(line);
+        if s.is_empty() {
+            continue;
+        }
+        let mut parts = s.split_whitespace();
+        let (Some(a), Some(b)) = (parts.next(), parts.next()) else {
+            continue;
+        };
+        if a == "wrapper" {
+            order.wrappers.insert(b.to_string());
+        } else if let Ok(rank) = a.parse::<i64>() {
+            order.rank.insert(b.to_string(), rank);
+        }
+    }
+    order
+}
+
+pub fn parse_registry(text: &str) -> Vec<RegistryEntry> {
+    let mut entries = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let s = data(line);
+        if s.is_empty() {
+            continue;
+        }
+        if let Some((group, literal)) = s.split_once(':') {
+            entries.push(RegistryEntry {
+                group: group.trim().to_string(),
+                literal: literal.trim().to_string(),
+                line: no + 1,
+            });
+        }
+    }
+    entries
+}
+
+pub fn parse_baseline(text: &str) -> Vec<BaselineEntry> {
+    let mut entries = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let s = data(line);
+        if s.is_empty() {
+            continue;
+        }
+        let (head, reason) = match s.split_once("--") {
+            Some((h, r)) => (h.trim(), r.trim()),
+            None => (s, ""),
+        };
+        let mut parts = head.split_whitespace();
+        if let (Some(lint), Some(file)) = (parts.next(), parts.next()) {
+            entries.push(BaselineEntry {
+                lint: lint.to_string(),
+                file: file.to_string(),
+                reason: reason.to_string(),
+                line: no + 1,
+            });
+        }
+    }
+    entries
+}
+
+/// Aggregated result of a full run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed findings, sorted by (file, line, lint).
+    pub findings: Vec<Finding>,
+    /// Names of all `// analyze: hot-path` annotated fns, per file.
+    pub hot_fns: Vec<(String, String)>,
+    /// Wire literals extracted per group.
+    pub wire_groups: BTreeMap<String, usize>,
+    /// Every in-source allow site (all carry reasons by construction).
+    pub allows: Vec<AllowSite>,
+}
+
+/// Lint a set of `(relative_path, source)` pairs against `cfg` — the
+/// whole pipeline minus the filesystem walk, so tests can drive it on
+/// fixtures.
+pub fn run_sources(sources: &[(String, String)], cfg: &Config) -> Report {
+    let mut report = Report::default();
+    // (group, literal) -> first (file, line) it was extracted at.
+    let mut extracted: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for (rel, src) in sources {
+        let out = lint_file(rel, src, &cfg.order);
+        for name in out.hot_fns {
+            report.hot_fns.push((rel.clone(), name));
+        }
+        for (group, literal, line) in out.wire {
+            extracted
+                .entry((group, literal))
+                .or_insert_with(|| (rel.clone(), line));
+        }
+        report.allows.extend(out.allows);
+        report.findings.extend(out.findings);
+    }
+    for ((group, _), _) in extracted.iter() {
+        *report.wire_groups.entry(group.clone()).or_insert(0) += 1;
+    }
+    // L3: extracted vs registry, both directions.
+    for ((group, literal), (file, line)) in extracted.iter() {
+        let registered = cfg
+            .registry
+            .iter()
+            .any(|e| &e.group == group && &e.literal == literal);
+        if !registered {
+            report.findings.push(Finding {
+                file: file.clone(),
+                line: *line,
+                lint: lints::L3_WIRE,
+                msg: format!("wire string `{literal}` (group {group}) missing from wire_registry.txt"),
+            });
+        }
+    }
+    for e in &cfg.registry {
+        if !extracted.contains_key(&(e.group.clone(), e.literal.clone())) {
+            report.findings.push(Finding {
+                file: "(wire_registry.txt)".to_string(),
+                line: e.line,
+                lint: lints::L3_WIRE,
+                msg: format!(
+                    "stale registry entry `{}` (group {}): not extracted from any annotated item",
+                    e.literal, e.group
+                ),
+            });
+        }
+    }
+    // Baseline: file-level suppressions, kept honest by staleness.
+    let mut used = vec![false; cfg.baseline.len()];
+    report.findings.retain(|f| {
+        for (k, b) in cfg.baseline.iter().enumerate() {
+            if b.lint == f.lint && b.file == f.file {
+                used[k] = true;
+                return false;
+            }
+        }
+        true
+    });
+    for (k, b) in cfg.baseline.iter().enumerate() {
+        if !used[k] {
+            report.findings.push(Finding {
+                file: "(baseline.txt)".to_string(),
+                line: b.line,
+                lint: lints::A0_STALE_BASELINE,
+                msg: format!(
+                    "baseline entry `{} {}` suppresses nothing (remove it)",
+                    b.lint, b.file
+                ),
+            });
+        }
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    report.hot_fns.sort();
+    report.allows.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report
+}
+
+/// Collect every `.rs` file under `dir`, sorted, as paths relative to it.
+fn collect_sources(dir: &Path) -> io::Result<Vec<(String, String)>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in fs::read_dir(&d)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    let mut sources = Vec::with_capacity(files.len());
+    for path in files {
+        let rel = path
+            .strip_prefix(dir)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.push((rel, fs::read_to_string(&path)?));
+    }
+    Ok(sources)
+}
+
+/// Full run rooted at the repo checkout: lints `<root>/rust/src` against
+/// the config in `<root>/rust/tools/analyze`.
+pub fn run(root: &Path) -> io::Result<Report> {
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("{} is not a directory (pass --root <repo>)", src.display()),
+        ));
+    }
+    let cfg = Config::load(&root.join("rust").join("tools").join("analyze"))?;
+    let sources = collect_sources(&src)?;
+    Ok(run_sources(&sources, &cfg))
+}

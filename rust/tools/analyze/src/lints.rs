@@ -1,0 +1,837 @@
+//! The lint passes (L1–L5) plus the annotation/allow machinery (A0).
+//!
+//! Everything operates on the token stream from [`crate::lexer`]; the
+//! little structure the passes need — attributes, item extents, brace
+//! depth, `fn` bodies, `#[cfg(test)]` regions — is recovered here.  The
+//! lint catalog, annotation grammar and scope policy are documented
+//! normatively in `rust/DESIGN.md` §Static Analysis.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{Kind, Tok};
+
+pub const L1_ALLOC: &str = "L1.alloc";
+pub const L2_PANIC: &str = "L2.panic";
+pub const L2_INDEX: &str = "L2.index";
+pub const L3_WIRE: &str = "L3.wire";
+pub const L4_HELD: &str = "L4.held";
+pub const L4_ORDER: &str = "L4.order";
+pub const L4_UNDECLARED: &str = "L4.undeclared";
+pub const L5_HASH: &str = "L5.hash";
+pub const L5_SUM: &str = "L5.sum";
+pub const A0_UNKNOWN: &str = "A0.unknown-annotation";
+pub const A0_MISSING_REASON: &str = "A0.missing-reason";
+pub const A0_DANGLING_HOT: &str = "A0.dangling-hot-path";
+pub const A0_STALE_ALLOW: &str = "A0.stale-allow";
+pub const A0_STALE_BASELINE: &str = "A0.stale-baseline";
+
+const INT_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+const ALLOC_METHODS: &[&str] = &["push", "collect", "to_vec", "clone", "to_string", "to_owned"];
+const ALLOC_MACROS: &[&str] = &["format", "vec"];
+const ALLOC_PATHS: &[&str] = &["Vec", "Box", "String"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const IO_CALLS: &[&str] = &[
+    "write",
+    "write_all",
+    "write_fmt",
+    "flush",
+    "read",
+    "read_line",
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "accept",
+    "connect",
+    "incoming",
+    "recv",
+    "recv_timeout",
+    "sleep",
+    "join",
+    "wait",
+    "wait_timeout",
+    "drive",
+    "predict",
+    "predict_batch",
+    "predict_traj_batch",
+    "solve",
+    "submit",
+];
+const ITEM_TERMINATORS: &[&str] = &["struct", "enum", "mod", "trait", "use", "static", "impl"];
+const SKIP_BEFORE_FN: &[&str] = &["pub", "crate", "in", "unsafe", "const", "extern", "async"];
+
+fn allow_lint(id: &str) -> Option<&'static str> {
+    match id {
+        "alloc" => Some(L1_ALLOC),
+        "panic" => Some(L2_PANIC),
+        "index" => Some(L2_INDEX),
+        "held" => Some(L4_HELD),
+        "order" => Some(L4_ORDER),
+        "undeclared" => Some(L4_UNDECLARED),
+        "hash" => Some(L5_HASH),
+        "sum" => Some(L5_SUM),
+        "wire" => Some(L3_WIRE),
+        _ => None,
+    }
+}
+
+/// One diagnostic.  `file` is the path relative to `rust/src/` (or a
+/// pseudo-file like `(wire_registry.txt)` for registry-side findings).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+/// One `// analyze: allow(<id>) -- reason` site.
+#[derive(Clone, Debug)]
+pub struct AllowSite {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub reason: String,
+}
+
+/// Which lints apply to a file, by its path relative to `rust/src/`.
+///
+/// * L1 and L3 are annotation-driven and run everywhere.
+/// * L2 guards the panic-free stacks: `serve/`, `solvers/`,
+///   `runtime/native.rs` and the CLI in `main.rs`.  The `[i]`-indexing
+///   sub-lint is scoped to `serve/` only — the solver numeric kernels
+///   index by construction over lengths they allocated, while `serve/`
+///   handles untrusted wire input (DESIGN.md §Static Analysis).
+/// * L4 covers the lock-holding modules: `serve/` + `util/threadpool.rs`.
+/// * L5 covers the reassociation-sensitive numerics: `solvers/` +
+///   `models/`.
+pub struct Scope {
+    pub l2: bool,
+    pub l2_index: bool,
+    pub l4: bool,
+    pub l5: bool,
+}
+
+pub fn scope_for(rel: &str) -> Scope {
+    let serve = rel.starts_with("serve/");
+    let solvers = rel.starts_with("solvers/");
+    Scope {
+        l2: serve || solvers || rel == "runtime/native.rs" || rel == "main.rs",
+        l2_index: serve,
+        l4: serve || rel == "util/threadpool.rs",
+        l5: solvers || rel.starts_with("models/"),
+    }
+}
+
+/// Lock-order declarations from `lock_order.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct LockOrder {
+    /// lock name -> rank (lower rank must be acquired first).
+    pub rank: BTreeMap<String, i64>,
+    /// Wrapper functions whose internal `.lock()` is skipped and whose
+    /// call sites count as acquisitions of their last argument ident.
+    pub wrappers: BTreeSet<String>,
+}
+
+/// Per-file lint result before cross-file aggregation.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub hot_fns: Vec<String>,
+    /// (group, literal, line) extracted from `// analyze: wire(<group>)`
+    /// annotated items.
+    pub wire: Vec<(String, String, usize)>,
+    pub allows: Vec<AllowSite>,
+}
+
+struct Hot {
+    name: String,
+    start: usize,
+    end: usize,
+}
+
+struct Allow {
+    line: usize,
+    lint: &'static str,
+    reason: String,
+    used: bool,
+}
+
+struct Guard {
+    rank: i64,
+    lock: String,
+    name: Option<String>,
+    depth: i64,
+    temp: bool,
+}
+
+/// `toks[i]` is the `#` of an attribute: collect its identifiers and
+/// return the index one past the closing `]`.
+fn attr_idents(toks: &[Tok], i: usize) -> (Vec<String>, usize) {
+    let mut idents = Vec::new();
+    let mut depth = 0i64;
+    let mut j = i + 1;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Punct && t.text == "[" {
+            depth += 1;
+        } else if t.kind == Kind::Punct && t.text == "]" {
+            depth -= 1;
+            if depth == 0 {
+                return (idents, j + 1);
+            }
+        } else if t.kind == Kind::Ident {
+            idents.push(t.text.clone());
+        }
+        j += 1;
+    }
+    (idents, toks.len())
+}
+
+/// Extent of the item starting at token `i`: index one past its
+/// terminating `;` (at bracket depth 0) or its matching closing `}`.
+fn item_extent(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = i;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth == 0 && t.text == "}" {
+                        return j + 1;
+                    }
+                }
+                ";" if depth == 0 => return j + 1,
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+fn skip_attrs_and_comments(toks: &[Tok], mut i: usize) -> usize {
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Comment {
+            i += 1;
+        } else if t.kind == Kind::Punct && t.text == "#" {
+            let (_, next) = attr_idents(toks, i);
+            i = next;
+        } else {
+            break;
+        }
+    }
+    i
+}
+
+struct FilePass<'a> {
+    rel: &'a str,
+    toks: &'a [Tok],
+    test_mask: Vec<bool>,
+    /// Name of the innermost enclosing `fn` per token (index into
+    /// `fn_names`), for the L4 wrapper exclusion.
+    fn_of: Vec<Option<usize>>,
+    fn_names: Vec<String>,
+    findings: Vec<Finding>,
+    allows: Vec<Allow>,
+    hot: Vec<Hot>,
+    wire: Vec<(String, String, usize)>,
+}
+
+impl<'a> FilePass<'a> {
+    fn new(rel: &'a str, toks: &'a [Tok]) -> Self {
+        let mut p = FilePass {
+            rel,
+            toks,
+            test_mask: vec![false; toks.len()],
+            fn_of: vec![None; toks.len()],
+            fn_names: Vec::new(),
+            findings: Vec::new(),
+            allows: Vec::new(),
+            hot: Vec::new(),
+            wire: Vec::new(),
+        };
+        p.mark_tests();
+        p.mark_fns();
+        p.collect_annotations();
+        p
+    }
+
+    fn emit(&mut self, line: usize, lint: &'static str, msg: String) {
+        self.findings.push(Finding {
+            file: self.rel.to_string(),
+            line,
+            lint,
+            msg,
+        });
+    }
+
+    fn prev(&self, i: usize) -> Option<&Tok> {
+        if i == 0 {
+            None
+        } else {
+            self.toks.get(i - 1)
+        }
+    }
+
+    fn prev_is(&self, i: usize, text: &str) -> bool {
+        self.prev(i).is_some_and(|t| t.kind == Kind::Punct && t.text == text)
+    }
+
+    fn next_is(&self, i: usize, text: &str) -> bool {
+        self.toks
+            .get(i + 1)
+            .is_some_and(|t| t.kind == Kind::Punct && t.text == text)
+    }
+
+    /// `#[test]` / `#[cfg(test)]` attributes mask the following item.
+    fn mark_tests(&mut self) {
+        let toks = self.toks;
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.kind == Kind::Punct && t.text == "#" && self.next_is(i, "[") {
+                let (idents, j) = attr_idents(toks, i);
+                let is_test = idents == ["test"] || (idents.len() == 2 && idents[0] == "cfg" && idents[1] == "test");
+                if is_test {
+                    let start = skip_attrs_and_comments(toks, j);
+                    let end = item_extent(toks, start);
+                    for m in self.test_mask[i..end].iter_mut() {
+                        *m = true;
+                    }
+                    i = end;
+                    continue;
+                }
+                i = j;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    fn mark_fns(&mut self) {
+        let toks = self.toks;
+        let mut stack: Vec<(usize, i64)> = Vec::new();
+        let mut depth = 0i64;
+        let mut pending: Option<usize> = None;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if t.kind == Kind::Ident && t.text == "fn" {
+                if let Some(next) = toks.get(i + 1) {
+                    if next.kind == Kind::Ident {
+                        self.fn_names.push(next.text.clone());
+                        pending = Some(self.fn_names.len() - 1);
+                    }
+                }
+            }
+            if t.kind == Kind::Punct && t.text == "{" {
+                depth += 1;
+                if let Some(idx) = pending.take() {
+                    stack.push((idx, depth));
+                }
+            }
+            if t.kind == Kind::Punct && t.text == "}" {
+                if stack.last().is_some_and(|&(_, d)| d == depth) {
+                    stack.pop();
+                }
+                depth -= 1;
+            }
+            self.fn_of[i] = stack.last().map(|&(idx, _)| idx);
+        }
+    }
+
+    fn collect_annotations(&mut self) {
+        let toks = self.toks;
+        let mut pending_hot: Option<usize> = None; // annotation line
+        let mut pending_wire: Option<(String, usize)> = None; // (group, line)
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.kind == Kind::Comment {
+                let txt = t.text.trim();
+                if let Some(body) = txt.strip_prefix("analyze:") {
+                    let body = body.trim();
+                    if body == "hot-path" {
+                        pending_hot = Some(t.line);
+                    } else if let Some(rest) = body.strip_prefix("allow(") {
+                        self.parse_allow(rest, t.line, txt);
+                    } else if let Some(rest) = body.strip_prefix("wire(") {
+                        match parse_group(rest) {
+                            Some(group) => pending_wire = Some((group, t.line)),
+                            None => {
+                                self.emit(t.line, A0_UNKNOWN, format!("unparsable annotation `{txt}`"));
+                            }
+                        }
+                    } else {
+                        self.emit(t.line, A0_UNKNOWN, format!("unknown annotation `{txt}`"));
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            if let Some(hline) = pending_hot {
+                let is_skip = t.kind == Kind::Punct
+                    || (t.kind == Kind::Ident && SKIP_BEFORE_FN.contains(&t.text.as_str()));
+                if is_skip {
+                    // attribute / visibility tokens between annotation and fn
+                } else if t.kind == Kind::Ident && t.text == "fn" {
+                    let name = toks
+                        .get(i + 1)
+                        .filter(|n| n.kind == Kind::Ident)
+                        .map(|n| n.text.clone())
+                        .unwrap_or_else(|| "?".to_string());
+                    // Body start: first `{` at paren/bracket depth 0.
+                    let mut d = 0i64;
+                    let mut j = i;
+                    while j < toks.len() {
+                        let tj = &toks[j];
+                        if tj.kind == Kind::Punct {
+                            match tj.text.as_str() {
+                                "(" | "[" => d += 1,
+                                ")" | "]" => d -= 1,
+                                "{" if d == 0 => break,
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    let end = if j < toks.len() {
+                        item_extent(toks, j)
+                    } else {
+                        toks.len()
+                    };
+                    self.hot.push(Hot {
+                        name,
+                        start: j,
+                        end,
+                    });
+                    pending_hot = None;
+                } else if t.kind == Kind::Ident && ITEM_TERMINATORS.contains(&t.text.as_str()) {
+                    self.emit(
+                        hline,
+                        A0_DANGLING_HOT,
+                        "hot-path annotation is not followed by a fn".to_string(),
+                    );
+                    pending_hot = None;
+                }
+            }
+            if let Some((group, _)) = pending_wire.take() {
+                let end = item_extent(toks, i);
+                for tok in &toks[i..end] {
+                    if tok.kind == Kind::Str || tok.kind == Kind::Num {
+                        self.wire.push((group.clone(), tok.text.clone(), tok.line));
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+
+    fn parse_allow(&mut self, rest: &str, line: usize, full: &str) {
+        let Some(close) = rest.find(')') else {
+            self.emit(line, A0_UNKNOWN, format!("unparsable annotation `{full}`"));
+            return;
+        };
+        let id = &rest[..close];
+        let after = rest[close + 1..].trim();
+        let well_formed = !id.is_empty()
+            && id.chars().all(|c| c.is_ascii_lowercase() || c == '-')
+            && (after.is_empty() || after.starts_with("--"));
+        if !well_formed {
+            self.emit(line, A0_UNKNOWN, format!("unparsable annotation `{full}`"));
+            return;
+        }
+        let Some(lint) = allow_lint(id) else {
+            self.emit(line, A0_UNKNOWN, format!("unknown allow id `{id}`"));
+            return;
+        };
+        let reason = after.strip_prefix("--").map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            self.emit(
+                line,
+                A0_MISSING_REASON,
+                format!("allow({id}) needs a reason: `// analyze: allow({id}) -- <why>`"),
+            );
+            return;
+        }
+        self.allows.push(Allow {
+            line,
+            lint,
+            reason: reason.to_string(),
+            used: false,
+        });
+    }
+
+    // ---- L1: alloc-free hot paths ----
+    fn l1(&mut self) {
+        let mut found: Vec<(usize, &'static str, String)> = Vec::new();
+        for hf in &self.hot {
+            for i in hf.start..hf.end {
+                let t = &self.toks[i];
+                if t.kind != Kind::Ident {
+                    continue;
+                }
+                let name = t.text.as_str();
+                if ALLOC_METHODS.contains(&name) && self.prev_is(i, ".") && self.next_is(i, "(") {
+                    found.push((
+                        t.line,
+                        L1_ALLOC,
+                        format!("`.{name}()` in hot-path fn `{}` (alloc-free contract)", hf.name),
+                    ));
+                } else if ALLOC_MACROS.contains(&name) && self.next_is(i, "!") {
+                    found.push((
+                        t.line,
+                        L1_ALLOC,
+                        format!("`{name}!` in hot-path fn `{}` (alloc-free contract)", hf.name),
+                    ));
+                } else if ALLOC_PATHS.contains(&name) && self.next_is(i, ":") {
+                    found.push((
+                        t.line,
+                        L1_ALLOC,
+                        format!("`{name}::` in hot-path fn `{}` (alloc-free contract)", hf.name),
+                    ));
+                }
+            }
+        }
+        for (line, lint, msg) in found {
+            self.emit(line, lint, msg);
+        }
+    }
+
+    // ---- L2: panic freedom ----
+    fn l2(&mut self, index_too: bool) {
+        let mut found: Vec<(usize, &'static str, String)> = Vec::new();
+        for i in 0..self.toks.len() {
+            if self.test_mask[i] {
+                continue;
+            }
+            let t = &self.toks[i];
+            let name = t.text.as_str();
+            if t.kind == Kind::Ident
+                && (name == "unwrap" || name == "expect")
+                && self.prev_is(i, ".")
+                && self.next_is(i, "(")
+            {
+                found.push((
+                    t.line,
+                    L2_PANIC,
+                    format!("`.{name}()` outside tests (panic-freedom contract)"),
+                ));
+            } else if t.kind == Kind::Ident && PANIC_MACROS.contains(&name) && self.next_is(i, "!")
+            {
+                found.push((
+                    t.line,
+                    L2_PANIC,
+                    format!("`{name}!` outside tests (panic-freedom contract)"),
+                ));
+            } else if index_too && t.kind == Kind::Punct && t.text == "[" {
+                let indexable = self.prev(i).is_some_and(|p| {
+                    p.kind == Kind::Ident || (p.kind == Kind::Punct && (p.text == ")" || p.text == "]"))
+                });
+                if indexable {
+                    found.push((
+                        t.line,
+                        L2_INDEX,
+                        "slice indexing outside tests (can panic on bad bounds)".to_string(),
+                    ));
+                }
+            }
+        }
+        for (line, lint, msg) in found {
+            self.emit(line, lint, msg);
+        }
+    }
+
+    // ---- L4: lock discipline ----
+    fn l4(&mut self, order: &LockOrder) {
+        let toks = self.toks;
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut depth = 0i64;
+        let mut found: Vec<(usize, &'static str, String)> = Vec::new();
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        guards.retain(|g| g.depth <= depth);
+                    }
+                    ";" => guards.retain(|g| !g.temp),
+                    _ => {}
+                }
+            }
+            let in_wrapper = self.fn_of[i]
+                .is_some_and(|idx| order.wrappers.contains(&self.fn_names[idx]));
+            if self.test_mask[i] || in_wrapper {
+                i += 1;
+                continue;
+            }
+            // drop(name) releases a named guard early.
+            if t.kind == Kind::Ident && t.text == "drop" && self.next_is(i, "(") {
+                if let Some(name) = toks.get(i + 2).filter(|n| n.kind == Kind::Ident) {
+                    guards.retain(|g| g.name.as_deref() != Some(name.text.as_str()));
+                }
+            }
+            let mut acquired: Option<String> = None;
+            if t.kind == Kind::Ident
+                && (t.text == "lock" || t.text == "try_lock")
+                && self.prev_is(i, ".")
+                && self.next_is(i, "(")
+            {
+                acquired = Some(match toks.get(i.wrapping_sub(2)) {
+                    Some(r) if i >= 2 && r.kind == Kind::Ident => r.text.clone(),
+                    _ => "?".to_string(),
+                });
+            } else if t.kind == Kind::Ident
+                && order.wrappers.contains(&t.text)
+                && self.next_is(i, "(")
+            {
+                // Receiver of a wrapper call: last ident in the arg list.
+                let mut d = 0i64;
+                let mut j = i + 1;
+                let mut last: Option<String> = None;
+                while j < toks.len() {
+                    let tj = &toks[j];
+                    if tj.kind == Kind::Punct && tj.text == "(" {
+                        d += 1;
+                    } else if tj.kind == Kind::Punct && tj.text == ")" {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    } else if tj.kind == Kind::Ident {
+                        last = Some(tj.text.clone());
+                    }
+                    j += 1;
+                }
+                acquired = Some(last.unwrap_or_else(|| "?".to_string()));
+            }
+            if let Some(lock) = acquired {
+                let rank = match order.rank.get(&lock) {
+                    Some(&r) => r,
+                    None => {
+                        found.push((
+                            t.line,
+                            L4_UNDECLARED,
+                            format!("lock on `{lock}` is not declared in lock_order.txt"),
+                        ));
+                        -1
+                    }
+                };
+                for g in &guards {
+                    if rank >= 0 && g.rank >= 0 && rank <= g.rank {
+                        found.push((
+                            t.line,
+                            L4_ORDER,
+                            format!(
+                                "lock `{lock}` (rank {rank}) acquired while `{}` (rank {}) may \
+                                 be held (declared order violated)",
+                                g.lock, g.rank
+                            ),
+                        ));
+                    }
+                }
+                // Statement-`let` binding => guard lives to end of block;
+                // `if let` / `while let` and bare temporaries => to `;`.
+                let mut name: Option<String> = None;
+                let mut temp = true;
+                let mut j = i;
+                while j > 0 {
+                    j -= 1;
+                    let tj = &toks[j];
+                    if tj.kind == Kind::Punct && (tj.text == ";" || tj.text == "{" || tj.text == "}")
+                    {
+                        break;
+                    }
+                    if tj.kind == Kind::Ident && tj.text == "let" {
+                        let cond = j > 0
+                            && toks[j - 1].kind == Kind::Ident
+                            && (toks[j - 1].text == "if" || toks[j - 1].text == "while");
+                        if !cond {
+                            let mut x = j + 1;
+                            while toks.get(x).is_some_and(|t| t.kind == Kind::Ident && t.text == "mut")
+                            {
+                                x += 1;
+                            }
+                            if let Some(b) = toks.get(x).filter(|t| t.kind == Kind::Ident) {
+                                name = Some(b.text.clone());
+                                temp = false;
+                            }
+                        }
+                        break;
+                    }
+                }
+                guards.push(Guard {
+                    rank,
+                    lock,
+                    name,
+                    depth,
+                    temp,
+                });
+                i += 1;
+                continue;
+            }
+            if !guards.is_empty()
+                && t.kind == Kind::Ident
+                && IO_CALLS.contains(&t.text.as_str())
+                && self.prev_is(i, ".")
+                && self.next_is(i, "(")
+            {
+                let held: Vec<&str> = guards.iter().map(|g| g.lock.as_str()).collect();
+                found.push((
+                    t.line,
+                    L4_HELD,
+                    format!(
+                        "blocking call `.{}()` while lock(s) held: {}",
+                        t.text,
+                        held.join(", ")
+                    ),
+                ));
+            }
+            i += 1;
+        }
+        for (line, lint, msg) in found {
+            self.emit(line, lint, msg);
+        }
+    }
+
+    // ---- L5: FP determinism ----
+    fn l5(&mut self) {
+        let mut found: Vec<(usize, &'static str, String)> = Vec::new();
+        for i in 0..self.toks.len() {
+            if self.test_mask[i] {
+                continue;
+            }
+            let t = &self.toks[i];
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let name = t.text.as_str();
+            if name == "HashMap" || name == "HashSet" {
+                found.push((
+                    t.line,
+                    L5_HASH,
+                    format!(
+                        "`{name}` in a reassociation-sensitive module (iteration order is \
+                         nondeterministic; use BTreeMap/BTreeSet)"
+                    ),
+                ));
+            }
+            if (name == "sum" || name == "product") && self.prev_is(i, ".") {
+                // `.sum::<T>()` with an integer T is order-independent.
+                let typed_int = self.next_is(i, ":")
+                    && self
+                        .toks
+                        .get(i + 3)
+                        .is_some_and(|t| t.kind == Kind::Punct && t.text == "<")
+                    && self
+                        .toks
+                        .get(i + 4)
+                        .is_some_and(|t| t.kind == Kind::Ident && INT_TYPES.contains(&t.text.as_str()));
+                if !typed_int {
+                    found.push((
+                        t.line,
+                        L5_SUM,
+                        format!(
+                            "float-ambiguous `.{name}()` accumulation (spell the accumulator: \
+                             explicit loop, or turbofish an integer type)"
+                        ),
+                    ));
+                }
+            }
+        }
+        for (line, lint, msg) in found {
+            self.emit(line, lint, msg);
+        }
+    }
+
+    /// Apply in-source allows: an allow suppresses matching findings on
+    /// its own line or the next line, and must suppress at least one.
+    fn apply_allows(mut self) -> FileReport {
+        let mut kept: Vec<Finding> = Vec::new();
+        for f in self.findings.into_iter() {
+            if f.lint.starts_with("A0.") {
+                kept.push(f);
+                continue;
+            }
+            let mut suppressed = false;
+            for a in self.allows.iter_mut() {
+                if a.lint == f.lint && (f.line == a.line || f.line == a.line + 1) {
+                    suppressed = true;
+                    a.used = true;
+                    break;
+                }
+            }
+            if !suppressed {
+                kept.push(f);
+            }
+        }
+        for a in &self.allows {
+            if !a.used {
+                kept.push(Finding {
+                    file: self.rel.to_string(),
+                    line: a.line,
+                    lint: A0_STALE_ALLOW,
+                    msg: format!("allow for {} suppresses nothing (remove it)", a.lint),
+                });
+            }
+        }
+        FileReport {
+            findings: kept,
+            hot_fns: self.hot.iter().map(|h| h.name.clone()).collect(),
+            wire: self.wire,
+            allows: self
+                .allows
+                .into_iter()
+                .map(|a| AllowSite {
+                    file: self.rel.to_string(),
+                    line: a.line,
+                    lint: a.lint,
+                    reason: a.reason,
+                })
+                .collect(),
+        }
+    }
+}
+
+fn parse_group(rest: &str) -> Option<String> {
+    let close = rest.find(')')?;
+    let id = &rest[..close];
+    let tail = rest[close + 1..].trim();
+    let ok = !id.is_empty()
+        && tail.is_empty()
+        && id
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+    if ok {
+        Some(id.to_string())
+    } else {
+        None
+    }
+}
+
+/// Lint one file.  `rel` is the path relative to `rust/src/` and selects
+/// the scope mask; the L3 wire comparison happens later, across files.
+pub fn lint_file(rel: &str, src: &str, order: &LockOrder) -> FileReport {
+    let toks = crate::lexer::lex(src);
+    let mut pass = FilePass::new(rel, &toks);
+    let scope = scope_for(rel);
+    pass.l1();
+    if scope.l2 {
+        pass.l2(scope.l2_index);
+    }
+    if scope.l4 {
+        pass.l4(order);
+    }
+    if scope.l5 {
+        pass.l5();
+    }
+    pass.apply_allows()
+}

@@ -1,0 +1,79 @@
+//! CLI for `regnde-analyze` (see lib.rs and DESIGN.md §Static Analysis).
+//!
+//! ```text
+//! cargo run -p regnde-analyze                  # advisory: print findings, exit 0
+//! cargo run -p regnde-analyze -- --deny-all    # CI mode: exit 1 on any finding
+//! cargo run -p regnde-analyze -- --list-allows # inventory of allow sites
+//! cargo run -p regnde-analyze -- --root <dir>  # lint a different checkout
+//! ```
+
+use std::env;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() {
+    eprintln!("usage: regnde-analyze [--root <repo>] [--deny-all] [--list-allows]");
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut deny = false;
+    let mut list_allows = false;
+    let mut args = env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    usage();
+                    return ExitCode::from(2);
+                }
+            },
+            "--deny-all" => deny = true,
+            "--list-allows" => list_allows = true,
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("regnde-analyze: unknown flag `{other}`");
+                usage();
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = match regnde_analyze::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("regnde-analyze: {e}");
+            return ExitCode::from(3);
+        }
+    };
+
+    if list_allows {
+        for a in &report.allows {
+            println!("{}:{} {} -- {}", a.file, a.line, a.lint, a.reason);
+        }
+        println!("{} allow site(s)", report.allows.len());
+        return ExitCode::SUCCESS;
+    }
+
+    for f in &report.findings {
+        println!("{}:{}: {}: {}", f.file, f.line, f.lint, f.msg);
+    }
+    let literals: usize = report.wire_groups.values().sum();
+    println!(
+        "analyze: {} finding(s), {} hot-path fn(s), {} wire literal(s) in {} group(s), \
+         {} allow site(s)",
+        report.findings.len(),
+        report.hot_fns.len(),
+        literals,
+        report.wire_groups.len(),
+        report.allows.len()
+    );
+    if deny && !report.findings.is_empty() {
+        return ExitCode::from(1);
+    }
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,207 @@
+//! Known-bad fixtures: each lint must fire with exact file:line
+//! diagnostics, escapes must suppress, and broken escapes must be
+//! findings themselves (DESIGN.md §Static Analysis).
+
+use std::fs;
+use std::path::Path;
+
+use regnde_analyze::lints::{
+    A0_DANGLING_HOT, A0_MISSING_REASON, A0_STALE_ALLOW, A0_STALE_BASELINE, L1_ALLOC, L2_INDEX,
+    L2_PANIC, L3_WIRE, L4_HELD, L4_ORDER, L4_UNDECLARED, L5_HASH, L5_SUM,
+};
+use regnde_analyze::{run_sources, BaselineEntry, Config, Finding, RegistryEntry};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+fn lint(rel: &str, name: &str, cfg: &Config) -> Vec<Finding> {
+    run_sources(&[(rel.to_string(), fixture(name))], cfg).findings
+}
+
+fn lines(findings: &[Finding]) -> Vec<(usize, &'static str)> {
+    findings.iter().map(|f| (f.line, f.lint)).collect()
+}
+
+#[test]
+fn l1_hot_path_alloc_fires_line_exactly() {
+    let cfg = Config::default();
+    let found = lint("util/l1_hot_alloc.rs", "l1_hot_alloc.rs", &cfg);
+    assert_eq!(
+        lines(&found),
+        vec![
+            (6, L1_ALLOC),
+            (7, L1_ALLOC),
+            (8, L1_ALLOC),
+            (9, L1_ALLOC),
+            (23, A0_DANGLING_HOT),
+        ]
+    );
+    assert!(found[0].msg.contains("`.push()` in hot-path fn `hot`"));
+    assert!(found[1].msg.contains("`format!`"));
+    assert!(found[3].msg.contains("`Vec::`"));
+    // Both annotated fns are tracked; the un-annotated one is not.
+    let report = run_sources(
+        &[("util/l1_hot_alloc.rs".to_string(), fixture("l1_hot_alloc.rs"))],
+        &cfg,
+    );
+    let names: Vec<&str> = report.hot_fns.iter().map(|(_, n)| n.as_str()).collect();
+    assert_eq!(names, ["hot", "hot_clean"]);
+}
+
+#[test]
+fn l2_panic_freedom_fires_and_allows_suppress() {
+    let cfg = Config::default();
+    let found = lint("serve/l2_panic.rs", "l2_panic.rs", &cfg);
+    assert_eq!(
+        lines(&found),
+        vec![
+            (5, L2_PANIC),
+            (6, L2_INDEX),
+            (8, L2_PANIC),
+            (12, A0_MISSING_REASON),
+            (13, L2_PANIC),
+            (17, A0_STALE_ALLOW),
+        ]
+    );
+    assert!(found[1].msg.contains("slice indexing"));
+    assert!(found[3].msg.contains("needs a reason"));
+    assert!(found[5].msg.contains("suppresses nothing"));
+    // The documented allow on line 10 suppressed the `.expect()` on the
+    // next line: no finding on line 11.
+    assert!(!found.iter().any(|f| f.line == 11));
+}
+
+#[test]
+fn l2_index_is_serve_scoped() {
+    // The same source at a solvers/ path: indexing is allowed there, the
+    // panic-family lints still fire.
+    let cfg = Config::default();
+    let found = lint("solvers/l2_panic.rs", "l2_panic.rs", &cfg);
+    assert!(found.iter().any(|f| f.lint == L2_PANIC));
+    assert!(!found.iter().any(|f| f.lint == L2_INDEX));
+    // Line 17's allow(index) is now doubly stale — still reported.
+    assert!(found.iter().any(|f| f.line == 17 && f.lint == A0_STALE_ALLOW));
+}
+
+#[test]
+fn l3_wire_registry_drift_fires_both_directions() {
+    let cfg = Config {
+        registry: vec![
+            RegistryEntry {
+                group: "fixture-group".to_string(),
+                literal: "fixture_tag".to_string(),
+                line: 1,
+            },
+            RegistryEntry {
+                group: "fixture-group".to_string(),
+                literal: "ghost_tag".to_string(),
+                line: 2,
+            },
+        ],
+        ..Config::default()
+    };
+    let found = lint("util/l3_wire.rs", "l3_wire.rs", &cfg);
+    assert_eq!(found.len(), 2);
+    let registry_side = &found[0];
+    assert_eq!(
+        (registry_side.file.as_str(), registry_side.line, registry_side.lint),
+        ("(wire_registry.txt)", 2, L3_WIRE)
+    );
+    assert!(registry_side.msg.contains("stale registry entry `ghost_tag`"));
+    let code_side = &found[1];
+    assert_eq!(
+        (code_side.file.as_str(), code_side.line, code_side.lint),
+        ("util/l3_wire.rs", 8, L3_WIRE)
+    );
+    assert!(code_side.msg.contains("`unregistered_tag`"));
+    assert!(code_side.msg.contains("missing from wire_registry.txt"));
+}
+
+#[test]
+fn l3_wire_clean_when_registry_matches() {
+    let cfg = Config {
+        registry: vec![
+            RegistryEntry {
+                group: "fixture-group".to_string(),
+                literal: "fixture_tag".to_string(),
+                line: 1,
+            },
+            RegistryEntry {
+                group: "fixture-group".to_string(),
+                literal: "unregistered_tag".to_string(),
+                line: 2,
+            },
+        ],
+        ..Config::default()
+    };
+    let found = lint("util/l3_wire.rs", "l3_wire.rs", &cfg);
+    assert!(found.is_empty(), "{found:?}");
+}
+
+#[test]
+fn l4_lock_discipline_fires_line_exactly() {
+    let mut cfg = Config::default();
+    cfg.order.rank.insert("queues".to_string(), 10);
+    cfg.order.rank.insert("stats".to_string(), 20);
+    let found = lint("serve/l4_lock.rs", "l4_lock.rs", &cfg);
+    assert_eq!(
+        lines(&found),
+        vec![(18, L4_HELD), (25, L4_ORDER), (36, L4_UNDECLARED)]
+    );
+    assert!(found[0].msg.contains("`.write_all()` while lock(s) held: stats"));
+    assert!(found[1].msg.contains("rank 10"));
+    assert!(found[1].msg.contains("rank 20"));
+    assert!(found[2].msg.contains("`other`"));
+}
+
+#[test]
+fn l5_fp_determinism_fires_line_exactly() {
+    let cfg = Config::default();
+    let found = lint("solvers/l5_fp.rs", "l5_fp.rs", &cfg);
+    assert_eq!(
+        lines(&found),
+        vec![
+            (3, L5_HASH),
+            (5, L5_HASH),
+            (6, L5_HASH),
+            (14, L5_SUM),
+            (18, L5_SUM),
+        ]
+    );
+    assert!(found[0].msg.contains("BTreeMap"));
+    assert!(found[3].msg.contains("float-ambiguous"));
+    // Out of scope (serve/ is not reassociation-sensitive): silent.
+    assert!(lint("serve/l5_fp.rs", "l5_fp.rs", &cfg).is_empty());
+}
+
+#[test]
+fn baseline_suppresses_by_file_and_goes_stale() {
+    let cfg = Config {
+        baseline: vec![
+            BaselineEntry {
+                lint: L5_SUM.to_string(),
+                file: "solvers/l5_fp.rs".to_string(),
+                reason: "fixture".to_string(),
+                line: 1,
+            },
+            BaselineEntry {
+                lint: L1_ALLOC.to_string(),
+                file: "solvers/does_not_exist.rs".to_string(),
+                reason: "fixture".to_string(),
+                line: 2,
+            },
+        ],
+        ..Config::default()
+    };
+    let found = lint("solvers/l5_fp.rs", "l5_fp.rs", &cfg);
+    assert!(!found.iter().any(|f| f.lint == L5_SUM), "{found:?}");
+    assert!(found.iter().any(|f| f.lint == L5_HASH));
+    let stale: Vec<&Finding> = found.iter().filter(|f| f.lint == A0_STALE_BASELINE).collect();
+    assert_eq!(stale.len(), 1);
+    assert_eq!(stale[0].line, 2);
+    assert!(stale[0].msg.contains("does_not_exist"));
+}
