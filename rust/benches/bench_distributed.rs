@@ -1,0 +1,212 @@
+//! Distributed-training benchmark (ISSUE 9 acceptance).
+//!
+//! Measures epoch wall-clock for data-parallel `grad_step` sharding over
+//! loopback `Worker` processes at 1, 2 and 4 workers (shards == workers),
+//! against the plain single-process native backend, and reports scaling
+//! efficiency `t_1 / (n * t_n)`.  Loopback workers share this machine's
+//! cores, so efficiency is an upper-bound sanity signal (the wire +
+//! reduction overhead), not a cluster measurement.
+//!
+//! Also asserts the determinism guarantee under timing noise: two
+//! back-to-back distributed epochs from the same state produce
+//! bit-identical parameters.
+//!
+//! Emits `BENCH_distributed.json` at the repo root (schema in DESIGN.md
+//! §Perf).
+//!
+//! Scale knobs (env):
+//!   REGNDE_BENCH_EPOCHS  measured epochs per config   (default 2)
+//!   REGNDE_BENCH_ITERS   optimizer steps per epoch    (default 8)
+//!   REGNDE_BENCH_BATCH   classification batch rows    (default 64)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use regnde::dist::{DistBackend, RemoteOpts, Worker, WorkerHandle, WorkerOpts};
+use regnde::runtime::{Backend, NativeBackend, StepCoefs, TrainData, TrainState};
+use regnde::util::cli::env_usize;
+use regnde::util::json::{obj, Json};
+use regnde::util::rng::Rng;
+use regnde::util::tablefmt::Table;
+
+const MODEL: &str = "mnist_node";
+const IMG_DIM: usize = 784;
+const CLASSES: usize = 10;
+
+fn classify_batch(b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; b * IMG_DIM];
+    rng.fill_normal(&mut x, 0.5);
+    let mut y = vec![0.0f32; b * CLASSES];
+    for row in 0..b {
+        y[row * CLASSES + rng.below(CLASSES)] = 1.0;
+    }
+    (x, y)
+}
+
+struct ConfigResult {
+    workers: usize,
+    epoch_wall_s: f64,
+    final_loss: f64,
+}
+
+/// Run `epochs` epochs of `iters` steps on `backend` from a fresh state;
+/// returns mean epoch wall-clock and the last step's loss.
+fn run_epochs(
+    backend: &dyn Backend,
+    x: &[f32],
+    y: &[f32],
+    epochs: usize,
+    iters: usize,
+) -> (f64, f64, Vec<f32>) {
+    let info = backend.model(MODEL).expect("model info");
+    let mut state = TrainState {
+        params: backend.init_params(MODEL, 11).expect("init"),
+        opt_state: vec![0.0; info.opt_state_size],
+        iter: 0,
+    };
+    let data = TrainData::Classify { x, y };
+    let mut last_loss = f64::NAN;
+    let t0 = Instant::now();
+    for epoch in 0..epochs {
+        for i in 0..iters {
+            let coefs = StepCoefs {
+                lr: 0.05,
+                seed: (epoch * iters + i) as u32,
+                ..Default::default()
+            };
+            let m = backend
+                .train_step(MODEL, false, 0, &mut state, &data, &coefs)
+                .expect("train step");
+            last_loss = m.loss;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64() / epochs.max(1) as f64;
+    (wall, last_loss, state.params)
+}
+
+fn main() {
+    let epochs = env_usize("REGNDE_BENCH_EPOCHS", 2).max(1);
+    let iters = env_usize("REGNDE_BENCH_ITERS", 8).max(1);
+    let batch = env_usize("REGNDE_BENCH_BATCH", 64).max(8);
+    let (x, y) = classify_batch(batch, 0xBE7C);
+
+    // ---- single-process baseline (no sharding at all) -----------------
+    let plain = NativeBackend::new();
+    let (t_plain, plain_loss, _) = run_epochs(&plain, &x, &y, epochs, iters);
+    assert!(plain_loss.is_finite(), "baseline diverged");
+
+    // ---- 1 / 2 / 4 loopback workers, shards == workers ----------------
+    let mut results: Vec<ConfigResult> = Vec::new();
+    for n in [1usize, 2, 4] {
+        let handles: Vec<WorkerHandle> = (0..n)
+            .map(|_| {
+                Worker::spawn(
+                    Arc::new(NativeBackend::new()),
+                    WorkerOpts::default(),
+                    "127.0.0.1:0",
+                )
+                .expect("spawn worker")
+            })
+            .collect();
+        let addrs: Vec<String> = handles.iter().map(|h| h.addr.to_string()).collect();
+        let backend = DistBackend::remote(NativeBackend::new(), &addrs, Some(n), RemoteOpts::default())
+            .expect("remote backend");
+
+        // Warm one step (connection establishment) outside the clock.
+        let (_, _, params_a) = run_epochs(&backend, &x, &y, 1, 1);
+        let (wall, loss, _) = run_epochs(&backend, &x, &y, epochs, iters);
+        assert!(loss.is_finite(), "{n}-worker config diverged");
+
+        // Determinism under timing noise: replay the warmup epoch.
+        let (_, _, params_b) = run_epochs(&backend, &x, &y, 1, 1);
+        assert_eq!(params_a.len(), params_b.len());
+        for (i, (a, b)) in params_a.iter().zip(&params_b).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{n}-worker replay drifted at param {i}"
+            );
+        }
+
+        results.push(ConfigResult {
+            workers: n,
+            epoch_wall_s: wall,
+            final_loss: loss,
+        });
+        for h in handles {
+            h.kill();
+        }
+    }
+
+    let t1 = results
+        .first()
+        .map(|r| r.epoch_wall_s)
+        .unwrap_or(f64::NAN);
+
+    // ---- report -------------------------------------------------------
+    let mut table = Table::new(
+        "Distributed — data-parallel grad_step over loopback workers",
+        &["config", "epoch wall s", "speedup vs 1w", "efficiency"],
+    );
+    table.row(vec![
+        "single-process".into(),
+        format!("{t_plain:.3}"),
+        "-".into(),
+        "-".into(),
+    ]);
+    for r in &results {
+        let speedup = t1 / r.epoch_wall_s.max(1e-9);
+        let eff = speedup / r.workers as f64;
+        table.row(vec![
+            format!("{} worker(s)", r.workers),
+            format!("{:.3}", r.epoch_wall_s),
+            format!("{speedup:.2}x"),
+            format!("{eff:.2}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---- emit BENCH_distributed.json at the repo root -----------------
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let speedup = t1 / r.epoch_wall_s.max(1e-9);
+            obj([
+                ("workers", Json::from(r.workers)),
+                ("shards", Json::from(r.workers)),
+                ("epoch_wall_s", Json::from(r.epoch_wall_s)),
+                ("speedup_vs_1worker", Json::from(speedup)),
+                ("scaling_efficiency", Json::from(speedup / r.workers as f64)),
+                ("final_loss", Json::from(r.final_loss)),
+            ])
+        })
+        .collect();
+    let report = obj([
+        ("schema", Json::from("bench_distributed/v1")),
+        ("model", Json::from(MODEL)),
+        ("single_process_epoch_wall_s", Json::from(t_plain)),
+        ("configs", Json::Arr(rows)),
+        (
+            "meta",
+            obj([
+                ("epochs", Json::from(epochs)),
+                ("iters_per_epoch", Json::from(iters)),
+                ("batch_rows", Json::from(batch)),
+                (
+                    "available_parallelism",
+                    Json::from(
+                        std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                    ),
+                ),
+            ]),
+        ),
+    ]);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_distributed.json");
+    std::fs::write(&path, report.to_string_pretty()).expect("write bench report");
+    println!("wrote {}", path.display());
+}

@@ -60,6 +60,31 @@ impl BudgetRouter {
         self.rung
     }
 
+    /// The sliding attempt-usage window (descent evidence) — persisted
+    /// by checkpoint v2 so a resumed run replays descent decisions
+    /// bit-identically to the uninterrupted run.
+    pub fn window(&self) -> &[f64] {
+        &self.window
+    }
+
+    /// Restore a persisted ladder position (checkpoint resume): the
+    /// rung plus the descent-evidence window.  Errors on a rung outside
+    /// this ladder (e.g. a checkpoint from a different model).
+    pub fn restore(&mut self, rung: usize, window: &[f64]) -> Result<()> {
+        if rung >= self.budgets.len() {
+            bail!(
+                "checkpoint rung {rung} out of range for a {}-rung ladder",
+                self.budgets.len()
+            );
+        }
+        self.rung = rung;
+        self.window = window.to_vec();
+        if self.window.len() > self.window_len {
+            self.window.drain(..self.window.len() - self.window_len);
+        }
+        Ok(())
+    }
+
     /// Step budget of the current rung.
     pub fn budget(&self) -> usize {
         self.budgets[self.rung]
@@ -112,6 +137,22 @@ impl BudgetRouter {
 mod tests {
     use super::*;
     use crate::util::propcheck::{check, ensure};
+
+    #[test]
+    fn restore_validates_and_round_trips() {
+        let mut r = BudgetRouter::new(vec![16, 32, 64]).unwrap();
+        assert!(r.restore(3, &[]).is_err(), "rung past the ladder must fail");
+        r.restore(1, &[4.0, 5.0]).unwrap();
+        assert_eq!(r.rung(), 1);
+        assert_eq!(r.window(), &[4.0, 5.0]);
+        // A resumed router behaves exactly like one that lived through
+        // the same observations: filling the window to 16 low-usage
+        // steps descends.
+        for _ in 0..14 {
+            assert!(!r.observe(5.0, true));
+        }
+        assert_eq!(r.rung(), 0, "restored window must count toward descent");
+    }
 
     #[test]
     fn rejects_bad_ladders() {

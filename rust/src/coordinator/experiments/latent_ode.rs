@@ -24,17 +24,31 @@ const T: usize = 16;
 const D: usize = physionet_synth::CHANNELS;
 
 pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    run_with(backend, method, opts, None)
+}
+
+/// [`run`] continuing from a checkpointed training position
+/// (`opts.epochs` = additional epochs; see `super::ResumeState`).
+pub fn run_with(
+    backend: &dyn Backend,
+    method: Method,
+    opts: super::TrainOpts,
+    resume: Option<&super::ResumeState>,
+) -> Result<RunResult> {
     let info = backend.model(MODEL)?;
     let get = |k: &str| -> f64 { info.hyper.get(k).copied().unwrap_or(0.0) };
+    let epoch0 = resume.map_or(0, |r| r.epochs_done);
 
     let lr = InvDecay {
         lr0: get("lr"),
         gamma: get("inv_decay"),
     };
+    // Anneals over the whole run, completed epochs included, so resume
+    // sees the same coefficient at epoch e as the uninterrupted run.
     let coef_e = method.er.then(|| ExpAnneal {
         start: get("coef_e_start"),
         end: get("coef_e_end"),
-        total_epochs: opts.epochs,
+        total_epochs: epoch0 + opts.epochs,
     });
     let coef_s = if method.sr { get("coef_s") } else { 0.0 };
     let coef_l = if method.lr { get("coef_l") } else { 0.0 };
@@ -55,6 +69,20 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
     let mut rng = Rng::new(opts.seed ^ 0x7EED);
     let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
 
+    if let Some(r) = resume {
+        super::apply_resume(&mut state, &mut router, r)?;
+    }
+    // Fast-forward the batch order and RNG streams past the completed
+    // epochs, replaying the exact per-iteration call order (batch draw,
+    // optional STEER grid perturbation, seed draw).
+    for _ in 0..epoch0 * opts.iters_per_epoch {
+        let _ = batcher.next_batch();
+        if method.steer {
+            let _ = steer::perturb_grid(&train.ts, &mut rng);
+        }
+        let _ = rng.next_u32();
+    }
+
     let sz = T * D;
     backend.warm(MODEL, method.taynode)?;
 
@@ -62,7 +90,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
     let mut epochs_out = Vec::with_capacity(opts.epochs);
     let (mut bx, mut bm) = (Vec::new(), Vec::new());
 
-    for epoch in 0..opts.epochs {
+    for epoch in epoch0..epoch0 + opts.epochs {
         let mut acc = EpochAccumulator::default();
         let t0 = std::time::Instant::now();
         sw.start();
@@ -166,6 +194,11 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         final_test_loss: test_eval.loss,
         escalations: router.escalations,
         descents: router.descents,
+        final_opt_state: state.opt_state,
+        final_iter: state.iter,
+        final_rung: router.rung(),
+        final_window: router.window().to_vec(),
+        epochs_done: epoch0 + opts.epochs,
         final_params: state.params,
     })
 }

@@ -57,8 +57,23 @@ pub fn coefficients(backend: &dyn Backend, method: Method, epochs: usize) -> Res
 }
 
 pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    run_with(backend, method, opts, None)
+}
+
+/// [`run`] continuing from a checkpointed training position
+/// (`opts.epochs` = additional epochs; see `super::ResumeState`).
+pub fn run_with(
+    backend: &dyn Backend,
+    method: Method,
+    opts: super::TrainOpts,
+    resume: Option<&super::ResumeState>,
+) -> Result<RunResult> {
     let info = backend.model(MODEL)?;
-    let coefs = coefficients(backend, method, opts.epochs)?;
+    let epoch0 = resume.map_or(0, |r| r.epochs_done);
+    // Schedules anneal over the *whole* run, completed epochs included,
+    // so a resumed run sees the same coefficient at epoch e as the
+    // uninterrupted one.
+    let coefs = coefficients(backend, method, epoch0 + opts.epochs)?;
 
     // Data: synthetic MNIST (DESIGN.md §4 substitution).
     let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);
@@ -75,6 +90,20 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
     let mut rng = Rng::new(opts.seed ^ 0x7EED);
     let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
 
+    if let Some(r) = resume {
+        super::apply_resume(&mut state, &mut router, r)?;
+    }
+    // Fast-forward the batch order and RNG streams past the completed
+    // epochs, replaying the exact per-iteration call order of the
+    // training loop (batch draw, optional STEER draw, seed draw).
+    for _ in 0..epoch0 * opts.iters_per_epoch {
+        let _ = batcher.next_batch();
+        if let Some(s) = &coefs.steer {
+            let _ = s.sample(&mut rng);
+        }
+        let _ = rng.next_u32();
+    }
+
     // Pre-compile every rung + the predict path so the stopwatch measures
     // steady-state training, not PJRT JIT (native: no-op).
     backend.warm(MODEL, method.taynode)?;
@@ -83,7 +112,7 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
     let mut epochs_out = Vec::with_capacity(opts.epochs);
     let (mut bx, mut by) = (Vec::new(), Vec::new());
 
-    for epoch in 0..opts.epochs {
+    for epoch in epoch0..epoch0 + opts.epochs {
         let mut acc = EpochAccumulator::default();
         let epoch_t0 = std::time::Instant::now();
         sw.start();
@@ -176,6 +205,11 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         final_test_loss: test_eval.loss,
         escalations: router.escalations,
         descents: router.descents,
+        final_opt_state: state.opt_state,
+        final_iter: state.iter,
+        final_rung: router.rung(),
+        final_window: router.window().to_vec(),
+        epochs_done: epoch0 + opts.epochs,
         final_params: state.params,
     })
 }

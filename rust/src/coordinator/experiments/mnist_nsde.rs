@@ -20,6 +20,17 @@ pub const MODEL: &str = "mnist_nsde";
 const BATCH: usize = 32;
 
 pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Result<RunResult> {
+    run_with(backend, method, opts, None)
+}
+
+/// [`run`] continuing from a checkpointed training position
+/// (`opts.epochs` = additional epochs; see `super::ResumeState`).
+pub fn run_with(
+    backend: &dyn Backend,
+    method: Method,
+    opts: super::TrainOpts,
+    resume: Option<&super::ResumeState>,
+) -> Result<RunResult> {
     let info = backend.model(MODEL)?;
     let get = |k: &str| -> f64 { info.hyper.get(k).copied().unwrap_or(0.0) };
     let lr = InvDecay {
@@ -44,13 +55,25 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
     let mut rng = Rng::new(opts.seed ^ 0x51DE);
     let mut batcher = Batcher::new(train.n, BATCH, opts.seed);
 
+    let epoch0 = resume.map_or(0, |r| r.epochs_done);
+    if let Some(r) = resume {
+        super::apply_resume(&mut state, &mut router, r)?;
+    }
+    // Fast-forward the batch order and the per-iteration seed stream
+    // past the completed epochs, in the exact per-iteration call order
+    // the training loop uses.
+    for _ in 0..epoch0 * opts.iters_per_epoch {
+        let _ = batcher.next_batch();
+        let _ = rng.next_u32();
+    }
+
     backend.warm(MODEL, false)?;
 
     let mut sw = Stopwatch::new();
     let mut epochs_out = Vec::with_capacity(opts.epochs);
     let (mut bx, mut by) = (Vec::new(), Vec::new());
 
-    for epoch in 0..opts.epochs {
+    for epoch in epoch0..epoch0 + opts.epochs {
         let mut acc = EpochAccumulator::default();
         let t0 = std::time::Instant::now();
         sw.start();
@@ -140,6 +163,11 @@ pub fn run(backend: &dyn Backend, method: Method, opts: super::TrainOpts) -> Res
         final_test_loss: test_eval.loss,
         escalations: router.escalations,
         descents: router.descents,
+        final_opt_state: state.opt_state,
+        final_iter: state.iter,
+        final_rung: router.rung(),
+        final_window: router.window().to_vec(),
+        epochs_done: epoch0 + opts.epochs,
         final_params: state.params,
     })
 }

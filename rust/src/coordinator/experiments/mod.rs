@@ -44,6 +44,52 @@ impl Default for TrainOpts {
     }
 }
 
+/// Mid-run training position restored from a checkpoint v2 train block
+/// (`serve::checkpoint::TrainProgress`) — everything a driver needs to
+/// continue a run bit-identically to the uninterrupted one: the
+/// committed parameters, the Adam moments, the optimizer iteration (lr
+/// decay position), the budget-ladder rung + descent window, and how
+/// many epochs already ran (drivers fast-forward their RNG/batcher
+/// streams past them).  Resume assumes the same experiment, method,
+/// seed and `--iters` as the original run (DESIGN.md §Distributed).
+#[derive(Clone, Debug, Default)]
+pub struct ResumeState {
+    pub params: Vec<f32>,
+    /// Empty = fresh zeros (v1 checkpoints carry no optimizer state).
+    pub opt_state: Vec<f32>,
+    pub iter: u64,
+    pub rung: usize,
+    /// Budget-router descent-evidence window at save time.
+    pub window: Vec<f64>,
+    pub epochs_done: usize,
+}
+
+/// Install a [`ResumeState`] into a fresh driver's state + router.
+pub(crate) fn apply_resume(
+    state: &mut TrainState,
+    router: &mut BudgetRouter,
+    resume: &ResumeState,
+) -> Result<()> {
+    anyhow::ensure!(
+        resume.params.len() == state.params.len(),
+        "checkpoint has {} parameters, model wants {}",
+        resume.params.len(),
+        state.params.len()
+    );
+    state.params = resume.params.clone();
+    if !resume.opt_state.is_empty() {
+        anyhow::ensure!(
+            resume.opt_state.len() == state.opt_state.len(),
+            "checkpoint has {} optimizer values, model wants {}",
+            resume.opt_state.len(),
+            state.opt_state.len()
+        );
+        state.opt_state = resume.opt_state.clone();
+    }
+    state.iter = resume.iter;
+    router.restore(resume.rung, &resume.window)
+}
+
 /// One budget-ladder-routed train step: run on the router's rung, retry
 /// the same batch on escalation (a truncated solve's gradients are
 /// biased, so its candidate state is discarded), commit otherwise.
@@ -91,12 +137,24 @@ pub fn run_by_name(
     method: Method,
     opts: TrainOpts,
 ) -> Result<super::RunResult> {
+    run_by_name_resumed(backend, experiment, method, opts, None)
+}
+
+/// [`run_by_name`] continuing from a checkpointed training position
+/// (`--resume`); `opts.epochs` counts the *additional* epochs to run.
+pub fn run_by_name_resumed(
+    backend: &dyn Backend,
+    experiment: &str,
+    method: Method,
+    opts: TrainOpts,
+    resume: Option<&ResumeState>,
+) -> Result<super::RunResult> {
     match experiment {
-        "mnist-node" => mnist_node::run(backend, method, opts),
-        "latent-ode" | "physionet" => latent_ode::run(backend, method, opts),
-        "spiral-node" => spiral_node::run(backend, method, opts),
-        "spiral-nsde" => spiral_nsde::run(backend, method, opts),
-        "mnist-nsde" => mnist_nsde::run(backend, method, opts),
+        "mnist-node" => mnist_node::run_with(backend, method, opts, resume),
+        "latent-ode" | "physionet" => latent_ode::run_with(backend, method, opts, resume),
+        "spiral-node" => spiral_node::run_with(backend, method, opts, resume),
+        "spiral-nsde" => spiral_nsde::run_with(backend, method, opts, resume),
+        "mnist-nsde" => mnist_nsde::run_with(backend, method, opts, resume),
         other => anyhow::bail!(
             "unknown experiment {other:?} (mnist-node|latent-ode|spiral-node|\
              spiral-nsde|mnist-nsde)"

@@ -113,6 +113,20 @@ pub struct RunResult {
     /// which stays a lean metrics trace; the serving checkpoint is the
     /// parameter artifact).
     pub final_params: Vec<f32>,
+    /// Final optimizer state (Adam moments) — persisted by checkpoint
+    /// v2's train block so `--resume` continues bit-identically; kept
+    /// out of the JSON run record like `final_params`.
+    pub final_opt_state: Vec<f32>,
+    /// Completed optimizer iterations (lr-decay position).
+    pub final_iter: u64,
+    /// Budget-ladder rung at the end of the run.
+    pub final_rung: usize,
+    /// Budget-router descent window at the end of the run (checkpoint
+    /// v2; lets a resumed router replay descent decisions exactly).
+    pub final_window: Vec<f64>,
+    /// Total epochs completed across the whole run, resumed segments
+    /// included (`epoch0 + opts.epochs`).
+    pub epochs_done: usize,
 }
 
 impl RunResult {
@@ -187,6 +201,11 @@ mod tests {
             escalations: 1,
             descents: 2,
             final_params: vec![0.5; 3],
+            final_opt_state: vec![0.0; 6],
+            final_iter: 10,
+            final_rung: 1,
+            final_window: vec![3.0],
+            epochs_done: 1,
         };
         let j = r.to_json();
         assert_eq!(j.get("method").unwrap().as_str().unwrap(), "ERNODE");

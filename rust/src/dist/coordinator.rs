@@ -1,0 +1,926 @@
+//! The data-parallel training coordinator: shard → evaluate → reduce →
+//! update, behind the ordinary [`Backend`] seam.
+//!
+//! [`DistBackend`] wraps the in-process [`NativeBackend`] and implements
+//! [`Backend`], so every experiment driver (`coordinator::experiments`)
+//! and the budget-ladder router run **unchanged** on top of it.  Its
+//! `train_step`:
+//!
+//!  1. splits the batch into `shards` deterministic contiguous item
+//!     ranges ([`ShardPlan::by_count`]),
+//!  2. evaluates each occupied shard's gradient through a
+//!     [`GradExecutor`] — in-process ([`LocalExecutor`]) or on remote
+//!     workers over the dist protocol ([`RemoteExecutor`]),
+//!  3. reduces the shard gradients in a **fixed binary tree over shard
+//!     indices** (widened to f64, weighted by item fraction), and
+//!  4. applies one Adam update to the coordinator-owned optimizer
+//!     state.
+//!
+//! ## Bit-determinism guarantee (DESIGN.md §Distributed)
+//!
+//! At equal shard count, remote and local execution produce
+//! **bit-identical** parameters and metrics: shard assignment is a pure
+//! function of the shard index (`shard % workers`), the per-shard RNG
+//! seed derives only from `(step seed, shard index)`
+//! ([`shard_seed`]), f32 tensors cross the wire bit-exactly, and the
+//! reduction tree's shape and evaluation order depend only on the shard
+//! count — never on scheduling, worker count, or retry history.  With
+//! one shard, `DistBackend` reproduces the plain
+//! [`NativeBackend::train_step`] bit-for-bit (the leaf weight is
+//! exactly 1.0).
+//!
+//! ## Failure handling
+//!
+//! Transport failures (connect/read/write/timeout, frame corruption)
+//! mark the worker dead and the shard is **reassigned** to the next
+//! live worker in fixed ring order — a deterministic recompute, so the
+//! bits are unaffected.  When every worker has failed a shard, the step
+//! fails with a typed [`DistError`], which the experiment driver
+//! surfaces as a typed epoch failure.  Every read is bounded by a
+//! timeout, so the coordinator never hangs on a dead worker.  *Solver*
+//! failures (budget exhausted, non-finite state) are not transport
+//! failures: they ride back inside [`Metrics`] for the budget router to
+//! escalate or skip, exactly as in single-process training.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::protocol::{
+    data_frames, frame, frames_for_kind, read_frame_patient, DistRequest, DistResponse, Frame,
+};
+use super::sharder::ShardPlan;
+use crate::models::Adam;
+use crate::runtime::{
+    Backend, ExportedState, GradOutput, Metrics, ModelInfo, NativeBackend, StepCoefs, StepOutput,
+    TrainData, TrainState,
+};
+use crate::solvers::error::SolveErrorKind;
+use crate::util::threadpool::map_bounded;
+
+/// Typed failure of the distributed step — what an epoch fails with
+/// when the fleet cannot produce a gradient.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DistError {
+    /// Shard `shard` was offered to every configured worker and all of
+    /// them failed it (`last` is the final failure).
+    WorkersExhausted {
+        shard: usize,
+        workers: usize,
+        last: String,
+    },
+}
+
+impl fmt::Display for DistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DistError::WorkersExhausted {
+                shard,
+                workers,
+                last,
+            } => write!(
+                f,
+                "shard {shard} failed on all {workers} workers (last: {last})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+/// Per-shard RNG seed: a pure function of the step seed and the shard
+/// index.  Shard 0 keeps the step seed unchanged, so a 1-shard plan
+/// draws exactly the single-process stream.
+pub fn shard_seed(step_seed: u32, shard: usize) -> u32 {
+    step_seed.wrapping_add((shard as u32).wrapping_mul(0x9E37_79B9))
+}
+
+/// Where shard gradients are evaluated.  Implementations must be
+/// deterministic in `(shard, params, data, coefs)` — the coordinator
+/// relies on replays (after worker reassignment) reproducing the same
+/// bits.
+pub trait GradExecutor: Send + Sync {
+    /// Evaluate one shard's gradient at `params`.  Transport-level
+    /// failures are `Err`; solver failures ride inside the returned
+    /// metric block.
+    #[allow(clippy::too_many_arguments)]
+    fn shard_grad(
+        &self,
+        local: &NativeBackend,
+        shard: usize,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        params: &[f32],
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<GradOutput>;
+
+    /// Human-readable placement (for logs/benches).
+    fn describe(&self) -> String;
+}
+
+/// In-process execution: the single-process baseline the equivalence
+/// tests compare against, and the `--shards N` CLI path.
+pub struct LocalExecutor;
+
+impl GradExecutor for LocalExecutor {
+    fn shard_grad(
+        &self,
+        local: &NativeBackend,
+        _shard: usize,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        params: &[f32],
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<GradOutput> {
+        let state = TrainState {
+            params: params.to_vec(),
+            opt_state: vec![],
+            iter: 0,
+        };
+        local.grad_step(model, tay, rung, &state, data, coefs)
+    }
+
+    fn describe(&self) -> String {
+        "local".to_string()
+    }
+}
+
+/// Remote execution policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteOpts {
+    /// Per-worker TCP connect bound.
+    pub connect_timeout: Duration,
+    /// End-to-end bound on one shard request (solve time included).
+    pub request_timeout: Duration,
+    /// Poll tick for response reads within the request timeout.
+    pub read_tick: Duration,
+}
+
+impl Default for RemoteOpts {
+    fn default() -> Self {
+        RemoteOpts {
+            connect_timeout: Duration::from_secs(2),
+            request_timeout: Duration::from_secs(120),
+            read_tick: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One persistent worker connection (lazily established).
+struct WorkerConn {
+    addr: String,
+    client: Option<FrameClient>,
+    dead: bool,
+}
+
+/// What a worker answered: a gradient, or a request-level error (the
+/// worker is healthy — the *request* was refused deterministically).
+enum WorkerReply {
+    Grad(GradOutput),
+    AppError(String),
+}
+
+/// A line + frame client over one TCP stream.
+struct FrameClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl FrameClient {
+    fn connect(addr: &str, opts: &RemoteOpts) -> Result<FrameClient> {
+        let mut last: Option<std::io::Error> = None;
+        for sa in addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving worker address {addr:?}"))?
+        {
+            match TcpStream::connect_timeout(&sa, opts.connect_timeout) {
+                Ok(stream) => {
+                    stream
+                        .set_read_timeout(Some(opts.read_tick.max(Duration::from_millis(1))))?;
+                    let reader = BufReader::new(stream.try_clone()?);
+                    return Ok(FrameClient {
+                        reader,
+                        writer: stream,
+                    });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        bail!("connecting worker {addr:?} failed: {last:?}")
+    }
+
+    /// Read one response line, tolerating poll ticks until `deadline`.
+    fn read_line_deadline(&mut self, deadline: Instant) -> Result<String> {
+        let mut line = String::new();
+        loop {
+            match self.reader.read_line(&mut line) {
+                Ok(0) => bail!("worker closed the connection"),
+                Ok(_) => return Ok(line),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    ensure!(
+                        Instant::now() < deadline,
+                        "timed out waiting for worker response"
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// One grad_step exchange.  `Err` means the connection can no
+    /// longer be trusted (transport/protocol failure).
+    fn grad_step(
+        &mut self,
+        req: &DistRequest,
+        params: &[f32],
+        data: &TrainData,
+        deadline: Instant,
+    ) -> Result<WorkerReply> {
+        let mut line = req.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        Frame::f32(frame::PARAMS, params.to_vec()).write_to(&mut self.writer)?;
+        for f in data_frames(data) {
+            f.write_to(&mut self.writer)?;
+        }
+        self.writer.flush()?;
+        let resp = self.read_line_deadline(deadline)?;
+        match DistResponse::decode(resp.trim())? {
+            DistResponse::Grad { success, kind } => {
+                let keep = || Instant::now() < deadline;
+                let g = read_frame_patient(&mut self.reader, keep)?;
+                let m = read_frame_patient(&mut self.reader, keep)?;
+                Ok(WorkerReply::Grad(GradOutput {
+                    grad: g.expect_f32(frame::GRAD)?.to_vec(),
+                    metrics: m.to_metrics(success, kind)?,
+                }))
+            }
+            DistResponse::Error { msg, kind } => Ok(WorkerReply::AppError(match kind {
+                Some(k) => format!("{msg} [{}]", k.as_str()),
+                None => msg,
+            })),
+            DistResponse::Closing => bail!("worker is shutting down"),
+        }
+    }
+}
+
+/// Remote execution over the dist protocol: fixed shard→worker
+/// assignment (`shard % workers`), ring-order reassignment on worker
+/// failure, every read bounded by [`RemoteOpts`].
+pub struct RemoteExecutor {
+    conns: Vec<Mutex<WorkerConn>>,
+    opts: RemoteOpts,
+}
+
+impl RemoteExecutor {
+    pub fn new(workers: &[String], opts: RemoteOpts) -> Result<RemoteExecutor> {
+        ensure!(!workers.is_empty(), "need at least one worker address");
+        Ok(RemoteExecutor {
+            conns: workers
+                .iter()
+                .map(|a| {
+                    Mutex::new(WorkerConn {
+                        addr: a.clone(),
+                        client: None,
+                        dead: false,
+                    })
+                })
+                .collect(),
+            opts,
+        })
+    }
+
+    /// Workers not yet marked dead.
+    pub fn live_workers(&self) -> usize {
+        self.conns
+            .iter()
+            .filter(|c| !c.lock().unwrap_or_else(|p| p.into_inner()).dead)
+            .count()
+    }
+}
+
+impl GradExecutor for RemoteExecutor {
+    fn shard_grad(
+        &self,
+        _local: &NativeBackend,
+        shard: usize,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        params: &[f32],
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<GradOutput> {
+        let n = self.conns.len();
+        let start = shard % n.max(1);
+        let mut last = "no live workers".to_string();
+        // Fixed ring order: home worker first, then each successor once.
+        // A reassigned shard recomputes the identical request, so the
+        // result bits do not depend on which worker answered.
+        for k in 0..n {
+            let Some(slot) = self.conns.get((start + k) % n) else {
+                continue;
+            };
+            let mut conn = slot.lock().unwrap_or_else(|p| p.into_inner());
+            if conn.dead {
+                continue;
+            }
+            if conn.client.is_none() {
+                match FrameClient::connect(&conn.addr, &self.opts) {
+                    Ok(c) => conn.client = Some(c),
+                    Err(e) => {
+                        conn.dead = true;
+                        last = format!("{e:#}");
+                        continue;
+                    }
+                }
+            }
+            let req = DistRequest::GradStep {
+                model: model.to_string(),
+                tay,
+                rung,
+                coefs: *coefs,
+                kind: data.kind().to_string(),
+                frames: frames_for_kind(data.kind())?,
+            };
+            let deadline = Instant::now() + self.opts.request_timeout;
+            let Some(client) = conn.client.as_mut() else {
+                continue;
+            };
+            match client.grad_step(&req, params, data, deadline) {
+                Ok(WorkerReply::Grad(out)) => return Ok(out),
+                Ok(WorkerReply::AppError(msg)) => {
+                    // The worker is healthy; the request failed
+                    // deterministically.  Trying siblings gives a
+                    // different fleet the chance to disagree, then the
+                    // step fails typed.
+                    last = msg;
+                }
+                Err(e) => {
+                    // Transport failure: this worker is gone for the
+                    // rest of the run; reassign to the next in the ring.
+                    conn.dead = true;
+                    conn.client = None;
+                    last = format!("{e:#}");
+                }
+            }
+        }
+        Err(DistError::WorkersExhausted {
+            shard,
+            workers: n,
+            last,
+        }
+        .into())
+    }
+
+    fn describe(&self) -> String {
+        format!("remote({} workers)", self.conns.len())
+    }
+}
+
+/// Owned per-shard slice of a [`TrainData`] batch.
+enum ShardData {
+    Trajectory { data: Vec<f32>, ts: Vec<f32> },
+    Moments { u0: Vec<f32>, mu: Vec<f32>, var: Vec<f32>, ts: Vec<f32> },
+    Classify { x: Vec<f32>, y: Vec<f32> },
+    Series { x: Vec<f32>, mask: Vec<f32>, ts: Vec<f32> },
+}
+
+/// Rows `range` of a `[items, width]` row-major tensor.
+fn slice_rows(v: &[f32], items: usize, range: &Range<usize>) -> Result<Vec<f32>> {
+    ensure!(
+        items > 0 && v.len() % items == 0,
+        "tensor length {} is not divisible into {items} items",
+        v.len()
+    );
+    let w = v.len() / items;
+    match v.get(range.start * w..range.end * w) {
+        Some(s) => Ok(s.to_vec()),
+        None => bail!("shard range {range:?} out of bounds for {items} items"),
+    }
+}
+
+impl ShardData {
+    fn slice(data: &TrainData, items: usize, range: &Range<usize>) -> Result<ShardData> {
+        Ok(match data {
+            // Whole-batch payloads are one item: the only occupied shard
+            // carries the full tensors.
+            TrainData::Trajectory { data, ts } => {
+                ensure!(*range == (0..items), "trajectory data is unsplittable");
+                ShardData::Trajectory {
+                    data: data.to_vec(),
+                    ts: ts.to_vec(),
+                }
+            }
+            TrainData::Moments { u0, mu, var, ts } => {
+                ensure!(*range == (0..items), "moments data is unsplittable");
+                ShardData::Moments {
+                    u0: u0.to_vec(),
+                    mu: mu.to_vec(),
+                    var: var.to_vec(),
+                    ts: ts.to_vec(),
+                }
+            }
+            TrainData::Classify { x, y } => ShardData::Classify {
+                x: slice_rows(x, items, range)?,
+                y: slice_rows(y, items, range)?,
+            },
+            TrainData::Series { x, mask, ts } => ShardData::Series {
+                x: slice_rows(x, items, range)?,
+                mask: slice_rows(mask, items, range)?,
+                ts: ts.to_vec(),
+            },
+        })
+    }
+
+    fn view(&self) -> TrainData<'_> {
+        match self {
+            ShardData::Trajectory { data, ts } => TrainData::Trajectory { data, ts },
+            ShardData::Moments { u0, mu, var, ts } => TrainData::Moments { u0, mu, var, ts },
+            ShardData::Classify { x, y } => TrainData::Classify { x, y },
+            ShardData::Series { x, mask, ts } => TrainData::Series { x, mask, ts },
+        }
+    }
+}
+
+/// One reduction-tree node: the weighted f64 partial gradient plus the
+/// combined metric block.
+struct Reduced {
+    grad: Vec<f64>,
+    loss: f64,
+    metric: f64,
+    nfe: f64,
+    naccept: f64,
+    nreject: f64,
+    r_e: f64,
+    r_e2: f64,
+    r_s: f64,
+    r_l: f64,
+    r_aux: f64,
+    success: bool,
+    error: Option<SolveErrorKind>,
+}
+
+/// Leaf of the reduction tree: widen the shard's f32 gradient to f64
+/// and scale by its item fraction.  Loss/metric/regularizers combine as
+/// weighted means (weights sum to 1); solver-work counters sum
+/// unweighted; `success` ANDs; `error` keeps the lowest shard index.
+fn leaf(w: f64, out: &GradOutput) -> Reduced {
+    let m = &out.metrics;
+    Reduced {
+        grad: out.grad.iter().map(|&g| g as f64 * w).collect(),
+        loss: w * m.loss,
+        metric: w * m.metric,
+        nfe: m.nfe,
+        naccept: m.naccept,
+        nreject: m.nreject,
+        r_e: w * m.r_e,
+        r_e2: w * m.r_e2,
+        r_s: w * m.r_s,
+        r_l: w * m.r_l,
+        r_aux: w * m.r_aux,
+        success: m.success,
+        error: m.error,
+    }
+}
+
+fn combine(mut a: Reduced, b: Reduced) -> Reduced {
+    for (x, y) in a.grad.iter_mut().zip(&b.grad) {
+        *x += *y;
+    }
+    a.loss += b.loss;
+    a.metric += b.metric;
+    a.nfe += b.nfe;
+    a.naccept += b.naccept;
+    a.nreject += b.nreject;
+    a.r_e += b.r_e;
+    a.r_e2 += b.r_e2;
+    a.r_s += b.r_s;
+    a.r_l += b.r_l;
+    a.r_aux += b.r_aux;
+    a.success &= b.success;
+    // `or` keeps the earlier (lower shard index) error: deterministic
+    // because the tree combines strictly in shard-index order.
+    a.error = a.error.or(b.error);
+    a
+}
+
+/// Fixed binary-tree reduction over shard-index-ordered leaves:
+/// `((0,1),(2,3)) → (01,23) → ...`.  The tree shape is a pure function
+/// of the leaf count, so the floating-point combination order — and
+/// therefore every output bit — is identical on every run and every
+/// placement.
+fn reduce_tree(mut level: Vec<Reduced>, n_params: usize) -> Reduced {
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    match level.pop() {
+        Some(r) => r,
+        // Unreachable (callers ensure ≥ 1 leaf); keep it total.
+        None => Reduced {
+            grad: vec![0.0; n_params],
+            loss: 0.0,
+            metric: 0.0,
+            nfe: 0.0,
+            naccept: 0.0,
+            nreject: 0.0,
+            r_e: 0.0,
+            r_e2: 0.0,
+            r_s: 0.0,
+            r_l: 0.0,
+            r_aux: 0.0,
+            success: false,
+            error: None,
+        },
+    }
+}
+
+/// The distributed training backend (see module docs).
+pub struct DistBackend {
+    inner: NativeBackend,
+    exec: Box<dyn GradExecutor>,
+    shards: usize,
+}
+
+impl DistBackend {
+    /// Single-process sharded execution — the equivalence baseline and
+    /// the `--shards N` CLI path.
+    pub fn local(inner: NativeBackend, shards: usize) -> DistBackend {
+        DistBackend {
+            inner,
+            exec: Box::new(LocalExecutor),
+            shards: shards.max(1),
+        }
+    }
+
+    /// Remote execution over `workers`.  `shards` defaults to the
+    /// worker count (one shard per worker).
+    pub fn remote(
+        inner: NativeBackend,
+        workers: &[String],
+        shards: Option<usize>,
+        opts: RemoteOpts,
+    ) -> Result<DistBackend> {
+        let exec = RemoteExecutor::new(workers, opts)?;
+        Ok(DistBackend {
+            inner,
+            exec: Box::new(exec),
+            shards: shards.unwrap_or(workers.len()).max(1),
+        })
+    }
+
+    /// Wrap a custom executor (test seam).
+    pub fn with_executor(
+        inner: NativeBackend,
+        exec: Box<dyn GradExecutor>,
+        shards: usize,
+    ) -> DistBackend {
+        DistBackend {
+            inner,
+            exec,
+            shards: shards.max(1),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Placement description for logs/benches.
+    pub fn describe(&self) -> String {
+        format!("{} × {} shards", self.exec.describe(), self.shards)
+    }
+
+    /// Shard, evaluate, and tree-reduce one gradient; the f64 result
+    /// feeds Adam directly (no re-rounding between reduce and update).
+    fn sharded_grad(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<(Vec<f64>, Metrics)> {
+        let items = self.inner.shard_items(model, data)?;
+        let plan = ShardPlan::by_count(items, self.shards);
+        let jobs: Vec<(usize, Range<usize>)> = plan.occupied().collect();
+        ensure!(!jobs.is_empty(), "no occupied shards over {items} items");
+        // Slice up front (cheap, serial, deterministic) so the parallel
+        // section only runs solver work.
+        let mut sliced = Vec::with_capacity(jobs.len());
+        for (idx, range) in &jobs {
+            sliced.push((*idx, range.len(), ShardData::slice(data, items, range)?));
+        }
+        let results: Vec<Result<Reduced>> = map_bounded(
+            self.shards.max(1),
+            sliced,
+            |(idx, len, sd): (usize, usize, ShardData)| {
+                let shard_coefs = StepCoefs {
+                    seed: shard_seed(coefs.seed, idx),
+                    ..*coefs
+                };
+                let out = self.exec.shard_grad(
+                    &self.inner,
+                    idx,
+                    model,
+                    tay,
+                    rung,
+                    &state.params,
+                    &sd.view(),
+                    &shard_coefs,
+                )?;
+                ensure!(
+                    out.grad.len() == state.params.len(),
+                    "shard {idx} returned a gradient of {} values, expected {}",
+                    out.grad.len(),
+                    state.params.len()
+                );
+                Ok(leaf(len as f64 / items as f64, &out))
+            },
+        );
+        let mut leaves = Vec::with_capacity(results.len());
+        for r in results {
+            // First failure in shard-index order wins (deterministic).
+            leaves.push(r?);
+        }
+        let red = reduce_tree(leaves, state.params.len());
+        let metrics = Metrics {
+            loss: red.loss,
+            metric: red.metric,
+            nfe: red.nfe,
+            naccept: red.naccept,
+            nreject: red.nreject,
+            success: red.success,
+            error: red.error,
+            r_e: red.r_e,
+            r_e2: red.r_e2,
+            r_s: red.r_s,
+            r_l: red.r_l,
+            r_aux: red.r_aux,
+        };
+        Ok((red.grad, metrics))
+    }
+}
+
+impl Backend for DistBackend {
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.inner.models()
+    }
+
+    fn model(&self, model: &str) -> Result<ModelInfo> {
+        self.inner.model(model)
+    }
+
+    fn ladder(&self, model: &str, tay: bool) -> Result<Vec<usize>> {
+        self.inner.ladder(model, tay)
+    }
+
+    fn init_params(&self, model: &str, seed: u32) -> Result<Vec<f32>> {
+        self.inner.init_params(model, seed)
+    }
+
+    fn warm(&self, model: &str, tay: bool) -> Result<()> {
+        self.inner.warm(model, tay)
+    }
+
+    fn train_step(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<StepOutput> {
+        let (grad, metrics) = self.sharded_grad(model, tay, rung, state, data, coefs)?;
+        let mut params = state.params.clone();
+        let mut opt_state = state.opt_state.clone();
+        Adam::default().step(
+            &mut params,
+            &mut opt_state,
+            &grad,
+            coefs.lr as f64,
+            state.iter,
+        );
+        Ok(StepOutput {
+            params,
+            opt_state,
+            metrics,
+        })
+    }
+
+    /// The sharded gradient, rounded to the f32 seam dtype.  (The
+    /// internal `train_step` path keeps the reduced gradient in f64 all
+    /// the way into Adam — with one shard both views coincide.)
+    fn grad_step(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<GradOutput> {
+        let (grad, metrics) = self.sharded_grad(model, tay, rung, state, data, coefs)?;
+        Ok(GradOutput {
+            grad: grad.iter().map(|&g| g as f32).collect(),
+            metrics,
+        })
+    }
+
+    fn shard_items(&self, model: &str, data: &TrainData) -> Result<usize> {
+        self.inner.shard_items(model, data)
+    }
+
+    fn predict(
+        &self,
+        model: &str,
+        params: &[f32],
+        data: &TrainData,
+        seed: u32,
+    ) -> Result<(Vec<f32>, Metrics)> {
+        self.inner.predict(model, params, data, seed)
+    }
+
+    fn export_state(&self, model: &str, params: &[f32]) -> Result<ExportedState> {
+        self.inner.export_state(model, params)
+    }
+
+    fn import_state(&self, state: &ExportedState) -> Result<Vec<f32>> {
+        self.inner.import_state(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::spiral_node;
+
+    fn spiral_setup() -> (NativeBackend, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let be = NativeBackend::new();
+        let params = be.init_params("spiral_node", 7).unwrap();
+        let (truth, ts) = spiral_node::ground_truth();
+        (be, params, truth, ts)
+    }
+
+    #[test]
+    fn one_shard_matches_plain_train_step_bitwise() {
+        let (be, params, truth, ts) = spiral_setup();
+        let info = be.model("spiral_node").unwrap();
+        let data = TrainData::Trajectory {
+            data: &truth,
+            ts: &ts,
+        };
+        let coefs = StepCoefs {
+            coef_e: 0.1,
+            seed: 99,
+            ..Default::default()
+        };
+        let state = TrainState::new(params.clone(), info.opt_state_size);
+        let plain = be.train_step("spiral_node", false, 0, &state, &data, &coefs).unwrap();
+        let dist = DistBackend::local(NativeBackend::new(), 1);
+        let sharded = dist
+            .train_step("spiral_node", false, 0, &state, &data, &coefs)
+            .unwrap();
+        assert_eq!(plain.params, sharded.params, "1-shard params must be bit-identical");
+        assert_eq!(plain.opt_state, sharded.opt_state);
+        assert_eq!(plain.metrics.loss.to_bits(), sharded.metrics.loss.to_bits());
+        assert_eq!(plain.metrics.nfe, sharded.metrics.nfe);
+    }
+
+    #[test]
+    fn unsplittable_data_tolerates_extra_shards_bitwise() {
+        // Trajectory fits are 1 item: with 4 shards only shard 0 is
+        // occupied, so the result must equal the 1-shard plan exactly.
+        let (be, params, truth, ts) = spiral_setup();
+        let info = be.model("spiral_node").unwrap();
+        let data = TrainData::Trajectory {
+            data: &truth,
+            ts: &ts,
+        };
+        let coefs = StepCoefs {
+            seed: 5,
+            ..Default::default()
+        };
+        let state = TrainState::new(params, info.opt_state_size);
+        let one = DistBackend::local(NativeBackend::new(), 1)
+            .train_step("spiral_node", false, 0, &state, &data, &coefs)
+            .unwrap();
+        let four = DistBackend::local(NativeBackend::new(), 4)
+            .train_step("spiral_node", false, 0, &state, &data, &coefs)
+            .unwrap();
+        assert_eq!(one.params, four.params);
+        assert_eq!(one.metrics.nfe, four.metrics.nfe);
+    }
+
+    #[test]
+    fn sharded_step_is_deterministic_across_runs() {
+        let be = NativeBackend::new();
+        let info = be.model("mnist_node").unwrap();
+        let params = be.init_params("mnist_node", 1).unwrap();
+        // 4 rows of fake image data, one-hot labels.
+        let b = 4;
+        let x: Vec<f32> = (0..b * 784).map(|i| ((i % 17) as f32) / 17.0).collect();
+        let mut y = vec![0.0f32; b * 10];
+        for (r, row) in y.chunks_mut(10).enumerate() {
+            row[r % 10] = 1.0;
+        }
+        let data = TrainData::Classify { x: &x, y: &y };
+        let coefs = StepCoefs {
+            t1: 1.0,
+            seed: 1234,
+            ..Default::default()
+        };
+        let state = TrainState::new(params, info.opt_state_size);
+        let run = || {
+            DistBackend::local(NativeBackend::new(), 2)
+                .train_step("mnist_node", false, 0, &state, &data, &coefs)
+                .unwrap()
+        };
+        let a = run();
+        let b2 = run();
+        assert_eq!(a.params, b2.params, "sharded step must be reproducible");
+        assert_eq!(a.metrics.loss.to_bits(), b2.metrics.loss.to_bits());
+        // Two occupied shards contribute solver work.
+        assert!(a.metrics.nfe > 0.0);
+    }
+
+    #[test]
+    fn shard_seed_is_identity_on_shard_zero() {
+        assert_eq!(shard_seed(0xABCD, 0), 0xABCD);
+        assert_ne!(shard_seed(0xABCD, 1), 0xABCD);
+        assert_ne!(shard_seed(0xABCD, 1), shard_seed(0xABCD, 2));
+    }
+
+    #[test]
+    fn failing_executor_surfaces_typed_dist_error() {
+        struct AlwaysFails;
+        impl GradExecutor for AlwaysFails {
+            fn shard_grad(
+                &self,
+                _local: &NativeBackend,
+                shard: usize,
+                _model: &str,
+                _tay: bool,
+                _rung: usize,
+                _params: &[f32],
+                _data: &TrainData,
+                _coefs: &StepCoefs,
+            ) -> Result<GradOutput> {
+                Err(DistError::WorkersExhausted {
+                    shard,
+                    workers: 0,
+                    last: "synthetic".into(),
+                }
+                .into())
+            }
+            fn describe(&self) -> String {
+                "always-fails".into()
+            }
+        }
+        let (be, params, truth, ts) = spiral_setup();
+        let info = be.model("spiral_node").unwrap();
+        let state = TrainState::new(params, info.opt_state_size);
+        let dist = DistBackend::with_executor(NativeBackend::new(), Box::new(AlwaysFails), 2);
+        let err = dist
+            .train_step(
+                "spiral_node",
+                false,
+                0,
+                &state,
+                &TrainData::Trajectory {
+                    data: &truth,
+                    ts: &ts,
+                },
+                &StepCoefs::default(),
+            )
+            .expect_err("must fail typed");
+        assert!(
+            err.downcast_ref::<DistError>().is_some(),
+            "epoch failure must carry a typed DistError: {err:#}"
+        );
+    }
+}

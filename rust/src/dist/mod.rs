@@ -1,0 +1,41 @@
+//! Distributed data-parallel training: coordinator/worker gradient
+//! sharding with a bit-deterministic all-reduce.
+//!
+//! The subsystem splits one [`Backend::train_step`] into the
+//! `grad_step` seam (evaluate the gradient, do **not** touch the
+//! optimizer) plus a coordinator-owned reduce-and-update, so a fleet of
+//! workers can share the batch while training stays **bit-identical**
+//! to the single-process run at equal shard count.  The full contract —
+//! grad_step semantics, the determinism guarantee, failure/retry
+//! semantics, and the wire-frame grammar — is specified in
+//! **DESIGN.md §Distributed**; the protocol literals are enforced
+//! against `rust/tools/analyze/wire_registry.txt` by the `wire(dist)`
+//! static-analysis group.
+//!
+//! Layout (a peer of `solvers/`, `runtime/`, and `serve/`):
+//!
+//!  * [`sharder`] — deterministic contiguous shard plans, shared with
+//!    the in-process ensemble/moment paths.
+//!  * [`protocol`] — length-prefixed checksummed binary tensor frames
+//!    riding a line-delimited JSON control channel.
+//!  * [`worker`] — the `regnde worker` loop: serve `grad_step` requests
+//!    over TCP.
+//!  * [`coordinator`] — [`DistBackend`]: shard → evaluate (local or
+//!    remote) → fixed-tree f64 reduce → one Adam update, behind the
+//!    ordinary [`Backend`] trait so every experiment driver runs
+//!    unchanged.
+//!
+//! [`Backend`]: crate::runtime::Backend
+//! [`Backend::train_step`]: crate::runtime::Backend::train_step
+
+pub mod coordinator;
+pub mod protocol;
+pub mod sharder;
+pub mod worker;
+
+pub use coordinator::{
+    shard_seed, DistBackend, DistError, GradExecutor, LocalExecutor, RemoteExecutor, RemoteOpts,
+};
+pub use protocol::{Frame, FrameBody, FrameError, MAX_FRAME_ELEMS};
+pub use sharder::ShardPlan;
+pub use worker::{Worker, WorkerHandle, WorkerOpts};

@@ -1,0 +1,915 @@
+//! Distributed-training wire protocol: line-delimited JSON control
+//! messages with length-prefixed binary tensor frames riding the same
+//! TCP stream (`std::net` + [`util::json`] — no new dependencies).
+//!
+//! Control grammar (documented normatively in DESIGN.md §Distributed):
+//!
+//! ```text
+//! request   := grad_step | shutdown
+//! grad_step := {"op":"grad_step","model":<id>,"tay":<bool>,
+//!               "rung":<n>,"data":<kind>,"frames":<n>,
+//!               "coefs":{"lr","coef_e","coef_s","coef_l","coef_aux",
+//!                        "kl","t1","seed"}}
+//!              <PARAMS frame> <DATA frame> * frames
+//! shutdown  := {"op":"shutdown"}
+//!
+//! response  := grad | closing | error
+//! grad      := {"ok":true,"success":<bool>[,"kind":<solve-error-kind>]}
+//!              <GRAD frame> <METRICS frame>
+//! closing   := {"ok":true,"closing":true}
+//! error     := {"ok":false,"error":<string>[,"kind":<solve-error-kind>]}
+//! ```
+//!
+//! `<kind>` is the [`TrainData::kind`] string; it fixes the number and
+//! order of the DATA frames that follow (`trajectory`: data, ts ·
+//! `moments`: u0, mu, var, ts · `classify`: x, y · `series`: x, mask,
+//! ts).
+//!
+//! Binary frame grammar (all integers little-endian):
+//!
+//! ```text
+//! frame    := magic:u32 type:u8 count:u32 payload checksum:u64
+//! payload  := count × f32le   (PARAMS | DATA | GRAD)
+//!           | count × f64le   (METRICS)
+//! checksum := FNV-1a-64 over type ∥ count ∥ payload
+//! ```
+//!
+//! Floats ride as raw IEEE-754 bits, so `f32 → wire → f32` is exact by
+//! construction — and unlike the JSON number path, NaN/±inf survive
+//! (a failed shard's `loss` is NaN; that is *why* the metric block is a
+//! binary frame and not JSON numbers).  Decoding is total: truncated,
+//! corrupted, mistyped, or oversized frames return a typed
+//! [`FrameError`]; the decoder never panics and never reads past the
+//! declared length.  `count` is capped at [`MAX_FRAME_ELEMS`] *before*
+//! any allocation, so a hostile header cannot balloon memory.
+//!
+//! The `success` flag and typed [`SolveErrorKind`] ride the JSON line
+//! (as in the serving protocol, PR 6); the ten numeric [`Metrics`]
+//! fields ride the METRICS frame.
+//!
+//! [`util::json`]: crate::util::json
+//! [`TrainData::kind`]: crate::runtime::TrainData::kind
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::{Metrics, StepCoefs, TrainData};
+use crate::solvers::error::SolveErrorKind;
+use crate::util::json::{obj, Json};
+
+/// Hard cap on elements in one frame, checked before any allocation.
+/// Far above any real payload (the largest shard tensor is a few tens of
+/// thousands of floats) but small enough that a corrupt or hostile
+/// header cannot balloon memory.
+pub const MAX_FRAME_ELEMS: usize = 1 << 24;
+
+/// Every field name and value vocabulary of the dist control channel,
+/// as named constants — the single source of truth, extracted by the L3
+/// wire-stability lint (`rust/tools/analyze`, group `dist`) and diffed
+/// against the committed `wire_registry.txt`.
+// analyze: wire(dist)
+pub mod tags {
+    /// Request discriminator field.
+    pub const OP: &str = "op";
+    pub const OP_GRAD_STEP: &str = "grad_step";
+    pub const OP_SHUTDOWN: &str = "shutdown";
+    pub const MODEL: &str = "model";
+    pub const TAY: &str = "tay";
+    pub const RUNG: &str = "rung";
+    /// Shard payload kind (`TrainData::kind` vocabulary below); fixes
+    /// the DATA frame count and order.
+    pub const DATA: &str = "data";
+    pub const DATA_TRAJECTORY: &str = "trajectory";
+    pub const DATA_MOMENTS: &str = "moments";
+    pub const DATA_CLASSIFY: &str = "classify";
+    pub const DATA_SERIES: &str = "series";
+    /// Number of DATA frames following the request line.
+    pub const FRAMES: &str = "frames";
+    /// Nested scalar-coefficient object of a grad_step request.
+    pub const COEFS: &str = "coefs";
+    pub const LR: &str = "lr";
+    pub const COEF_E: &str = "coef_e";
+    pub const COEF_S: &str = "coef_s";
+    pub const COEF_L: &str = "coef_l";
+    pub const COEF_AUX: &str = "coef_aux";
+    pub const KL: &str = "kl";
+    pub const T1: &str = "t1";
+    pub const SEED: &str = "seed";
+    /// Response success flag — present on every response line.
+    pub const OK: &str = "ok";
+    /// Solver-level success of the shard evaluation (`Metrics::success`).
+    pub const SUCCESS: &str = "success";
+    pub const ERROR: &str = "error";
+    /// Typed `SolveErrorKind` wire string.
+    pub const KIND: &str = "kind";
+    pub const CLOSING: &str = "closing";
+
+    /// Every tag above — the registry round-trip test walks this.
+    pub const ALL: &[&str] = &[
+        OP,
+        OP_GRAD_STEP,
+        OP_SHUTDOWN,
+        MODEL,
+        TAY,
+        RUNG,
+        DATA,
+        DATA_TRAJECTORY,
+        DATA_MOMENTS,
+        DATA_CLASSIFY,
+        DATA_SERIES,
+        FRAMES,
+        COEFS,
+        LR,
+        COEF_E,
+        COEF_S,
+        COEF_L,
+        COEF_AUX,
+        KL,
+        T1,
+        SEED,
+        OK,
+        SUCCESS,
+        ERROR,
+        KIND,
+        CLOSING,
+    ];
+}
+
+/// Binary-frame framing constants — wire-stable, so registered with the
+/// L3 lint alongside the JSON tags.
+// analyze: wire(dist)
+pub mod frame {
+    /// Leading magic word of every frame (`"FNGR"` in LE byte order —
+    /// reversed "RGNF", regnde frame).
+    pub const MAGIC: u32 = 0x52474E46;
+    /// Flat f32 parameter vector (coordinator → worker).
+    pub const PARAMS: u8 = 1;
+    /// One f32 shard-data tensor (coordinator → worker).
+    pub const DATA: u8 = 2;
+    /// Flat f32 gradient (worker → coordinator).
+    pub const GRAD: u8 = 3;
+    /// f64 metric block of exactly `METRICS_LEN` values (worker →
+    /// coordinator).
+    pub const METRICS: u8 = 4;
+    /// Element count of a METRICS frame: loss, metric, nfe, naccept,
+    /// nreject, r_e, r_e2, r_s, r_l, r_aux — in that order.
+    pub const METRICS_LEN: usize = 10;
+
+    /// Every frame-type constant — the registry round-trip test walks
+    /// this.
+    pub const ALL_TYPES: &[u8] = &[PARAMS, DATA, GRAD, METRICS];
+}
+
+/// Fixed header size: magic (4) + type (1) + count (4).
+const HEADER_LEN: usize = 9;
+/// Trailing FNV-1a-64 checksum size.
+const CHECKSUM_LEN: usize = 8;
+
+/// Typed failure of the binary frame codec.  `Truncated` means the
+/// buffer/stream ended before the frame did (`need` counts from the
+/// frame start); every other variant means the bytes are present but
+/// wrong.
+#[derive(Debug)]
+pub enum FrameError {
+    Truncated { need: usize, got: usize },
+    BadMagic(u32),
+    BadType(u8),
+    Oversized { count: u32, max: usize },
+    /// FNV-1a checksum mismatch: the frame was bit-corrupted in transit.
+    Checksum,
+    Io(io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            FrameError::BadType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::Oversized { count, max } => {
+                write!(f, "frame declares {count} elements, cap is {max}")
+            }
+            FrameError::Checksum => write!(f, "frame checksum mismatch"),
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+/// Frame payload: f32 tensors (params/data/grad) or the f64 metric
+/// block.  The dtype is determined by the frame type, not negotiated.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FrameBody {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+/// One decoded binary frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub ty: u8,
+    pub body: FrameBody,
+}
+
+const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Little-endian integer reads without slice indexing (total on short
+/// input: missing high bytes read as zero — callers size-check first).
+fn le_u32(b: &[u8]) -> u32 {
+    b.iter().take(4).rev().fold(0u32, |acc, &x| (acc << 8) | x as u32)
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    b.iter().take(8).rev().fold(0u64, |acc, &x| (acc << 8) | x as u64)
+}
+
+fn arr4(c: &[u8]) -> [u8; 4] {
+    let mut a = [0u8; 4];
+    for (d, s) in a.iter_mut().zip(c) {
+        *d = *s;
+    }
+    a
+}
+
+fn arr8(c: &[u8]) -> [u8; 8] {
+    let mut a = [0u8; 8];
+    for (d, s) in a.iter_mut().zip(c) {
+        *d = *s;
+    }
+    a
+}
+
+/// Payload element width for a frame type; `BadType` for anything else.
+fn width_of(ty: u8) -> Result<usize, FrameError> {
+    match ty {
+        frame::PARAMS | frame::DATA | frame::GRAD => Ok(4),
+        frame::METRICS => Ok(8),
+        other => Err(FrameError::BadType(other)),
+    }
+}
+
+/// Validate a 9-byte header; returns `(ty, count, payload element
+/// width)`.  The `Oversized` cap fires here — before any allocation.
+fn header_info(h: &[u8]) -> Result<(u8, usize, usize), FrameError> {
+    if h.len() < HEADER_LEN {
+        return Err(FrameError::Truncated {
+            need: HEADER_LEN,
+            got: h.len(),
+        });
+    }
+    let magic = le_u32(h);
+    if magic != frame::MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let ty = h.get(4).copied().unwrap_or(0);
+    let width = width_of(ty)?;
+    let count = le_u32(h.get(5..9).unwrap_or_default());
+    if count as usize > MAX_FRAME_ELEMS {
+        return Err(FrameError::Oversized {
+            count,
+            max: MAX_FRAME_ELEMS,
+        });
+    }
+    Ok((ty, count as usize, width))
+}
+
+impl Frame {
+    /// An f32 tensor frame (`PARAMS` / `DATA` / `GRAD`).
+    pub fn f32(ty: u8, vals: Vec<f32>) -> Frame {
+        Frame {
+            ty,
+            body: FrameBody::F32(vals),
+        }
+    }
+
+    /// The METRICS frame of a metric block (numeric fields only; the
+    /// `success`/`error` pair rides the JSON response line).
+    pub fn metrics(m: &Metrics) -> Frame {
+        Frame {
+            ty: frame::METRICS,
+            body: FrameBody::F64(vec![
+                m.loss, m.metric, m.nfe, m.naccept, m.nreject, m.r_e, m.r_e2, m.r_s, m.r_l,
+                m.r_aux,
+            ]),
+        }
+    }
+
+    /// Reassemble a [`Metrics`] from a METRICS frame plus the JSON-borne
+    /// `success`/`error` pair.
+    pub fn to_metrics(&self, success: bool, error: Option<SolveErrorKind>) -> Result<Metrics> {
+        ensure!(
+            self.ty == frame::METRICS,
+            "frame type {} is not a metrics frame",
+            self.ty
+        );
+        let FrameBody::F64(v) = &self.body else {
+            bail!("metrics frame carries the wrong dtype");
+        };
+        let [loss, metric, nfe, naccept, nreject, r_e, r_e2, r_s, r_l, r_aux] = v.as_slice()
+        else {
+            bail!(
+                "metrics frame has {} values, expected {}",
+                v.len(),
+                frame::METRICS_LEN
+            );
+        };
+        Ok(Metrics {
+            loss: *loss,
+            metric: *metric,
+            nfe: *nfe,
+            naccept: *naccept,
+            nreject: *nreject,
+            success,
+            error,
+            r_e: *r_e,
+            r_e2: *r_e2,
+            r_s: *r_s,
+            r_l: *r_l,
+            r_aux: *r_aux,
+        })
+    }
+
+    /// Borrow the f32 payload, checking the frame type.
+    pub fn expect_f32(&self, ty: u8) -> Result<&[f32]> {
+        ensure!(self.ty == ty, "expected frame type {ty}, got {}", self.ty);
+        match &self.body {
+            FrameBody::F32(v) => Ok(v),
+            FrameBody::F64(_) => bail!("frame type {ty} carries the wrong dtype"),
+        }
+    }
+
+    /// Serialize to the wire byte layout (see module grammar).
+    pub fn encode(&self) -> Vec<u8> {
+        let payload: Vec<u8> = match &self.body {
+            FrameBody::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            FrameBody::F64(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        };
+        let count = match &self.body {
+            FrameBody::F32(v) => v.len() as u32,
+            FrameBody::F64(v) => v.len() as u32,
+        };
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+        out.extend_from_slice(&frame::MAGIC.to_le_bytes());
+        out.push(self.ty);
+        out.extend_from_slice(&count.to_le_bytes());
+        out.extend_from_slice(&payload);
+        let mut sum = fnv_update(FNV_BASIS, &[self.ty]);
+        sum = fnv_update(sum, &count.to_le_bytes());
+        sum = fnv_update(sum, &payload);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and
+    /// the number of bytes consumed.  Total: every malformed input maps
+    /// to a typed [`FrameError`], and no byte past the declared frame
+    /// end is ever inspected.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+        let (ty, count, width) = header_info(buf)?;
+        let payload_len = count * width;
+        let total = HEADER_LEN + payload_len + CHECKSUM_LEN;
+        let trunc = FrameError::Truncated {
+            need: total,
+            got: buf.len(),
+        };
+        let Some(payload) = buf.get(HEADER_LEN..HEADER_LEN + payload_len) else {
+            return Err(trunc);
+        };
+        let Some(sum_bytes) = buf.get(HEADER_LEN + payload_len..total) else {
+            return Err(trunc);
+        };
+        let mut sum = fnv_update(FNV_BASIS, &[ty]);
+        sum = fnv_update(sum, &(count as u32).to_le_bytes());
+        sum = fnv_update(sum, payload);
+        if sum != le_u64(sum_bytes) {
+            return Err(FrameError::Checksum);
+        }
+        let body = if width == 4 {
+            FrameBody::F32(
+                payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(arr4(c)))
+                    .collect(),
+            )
+        } else {
+            FrameBody::F64(
+                payload
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(arr8(c)))
+                    .collect(),
+            )
+        };
+        Ok((Frame { ty, body }, total))
+    }
+
+    /// Read exactly one frame from a stream.  A read that times out or
+    /// hits EOF mid-frame surfaces as [`FrameError::Io`] — the stream is
+    /// desynchronized at that point and the caller must drop the
+    /// connection.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame, FrameError> {
+        let mut header = [0u8; HEADER_LEN];
+        r.read_exact(&mut header)?;
+        let (_, count, width) = header_info(&header)?;
+        let mut rest = vec![0u8; count * width + CHECKSUM_LEN];
+        r.read_exact(&mut rest)?;
+        let mut buf = header.to_vec();
+        buf.append(&mut rest);
+        let (f, _) = Frame::decode(&buf)?;
+        Ok(f)
+    }
+
+    /// Write this frame to a stream (no flush).
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        w.write_all(&self.encode())
+    }
+}
+
+/// DATA frame count fixed by a data kind (the request's `frames` field
+/// must agree — validated before any frame is read, so a malformed
+/// request can never desynchronize the stream by under/over-reading).
+pub fn frames_for_kind(kind: &str) -> Result<usize> {
+    Ok(match kind {
+        tags::DATA_TRAJECTORY | tags::DATA_CLASSIFY => 2,
+        tags::DATA_SERIES => 3,
+        tags::DATA_MOMENTS => 4,
+        other => bail!("unknown data kind {other:?}"),
+    })
+}
+
+/// `read_exact` over a socket with a poll-style read timeout:
+/// `WouldBlock`/`TimedOut` ticks re-check `keep_waiting` and resume
+/// without losing the partial fill.  `keep_waiting() == false` turns the
+/// tick into a typed [`FrameError::Io`] — the caller's deadline or
+/// shutdown signal.
+fn read_exact_patient(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    keep_waiting: &mut impl FnMut() -> bool,
+) -> Result<(), FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let dst = buf.get_mut(filled..).unwrap_or_default();
+        match r.read(dst) {
+            Ok(0) => {
+                return Err(FrameError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "stream closed mid-frame",
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if !keep_waiting() {
+                    return Err(FrameError::Io(e));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read exactly one frame from a timeout-polled stream, tolerating
+/// `WouldBlock` ticks while `keep_waiting` stays true.  Any other
+/// failure — EOF mid-frame, a malformed header, a checksum mismatch —
+/// is typed and final: the stream is desynchronized and must be
+/// dropped.
+pub fn read_frame_patient(
+    r: &mut impl Read,
+    mut keep_waiting: impl FnMut() -> bool,
+) -> Result<Frame, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_patient(r, &mut header, &mut keep_waiting)?;
+    let (_, count, width) = header_info(&header)?;
+    let mut buf = vec![0u8; HEADER_LEN + count * width + CHECKSUM_LEN];
+    for (d, s) in buf.iter_mut().zip(header.iter()) {
+        *d = *s;
+    }
+    read_exact_patient(
+        r,
+        buf.get_mut(HEADER_LEN..).unwrap_or_default(),
+        &mut keep_waiting,
+    )?;
+    let (f, _) = Frame::decode(&buf)?;
+    Ok(f)
+}
+
+/// The shard-data tensors of a [`TrainData`], as DATA frames in the
+/// fixed per-kind order the worker reassembles with
+/// [`data_from_frames`].
+pub fn data_frames(data: &TrainData) -> Vec<Frame> {
+    let tensors: Vec<&[f32]> = match data {
+        TrainData::Trajectory { data, ts } => vec![data, ts],
+        TrainData::Moments { u0, mu, var, ts } => vec![u0, mu, var, ts],
+        TrainData::Classify { x, y } => vec![x, y],
+        TrainData::Series { x, mask, ts } => vec![x, mask, ts],
+    };
+    tensors
+        .into_iter()
+        .map(|t| Frame::f32(frame::DATA, t.to_vec()))
+        .collect()
+}
+
+/// Reassemble a [`TrainData`] view over received tensors (`kind` is the
+/// request's `data` tag).  Tensor *count* is validated here; shapes are
+/// validated by the backend pass it feeds.
+pub fn data_from_frames<'a>(kind: &str, tensors: &'a [Vec<f32>]) -> Result<TrainData<'a>> {
+    match (kind, tensors) {
+        (tags::DATA_TRAJECTORY, [data, ts]) => Ok(TrainData::Trajectory { data, ts }),
+        (tags::DATA_MOMENTS, [u0, mu, var, ts]) => Ok(TrainData::Moments { u0, mu, var, ts }),
+        (tags::DATA_CLASSIFY, [x, y]) => Ok(TrainData::Classify { x, y }),
+        (tags::DATA_SERIES, [x, mask, ts]) => Ok(TrainData::Series { x, mask, ts }),
+        (k, t) => bail!(
+            "data kind {k:?} with {} tensors is not a valid shard payload",
+            t.len()
+        ),
+    }
+}
+
+/// A coordinator→worker request (one JSON line, then frames).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DistRequest {
+    /// One shard gradient evaluation.  Followed on the wire by one
+    /// PARAMS frame and `frames` DATA frames.
+    GradStep {
+        model: String,
+        tay: bool,
+        rung: usize,
+        coefs: StepCoefs,
+        /// [`TrainData::kind`] of the shard payload.
+        kind: String,
+        /// DATA frame count (fixed by `kind`; carried explicitly so the
+        /// worker can validate before reading).
+        frames: usize,
+    },
+    Shutdown,
+}
+
+fn coefs_json(c: &StepCoefs) -> Json {
+    obj([
+        (tags::LR, Json::from(c.lr as f64)),
+        (tags::COEF_E, Json::from(c.coef_e as f64)),
+        (tags::COEF_S, Json::from(c.coef_s as f64)),
+        (tags::COEF_L, Json::from(c.coef_l as f64)),
+        (tags::COEF_AUX, Json::from(c.coef_aux as f64)),
+        (tags::KL, Json::from(c.kl as f64)),
+        (tags::T1, Json::from(c.t1 as f64)),
+        (tags::SEED, Json::from(c.seed as usize)),
+    ])
+}
+
+fn coefs_from(j: &Json) -> Result<StepCoefs> {
+    Ok(StepCoefs {
+        lr: j.get(tags::LR)?.as_f64()? as f32,
+        coef_e: j.get(tags::COEF_E)?.as_f64()? as f32,
+        coef_s: j.get(tags::COEF_S)?.as_f64()? as f32,
+        coef_l: j.get(tags::COEF_L)?.as_f64()? as f32,
+        coef_aux: j.get(tags::COEF_AUX)?.as_f64()? as f32,
+        kl: j.get(tags::KL)?.as_f64()? as f32,
+        t1: j.get(tags::T1)?.as_f64()? as f32,
+        seed: j.get(tags::SEED)?.as_f64()? as u32,
+    })
+}
+
+impl DistRequest {
+    pub fn to_json(&self) -> Json {
+        match self {
+            DistRequest::GradStep {
+                model,
+                tay,
+                rung,
+                coefs,
+                kind,
+                frames,
+            } => obj([
+                (tags::OP, Json::from(tags::OP_GRAD_STEP)),
+                (tags::MODEL, Json::from(model.as_str())),
+                (tags::TAY, Json::from(*tay)),
+                (tags::RUNG, Json::from(*rung)),
+                (tags::DATA, Json::from(kind.as_str())),
+                (tags::FRAMES, Json::from(*frames)),
+                (tags::COEFS, coefs_json(coefs)),
+            ]),
+            DistRequest::Shutdown => obj([(tags::OP, Json::from(tags::OP_SHUTDOWN))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<DistRequest> {
+        match j.get(tags::OP)?.as_str()? {
+            tags::OP_GRAD_STEP => Ok(DistRequest::GradStep {
+                model: j.get(tags::MODEL)?.as_str()?.to_string(),
+                tay: j.get(tags::TAY)?.as_bool()?,
+                rung: j.get(tags::RUNG)?.as_usize()?,
+                coefs: coefs_from(j.get(tags::COEFS)?)?,
+                kind: j.get(tags::DATA)?.as_str()?.to_string(),
+                frames: j.get(tags::FRAMES)?.as_usize()?,
+            }),
+            tags::OP_SHUTDOWN => Ok(DistRequest::Shutdown),
+            other => bail!("unknown dist op {other:?} (grad_step|shutdown)"),
+        }
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn decode(line: &str) -> Result<DistRequest> {
+        DistRequest::from_json(&Json::parse(line)?)
+    }
+}
+
+/// A worker→coordinator response (one JSON line, then frames for
+/// `Grad`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DistResponse {
+    /// Gradient evaluated.  Followed on the wire by one GRAD frame and
+    /// one METRICS frame.  `success`/`kind` are the metric block's
+    /// solver outcome (a *solver* failure — e.g. `budget_exhausted` —
+    /// still returns `Grad`: the coordinator's router decides what to do
+    /// with it, exactly as in single-process training).
+    Grad {
+        success: bool,
+        kind: Option<SolveErrorKind>,
+    },
+    /// Request-level failure: nothing was evaluated, no frames follow.
+    Error {
+        msg: String,
+        kind: Option<SolveErrorKind>,
+    },
+    /// Acknowledges a shutdown request.
+    Closing,
+}
+
+impl DistResponse {
+    pub fn error(msg: impl Into<String>) -> DistResponse {
+        DistResponse::Error {
+            msg: msg.into(),
+            kind: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            DistResponse::Grad { success, kind } => {
+                let mut fields = vec![
+                    (tags::OK, Json::from(true)),
+                    (tags::SUCCESS, Json::from(*success)),
+                ];
+                if let Some(k) = kind {
+                    fields.push((tags::KIND, Json::from(k.as_str())));
+                }
+                obj(fields)
+            }
+            DistResponse::Closing => {
+                obj([(tags::OK, Json::from(true)), (tags::CLOSING, Json::from(true))])
+            }
+            DistResponse::Error { msg, kind } => {
+                let mut fields = vec![
+                    (tags::OK, Json::from(false)),
+                    (tags::ERROR, Json::Str(msg.clone())),
+                ];
+                if let Some(k) = kind {
+                    fields.push((tags::KIND, Json::from(k.as_str())));
+                }
+                obj(fields)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<DistResponse> {
+        let kind = match j.opt(tags::KIND) {
+            Some(k) => SolveErrorKind::parse(k.as_str()?),
+            None => None,
+        };
+        if !j.get(tags::OK)?.as_bool()? {
+            let msg = j.get(tags::ERROR)?.as_str()?.to_string();
+            return Ok(DistResponse::Error { msg, kind });
+        }
+        if j.opt(tags::CLOSING).is_some() {
+            return Ok(DistResponse::Closing);
+        }
+        Ok(DistResponse::Grad {
+            success: j.get(tags::SUCCESS)?.as_bool()?,
+            kind,
+        })
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn decode(line: &str) -> Result<DistResponse> {
+        DistResponse::from_json(&Json::parse(line)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let (back, used) = Frame::decode(&bytes).expect("frame must decode");
+        assert_eq!(used, bytes.len(), "decode must consume the whole frame");
+        back
+    }
+
+    #[test]
+    fn frames_round_trip_bit_exact() {
+        let f = Frame::f32(
+            frame::PARAMS,
+            vec![1.0, -0.0, f32::MIN_POSITIVE, -1.9375e-7, f32::NAN, f32::INFINITY],
+        );
+        let back = roundtrip(&f);
+        assert_eq!(back.ty, frame::PARAMS);
+        let (FrameBody::F32(a), FrameBody::F32(b)) = (&f.body, &back.body) else {
+            panic!("dtype changed");
+        };
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "wire must not perturb f32 bits");
+        }
+        // Empty frames are legal (an empty shard range ships no data).
+        assert_eq!(roundtrip(&Frame::f32(frame::GRAD, vec![])), Frame::f32(frame::GRAD, vec![]));
+    }
+
+    #[test]
+    fn metrics_frame_round_trips_including_nan_loss() {
+        let m = Metrics {
+            loss: f64::NAN,
+            metric: 0.25,
+            nfe: 120.0,
+            naccept: 17.0,
+            nreject: 3.0,
+            success: false,
+            error: Some(SolveErrorKind::NonFiniteState),
+            r_e: 0.5,
+            r_e2: 0.125,
+            r_s: 2.0,
+            r_l: 0.0625,
+            r_aux: 0.0,
+        };
+        let back = roundtrip(&Frame::metrics(&m))
+            .to_metrics(m.success, m.error)
+            .expect("metrics reassembly");
+        assert!(back.loss.is_nan(), "NaN loss must survive the wire");
+        assert_eq!(back.metric, m.metric);
+        assert_eq!(back.nfe, m.nfe);
+        assert_eq!(back.r_e2, m.r_e2);
+        assert_eq!(back.r_l, m.r_l);
+        assert_eq!(back.error, Some(SolveErrorKind::NonFiniteState));
+    }
+
+    #[test]
+    fn typed_codec_failures() {
+        let good = Frame::f32(frame::DATA, vec![1.0, 2.0, 3.0]).encode();
+        // Truncation at every prefix length: typed error, never panic.
+        for cut in 0..good.len() {
+            let e = Frame::decode(&good[..cut]).expect_err("prefix must not decode");
+            assert!(
+                matches!(e, FrameError::Truncated { .. } | FrameError::BadMagic(_)),
+                "cut {cut}: {e}"
+            );
+        }
+        // A flipped payload bit is caught by the checksum.
+        let mut bad = good.clone();
+        bad[12] ^= 0x40;
+        assert!(matches!(Frame::decode(&bad), Err(FrameError::Checksum)));
+        // A wrong magic word is typed.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(Frame::decode(&bad), Err(FrameError::BadMagic(_))));
+        // An unknown frame type is typed (checked before the count).
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(Frame::decode(&bad), Err(FrameError::BadType(99))));
+        // An oversized count is refused before allocation.
+        let mut bad = good;
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode(&bad), Err(FrameError::Oversized { .. })));
+    }
+
+    #[test]
+    fn decode_reports_consumed_length_for_streams() {
+        let a = Frame::f32(frame::PARAMS, vec![5.0; 7]);
+        let b = Frame::metrics(&Metrics::default());
+        let mut buf = a.encode();
+        buf.extend_from_slice(&b.encode());
+        let (fa, used) = Frame::decode(&buf).unwrap();
+        assert_eq!(fa, a);
+        let (fb, _) = Frame::decode(&buf[used..]).unwrap();
+        assert_eq!(fb, b);
+    }
+
+    #[test]
+    fn read_from_matches_decode() {
+        let f = Frame::f32(frame::GRAD, vec![0.5, -2.5]);
+        let mut cursor = io::Cursor::new(f.encode());
+        assert_eq!(Frame::read_from(&mut cursor).unwrap(), f);
+        // EOF mid-frame is a typed Io error.
+        let mut short = io::Cursor::new(f.encode()[..10].to_vec());
+        assert!(matches!(Frame::read_from(&mut short), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = [
+            DistRequest::GradStep {
+                model: "spiral_node".into(),
+                tay: false,
+                rung: 1,
+                coefs: StepCoefs {
+                    lr: 0.01,
+                    coef_e: 0.125,
+                    seed: 0xDEAD_BEEF,
+                    ..Default::default()
+                },
+                kind: tags::DATA_TRAJECTORY.into(),
+                frames: 2,
+            },
+            DistRequest::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(DistRequest::decode(&r.encode()).unwrap(), r, "{r:?}");
+            assert!(!r.encode().contains('\n'));
+        }
+        assert!(DistRequest::decode("{\"op\":\"frobnicate\"}").is_err());
+        assert!(DistRequest::decode("not json").is_err());
+    }
+
+    #[test]
+    fn responses_round_trip_with_typed_kinds() {
+        for r in [
+            DistResponse::Grad {
+                success: true,
+                kind: None,
+            },
+            DistResponse::Grad {
+                success: false,
+                kind: Some(SolveErrorKind::BudgetExhausted),
+            },
+            DistResponse::Error {
+                msg: "shard failed".into(),
+                kind: Some(SolveErrorKind::StepSizeUnderflow),
+            },
+            DistResponse::error("bad request"),
+            DistResponse::Closing,
+        ] {
+            assert_eq!(DistResponse::decode(&r.encode()).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn data_frames_round_trip_every_kind() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let ts = [0.0f32, 0.5];
+        let cases: Vec<TrainData> = vec![
+            TrainData::Trajectory { data: &x, ts: &ts },
+            TrainData::Moments {
+                u0: &x,
+                mu: &x,
+                var: &x,
+                ts: &ts,
+            },
+            TrainData::Classify { x: &x, y: &ts },
+            TrainData::Series {
+                x: &x,
+                mask: &x,
+                ts: &ts,
+            },
+        ];
+        for data in cases {
+            let frames = data_frames(&data);
+            let tensors: Vec<Vec<f32>> = frames
+                .iter()
+                .map(|f| f.expect_f32(frame::DATA).unwrap().to_vec())
+                .collect();
+            let back = data_from_frames(data.kind(), &tensors).unwrap();
+            assert_eq!(back.kind(), data.kind());
+            assert_eq!(frames.len(), tensors.len());
+        }
+        assert!(data_from_frames("classify", &[vec![1.0]]).is_err());
+        assert!(data_from_frames("nonsense", &[]).is_err());
+    }
+}

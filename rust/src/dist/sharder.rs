@@ -1,0 +1,151 @@
+//! Deterministic work sharding — the single source of truth for how the
+//! distributed coordinator, the local sharded trainer, and the ensemble
+//! paths (`solvers::ensemble`, spiral SDE moments, physionet synthesis)
+//! split `n` items over `s` slots.
+//!
+//! Determinism contract (DESIGN.md §Distributed): a [`ShardPlan`] is a
+//! pure function of `(n, s)` (or `(n, chunk)` for [`ShardPlan::by_chunk`])
+//! — same inputs, same ranges, on every machine, every run.  Shard `i`
+//! always owns a contiguous range, ranges are ascending and disjoint,
+//! and their union is exactly `0..n`.  Combined with the fixed
+//! tree-reduction order in `dist::coordinator`, this is what makes
+//! distributed training bit-identical to single-process at equal shard
+//! count.
+
+use std::ops::Range;
+
+/// A deterministic partition of `0..n` into contiguous shards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    n: usize,
+    ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Balanced split of `n` items over exactly `shards` slots (slot
+    /// count preserved even when `n < shards`: trailing shards get empty
+    /// ranges).  The first `n % shards` shards get one extra item, so
+    /// sizes differ by at most one and earlier shards are never smaller.
+    pub fn by_count(n: usize, shards: usize) -> ShardPlan {
+        let s = shards.max(1);
+        let base = n / s;
+        let extra = n % s;
+        let mut ranges = Vec::with_capacity(s);
+        let mut start = 0;
+        for i in 0..s {
+            let len = base + usize::from(i < extra);
+            ranges.push(start..start + len);
+            start += len;
+        }
+        ShardPlan { n, ranges }
+    }
+
+    /// Fixed-size chunking: ceil(n / chunk) shards of `chunk` items with
+    /// a possibly-short tail (the `util::threadpool::chunk_ranges`
+    /// contract, now owned here so ensemble sweeps and the distributed
+    /// sharder agree).  `n == 0` yields an empty plan.
+    pub fn by_chunk(n: usize, chunk: usize) -> ShardPlan {
+        let c = chunk.max(1);
+        let ranges = (0..n.div_ceil(c)).map(|k| k * c..((k + 1) * c).min(n)).collect();
+        ShardPlan { n, ranges }
+    }
+
+    /// Total item count being partitioned.
+    pub fn items(&self) -> usize {
+        self.n
+    }
+
+    /// Number of shard slots (including empty tails from `by_count`).
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// The contiguous item range owned by shard `i` (None past the end).
+    pub fn range(&self, i: usize) -> Option<Range<usize>> {
+        self.ranges.get(i).cloned()
+    }
+
+    /// Iterate `(shard_index, range)` over non-empty shards only — the
+    /// shards that actually carry work.
+    pub fn occupied(&self) -> impl Iterator<Item = (usize, Range<usize>)> + '_ {
+        self.ranges
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.is_empty())
+            .map(|(i, r)| (i, r.clone()))
+    }
+
+    /// All ranges in shard order (empty ones included).
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, ensure, PropResult};
+
+    #[test]
+    fn by_count_is_balanced_and_exhaustive() {
+        check("sharder::by_count", 300, |g| -> PropResult {
+            let n = g.usize_in(0, 300);
+            let s = g.usize_in(1, 9);
+            let plan = ShardPlan::by_count(n, s);
+            ensure(plan.len() == s, "slot count preserved")?;
+            ensure(plan.items() == n, "items recorded")?;
+            let mut covered = 0;
+            let mut prev_end = 0;
+            let mut prev_len = usize::MAX;
+            for r in plan.ranges() {
+                ensure(r.start == prev_end, "contiguous ascending")?;
+                ensure(r.len() <= prev_len, "earlier shards never smaller")?;
+                prev_len = r.len();
+                prev_end = r.end;
+                covered += r.len();
+            }
+            ensure(covered == n && prev_end == n, "union is exactly 0..n")?;
+            // Balance: sizes differ by at most one.
+            let min = plan.ranges().iter().map(|r| r.len()).min().unwrap_or(0);
+            let max = plan.ranges().iter().map(|r| r.len()).max().unwrap_or(0);
+            ensure(max - min <= 1, "balanced within one item")
+        });
+    }
+
+    #[test]
+    fn by_chunk_matches_the_threadpool_contract() {
+        check("sharder::by_chunk", 300, |g| -> PropResult {
+            let n = g.usize_in(0, 300);
+            let c = g.usize_in(0, 50);
+            let plan = ShardPlan::by_chunk(n, c);
+            let cc = c.max(1);
+            ensure(plan.len() == n.div_ceil(cc), "ceil(n/chunk) shards")?;
+            let mut prev_end = 0;
+            for (i, r) in plan.ranges().iter().enumerate() {
+                ensure(r.start == prev_end, "contiguous")?;
+                let want = if i + 1 == plan.len() { n - r.start } else { cc };
+                ensure(r.len() == want, "full chunks then tail")?;
+                prev_end = r.end;
+            }
+            ensure(prev_end == n, "covers 0..n")
+        });
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        assert_eq!(ShardPlan::by_count(10, 4), ShardPlan::by_count(10, 4));
+        assert_eq!(
+            ShardPlan::by_count(10, 4).ranges(),
+            &[0..3, 3..6, 6..8, 8..10]
+        );
+        // n < shards: trailing empties, slot count preserved.
+        let small = ShardPlan::by_count(1, 3);
+        assert_eq!(small.ranges(), &[0..1, 1..1, 1..1]);
+        assert_eq!(small.occupied().count(), 1);
+        assert_eq!(ShardPlan::by_chunk(7, 3).ranges(), &[0..3, 3..6, 6..7]);
+    }
+}

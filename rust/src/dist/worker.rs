@@ -1,0 +1,545 @@
+//! The gradient worker: `regnde worker --addr` — a TCP server answering
+//! [`DistRequest::GradStep`] requests with shard gradients.
+//!
+//! Workers are **stateless** between requests: every request carries the
+//! full parameter vector and its shard's data tensors, the worker runs
+//! one [`Backend::grad_step`] (no optimizer update — the coordinator
+//! owns the Adam state) and streams back the gradient + metric block.
+//! Statelessness is what makes the coordinator's failure handling
+//! simple: any shard can be replayed on any live worker and produce the
+//! same bits (DESIGN.md §Distributed).
+//!
+//! Structure mirrors `serve::Server` (PR 5/6): one thread per
+//! connection, poll-style read timeouts so an idle or half-dead
+//! coordinator can never pin a thread past shutdown, draining `shutdown`
+//! op, bounded connection count.  The one new wrinkle is the binary
+//! frame stream after each control line: a read that dies *mid-frame*
+//! desynchronizes the connection, so frame-level failures answer one
+//! typed error line (when possible) and close — they never try to
+//! resync.
+
+use std::io::{self, BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{
+    data_from_frames, frame, frames_for_kind, read_frame_patient, DistRequest, DistResponse,
+    Frame,
+};
+use crate::runtime::{Backend, StepCoefs, TrainState};
+
+/// Per-worker policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOpts {
+    /// Poll tick for connection reads (drain-flag latency bound).
+    pub read_timeout: Duration,
+    /// Most connections served concurrently; excess connections are
+    /// answered with one error line and closed.
+    pub max_conns: usize,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            read_timeout: Duration::from_millis(250),
+            max_conns: 16,
+        }
+    }
+}
+
+/// The gradient worker server.
+pub struct Worker {
+    backend: Arc<dyn Backend + Send + Sync>,
+    opts: WorkerOpts,
+    shutdown: AtomicBool,
+    active_conns: AtomicUsize,
+}
+
+/// Occupancy guard: frees the connection slot even if the handler
+/// thread panics.
+struct ConnSlot<'a>(&'a AtomicUsize);
+
+impl Drop for ConnSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Worker {
+    pub fn new(backend: Arc<dyn Backend + Send + Sync>, opts: WorkerOpts) -> Worker {
+        Worker {
+            backend,
+            opts,
+            shutdown: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+        }
+    }
+
+    /// Serve until a `shutdown` request arrives (or [`WorkerHandle`]
+    /// aborts), then join every connection thread before returning.
+    pub fn serve(self: &Arc<Self>, listener: TcpListener) -> Result<()> {
+        let addr = listener.local_addr()?;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for stream in listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            handles.retain(|h| !h.is_finished());
+            if self.active_conns.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns {
+                self.active_conns.fetch_sub(1, Ordering::SeqCst);
+                let mut stream = stream;
+                let mut out = DistResponse::error("worker connection limit reached").encode();
+                out.push('\n');
+                let _ = stream.write_all(out.as_bytes());
+                continue;
+            }
+            let worker = Arc::clone(self);
+            handles.push(std::thread::spawn(move || {
+                let _slot = ConnSlot(&worker.active_conns);
+                worker.handle_conn(stream, addr);
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Bind `addr` and serve on a background thread; returns a handle
+    /// carrying the bound address (use port 0 for an ephemeral one).
+    pub fn spawn(
+        backend: Arc<dyn Backend + Send + Sync>,
+        opts: WorkerOpts,
+        addr: &str,
+    ) -> Result<WorkerHandle> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let bound = listener.local_addr()?;
+        let worker = Arc::new(Worker::new(backend, opts));
+        let thread = {
+            let worker = Arc::clone(&worker);
+            std::thread::spawn(move || {
+                let _ = worker.serve(listener);
+            })
+        };
+        Ok(WorkerHandle {
+            addr: bound,
+            worker,
+            thread,
+        })
+    }
+
+    fn handle_conn(&self, stream: TcpStream, server_addr: SocketAddr) {
+        let _ = stream.set_read_timeout(Some(self.opts.read_timeout.max(Duration::from_millis(1))));
+        let Ok(read_half) = stream.try_clone() else {
+            return;
+        };
+        let mut reader = BufReader::new(read_half);
+        let mut writer = stream;
+        let mut line = String::new();
+        loop {
+            // read_line appends: a partial line interrupted by a poll
+            // timeout stays in `line` and completes on a later tick.
+            match reader.read_line(&mut line) {
+                Ok(0) => return, // coordinator hung up
+                Ok(_) => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return; // aborting / draining
+                    }
+                    continue;
+                }
+                Err(_) => return,
+            }
+            if line.trim().is_empty() {
+                line.clear();
+                continue;
+            }
+            let req = match DistRequest::decode(line.trim()) {
+                Ok(r) => r,
+                Err(e) => {
+                    // A garbled grad_step line may have frames behind it
+                    // that we cannot size: answer once and drop the
+                    // connection rather than guess at resync.
+                    let _ = respond(
+                        &mut writer,
+                        &DistResponse::error(format!("bad request: {e:#}")),
+                        &[],
+                    );
+                    return;
+                }
+            };
+            line.clear();
+            match req {
+                DistRequest::Shutdown => {
+                    let _ = respond(&mut writer, &DistResponse::Closing, &[]);
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    // Poke the accept loop so it observes the flag.
+                    let _ = TcpStream::connect(server_addr);
+                    return;
+                }
+                DistRequest::GradStep {
+                    model,
+                    tay,
+                    rung,
+                    coefs,
+                    kind,
+                    frames,
+                } => {
+                    // Validate the declared frame count against the kind
+                    // BEFORE reading any frame: a mismatch would leave
+                    // the stream desynchronized.
+                    let expected = match frames_for_kind(&kind) {
+                        Ok(n) if n == frames => n,
+                        Ok(n) => {
+                            let _ = respond(
+                                &mut writer,
+                                &DistResponse::error(format!(
+                                    "kind {kind:?} carries {n} data frames, request declared \
+                                     {frames}"
+                                )),
+                                &[],
+                            );
+                            return;
+                        }
+                        Err(e) => {
+                            let _ = respond(
+                                &mut writer,
+                                &DistResponse::error(format!("{e:#}")),
+                                &[],
+                            );
+                            return;
+                        }
+                    };
+                    let mut keep = || !self.shutdown.load(Ordering::SeqCst);
+                    let mut read_f32 = |r: &mut BufReader<TcpStream>, ty: u8| -> Result<Vec<f32>> {
+                        let f = read_frame_patient(r, &mut keep)?;
+                        Ok(f.expect_f32(ty)?.to_vec())
+                    };
+                    let payload = (|| -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+                        let params = read_f32(&mut reader, frame::PARAMS)?;
+                        let mut tensors = Vec::with_capacity(expected);
+                        for _ in 0..expected {
+                            tensors.push(read_f32(&mut reader, frame::DATA)?);
+                        }
+                        Ok((params, tensors))
+                    })();
+                    let (params, tensors) = match payload {
+                        Ok(p) => p,
+                        Err(e) => {
+                            // Mid-frame failure: the stream is dead.
+                            let _ = respond(
+                                &mut writer,
+                                &DistResponse::error(format!("frame error: {e:#}")),
+                                &[],
+                            );
+                            return;
+                        }
+                    };
+                    let (resp, out_frames) =
+                        self.evaluate(&model, tay, rung, &coefs, &kind, params, &tensors);
+                    if respond(&mut writer, &resp, &out_frames).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one shard gradient evaluation.  Solver failures (budget
+    /// exhausted, non-finite state, ...) are *data*, not errors: they
+    /// ride back inside the metric block for the coordinator's router,
+    /// exactly as in single-process training.
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        coefs: &StepCoefs,
+        kind: &str,
+        params: Vec<f32>,
+        tensors: &[Vec<f32>],
+    ) -> (DistResponse, Vec<Frame>) {
+        let data = match data_from_frames(kind, tensors) {
+            Ok(d) => d,
+            Err(e) => return (DistResponse::error(format!("{e:#}")), vec![]),
+        };
+        // grad_step never touches the optimizer state, so the worker's
+        // replica carries an empty one (the coordinator owns Adam).
+        let state = TrainState {
+            params,
+            opt_state: vec![],
+            iter: 0,
+        };
+        match self.backend.grad_step(model, tay, rung, &state, &data, coefs) {
+            Ok(out) => (
+                DistResponse::Grad {
+                    success: out.metrics.success,
+                    kind: out.metrics.error,
+                },
+                vec![Frame::f32(frame::GRAD, out.grad), Frame::metrics(&out.metrics)],
+            ),
+            Err(e) => (DistResponse::error(format!("grad_step failed: {e:#}")), vec![]),
+        }
+    }
+}
+
+/// One response: the JSON line, then any frames, then a flush.
+fn respond(w: &mut TcpStream, resp: &DistResponse, frames: &[Frame]) -> io::Result<()> {
+    let mut out = resp.encode();
+    out.push('\n');
+    w.write_all(out.as_bytes())?;
+    for f in frames {
+        f.write_to(w)?;
+    }
+    w.flush()
+}
+
+/// Handle to a spawned worker: its bound address plus abort/join
+/// control.  Used by the CLI, the loopback tests, and the fault
+/// harness.
+pub struct WorkerHandle {
+    pub addr: SocketAddr,
+    worker: Arc<Worker>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// Abort the worker without draining: connection threads exit at
+    /// their next poll tick *without answering* — from the
+    /// coordinator's side this is indistinguishable from a crashed
+    /// worker, which is exactly what the fault tests want.
+    pub fn kill(self) {
+        self.worker.shutdown.store(true, Ordering::SeqCst);
+        // Poke the accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.thread.join();
+    }
+
+    /// Wait for the worker to exit on its own (a `shutdown` request).
+    pub fn join(self) {
+        let _ = self.thread.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{GradOutput, NativeBackend};
+    use crate::solvers::error::SolveErrorKind;
+
+    fn spawn_worker() -> WorkerHandle {
+        Worker::spawn(
+            Arc::new(NativeBackend::new()),
+            WorkerOpts {
+                read_timeout: Duration::from_millis(20),
+                ..Default::default()
+            },
+            "127.0.0.1:0",
+        )
+        .expect("spawn worker")
+    }
+
+    fn grad_request(model: &str, seed: u32) -> (DistRequest, Vec<Frame>) {
+        let be = NativeBackend::new();
+        let params = be.init_params(model, 3).unwrap();
+        let (truth, ts) = crate::coordinator::experiments::spiral_node::ground_truth();
+        let req = DistRequest::GradStep {
+            model: model.into(),
+            tay: false,
+            rung: 0,
+            coefs: StepCoefs {
+                seed,
+                ..Default::default()
+            },
+            kind: "trajectory".into(),
+            frames: 2,
+        };
+        let frames = vec![
+            Frame::f32(frame::PARAMS, params),
+            Frame::f32(frame::DATA, truth),
+            Frame::f32(frame::DATA, ts),
+        ];
+        (req, frames)
+    }
+
+    fn exchange(addr: &SocketAddr, req: &DistRequest, frames: &[Frame]) -> Result<GradOutput> {
+        let stream = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let mut line = req.encode();
+        line.push('\n');
+        writer.write_all(line.as_bytes())?;
+        for f in frames {
+            f.write_to(&mut writer)?;
+        }
+        writer.flush()?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        match DistResponse::decode(resp.trim())? {
+            DistResponse::Grad { success, kind } => {
+                let g = read_frame_patient(&mut reader, || true)?;
+                let m = read_frame_patient(&mut reader, || true)?;
+                Ok(GradOutput {
+                    grad: g.expect_f32(frame::GRAD)?.to_vec(),
+                    metrics: m.to_metrics(success, kind)?,
+                })
+            }
+            other => anyhow::bail!("worker answered {other:?}"),
+        }
+    }
+
+    #[test]
+    fn loopback_grad_step_matches_in_process() {
+        let handle = spawn_worker();
+        let (req, frames) = grad_request("spiral_node", 42);
+        let remote = exchange(&handle.addr, &req, &frames).expect("loopback grad");
+
+        // The same evaluation in-process must be bit-identical.
+        let be = NativeBackend::new();
+        let params = frames[0].expect_f32(frame::PARAMS).unwrap().to_vec();
+        let (truth, ts) = crate::coordinator::experiments::spiral_node::ground_truth();
+        let state = TrainState {
+            params,
+            opt_state: vec![],
+            iter: 0,
+        };
+        let local = be
+            .grad_step(
+                "spiral_node",
+                false,
+                0,
+                &state,
+                &crate::runtime::TrainData::Trajectory {
+                    data: &truth,
+                    ts: &ts,
+                },
+                &StepCoefs {
+                    seed: 42,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(remote.grad.len(), local.grad.len());
+        for (a, b) in remote.grad.iter().zip(&local.grad) {
+            assert_eq!(a.to_bits(), b.to_bits(), "wire must not perturb gradient bits");
+        }
+        assert_eq!(remote.metrics.loss.to_bits(), local.metrics.loss.to_bits());
+        assert_eq!(remote.metrics.nfe, local.metrics.nfe);
+        assert_eq!(remote.metrics.success, local.metrics.success);
+
+        // Draining shutdown via the protocol.
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer
+            .write_all(format!("{}\n", DistRequest::Shutdown.encode()).as_bytes())
+            .unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(
+            DistResponse::decode(resp.trim()).unwrap(),
+            DistResponse::Closing
+        );
+        handle.join();
+    }
+
+    #[test]
+    fn bad_requests_get_typed_errors() {
+        let handle = spawn_worker();
+
+        // Unknown op: one error line, connection closed.
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(b"{\"op\":\"frobnicate\"}\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(matches!(
+            DistResponse::decode(resp.trim()).unwrap(),
+            DistResponse::Error { .. }
+        ));
+
+        // Frame-count mismatch is rejected before any frame is read.
+        let (req, _) = grad_request("spiral_node", 1);
+        let DistRequest::GradStep { model, coefs, .. } = req else {
+            unreachable!()
+        };
+        let bad = DistRequest::GradStep {
+            model,
+            tay: false,
+            rung: 0,
+            coefs,
+            kind: "trajectory".into(),
+            frames: 7,
+        };
+        let err = exchange(&handle.addr, &bad, &[]).expect_err("must be rejected");
+        assert!(err.to_string().contains("worker answered"), "{err:#}");
+
+        // Unknown model inside a well-formed request: typed error, and
+        // the error carries no stale frames.
+        let (good_req, frames) = grad_request("spiral_node", 1);
+        let DistRequest::GradStep { coefs, .. } = good_req else {
+            unreachable!()
+        };
+        let ghost = DistRequest::GradStep {
+            model: "ghost".into(),
+            tay: false,
+            rung: 0,
+            coefs,
+            kind: "trajectory".into(),
+            frames: 2,
+        };
+        let err = exchange(&handle.addr, &ghost, &frames).expect_err("unknown model");
+        assert!(err.to_string().contains("worker answered"), "{err:#}");
+        handle.kill();
+    }
+
+    #[test]
+    fn solver_failure_rides_the_metric_block_not_the_error_path() {
+        let handle = spawn_worker();
+        let be = NativeBackend::new();
+        let params = be.init_params("spiral_node", 3).unwrap();
+        let (truth, ts) = crate::coordinator::experiments::spiral_node::ground_truth();
+        // Rung 0 budget is far too small for tol=spec when we shrink it:
+        // instead force failure via an absurd trajectory: NaN data makes
+        // the loss non-finite -> typed solver error in metrics.
+        let poisoned: Vec<f32> = truth.iter().map(|_| f32::NAN).collect();
+        let req = DistRequest::GradStep {
+            model: "spiral_node".into(),
+            tay: false,
+            rung: 0,
+            coefs: StepCoefs::default(),
+            kind: "trajectory".into(),
+            frames: 2,
+        };
+        let frames = vec![
+            Frame::f32(frame::PARAMS, params),
+            Frame::f32(frame::DATA, poisoned),
+            Frame::f32(frame::DATA, ts),
+        ];
+        match exchange(&handle.addr, &req, &frames) {
+            Ok(out) => {
+                // Either the solve reports a typed failure or the loss
+                // itself is non-finite — both must survive the wire.
+                assert!(
+                    !out.metrics.success
+                        || !out.metrics.loss.is_finite()
+                        || out.metrics.error == Some(SolveErrorKind::NonFiniteState),
+                    "poisoned data must surface: {:?}",
+                    out.metrics
+                );
+            }
+            // A request-level error is also acceptable containment.
+            Err(e) => assert!(e.to_string().contains("worker answered"), "{e:#}"),
+        }
+        handle.kill();
+    }
+}

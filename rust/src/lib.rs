@@ -22,6 +22,11 @@
 //!   (cargo feature `pjrt`) executes the lowered artifacts with Python
 //!   never on the hot path.
 //!
+//! The [`dist`] subsystem layers data-parallel training on the same
+//! seam: a coordinator shards each gradient over loopback or remote
+//! workers and reduces in a fixed tree, bit-identical to the
+//! single-process run (DESIGN.md §Distributed).
+//!
 //! See DESIGN.md (§Backend for the trait contract and adjoint tape
 //! layout) for the full system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -29,6 +34,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod models;
 pub mod runtime;
 pub mod serve;

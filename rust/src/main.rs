@@ -39,13 +39,15 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::experiments::{self, ResumeState, TrainOpts};
 use regnde::coordinator::metrics::RunResult;
 use regnde::coordinator::recorder::Recorder;
 use regnde::coordinator::Method;
-use regnde::runtime::{make_backend, Backend};
+use regnde::dist::{DistBackend, RemoteOpts, Worker, WorkerOpts};
+use regnde::runtime::{make_backend, Backend, NativeBackend};
 use regnde::serve::{
     BatchPolicy, Batcher, Checkpoint, Client, Registry, Request, Response, Server, ServerOpts,
+    TrainProgress,
 };
 use regnde::util::cli::Args;
 use regnde::util::threadpool::ThreadPool;
@@ -61,6 +63,7 @@ const VALUED: &[&str] = &[
     "backend",
     "solver",
     "checkpoint",
+    "resume",
     "registry",
     "addr",
     "model",
@@ -74,9 +77,50 @@ const VALUED: &[&str] = &[
     "max-conns",
     "nfe-quota",
     "workers",
+    "shards",
     "deadline-ms",
     "retries",
 ];
+
+/// Options (valued or boolean) each subcommand accepts — unknown ones
+/// are rejected with a typed error listing the valid set, so a typo'd
+/// flag can never be silently ignored.
+fn known_for(cmd: &str, remote_predict: bool) -> Option<&'static [&'static str]> {
+    const TRAIN: &[&str] = &[
+        "backend", "solver", "artifacts", "runs", "exp", "method", "epochs", "iters", "seeds",
+        "checkpoint", "resume", "verbose", "distributed", "workers", "shards",
+    ];
+    const RUN: &[&str] = &[
+        "backend", "solver", "artifacts", "runs", "exp", "method", "epochs", "iters", "seeds",
+        "checkpoint", "verbose", "check-nfe", "distributed", "workers", "shards",
+    ];
+    const PREDICT_LOCAL: &[&str] = &[
+        "backend", "solver", "artifacts", "exp", "method", "iters", "seeds", "verbose",
+    ];
+    const PREDICT_REMOTE: &[&str] = &[
+        "addr", "model", "u0", "budget", "requests", "concurrency", "deadline-ms", "retries",
+        "chaos",
+    ];
+    const SERVE: &[&str] = &[
+        "registry", "addr", "max-batch", "max-wait-us", "max-queue", "max-conns", "nfe-quota",
+        "workers",
+    ];
+    const LIST: &[&str] = &["backend", "solver", "artifacts"];
+    const VALIDATE: &[&str] = &["artifacts", "backend"];
+    const WORKER: &[&str] = &["addr", "solver", "backend", "max-conns"];
+    Some(match cmd {
+        "train" => TRAIN,
+        "run" => RUN,
+        "predict" if remote_predict => PREDICT_REMOTE,
+        "predict" => PREDICT_LOCAL,
+        "serve" => SERVE,
+        "list" => LIST,
+        "validate" => VALIDATE,
+        "worker" => WORKER,
+        // `help` and unknown commands fail on the command itself.
+        _ => return None,
+    })
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -87,10 +131,13 @@ fn main() {
 
 fn usage() -> String {
     format!(
-        "usage: regnde <list|validate|train|predict|run|serve> \
+        "usage: regnde <list|validate|train|predict|run|serve|worker> \
          [--backend native|pjrt] [--solver {}] [--exp E] [--method M] \
          [--epochs N] [--iters N] [--seeds 0,1] [--artifacts DIR] [--runs DIR] \
-         [--checkpoint FILE] [--check-nfe] [--verbose]\n\
+         [--checkpoint FILE] [--resume FILE] [--check-nfe] [--verbose]\n\
+         distributed: regnde worker --addr A\n\
+         \x20            regnde train --exp E --distributed --workers a,b,c \
+         [--shards N]   (or --shards N alone for single-process sharding)\n\
          serving: regnde serve --registry DIR [--addr A] [--max-batch N] \
          [--max-wait-us U] [--max-queue N] [--max-conns N] [--nfe-quota Q] \
          [--workers W]\n\
@@ -118,6 +165,12 @@ fn run() -> Result<()> {
     let solver = args.get("solver").map(|s| s.to_string());
     let solver = solver.as_deref();
 
+    // Reject unknown options up front (typos must not be silently
+    // ignored); unknown subcommands fall through to the match below.
+    if let Some(known) = known_for(cmd, args.get("addr").is_some()) {
+        args.check_known(known)?;
+    }
+
     match cmd {
         "help" | "--help" => {
             println!("{}", usage());
@@ -134,7 +187,7 @@ fn run() -> Result<()> {
         }
         "validate" => validate(&artifacts),
         "train" => {
-            let backend = make_backend(&backend_name, &artifacts, solver)?;
+            let backend = train_backend(&args, &backend_name, &artifacts, solver)?;
             let exp = args.get("exp").context("--exp required")?.to_string();
             let method = Method::parse(args.get_or("method", "vanilla"))?;
             let seeds: Vec<u64> = args
@@ -142,6 +195,11 @@ fn run() -> Result<()> {
                 .split(',')
                 .map(|s| s.parse::<u64>().context("bad seed"))
                 .collect::<Result<_>>()?;
+            let resume = load_resume(&args, &exp)?;
+            ensure!(
+                resume.is_none() || seeds.len() == 1,
+                "--resume continues a single replica; pass one --seeds value"
+            );
             let recorder = Recorder::new(
                 args.get("runs")
                     .map(std::path::PathBuf::from)
@@ -154,7 +212,13 @@ fn run() -> Result<()> {
                     seed,
                     verbose: args.flag("verbose"),
                 };
-                let result = experiments::run_by_name(backend.as_ref(), &exp, method, opts)?;
+                let result = experiments::run_by_name_resumed(
+                    backend.as_ref(),
+                    &exp,
+                    method,
+                    opts,
+                    resume.as_ref(),
+                )?;
                 let path = recorder.save(&result)?;
                 println!(
                     "[{}] seed {seed}: train {:.1}s predict {:.3}s nfe {:.1} \
@@ -197,7 +261,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "run" => {
-            let backend = make_backend(&backend_name, &artifacts, solver)?;
+            let backend = train_backend(&args, &backend_name, &artifacts, solver)?;
             let exp = args
                 .positional
                 .get(1)
@@ -221,8 +285,118 @@ fn run() -> Result<()> {
             )
         }
         "serve" => serve(&args),
+        "worker" => worker(&args, &backend_name, solver),
         other => bail!("unknown command {other:?}\n{}", usage()),
     }
+}
+
+/// `regnde worker --addr <a>`: host the native backend's `grad_step`
+/// for a distributed coordinator (DESIGN.md §Distributed).  Blocks until
+/// a coordinator sends `shutdown` (or the process is killed).
+fn worker(args: &Args, backend_name: &str, solver: Option<&str>) -> Result<()> {
+    ensure!(
+        backend_name == "native",
+        "worker serves the native backend (grad_step is native-only); \
+         got --backend {backend_name}"
+    );
+    let addr = args.get_or("addr", "127.0.0.1:0");
+    let native = match solver {
+        Some(s) => NativeBackend::new().with_solver(s)?,
+        None => NativeBackend::new(),
+    };
+    let opts = WorkerOpts {
+        max_conns: args.get_usize("max-conns", 16)?.max(1),
+        ..Default::default()
+    };
+    let handle = Worker::spawn(Arc::new(native), opts, addr)?;
+    // The exact line CI greps to learn the bound port.
+    println!("worker listening on {}", handle.addr);
+    handle.join();
+    Ok(())
+}
+
+/// Backend for `train`/`run`.  Plain `make_backend` unless sharding is
+/// requested: `--shards N` alone wraps the native backend in
+/// single-process sharded execution (the determinism baseline), and
+/// `--distributed --workers a,b,c [--shards N]` runs the same shards on
+/// remote `regnde worker` processes (DESIGN.md §Distributed).
+fn train_backend(
+    args: &Args,
+    backend_name: &str,
+    artifacts: &std::path::Path,
+    solver: Option<&str>,
+) -> Result<Box<dyn Backend>> {
+    let distributed = args.flag("distributed");
+    if !distributed && args.get("shards").is_none() {
+        ensure!(
+            args.get("workers").is_none(),
+            "--workers requires --distributed"
+        );
+        return make_backend(backend_name, artifacts, solver);
+    }
+    ensure!(
+        backend_name == "native",
+        "--distributed/--shards shard the native backend (grad_step is \
+         native-only); got --backend {backend_name}"
+    );
+    let native = match solver {
+        Some(s) => NativeBackend::new().with_solver(s)?,
+        None => NativeBackend::new(),
+    };
+    if distributed {
+        let workers: Vec<String> = args
+            .get("workers")
+            .context("--distributed requires --workers host:port[,host:port...]")?
+            .split(',')
+            .map(|w| w.trim().to_string())
+            .filter(|w| !w.is_empty())
+            .collect();
+        ensure!(!workers.is_empty(), "--workers list is empty");
+        let shards = match args.get("shards") {
+            Some(s) => Some(s.parse::<usize>().context("--shards expects an integer")?),
+            None => None,
+        };
+        let backend = DistBackend::remote(native, &workers, shards, RemoteOpts::default())?;
+        println!("distributed: {}", backend.describe());
+        Ok(Box::new(backend))
+    } else {
+        let shards = args.get_usize("shards", 1)?.max(1);
+        Ok(Box::new(DistBackend::local(native, shards)))
+    }
+}
+
+/// Load `--resume <ckpt>` into a [`ResumeState`].  v1 checkpoints (no
+/// `train` block) resume with documented defaults: fresh optimizer
+/// moments, iter 0, ladder rung 0, empty descent window, zero epochs
+/// done.  The caller must rerun with the same experiment, method, seed
+/// and --iters for the continuation to be bit-identical (DESIGN.md
+/// §Distributed).
+fn load_resume(args: &Args, exp: &str) -> Result<Option<ResumeState>> {
+    let Some(path) = args.get("resume") else {
+        return Ok(None);
+    };
+    let ckpt = Checkpoint::load(std::path::Path::new(path))
+        .with_context(|| format!("loading --resume checkpoint {path}"))?;
+    ensure!(
+        ckpt.experiment == exp,
+        "--resume checkpoint {path} was trained on experiment {:?}, not {exp:?}",
+        ckpt.experiment
+    );
+    let train = ckpt.train.unwrap_or(TrainProgress {
+        opt_state: Vec::new(),
+        iter: 0,
+        rung: 0,
+        window: Vec::new(),
+        epochs_done: 0,
+    });
+    Ok(Some(ResumeState {
+        params: ckpt.state.params,
+        opt_state: train.opt_state,
+        iter: train.iter,
+        rung: train.rung,
+        window: train.window,
+        epochs_done: train.epochs_done,
+    }))
 }
 
 /// Persist a finished run's model as a serving checkpoint
@@ -231,7 +405,13 @@ fn save_checkpoint(backend: &dyn Backend, exp: &str, result: &RunResult, path: &
     let model = experiments::model_for(exp)?;
     let state = backend.export_state(model, &result.final_params)?;
     let grid = experiments::serving_grid(exp);
-    let ckpt = Checkpoint::new(state, exp, result.method.clone(), grid);
+    let ckpt = Checkpoint::new(state, exp, result.method.clone(), grid).with_train(TrainProgress {
+        opt_state: result.final_opt_state.clone(),
+        iter: result.final_iter,
+        rung: result.final_rung,
+        window: result.final_window.clone(),
+        epochs_done: result.epochs_done,
+    });
     let path = std::path::Path::new(path);
     ckpt.save(path)?;
     println!("checkpoint -> {}", path.display());
@@ -736,4 +916,108 @@ fn validate(artifacts: &std::path::Path) -> Result<()> {
 #[cfg(not(feature = "pjrt"))]
 fn validate(_artifacts: &std::path::Path) -> Result<()> {
     bail!("`validate` exercises the artifact manifest — rebuild with --features pjrt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Result<Args> {
+        Args::parse(argv.iter().map(|s| s.to_string()), VALUED)
+    }
+
+    /// Mirror of `run()`'s rejection path: parse, then check the
+    /// subcommand's known-option list.
+    fn accept(argv: &[&str]) -> Result<()> {
+        let args = parse(argv)?;
+        let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+        if let Some(known) = known_for(cmd, args.get("addr").is_some()) {
+            args.check_known(known)?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn known_commands_accept_their_own_options() {
+        accept(&["train", "--exp", "spiral-node", "--epochs", "2", "--verbose"]).unwrap();
+        accept(&[
+            "train",
+            "--exp",
+            "spiral-node",
+            "--distributed",
+            "--workers",
+            "a:1,b:2",
+            "--shards",
+            "2",
+            "--resume",
+            "ck.json",
+        ])
+        .unwrap();
+        accept(&["run", "spiral-node", "--method", "ernode", "--check-nfe"]).unwrap();
+        accept(&["worker", "--addr", "127.0.0.1:0", "--max-conns", "4"]).unwrap();
+        accept(&["serve", "--registry", "d", "--max-batch", "8"]).unwrap();
+        accept(&["predict", "--exp", "spiral-node"]).unwrap();
+        accept(&["predict", "--addr", "a:1", "--model", "m", "--retries", "2"]).unwrap();
+        accept(&["list"]).unwrap();
+        accept(&["help"]).unwrap();
+    }
+
+    #[test]
+    fn typoed_flags_are_rejected_with_the_valid_set() {
+        let err = accept(&["train", "--exp", "spiral-node", "--epoch", "2"]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("epoch"), "names the offender: {msg}");
+        assert!(msg.contains("epochs"), "lists valid options: {msg}");
+
+        // A flag valid for one subcommand is still rejected on another.
+        let err = accept(&["serve", "--registry", "d", "--resume", "x"]).unwrap_err();
+        assert!(format!("{err:#}").contains("resume"));
+        let err = accept(&["worker", "--distributed"]).unwrap_err();
+        assert!(format!("{err:#}").contains("distributed"));
+        // Local predict must not take remote-only options.
+        let err = accept(&["predict", "--exp", "e", "--retries", "2"]).unwrap_err();
+        assert!(format!("{err:#}").contains("retries"));
+    }
+
+    #[test]
+    fn workers_without_distributed_is_rejected() {
+        let args = parse(&["train", "--exp", "e", "--workers", "a:1"]).unwrap();
+        let err = train_backend(
+            &args,
+            "native",
+            std::path::Path::new("/tmp/none"),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--distributed"));
+    }
+
+    #[test]
+    fn distributed_requires_native_backend_and_workers() {
+        let args = parse(&["train", "--exp", "e", "--distributed"]).unwrap();
+        let err = train_backend(&args, "native", std::path::Path::new("/tmp/none"), None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--workers"));
+
+        let args = parse(&["train", "--distributed", "--workers", "a:1"]).unwrap();
+        let err = train_backend(&args, "pjrt", std::path::Path::new("/tmp/none"), None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("native"));
+    }
+
+    #[test]
+    fn unknown_subcommands_fall_through_to_the_command_error() {
+        // known_for returns None: the option check is skipped and the
+        // `match` rejects the command itself.
+        assert!(known_for("trian", false).is_none());
+        assert!(known_for("worker", false).is_some());
+    }
+
+    #[test]
+    fn local_sharding_builds_a_dist_backend() {
+        let args = parse(&["train", "--exp", "e", "--shards", "2"]).unwrap();
+        let backend =
+            train_backend(&args, "native", std::path::Path::new("/tmp/none"), None).unwrap();
+        assert_eq!(backend.name(), "dist");
+    }
 }

@@ -75,7 +75,7 @@ impl TrainData<'_> {
 
 /// Scalar coefficients of one train step (the coordinator owns every
 /// schedule; backends just consume the values).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StepCoefs {
     pub lr: f32,
     /// `R_E` coefficient (ERNODE/ERNSDE), 0 disables.
@@ -119,6 +119,21 @@ impl Default for StepCoefs {
 pub struct StepOutput {
     pub params: Vec<f32>,
     pub opt_state: Vec<f32>,
+    pub metrics: Metrics,
+}
+
+/// Result of one *gradient* evaluation ([`Backend::grad_step`]): the flat
+/// objective gradient at the current parameters plus the step's metric
+/// block, with **no optimizer update applied**.  This is the unit of work
+/// the distributed layer (`dist`) ships to workers: the coordinator owns
+/// the Adam state and applies the update once after reducing shard
+/// gradients (DESIGN.md §Distributed).
+#[derive(Clone, Debug)]
+pub struct GradOutput {
+    /// Flat `d(loss)/d(params)` — same length/layout as
+    /// [`TrainState::params`].  `f32` on the seam (the wire dtype);
+    /// reducers widen to f64 before combining.
+    pub grad: Vec<f32>,
     pub metrics: Metrics,
 }
 
@@ -198,6 +213,38 @@ pub trait Backend {
         data: &TrainData,
         coefs: &StepCoefs,
     ) -> Result<StepOutput>;
+
+    /// Evaluate the objective gradient at `state.params` on ladder rung
+    /// `rung` **without** applying the optimizer update — the distributed
+    /// seam.  `state.opt_state` is ignored (workers ship an empty one).
+    /// **Unsupported by default**: only backends that expose a raw
+    /// gradient (the native path; `train_step` is layered on top of it
+    /// there) override this.
+    fn grad_step(
+        &self,
+        model: &str,
+        tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<GradOutput> {
+        let _ = (model, tay, rung, state, data, coefs);
+        bail!(
+            "backend {:?} does not support grad_step (distributed \
+             training is native-backend only)",
+            self.name()
+        )
+    }
+
+    /// Number of independently shardable items in `data` for `model` —
+    /// the unit the data-parallel sharder splits over (batch rows for
+    /// classification, series for Latent ODE, 1 for whole-trajectory
+    /// fits).  Defaults to 1 (unsplittable).
+    fn shard_items(&self, model: &str, data: &TrainData) -> Result<usize> {
+        let _ = (model, data);
+        Ok(1)
+    }
 
     /// Inference with the early-exiting (fully adaptive) solver.
     /// Returns the primary output tensor (trajectory / logits / ...) and

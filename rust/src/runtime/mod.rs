@@ -22,7 +22,9 @@ pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod manifest;
 
-pub use backend::{Backend, ExportedState, Input, ModelInfo, StepCoefs, StepOutput, TrainData};
+pub use backend::{
+    Backend, ExportedState, GradOutput, Input, ModelInfo, StepCoefs, StepOutput, TrainData,
+};
 pub use native::NativeBackend;
 pub use state::{Metrics, TrainState};
 

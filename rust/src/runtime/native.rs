@@ -59,7 +59,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
-use super::backend::{Backend, ExportedState, ModelInfo, StepCoefs, StepOutput, TrainData};
+use super::backend::{
+    Backend, ExportedState, GradOutput, ModelInfo, StepCoefs, StepOutput, TrainData,
+};
 use super::state::{Metrics, TrainState};
 use crate::models::{Adam, Mlp, MlpBatchScratch};
 use crate::solvers::adjoint::{ode_backward_sys, sde_backward_sys, OdeTape, RegCoefs, SdeTape};
@@ -725,12 +727,43 @@ impl Backend for NativeBackend {
     fn train_step(
         &self,
         model: &str,
-        _tay: bool,
+        tay: bool,
         rung: usize,
         state: &TrainState,
         data: &TrainData,
         coefs: &StepCoefs,
     ) -> Result<StepOutput> {
+        // Layered on the distributed seam: evaluate the gradient, then
+        // apply the Adam update locally.  `to_f64` widening is bit-exact,
+        // so the f32 gradient seam costs one rounding — the same rounding
+        // every shard and the single-process path share.
+        let out = self.grad_step(model, tay, rung, state, data, coefs)?;
+        let grad = to_f64(&out.grad);
+        let mut params = state.params.clone();
+        let mut opt_state = state.opt_state.clone();
+        Adam::default().step(
+            &mut params,
+            &mut opt_state,
+            &grad,
+            coefs.lr as f64,
+            state.iter,
+        );
+        Ok(StepOutput {
+            params,
+            opt_state,
+            metrics: out.metrics,
+        })
+    }
+
+    fn grad_step(
+        &self,
+        model: &str,
+        _tay: bool,
+        rung: usize,
+        state: &TrainState,
+        data: &TrainData,
+        coefs: &StepCoefs,
+    ) -> Result<GradOutput> {
         let m = self.get(model)?;
         ensure!(rung < m.ladder.len(), "rung {rung} out of ladder");
         ensure!(
@@ -849,21 +882,31 @@ impl Backend for NativeBackend {
         // sampled-step local term).
         let loss = data_loss + coef_e * stats.r_e + coef_s * stats.r_s + coef_l * r_l;
 
-        let mut params = state.params.clone();
-        let mut opt_state = state.opt_state.clone();
-        Adam::default().step(
-            &mut params,
-            &mut opt_state,
-            &grad,
-            coefs.lr as f64,
-            state.iter,
-        );
         let mut step_metrics = metrics(loss, metric, &stats, solve_err);
         step_metrics.r_l = r_l;
-        Ok(StepOutput {
-            params,
-            opt_state,
+        Ok(GradOutput {
+            grad: grad.iter().map(|&g| g as f32).collect(),
             metrics: step_metrics,
+        })
+    }
+
+    fn shard_items(&self, model: &str, data: &TrainData) -> Result<usize> {
+        let m = self.get(model)?;
+        Ok(match (&m.arch, data) {
+            // Whole-trajectory / whole-ensemble fits are one item: their
+            // loss is not a mean over independent rows.
+            (Arch::SpiralNode { .. }, TrainData::Trajectory { .. })
+            | (Arch::SpiralNsde { .. }, TrainData::Moments { .. }) => 1,
+            (Arch::MnistNode { .. } | Arch::MnistNsde { .. }, TrainData::Classify { x, .. }) => {
+                ensure!(!x.is_empty() && x.len() % IMG_DIM == 0, "image batch shape");
+                x.len() / IMG_DIM
+            }
+            (Arch::LatentOde { .. }, TrainData::Series { x, ts, .. }) => {
+                let row = ts.len() * SERIES_CHANNELS;
+                ensure!(row > 0 && !x.is_empty() && x.len() % row == 0, "series batch shape");
+                x.len() / row
+            }
+            (_, d) => bail!("model {model} cannot shard {:?} data", d.kind()),
         })
     }
 

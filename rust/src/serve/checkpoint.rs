@@ -21,7 +21,15 @@
 //!   "params_len": 354,
 //!   "params_hex": "9a99...",           // f32 LE bytes, 8 hex chars each
 //!   "hyper": { "lr": 0.02, ... },
-//!   "ts": [0.0, 0.05, ...]             // serving grid (trajectory models)
+//!   "ts": [0.0, 0.05, ...],            // serving grid (trajectory models)
+//!   "train": {                         // v2, optional: resume block
+//!     "opt_state_hex": "0000...",      // Adam moments, f32 LE hex
+//!     "opt_len": 708,
+//!     "iter": 50,                      // optimizer iterations done
+//!     "rung": 1,                       // budget-ladder rung
+//!     "window": [12.0, 9.0],           // router descent window
+//!     "epochs_done": 2
+//!   }
 //! }
 //! ```
 //!
@@ -31,6 +39,12 @@
 //! (`tests/serve_checkpoint.rs` proves it on all five experiment model
 //! shapes).  Loading never panics on bad input — malformed, truncated
 //! and wrong-version files all surface as a typed [`CheckpointError`].
+//!
+//! **Versioning:** v2 adds the optional `train` block (Adam moments +
+//! budget-ladder position) that `regnde train --resume` continues from
+//! bit-identically (DESIGN.md §Distributed).  v1 files still load: they
+//! simply carry no train block (`train: None`), which resume treats as
+//! fresh optimizer moments at iteration 0, rung 0, zero epochs done.
 //!
 //! [`runtime::ExportedState`]: crate::runtime::ExportedState
 //! [`util::json`]: crate::util::json
@@ -43,9 +57,13 @@ use std::path::Path;
 use crate::runtime::ExportedState;
 use crate::util::json::{obj, Json};
 
-/// Current checkpoint format version (the `version` field).
+/// Current checkpoint format version (the `version` field): v2 adds the
+/// optional `train` resume block.
 // analyze: wire(checkpoint-schema)
-pub const CHECKPOINT_VERSION: u64 = 1;
+pub const CHECKPOINT_VERSION: u64 = 2;
+/// Oldest version this build still reads (no `train` block).
+// analyze: wire(checkpoint-schema)
+pub const CHECKPOINT_VERSION_V1: u64 = 1;
 /// The `schema` tag every checkpoint carries.
 // analyze: wire(checkpoint-schema)
 pub const CHECKPOINT_SCHEMA: &str = "regnde-checkpoint";
@@ -91,6 +109,22 @@ impl From<std::io::Error> for CheckpointError {
     }
 }
 
+/// Mid-run training position persisted by checkpoint v2's `train`
+/// block: everything `--resume` needs to continue bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainProgress {
+    /// Flat optimizer state (Adam moments), bit-exact via hex.
+    pub opt_state: Vec<f32>,
+    /// Completed optimizer iterations (lr-decay position).
+    pub iter: u64,
+    /// Budget-ladder rung.
+    pub rung: usize,
+    /// Budget-router descent-evidence window.
+    pub window: Vec<f64>,
+    /// Epochs completed before the save.
+    pub epochs_done: usize,
+}
+
 /// A persisted trained model: the backend-exported state plus the
 /// coordinator-owned serving metadata.
 #[derive(Clone, Debug, PartialEq)]
@@ -106,6 +140,9 @@ pub struct Checkpoint {
     /// coalesces requests over this shared grid); empty for model kinds
     /// without a single-trajectory serving path.
     pub ts: Vec<f32>,
+    /// Mid-run training position (v2; `None` for serving-only
+    /// checkpoints and every v1 file).
+    pub train: Option<TrainProgress>,
 }
 
 impl Checkpoint {
@@ -120,7 +157,15 @@ impl Checkpoint {
             experiment: experiment.into(),
             method: method.into(),
             ts,
+            train: None,
         }
+    }
+
+    /// Attach a training-resume block (written by `regnde train
+    /// --checkpoint`; consumed by `--resume`).
+    pub fn with_train(mut self, train: TrainProgress) -> Checkpoint {
+        self.train = Some(train);
+        self
     }
 
     pub fn to_json(&self) -> Json {
@@ -132,7 +177,7 @@ impl Checkpoint {
         for &t in &self.ts {
             ts.push(Json::from(t as f64));
         }
-        obj([
+        let mut j = obj([
             ("schema", Json::from(CHECKPOINT_SCHEMA)),
             ("version", Json::from(CHECKPOINT_VERSION as usize)),
             ("model", Json::from(self.state.model.as_str())),
@@ -146,7 +191,22 @@ impl Checkpoint {
             ("params_hex", Json::from(encode_f32_hex(&self.state.params))),
             ("hyper", Json::Obj(hyper)),
             ("ts", Json::Arr(ts)),
-        ])
+        ]);
+        if let (Some(t), Json::Obj(m)) = (&self.train, &mut j) {
+            let window: Vec<Json> = t.window.iter().map(|&w| Json::from(w)).collect();
+            m.insert(
+                "train".into(),
+                obj([
+                    ("opt_state_hex", Json::from(encode_f32_hex(&t.opt_state))),
+                    ("opt_len", Json::from(t.opt_state.len())),
+                    ("iter", Json::from(t.iter as usize)),
+                    ("rung", Json::from(t.rung)),
+                    ("window", Json::Arr(window)),
+                    ("epochs_done", Json::from(t.epochs_done)),
+                ]),
+            );
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<Checkpoint, CheckpointError> {
@@ -167,7 +227,7 @@ impl Checkpoint {
             return Err(CheckpointError::WrongSchema(schema));
         }
         let version = num_field("version")? as u64;
-        if version != CHECKPOINT_VERSION {
+        if version != CHECKPOINT_VERSION && version != CHECKPOINT_VERSION_V1 {
             return Err(CheckpointError::WrongVersion {
                 found: version,
                 want: CHECKPOINT_VERSION,
@@ -209,6 +269,18 @@ impl Checkpoint {
             }
         }
 
+        // The resume block is a v2 feature: v1 files never carry one (a
+        // stray "train" key in a v1 file is ignored, per the documented
+        // "v1 loads with defaults" contract).
+        let train = if version >= CHECKPOINT_VERSION {
+            match j.opt("train") {
+                Some(t) => Some(parse_train(t)?),
+                None => None,
+            }
+        } else {
+            None
+        };
+
         Ok(Checkpoint {
             state: ExportedState {
                 model: str_field("model")?,
@@ -222,6 +294,7 @@ impl Checkpoint {
             experiment: str_field("experiment")?,
             method: str_field("method")?,
             ts,
+            train,
         })
     }
 
@@ -249,6 +322,44 @@ impl Checkpoint {
 fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, CheckpointError> {
     j.opt(key)
         .ok_or_else(|| CheckpointError::Malformed(format!("missing field {key:?}")))
+}
+
+/// Decode a v2 `train` resume block (typed errors, never panics).
+fn parse_train(t: &Json) -> Result<TrainProgress, CheckpointError> {
+    let num = |key: &str| -> Result<f64, CheckpointError> {
+        field(t, key)?.as_f64().map_err(|_| {
+            CheckpointError::Malformed(format!("train field {key:?} must be a number"))
+        })
+    };
+    let hex = field(t, "opt_state_hex")?.as_str().map_err(|_| {
+        CheckpointError::Malformed("train field \"opt_state_hex\" must be a string".into())
+    })?;
+    let opt_state = decode_f32_hex(hex)?;
+    let opt_len = num("opt_len")? as usize;
+    if opt_state.len() != opt_len {
+        return Err(CheckpointError::Malformed(format!(
+            "opt_state_hex decodes to {} values but opt_len says {opt_len}",
+            opt_state.len()
+        )));
+    }
+    let mut window = Vec::new();
+    if let Some(w) = t.opt("window") {
+        let arr = w.as_arr().map_err(|_| {
+            CheckpointError::Malformed("train field \"window\" must be an array".into())
+        })?;
+        for v in arr {
+            window.push(v.as_f64().map_err(|_| {
+                CheckpointError::Malformed("train window entries must be numbers".into())
+            })?);
+        }
+    }
+    Ok(TrainProgress {
+        opt_state,
+        iter: num("iter")? as u64,
+        rung: num("rung")? as usize,
+        window,
+        epochs_done: num("epochs_done")? as usize,
+    })
 }
 
 /// Encode f32s as lowercase hex of their little-endian bytes (8 chars
@@ -358,6 +469,79 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert_eq!(back.ts, ck.ts);
+    }
+
+    #[test]
+    fn train_block_round_trips_bit_exact() {
+        let progress = TrainProgress {
+            opt_state: vec![0.5, -1.25e-7, f32::MIN_POSITIVE, 0.0],
+            iter: 42,
+            rung: 1,
+            window: vec![12.0, 9.5, 3.0],
+            epochs_done: 2,
+        };
+        let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![0.0, 1.0])
+            .with_train(progress.clone());
+        let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back, ck);
+        let t = back.train.expect("train block survives");
+        for (a, b) in progress.opt_state.iter().zip(&t.opt_state) {
+            assert_eq!(a.to_bits(), b.to_bits(), "Adam moments must be bit-exact");
+        }
+        assert_eq!(t.iter, 42);
+        assert_eq!(t.rung, 1);
+        assert_eq!(t.window, progress.window);
+        // Through text too (what save/load exercise).
+        let text = ck.to_json().to_string_pretty();
+        let back = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.train, ck.train);
+    }
+
+    #[test]
+    fn malformed_train_blocks_are_typed() {
+        let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![]).with_train(
+            TrainProgress {
+                opt_state: vec![1.0, 2.0],
+                iter: 1,
+                rung: 0,
+                window: vec![],
+                epochs_done: 1,
+            },
+        );
+        // Inconsistent opt_len.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(t)) = m.get_mut("train") {
+                t.insert("opt_len".into(), Json::from(99usize));
+            }
+        }
+        assert!(matches!(
+            Checkpoint::from_json(&j),
+            Err(CheckpointError::Malformed(_))
+        ));
+        // Missing iter.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(t)) = m.get_mut("train") {
+                t.remove("iter");
+            }
+        }
+        assert!(matches!(
+            Checkpoint::from_json(&j),
+            Err(CheckpointError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn v1_files_load_with_default_train() {
+        let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![0.5]);
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::from(CHECKPOINT_VERSION_V1 as usize));
+        }
+        let back = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(back.train, None);
+        assert_eq!(back.state, ck.state);
     }
 
     #[test]

@@ -98,7 +98,7 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{BatchError, BatchPolicy, BatchReply, Batcher, BatcherStats};
-pub use checkpoint::{Checkpoint, CheckpointError};
+pub use checkpoint::{Checkpoint, CheckpointError, TrainProgress};
 pub use protocol::{Request, Response};
 pub use registry::{PredictError, Registry, ServableModel};
 pub use server::{Client, Server, ServerOpts};

@@ -24,8 +24,9 @@ use super::error::{SolveError, SolveResult, SolveResultExt};
 use super::ode::{self, Stats};
 use super::sde;
 use super::system::{OdeSystem, SdeSystem};
+use crate::dist::ShardPlan;
 use crate::util::rng::Rng;
-use crate::util::threadpool::{chunk_ranges, default_workers, map_bounded};
+use crate::util::threadpool::{default_workers, map_bounded};
 
 /// How an ensemble is scheduled (orthogonal to solver tolerances).
 #[derive(Clone, Debug)]
@@ -57,13 +58,18 @@ impl EnsembleOptions {
     }
 
     /// Run `job` over every chunk of `0..n`, merging results in chunk
-    /// order regardless of how (or whether) chunks ran in parallel.
+    /// order regardless of how (or whether) chunks ran in parallel.  The
+    /// partition comes from the shared deterministic sharder
+    /// ([`ShardPlan::by_chunk`]) so ensemble sweeps and the distributed
+    /// training coordinator split work identically (DESIGN.md
+    /// §Distributed).
     fn run_chunks<R: Send>(
         &self,
         n: usize,
         job: impl Fn(std::ops::Range<usize>) -> R + Send + Sync,
     ) -> Vec<R> {
-        map_bounded(self.workers, chunk_ranges(n, self.chunk), job)
+        let plan = ShardPlan::by_chunk(n, self.chunk);
+        map_bounded(self.workers, plan.ranges().to_vec(), job)
     }
 }
 

@@ -1,0 +1,232 @@
+//! Distributed-vs-single-process bit-equality suite (ISSUE 9 acceptance).
+//!
+//! The subsystem's headline guarantee (DESIGN.md §Distributed): at equal
+//! shard count, a distributed `train_step` — shards evaluated on remote
+//! `regnde worker` processes over loopback TCP — produces **bit-identical**
+//! parameters and metrics to single-process execution.  The chain is
+//! (1) workers run the same native `grad_step` code on bit-exact wire
+//! inputs (the f32/f64 frames are lossless), (2) the coordinator reduces
+//! shard gradients in a fixed tree order with fixed f64 widening, and
+//! (3) Adam consumes the reduced gradient identically.  This suite pins
+//! all three links end-to-end, plus the checkpoint-resume continuation
+//! (same run, interrupted and resumed, lands on the same bits).
+
+use std::sync::Arc;
+
+use regnde::coordinator::experiments::{self, ResumeState, TrainOpts};
+use regnde::coordinator::Method;
+use regnde::dist::{DistBackend, RemoteOpts, Worker, WorkerHandle, WorkerOpts};
+use regnde::runtime::{Backend, NativeBackend, StepCoefs, TrainData, TrainState};
+use regnde::util::rng::Rng;
+
+const IMG_DIM: usize = 784;
+const CLASSES: usize = 10;
+
+fn spawn_worker() -> WorkerHandle {
+    Worker::spawn(
+        Arc::new(NativeBackend::new()),
+        WorkerOpts {
+            read_timeout: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+        "127.0.0.1:0",
+    )
+    .expect("spawn loopback worker")
+}
+
+/// Synthetic one-hot classification batch, `B` rows of `[IMG_DIM]`.
+fn classify_batch(b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; b * IMG_DIM];
+    rng.fill_normal(&mut x, 0.5);
+    let mut y = vec![0.0f32; b * CLASSES];
+    for row in 0..b {
+        y[row * CLASSES + rng.below(CLASSES)] = 1.0;
+    }
+    (x, y)
+}
+
+fn assert_metrics_bits_equal(a: &regnde::runtime::Metrics, b: &regnde::runtime::Metrics) {
+    for (name, x, y) in [
+        ("loss", a.loss, b.loss),
+        ("metric", a.metric, b.metric),
+        ("nfe", a.nfe, b.nfe),
+        ("naccept", a.naccept, b.naccept),
+        ("nreject", a.nreject, b.nreject),
+        ("r_e", a.r_e, b.r_e),
+        ("r_e2", a.r_e2, b.r_e2),
+        ("r_s", a.r_s, b.r_s),
+        ("r_l", a.r_l, b.r_l),
+        ("r_aux", a.r_aux, b.r_aux),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "metric {name} drifted: {x} vs {y}");
+    }
+    assert_eq!(a.success, b.success);
+    assert_eq!(a.error, b.error);
+}
+
+fn assert_params_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i} drifted: {x} vs {y}");
+    }
+}
+
+/// Two loopback workers, two shards: every link of the chain at once.
+/// Three sequential optimizer steps so optimizer-state divergence would
+/// compound and surface.
+#[test]
+fn two_workers_two_shards_match_single_process_bitwise() {
+    let w1 = spawn_worker();
+    let w2 = spawn_worker();
+    let workers = vec![w1.addr.to_string(), w2.addr.to_string()];
+
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(2), RemoteOpts::default())
+        .expect("remote backend");
+    let local = DistBackend::local(NativeBackend::new(), 2);
+
+    let model = "mnist_node";
+    let info = local.model(model).expect("model info");
+    let params = local.init_params(model, 11).expect("init");
+    let (x, y) = classify_batch(8, 0xD157);
+    let data = TrainData::Classify { x: &x, y: &y };
+
+    let mut sr = TrainState {
+        params: params.clone(),
+        opt_state: vec![0.0; info.opt_state_size],
+        iter: 0,
+    };
+    let mut sl = sr.clone();
+    for step in 0..3 {
+        let coefs = StepCoefs {
+            lr: 0.05,
+            seed: 1000 + step,
+            ..Default::default()
+        };
+        let mr = remote
+            .train_step(model, false, 0, &mut sr, &data, &coefs)
+            .expect("remote step");
+        let ml = local
+            .train_step(model, false, 0, &mut sl, &data, &coefs)
+            .expect("local step");
+        assert_metrics_bits_equal(&mr, &ml);
+        assert_params_bits_equal(&sr.params, &sl.params, "params");
+        assert_params_bits_equal(&sr.opt_state, &sl.opt_state, "opt_state");
+        assert_eq!(sr.iter, sl.iter);
+    }
+
+    w1.kill();
+    w2.kill();
+}
+
+/// A full experiment epoch through the coordinator's budget router on
+/// the distributed backend vs the single-process sharded backend — the
+/// exact comparison the CI smoke job greps for via checkpoints.
+#[test]
+fn full_experiment_run_matches_single_process_bitwise() {
+    let w1 = spawn_worker();
+    let w2 = spawn_worker();
+    let workers = vec![w1.addr.to_string(), w2.addr.to_string()];
+
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 2,
+        seed: 5,
+        verbose: false,
+    };
+    let method = Method::VANILLA;
+
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(2), RemoteOpts::default())
+        .expect("remote backend");
+    let reference = DistBackend::local(NativeBackend::new(), 2);
+
+    let rr = experiments::run_by_name(&remote, "mnist-node", method, opts).expect("remote run");
+    let rl = experiments::run_by_name(&reference, "mnist-node", method, opts).expect("local run");
+
+    assert_params_bits_equal(&rr.final_params, &rl.final_params, "final params");
+    assert_params_bits_equal(&rr.final_opt_state, &rl.final_opt_state, "final opt state");
+    assert_eq!(rr.final_iter, rl.final_iter);
+    assert_eq!(rr.final_rung, rl.final_rung);
+    assert_eq!(
+        rr.final_test_loss.to_bits(),
+        rl.final_test_loss.to_bits(),
+        "final test loss drifted"
+    );
+
+    w1.kill();
+    w2.kill();
+}
+
+/// Unsplittable data (a single ground-truth trajectory) with more
+/// shards than items: the empty shards are skipped and the result stays
+/// bit-identical to the plain native backend.
+#[test]
+fn remote_unsplittable_data_matches_plain_native() {
+    let w1 = spawn_worker();
+    let workers = vec![w1.addr.to_string()];
+
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(3), RemoteOpts::default())
+        .expect("remote backend");
+    let plain = NativeBackend::new();
+
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 3,
+        seed: 2,
+        verbose: false,
+    };
+    let rr = experiments::run_by_name(&remote, "spiral-node", Method::VANILLA, opts)
+        .expect("remote run");
+    let rp = experiments::run_by_name(&plain, "spiral-node", Method::VANILLA, opts)
+        .expect("plain run");
+    assert_params_bits_equal(&rr.final_params, &rp.final_params, "final params");
+    assert_eq!(rr.final_test_loss.to_bits(), rp.final_test_loss.to_bits());
+
+    w1.kill();
+}
+
+/// Checkpoint-resume continuation (satellite: checkpoint schema v2):
+/// train E epochs straight vs train 1, hand the RunResult's training
+/// position to a resumed run for E-1 more — same final bits.  Covers
+/// the Adam moments, the iteration counter, the ladder rung + descent
+/// window, and the RNG/batcher fast-forward in the drivers.
+#[test]
+fn resume_continues_bit_identically() {
+    for (exp, seed) in [("spiral-node", 3u64), ("mnist-node", 4u64)] {
+        let backend = NativeBackend::new();
+        let full_opts = TrainOpts {
+            epochs: 2,
+            iters_per_epoch: 3,
+            seed,
+            verbose: false,
+        };
+        let head_opts = TrainOpts { epochs: 1, ..full_opts };
+
+        let full = experiments::run_by_name(&backend, exp, Method::VANILLA, full_opts)
+            .expect("uninterrupted run");
+        let head = experiments::run_by_name(&backend, exp, Method::VANILLA, head_opts)
+            .expect("first-epoch run");
+        let resume = ResumeState {
+            params: head.final_params.clone(),
+            opt_state: head.final_opt_state.clone(),
+            iter: head.final_iter,
+            rung: head.final_rung,
+            window: head.final_window.clone(),
+            epochs_done: head.epochs_done,
+        };
+        let tail = experiments::run_by_name_resumed(
+            &backend,
+            exp,
+            Method::VANILLA,
+            head_opts,
+            Some(&resume),
+        )
+        .expect("resumed run");
+
+        assert_eq!(tail.epochs_done, full.epochs_done, "{exp}: epoch accounting");
+        assert_params_bits_equal(&tail.final_params, &full.final_params, exp);
+        assert_params_bits_equal(&tail.final_opt_state, &full.final_opt_state, exp);
+        assert_eq!(tail.final_iter, full.final_iter, "{exp}: iter");
+        assert_eq!(tail.final_rung, full.final_rung, "{exp}: rung");
+    }
+}

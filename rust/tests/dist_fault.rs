@@ -1,0 +1,220 @@
+//! Distributed worker-failure suite (ISSUE 9 acceptance).
+//!
+//! Failure semantics under test (DESIGN.md §Distributed): a worker that
+//! dies mid-epoch is detected by its transport failure, marked dead, and
+//! its shard is **reassigned** to the next live worker in the fixed ring
+//! — the recomputation is deterministic, so the epoch's bits are
+//! unchanged.  When every worker has been tried for a shard, the step
+//! fails with the typed [`DistError::WorkersExhausted`] — surfaced
+//! through `train_step` and the experiment drivers as a normal error,
+//! never a hang and never a panic.  Every remote read is
+//! deadline-bounded, so the tests also assert wall-clock bounds.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use regnde::coordinator::experiments::{self, TrainOpts};
+use regnde::coordinator::Method;
+use regnde::dist::{DistBackend, DistError, RemoteOpts, Worker, WorkerHandle, WorkerOpts};
+use regnde::runtime::{Backend, NativeBackend, StepCoefs, TrainData, TrainState};
+use regnde::util::rng::Rng;
+
+const IMG_DIM: usize = 784;
+const CLASSES: usize = 10;
+
+fn spawn_worker() -> WorkerHandle {
+    Worker::spawn(
+        Arc::new(NativeBackend::new()),
+        WorkerOpts {
+            read_timeout: Duration::from_millis(20),
+            ..Default::default()
+        },
+        "127.0.0.1:0",
+    )
+    .expect("spawn loopback worker")
+}
+
+/// Short deadlines so a hang would fail the test quickly instead of
+/// stalling the suite.
+fn fast_opts() -> RemoteOpts {
+    RemoteOpts {
+        connect_timeout: Duration::from_millis(500),
+        request_timeout: Duration::from_secs(30),
+        read_tick: Duration::from_millis(10),
+    }
+}
+
+fn classify_batch(b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; b * IMG_DIM];
+    rng.fill_normal(&mut x, 0.5);
+    let mut y = vec![0.0f32; b * CLASSES];
+    for row in 0..b {
+        y[row * CLASSES + rng.below(CLASSES)] = 1.0;
+    }
+    (x, y)
+}
+
+fn fresh_state(backend: &dyn Backend, model: &str) -> TrainState {
+    let info = backend.model(model).expect("model info");
+    TrainState {
+        params: backend.init_params(model, 11).expect("init"),
+        opt_state: vec![0.0; info.opt_state_size],
+        iter: 0,
+    }
+}
+
+/// Kill one of two workers between steps: the dead worker's shard is
+/// reassigned to the survivor and training continues with bits equal to
+/// an all-healthy (single-process) run.
+#[test]
+fn killed_worker_is_reassigned_and_bits_survive() {
+    let w1 = spawn_worker();
+    let w2 = spawn_worker();
+    let workers = vec![w1.addr.to_string(), w2.addr.to_string()];
+
+    let model = "mnist_node";
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(2), fast_opts())
+        .expect("remote backend");
+    let reference = DistBackend::local(NativeBackend::new(), 2);
+
+    let (x, y) = classify_batch(8, 0xFA17);
+    let data = TrainData::Classify { x: &x, y: &y };
+    let mut sr = fresh_state(&remote, model);
+    let mut sl = fresh_state(&reference, model);
+
+    let step = |n: u32| StepCoefs {
+        lr: 0.05,
+        seed: 7000 + n,
+        ..Default::default()
+    };
+
+    // Step 0: both workers healthy.
+    remote
+        .train_step(model, false, 0, &mut sr, &data, &step(0))
+        .expect("healthy step");
+    reference
+        .train_step(model, false, 0, &mut sl, &data, &step(0))
+        .expect("reference step");
+
+    // Kill the second worker mid-epoch; the next step must reassign its
+    // shard to the survivor, not fail and not hang.
+    w2.kill();
+    let t0 = Instant::now();
+    remote
+        .train_step(model, false, 0, &mut sr, &data, &step(1))
+        .expect("step after worker death (reassigned shard)");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "reassignment stalled: {:?}",
+        t0.elapsed()
+    );
+    reference
+        .train_step(model, false, 0, &mut sl, &data, &step(1))
+        .expect("reference step");
+
+    // One more step on the surviving topology.
+    remote
+        .train_step(model, false, 0, &mut sr, &data, &step(2))
+        .expect("follow-up step");
+    reference
+        .train_step(model, false, 0, &mut sl, &data, &step(2))
+        .expect("reference step");
+
+    assert_eq!(sr.params.len(), sl.params.len());
+    for (i, (a, b)) in sr.params.iter().zip(&sl.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} drifted after failover");
+    }
+    for (i, (a, b)) in sr.opt_state.iter().zip(&sl.opt_state).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "opt_state {i} drifted after failover");
+    }
+
+    w1.kill();
+}
+
+/// Every worker dead: the step fails with the typed
+/// `DistError::WorkersExhausted` in bounded time — through an
+/// established connection (worker dies under a live client) and again
+/// on the already-dead topology.
+#[test]
+fn all_workers_dead_is_a_typed_error_not_a_hang() {
+    let w1 = spawn_worker();
+    let workers = vec![w1.addr.to_string()];
+
+    let model = "spiral_node";
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(1), fast_opts())
+        .expect("remote backend");
+    let (truth, ts) = experiments::spiral_node::ground_truth();
+    let data = TrainData::Trajectory {
+        data: &truth,
+        ts: &ts,
+    };
+    let mut state = fresh_state(&remote, model);
+    let coefs = StepCoefs {
+        lr: 0.05,
+        seed: 1,
+        ..Default::default()
+    };
+
+    // Healthy first step establishes the persistent connection.
+    remote
+        .train_step(model, false, 0, &mut state, &data, &coefs)
+        .expect("healthy step");
+
+    w1.kill();
+    let t0 = Instant::now();
+    let err = remote
+        .train_step(model, false, 0, &mut state, &data, &coefs)
+        .expect_err("step with every worker dead must fail");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "failure took {:?} — deadline not enforced",
+        t0.elapsed()
+    );
+    let dist = err
+        .downcast_ref::<DistError>()
+        .unwrap_or_else(|| panic!("expected DistError, got: {err:#}"));
+    let DistError::WorkersExhausted { shard, workers, .. } = dist;
+    assert_eq!(*shard, 0);
+    assert_eq!(*workers, 1);
+
+    // The topology stays dead: a retry is the same typed error, still
+    // bounded, still no panic.
+    let t1 = Instant::now();
+    let err = remote
+        .train_step(model, false, 0, &mut state, &data, &coefs)
+        .expect_err("second step must also fail");
+    assert!(err.downcast_ref::<DistError>().is_some(), "retry lost the typed error");
+    assert!(t1.elapsed() < Duration::from_secs(60));
+}
+
+/// The typed error propagates through a full experiment driver (budget
+/// router included) as an `Err`, not a panic or a stall.
+#[test]
+fn experiment_driver_surfaces_worker_exhaustion() {
+    let w1 = spawn_worker();
+    let workers = vec![w1.addr.to_string()];
+    w1.kill();
+
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(1), fast_opts())
+        .expect("remote backend");
+    let opts = TrainOpts {
+        epochs: 1,
+        iters_per_epoch: 1,
+        seed: 0,
+        verbose: false,
+    };
+    let t0 = Instant::now();
+    let err = experiments::run_by_name(&remote, "spiral-node", Method::VANILLA, opts)
+        .expect_err("training against a dead worker pool must fail");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "driver stalled for {:?}",
+        t0.elapsed()
+    );
+    let chain = format!("{err:#}");
+    assert!(
+        chain.contains("worker"),
+        "error chain should name the worker exhaustion: {chain}"
+    );
+}

@@ -1,0 +1,222 @@
+//! Property tests for the distributed-training binary frame codec
+//! (ISSUE 9, satellite: codec hardening).
+//!
+//! The codec's contract (DESIGN.md §Distributed): every malformed input
+//! — truncated, bit-flipped, oversized, wrong-magic — decodes to a typed
+//! [`FrameError`], never a panic; decoding never inspects a byte past
+//! the declared frame end; and the `Oversized` cap fires on the header
+//! alone, before any payload allocation.  Driven here with the in-tree
+//! property framework (`util::propcheck`) over randomized frames and
+//! randomized corruption.
+
+use std::io::Cursor;
+
+use regnde::dist::protocol::{frame, read_frame_patient, Frame, FrameBody, FrameError};
+use regnde::dist::MAX_FRAME_ELEMS;
+use regnde::util::propcheck::{check, ensure, Gen};
+
+/// A random well-formed frame: any type byte, length 0..=64, payload
+/// values spanning negatives, subnormal-ish magnitudes and non-finite
+/// specials (the codec moves bits, not numbers).
+fn gen_frame(g: &mut Gen) -> Frame {
+    let ty = frame::ALL_TYPES[g.usize_in(0, frame::ALL_TYPES.len() - 1)];
+    let n = g.usize_in(0, 64);
+    if ty == frame::METRICS {
+        let mut v = g.vec_f64(n, -1e6, 1e6);
+        if !v.is_empty() && g.bool() {
+            v[0] = f64::NAN;
+        }
+        Frame {
+            ty,
+            body: FrameBody::F64(v),
+        }
+    } else {
+        let mut v = g.vec_f32(n, -1e6, 1e6);
+        if !v.is_empty() && g.bool() {
+            v[0] = f32::INFINITY;
+        }
+        Frame::f32(ty, v)
+    }
+}
+
+/// Bitwise frame equality — NaN payloads must round-trip too, so
+/// `PartialEq` on the floats is not enough.
+fn bits_equal(a: &Frame, b: &Frame) -> bool {
+    if a.ty != b.ty {
+        return false;
+    }
+    match (&a.body, &b.body) {
+        (FrameBody::F32(x), FrameBody::F32(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (FrameBody::F64(x), FrameBody::F64(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => false,
+    }
+}
+
+#[test]
+fn encode_decode_round_trips_bit_exact() {
+    check("frame round-trip", 300, |g| {
+        let f = gen_frame(g);
+        let bytes = f.encode();
+        let (back, used) = Frame::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
+        ensure(used == bytes.len(), format!("consumed {used} of {}", bytes.len()))?;
+        ensure(bits_equal(&f, &back), "payload bits changed in transit")
+    });
+}
+
+#[test]
+fn decode_never_reads_past_the_declared_frame_end() {
+    check("no over-read", 300, |g| {
+        let f = gen_frame(g);
+        let mut bytes = f.encode();
+        let frame_len = bytes.len();
+        // Arbitrary trailing garbage — including bytes that look like a
+        // fresh (corrupt) header — must be left untouched.
+        let junk = g.usize_in(1, 64);
+        for _ in 0..junk {
+            bytes.push(g.usize_in(0, 255) as u8);
+        }
+        let (back, used) = Frame::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
+        ensure(used == frame_len, format!("consumed {used}, frame is {frame_len}"))?;
+        ensure(bits_equal(&f, &back), "trailing junk leaked into the payload")
+    });
+}
+
+#[test]
+fn every_truncation_is_a_typed_error() {
+    check("truncation", 300, |g| {
+        let f = gen_frame(g);
+        let bytes = f.encode();
+        let cut = g.usize_in(0, bytes.len() - 1);
+        match Frame::decode(&bytes[..cut]) {
+            Err(FrameError::Truncated { need, got }) => {
+                ensure(got == cut, format!("got field {got}, cut at {cut}"))?;
+                ensure(need > cut, format!("need {need} <= cut {cut}"))
+            }
+            Err(other) => Err(format!("expected Truncated, got {other}")),
+            Ok(_) => Err(format!("decoded a frame from {cut}/{} bytes", bytes.len())),
+        }
+    });
+}
+
+#[test]
+fn every_single_bit_flip_is_a_typed_error() {
+    // Exhaustive over one small frame: flipping ANY single bit anywhere
+    // in the encoding must surface as a typed error — the type byte and
+    // count are checksummed, so even a flip onto another valid type
+    // byte cannot silently succeed.
+    let f = Frame::f32(frame::GRAD, vec![1.0, -2.5, 3.25]);
+    let bytes = f.encode();
+    for byte in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut corrupt = bytes.clone();
+            corrupt[byte] ^= 1 << bit;
+            match Frame::decode(&corrupt) {
+                Ok(_) => panic!("flip {byte}:{bit} decoded successfully"),
+                Err(
+                    FrameError::BadMagic(_)
+                    | FrameError::BadType(_)
+                    | FrameError::Oversized { .. }
+                    | FrameError::Checksum
+                    | FrameError::Truncated { .. },
+                ) => {}
+                Err(other) => panic!("flip {byte}:{bit}: unexpected error {other}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn random_bit_flips_on_random_frames_never_panic_or_pass() {
+    check("random corruption", 300, |g| {
+        let f = gen_frame(g);
+        let mut bytes = f.encode();
+        let byte = g.usize_in(0, bytes.len() - 1);
+        let bit = g.usize_in(0, 7);
+        bytes[byte] ^= 1 << bit;
+        match Frame::decode(&bytes) {
+            Ok(_) => Err(format!("corrupted frame (byte {byte} bit {bit}) decoded")),
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn oversized_counts_are_rejected_before_allocation() {
+    // Hand-build headers whose count exceeds the cap; decode must fail
+    // with Oversized (not attempt the multi-gigabyte allocation and not
+    // report mere truncation).
+    check("oversized header", 200, |g| {
+        let count = (MAX_FRAME_ELEMS as u32)
+            .saturating_add(g.usize_in(1, 1 << 20) as u32);
+        let ty = frame::ALL_TYPES[g.usize_in(0, frame::ALL_TYPES.len() - 1)];
+        let mut h = Vec::new();
+        h.extend_from_slice(&frame::MAGIC.to_le_bytes());
+        h.push(ty);
+        h.extend_from_slice(&count.to_le_bytes());
+        // A few junk payload bytes so the failure cannot be Truncated.
+        h.extend_from_slice(&[0u8; 32]);
+        match Frame::decode(&h) {
+            Err(FrameError::Oversized { count: c, max }) => {
+                ensure(c == count, format!("reported count {c}, sent {count}"))?;
+                ensure(max == MAX_FRAME_ELEMS, format!("reported cap {max}"))
+            }
+            Err(other) => Err(format!("expected Oversized, got {other}")),
+            Ok(_) => Err("oversized frame decoded".into()),
+        }
+    });
+}
+
+#[test]
+fn garbage_magic_is_rejected() {
+    check("bad magic", 200, |g| {
+        let mut bytes = gen_frame(g).encode();
+        let flip = g.usize_in(0, 3);
+        bytes[flip] = bytes[flip].wrapping_add(g.usize_in(1, 255) as u8);
+        match Frame::decode(&bytes) {
+            Err(FrameError::BadMagic(_)) => Ok(()),
+            Err(other) => Err(format!("expected BadMagic, got {other}")),
+            Ok(_) => Err("frame with corrupted magic decoded".into()),
+        }
+    });
+}
+
+#[test]
+fn stream_reads_surface_truncation_as_typed_io() {
+    // `read_from` on a stream that ends mid-frame: UnexpectedEof, typed,
+    // no panic, and the valid-prefix case decodes the first frame only.
+    check("stream truncation", 200, |g| {
+        let f = gen_frame(g);
+        let bytes = f.encode();
+        let cut = g.usize_in(0, bytes.len() - 1);
+        match Frame::read_from(&mut Cursor::new(&bytes[..cut])) {
+            Err(FrameError::Io(e)) => ensure(
+                e.kind() == std::io::ErrorKind::UnexpectedEof,
+                format!("kind {:?}", e.kind()),
+            ),
+            // A cut inside the header can also surface as a header error
+            // on exotic prefixes — but only EOF/typed, never success.
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("read a frame from {cut}/{} bytes", bytes.len())),
+        }
+    });
+}
+
+#[test]
+fn patient_reads_decode_back_to_back_frames() {
+    check("patient stream", 100, |g| {
+        let a = gen_frame(g);
+        let b = gen_frame(g);
+        let mut bytes = a.encode();
+        bytes.extend_from_slice(&b.encode());
+        let mut cur = Cursor::new(bytes);
+        let ra = read_frame_patient(&mut cur, || true).map_err(|e| format!("first: {e}"))?;
+        let rb = read_frame_patient(&mut cur, || true).map_err(|e| format!("second: {e}"))?;
+        ensure(bits_equal(&a, &ra) && bits_equal(&b, &rb), "stream frames drifted")
+    });
+}

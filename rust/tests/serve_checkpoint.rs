@@ -221,12 +221,19 @@ fn malformed_truncated_and_wrong_version_files_are_typed_errors() {
 
     // Future format version.
     let p = dir.join("version.json");
-    std::fs::write(&p, text.replace("\"version\": 1", "\"version\": 2")).unwrap();
+    std::fs::write(&p, text.replace("\"version\": 2", "\"version\": 3")).unwrap();
     let err = Checkpoint::load(&p).unwrap_err();
     assert!(
-        matches!(err, CheckpointError::WrongVersion { found: 2, .. }),
+        matches!(err, CheckpointError::WrongVersion { found: 3, .. }),
         "{err}"
     );
+
+    // v1 files (no train block) still load, with train = None.
+    let p = dir.join("v1.json");
+    std::fs::write(&p, text.replace("\"version\": 2", "\"version\": 1")).unwrap();
+    let v1 = Checkpoint::load(&p).unwrap();
+    assert_eq!(v1.train, None, "v1 checkpoints carry no resume block");
+    assert_eq!(v1.state.params.len(), params.len());
 
     // Structurally broken: params_hex truncated to a non-multiple of 8.
     let p = dir.join("hex.json");

@@ -14,7 +14,8 @@ use std::collections::BTreeSet;
 use std::fs;
 use std::path::Path;
 
-use regnde::serve::checkpoint::{CHECKPOINT_SCHEMA, CHECKPOINT_VERSION};
+use regnde::dist::protocol::{frame, tags as dist_tags};
+use regnde::serve::checkpoint::{CHECKPOINT_SCHEMA, CHECKPOINT_VERSION, CHECKPOINT_VERSION_V1};
 use regnde::serve::protocol::tags;
 use regnde::solvers::SolveErrorKind;
 
@@ -86,9 +87,31 @@ fn protocol_tags_match_the_registry_exactly() {
 #[test]
 fn checkpoint_schema_constants_are_registered() {
     let declared = group("checkpoint-schema");
-    let expected: BTreeSet<String> =
-        [CHECKPOINT_SCHEMA.to_string(), CHECKPOINT_VERSION.to_string()]
-            .into_iter()
-            .collect();
+    let expected: BTreeSet<String> = [
+        CHECKPOINT_SCHEMA.to_string(),
+        CHECKPOINT_VERSION.to_string(),
+        CHECKPOINT_VERSION_V1.to_string(),
+    ]
+    .into_iter()
+    .collect();
     assert_eq!(expected, declared, "checkpoint schema constants drifted from wire_registry.txt");
+}
+
+#[test]
+fn dist_tags_and_frame_constants_match_the_registry_exactly() {
+    let declared = group("dist");
+    let mut in_code: BTreeSet<String> =
+        dist_tags::ALL.iter().map(|t| t.to_string()).collect();
+    assert_eq!(in_code.len(), dist_tags::ALL.len(), "duplicate entries in dist tags::ALL");
+    // The frame constants ride the same `wire(dist)` group; the magic
+    // word is registered in its source spelling (`{:#X}` reproduces it).
+    in_code.insert(format!("{:#X}", frame::MAGIC));
+    for t in frame::ALL_TYPES {
+        in_code.insert(t.to_string());
+    }
+    in_code.insert(frame::METRICS_LEN.to_string());
+    assert_eq!(in_code, declared, "dist wire vocabulary drifted from wire_registry.txt");
+    // The frame-type bytes must be distinct or decode is ambiguous.
+    let bytes: BTreeSet<u8> = frame::ALL_TYPES.iter().copied().collect();
+    assert_eq!(bytes.len(), frame::ALL_TYPES.len(), "duplicate frame-type bytes");
 }

@@ -98,11 +98,12 @@ pub struct AllowSite {
 /// Which lints apply to a file, by its path relative to `rust/src/`.
 ///
 /// * L1 and L3 are annotation-driven and run everywhere.
-/// * L2 guards the panic-free stacks: `serve/`, `solvers/`,
+/// * L2 guards the panic-free stacks: `serve/`, `solvers/`, `dist/`,
 ///   `runtime/native.rs` and the CLI in `main.rs`.  The `[i]`-indexing
-///   sub-lint is scoped to `serve/` only — the solver numeric kernels
-///   index by construction over lengths they allocated, while `serve/`
-///   handles untrusted wire input (DESIGN.md §Static Analysis).
+///   sub-lint is scoped to `serve/` and `dist/` only — the solver
+///   numeric kernels index by construction over lengths they allocated,
+///   while `serve/` and `dist/` handle untrusted wire input (DESIGN.md
+///   §Static Analysis).
 /// * L4 covers the lock-holding modules: `serve/` + `util/threadpool.rs`.
 /// * L5 covers the reassociation-sensitive numerics: `solvers/` +
 ///   `models/`.
@@ -116,9 +117,10 @@ pub struct Scope {
 pub fn scope_for(rel: &str) -> Scope {
     let serve = rel.starts_with("serve/");
     let solvers = rel.starts_with("solvers/");
+    let dist = rel.starts_with("dist/");
     Scope {
-        l2: serve || solvers || rel == "runtime/native.rs" || rel == "main.rs",
-        l2_index: serve,
+        l2: serve || solvers || dist || rel == "runtime/native.rs" || rel == "main.rs",
+        l2_index: serve || dist,
         l4: serve || rel == "util/threadpool.rs",
         l5: solvers || rel.starts_with("models/"),
     }

@@ -72,7 +72,7 @@ fn wire_extraction_matches_the_committed_registry_exactly() {
     assert_eq!(groups, declared);
     assert_eq!(
         groups,
-        BTreeSet::from(["checkpoint-schema", "protocol-tags", "solve-error-kind"])
+        BTreeSet::from(["checkpoint-schema", "dist", "protocol-tags", "solve-error-kind"])
     );
 }
 
