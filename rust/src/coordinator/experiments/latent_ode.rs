@@ -43,12 +43,13 @@ pub fn run_with(
         lr0: get("lr"),
         gamma: get("inv_decay"),
     };
-    // Anneals over the whole run, completed epochs included, so resume
-    // sees the same coefficient at epoch e as the uninterrupted run.
+    // Anneals over the whole run's epoch target — completed epochs
+    // included, the checkpointed target preferred — so resume sees the
+    // same coefficient at epoch e as the original run.
     let coef_e = method.er.then(|| ExpAnneal {
         start: get("coef_e_start"),
         end: get("coef_e_end"),
-        total_epochs: epoch0 + opts.epochs,
+        total_epochs: super::schedule_epochs(resume, opts.epochs),
     });
     let coef_s = if method.sr { get("coef_s") } else { 0.0 };
     let coef_l = if method.lr { get("coef_l") } else { 0.0 };

@@ -70,10 +70,10 @@ pub fn run_with(
 ) -> Result<RunResult> {
     let info = backend.model(MODEL)?;
     let epoch0 = resume.map_or(0, |r| r.epochs_done);
-    // Schedules anneal over the *whole* run, completed epochs included,
-    // so a resumed run sees the same coefficient at epoch e as the
-    // uninterrupted one.
-    let coefs = coefficients(backend, method, epoch0 + opts.epochs)?;
+    // Schedules anneal over the whole run's epoch target — completed
+    // epochs included, the checkpointed target preferred — so a resumed
+    // run sees the same coefficient at epoch e as the original.
+    let coefs = coefficients(backend, method, super::schedule_epochs(resume, opts.epochs))?;
 
     // Data: synthetic MNIST (DESIGN.md §4 substitution).
     let n_train = (opts.iters_per_epoch * BATCH).max(BATCH * 4);

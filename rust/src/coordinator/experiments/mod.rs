@@ -62,6 +62,22 @@ pub struct ResumeState {
     /// Budget-router descent-evidence window at save time.
     pub window: Vec<f64>,
     pub epochs_done: usize,
+    /// Total-epoch target the original run's epoch-annealed schedules
+    /// (`ExpAnneal`) were built over (checkpoint v2 `train.total_epochs`;
+    /// 0 = unrecorded, as in v1 files).  See [`schedule_epochs`].
+    pub total_epochs: usize,
+}
+
+/// Total-epoch horizon a (possibly resumed) run's epoch-annealed
+/// schedules span.  The recorded target wins while it still covers the
+/// requested span — so a continuation of an interrupted run reuses the
+/// original coefficient schedule bit-for-bit — and extending past the
+/// target (or resuming without one) anneals over the actual
+/// `epochs_done + additional` span (DESIGN.md §Distributed, "Checkpoint
+/// resume").
+pub fn schedule_epochs(resume: Option<&ResumeState>, additional: usize) -> usize {
+    let span = resume.map_or(0, |r| r.epochs_done) + additional;
+    resume.map_or(0, |r| r.total_epochs).max(span)
 }
 
 /// Install a [`ResumeState`] into a fresh driver's state + router.

@@ -32,15 +32,21 @@
 //! ## Failure handling
 //!
 //! Transport failures (connect/read/write/timeout, frame corruption)
-//! mark the worker dead and the shard is **reassigned** to the next
-//! live worker in fixed ring order — a deterministic recompute, so the
-//! bits are unaffected.  When every worker has failed a shard, the step
-//! fails with a typed [`DistError`], which the experiment driver
-//! surfaces as a typed epoch failure.  Every read is bounded by a
-//! timeout, so the coordinator never hangs on a dead worker.  *Solver*
-//! failures (budget exhausted, non-finite state) are not transport
-//! failures: they ride back inside [`Metrics`] for the budget router to
-//! escalate or skip, exactly as in single-process training.
+//! mark the worker dead **for the rest of the current optimizer step**
+//! and the shard is **reassigned** to the next live worker in fixed
+//! ring order — a deterministic recompute, so the bits are unaffected.
+//! Dead-marks reset at the next step ([`GradExecutor::begin_step`]), so
+//! a worker that was restarted or merely blew one
+//! [`RemoteOpts::request_timeout`] rejoins the fleet instead of one
+//! transient slowdown cascading into [`DistError::WorkersExhausted`]
+//! against a healthy fleet.  When every worker has failed a shard
+//! within a step, the step fails with a typed [`DistError`], which the
+//! experiment driver surfaces as a typed epoch failure.  Every read is
+//! bounded by a timeout, so the coordinator never hangs on a dead
+//! worker.  *Solver* failures (budget exhausted, non-finite state) are
+//! not transport failures: they ride back inside [`Metrics`] for the
+//! budget router to escalate or skip, exactly as in single-process
+//! training.
 
 use std::fmt;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
@@ -105,6 +111,12 @@ pub fn shard_seed(step_seed: u32, shard: usize) -> u32 {
 /// relies on replays (after worker reassignment) reproducing the same
 /// bits.
 pub trait GradExecutor: Send + Sync {
+    /// Called once at the start of every optimizer step, before the
+    /// shard fan-out.  Remote executors use it to clear per-step
+    /// dead-marks so a transiently slow or restarted worker rejoins
+    /// the fleet at the next step instead of staying lost for the run.
+    fn begin_step(&self) {}
+
     /// Evaluate one shard's gradient at `params`.  Transport-level
     /// failures are `Err`; solver failures ride inside the returned
     /// metric block.
@@ -160,6 +172,10 @@ pub struct RemoteOpts {
     /// Per-worker TCP connect bound.
     pub connect_timeout: Duration,
     /// End-to-end bound on one shard request (solve time included).
+    /// Must comfortably exceed the worst-case shard solve time: a
+    /// request that blows this deadline counts as a transport failure,
+    /// skipping the worker for the rest of the step (it is retried at
+    /// the next one) while the shard recomputes on a ring sibling.
     pub request_timeout: Duration,
     /// Poll tick for response reads within the request timeout.
     pub read_tick: Duration,
@@ -300,7 +316,8 @@ impl RemoteExecutor {
         })
     }
 
-    /// Workers not yet marked dead.
+    /// Workers not marked dead within the current optimizer step
+    /// (marks reset at the next [`GradExecutor::begin_step`]).
     pub fn live_workers(&self) -> usize {
         self.conns
             .iter()
@@ -310,6 +327,17 @@ impl RemoteExecutor {
 }
 
 impl GradExecutor for RemoteExecutor {
+    fn begin_step(&self) {
+        // Dead-marks are scoped to one optimizer step: within a step a
+        // failed worker is skipped by every later shard (no repeated
+        // timeouts), but the next step offers it one fresh connection
+        // attempt.  Reassignment stays deterministic either way, so
+        // revival cannot change any bits — only availability.
+        for slot in &self.conns {
+            slot.lock().unwrap_or_else(|p| p.into_inner()).dead = false;
+        }
+    }
+
     fn shard_grad(
         &self,
         _local: &NativeBackend,
@@ -367,8 +395,9 @@ impl GradExecutor for RemoteExecutor {
                     last = msg;
                 }
                 Err(e) => {
-                    // Transport failure: this worker is gone for the
-                    // rest of the run; reassign to the next in the ring.
+                    // Transport failure: skip this worker for the rest
+                    // of the *step* (begin_step revives it) and
+                    // reassign to the next in the ring.
                     conn.dead = true;
                     conn.client = None;
                     last = format!("{e:#}");
@@ -620,6 +649,7 @@ impl DistBackend {
         data: &TrainData,
         coefs: &StepCoefs,
     ) -> Result<(Vec<f64>, Metrics)> {
+        self.exec.begin_step();
         let items = self.inner.shard_items(model, data)?;
         let plan = ShardPlan::by_count(items, self.shards);
         let jobs: Vec<(usize, Range<usize>)> = plan.occupied().collect();

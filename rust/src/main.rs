@@ -233,7 +233,8 @@ fn run() -> Result<()> {
                 // Multiple seeds overwrite in turn: the checkpoint holds
                 // the last trained replica.
                 if let Some(ckpt) = args.get("checkpoint") {
-                    save_checkpoint(backend.as_ref(), &exp, &result, ckpt)?;
+                    let total = experiments::schedule_epochs(resume.as_ref(), opts.epochs);
+                    save_checkpoint(backend.as_ref(), &exp, &result, total, ckpt)?;
                 }
             }
             Ok(())
@@ -388,6 +389,7 @@ fn load_resume(args: &Args, exp: &str) -> Result<Option<ResumeState>> {
         rung: 0,
         window: Vec::new(),
         epochs_done: 0,
+        total_epochs: 0,
     });
     Ok(Some(ResumeState {
         params: ckpt.state.params,
@@ -396,12 +398,22 @@ fn load_resume(args: &Args, exp: &str) -> Result<Option<ResumeState>> {
         rung: train.rung,
         window: train.window,
         epochs_done: train.epochs_done,
+        total_epochs: train.total_epochs,
     }))
 }
 
 /// Persist a finished run's model as a serving checkpoint
-/// (`Backend::export_state` + `serve::Checkpoint`).
-fn save_checkpoint(backend: &dyn Backend, exp: &str, result: &RunResult, path: &str) -> Result<()> {
+/// (`Backend::export_state` + `serve::Checkpoint`).  `total_epochs` is
+/// the epoch target the run's annealed schedules were built over
+/// (`experiments::schedule_epochs`), recorded so `--resume` anneals
+/// over the same horizon.
+fn save_checkpoint(
+    backend: &dyn Backend,
+    exp: &str,
+    result: &RunResult,
+    total_epochs: usize,
+    path: &str,
+) -> Result<()> {
     let model = experiments::model_for(exp)?;
     let state = backend.export_state(model, &result.final_params)?;
     let grid = experiments::serving_grid(exp);
@@ -411,6 +423,7 @@ fn save_checkpoint(backend: &dyn Backend, exp: &str, result: &RunResult, path: &
         rung: result.final_rung,
         window: result.final_window.clone(),
         epochs_done: result.epochs_done,
+        total_epochs,
     });
     let path = std::path::Path::new(path);
     ckpt.save(path)?;
@@ -738,7 +751,7 @@ fn compare_run(
     // --checkpoint persists the *regularized* model (the one the compare
     // is about) for the serving registry.
     if let Some(path) = checkpoint {
-        save_checkpoint(backend, exp, &reg, path)?;
+        save_checkpoint(backend, exp, &reg, opts.epochs, path)?;
     }
 
     println!("\n================ {exp}: regularized vs vanilla ================");

@@ -123,6 +123,12 @@ pub struct TrainProgress {
     pub window: Vec<f64>,
     /// Epochs completed before the save.
     pub epochs_done: usize,
+    /// Total-epoch target the run's epoch-annealed schedules were built
+    /// over — what a resumed run must anneal over to reproduce the
+    /// original coefficients bit-for-bit.  Optional in the JSON
+    /// (0 = unrecorded; files written before this field loads as 0 and
+    /// resume falls back to `epochs_done + --epochs`).
+    pub total_epochs: usize,
 }
 
 /// A persisted trained model: the backend-exported state plus the
@@ -203,6 +209,7 @@ impl Checkpoint {
                     ("rung", Json::from(t.rung)),
                     ("window", Json::Arr(window)),
                     ("epochs_done", Json::from(t.epochs_done)),
+                    ("total_epochs", Json::from(t.total_epochs)),
                 ]),
             );
         }
@@ -353,12 +360,21 @@ fn parse_train(t: &Json) -> Result<TrainProgress, CheckpointError> {
             })?);
         }
     }
+    // Optional (added after the first v2 files shipped): absent = 0,
+    // "schedule target unrecorded".
+    let total_epochs = match t.opt("total_epochs") {
+        Some(v) => v.as_f64().map_err(|_| {
+            CheckpointError::Malformed("train field \"total_epochs\" must be a number".into())
+        })? as usize,
+        None => 0,
+    };
     Ok(TrainProgress {
         opt_state,
         iter: num("iter")? as u64,
         rung: num("rung")? as usize,
         window,
         epochs_done: num("epochs_done")? as usize,
+        total_epochs,
     })
 }
 
@@ -479,6 +495,7 @@ mod tests {
             rung: 1,
             window: vec![12.0, 9.5, 3.0],
             epochs_done: 2,
+            total_epochs: 5,
         };
         let ck = Checkpoint::new(sample_state(), "spiral-node", "ERNODE", vec![0.0, 1.0])
             .with_train(progress.clone());
@@ -506,8 +523,19 @@ mod tests {
                 rung: 0,
                 window: vec![],
                 epochs_done: 1,
+                total_epochs: 2,
             },
         );
+        // total_epochs is optional: files written before the field
+        // existed load with the documented 0 ("unrecorded") default.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(t)) = m.get_mut("train") {
+                t.remove("total_epochs");
+            }
+        }
+        let back = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(back.train.expect("train block").total_epochs, 0);
         // Inconsistent opt_len.
         let mut j = ck.to_json();
         if let Json::Obj(m) = &mut j {

@@ -73,8 +73,8 @@ fn assert_params_bits_equal(a: &[f32], b: &[f32], what: &str) {
 }
 
 /// Two loopback workers, two shards: every link of the chain at once.
-/// Three sequential optimizer steps so optimizer-state divergence would
-/// compound and surface.
+/// Three sequential optimizer steps, each committed back into the train
+/// state, so optimizer-state divergence would compound and surface.
 #[test]
 fn two_workers_two_shards_match_single_process_bitwise() {
     let w1 = spawn_worker();
@@ -104,14 +104,16 @@ fn two_workers_two_shards_match_single_process_bitwise() {
             ..Default::default()
         };
         let mr = remote
-            .train_step(model, false, 0, &mut sr, &data, &coefs)
+            .train_step(model, false, 0, &sr, &data, &coefs)
             .expect("remote step");
         let ml = local
-            .train_step(model, false, 0, &mut sl, &data, &coefs)
+            .train_step(model, false, 0, &sl, &data, &coefs)
             .expect("local step");
-        assert_metrics_bits_equal(&mr, &ml);
-        assert_params_bits_equal(&sr.params, &sl.params, "params");
-        assert_params_bits_equal(&sr.opt_state, &sl.opt_state, "opt_state");
+        assert_metrics_bits_equal(&mr.metrics, &ml.metrics);
+        assert_params_bits_equal(&mr.params, &ml.params, "params");
+        assert_params_bits_equal(&mr.opt_state, &ml.opt_state, "opt_state");
+        sr.update(mr.params, mr.opt_state).expect("commit remote step");
+        sl.update(ml.params, ml.opt_state).expect("commit local step");
         assert_eq!(sr.iter, sl.iter);
     }
 
@@ -213,6 +215,8 @@ fn resume_continues_bit_identically() {
             rung: head.final_rung,
             window: head.final_window.clone(),
             epochs_done: head.epochs_done,
+            // What the head run's checkpoint records: its own target.
+            total_epochs: head_opts.epochs,
         };
         let tail = experiments::run_by_name_resumed(
             &backend,
@@ -229,4 +233,76 @@ fn resume_continues_bit_identically() {
         assert_eq!(tail.final_iter, full.final_iter, "{exp}: iter");
         assert_eq!(tail.final_rung, full.final_rung, "{exp}: rung");
     }
+}
+
+/// ER's `ExpAnneal` spans the *whole* run, so an interrupted run only
+/// continues bit-identically if every segment anneals over the same
+/// epoch target — the `ResumeState::total_epochs` / checkpoint
+/// `train.total_epochs` record.  The head segment here runs 2 of a
+/// declared 3-epoch target, then the tail finishes it; both must land
+/// on the uninterrupted 3-epoch run's exact bits.
+#[test]
+fn er_anneal_resume_reuses_recorded_epoch_target() {
+    let backend = NativeBackend::new();
+    let method = Method {
+        er: true,
+        ..Method::VANILLA
+    };
+    let full_opts = TrainOpts {
+        epochs: 3,
+        iters_per_epoch: 2,
+        seed: 6,
+        verbose: false,
+    };
+    let head_opts = TrainOpts { epochs: 2, ..full_opts };
+    let tail_opts = TrainOpts { epochs: 1, ..full_opts };
+
+    let full = experiments::run_by_name(&backend, "mnist-node", method, full_opts)
+        .expect("uninterrupted run");
+
+    // Head segment: fresh state, but annealing over the declared
+    // 3-epoch target (what a planned interruption records up front).
+    let declared = ResumeState {
+        params: backend
+            .init_params("mnist_node", full_opts.seed as u32)
+            .expect("init"),
+        opt_state: Vec::new(),
+        iter: 0,
+        rung: 0,
+        window: Vec::new(),
+        epochs_done: 0,
+        total_epochs: full_opts.epochs,
+    };
+    let head = experiments::run_by_name_resumed(
+        &backend,
+        "mnist-node",
+        method,
+        head_opts,
+        Some(&declared),
+    )
+    .expect("head segment");
+
+    let resume = ResumeState {
+        params: head.final_params.clone(),
+        opt_state: head.final_opt_state.clone(),
+        iter: head.final_iter,
+        rung: head.final_rung,
+        window: head.final_window.clone(),
+        epochs_done: head.epochs_done,
+        total_epochs: full_opts.epochs,
+    };
+    let tail = experiments::run_by_name_resumed(
+        &backend,
+        "mnist-node",
+        method,
+        tail_opts,
+        Some(&resume),
+    )
+    .expect("tail segment");
+
+    assert_eq!(tail.epochs_done, full.epochs_done, "epoch accounting");
+    assert_params_bits_equal(&tail.final_params, &full.final_params, "er params");
+    assert_params_bits_equal(&tail.final_opt_state, &full.final_opt_state, "er opt_state");
+    assert_eq!(tail.final_iter, full.final_iter, "iter");
+    assert_eq!(tail.final_rung, full.final_rung, "rung");
 }

@@ -89,37 +89,35 @@ fn killed_worker_is_reassigned_and_bits_survive() {
         ..Default::default()
     };
 
+    // Each step's candidate state is committed, so post-failover bit
+    // drift would compound into the final comparison.
+    let commit = |sr: &mut TrainState, sl: &mut TrainState, n: u32, what: &str| {
+        let out = remote
+            .train_step(model, false, 0, sr, &data, &step(n))
+            .unwrap_or_else(|e| panic!("{what}: {e:#}"));
+        sr.update(out.params, out.opt_state).expect("commit remote");
+        let out = reference
+            .train_step(model, false, 0, sl, &data, &step(n))
+            .expect("reference step");
+        sl.update(out.params, out.opt_state).expect("commit reference");
+    };
+
     // Step 0: both workers healthy.
-    remote
-        .train_step(model, false, 0, &mut sr, &data, &step(0))
-        .expect("healthy step");
-    reference
-        .train_step(model, false, 0, &mut sl, &data, &step(0))
-        .expect("reference step");
+    commit(&mut sr, &mut sl, 0, "healthy step");
 
     // Kill the second worker mid-epoch; the next step must reassign its
     // shard to the survivor, not fail and not hang.
     w2.kill();
     let t0 = Instant::now();
-    remote
-        .train_step(model, false, 0, &mut sr, &data, &step(1))
-        .expect("step after worker death (reassigned shard)");
+    commit(&mut sr, &mut sl, 1, "step after worker death (reassigned shard)");
     assert!(
         t0.elapsed() < Duration::from_secs(60),
         "reassignment stalled: {:?}",
         t0.elapsed()
     );
-    reference
-        .train_step(model, false, 0, &mut sl, &data, &step(1))
-        .expect("reference step");
 
     // One more step on the surviving topology.
-    remote
-        .train_step(model, false, 0, &mut sr, &data, &step(2))
-        .expect("follow-up step");
-    reference
-        .train_step(model, false, 0, &mut sl, &data, &step(2))
-        .expect("reference step");
+    commit(&mut sr, &mut sl, 2, "follow-up step");
 
     assert_eq!(sr.params.len(), sl.params.len());
     for (i, (a, b)) in sr.params.iter().zip(&sl.params).enumerate() {
@@ -130,6 +128,89 @@ fn killed_worker_is_reassigned_and_bits_survive() {
     }
 
     w1.kill();
+}
+
+/// A failed worker is only skipped for the step that observed the
+/// failure: once it is reachable again (here: restarted on the same
+/// address) the next step's fresh connection attempt brings it back.
+/// Sequence: kill w2 (step fails over to w1), restart w2, kill w1 —
+/// the final step can only succeed through the revived w2.
+#[test]
+fn restarted_worker_rejoins_at_the_next_step() {
+    let w1 = spawn_worker();
+    let w2 = spawn_worker();
+    let w2_addr = w2.addr.to_string();
+    let workers = vec![w1.addr.to_string(), w2_addr.clone()];
+
+    let model = "mnist_node";
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(2), fast_opts())
+        .expect("remote backend");
+    let reference = DistBackend::local(NativeBackend::new(), 2);
+
+    let (x, y) = classify_batch(8, 0xBEEF);
+    let data = TrainData::Classify { x: &x, y: &y };
+    let mut sr = fresh_state(&remote, model);
+    let mut sl = fresh_state(&reference, model);
+
+    let step = |n: u32| StepCoefs {
+        lr: 0.05,
+        seed: 9000 + n,
+        ..Default::default()
+    };
+    let commit = |state: &mut TrainState, backend: &DistBackend, n: u32, what: &str| {
+        let out = backend
+            .train_step(model, false, 0, state, &data, &step(n))
+            .unwrap_or_else(|e| panic!("{what}: {e:#}"));
+        state.update(out.params, out.opt_state).expect("commit step");
+    };
+
+    commit(&mut sr, &remote, 0, "healthy step");
+    commit(&mut sl, &reference, 0, "reference step");
+
+    w2.kill();
+    commit(&mut sr, &remote, 1, "failover step");
+    commit(&mut sl, &reference, 1, "reference step");
+
+    // Restart a worker on w2's address (kill() joins the accept loop
+    // first, so the port is free; a short retry absorbs OS lag).
+    let mut revived = None;
+    for _ in 0..50 {
+        match Worker::spawn(
+            Arc::new(NativeBackend::new()),
+            WorkerOpts {
+                read_timeout: Duration::from_millis(20),
+                ..Default::default()
+            },
+            &w2_addr,
+        ) {
+            Ok(h) => {
+                revived = Some(h);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let revived = revived.expect("rebinding the killed worker's address");
+
+    // With w1 gone, this step can only succeed if the coordinator
+    // offers the previously-dead w2 a fresh connection.
+    w1.kill();
+    let t0 = Instant::now();
+    commit(&mut sr, &remote, 2, "step through the revived worker");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "revival stalled: {:?}",
+        t0.elapsed()
+    );
+    commit(&mut sl, &reference, 2, "reference step");
+
+    for (i, (a, b)) in sr.params.iter().zip(&sl.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} drifted through restart");
+    }
+    for (i, (a, b)) in sr.opt_state.iter().zip(&sl.opt_state).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "opt_state {i} drifted through restart");
+    }
+    revived.kill();
 }
 
 /// Every worker dead: the step fails with the typed
@@ -149,22 +230,23 @@ fn all_workers_dead_is_a_typed_error_not_a_hang() {
         data: &truth,
         ts: &ts,
     };
-    let mut state = fresh_state(&remote, model);
+    let state = fresh_state(&remote, model);
     let coefs = StepCoefs {
         lr: 0.05,
         seed: 1,
         ..Default::default()
     };
 
-    // Healthy first step establishes the persistent connection.
+    // Healthy first step establishes the persistent connection (its
+    // candidate state is irrelevant here — the test is about failure).
     remote
-        .train_step(model, false, 0, &mut state, &data, &coefs)
+        .train_step(model, false, 0, &state, &data, &coefs)
         .expect("healthy step");
 
     w1.kill();
     let t0 = Instant::now();
     let err = remote
-        .train_step(model, false, 0, &mut state, &data, &coefs)
+        .train_step(model, false, 0, &state, &data, &coefs)
         .expect_err("step with every worker dead must fail");
     assert!(
         t0.elapsed() < Duration::from_secs(60),
@@ -182,7 +264,7 @@ fn all_workers_dead_is_a_typed_error_not_a_hang() {
     // bounded, still no panic.
     let t1 = Instant::now();
     let err = remote
-        .train_step(model, false, 0, &mut state, &data, &coefs)
+        .train_step(model, false, 0, &state, &data, &coefs)
         .expect_err("second step must also fail");
     assert!(err.downcast_ref::<DistError>().is_some(), "retry lost the typed error");
     assert!(t1.elapsed() < Duration::from_secs(60));
