@@ -14,9 +14,11 @@
 //!    fewer solver steps per batch is exactly what turns into more
 //!    requests per core.
 //!
-//! Emits `BENCH_serving.json` at the repo root (schema in DESIGN.md
-//! §Serving): per-model throughput (req/s), p50/p99 latency, mean batch
-//! size and mean NFE/request.
+//! Emits `BENCH_serving.json` at the repo root (`bench_serving/v2`,
+//! schema in DESIGN.md §Serving): per-model throughput (req/s), exact
+//! p50/p99/p999 client latency plus the server-side percentiles
+//! reconstructed from the registry's latency histogram
+//! (DESIGN.md §Observability), mean batch size and mean NFE/request.
 //!
 //! Scale knobs (env):
 //!   REGNDE_BENCH_EPOCHS       training epochs per model   (default 3)
@@ -30,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use regnde::coordinator::experiments::{self, TrainOpts};
 use regnde::coordinator::Method;
+use regnde::obs::metrics;
 use regnde::runtime::{Backend, NativeBackend, TrainData};
 use regnde::serve::{
     BatchPolicy, Batcher, Checkpoint, Client, Registry, Request, Response, Server, ServerOpts,
@@ -43,6 +46,15 @@ struct LoadResult {
     throughput_rps: f64,
     p50_ms: f64,
     p99_ms: f64,
+    p999_ms: f64,
+    /// Server-side percentiles derived from the registry's
+    /// `regnde_serve_latency_seconds{model}` histogram (what a scrape
+    /// would reconstruct) — bucket-interpolated, so approximate, but
+    /// measured where the solve ran rather than across the loopback
+    /// round trip.
+    hist_p50_ms: f64,
+    hist_p99_ms: f64,
+    hist_p999_ms: f64,
     mean_batch: f64,
     mean_nfe: f64,
 }
@@ -126,10 +138,20 @@ fn drive_load(addr: &str, model: &str, requests: usize, concurrency: usize) -> L
     assert_eq!(lat.len(), requests, "every request must be answered");
     lat.sort_unstable();
     let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] as f64 / 1000.0;
+    // The server runs in this process, so its per-model latency
+    // histogram is readable straight from the global registry.
+    let hist = metrics::registry().histogram(
+        &metrics::labeled("regnde_serve_latency_seconds", "model", model),
+        &metrics::LATENCY_BUCKETS,
+    );
     LoadResult {
         throughput_rps: requests as f64 / wall,
         p50_ms: pct(0.50),
         p99_ms: pct(0.99),
+        p999_ms: pct(0.999),
+        hist_p50_ms: hist.quantile(0.50) * 1000.0,
+        hist_p99_ms: hist.quantile(0.99) * 1000.0,
+        hist_p999_ms: hist.quantile(0.999) * 1000.0,
         mean_batch: batch_sum / requests as f64,
         mean_nfe: nfe_sum / requests as f64,
     }
@@ -140,6 +162,15 @@ fn result_json(r: &LoadResult) -> Json {
         ("throughput_rps", Json::from(r.throughput_rps)),
         ("p50_ms", Json::from(r.p50_ms)),
         ("p99_ms", Json::from(r.p99_ms)),
+        ("p999_ms", Json::from(r.p999_ms)),
+        (
+            "registry_histogram",
+            obj([
+                ("p50_ms", Json::from(r.hist_p50_ms)),
+                ("p99_ms", Json::from(r.hist_p99_ms)),
+                ("p999_ms", Json::from(r.hist_p999_ms)),
+            ]),
+        ),
         ("mean_batch", Json::from(r.mean_batch)),
         ("mean_nfe_per_request", Json::from(r.mean_nfe)),
     ])
@@ -223,7 +254,16 @@ fn main() {
 
     let mut table = Table::new(
         "Serving — micro-batched spiral-NODE over loopback TCP",
-        &["model", "req/s", "p50 ms", "p99 ms", "mean batch", "mean NFE/req"],
+        &[
+            "model",
+            "req/s",
+            "p50 ms",
+            "p99 ms",
+            "p999 ms",
+            "hist p99 ms",
+            "mean batch",
+            "mean NFE/req",
+        ],
     );
     for (name, r) in [("vanilla", &vanilla), ("ernode", &ernode)] {
         table.row(vec![
@@ -231,6 +271,8 @@ fn main() {
             format!("{:.1}", r.throughput_rps),
             format!("{:.2}", r.p50_ms),
             format!("{:.2}", r.p99_ms),
+            format!("{:.2}", r.p999_ms),
+            format!("{:.2}", r.hist_p99_ms),
             format!("{:.2}", r.mean_batch),
             format!("{:.1}", r.mean_nfe),
         ]);
@@ -265,7 +307,7 @@ fn main() {
     // ---- emit BENCH_serving.json at the repo root ---------------------
     let nfe_ratio = vanilla.mean_nfe / ernode.mean_nfe.max(1e-9);
     let report = obj([
-        ("schema", Json::from("bench_serving/v1")),
+        ("schema", Json::from("bench_serving/v2")),
         ("experiment", Json::from("spiral-node")),
         ("vanilla", result_json(&vanilla)),
         ("ernode", result_json(&ernode)),

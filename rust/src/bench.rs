@@ -89,8 +89,9 @@ pub fn run_grid(
                 verbose: false,
             };
             let r = run_by_name(backend.as_ref(), experiment, method, opts)?;
-            eprintln!(
-                "  [{}] seed {seed}: train {:.1}s predict {:.4}s nfe {:.1}",
+            crate::log_info!(
+                "bench",
+                "[{}] seed {seed}: train {:.1}s predict {:.4}s nfe {:.1}",
                 r.method, r.train_time_s, r.predict_time_s, r.predict_nfe
             );
             recorder.save(&r)?;

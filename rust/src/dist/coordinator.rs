@@ -59,9 +59,11 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::protocol::{
     data_frames, frame, frames_for_kind, read_frame_patient, DistRequest, DistResponse, Frame,
+    FrameError,
 };
 use super::sharder::ShardPlan;
 use crate::models::Adam;
+use crate::obs::metrics;
 use crate::runtime::{
     Backend, ExportedState, GradOutput, Metrics, ModelInfo, NativeBackend, StepCoefs, StepOutput,
     TrainData, TrainState,
@@ -264,18 +266,28 @@ impl FrameClient {
     ) -> Result<WorkerReply> {
         let mut line = req.encode();
         line.push('\n');
+        let mut sent = line.len() as u64;
         self.writer.write_all(line.as_bytes())?;
-        Frame::f32(frame::PARAMS, params.to_vec()).write_to(&mut self.writer)?;
+        let pframe = Frame::f32(frame::PARAMS, params.to_vec());
+        sent += pframe.wire_len() as u64;
+        pframe.write_to(&mut self.writer)?;
         for f in data_frames(data) {
+            sent += f.wire_len() as u64;
             f.write_to(&mut self.writer)?;
         }
         self.writer.flush()?;
+        metrics::registry()
+            .counter("regnde_dist_bytes_sent_total")
+            .add(sent);
         let resp = self.read_line_deadline(deadline)?;
         match DistResponse::decode(resp.trim())? {
             DistResponse::Grad { success, kind } => {
                 let keep = || Instant::now() < deadline;
                 let g = read_frame_patient(&mut self.reader, keep)?;
                 let m = read_frame_patient(&mut self.reader, keep)?;
+                metrics::registry()
+                    .counter("regnde_dist_bytes_received_total")
+                    .add((resp.len() + g.wire_len() + m.wire_len()) as u64);
                 Ok(WorkerReply::Grad(GradOutput {
                     grad: g.expect_f32(frame::GRAD)?.to_vec(),
                     metrics: m.to_metrics(success, kind)?,
@@ -368,10 +380,24 @@ impl GradExecutor for RemoteExecutor {
                     Ok(c) => conn.client = Some(c),
                     Err(e) => {
                         conn.dead = true;
+                        metrics::registry()
+                            .counter(&metrics::labeled(
+                                "regnde_dist_dead_marks_total",
+                                "worker",
+                                &conn.addr,
+                            ))
+                            .inc();
                         last = format!("{e:#}");
                         continue;
                     }
                 }
+            }
+            if k > 0 {
+                // The shard's home worker did not answer: this attempt
+                // is a ring reassignment (deterministic recompute).
+                metrics::registry()
+                    .counter("regnde_dist_reassignments_total")
+                    .inc();
             }
             let req = DistRequest::GradStep {
                 model: model.to_string(),
@@ -385,7 +411,15 @@ impl GradExecutor for RemoteExecutor {
             let Some(client) = conn.client.as_mut() else {
                 continue;
             };
-            match client.grad_step(&req, params, data, deadline) {
+            let t0 = Instant::now();
+            let reply = client.grad_step(&req, params, data, deadline);
+            metrics::registry()
+                .histogram(
+                    &metrics::labeled("regnde_dist_rtt_seconds", "worker", &conn.addr),
+                    &metrics::LATENCY_BUCKETS,
+                )
+                .observe(t0.elapsed().as_secs_f64());
+            match reply {
                 Ok(WorkerReply::Grad(out)) => return Ok(out),
                 Ok(WorkerReply::AppError(msg)) => {
                     // The worker is healthy; the request failed
@@ -398,8 +432,20 @@ impl GradExecutor for RemoteExecutor {
                     // Transport failure: skip this worker for the rest
                     // of the *step* (begin_step revives it) and
                     // reassign to the next in the ring.
+                    if matches!(e.downcast_ref::<FrameError>(), Some(FrameError::Checksum)) {
+                        metrics::registry()
+                            .counter("regnde_dist_checksum_failures_total")
+                            .inc();
+                    }
                     conn.dead = true;
                     conn.client = None;
+                    metrics::registry()
+                        .counter(&metrics::labeled(
+                            "regnde_dist_dead_marks_total",
+                            "worker",
+                            &conn.addr,
+                        ))
+                        .inc();
                     last = format!("{e:#}");
                 }
             }
@@ -692,7 +738,10 @@ impl DistBackend {
             // First failure in shard-index order wins (deterministic).
             leaves.push(r?);
         }
-        let red = reduce_tree(leaves, state.params.len());
+        let red = {
+            crate::span!("all_reduce", "dist");
+            reduce_tree(leaves, state.params.len())
+        };
         let metrics = Metrics {
             loss: red.loss,
             metric: red.metric,
@@ -745,20 +794,38 @@ impl Backend for DistBackend {
         data: &TrainData,
         coefs: &StepCoefs,
     ) -> Result<StepOutput> {
-        let (grad, metrics) = self.sharded_grad(model, tay, rung, state, data, coefs)?;
+        let t0 = Instant::now();
+        let (grad, step_metrics) = self.sharded_grad(model, tay, rung, state, data, coefs)?;
         let mut params = state.params.clone();
         let mut opt_state = state.opt_state.clone();
-        Adam::default().step(
-            &mut params,
-            &mut opt_state,
-            &grad,
-            coefs.lr as f64,
-            state.iter,
+        {
+            crate::span!("optimizer", "dist");
+            Adam::default().step(
+                &mut params,
+                &mut opt_state,
+                &grad,
+                coefs.lr as f64,
+                state.iter,
+            );
+        }
+        // Pure reads — the gauges never feed back into the update, so
+        // the dist/native bit-equivalence suites pass untouched.
+        let mut grad_sq = 0.0f64;
+        for g in &grad {
+            grad_sq += g * g;
+        }
+        metrics::note_train_step(
+            model,
+            step_metrics.loss,
+            step_metrics.r_e,
+            step_metrics.r_s,
+            grad_sq.sqrt(),
+            t0.elapsed().as_secs_f64(),
         );
         Ok(StepOutput {
             params,
             opt_state,
-            metrics,
+            metrics: step_metrics,
         })
     }
 

@@ -358,6 +358,18 @@ impl Frame {
         }
     }
 
+    /// Encoded size in bytes (header + payload + checksum) without
+    /// serializing — the bytes-on-wire counter hook of the dist metrics
+    /// (DESIGN.md §Observability), kept equal to `encode().len()` by
+    /// the codec tests.
+    pub fn wire_len(&self) -> usize {
+        let payload = match &self.body {
+            FrameBody::F32(v) => v.len() * 4,
+            FrameBody::F64(v) => v.len() * 8,
+        };
+        HEADER_LEN + payload + CHECKSUM_LEN
+    }
+
     /// Serialize to the wire byte layout (see module grammar).
     pub fn encode(&self) -> Vec<u8> {
         let payload: Vec<u8> = match &self.body {
@@ -752,6 +764,17 @@ mod tests {
         }
         // Empty frames are legal (an empty shard range ships no data).
         assert_eq!(roundtrip(&Frame::f32(frame::GRAD, vec![])), Frame::f32(frame::GRAD, vec![]));
+    }
+
+    #[test]
+    fn wire_len_matches_encoded_length() {
+        for f in [
+            Frame::f32(frame::PARAMS, vec![1.0; 7]),
+            Frame::f32(frame::GRAD, vec![]),
+            Frame::metrics(&Metrics::default()),
+        ] {
+            assert_eq!(f.wire_len(), f.encode().len(), "{f:?}");
+        }
     }
 
     #[test]

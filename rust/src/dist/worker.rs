@@ -30,6 +30,7 @@ use super::protocol::{
     data_from_frames, frame, frames_for_kind, read_frame_patient, DistRequest, DistResponse,
     Frame,
 };
+use crate::obs::metrics;
 use crate::runtime::{Backend, StepCoefs, TrainState};
 
 /// Per-worker policy knobs.
@@ -276,7 +277,15 @@ impl Worker {
             opt_state: vec![],
             iter: 0,
         };
-        match self.backend.grad_step(model, tay, rung, &state, &data, coefs) {
+        let t0 = std::time::Instant::now();
+        let result = self.backend.grad_step(model, tay, rung, &state, &data, coefs);
+        metrics::registry()
+            .counter("regnde_dist_worker_steps_total")
+            .inc();
+        metrics::registry()
+            .histogram("regnde_dist_worker_step_seconds", &metrics::LATENCY_BUCKETS)
+            .observe(t0.elapsed().as_secs_f64());
+        match result {
             Ok(out) => (
                 DistResponse::Grad {
                     success: out.metrics.success,
@@ -293,10 +302,15 @@ impl Worker {
 fn respond(w: &mut TcpStream, resp: &DistResponse, frames: &[Frame]) -> io::Result<()> {
     let mut out = resp.encode();
     out.push('\n');
+    let mut sent = out.len() as u64;
     w.write_all(out.as_bytes())?;
     for f in frames {
+        sent += f.wire_len() as u64;
         f.write_to(w)?;
     }
+    metrics::registry()
+        .counter("regnde_dist_worker_bytes_sent_total")
+        .add(sent);
     w.flush()
 }
 

@@ -27,6 +27,11 @@
 //! workers and reduces in a fixed tree, bit-identical to the
 //! single-process run (DESIGN.md §Distributed).
 //!
+//! The [`obs`] subsystem is the unified observability layer — metrics
+//! registry + Prometheus exposition, bounded solver-step tracing, and
+//! Chrome-trace span profiling — wired through every layer above
+//! (DESIGN.md §Observability).
+//!
 //! See DESIGN.md (§Backend for the trait contract and adjoint tape
 //! layout) for the full system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -36,6 +41,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dist;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod solvers;

@@ -80,6 +80,8 @@ const VALUED: &[&str] = &[
     "shards",
     "deadline-ms",
     "retries",
+    "log-level",
+    "trace",
 ];
 
 /// Options (valued or boolean) each subcommand accepts — unknown ones
@@ -88,26 +90,29 @@ const VALUED: &[&str] = &[
 fn known_for(cmd: &str, remote_predict: bool) -> Option<&'static [&'static str]> {
     const TRAIN: &[&str] = &[
         "backend", "solver", "artifacts", "runs", "exp", "method", "epochs", "iters", "seeds",
-        "checkpoint", "resume", "verbose", "distributed", "workers", "shards",
+        "checkpoint", "resume", "verbose", "distributed", "workers", "shards", "log-level",
+        "trace",
     ];
     const RUN: &[&str] = &[
         "backend", "solver", "artifacts", "runs", "exp", "method", "epochs", "iters", "seeds",
-        "checkpoint", "verbose", "check-nfe", "distributed", "workers", "shards",
+        "checkpoint", "verbose", "check-nfe", "distributed", "workers", "shards", "log-level",
+        "trace",
     ];
     const PREDICT_LOCAL: &[&str] = &[
         "backend", "solver", "artifacts", "exp", "method", "iters", "seeds", "verbose",
+        "log-level",
     ];
     const PREDICT_REMOTE: &[&str] = &[
         "addr", "model", "u0", "budget", "requests", "concurrency", "deadline-ms", "retries",
-        "chaos",
+        "chaos", "log-level",
     ];
     const SERVE: &[&str] = &[
         "registry", "addr", "max-batch", "max-wait-us", "max-queue", "max-conns", "nfe-quota",
-        "workers",
+        "workers", "log-level",
     ];
-    const LIST: &[&str] = &["backend", "solver", "artifacts"];
-    const VALIDATE: &[&str] = &["artifacts", "backend"];
-    const WORKER: &[&str] = &["addr", "solver", "backend", "max-conns"];
+    const LIST: &[&str] = &["backend", "solver", "artifacts", "log-level"];
+    const VALIDATE: &[&str] = &["artifacts", "backend", "log-level"];
+    const WORKER: &[&str] = &["addr", "solver", "backend", "max-conns", "log-level"];
     Some(match cmd {
         "train" => TRAIN,
         "run" => RUN,
@@ -124,7 +129,7 @@ fn known_for(cmd: &str, remote_predict: bool) -> Option<&'static [&'static str]>
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        regnde::log_error!("cli", "{e:#}");
         std::process::exit(1);
     }
 }
@@ -134,7 +139,8 @@ fn usage() -> String {
         "usage: regnde <list|validate|train|predict|run|serve|worker> \
          [--backend native|pjrt] [--solver {}] [--exp E] [--method M] \
          [--epochs N] [--iters N] [--seeds 0,1] [--artifacts DIR] [--runs DIR] \
-         [--checkpoint FILE] [--resume FILE] [--check-nfe] [--verbose]\n\
+         [--checkpoint FILE] [--resume FILE] [--check-nfe] [--verbose] \
+         [--log-level error|warn|info|debug] [--trace FILE]\n\
          distributed: regnde worker --addr A\n\
          \x20            regnde train --exp E --distributed --workers a,b,c \
          [--shards N]   (or --shards N alone for single-process sharding)\n\
@@ -171,6 +177,10 @@ fn run() -> Result<()> {
         args.check_known(known)?;
     }
 
+    if let Some(level) = args.get("log-level") {
+        regnde::obs::log::set_level_str(level).map_err(anyhow::Error::msg)?;
+    }
+
     match cmd {
         "help" | "--help" => {
             println!("{}", usage());
@@ -205,6 +215,10 @@ fn run() -> Result<()> {
                     .map(std::path::PathBuf::from)
                     .unwrap_or_else(regnde::default_runs_dir),
             )?;
+            let trace_path = args.get("trace").map(|p| p.to_string());
+            if trace_path.is_some() {
+                regnde::obs::span::enable(1 << 16);
+            }
             for seed in seeds {
                 let opts = TrainOpts {
                     epochs: args.get_usize("epochs", 3)?,
@@ -236,6 +250,9 @@ fn run() -> Result<()> {
                     let total = experiments::schedule_epochs(resume.as_ref(), opts.epochs);
                     save_checkpoint(backend.as_ref(), &exp, &result, total, ckpt)?;
                 }
+            }
+            if let Some(path) = trace_path {
+                write_trace(&path)?;
             }
             Ok(())
         }
@@ -276,6 +293,10 @@ fn run() -> Result<()> {
                 seed: args.get_u64("seeds", 0)?,
                 verbose: args.flag("verbose"),
             };
+            let trace_path = args.get("trace").map(|p| p.to_string());
+            if trace_path.is_some() {
+                regnde::obs::span::enable(1 << 16);
+            }
             compare_run(
                 backend.as_ref(),
                 &exp,
@@ -283,12 +304,26 @@ fn run() -> Result<()> {
                 opts,
                 args.flag("check-nfe"),
                 args.get("checkpoint"),
-            )
+            )?;
+            if let Some(path) = trace_path {
+                write_trace(&path)?;
+            }
+            Ok(())
         }
         "serve" => serve(&args),
         "worker" => worker(&args, &backend_name, solver),
         other => bail!("unknown command {other:?}\n{}", usage()),
     }
+}
+
+/// Dump the collected span buffer as Chrome trace-event JSON
+/// (DESIGN.md §Observability).  Load the file at `chrome://tracing` or
+/// <https://ui.perfetto.dev> to inspect solve/adjoint/optimizer phases.
+fn write_trace(path: &str) -> Result<()> {
+    let json = regnde::obs::span::dump_chrome_trace();
+    std::fs::write(path, json).with_context(|| format!("writing trace to {path}"))?;
+    println!("trace -> {path}");
+    Ok(())
 }
 
 /// `regnde worker --addr <a>`: host the native backend's `grad_step`
@@ -617,7 +652,10 @@ fn remote_predict(args: &Args) -> Result<()> {
                                 Err(e) => {
                                     if last {
                                         failures.fetch_add(1, Ordering::SeqCst);
-                                        eprintln!("req {i} (lane {lane}): reconnect failed: {e:#}");
+                                        regnde::log_warn!(
+                                            "predict",
+                                            "req {i} (lane {lane}): reconnect failed: {e:#}"
+                                        );
                                         continue 'requests;
                                     }
                                     continue;
@@ -648,7 +686,8 @@ fn remote_predict(args: &Args) -> Result<()> {
                                 sheds.fetch_add(1, Ordering::SeqCst);
                                 if last {
                                     failures.fetch_add(1, Ordering::SeqCst);
-                                    eprintln!(
+                                    regnde::log_warn!(
+                                        "predict",
                                         "req {i} (lane {lane}): SHED after {} attempt(s): {reason}",
                                         retries + 1
                                     );
@@ -660,16 +699,23 @@ fn remote_predict(args: &Args) -> Result<()> {
                                 // failed, or the request itself is bad.
                                 failures.fetch_add(1, Ordering::SeqCst);
                                 match kind {
-                                    Some(k) => eprintln!(
+                                    Some(k) => regnde::log_error!(
+                                        "predict",
                                         "req {i} (lane {lane}): ERROR [{k}] {msg}"
                                     ),
-                                    None => eprintln!("req {i} (lane {lane}): ERROR {msg}"),
+                                    None => regnde::log_error!(
+                                        "predict",
+                                        "req {i} (lane {lane}): ERROR {msg}"
+                                    ),
                                 }
                                 continue 'requests;
                             }
                             Ok(other) => {
                                 failures.fetch_add(1, Ordering::SeqCst);
-                                eprintln!("req {i} (lane {lane}): unexpected response {other:?}");
+                                regnde::log_error!(
+                                    "predict",
+                                    "req {i} (lane {lane}): unexpected response {other:?}"
+                                );
                                 continue 'requests;
                             }
                             Err(e) => {
@@ -679,7 +725,10 @@ fn remote_predict(args: &Args) -> Result<()> {
                                 client = None;
                                 if last {
                                     failures.fetch_add(1, Ordering::SeqCst);
-                                    eprintln!("req {i} (lane {lane}): transport error: {e:#}");
+                                    regnde::log_warn!(
+                                        "predict",
+                                        "req {i} (lane {lane}): transport error: {e:#}"
+                                    );
                                     continue 'requests;
                                 }
                             }
@@ -973,6 +1022,21 @@ mod tests {
         accept(&["predict", "--addr", "a:1", "--model", "m", "--retries", "2"]).unwrap();
         accept(&["list"]).unwrap();
         accept(&["help"]).unwrap();
+    }
+
+    #[test]
+    fn observability_flags_are_scoped_per_subcommand() {
+        // --log-level is valid on every subcommand; --trace only where a
+        // training loop runs (DESIGN.md §Observability).
+        accept(&["train", "--exp", "e", "--log-level", "debug", "--trace", "t.json"]).unwrap();
+        accept(&["run", "spiral-node", "--trace", "t.json"]).unwrap();
+        accept(&["serve", "--registry", "d", "--log-level", "warn"]).unwrap();
+        accept(&["worker", "--addr", "a:1", "--log-level", "error"]).unwrap();
+        accept(&["predict", "--addr", "a:1", "--model", "m", "--log-level", "info"]).unwrap();
+        accept(&["list", "--log-level", "debug"]).unwrap();
+        accept(&["validate", "--log-level", "debug"]).unwrap();
+        let err = accept(&["serve", "--registry", "d", "--trace", "t.json"]).unwrap_err();
+        assert!(format!("{err:#}").contains("trace"));
     }
 
     #[test]

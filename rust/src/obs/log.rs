@@ -1,0 +1,155 @@
+//! Leveled stderr logger behind the `log_error!`/`log_warn!`/
+//! `log_info!`/`log_debug!` macros.
+//!
+//! One process-global level (an `AtomicU8`, default [`Level::Info`]),
+//! set once at startup from the CLI's `--log-level` flag.  Each macro
+//! checks the level *before* building its format arguments, so disabled
+//! targets cost one relaxed load and no formatting.  Lines render as
+//! `[LEVEL] target: message` on stderr — stdout stays reserved for the
+//! CLI's machine-greppable result lines (checkpoint paths, bench JSON,
+//! smoke-test markers), which is why this logger never writes there.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.  A configured level admits itself
+/// and everything more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    /// Parse a `--log-level` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        3 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// Set the level from a CLI string; `Err` names the accepted values.
+pub fn set_level_str(s: &str) -> Result<(), String> {
+    match Level::parse(s) {
+        Some(l) => {
+            set_level(l);
+            Ok(())
+        }
+        None => Err(format!(
+            "unknown log level `{s}` (expected error|warn|info|debug)"
+        )),
+    }
+}
+
+/// Would a message at `l` currently be emitted?
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one line.  Called by the macros after their level check; prefer
+/// the macros so arguments are not formatted when filtered out.
+pub fn write(l: Level, target: &str, args: fmt::Arguments<'_>) {
+    eprintln!("[{}] {}: {}", l.as_str(), target, args);
+}
+
+/// `log_error!("target", "fmt", args…)` — always emitted (ERROR is the
+/// floor of every level).
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write($crate::obs::log::Level::Error, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_warn!("target", "fmt", args…)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write($crate::obs::log::Level::Warn, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_info!("target", "fmt", args…)` — startup/lifecycle lines.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write($crate::obs::log::Level::Info, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_debug!("target", "fmt", args…)` — chaos/shed noise, off by
+/// default.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write($crate::obs::log::Level::Debug, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_levels() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("Debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(set_level_str("trace").is_err());
+    }
+
+    #[test]
+    fn level_gating_is_monotone() {
+        // Global state: restore the default before returning.
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

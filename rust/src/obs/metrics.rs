@@ -1,0 +1,470 @@
+//! Process-global metrics registry: counters, gauges, fixed-bucket
+//! histograms, and a Prometheus-style text exposition.
+//!
+//! Design constraints (DESIGN.md §Observability):
+//!
+//! * **Record paths are alloc-free and lock-free.**  Every handle
+//!   ([`Counter`], [`Gauge`], [`Histogram`]) is an `Arc` around
+//!   preallocated atomics; [`Counter::inc`], [`Gauge::set`] and
+//!   [`Histogram::observe`] touch only relaxed atomics plus (for
+//!   histograms) a linear scan over a fixed bound array.  The registry
+//!   mutex is taken only at *registration* (name lookup) and at
+//!   *exposition* time — wiring sites that sit anywhere near a hot loop
+//!   must resolve their handles once, up front.
+//! * **Deterministic exposition.**  Metrics live in a `BTreeMap` keyed
+//!   by full name (including the `{label="value"}` suffix), so
+//!   [`Registry::render`] is byte-stable across runs for the same
+//!   recorded values — no `HashMap` iteration anywhere
+//!   (`regnde-analyze` L5 scope covers `obs/`).
+//! * **Infallible API.**  Registration cannot fail: re-registering a
+//!   name under a different kind hands back a detached cell instead of
+//!   panicking, leaving the registered metric untouched (panic-freedom,
+//!   L2 scope).
+//!
+//! The metric name catalog and the bucket layouts are documented in
+//! DESIGN.md §Observability.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Monotone event counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-writer-wins instantaneous value (stored as `f64` bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Upper bounds of the finite buckets, strictly increasing; a final
+    /// implicit `+Inf` bucket catches everything above the last bound.
+    bounds: Vec<f64>,
+    /// One slot per finite bound plus the overflow slot.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Σ of observations, stored as `f64` bits and updated by CAS.
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram.  Bounds are frozen at registration; recording
+/// never allocates.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    /// Record one observation: three relaxed atomic updates plus a
+    /// linear scan over the preallocated bounds.
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        c.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        for (bound, slot) in c.bounds.iter().zip(c.buckets.iter()) {
+            if v <= *bound {
+                slot.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        if let Some(overflow) = c.buckets.last() {
+            overflow.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Histogram-derived quantile estimate for `q ∈ [0, 1]`: walk to the
+    /// bucket holding the ⌈q·count⌉-th observation and interpolate
+    /// linearly inside it.  Observations in the overflow bucket clamp to
+    /// the largest finite bound; an empty histogram reports `0.0`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let c = &self.0;
+        let mut total = 0u64;
+        for slot in c.buckets.iter() {
+            total += slot.load(Ordering::Relaxed);
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let last_finite = c.bounds.last().copied().unwrap_or(0.0);
+        let mut seen = 0u64;
+        let mut lo = 0.0f64;
+        let his = c.bounds.iter().copied().chain(std::iter::once(last_finite));
+        for (slot, hi) in c.buckets.iter().zip(his) {
+            let n = slot.load(Ordering::Relaxed);
+            if n > 0 && seen + n >= target {
+                let into = (target - seen) as f64 / n as f64;
+                return lo + (hi - lo) * into;
+            }
+            seen += n;
+            lo = hi;
+        }
+        last_finite
+    }
+}
+
+enum Slot {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistogramCore>),
+}
+
+/// Named metric registry.  Use the process-global [`registry`] in
+/// product code; construct fresh instances in tests.
+#[derive(Default)]
+pub struct Registry {
+    slots: Mutex<BTreeMap<String, Slot>>,
+}
+
+fn plock(m: &Mutex<BTreeMap<String, Slot>>) -> MutexGuard<'_, BTreeMap<String, Slot>> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register a counter under `name` (full name, including any
+    /// `{label="value"}` suffix — see [`labeled`]).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut slots = plock(&self.slots);
+        let slot = slots
+            .entry(name.to_string())
+            .or_insert_with(|| Slot::Counter(Arc::new(AtomicU64::new(0))));
+        match slot {
+            Slot::Counter(c) => Counter(Arc::clone(c)),
+            // Kind clash: hand back a detached cell, leave the
+            // registered metric untouched (infallible by design).
+            _ => Counter(Arc::new(AtomicU64::new(0))),
+        }
+    }
+
+    /// Get-or-register a gauge under `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut slots = plock(&self.slots);
+        let slot = slots
+            .entry(name.to_string())
+            .or_insert_with(|| Slot::Gauge(Arc::new(AtomicU64::new(0))));
+        match slot {
+            Slot::Gauge(g) => Gauge(Arc::clone(g)),
+            _ => Gauge(Arc::new(AtomicU64::new(0))),
+        }
+    }
+
+    /// Get-or-register a histogram under `name` with the given finite
+    /// bucket bounds (an `+Inf` overflow bucket is added implicitly).
+    /// Bounds are frozen by whoever registers first.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histogram {
+        let mut slots = plock(&self.slots);
+        let slot = slots.entry(name.to_string()).or_insert_with(|| {
+            let mut buckets = Vec::with_capacity(bounds.len() + 1);
+            for _ in 0..bounds.len() + 1 {
+                buckets.push(AtomicU64::new(0));
+            }
+            Slot::Histogram(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets,
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            }))
+        });
+        match slot {
+            Slot::Histogram(h) => Histogram(Arc::clone(h)),
+            _ => Histogram(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets: std::iter::repeat_with(|| AtomicU64::new(0))
+                    .take(bounds.len() + 1)
+                    .collect(),
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            })),
+        }
+    }
+
+    /// Render the whole registry as Prometheus-style text exposition
+    /// (`# TYPE` per family, cumulative `le` buckets, `_sum`/`_count`).
+    /// Output is byte-deterministic for fixed recorded values: names
+    /// iterate in `BTreeMap` order.
+    pub fn render(&self) -> String {
+        let slots = plock(&self.slots);
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (name, slot) in slots.iter() {
+            let (family, labels) = split_name(name);
+            if family != last_family {
+                let kind = match slot {
+                    Slot::Counter(_) => "counter",
+                    Slot::Gauge(_) => "gauge",
+                    Slot::Histogram(_) => "histogram",
+                };
+                let _ = writeln!(out, "# TYPE {family} {kind}");
+                last_family = family.to_string();
+            }
+            match slot {
+                Slot::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.load(Ordering::Relaxed));
+                }
+                Slot::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", f64::from_bits(g.load(Ordering::Relaxed)));
+                }
+                Slot::Histogram(h) => {
+                    let mut cum = 0u64;
+                    let les = h
+                        .bounds
+                        .iter()
+                        .map(|b| LeBound::Finite(*b))
+                        .chain(std::iter::once(LeBound::Inf));
+                    for (slot_, le) in h.buckets.iter().zip(les) {
+                        cum += slot_.load(Ordering::Relaxed);
+                        match labels {
+                            Some(l) => {
+                                let _ =
+                                    writeln!(out, "{family}_bucket{{{l},le=\"{le}\"}} {cum}");
+                            }
+                            None => {
+                                let _ = writeln!(out, "{family}_bucket{{le=\"{le}\"}} {cum}");
+                            }
+                        }
+                    }
+                    let sum = f64::from_bits(h.sum_bits.load(Ordering::Relaxed));
+                    let count = h.count.load(Ordering::Relaxed);
+                    match labels {
+                        Some(l) => {
+                            let _ = writeln!(out, "{family}_sum{{{l}}} {sum}");
+                            let _ = writeln!(out, "{family}_count{{{l}}} {count}");
+                        }
+                        None => {
+                            let _ = writeln!(out, "{family}_sum {sum}");
+                            let _ = writeln!(out, "{family}_count {count}");
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+enum LeBound {
+    Finite(f64),
+    Inf,
+}
+
+impl std::fmt::Display for LeBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LeBound::Finite(b) => write!(f, "{b}"),
+            LeBound::Inf => write!(f, "+Inf"),
+        }
+    }
+}
+
+/// `family{label="v"}` → `("family", Some("label=\"v\""))`.
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((family, rest)) => (family, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// The process-global registry every wiring site records into and the
+/// `metrics` wire op / `GET /metrics` path render from.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Build a full metric name with one label: `labeled("f", "model", "x")`
+/// → `f{model="x"}`.
+pub fn labeled(family: &str, key: &str, value: &str) -> String {
+    format!("{family}{{{key}=\"{value}\"}}")
+}
+
+/// Log-spaced latency bounds (seconds): 100 µs … 10 s in a 1–2.5–5
+/// ladder (DESIGN.md §Observability).
+pub const LATENCY_BUCKETS: [f64; 16] = [
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+    5.0, 10.0,
+];
+
+/// Linear per-request NFE bounds: 32-wide bins up to 1024 function
+/// evaluations.
+pub fn nfe_buckets() -> [f64; 32] {
+    std::array::from_fn(|i| ((i + 1) * 32) as f64)
+}
+
+/// Linear batch-size bounds: 1 … 32 requests per solver batch.
+pub fn batch_buckets() -> [f64; 32] {
+    std::array::from_fn(|i| (i + 1) as f64)
+}
+
+/// One-call training telemetry: per-step gauges under `model`, plus the
+/// step counter.  Pure reads of values the trainer already computed —
+/// never perturbs training state (bit-transparency contract).
+pub fn note_train_step(model: &str, loss: f64, r_e: f64, r_s: f64, grad_norm: f64, secs: f64) {
+    let r = registry();
+    r.gauge(&labeled("regnde_train_loss", "model", model)).set(loss);
+    r.gauge(&labeled("regnde_train_r_e", "model", model)).set(r_e);
+    r.gauge(&labeled("regnde_train_r_s", "model", model)).set(r_s);
+    r.gauge(&labeled("regnde_train_grad_norm", "model", model))
+        .set(grad_norm);
+    r.gauge(&labeled("regnde_train_step_seconds", "model", model))
+        .set(secs);
+    r.counter(&labeled("regnde_train_steps_total", "model", model))
+        .inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("c_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Re-registration hands back the same cell.
+        assert_eq!(r.counter("c_total").get(), 5);
+        let g = r.gauge("g");
+        g.set(-2.5);
+        assert_eq!(r.gauge("g").get(), -2.5);
+    }
+
+    #[test]
+    fn kind_clash_yields_detached_cell() {
+        let r = Registry::new();
+        let c = r.counter("name");
+        c.inc();
+        let g = r.gauge("name");
+        g.set(9.0);
+        // The registered counter is untouched; the gauge was detached.
+        assert_eq!(r.counter("name").get(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_count_and_sum() {
+        let r = Registry::new();
+        let h = r.histogram("lat", &[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 105.0).abs() < 1e-12);
+        let text = r.render();
+        assert!(text.contains("# TYPE lat histogram"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"1\"} 1"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"2\"} 2"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"4\"} 3"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("lat_sum 105"), "{text}");
+        assert!(text.contains("lat_count 4"), "{text}");
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        let r = Registry::new();
+        let h = r.histogram("q", &[10.0, 20.0, 30.0]);
+        for i in 0..100 {
+            // Uniform over (0, 30]: ~33 per bucket.
+            h.observe((i % 30 + 1) as f64);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((10.0..=20.0).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((20.0..=30.0).contains(&p99), "p99={p99}");
+        // Overflow observations clamp to the largest finite bound.
+        h.observe(1e9);
+        assert!(h.quantile(1.0) <= 30.0);
+        // Empty histogram.
+        assert_eq!(r.histogram("empty", &[1.0]).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn labeled_families_render_sorted_with_one_type_line() {
+        let r = Registry::new();
+        r.counter(&labeled("req_total", "model", "b")).inc();
+        r.counter(&labeled("req_total", "model", "a")).add(2);
+        let text = r.render();
+        let type_lines = text.matches("# TYPE req_total counter").count();
+        assert_eq!(type_lines, 1, "{text}");
+        let a = text.find("model=\"a\"").expect("a line");
+        let b = text.find("model=\"b\"").expect("b line");
+        assert!(a < b, "BTreeMap order: {text}");
+        assert!(text.contains("req_total{model=\"a\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn labeled_histogram_merges_le_into_label_set() {
+        let r = Registry::new();
+        let h = r.histogram(&labeled("lat", "model", "m"), &[1.0]);
+        h.observe(0.5);
+        let text = r.render();
+        assert!(text.contains("lat_bucket{model=\"m\",le=\"1\"} 1"), "{text}");
+        assert!(text.contains("lat_sum{model=\"m\"} 0.5"), "{text}");
+        assert!(text.contains("lat_count{model=\"m\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let name = "obs_metrics_singleton_test_total";
+        registry().counter(name).inc();
+        assert!(registry().counter(name).get() >= 1);
+    }
+
+    #[test]
+    fn bucket_layouts_are_increasing() {
+        for w in LATENCY_BUCKETS.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for w in nfe_buckets().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for w in batch_buckets().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

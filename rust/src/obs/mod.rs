@@ -1,0 +1,41 @@
+//! `obs` — the unified observability layer (ISSUE 10).
+//!
+//! The paper's thesis is that the solver's internal heuristics (local
+//! error `E_j`, stiffness `S_j`, NFE) are cheap, accurate signals; this
+//! module is where those signals — and the serving/training/distributed
+//! layers built on top of them — become observable at runtime instead
+//! of being discarded after each solve.  Three pillars:
+//!
+//! * [`metrics`] — a process-global registry of named counters, gauges
+//!   and fixed-bucket histograms with Prometheus-style text exposition,
+//!   served by the `metrics` wire op and the `GET /metrics` path of
+//!   [`crate::serve`], and fed by the trainer
+//!   (`runtime/native.rs`) and the distributed coordinator/worker.
+//! * [`trace`] — [`trace::TraceRecorder`], a bounded, preallocated
+//!   [`crate::solvers::observer::StepObserver`] capturing per-accepted-
+//!   step `(t, h, E_j, S_j, nfe, nreject)` without allocating on the
+//!   solver hot path.
+//! * [`span`] — phase-level span timers (`span!` guard macro) around
+//!   solve/adjoint/optimizer/all-reduce phases, dumpable as Chrome
+//!   trace-event JSON via the CLI's `--trace <path>` flag.
+//!
+//! Plus [`log`], the leveled stderr logger behind `log_error!` ..
+//! `log_debug!` and the CLI's `--log-level` flag.
+//!
+//! Metric name catalog, bucket layouts, exposition grammar, trace-event
+//! schema and the overhead policy are specified in `rust/DESIGN.md`
+//! §Observability.  Everything here is std-only, and all record paths
+//! honor the repo's headline invariants: alloc-free on hot paths
+//! (`tests/alloc_free.rs`), bit-transparent to solver numerics
+//! (`tests/solver_equivalence.rs`, `tests/dist_equivalence.rs`), and
+//! panic-free with deterministic exposition ordering (`regnde-analyze`
+//! L2/L5 over `obs/`).
+
+pub mod log;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use log::Level;
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
+pub use trace::{TraceRecorder, TraceStep};

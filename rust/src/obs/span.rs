@@ -1,0 +1,235 @@
+//! Phase-level span profiler with Chrome trace-event output.
+//!
+//! [`Span::enter`] returns a guard; its `Drop` records a complete
+//! (`"ph":"X"`) trace event into a buffer preallocated by [`enable`].
+//! When profiling is off (the default) a span is a single relaxed
+//! atomic load — no clock read, no lock, no allocation — so
+//! instrumented code paths cost nothing in production and the
+//! alloc-free/bit-equality suites run with the instrumentation compiled
+//! in.
+//!
+//! **Overhead policy** (DESIGN.md §Observability): spans wrap *phases*
+//! — a whole solve, an adjoint walk, an optimizer step, an all-reduce —
+//! never per-step or per-GEMM work.  Recording one event takes the
+//! profiler mutex, which is fine at phase granularity and ruinous
+//! inside a hot loop (`regnde-analyze` L1.obs enforces this for
+//! `hot-path` annotated fns).
+//!
+//! [`dump_chrome_trace`] renders the buffer as a Chrome trace-event
+//! JSON array loadable in `chrome://tracing` / Perfetto; the CLI's
+//! `--trace <path>` flag wires it to disk.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Small sequential thread id for the `tid` trace field.
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+struct SpanEvent {
+    name: &'static str,
+    cat: &'static str,
+    tid: u64,
+    ts_us: u64,
+    dur_us: u64,
+}
+
+struct Prof {
+    epoch: Instant,
+    events: Vec<SpanEvent>,
+    capacity: usize,
+    dropped: u64,
+}
+
+fn state() -> &'static Mutex<Prof> {
+    static STATE: OnceLock<Mutex<Prof>> = OnceLock::new();
+    STATE.get_or_init(|| {
+        Mutex::new(Prof {
+            epoch: Instant::now(),
+            events: Vec::new(),
+            capacity: 0,
+            dropped: 0,
+        })
+    })
+}
+
+fn plock(m: &Mutex<Prof>) -> MutexGuard<'_, Prof> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Start profiling: preallocate room for `capacity` events (at least
+/// one), clear anything previously recorded, and reset the trace epoch.
+/// Events past the capacity are counted in [`dropped`], never grown
+/// into.
+pub fn enable(capacity: usize) {
+    let cap = capacity.max(1);
+    let mut p = plock(state());
+    p.epoch = Instant::now();
+    p.events.clear();
+    p.events.reserve(cap);
+    p.capacity = cap;
+    p.dropped = 0;
+    drop(p);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording.  The buffer is kept for [`dump_chrome_trace`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Is the profiler currently recording?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Events recorded so far.
+pub fn event_count() -> usize {
+    plock(state()).events.len()
+}
+
+/// Events discarded because the buffer was full.
+pub fn dropped() -> u64 {
+    plock(state()).dropped
+}
+
+/// RAII span guard: created by [`Span::enter`] (or the `span!` macro),
+/// records one complete event on drop.
+pub struct Span {
+    start: Option<(Instant, &'static str, &'static str)>,
+}
+
+impl Span {
+    /// Open a span named `name` in category `cat`.  A no-op (one
+    /// relaxed load) while profiling is disabled.
+    pub fn enter(name: &'static str, cat: &'static str) -> Span {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return Span { start: None };
+        }
+        Span {
+            start: Some((Instant::now(), name, cat)),
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some((t0, name, cat)) = self.start.take() else {
+            return;
+        };
+        let dur_us = t0.elapsed().as_micros() as u64;
+        let tid = TID.with(|t| *t);
+        let mut p = plock(state());
+        let ts_us = t0.saturating_duration_since(p.epoch).as_micros() as u64;
+        if p.events.len() < p.capacity {
+            p.events.push(SpanEvent {
+                name,
+                cat,
+                tid,
+                ts_us,
+                dur_us,
+            });
+        } else {
+            p.dropped += 1;
+        }
+    }
+}
+
+/// Render everything recorded since [`enable`] as a Chrome trace-event
+/// JSON array (`[{"name":…,"ph":"X","ts":…,"dur":…,"pid":1,"tid":…}]`).
+/// Span names and categories are `&'static str` identifiers chosen in
+/// code, so no JSON escaping is needed.
+pub fn dump_chrome_trace() -> String {
+    let p = plock(state());
+    let mut out = String::from("[");
+    for (i, e) in p.events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "\n {{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+            e.name, e.cat, e.ts_us, e.dur_us, e.tid
+        );
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Scope-guard span macro: `span!("solve")` or `span!("solve", "ode")`.
+/// Expands to a `let` binding, so the span closes at end of scope.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        let _obs_span = $crate::obs::span::Span::enter($name, "phase");
+    };
+    ($name:expr, $cat:expr) => {
+        let _obs_span = $crate::obs::span::Span::enter($name, $cat);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The profiler is process-global, so these tests serialize on a
+    // local mutex to keep enable/disable from interleaving.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_spans_record_nothing_and_events_round_trip() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        disable();
+        {
+            let _s = Span::enter("ghost", "test");
+        }
+        enable(8);
+        let before = event_count();
+        {
+            let _s = Span::enter("solve", "test");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(event_count(), before + 1);
+        let json = dump_chrome_trace();
+        assert!(json.contains("\"name\":\"solve\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"cat\":\"test\""), "{json}");
+        assert!(!json.contains("ghost"), "{json}");
+        disable();
+    }
+
+    #[test]
+    fn capacity_bounds_the_buffer() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        enable(2);
+        for _ in 0..5 {
+            let _s = Span::enter("tick", "test");
+        }
+        assert_eq!(event_count(), 2);
+        assert_eq!(dropped(), 3);
+        disable();
+    }
+
+    #[test]
+    fn macro_expands_to_a_scope_guard() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        enable(4);
+        let before = event_count();
+        {
+            crate::span!("macro_span", "test");
+        }
+        {
+            crate::span!("macro_default");
+        }
+        assert_eq!(event_count(), before + 2);
+        let json = dump_chrome_trace();
+        assert!(json.contains("\"name\":\"macro_default\",\"cat\":\"phase\""), "{json}");
+        disable();
+    }
+}

@@ -1,0 +1,140 @@
+//! [`TraceRecorder`]: bounded per-accepted-step solver trace.
+//!
+//! A [`crate::solvers::observer::StepObserver`] that copies each
+//! accepted step's white-box signals — `(t, h, E_j, S_j, nfe, nreject)`
+//! — into a buffer preallocated at construction.  Once full, further
+//! steps are counted in [`TraceRecorder::dropped`] instead of grown
+//! into, so `on_accept` never allocates inside the solver's alloc-free
+//! step loop (proved by `tests/alloc_free.rs`).  Like every observer it
+//! only *reads* the [`StepView`], so attaching one is bit-transparent
+//! (pinned by `tests/solver_equivalence.rs`).
+
+use crate::solvers::observer::{StepObserver, StepView};
+
+/// One accepted step's signals, copied out of the solver arena.
+///
+/// `nfe` / `nreject` are the solve's *cumulative* totals at the moment
+/// this step was accepted, so consecutive entries encode both the
+/// per-step evaluation cost (`nfe` delta) and how many rejected
+/// attempts preceded each acceptance (`nreject` delta).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceStep {
+    /// Ordinal of the accepted step (== [`StepView::index`]).
+    pub index: u64,
+    /// Step start time.
+    pub t: f64,
+    /// Step size taken.
+    pub h: f64,
+    /// Local error estimate `E_j`.
+    pub error: f64,
+    /// Stiffness estimate `S_j`.
+    pub stiffness: f64,
+    /// Cumulative function evaluations at accept time.
+    pub nfe: u64,
+    /// Cumulative rejected attempts at accept time.
+    pub nreject: u64,
+}
+
+/// Bounded, preallocated step trace (see module docs).
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    steps: Vec<TraceStep>,
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    /// Preallocate room for `capacity` accepted steps (at least one).
+    pub fn with_capacity(capacity: usize) -> TraceRecorder {
+        TraceRecorder {
+            steps: Vec::with_capacity(capacity.max(1)),
+            dropped: 0,
+        }
+    }
+
+    /// The recorded steps, in acceptance order.
+    pub fn steps(&self) -> &[TraceStep] {
+        &self.steps
+    }
+
+    /// Accepted steps that arrived after the buffer filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+impl StepObserver for TraceRecorder {
+    fn on_accept(&mut self, view: &StepView<'_>) {
+        // `push` below `capacity` never reallocates; the bound turns a
+        // long solve into dropped tail entries, not into allocation.
+        if self.steps.len() < self.steps.capacity() {
+            self.steps.push(TraceStep {
+                index: view.index,
+                t: view.t,
+                h: view.h,
+                error: view.error,
+                stiffness: view.stiffness,
+                nfe: view.nfe,
+                nreject: view.nreject,
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    fn value(&self) -> f64 {
+        self.steps.len() as f64
+    }
+
+    fn reset(&mut self) {
+        self.steps.clear();
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(index: u64) -> StepView<'static> {
+        StepView {
+            index,
+            t: index as f64 * 0.1,
+            h: 0.1,
+            error: 1e-3,
+            stiffness: 2.0,
+            nfe: (index + 1) * 6,
+            nreject: index / 2,
+            z: &[],
+            err: &[],
+        }
+    }
+
+    #[test]
+    fn records_in_order_and_saturates_at_capacity() {
+        let mut rec = TraceRecorder::with_capacity(3);
+        for i in 0..5 {
+            rec.on_accept(&view(i));
+        }
+        assert_eq!(rec.steps().len(), 3);
+        assert_eq!(rec.dropped(), 2);
+        assert_eq!(rec.value(), 3.0);
+        assert_eq!(rec.steps()[0].index, 0);
+        assert_eq!(rec.steps()[2].nfe, 18);
+        assert_eq!(rec.steps()[2].nreject, 1);
+        rec.reset();
+        assert!(rec.steps().is_empty());
+        assert_eq!(rec.dropped(), 0);
+        // Capacity survives reset: recording resumes without growth.
+        rec.on_accept(&view(9));
+        assert_eq!(rec.steps().len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_still_holds_one_step() {
+        let mut rec = TraceRecorder::with_capacity(0);
+        rec.on_accept(&view(0));
+        rec.on_accept(&view(1));
+        assert_eq!(rec.steps().len(), 1);
+        assert_eq!(rec.dropped(), 1);
+    }
+}

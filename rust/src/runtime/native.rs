@@ -737,16 +737,34 @@ impl Backend for NativeBackend {
         // apply the Adam update locally.  `to_f64` widening is bit-exact,
         // so the f32 gradient seam costs one rounding — the same rounding
         // every shard and the single-process path share.
+        let t0 = std::time::Instant::now();
         let out = self.grad_step(model, tay, rung, state, data, coefs)?;
         let grad = to_f64(&out.grad);
         let mut params = state.params.clone();
         let mut opt_state = state.opt_state.clone();
-        Adam::default().step(
-            &mut params,
-            &mut opt_state,
-            &grad,
-            coefs.lr as f64,
-            state.iter,
+        {
+            crate::span!("optimizer", "train");
+            Adam::default().step(
+                &mut params,
+                &mut opt_state,
+                &grad,
+                coefs.lr as f64,
+                state.iter,
+            );
+        }
+        // Observability taps are pure reads — nothing below feeds back
+        // into the update, so bit-equivalence suites pass untouched.
+        let mut grad_sq = 0.0f64;
+        for g in &grad {
+            grad_sq += g * g;
+        }
+        crate::obs::metrics::note_train_step(
+            model,
+            out.metrics.loss,
+            out.metrics.r_e,
+            out.metrics.r_s,
+            grad_sq.sqrt(),
+            t0.elapsed().as_secs_f64(),
         );
         Ok(StepOutput {
             params,

@@ -51,6 +51,7 @@ use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use super::registry::{PredictError, Registry, ServableModel};
+use crate::obs::metrics::{self, Counter, Histogram};
 use crate::solvers::error::SolveErrorKind;
 use crate::solvers::ode::Stats;
 use crate::util::threadpool::ThreadPool;
@@ -175,6 +176,30 @@ fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// Global-registry handles, resolved **once** at construction so the
+/// submit/execute paths only touch lock-free cells, never the registry's
+/// name map (DESIGN.md §Observability overhead policy).
+#[derive(Clone)]
+struct BatcherMetrics {
+    /// Realized batch-size distribution (`regnde_serve_batch_size`).
+    batch_size: Histogram,
+    /// Batched solves executed (`regnde_serve_batches_total`).
+    batches: Counter,
+    /// Requests shed by the batcher (`regnde_serve_batch_shed_total`).
+    shed: Counter,
+}
+
+impl BatcherMetrics {
+    fn resolve() -> BatcherMetrics {
+        let reg = metrics::registry();
+        BatcherMetrics {
+            batch_size: reg.histogram("regnde_serve_batch_size", &metrics::batch_buckets()),
+            batches: reg.counter("regnde_serve_batches_total"),
+            shed: reg.counter("regnde_serve_batch_shed_total"),
+        }
+    }
+}
+
 /// The micro-batching queue over a [`Registry`] and a shared
 /// [`ThreadPool`].
 pub struct Batcher {
@@ -184,6 +209,7 @@ pub struct Batcher {
     queues: Mutex<BTreeMap<String, ModelQueue>>,
     next_window: AtomicU64,
     stats: Arc<Mutex<BatcherStats>>,
+    obs: BatcherMetrics,
 }
 
 impl Batcher {
@@ -195,6 +221,7 @@ impl Batcher {
             queues: Mutex::new(BTreeMap::new()),
             next_window: AtomicU64::new(0),
             stats: Arc::new(Mutex::new(BatcherStats::default())),
+            obs: BatcherMetrics::resolve(),
         }
     }
 
@@ -208,6 +235,7 @@ impl Batcher {
 
     fn note_shed(&self) {
         plock(&self.stats).shed += 1;
+        self.obs.shed.inc();
     }
 
     /// Serve one prediction, blocking until its batch solves.  `budget`
@@ -340,7 +368,9 @@ impl Batcher {
             }
             if !live.is_empty() {
                 let stats = Arc::clone(&self.stats);
-                self.pool.execute(move || execute_batch(model, live, stats));
+                let obs = self.obs.clone();
+                self.pool
+                    .execute(move || execute_batch(model, live, stats, obs));
             }
         }
 
@@ -360,7 +390,9 @@ fn execute_batch(
     model: Arc<ServableModel>,
     jobs: Vec<Job>,
     stats: Arc<Mutex<BatcherStats>>,
+    obs: BatcherMetrics,
 ) {
+    crate::span!("batch_solve", "serve");
     let b = jobs.len();
     let Some(first) = jobs.first() else { return };
     let d = first.u0.len();
@@ -375,7 +407,7 @@ fn execute_batch(
 
     match model.predict_batch(&u0s, budget) {
         Ok((trajs, solve_stats)) => {
-            record(&stats, b, &solve_stats);
+            record(&stats, &obs, b, &solve_stats);
             for (job, traj) in jobs.into_iter().zip(trajs) {
                 let _ = job.tx.send(Ok(BatchReply {
                     traj,
@@ -398,10 +430,15 @@ fn execute_batch(
     }
 }
 
-fn record(stats: &Mutex<BatcherStats>, batch: usize, solve: &Stats) {
+fn record(stats: &Mutex<BatcherStats>, obs: &BatcherMetrics, batch: usize, solve: &Stats) {
     let mut s = plock(stats);
     s.batches += 1;
     s.requests += batch as u64;
     s.max_batch = s.max_batch.max(batch);
     s.nfe_total += solve.nfe;
+    drop(s);
+    // Lock-free cells only past this point: the registry handles were
+    // resolved at construction (BatcherMetrics::resolve).
+    obs.batches.inc();
+    obs.batch_size.observe(batch as f64);
 }

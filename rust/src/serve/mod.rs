@@ -73,6 +73,19 @@
 //! non-finite parameters, hostile wire bytes, mid-request disconnects —
 //! and asserts the server keeps answering.
 //!
+//! ## Observability (DESIGN.md §Observability)
+//!
+//! Serving feeds the process-global [`crate::obs::metrics`] registry:
+//! per-model request/served/shed/error counters, request-latency and
+//! per-request-NFE histograms (server), batch-size histogram and
+//! batch/shed counters (batcher), plus a live-connection gauge.  Scrape
+//! with the `metrics` wire op or `GET /metrics` on the serving port —
+//! the full metric catalog, bucket layouts, and exposition grammar live
+//! in DESIGN.md §Observability, the spans ([`crate::obs::span`])
+//! bracket each `batch_solve`, and the batcher resolves its registry
+//! handles once at construction so the hot path only touches lock-free
+//! cells.
+//!
 //! ## Enforced invariants (DESIGN.md §Static Analysis)
 //!
 //! Serving code is the strictest `regnde-analyze` lint scope: no

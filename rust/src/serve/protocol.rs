@@ -5,11 +5,12 @@
 //! (documented normatively in DESIGN.md §Serving):
 //!
 //! ```text
-//! request  := predict | list | stats | shutdown
+//! request  := predict | list | stats | metrics | shutdown
 //! predict  := {"op":"predict","model":<id>,"u0":[f32...]
 //!              [,"budget":<attempts>][,"deadline_ms":<ms>]}
 //! list     := {"op":"list"}
 //! stats    := {"op":"stats"}
+//! metrics  := {"op":"metrics"}
 //! shutdown := {"op":"shutdown"}
 //!
 //! response := ok | shed | error
@@ -19,8 +20,16 @@
 //!   predict: "model","traj":[f32...],"nfe","naccept","nreject","batch","micros"
 //!   list:    "models":[<id>...]
 //!   stats:   "batches","requests","mean_batch","max_batch","nfe_total","shed"
+//!   metrics: "text":<Prometheus exposition, JSON-escaped>
 //!   shutdown:"closing":true
 //! ```
+//!
+//! `metrics` returns the process-global [`crate::obs::metrics`] registry
+//! rendered as Prometheus text (DESIGN.md §Observability).  The same
+//! exposition is also served on a plain-HTTP path: a connection whose
+//! first line starts with `GET ` receives an `HTTP/1.0 200` plaintext
+//! response and is closed, so `curl http://host:port/metrics` works
+//! against the JSON-lines port.
 //!
 //! `budget` is the request's **total step-attempt bound**
 //! (`StepBudget::Total`) and doubles as the admission-control unit: the
@@ -64,6 +73,7 @@ pub mod tags {
     pub const OP_PREDICT: &str = "predict";
     pub const OP_LIST: &str = "list";
     pub const OP_STATS: &str = "stats";
+    pub const OP_METRICS: &str = "metrics";
     pub const OP_SHUTDOWN: &str = "shutdown";
     /// Model id (predict request and response).
     pub const MODEL: &str = "model";
@@ -90,6 +100,8 @@ pub mod tags {
     pub const MEAN_BATCH: &str = "mean_batch";
     pub const MAX_BATCH: &str = "max_batch";
     pub const NFE_TOTAL: &str = "nfe_total";
+    /// Prometheus exposition payload of a metrics response.
+    pub const TEXT: &str = "text";
 
     /// Every tag above — the registry round-trip test walks this.
     pub const ALL: &[&str] = &[
@@ -97,6 +109,7 @@ pub mod tags {
         OP_PREDICT,
         OP_LIST,
         OP_STATS,
+        OP_METRICS,
         OP_SHUTDOWN,
         MODEL,
         U0,
@@ -119,6 +132,7 @@ pub mod tags {
         MEAN_BATCH,
         MAX_BATCH,
         NFE_TOTAL,
+        TEXT,
     ];
 }
 
@@ -136,6 +150,8 @@ pub enum Request {
     },
     List,
     Stats,
+    /// Scrape the process-global metrics registry (Prometheus text).
+    Metrics,
     Shutdown,
 }
 
@@ -163,6 +179,7 @@ impl Request {
             }
             Request::List => obj([(tags::OP, Json::from(tags::OP_LIST))]),
             Request::Stats => obj([(tags::OP, Json::from(tags::OP_STATS))]),
+            Request::Metrics => obj([(tags::OP, Json::from(tags::OP_METRICS))]),
             Request::Shutdown => obj([(tags::OP, Json::from(tags::OP_SHUTDOWN))]),
         }
     }
@@ -186,8 +203,9 @@ impl Request {
             }
             tags::OP_LIST => Ok(Request::List),
             tags::OP_STATS => Ok(Request::Stats),
+            tags::OP_METRICS => Ok(Request::Metrics),
             tags::OP_SHUTDOWN => Ok(Request::Shutdown),
-            other => bail!("unknown op {other:?} (predict|list|stats|shutdown)"),
+            other => bail!("unknown op {other:?} (predict|list|stats|metrics|shutdown)"),
         }
     }
 
@@ -226,6 +244,10 @@ pub enum Response {
         /// Requests turned away by backpressure (queue full, deadline
         /// expired, connection cap, draining shutdown).
         shed: u64,
+    },
+    /// Prometheus text exposition of the metrics registry.
+    Metrics {
+        text: String,
     },
     Shutdown,
     /// Load-shed: the server did no solver work for this request.
@@ -315,6 +337,10 @@ impl Response {
                 (tags::NFE_TOTAL, Json::from(*nfe_total as usize)),
                 (tags::SHED, Json::from(*shed as usize)),
             ]),
+            Response::Metrics { text } => obj([
+                (tags::OK, Json::from(true)),
+                (tags::TEXT, Json::Str(text.clone())),
+            ]),
             Response::Shutdown => {
                 obj([(tags::OK, Json::from(true)), (tags::CLOSING, Json::from(true))])
             }
@@ -357,6 +383,11 @@ impl Response {
         }
         if j.opt(tags::CLOSING).is_some() {
             return Ok(Response::Shutdown);
+        }
+        if let Some(text) = j.opt(tags::TEXT) {
+            return Ok(Response::Metrics {
+                text: text.as_str()?.to_string(),
+            });
         }
         if let Some(traj) = j.opt(tags::TRAJ) {
             return Ok(Response::Predict {
@@ -430,6 +461,7 @@ mod tests {
             },
             Request::List,
             Request::Stats,
+            Request::Metrics,
             Request::Shutdown,
         ];
         for r in reqs {
@@ -477,6 +509,10 @@ mod tests {
                 shed: 4,
             },
             Response::Shutdown,
+            // Multi-line Prometheus text must survive JSON escaping.
+            Response::Metrics {
+                text: "# TYPE a counter\na 1\nb{model=\"x\",le=\"+Inf\"} 2\n".into(),
+            },
             Response::error("nope"),
             Response::Error {
                 msg: "solve failed".into(),

@@ -46,6 +46,19 @@
 //!   [`SolveErrorKind`] string, which [`Client`]s can inspect instead of
 //!   blindly retrying.
 //!
+//! ## Metrics (DESIGN.md §Observability)
+//!
+//! The server feeds the process-global [`crate::obs::metrics`] registry:
+//! per-model request/served/shed/error counters, request-latency and
+//! per-request-NFE histograms, a live-connection gauge
+//! (`regnde_serve_connections`), and connection-level shed counters.
+//! Scrape either with the `metrics` wire op (one JSON line, like every
+//! other op) or with a plain `GET /metrics` HTTP/1.0 request on the
+//! same port — the accept loop answers the latter with a
+//! `text/plain` Prometheus exposition and closes the connection, so
+//! `curl` works against a serving port without speaking the JSON
+//! protocol.
+//!
 //! [`protocol`]: super::protocol
 //! [`SolveErrorKind`]: crate::solvers::error::SolveErrorKind
 
@@ -60,6 +73,7 @@ use anyhow::{Context, Result};
 use super::batcher::{BatchError, Batcher};
 use super::protocol::{Request, Response};
 use super::registry::Registry;
+use crate::obs::metrics;
 
 /// Per-server policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -100,7 +114,10 @@ struct ConnSlot<'a>(&'a AtomicUsize);
 
 impl Drop for ConnSlot<'_> {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        let prev = self.0.fetch_sub(1, Ordering::SeqCst);
+        metrics::registry()
+            .gauge("regnde_serve_connections")
+            .set(prev.saturating_sub(1) as f64);
     }
 }
 
@@ -131,8 +148,10 @@ impl Server {
             handles.retain(|h| !h.is_finished());
             // Connection-level backpressure: over the cap, answer one
             // shed line and close instead of spawning a thread.
-            if self.active_conns.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns {
+            let occupied = self.active_conns.fetch_add(1, Ordering::SeqCst);
+            if occupied >= self.opts.max_conns {
                 self.active_conns.fetch_sub(1, Ordering::SeqCst);
+                metrics::registry().counter("regnde_serve_conn_shed_total").inc();
                 let mut stream = stream;
                 let mut out =
                     Response::Shed("connection limit reached, retry with backoff".into()).encode();
@@ -140,6 +159,9 @@ impl Server {
                 let _ = stream.write_all(out.as_bytes());
                 continue;
             }
+            metrics::registry()
+                .gauge("regnde_serve_connections")
+                .set((occupied + 1) as f64);
             let server = Arc::clone(self);
             handles.push(std::thread::spawn(move || {
                 let _slot = ConnSlot(&server.active_conns);
@@ -203,9 +225,31 @@ impl Server {
                 line.clear();
                 continue;
             }
+            // Plaintext scrape path: a `GET ` line means an HTTP client
+            // (curl, the CI smoke) rather than the JSON protocol.
+            // Answer `/metrics` with the Prometheus exposition and close
+            // — HTTP/1.0 semantics, one request per connection.
+            if line.trim_end().starts_with("GET ") {
+                let target = line.split_whitespace().nth(1).unwrap_or("");
+                let (status, body) = if target == "/metrics" {
+                    ("200 OK", metrics::registry().render())
+                } else {
+                    ("404 Not Found", String::from("only /metrics is served\n"))
+                };
+                let head = format!(
+                    "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\n\r\n",
+                    body.len()
+                );
+                let _ = writer.write_all(head.as_bytes());
+                let _ = writer.write_all(body.as_bytes());
+                let _ = writer.flush();
+                return;
+            }
             let (resp, closing) = if self.shutdown.load(Ordering::SeqCst) {
                 // Request arrived after the drain began: shed (retryable
                 // elsewhere), never start new solver work.
+                metrics::registry().counter("regnde_serve_drain_shed_total").inc();
                 (Response::Shed("server is draining".into()), true)
             } else {
                 match Request::decode(line.trim()) {
@@ -246,6 +290,12 @@ impl Server {
                 false,
             ),
             Request::Stats => (Response::stats(&self.batcher.stats()), false),
+            Request::Metrics => (
+                Response::Metrics {
+                    text: metrics::registry().render(),
+                },
+                false,
+            ),
             Request::Shutdown => (Response::Shutdown, true),
             Request::Predict {
                 model,
@@ -254,57 +304,93 @@ impl Server {
                 deadline_ms,
             } => {
                 let t0 = Instant::now();
-                // Admission: resolve the declared (or checkpoint-default)
-                // attempt budget and reject before solving if it could
-                // overrun this connection's remaining quota.
-                let declared = match budget {
-                    Some(b) => b,
-                    None => match self.registry.get(&model) {
-                        Ok(m) => m.default_budget(),
-                        Err(e) => return (Response::error(format!("{e:#}")), false),
-                    },
+                metrics::registry()
+                    .counter(&metrics::labeled("regnde_serve_requests_total", "model", &model))
+                    .inc();
+                let resp = self.predict_response(&model, u0, budget, deadline_ms, quota, t0);
+                // Outcome accounting mirrors the quota policy above:
+                // served / shed / everything-else-is-an-error.
+                let outcome = match &resp {
+                    Response::Predict { nfe, .. } => {
+                        metrics::registry()
+                            .histogram(
+                                &metrics::labeled("regnde_serve_latency_seconds", "model", &model),
+                                &metrics::LATENCY_BUCKETS,
+                            )
+                            .observe(t0.elapsed().as_secs_f64());
+                        metrics::registry()
+                            .histogram(
+                                &metrics::labeled("regnde_serve_request_nfe", "model", &model),
+                                &metrics::nfe_buckets(),
+                            )
+                            .observe(*nfe as f64);
+                        "regnde_serve_served_total"
+                    }
+                    Response::Shed(_) => "regnde_serve_shed_total",
+                    _ => "regnde_serve_errors_total",
                 };
-                if declared > *quota {
-                    return (
-                        Response::error(format!(
-                            "admission rejected: request budget {declared} attempts \
-                             exceeds remaining connection quota {quota}"
-                        )),
-                        false,
-                    );
+                metrics::registry()
+                    .counter(&metrics::labeled(outcome, "model", &model))
+                    .inc();
+                (resp, false)
+            }
+        }
+    }
+
+    /// The predict path of [`Server::process`], factored out so the
+    /// metric accounting wraps exactly one response-producing body.
+    fn predict_response(
+        &self,
+        model: &str,
+        u0: Vec<f32>,
+        budget: Option<u64>,
+        deadline_ms: Option<u64>,
+        quota: &mut u64,
+        t0: Instant,
+    ) -> Response {
+        // Admission: resolve the declared (or checkpoint-default)
+        // attempt budget and reject before solving if it could
+        // overrun this connection's remaining quota.
+        let declared = match budget {
+            Some(b) => b,
+            None => match self.registry.get(model) {
+                Ok(m) => m.default_budget(),
+                Err(e) => return Response::error(format!("{e:#}")),
+            },
+        };
+        if declared > *quota {
+            return Response::error(format!(
+                "admission rejected: request budget {declared} attempts \
+                 exceeds remaining connection quota {quota}"
+            ));
+        }
+        let deadline = deadline_ms.map(|ms| t0 + Duration::from_millis(ms));
+        match self.batcher.submit(model, u0, Some(declared), deadline) {
+            Ok(reply) => {
+                // Charge the realized work of the batch solve.
+                *quota = quota.saturating_sub(reply.naccept + reply.nreject);
+                let micros = t0.elapsed().as_micros() as u64;
+                Response::predict(model, &reply, micros)
+            }
+            Err(BatchError::Shed(msg)) => {
+                // No solver work was done: retryable, not charged.
+                Response::Shed(msg)
+            }
+            Err(BatchError::Solve { kind, msg }) => {
+                // The solve ran and died — it may have burned the
+                // whole declared budget, so charge it all: failing
+                // requests cannot loop free solver CPU past the
+                // quota.
+                *quota = quota.saturating_sub(declared);
+                Response::Error {
+                    msg,
+                    kind: Some(kind),
                 }
-                let deadline = deadline_ms.map(|ms| t0 + Duration::from_millis(ms));
-                match self.batcher.submit(&model, u0, Some(declared), deadline) {
-                    Ok(reply) => {
-                        // Charge the realized work of the batch solve.
-                        *quota = quota.saturating_sub(reply.naccept + reply.nreject);
-                        let micros = t0.elapsed().as_micros() as u64;
-                        (Response::predict(&model, &reply, micros), false)
-                    }
-                    Err(BatchError::Shed(msg)) => {
-                        // No solver work was done: retryable, not charged.
-                        (Response::Shed(msg), false)
-                    }
-                    Err(BatchError::Solve { kind, msg }) => {
-                        // The solve ran and died — it may have burned the
-                        // whole declared budget, so charge it all: failing
-                        // requests cannot loop free solver CPU past the
-                        // quota.
-                        *quota = quota.saturating_sub(declared);
-                        (
-                            Response::Error {
-                                msg,
-                                kind: Some(kind),
-                            },
-                            false,
-                        )
-                    }
-                    Err(BatchError::Rejected(msg)) => {
-                        // Validation failure before any solve: not charged,
-                        // and not retryable as-is (no kind on the wire).
-                        (Response::error(msg), false)
-                    }
-                }
+            }
+            Err(BatchError::Rejected(msg)) => {
+                // Validation failure before any solve: not charged,
+                // and not retryable as-is (no kind on the wire).
+                Response::error(msg)
             }
         }
     }
@@ -497,6 +583,65 @@ mod tests {
         // Drain guarantee: serve() joins every connection thread and
         // returns; a hung drain fails the suite's timeout, a panic in
         // the serve thread fails the join.
+        serve_handle.join().expect("serve thread must exit cleanly");
+    }
+
+    #[test]
+    fn metrics_op_reports_per_model_families() {
+        let server = quota_server(1_000_000);
+        let mut quota = server.opts.nfe_quota;
+        let (resp, _) = server.process(predict("spiral", None), &mut quota);
+        assert!(matches!(resp, Response::Predict { .. }), "got {resp:?}");
+        let (resp, closing) = server.process(Request::Metrics, &mut quota);
+        assert!(!closing);
+        let text = match resp {
+            Response::Metrics { text } => text,
+            other => panic!("expected metrics, got {other:?}"),
+        };
+        // The registry is process-global and other tests share the
+        // "spiral" label, so assert presence, not exact counts.
+        for family in [
+            "# TYPE regnde_serve_requests_total counter",
+            "regnde_serve_requests_total{model=\"spiral\"}",
+            "regnde_serve_served_total{model=\"spiral\"}",
+            "regnde_serve_latency_seconds_bucket{model=\"spiral\",le=\"+Inf\"}",
+            "regnde_serve_request_nfe_count{model=\"spiral\"}",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn http_get_scrapes_the_prometheus_exposition() {
+        let server = test_server(ServerOpts::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let serve_handle = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let _ = server.serve(listener);
+            })
+        };
+        // Prime one request so per-model families exist.
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let resp = client.request(&predict("spiral", None)).unwrap();
+        assert!(matches!(resp, Response::Predict { .. }), "got {resp:?}");
+        // Plain HTTP scrape on the same port, no JSON protocol.
+        let mut http = TcpStream::connect(addr).unwrap();
+        http.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut scraped = String::new();
+        std::io::Read::read_to_string(&mut http, &mut scraped).unwrap();
+        assert!(scraped.starts_with("HTTP/1.0 200 OK\r\n"), "got {scraped:?}");
+        assert!(scraped.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(scraped.contains("regnde_serve_requests_total{model=\"spiral\"}"));
+        // Unknown paths answer 404 and close.
+        let mut http = TcpStream::connect(addr).unwrap();
+        http.write_all(b"GET /other HTTP/1.0\r\n\r\n").unwrap();
+        let mut scraped = String::new();
+        std::io::Read::read_to_string(&mut http, &mut scraped).unwrap();
+        assert!(scraped.starts_with("HTTP/1.0 404 Not Found\r\n"), "got {scraped:?}");
+        let resp = client.request(&Request::Shutdown).unwrap();
+        assert_eq!(resp, Response::Shutdown);
         serve_handle.join().expect("serve thread must exit cleanly");
     }
 

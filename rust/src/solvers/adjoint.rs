@@ -251,6 +251,7 @@ pub fn ode_backward_sys<S: System>(
     grad_params: &mut [f64],
     sys: &mut S,
 ) -> Vec<f64> {
+    crate::span!("adjoint", "ode");
     let n = tape.n;
     let s = tape.stages;
     let marks = tape.save_marks();
@@ -641,6 +642,7 @@ pub fn sde_backward_sys<S: System>(
     grad_params: &mut [f64],
     sys: &mut S,
 ) -> Vec<f64> {
+    crate::span!("adjoint", "sde");
     let n = tape.n;
     let marks = tape.save_marks();
     assert_eq!(

@@ -24,6 +24,12 @@
 //! accumulators perform the same floating-point additions in the same
 //! order as the seed's `Stats` fields, so the reported `R_E`/`R_E²`/`R_S`
 //! stay bit-identical (pinned by `tests/solver_equivalence.rs`).
+//!
+//! The observability layer builds directly on this surface:
+//! [`crate::obs::TraceRecorder`] is an observer that copies each
+//! accepted step's `(t, h, E_j, S_j, nfe, nreject)` into a bounded
+//! preallocated buffer — see [`crate::obs`] and DESIGN.md
+//! §Observability for the trace schema and overhead policy.
 
 use crate::util::rng::Rng;
 
@@ -44,6 +50,13 @@ pub struct StepView<'a> {
     /// Stiffness estimate `S_j` (Shampine ratio for RK, drift surrogate
     /// for stochastic Heun).
     pub stiffness: f64,
+    /// Cumulative function evaluations of the whole solve at the moment
+    /// this step was accepted (includes this step's own attempt).
+    pub nfe: u64,
+    /// Cumulative rejected attempts at the moment this step was
+    /// accepted — the delta between consecutive views counts the
+    /// rejections that preceded this acceptance.
+    pub nreject: u64,
     /// The accepted state `z_{j+1}`.
     pub z: &'a [f64],
     /// The embedded error vector behind `error`.
@@ -226,6 +239,8 @@ mod tests {
             h,
             error,
             stiffness,
+            nfe: 0,
+            nreject: 0,
             z: &[],
             err: &[],
         }

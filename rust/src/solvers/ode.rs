@@ -262,6 +262,8 @@ impl<'a, 'o, S: System> Stepper<'a, 'o, S> {
                         h,
                         error: e_norm,
                         stiffness: stiff,
+                        nfe: self.stats.nfe,
+                        nreject: self.stats.nreject,
                         z: znew,
                         err,
                     };
@@ -330,6 +332,7 @@ pub fn drive<S: System>(
     mut tape: Option<&mut OdeTape>,
     observers: &mut [&mut dyn StepObserver],
 ) -> (Vec<Vec<f64>>, SolveResult) {
+    crate::span!("solve", "ode");
     // Reset the tape up front: even a cleanly-failed solve must not
     // leave a previous solve's records behind (the Taping contract).
     if let Some(tape) = tape.as_deref_mut() {

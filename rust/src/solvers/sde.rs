@@ -182,6 +182,8 @@ impl<'a, 'o, S: System> SdeStepper<'a, 'o, S> {
                         h: h_eff,
                         error: e_norm,
                         stiffness: stiff,
+                        nfe: self.stats.nfe,
+                        nreject: self.stats.nreject,
                         z: z_heun,
                         err,
                     };
@@ -263,6 +265,7 @@ pub fn drive<S: System>(
     mut tape: Option<&mut SdeTape>,
     observers: &mut [&mut dyn StepObserver],
 ) -> (Vec<Vec<f64>>, SolveResult) {
+    crate::span!("solve", "sde");
     let n = z0.len();
     // Reset the tape up front: even a cleanly-failed solve must not
     // leave a previous solve's records behind (the Taping contract).

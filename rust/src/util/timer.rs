@@ -23,9 +23,15 @@ impl Stopwatch {
         }
     }
 
+    /// Begin (or continue) an interval.  Calling `start` on an already
+    /// running stopwatch **saturates**: the running interval keeps
+    /// accumulating and the call is a no-op, so no elapsed time is ever
+    /// silently discarded (the pre-fix behavior reset the interval in
+    /// release builds and asserted in debug).
     pub fn start(&mut self) {
-        debug_assert!(self.started.is_none(), "stopwatch already running");
-        self.started = Some(Instant::now());
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
     }
 
     pub fn stop(&mut self) {
@@ -66,6 +72,22 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         sw.stop();
         assert!(sw.total_secs() > t1);
+    }
+
+    #[test]
+    fn double_start_saturates_instead_of_discarding() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        // A second start while running must keep the original interval.
+        sw.start();
+        std::thread::sleep(Duration::from_millis(1));
+        sw.stop();
+        assert!(
+            sw.total_secs() >= 0.005,
+            "double-start discarded the running interval: {}",
+            sw.total_secs()
+        );
     }
 
     #[test]

@@ -336,6 +336,95 @@ fn step_loop_is_allocation_free() {
         steps[1]
     );
 
+    // ---- Observability taps (DESIGN.md §Observability) --------------------
+    // A TraceRecorder attached through the observer slice must not break
+    // the contract: its buffer is preallocated at construction, so the
+    // allocation count stays constant while the step count scales.
+    let mk = |tol: f64| SolveOptions::new().with_tolerance(tol);
+    let mut rec = regnde::obs::trace::TraceRecorder::with_capacity(1 << 14);
+    {
+        // Warm-up with the recorder attached.
+        let mut sys = OdeSystem(problems::spiral_ode);
+        let _ = ode::drive(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &mk(1e-6),
+            None,
+            &mut [&mut rec],
+        );
+    }
+    let mut steps = [0u64; 2];
+    let mut naccept = 0u64;
+    let loose = count_allocs(|| {
+        rec.reset(); // clear() keeps capacity: no allocation
+        let mut sys = OdeSystem(problems::spiral_ode);
+        let out = ode::drive(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &mk(1e-3),
+            None,
+            &mut [&mut rec],
+        )
+        .1
+        .expect("traced solve failed");
+        steps[0] = out.stats.attempts();
+        naccept = out.stats.naccept;
+    });
+    assert_eq!(
+        rec.steps().len() as u64,
+        naccept,
+        "recorder captures every accepted step"
+    );
+    let tight = count_allocs(|| {
+        rec.reset();
+        let mut sys = OdeSystem(problems::spiral_ode);
+        let out = ode::drive(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &mk(1e-9),
+            None,
+            &mut [&mut rec],
+        )
+        .1
+        .expect("traced solve failed");
+        steps[1] = out.stats.attempts();
+    });
+    assert!(
+        steps[1] > 4 * steps[0],
+        "tight traced solve must take far more steps ({} vs {})",
+        steps[1],
+        steps[0]
+    );
+    assert!(
+        tight.abs_diff(loose) <= 8,
+        "TraceRecorder must not add per-step allocation \
+         ({loose} allocs @ {} steps vs {tight} allocs @ {} steps)",
+        steps[0],
+        steps[1]
+    );
+
+    // Metrics hot path: handles are resolved once (the registry lookup
+    // allocates), after which inc/observe are pure atomics.
+    use regnde::obs::metrics;
+    let reg = metrics::registry();
+    let ctr = reg.counter("alloc_free_test_ops_total");
+    let hist = reg.histogram("alloc_free_test_latency_seconds", &metrics::LATENCY_BUCKETS);
+    ctr.inc();
+    hist.observe(1e-3); // warm-up
+    let n = count_allocs(|| {
+        for i in 0..1024u64 {
+            ctr.inc();
+            hist.observe(i as f64 * 1e-4);
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "Counter::inc / Histogram::observe must be allocation-free ({n} allocs/2048 calls)"
+    );
+
     // Direct check: repeated batched VJP passes allocate nothing at all.
     let mut scratch = mlp.batch_scratch(rows);
     let w: Vec<f64> = {

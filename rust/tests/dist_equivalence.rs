@@ -121,6 +121,59 @@ fn two_workers_two_shards_match_single_process_bitwise() {
     w2.kill();
 }
 
+/// Observability must not perturb the bit-equality guarantee: with span
+/// collection enabled and the metrics registry live (both are process
+/// globals a serving or training host would have on), the remote-vs-local
+/// comparison still lands on identical bits, and the dist counters move.
+#[test]
+fn remote_step_is_bit_identical_with_observability_enabled() {
+    use regnde::obs::metrics;
+
+    regnde::obs::span::enable(4096);
+    let bytes = metrics::registry().counter("regnde_dist_bytes_sent_total");
+    let before = bytes.get();
+
+    let w1 = spawn_worker();
+    let workers = vec![w1.addr.to_string()];
+    let remote = DistBackend::remote(NativeBackend::new(), &workers, Some(2), RemoteOpts::default())
+        .expect("remote backend");
+    let local = DistBackend::local(NativeBackend::new(), 2);
+
+    let model = "mnist_node";
+    let info = local.model(model).expect("model info");
+    let params = local.init_params(model, 17).expect("init");
+    let (x, y) = classify_batch(6, 0xB0B5);
+    let data = TrainData::Classify { x: &x, y: &y };
+    let state = TrainState {
+        params,
+        opt_state: vec![0.0; info.opt_state_size],
+        iter: 0,
+    };
+    let coefs = StepCoefs {
+        lr: 0.05,
+        seed: 77,
+        ..Default::default()
+    };
+
+    let mr = remote
+        .train_step(model, false, 0, &state, &data, &coefs)
+        .expect("remote step");
+    let ml = local
+        .train_step(model, false, 0, &state, &data, &coefs)
+        .expect("local step");
+    assert_metrics_bits_equal(&mr.metrics, &ml.metrics);
+    assert_params_bits_equal(&mr.params, &ml.params, "obs params");
+    assert_params_bits_equal(&mr.opt_state, &ml.opt_state, "obs opt_state");
+
+    // The taps themselves fired: bytes went over the loopback wire.
+    assert!(
+        bytes.get() > before,
+        "regnde_dist_bytes_sent_total must count the remote step's frames"
+    );
+
+    w1.kill();
+}
+
 /// A full experiment epoch through the coordinator's budget router on
 /// the distributed backend vs the single-process sharded backend — the
 /// exact comparison the CI smoke job greps for via checkpoints.

@@ -59,10 +59,14 @@ fn spiral_checkpoint(be: &NativeBackend) -> Checkpoint {
     Checkpoint::new(state, "spiral-node", "vanilla", ts)
 }
 
-fn spawn_server() -> (String, std::thread::JoinHandle<()>) {
+/// Each test registers its checkpoint under its own model id: the
+/// metrics registry is process-global and the harness runs tests in
+/// parallel, so per-model counter deltas only reconcile exactly when no
+/// other test shares the label.
+fn spawn_server(model: &str) -> (String, std::thread::JoinHandle<()>) {
     let be = NativeBackend::new();
     let registry = Arc::new(Registry::in_memory());
-    registry.insert("spiral", spiral_checkpoint(&be)).unwrap();
+    registry.insert(model, spiral_checkpoint(&be)).unwrap();
     let pool = Arc::new(ThreadPool::new(4));
     let batcher = Arc::new(Batcher::new(
         Arc::clone(&registry),
@@ -96,7 +100,7 @@ struct LaneTally {
     cut: bool,
 }
 
-fn run_lane(addr: &str, lane: usize, reqs: usize) -> LaneTally {
+fn run_lane(addr: &str, model: &str, lane: usize, reqs: usize) -> LaneTally {
     let mut tally = LaneTally::default();
     let Ok(mut client) = Client::connect(addr) else {
         // Drain already closed the listener before this lane connected.
@@ -110,7 +114,7 @@ fn run_lane(addr: &str, lane: usize, reqs: usize) -> LaneTally {
         // the deadline-shed path interleaves with normal serving.
         let deadline_ms = if rng.next() % 4 == 0 { Some(2) } else { Some(10_000) };
         let req = Request::Predict {
-            model: "spiral".to_string(),
+            model: model.to_string(),
             u0,
             budget: None,
             deadline_ms,
@@ -148,12 +152,13 @@ fn run_lane(addr: &str, lane: usize, reqs: usize) -> LaneTally {
 /// The core scenario: flood from `lanes` clients, shut down mid-flood,
 /// and require one-reply-per-request accounting plus a bounded join.
 fn flood_and_drain(lanes: usize, reqs: usize) {
-    let (addr, handle) = spawn_server();
+    let model = "spiral-drain";
+    let (addr, handle) = spawn_server(model);
     let tallies: Vec<LaneTally> = std::thread::scope(|scope| {
         let workers: Vec<_> = (0..lanes)
             .map(|lane| {
                 let addr = addr.clone();
-                scope.spawn(move || run_lane(&addr, lane, reqs))
+                scope.spawn(move || run_lane(&addr, model, lane, reqs))
             })
             .collect();
         // Let the flood establish, then drain from a dedicated lane.
@@ -197,18 +202,29 @@ fn window_close_vs_drain_shutdown_accounts_for_every_request() {
     }
 }
 
+/// Value of one series in a Prometheus exposition, e.g.
+/// `counter_value(&text, "x_total{model=\"m\"}")`.  Missing series read
+/// as zero (the family was never touched under that label).
+fn series_value(text: &str, series: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(series).and_then(|rest| rest.trim().parse::<f64>().ok()))
+        .map(|v| v as u64)
+        .unwrap_or(0)
+}
+
 #[test]
 fn full_flood_without_shutdown_serves_every_request() {
     // Control arm: no drain, so `cut` lanes are a hard failure and every
     // request must resolve.  Distinguishes drain races from plain loss.
     let lanes = knob("REGNDE_STRESS_LANES", 4);
     let reqs = knob("REGNDE_STRESS_REQS", 24);
-    let (addr, handle) = spawn_server();
+    let model = "spiral-flood";
+    let (addr, handle) = spawn_server(model);
     let tallies: Vec<LaneTally> = std::thread::scope(|scope| {
         let workers: Vec<_> = (0..lanes)
             .map(|lane| {
                 let addr = addr.clone();
-                scope.spawn(move || run_lane(&addr, lane, reqs))
+                scope.spawn(move || run_lane(&addr, model, lane, reqs))
             })
             .collect();
         workers.into_iter().map(|w| w.join().unwrap()).collect()
@@ -218,6 +234,51 @@ fn full_flood_without_shutdown_serves_every_request() {
         assert_eq!(t.sent, reqs, "lane {lane}: short count");
         assert_eq!(t.served + t.shed + t.errored, reqs, "lane {lane}: lost replies");
     }
+
+    // Second ledger (DESIGN.md §Observability): the per-model serving
+    // counters scraped over the wire must reconcile EXACTLY with the
+    // client-side tallies — this model id belongs to this test alone,
+    // so the deltas start from zero.
+    let served: usize = tallies.iter().map(|t| t.served).sum();
+    let shed: usize = tallies.iter().map(|t| t.shed).sum();
+    let errored: usize = tallies.iter().map(|t| t.errored).sum();
+    let mut scraper = Client::connect(&addr).unwrap();
+    let text = match scraper.request(&Request::Metrics).unwrap() {
+        Response::Metrics { text } => text,
+        other => panic!("metrics request got {other:?}"),
+    };
+    let label = format!("{{model=\"{model}\"}}");
+    assert_eq!(
+        series_value(&text, &format!("regnde_serve_requests_total{label}")),
+        (lanes * reqs) as u64,
+        "requests counter must equal the flood size:\n{text}"
+    );
+    assert_eq!(
+        series_value(&text, &format!("regnde_serve_served_total{label}")),
+        served as u64,
+        "served counter must match the lane tallies"
+    );
+    assert_eq!(
+        series_value(&text, &format!("regnde_serve_shed_total{label}")),
+        shed as u64,
+        "shed counter must match the lane tallies"
+    );
+    assert_eq!(
+        series_value(&text, &format!("regnde_serve_errors_total{label}")),
+        errored as u64,
+        "error counter must match the lane tallies"
+    );
+    assert_eq!(
+        series_value(&text, &format!("regnde_serve_latency_seconds_count{label}")),
+        served as u64,
+        "every served reply lands one latency observation"
+    );
+    assert_eq!(
+        series_value(&text, &format!("regnde_serve_request_nfe_count{label}")),
+        served as u64,
+        "every served reply lands one NFE observation"
+    );
+
     let mut closer = Client::connect(&addr).unwrap();
     assert!(matches!(closer.request(&Request::Shutdown).unwrap(), Response::Shutdown));
     handle.join().expect("serve thread panicked during drain");

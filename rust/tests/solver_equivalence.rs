@@ -425,6 +425,76 @@ fn saveat_matches_seed_semantics() {
 }
 
 #[test]
+fn trace_recorder_is_bit_transparent() {
+    // Observers only *read* the per-step view (DESIGN.md §Observability):
+    // attaching a TraceRecorder must leave every float and counter of the
+    // solve bit-identical to the bare run, while capturing one entry per
+    // accepted step with monotone time and cumulative counters.
+    use regnde::obs::trace::TraceRecorder;
+    for tol in [1e-4, 1e-7] {
+        let opts = SolveOptions::new().with_tolerance(tol);
+        let mut sys = OdeSystem(problems::spiral_ode);
+        let bare = regnde::solvers::solve(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &opts,
+            None,
+            Taping::Off,
+            &mut [],
+        )
+        .1
+        .expect("bare solve failed");
+
+        let mut rec = TraceRecorder::with_capacity(1 << 14);
+        let mut sys = OdeSystem(problems::spiral_ode);
+        let traced = regnde::solvers::solve(
+            &mut sys,
+            &[2.0, 0.0],
+            Saveat::Span { t0: 0.0, t1: 1.5 },
+            &opts,
+            None,
+            Taping::Off,
+            &mut [&mut rec],
+        )
+        .1
+        .expect("traced solve failed");
+
+        assert_eq!(traced.z, bare.z, "tol {tol}: states must be bit-identical");
+        assert_eq!(traced.stats.nfe, bare.stats.nfe, "tol {tol}: nfe");
+        assert_eq!(traced.stats.naccept, bare.stats.naccept, "tol {tol}: naccept");
+        assert_eq!(traced.stats.nreject, bare.stats.nreject, "tol {tol}: nreject");
+        assert!(
+            traced.stats.r_e == bare.stats.r_e && traced.stats.r_s == bare.stats.r_s,
+            "tol {tol}: regularization integrals must be bit-identical"
+        );
+
+        assert_eq!(rec.dropped(), 0, "tol {tol}: capacity must cover the solve");
+        assert_eq!(
+            rec.steps().len() as u64,
+            traced.stats.naccept,
+            "tol {tol}: one trace entry per accepted step"
+        );
+        let mut prev_t = f64::NEG_INFINITY;
+        let mut prev_nfe = 0;
+        for (k, s) in rec.steps().iter().enumerate() {
+            assert_eq!(s.index, k as u64, "tol {tol}: step ordinals are dense");
+            assert!(s.t > prev_t, "tol {tol}: step times must be monotone");
+            assert!(s.h > 0.0 && s.error.is_finite() && s.stiffness.is_finite());
+            assert!(s.nfe > prev_nfe, "tol {tol}: cumulative nfe must grow");
+            prev_t = s.t;
+            prev_nfe = s.nfe;
+        }
+        let last = rec.steps().last().expect("non-empty trace");
+        assert_eq!(last.nfe, traced.stats.nfe, "tol {tol}: final cumulative nfe");
+        assert_eq!(
+            last.nreject, traced.stats.nreject,
+            "tol {tol}: final cumulative nreject"
+        );
+    }
+}
+
+#[test]
 fn prop_ensemble_of_copies_matches_independent_solves() {
     propcheck::check("ensemble == N independent solves", 25, |g| {
         let dim = g.usize_in(1, 4);

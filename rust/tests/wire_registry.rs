@@ -82,6 +82,10 @@ fn protocol_tags_match_the_registry_exactly() {
     let in_code: BTreeSet<String> = tags::ALL.iter().map(|t| t.to_string()).collect();
     assert_eq!(in_code.len(), tags::ALL.len(), "duplicate entries in tags::ALL");
     assert_eq!(in_code, declared, "protocol tag vocabulary drifted from wire_registry.txt");
+    // The ISSUE 10 metrics vocabulary (op value + response payload field).
+    for tag in [tags::OP_METRICS, tags::TEXT] {
+        assert!(declared.contains(tag), "metrics tag {tag:?} not registered");
+    }
 }
 
 #[test]

@@ -1,0 +1,26 @@
+// Fixture: L1.obs — heavyweight observability calls in hot-path fns.
+// analyze: hot-path
+fn hot_obs(x: f64) -> f64 {
+    let h = registry().histogram("lat", &[1.0]);
+    h.observe(x);
+    let name = labeled("lat", "model", "m");
+    span!("step", "ode");
+    log_debug!("solver", "x={x}");
+    x
+}
+
+// analyze: hot-path
+fn hot_clean(c: &Counter, h: &Histogram, v: f64) {
+    c.inc();
+    h.observe(v);
+}
+
+// analyze: hot-path
+fn hot_allowed() {
+    // analyze: allow(obs) -- fixture: handle resolved once at startup
+    let _ = registry().counter("c");
+}
+
+fn cold() {
+    let _ = registry().render();
+}

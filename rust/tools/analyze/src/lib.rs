@@ -9,6 +9,10 @@
 //!
 //! * **L1 hot-path-alloc** — no allocation inside fns annotated
 //!   `// analyze: hot-path`.
+//! * **L1.obs** — hot-path fns may only touch the alloc-free
+//!   observability surface (a pre-attached recorder or pre-resolved
+//!   metric handles): no `registry()`/`labeled()`/`render()` lookups,
+//!   no `span!`/`log_*!` macros, per step attempt.
 //! * **L2 panic-freedom** — no `unwrap`/`expect`/`panic!`-family (and in
 //!   `serve/` no `[i]`-indexing) outside `#[cfg(test)]`, in the scoped
 //!   modules.

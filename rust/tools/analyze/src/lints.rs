@@ -11,6 +11,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::lexer::{Kind, Tok};
 
 pub const L1_ALLOC: &str = "L1.alloc";
+pub const L1_OBS: &str = "L1.obs";
 pub const L2_PANIC: &str = "L2.panic";
 pub const L2_INDEX: &str = "L2.index";
 pub const L3_WIRE: &str = "L3.wire";
@@ -32,6 +33,15 @@ const ALLOC_METHODS: &[&str] = &["push", "collect", "to_vec", "clone", "to_strin
 const ALLOC_MACROS: &[&str] = &["format", "vec"];
 const ALLOC_PATHS: &[&str] = &["Vec", "Box", "String"];
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+/// Observability calls that allocate or lock (registry lookup, label
+/// formatting, exposition/trace rendering): banned in hot-path fns,
+/// which may only touch the alloc-free surface — a pre-attached
+/// `TraceRecorder` or handles resolved outside the loop.
+const OBS_HEAVY_CALLS: &[&str] = &["registry", "labeled", "render", "dump_chrome_trace", "note_train_step"];
+/// Logging formats to stderr and `span!` takes timestamps + a buffer
+/// lock on drop: phase-granularity only (DESIGN.md §Observability),
+/// never per step attempt.
+const OBS_MACROS: &[&str] = &["log_error", "log_warn", "log_info", "log_debug", "span"];
 const IO_CALLS: &[&str] = &[
     "write",
     "write_all",
@@ -64,6 +74,7 @@ const SKIP_BEFORE_FN: &[&str] = &["pub", "crate", "in", "unsafe", "const", "exte
 fn allow_lint(id: &str) -> Option<&'static str> {
     match id {
         "alloc" => Some(L1_ALLOC),
+        "obs" => Some(L1_OBS),
         "panic" => Some(L2_PANIC),
         "index" => Some(L2_INDEX),
         "held" => Some(L4_HELD),
@@ -118,11 +129,15 @@ pub fn scope_for(rel: &str) -> Scope {
     let serve = rel.starts_with("serve/");
     let solvers = rel.starts_with("solvers/");
     let dist = rel.starts_with("dist/");
+    // The observability layer sits on every panic-free stack (metric
+    // taps run inside serve/dist/train) and its registry iteration
+    // feeds the deterministic exposition, so it inherits L2 and L5.
+    let obs = rel.starts_with("obs/");
     Scope {
-        l2: serve || solvers || dist || rel == "runtime/native.rs" || rel == "main.rs",
+        l2: serve || solvers || dist || obs || rel == "runtime/native.rs" || rel == "main.rs",
         l2_index: serve || dist,
         l4: serve || rel == "util/threadpool.rs",
-        l5: solvers || rel.starts_with("models/"),
+        l5: solvers || rel.starts_with("models/") || obs,
     }
 }
 
@@ -505,6 +520,44 @@ impl<'a> FilePass<'a> {
         }
     }
 
+    // ---- L1.obs: hot paths use only the alloc-free observability API ----
+    fn l1_obs(&mut self) {
+        let mut found: Vec<(usize, &'static str, String)> = Vec::new();
+        for hf in &self.hot {
+            for i in hf.start..hf.end {
+                let t = &self.toks[i];
+                if t.kind != Kind::Ident {
+                    continue;
+                }
+                let name = t.text.as_str();
+                if OBS_HEAVY_CALLS.contains(&name) && self.next_is(i, "(") {
+                    found.push((
+                        t.line,
+                        L1_OBS,
+                        format!(
+                            "`{name}(` in hot-path fn `{}` — resolve metric handles outside \
+                             the loop; hot paths may only touch the alloc-free recorder API",
+                            hf.name
+                        ),
+                    ));
+                } else if OBS_MACROS.contains(&name) && self.next_is(i, "!") {
+                    found.push((
+                        t.line,
+                        L1_OBS,
+                        format!(
+                            "`{name}!` in hot-path fn `{}` — spans and log lines are \
+                             phase-granularity, never per step attempt",
+                            hf.name
+                        ),
+                    ));
+                }
+            }
+        }
+        for (line, lint, msg) in found {
+            self.emit(line, lint, msg);
+        }
+    }
+
     // ---- L2: panic freedom ----
     fn l2(&mut self, index_too: bool) {
         let mut found: Vec<(usize, &'static str, String)> = Vec::new();
@@ -826,6 +879,7 @@ pub fn lint_file(rel: &str, src: &str, order: &LockOrder) -> FileReport {
     let mut pass = FilePass::new(rel, &toks);
     let scope = scope_for(rel);
     pass.l1();
+    pass.l1_obs();
     if scope.l2 {
         pass.l2(scope.l2_index);
     }

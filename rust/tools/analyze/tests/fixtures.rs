@@ -6,8 +6,8 @@ use std::fs;
 use std::path::Path;
 
 use regnde_analyze::lints::{
-    A0_DANGLING_HOT, A0_MISSING_REASON, A0_STALE_ALLOW, A0_STALE_BASELINE, L1_ALLOC, L2_INDEX,
-    L2_PANIC, L3_WIRE, L4_HELD, L4_ORDER, L4_UNDECLARED, L5_HASH, L5_SUM,
+    A0_DANGLING_HOT, A0_MISSING_REASON, A0_STALE_ALLOW, A0_STALE_BASELINE, L1_ALLOC, L1_OBS,
+    L2_INDEX, L2_PANIC, L3_WIRE, L4_HELD, L4_ORDER, L4_UNDECLARED, L5_HASH, L5_SUM,
 };
 use regnde_analyze::{run_sources, BaselineEntry, Config, Finding, RegistryEntry};
 
@@ -50,6 +50,23 @@ fn l1_hot_path_alloc_fires_line_exactly() {
     );
     let names: Vec<&str> = report.hot_fns.iter().map(|(_, n)| n.as_str()).collect();
     assert_eq!(names, ["hot", "hot_clean"]);
+}
+
+#[test]
+fn l1_obs_bans_heavy_observability_in_hot_paths() {
+    let cfg = Config::default();
+    let found = lint("solvers/l1_obs.rs", "l1_obs.rs", &cfg);
+    assert_eq!(
+        lines(&found),
+        vec![(4, L1_OBS), (6, L1_OBS), (7, L1_OBS), (8, L1_OBS)]
+    );
+    assert!(found[0].msg.contains("`registry(` in hot-path fn `hot_obs`"));
+    assert!(found[1].msg.contains("`labeled(`"));
+    assert!(found[2].msg.contains("`span!`"));
+    assert!(found[3].msg.contains("`log_debug!`"));
+    // The pre-resolved-handle fn is clean, the allow on line 20
+    // suppresses line 21, and the cold fn may render freely.
+    assert!(!found.iter().any(|f| f.line >= 13), "{found:?}");
 }
 
 #[test]
